@@ -1,0 +1,67 @@
+//! Fault-injection deep dive: per-layer and per-bit vulnerability profile
+//! of a network (the kind of tailored analysis the paper motivates in
+//! §IV-C — "several configurations do not follow this trend and a
+//! tailored analysis ... is necessary").
+//!
+//! Run: `cargo run --release --example fi_sweep -- [net]` (default mlp3)
+
+use anyhow::Result;
+use deepaxe::coordinator::Ctx;
+use deepaxe::report::table::{f2, Table};
+use deepaxe::simnet::{argmax_i8, Buffers, Engine};
+use deepaxe::util::cli::env_usize;
+
+fn main() -> Result<()> {
+    let net_name = std::env::args().nth(1).unwrap_or_else(|| "mlp3".into());
+    let ctx = Ctx::load()?;
+    let net = ctx.net(&net_name)?;
+    let data = ctx.data_for(&net)?.take(env_usize("DEEPAXE_FI_IMAGES", 80));
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let mut buf = Buffers::for_net(&net);
+
+    // clean traces once per image (layer-replay)
+    let traces: Vec<_> = (0..data.len()).map(|i| engine.trace(data.image(i), &mut buf)).collect();
+    let base_acc = traces
+        .iter()
+        .zip(&data.labels)
+        .filter(|(t, l)| t.pred == **l as usize)
+        .count() as f64
+        / data.len() as f64;
+    println!("{net_name}: base accuracy {:.2}% on {} images", base_acc * 100.0, data.len());
+
+    // per-layer x per-bit exhaustive-ish sweep (sampled neurons per layer)
+    let neurons_per_layer = env_usize("DEEPAXE_FI_NEURONS", 24);
+    let mut t = Table::new(
+        &format!("{net_name}: mean accuracy drop (pp) by fault layer and bit position"),
+        &["layer", "neurons", "bit0", "bit2", "bit4", "bit6", "bit7(sign)"],
+    );
+    let mut rng = deepaxe::util::rng::Rng::new(0xF1);
+    for layer in 0..net.n_comp() {
+        let act_len = net.comp(layer).act_len();
+        let picks = rng.sample_indices(act_len, neurons_per_layer.min(act_len));
+        let mut cells = vec![layer.to_string(), act_len.to_string()];
+        for bit in [0u8, 2, 4, 6, 7] {
+            let mut acc_sum = 0.0;
+            for &neuron in &picks {
+                let mut correct = 0usize;
+                let mut act = Vec::new();
+                for (i, tr) in traces.iter().enumerate() {
+                    act.clear();
+                    act.extend_from_slice(&tr.acts[layer]);
+                    act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                    let pred = argmax_i8(&engine.forward_from(layer, &act, &mut buf));
+                    if pred == data.labels[i] as usize {
+                        correct += 1;
+                    }
+                }
+                acc_sum += correct as f64 / data.len() as f64;
+            }
+            let drop_pp = (base_acc - acc_sum / picks.len() as f64) * 100.0;
+            cells.push(f2(drop_pp));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!("(higher = more vulnerable; sign/high bits should dominate, early layers amplify)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Fig. 3 as a runnable example: full LeNet-5 design-space sweep (2^5 layer
+//! masks x 3 approximate multipliers, fault-simulated) and the Pareto
+//! frontier over (resource utilization, FI accuracy drop), rendered as an
+//! ASCII scatter like the paper's chart.
+//!
+//! Run: `cargo run --release --example pareto_lenet`
+
+use anyhow::Result;
+use deepaxe::coordinator::Ctx;
+use deepaxe::report::experiments::fig3;
+
+fn ascii_scatter(points: &[(f64, f64, bool)], w: usize, h: usize) -> String {
+    // x = utilization, y = FI acc drop; frontier points drawn as '#'
+    let (xmin, xmax) = points.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.0), b.max(p.0)));
+    let (ymin, ymax) = points.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.1), b.max(p.1)));
+    let mut grid = vec![vec![' '; w]; h];
+    for &(x, y, front) in points {
+        let xi = (((x - xmin) / (xmax - xmin + 1e-12)) * (w - 1) as f64) as usize;
+        let yi = (((y - ymin) / (ymax - ymin + 1e-12)) * (h - 1) as f64) as usize;
+        let row = h - 1 - yi;
+        let c = if front { '#' } else { '.' };
+        if grid[row][xi] != '#' {
+            grid[row][xi] = c;
+        }
+    }
+    let mut out = format!("FI acc drop {ymax:.1}pp\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out += &format!("{ymin:.1}pp +{}\n", "-".repeat(w));
+    out += &format!("      util {xmin:.2}% .. {xmax:.2}%   ('#' = Pareto frontier)\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let ctx = Ctx::load()?;
+    let report = fig3(&ctx)?;
+    println!("{report}");
+
+    // re-read the CSV this run just wrote and draw the scatter
+    let csv = std::fs::read_to_string(ctx.results.join("fig3a_points.csv"))?;
+    let frontier_csv = std::fs::read_to_string(ctx.results.join("fig3b_frontier.csv"))?;
+    let frontier_keys: std::collections::HashSet<String> = frontier_csv
+        .lines()
+        .skip(1)
+        .map(|l| {
+            let cells: Vec<&str> = l.split(',').collect();
+            cells[2].trim_matches('"').to_string() // "AxM config"
+        })
+        .collect();
+    let mut pts = Vec::new();
+    for line in csv.lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let key = format!("{} {}", cells[0], cells[1]);
+        let util: f64 = cells[2].parse().unwrap_or(f64::NAN);
+        let drop: f64 = cells[3].parse().unwrap_or(f64::NAN);
+        if util.is_finite() && drop.is_finite() {
+            pts.push((util, drop, frontier_keys.contains(&key)));
+        }
+    }
+    println!("{}", ascii_scatter(&pts, 72, 20));
+    println!("full data: results/fig3a_points.csv, frontier: results/fig3b_frontier.csv");
+    Ok(())
+}

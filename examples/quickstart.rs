@@ -1,0 +1,109 @@
+//! Quickstart — the end-to-end validation driver (DESIGN.md E7).
+//!
+//! Exercises every layer of the stack on a real workload:
+//!   1. loads the LeNet-5 artifacts (trained + quantized by `make
+//!      artifacts`, never retrained here),
+//!   2. runs the automated DeepAxe pipeline (accuracy sweep -> fault
+//!      injection -> HLS estimation -> Pareto selection) under a
+//!      reliability/accuracy requirement,
+//!   3. deploys the selected approximate configuration on the AOT-lowered
+//!      PJRT executable (the L1 Pallas kernel inside the L2 JAX graph,
+//!      executed from rust), and
+//!   4. cross-checks PJRT vs the native simnet engine and reports the
+//!      headline metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (scale with DEEPAXE_FI_FAULTS / DEEPAXE_FI_IMAGES / DEEPAXE_EVAL_IMAGES)
+
+use anyhow::{Context, Result};
+use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
+use deepaxe::coordinator::Ctx;
+use deepaxe::faultsim::CampaignParams;
+use deepaxe::simnet::{Buffers, Engine};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let t0 = Instant::now();
+    let ctx = Ctx::load()?;
+    let net = ctx.net("lenet5")?;
+    let data = ctx.data_for(&net)?;
+    println!(
+        "loaded lenet5: {} computing layers, {} MACs/inference, build quant acc {:.2}%",
+        net.n_comp(),
+        net.total_macs(),
+        ctx.build_quant_acc("lenet5").unwrap_or(f64::NAN) * 100.0
+    );
+
+    // ---- 2) automated design pipeline ------------------------------------
+    let spec = PipelineSpec {
+        net: "lenet5".into(),
+        mults: vec!["mul8s_1kvp_s".into(), "mul8s_1kv9_s".into(), "mul8s_1kv8_s".into()],
+        max_acc_drop_pct: 2.0,
+        max_vuln_pct: 25.0,
+        eval_images: deepaxe::report::experiments::default_eval_images(),
+        fi: CampaignParams::default_for("lenet5"),
+    };
+    println!(
+        "\nrunning DeepAxe pipeline (max acc drop {:.1}pp, max vulnerability {:.1}pp)...",
+        spec.max_acc_drop_pct, spec.max_vuln_pct
+    );
+    let out = run_pipeline(&ctx, &spec)?;
+    println!(
+        "pipeline: {} configurations accuracy-checked, {} fault-simulated, {} feasible",
+        out.accuracy_sweep.len(),
+        out.fi_points.len(),
+        out.feasible.len()
+    );
+    let sel = out.selected.context("no feasible design under the requirements")?;
+    println!(
+        "selected design: {} {} | acc drop {:.2}pp | vulnerability {:.2}pp | {} cycles | util {:.2}%",
+        sel.mult, sel.config_string, sel.acc_drop_pct, sel.fault_vuln_pct, sel.cycles, sel.util_pct
+    );
+
+    // ---- 3) deploy on the AOT PJRT executable -----------------------------
+    let rt = deepaxe::runtime::Runtime::cpu()?;
+    let exe = rt.load_net(&ctx.artifacts, &net, ctx.lower_batch())?;
+    let exact = &ctx.luts["exact"];
+    let axm = &ctx.luts[&sel.mult];
+    let luts: Vec<&deepaxe::axmul::Lut> = (0..net.n_comp())
+        .map(|ci| if sel.mask >> ci & 1 == 1 { axm } else { exact })
+        .collect();
+    let n_eval = 128.min(data.len());
+    let t_inf = Instant::now();
+    let preds = exe.predict_all(&data.take(n_eval), &luts, None)?;
+    let pjrt_s = t_inf.elapsed().as_secs_f64();
+    let correct = preds
+        .iter()
+        .zip(&data.labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    println!(
+        "\nPJRT deployment: {}/{} correct ({:.2}%) over {} images, {:.2} ms/inference",
+        correct,
+        n_eval,
+        correct as f64 / n_eval as f64 * 100.0,
+        n_eval,
+        pjrt_s / n_eval as f64 * 1e3
+    );
+
+    // ---- 4) parity: PJRT executable vs native engine ----------------------
+    let engine = Engine::new(&net, luts.clone());
+    let mut buf = Buffers::for_net(&net);
+    let mut mismatch = 0;
+    for i in 0..n_eval {
+        if engine.predict(data.image(i), None, &mut buf) != preds[i] {
+            mismatch += 1;
+        }
+    }
+    println!("parity simnet vs PJRT: {mismatch}/{n_eval} mismatches");
+    anyhow::ensure!(mismatch == 0, "engines disagree");
+
+    println!(
+        "\nquickstart complete in {:.1}s — estimated FPGA deployment: {} cycles @100MHz = {:.2} ms/inference, {:.2}% of xc7s100",
+        t0.elapsed().as_secs_f64(),
+        sel.cycles,
+        sel.cycles as f64 / 100e6 * 1e3,
+        sel.util_pct
+    );
+    Ok(())
+}

@@ -1,0 +1,9 @@
+"""DeepAxe build path (compile-time only; never on the rust request path).
+
+Enabling x64 here matters: the requantization fixed-point math is defined
+on int64 and must match the rust engine bit-for-bit.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

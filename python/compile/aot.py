@@ -1,0 +1,228 @@
+"""AOT build driver: train -> quantize -> evaluate -> lower -> dump.
+
+Runs ONCE per `make artifacts` (the Makefile stamps it); the rust binary is
+self-contained afterwards. Emits into artifacts/:
+
+  multipliers.json          catalog + measured Table-I metrics + paper rows
+  luts/<name>.nbin          i32[65536] LUT per multiplier
+  <dataset>.test.nbin       x_q int8 [N,C,H,W], labels i32 [N]
+  <net>.meta.json           topology + quantization parameters
+  <net>.weights.nbin        int8 weights / int32 biases (GEMM layout)
+  <net>.expected.nbin       pinned predictions for rust parity tests
+  <net>.hlo.txt             the L2+L1 graph as HLO text (PJRT interchange)
+  manifest.json             accuracies, shapes, build parameters
+  .train_cache/             float params cache (skip retraining)
+
+HLO text (NOT lowered.compiler_ir(...).serialize()): the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from . import datasets, luts, nbin, train
+from .model import accuracy_int, build_lowerable, predict_int
+from .networks import ARCHS
+from .quantize import qnet_meta, qnet_tensors, quantize_images, quantize_net
+
+TEST_N = 1000
+CALIB_N = 512
+LOWER_BATCH = 16
+EXPECTED_N = 64  # images pinned for rust parity tests
+FAULT_SAMPLES = 6  # pinned fault-injection parity cases per net
+# Fixed input scale: synthetic images live in [0, 1], so s_in = 1/127 makes
+# the quantized test set shareable across every net on the dataset.
+INPUT_SCALE = 1.0 / 127.0
+
+NETS = ["mlp3", "mlp5", "mlp7", "lenet5", "alexnet"]
+
+# Paper Table I rows (reported next to measured surrogate metrics).
+PAPER_TABLE1 = {
+    "exact": {"mae_pct": 0.0, "wce_pct": 0.0, "mre_pct": 0.0, "ep_pct": 0.0},
+    "mul8s_1KVP": {"mae_pct": 0.051, "wce_pct": 0.21, "mre_pct": 2.73, "ep_pct": 74.80},
+    "mul8s_1KV9": {"mae_pct": 0.0064, "wce_pct": 0.026, "mre_pct": 0.90, "ep_pct": 68.75},
+    "mul8s_1KV8": {"mae_pct": 0.0018, "wce_pct": 0.0076, "mre_pct": 0.28, "ep_pct": 50.00},
+}
+# Paper Table II baselines (for side-by-side reporting only).
+PAPER_TABLE2 = {"mlp3": 80.40, "lenet5": 85.80, "alexnet": 78.50, "mlp7": 98.80, "mlp5": 86.30}
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants matters: the default HLO printer elides big
+    # constants as `constant({...})`, which the rust-side text parser
+    # happily parses into garbage weights.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _train_cached(net: str, cache_dir: str, log) -> list:
+    """Train or load cached float params for `net`."""
+    path = os.path.join(cache_dir, f"{net}.params.nbin")
+    arch = ARCHS[net]
+    n_comp = len(arch.computing_layers)
+    if os.path.exists(path):
+        t = nbin.read_nbin(path)
+        params = [(t[f"p{i}.w"], t[f"p{i}.b"]) for i in range(n_comp)]
+        log(f"[aot:{net}] loaded cached float params")
+        return params
+    params = train.train(net, log=log)
+    tensors = {}
+    for i, (w, b) in enumerate(params):
+        tensors[f"p{i}.w"] = w.astype(np.float32)
+        tensors[f"p{i}.b"] = b.astype(np.float32)
+    os.makedirs(cache_dir, exist_ok=True)
+    nbin.write_nbin(path, tensors)
+    return params
+
+
+def _fault_parity_cases(q, x_q, exact_lut, rng):
+    """Pinned single-bit-flip cases: (layer, neuron, bit) -> predictions."""
+    sites = []
+    preds = []
+    for _ in range(FAULT_SAMPLES):
+        li = int(rng.integers(0, len(q.qlayers)))
+        shape = q.act_shapes[li]
+        neuron = int(rng.integers(0, int(np.prod(shape))))
+        bit = int(rng.integers(0, 8))
+        masks = [None] * len(q.qlayers)
+        m = np.zeros(shape, np.int8)
+        m.reshape(-1)[neuron] = np.int8(np.uint8(1 << bit).view(np.int8))
+        masks[li] = m
+        p = predict_int(
+            q,
+            x_q[:EXPECTED_N],
+            [exact_lut] * len(q.qlayers),
+            masks=masks,
+            batch=EXPECTED_N,
+        )
+        sites.append([li, neuron, bit])
+        preds.append(p)
+    return np.array(sites, np.int32), np.stack(preds).astype(np.int32)
+
+
+def build(out_dir: str, nets=None, log=print) -> None:
+    t_start = time.time()
+    os.makedirs(out_dir, exist_ok=True)
+    lut_dir = os.path.join(out_dir, "luts")
+    os.makedirs(lut_dir, exist_ok=True)
+    cache_dir = os.path.join(out_dir, ".train_cache")
+    nets = nets or NETS
+
+    # --- multipliers -------------------------------------------------------
+    rows = luts.catalog_report()
+    for m in luts.CATALOG:
+        nbin.write_nbin(os.path.join(lut_dir, f"{m.name}.nbin"), {"lut": m.lut()})
+    with open(os.path.join(out_dir, "multipliers.json"), "w") as f:
+        json.dump(
+            {"measured": rows, "paper_table1": PAPER_TABLE1, "paper_axms": luts.PAPER_AXMS},
+            f,
+            indent=1,
+        )
+    log(f"[aot] wrote {len(luts.CATALOG)} multiplier LUTs")
+    exact_lut = luts.by_name("exact").lut()
+
+    # --- datasets (quantized test splits, shared across nets) -------------
+    test_sets = {}
+    for ds in sorted({ARCHS[n].dataset for n in nets}):
+        x, y = datasets.load(ds, "test", TEST_N)
+        x_q = quantize_images(x, INPUT_SCALE)
+        nbin.write_nbin(
+            os.path.join(out_dir, f"{ds}.test.nbin"),
+            {"x_q": x_q, "labels": y.astype(np.int32)},
+        )
+        test_sets[ds] = (x_q, y)
+        log(f"[aot] dataset {ds}: {TEST_N} test images quantized (s_in=1/127)")
+
+    # --- per-network pipeline ---------------------------------------------
+    manifest = {
+        "nets": {},
+        "input_scale": INPUT_SCALE,
+        "test_n": TEST_N,
+        "lower_batch": LOWER_BATCH,
+        "expected_n": EXPECTED_N,
+        "paper_table2": PAPER_TABLE2,
+    }
+    for net in nets:
+        arch = ARCHS[net]
+        params = _train_cached(net, cache_dir, log)
+        x_q, y = test_sets[arch.dataset]
+
+        xf, yf = datasets.load(arch.dataset, "test", TEST_N)
+        float_acc = train.eval_float(net, params, xf, yf)
+
+        calib_x, _ = datasets.load(arch.dataset, "train", CALIB_N)
+        q = quantize_net(arch, params, calib_x, input_scale=INPUT_SCALE)
+        n_comp = len(q.qlayers)
+        q_acc = accuracy_int(q, x_q, y, [exact_lut] * n_comp)
+        log(
+            f"[aot:{net}] float_acc={float_acc * 100:.2f}% quant_acc={q_acc * 100:.2f}% "
+            f"(paper base {PAPER_TABLE2.get(net, float('nan'))}%)"
+        )
+
+        with open(os.path.join(out_dir, f"{net}.meta.json"), "w") as f:
+            json.dump(qnet_meta(q), f, indent=1)
+        nbin.write_nbin(os.path.join(out_dir, f"{net}.weights.nbin"), qnet_tensors(q))
+
+        # Pinned parity artifacts for the rust engine.
+        pred_exact = predict_int(q, x_q[:EXPECTED_N], [exact_lut] * n_comp, batch=EXPECTED_N)
+        kvp_lut = luts.by_name("mul8s_1kvp_s").lut()
+        pred_axm = predict_int(q, x_q[:EXPECTED_N], [kvp_lut] * n_comp, batch=EXPECTED_N)
+        rng = np.random.default_rng(4242 + len(net))
+        sites, pred_fault = _fault_parity_cases(q, x_q, exact_lut, rng)
+        nbin.write_nbin(
+            os.path.join(out_dir, f"{net}.expected.nbin"),
+            {
+                "pred_exact": pred_exact,
+                "pred_axm_kvp": pred_axm,
+                "fault_sites": sites,
+                "pred_fault": pred_fault,
+            },
+        )
+
+        # Lower the Pallas-kernel graph to HLO text.
+        fn, args = build_lowerable(q, LOWER_BATCH)
+        lowered = jax.jit(fn).lower(*args)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{net}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        log(f"[aot:{net}] lowered HLO ({len(hlo)} chars)")
+
+        manifest["nets"][net] = {
+            "dataset": arch.dataset,
+            "float_acc": float_acc,
+            "quant_acc": q_acc,
+            "paper_quant_acc": PAPER_TABLE2.get(net),
+            "n_comp_layers": n_comp,
+            "config_template": arch.config_template,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] done in {time.time() - t_start:.1f}s -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default=",".join(NETS))
+    args = ap.parse_args()
+    build(args.out, nets=[n for n in args.nets.split(",") if n])
+
+
+if __name__ == "__main__":
+    main()

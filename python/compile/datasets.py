@@ -1,0 +1,162 @@
+"""Deterministic synthetic datasets (MNIST / CIFAR-10 stand-ins).
+
+The offline image cannot download MNIST or CIFAR-10; DESIGN.md §2 documents
+the substitution. Both generators are pure-numpy, seeded, and preserve the
+properties the paper's experiments rely on: 10 classes, the same input
+shapes (28×28×1 and 32×32×3), intra-class variability large enough that
+(a) the three-network difficulty ordering holds and (b) a single-bit
+activation fault can move predictions.
+
+* synmnist — digit glyphs from a built-in 7×5 bitmap font, placed with a
+  random affine jitter (shift / scale / rotation), stroke-thickness
+  variation and additive noise, rendered at 28×28 grayscale.
+* syncifar — 10 parametric shape/texture classes (stripes, checker, disk,
+  ring, square, cross, diagonal gradient, blobs, triangle, noise-walk)
+  with randomized colors, geometry and noise at 32×32 RGB.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# 7x5 digit glyphs (classic LCD-style font), rows top->bottom.
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph(digit: int) -> np.ndarray:
+    rows = _FONT[digit]
+    return np.array([[int(c) for c in r] for r in rows], dtype=np.float32)
+
+
+def _render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one jittered digit on a 28x28 canvas, values in [0, 1]."""
+    g = _glyph(digit)  # 7x5
+    # Upsample to a base stamp with random stroke thickness. Jitter ranges
+    # are tuned so the task is non-trivial (quantized accuracies land in the
+    # 80-95% band like the paper's baselines, leaving dynamic range for the
+    # approximation / fault-injection accuracy drops).
+    scale_y = rng.uniform(1.6, 3.4)
+    scale_x = rng.uniform(1.6, 3.4)
+    angle = rng.uniform(-0.55, 0.55)  # radians, ~±32 degrees
+    cx = 14.0 + rng.uniform(-3.5, 3.5)
+    cy = 14.0 + rng.uniform(-3.5, 3.5)
+    # Inverse-map each canvas pixel into glyph space (bilinear sample).
+    ys, xs = np.mgrid[0:28, 0:28].astype(np.float32)
+    ca, sa = np.cos(angle), np.sin(angle)
+    u = (ca * (xs - cx) + sa * (ys - cy)) / scale_x + 2.5
+    v = (-sa * (xs - cx) + ca * (ys - cy)) / scale_y + 3.5
+    u0 = np.floor(u).astype(np.int32)
+    v0 = np.floor(v).astype(np.int32)
+    fu, fv = u - u0, v - v0
+
+    def sample(vv: np.ndarray, uu: np.ndarray) -> np.ndarray:
+        ok = (uu >= 0) & (uu < 5) & (vv >= 0) & (vv < 7)
+        out = np.zeros_like(fu)
+        out[ok] = g[vv[ok], uu[ok]]
+        return out
+
+    img = (
+        sample(v0, u0) * (1 - fu) * (1 - fv)
+        + sample(v0, u0 + 1) * fu * (1 - fv)
+        + sample(v0 + 1, u0) * (1 - fu) * fv
+        + sample(v0 + 1, u0 + 1) * fu * fv
+    )
+    # Stroke intensity variation + background noise.
+    img = np.clip(img * rng.uniform(0.5, 1.0), 0.0, 1.0)
+    img += rng.normal(0.0, 0.18, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def synmnist(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """n images [n,1,28,28] float32 in [0,1] and labels [n] int32."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render_digit(int(d), rng) for d in labels])
+    return imgs[:, None, :, :], labels
+
+
+# ---------------------------------------------------------------------------
+# syncifar
+# ---------------------------------------------------------------------------
+
+
+def _coords() -> Tuple[np.ndarray, np.ndarray]:
+    ys, xs = np.mgrid[0:32, 0:32].astype(np.float32)
+    return ys, xs
+
+
+def _render_cifar(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One 32x32 RGB image in [0,1] for class `cls`."""
+    ys, xs = _coords()
+    # Overlapping fg/bg ranges + heavier noise keep the task non-trivial.
+    fg = rng.uniform(0.3, 0.85, size=3).astype(np.float32)
+    bg = rng.uniform(0.15, 0.6, size=3).astype(np.float32)
+    cx, cy = rng.uniform(10, 22), rng.uniform(10, 22)
+    r = rng.uniform(6, 12)
+    period = rng.uniform(4.0, 8.0)
+    phase = rng.uniform(0, period)
+    if cls == 0:  # horizontal stripes
+        m = ((ys + phase) % period) < period / 2
+    elif cls == 1:  # vertical stripes
+        m = ((xs + phase) % period) < period / 2
+    elif cls == 2:  # filled disk
+        m = (xs - cx) ** 2 + (ys - cy) ** 2 < r**2
+    elif cls == 3:  # ring
+        d2 = (xs - cx) ** 2 + (ys - cy) ** 2
+        m = (d2 < r**2) & (d2 > (r * 0.55) ** 2)
+    elif cls == 4:  # checkerboard
+        m = (((xs + phase) // (period / 2)).astype(int) + ((ys + phase) // (period / 2)).astype(int)) % 2 == 0
+    elif cls == 5:  # axis-aligned square
+        half = r * 0.8
+        m = (np.abs(xs - cx) < half) & (np.abs(ys - cy) < half)
+    elif cls == 6:  # cross
+        w = rng.uniform(2.0, 4.0)
+        m = (np.abs(xs - cx) < w) | (np.abs(ys - cy) < w)
+    elif cls == 7:  # diagonal gradient thresholded into two bands
+        ang = rng.uniform(0, np.pi)
+        proj = xs * np.cos(ang) + ys * np.sin(ang)
+        m = ((proj + phase) % (2 * period)) < period
+    elif cls == 8:  # triangle (upper half-plane cut by two lines)
+        m = (ys > cy - r) & (ys - (cy - r) > np.abs(xs - cx) * 1.6)
+    else:  # 9: gaussian blobs
+        m = np.zeros_like(xs, dtype=bool)
+        for _ in range(3):
+            bx, by = rng.uniform(4, 28), rng.uniform(4, 28)
+            br = rng.uniform(2.5, 5.0)
+            m |= (xs - bx) ** 2 + (ys - by) ** 2 < br**2
+    img = np.where(m[None, :, :], fg[:, None, None], bg[:, None, None])
+    img = img + rng.normal(0, 0.18, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def syncifar(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """n images [n,3,32,32] float32 in [0,1] and labels [n] int32."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render_cifar(int(c), rng) for c in labels])
+    return imgs, labels
+
+
+DATASETS = {
+    "synmnist": {"gen": synmnist, "shape": (1, 28, 28), "train_seed": 1001, "test_seed": 2002},
+    "syncifar": {"gen": syncifar, "shape": (3, 32, 32), "train_seed": 3003, "test_seed": 4004},
+}
+
+
+def load(name: str, split: str, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    spec = DATASETS[name]
+    seed = spec["train_seed"] if split == "train" else spec["test_seed"]
+    return spec["gen"](n, seed)

@@ -1,0 +1,74 @@
+"""Layer 1 — the Pallas LUT-multiplier GEMM kernel (the hot spot).
+
+Every multiply in the whole framework funnels through this kernel: an
+int8×int8 GEMM whose scalar product is a gather into a 64K-entry i32 LUT
+(the behavioral model of an exact or approximate multiplier), accumulated
+in int32.
+
+TPU mapping (DESIGN.md §3): the 256 KiB LUT is held VMEM-resident across
+the whole grid (its BlockSpec index map is constant), while BlockSpec
+streams M-tiles of the (im2col'ed) activations from HBM; the K-loop runs
+inside the kernel over the VMEM tile. Approximate multiplication is data,
+so the MXU systolic array is replaced by a gather+add pipeline — the
+BlockSpec schedule plays the role the paper's HLS unroll pragmas play on
+the FPGA.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT client cannot execute. Correctness is pinned
+to kernels/ref.py by python/tests/test_kernel.py (hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default M-tile: 128 rows keeps the working set (a-tile + out-tile + LUT)
+# within a ~512 KiB VMEM budget for every layer shape in the model zoo; see
+# DESIGN.md §8 for the footprint table.
+BLOCK_M = 128
+
+
+def _kernel(a_ref, w_ref, lut_ref, o_ref):
+    """One (BLOCK_M, N) output tile: K-loop of LUT gathers."""
+    a32 = a_ref[...].astype(jnp.int32) & 0xFF  # [bm, K]
+    w32 = w_ref[...].astype(jnp.int32) & 0xFF  # [K, N]
+    lut = lut_ref[...]
+    bm = a32.shape[0]
+    n = w32.shape[1]
+    kdim = a32.shape[1]
+
+    def body(k, acc):
+        col = jax.lax.dynamic_slice_in_dim(a32, k, 1, axis=1)  # [bm, 1]
+        row = jax.lax.dynamic_slice_in_dim(w32, k, 1, axis=0)  # [1, N]
+        idx = (col << 8) | row  # [bm, N]
+        return acc + jnp.take(lut, idx, axis=0)
+
+    acc = jax.lax.fori_loop(0, kdim, body, jnp.zeros((bm, n), jnp.int32))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def axgemm(a: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray, block_m: int = BLOCK_M) -> jnp.ndarray:
+    """Pallas LUT-GEMM: a int8 [M, K], w int8 [K, N], lut int32 [65536]
+    -> int32 [M, N]. Semantics identical to kernels.ref.axgemm_ref."""
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    block_m = min(block_m, m)
+    grid = ((m + block_m - 1) // block_m,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((65536,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, w, lut)

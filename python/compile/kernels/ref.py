@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the LUT-multiplier GEMM and its integer plumbing.
+
+This is the correctness ground truth: the Pallas kernel (axgemm.py), the
+lowered HLO executable and the rust simnet engine are all pinned to these
+semantics by tests. Everything here is exact integer arithmetic — no float
+appears between input quantization and the argmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Vectorizing the whole [M, K, N] index cube is fastest for small layers but
+# O(M*K*N) memory; above this budget we scan over K instead.
+_CUBE_BUDGET = 4_000_000
+
+
+def axgemm_ref(a: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """LUT-multiplier GEMM oracle.
+
+    a: int8 [M, K] activations; w: int8 [K, N] weights; lut: int32 [65536]
+    with lut[(a_u8 << 8) | w_u8] = mult(a, w). Returns int32 [M, N] with
+    acc[m, n] = sum_k lut(a[m, k], w[k, n]).
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    a32 = a.astype(jnp.int32) & 0xFF
+    w32 = w.astype(jnp.int32) & 0xFF
+    if m * k * n <= _CUBE_BUDGET:
+        idx = (a32[:, :, None] << 8) | w32[None, :, :]
+        return jnp.take(lut, idx, axis=0).sum(axis=1, dtype=jnp.int32)
+
+    def body(acc, kk):
+        col = jax.lax.dynamic_slice_in_dim(a32, kk, 1, axis=1)  # [M, 1]
+        row = jax.lax.dynamic_slice_in_dim(w32, kk, 1, axis=0)  # [1, N]
+        idx = (col << 8) | row
+        return acc + jnp.take(lut, idx, axis=0), None
+
+    acc0 = jnp.zeros((m, n), jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(k))
+    return acc
+
+
+def requantize(acc: jnp.ndarray, m0: int, nshift: int, relu: bool) -> jnp.ndarray:
+    """int32 accumulator -> int8 activation.
+
+    y = clamp_i8((acc * m0 + 2^(n-1)) >> n), then ReLU on the quantized
+    value. Requires jax x64 (enabled by compile/__init__.py)."""
+    y = (acc.astype(jnp.int64) * jnp.int64(m0) + (jnp.int64(1) << (nshift - 1))) >> nshift
+    y = jnp.clip(y, -128, 127).astype(jnp.int8)
+    if relu:
+        y = jnp.maximum(y, jnp.int8(0))
+    return y
+
+
+def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
+    """int8 [B, C, H, W] -> int8 [B*OH*OW, C*k*k] patch matrix.
+
+    Patch index ordering is K = (ci*k + ky)*k + kx; rows are ordered
+    (b, oy, ox). Zero padding is exact for symmetric quantization
+    (zero-point = 0)."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, 0, ky, kx),
+                    (b, c, ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                    (1, 1, stride, stride),
+                )
+            )
+    stacked = jnp.stack(cols, axis=2)  # [B, C, k*k, OH, OW]
+    return (
+        stacked.reshape(b, c * k * k, oh * ow).transpose(0, 2, 1).reshape(b * oh * ow, c * k * k)
+    )
+
+
+def maxpool_i8(x: jnp.ndarray, size: int) -> jnp.ndarray:
+    """int8 [B, C, H, W] max pooling (size x size, stride = size)."""
+    return jax.lax.reduce_window(
+        x,
+        jnp.int8(-128),
+        jax.lax.max,
+        (1, 1, size, size),
+        (1, 1, size, size),
+        "VALID",
+    )

@@ -1,0 +1,198 @@
+"""Approximate 8-bit signed multiplier library (EvoApproxLib stand-in).
+
+Every multiplier — exact or approximate — is materialized as a 64K-entry
+int32 lookup table `lut[(a_u8 << 8) | b_u8] = mult(a, b)` where `a_u8`,
+`b_u8` are the two's-complement bytes of the signed operands. The whole
+framework (Pallas kernel, JAX graph, rust simnet engine, PJRT executable)
+consumes multipliers only through such LUTs, so an approximate multiplier
+is *data*, never code — one compiled artifact serves every configuration.
+
+The paper uses three CGP-evolved EvoApproxLib circuits (mul8s_1KVP,
+mul8s_1KV9, mul8s_1KV8, Table I). Their exact netlists are not available in
+this offline image, so we build *behavioral surrogates* from classic
+approximate-multiplier families and calibrate the family/parameter choice
+to the paper's reported error profile (see DESIGN.md §2). Measured metrics
+(MAE/WCE/MRE/EP over the exhaustive 2^16 input space) are emitted into
+`artifacts/multipliers.json` and reported side-by-side with the paper's.
+
+Families implemented:
+  * exact          — the golden array multiplier.
+  * bam(k)         — broken-array multiplier: all partial-product bits with
+                     weight < 2^k are dropped (on magnitudes; sign is
+                     reapplied). Classic AxC lower-part-OR/drop family.
+  * trunc(k)       — operand LSB truncation: the k low bits of each operand
+                     magnitude are zeroed before the exact multiply.
+  * rndpp(k)       — product rounded to the nearest multiple of 2^k.
+  * mitchell       — Mitchell logarithmic multiplier (ablation A3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Family builders. Each returns the full product plane P[a+128, b+128] i32
+# for signed a, b in [-128, 127] (index = two's-complement byte value would
+# reorder rows; we build in signed order then roll into byte order).
+# ---------------------------------------------------------------------------
+
+
+def _signed_grid() -> tuple[np.ndarray, np.ndarray]:
+    a = np.arange(-128, 128, dtype=np.int32)
+    return a[:, None], a[None, :]
+
+
+def plane_exact() -> np.ndarray:
+    a, b = _signed_grid()
+    return (a * b).astype(np.int32)
+
+
+def plane_bam(k: int) -> np.ndarray:
+    """Broken-array multiplier: drop partial-product bits a_i*b_j with
+    i + j < k, computed on magnitudes, sign reapplied."""
+    a, b = _signed_grid()
+    am, bm = np.abs(a), np.abs(b)
+    sign = np.sign(a) * np.sign(b)
+    exact = am * bm
+    dropped = np.zeros_like(exact)
+    for i in range(8):
+        ai = (am >> i) & 1
+        for j in range(8):
+            if i + j < k:
+                bj = (bm >> j) & 1
+                dropped = dropped + (ai * bj) * (1 << (i + j))
+    return (sign * (exact - dropped)).astype(np.int32)
+
+
+def plane_trunc(k: int) -> np.ndarray:
+    a, b = _signed_grid()
+    am, bm = np.abs(a), np.abs(b)
+    sign = np.sign(a) * np.sign(b)
+    mask = ~((1 << k) - 1)
+    return (sign * ((am & mask) * (bm & mask))).astype(np.int32)
+
+
+def plane_rndpp(k: int) -> np.ndarray:
+    a, b = _signed_grid()
+    p = a * b
+    half = 1 << (k - 1)
+    return (((p + half) >> k) << k).astype(np.int32)
+
+
+def plane_mitchell() -> np.ndarray:
+    """Mitchell logarithmic multiplier: p ≈ 2^(log2~a + log2~b) with linear
+    mantissa approximation; zero operands map to zero."""
+    a, b = _signed_grid()
+    am, bm = np.abs(a).astype(np.float64), np.abs(b).astype(np.float64)
+    sign = np.sign(a) * np.sign(b)
+
+    def mlog(x: np.ndarray) -> np.ndarray:
+        # characteristic + linear mantissa; x >= 1
+        k = np.floor(np.log2(np.maximum(x, 1)))
+        return k + (x / np.exp2(k) - 1.0)
+
+    la, lb = mlog(np.maximum(am, 1)), mlog(np.maximum(bm, 1))
+    s = la + lb
+    kk = np.floor(s)
+    approx = np.exp2(kk) * (1.0 + (s - kk))
+    approx = np.where((am == 0) | (bm == 0), 0.0, approx)
+    return (sign * np.round(approx)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Catalog
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Multiplier:
+    name: str  # our surrogate name (stable identifier used everywhere)
+    paper_name: str  # the EvoApproxLib circuit it stands in for ("" if none)
+    family: str
+    param: int
+    power_mw: float  # paper Table I (inputs to the HW cost model)
+    area_um2: float
+    builder: Callable[[], np.ndarray] = field(repr=False)
+
+    def plane(self) -> np.ndarray:
+        return self.builder()
+
+    def lut(self) -> np.ndarray:
+        """64K-entry LUT in two's-complement byte order:
+        lut[(a_u8 << 8) | b_u8] = mult(a, b)."""
+        plane = self.plane()
+        # signed order -128..127 -> byte order 0..255 (0..127, -128..-1)
+        reordered = np.roll(np.roll(plane, -128, axis=0), -128, axis=1)
+        return reordered.reshape(-1).astype(np.int32)
+
+
+# Calibration (see DESIGN.md §2): bam(2) ~ mul8s_1KV8, bam(3) ~ mul8s_1KV9,
+# bam(4) ~ mul8s_1KVP. Power/area are taken from the paper's Table I because
+# they parameterize the hardware model, not the arithmetic.
+CATALOG: List[Multiplier] = [
+    Multiplier("exact", "exact", "exact", 0, 0.425, 729.8, plane_exact),
+    Multiplier("mul8s_1kvp_s", "mul8s_1KVP", "bam", 4, 0.363, 635.0, lambda: plane_bam(4)),
+    Multiplier("mul8s_1kv9_s", "mul8s_1KV9", "bam", 3, 0.410, 685.2, lambda: plane_bam(3)),
+    Multiplier("mul8s_1kv8_s", "mul8s_1KV8", "bam", 2, 0.422, 711.0, lambda: plane_bam(2)),
+    # Ablation-only families (A3) — not part of the paper's Table I set.
+    Multiplier("trunc2", "", "trunc", 2, 0.400, 690.0, lambda: plane_trunc(2)),
+    Multiplier("rndpp4", "", "rndpp", 4, 0.395, 680.0, lambda: plane_rndpp(4)),
+    Multiplier("mitchell", "", "mitchell", 0, 0.310, 560.0, plane_mitchell),
+]
+
+PAPER_AXMS = ["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"]
+
+
+def by_name(name: str) -> Multiplier:
+    for m in CATALOG:
+        if m.name == name:
+            return m
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive error metrics (EvoApproxLib conventions for mul8s: magnitudes
+# normalized by 2^15 when reported as percentages).
+# ---------------------------------------------------------------------------
+
+
+def error_metrics(plane: np.ndarray) -> Dict[str, float]:
+    exact = plane_exact().astype(np.int64)
+    approx = plane.astype(np.int64)
+    err = approx - exact
+    abs_err = np.abs(err)
+    nonzero = exact != 0
+    rel = np.zeros_like(abs_err, dtype=np.float64)
+    rel[nonzero] = abs_err[nonzero] / np.abs(exact[nonzero])
+    # EvoApprox counts |exact|=0 cells as relative error = |err| (capped 1)
+    rel[~nonzero] = np.minimum(abs_err[~nonzero], 1)
+    return {
+        "mae": float(abs_err.mean()),
+        "wce": float(abs_err.max()),
+        "mre_pct": float(rel.mean() * 100.0),
+        "ep_pct": float((err != 0).mean() * 100.0),
+        "mae_pct": float(abs_err.mean() / 2**15 * 100.0),
+        "wce_pct": float(abs_err.max() / 2**15 * 100.0),
+    }
+
+
+def catalog_report() -> List[Dict]:
+    """Measured Table-I-style rows for every multiplier in the catalog."""
+    rows = []
+    for m in CATALOG:
+        met = error_metrics(m.plane())
+        rows.append(
+            {
+                "name": m.name,
+                "paper_name": m.paper_name,
+                "family": m.family,
+                "param": m.param,
+                "power_mw": m.power_mw,
+                "area_um2": m.area_um2,
+                **met,
+            }
+        )
+    return rows

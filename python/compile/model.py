@@ -1,0 +1,143 @@
+"""Layer 2 — quantized inference graphs for the model zoo.
+
+`forward_int` is the single definition of the integer network semantics;
+it is parameterized by the GEMM implementation so the same code path serves:
+
+  * the jnp reference (`kernels.ref.axgemm_ref`) — build-time accuracy
+    evaluation (Table II) and the expected-prediction artifacts that pin
+    the rust engine;
+  * the Pallas kernel (`kernels.axgemm.axgemm`) — the variant that is
+    AOT-lowered to HLO text and executed by the rust PJRT runtime.
+
+Graph inputs are *data, not code*: one multiplier LUT per computing layer
+(any approximation configuration = choice of LUT tensors) and one XOR fault
+mask per computing-layer activation (all-zeros = fault-free; one set bit =
+the paper's single-bit-flip fault). A single lowered executable therefore
+serves the entire 2^n × |AxM| design space and every fault site.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.axgemm import axgemm
+from .quantize import QNet
+
+GemmFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def forward_int(
+    q: QNet,
+    x_q: jnp.ndarray,
+    luts: Sequence[jnp.ndarray],
+    masks: Optional[Sequence[Optional[jnp.ndarray]]] = None,
+    gemm: GemmFn = ref.axgemm_ref,
+) -> jnp.ndarray:
+    """Integer forward pass.
+
+    x_q: int8 [B, C, H, W]; luts: one int32 [65536] per computing layer;
+    masks: optional int8 XOR masks, one per computing layer (None entries
+    allowed). Returns int8 logits [B, 10].
+    """
+    n_comp = len(q.qlayers)
+    assert len(luts) == n_comp, (len(luts), n_comp)
+    if masks is None:
+        masks = [None] * n_comp
+
+    x = x_q
+    b = x_q.shape[0]
+    ci = 0
+    for l in q.arch.layers:
+        kind = l[0]
+        if kind == "flatten":
+            x = x.reshape(b, -1)
+        elif kind == "pool":
+            x = ref.maxpool_i8(x, l[1])
+        else:
+            ql = q.qlayers[ci]
+            if ql.kind == "dense":
+                acc = gemm(x, jnp.asarray(ql.w_q), luts[ci])  # [B, N]
+                acc = acc + jnp.asarray(ql.b_q)[None, :]
+                y = ref.requantize(acc, ql.m0, ql.nshift, ql.relu)
+            else:
+                cols = ref.im2col(x, ql.ksize, ql.stride, ql.pad)  # [B*OH*OW, K]
+                acc = gemm(cols, jnp.asarray(ql.w_q), luts[ci])
+                acc = acc + jnp.asarray(ql.b_q)[None, :]
+                y = ref.requantize(acc, ql.m0, ql.nshift, ql.relu)
+                c_out, oh, ow = q.act_shapes[ci]
+                y = y.reshape(b, oh, ow, c_out).transpose(0, 3, 1, 2)
+            if masks[ci] is not None:
+                y = jnp.bitwise_xor(y, masks[ci])
+            x = y
+            ci += 1
+    return x  # int8 logits [B, 10]
+
+
+def predict_int(
+    q: QNet,
+    x_q: np.ndarray,
+    luts: Sequence[np.ndarray],
+    masks: Optional[Sequence[Optional[np.ndarray]]] = None,
+    gemm: GemmFn = ref.axgemm_ref,
+    batch: int = 100,
+) -> np.ndarray:
+    """Batched argmax predictions (first-max tie-breaking, matching rust)."""
+    jl = [jnp.asarray(l) for l in luts]
+    preds = []
+    for i in range(0, len(x_q), batch):
+        xb = jnp.asarray(x_q[i : i + batch])
+        mb = None
+        if masks is not None:
+            # per-image masks of shape act_shape, broadcast over the batch
+            mb = [
+                None
+                if m is None
+                else jnp.asarray(np.broadcast_to(m, (xb.shape[0], *m.shape)).copy())
+                for m in masks
+            ]
+        logits = forward_int(q, xb, jl, mb, gemm=gemm)
+        preds.append(np.asarray(jnp.argmax(logits, axis=-1)))
+    return np.concatenate(preds).astype(np.int32)
+
+
+def accuracy_int(
+    q: QNet,
+    x_q: np.ndarray,
+    labels: np.ndarray,
+    luts: Sequence[np.ndarray],
+    gemm: GemmFn = ref.axgemm_ref,
+    batch: int = 100,
+) -> float:
+    preds = predict_int(q, x_q, luts, gemm=gemm, batch=batch)
+    return float((preds == labels).mean())
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering entry point
+# ---------------------------------------------------------------------------
+
+
+def build_lowerable(q: QNet, batch: int):
+    """Returns (fn, example_args) for jax.jit(...).lower().
+
+    fn(x_q, lut_0..lut_{L-1}, mask_0..mask_{L-1}) -> int8 logits [batch, 10],
+    using the Pallas kernel so L1 lowers into the same HLO module.
+    """
+    n_comp = len(q.qlayers)
+
+    def fn(x_q, *rest):
+        luts = rest[:n_comp]
+        masks = rest[n_comp:]
+        return (forward_int(q, x_q, luts, masks, gemm=axgemm),)
+
+    args = [jax.ShapeDtypeStruct((batch, *q.arch.input_shape), jnp.int8)]
+    args += [jax.ShapeDtypeStruct((65536,), jnp.int32) for _ in range(n_comp)]
+    args += [
+        jax.ShapeDtypeStruct((batch, *q.act_shapes[i]), jnp.int8) for i in range(n_comp)
+    ]
+    return fn, args

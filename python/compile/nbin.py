@@ -1,0 +1,90 @@
+"""nbin — tiny named-tensor binary container shared with the rust side.
+
+The offline image has no serde/npz bridge, so artifacts (weights, LUTs,
+datasets, expected predictions) are exchanged in this trivial format:
+
+    magic   : 6 bytes  b"NBIN1\\x00"
+    count   : u16 LE   number of entries
+    entry   :
+        name_len : u16 LE
+        name     : utf-8 bytes
+        dtype    : u8   (0=i8, 1=u8, 2=i32, 3=i64, 4=f32, 5=f64)
+        ndim     : u8
+        dims     : u32 LE * ndim
+        nbytes   : u64 LE  (redundant, for integrity checking)
+        payload  : raw little-endian data, C order
+
+The rust reader/writer lives in rust/src/nbin.rs; `python/tests/test_nbin.py`
+and the rust unit tests pin the format from both sides.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"NBIN1\x00"
+
+_DTYPE_TO_CODE = {
+    np.dtype(np.int8): 0,
+    np.dtype(np.uint8): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.int64): 3,
+    np.dtype(np.float32): 4,
+    np.dtype(np.float64): 5,
+}
+_CODE_TO_DTYPE = {v: k for k, v in _DTYPE_TO_CODE.items()}
+
+
+def write_nbin(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a dict of named numpy arrays to `path`.
+
+    Dtypes must be one of the supported codes; arrays are stored C-ordered.
+    """
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<H", len(tensors)))
+        for name, arr in tensors.items():
+            # note: ascontiguousarray would promote 0-d to 1-d; keep ndim
+            arr = arr if (isinstance(arr, np.ndarray) and arr.ndim == 0) else np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_TO_CODE:
+                raise ValueError(f"unsupported dtype {arr.dtype} for entry {name!r}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TO_CODE[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            payload = arr.astype(arr.dtype.newbyteorder("<")).tobytes(order="C")
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read_nbin(path: str) -> Dict[str, np.ndarray]:
+    """Read an nbin file back into a dict of numpy arrays."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (count,) = struct.unpack("<H", f.read(2))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = [struct.unpack("<I", f.read(4))[0] for _ in range(ndim)]
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            dtype = _CODE_TO_DTYPE[code]
+            payload = f.read(nbytes)
+            if len(payload) != nbytes:
+                raise ValueError(f"{path}: truncated payload for {name!r}")
+            arr = np.frombuffer(payload, dtype=dtype.newbyteorder("<")).astype(dtype)
+            expected = int(np.prod(dims)) if dims else 1
+            if arr.size != expected:
+                raise ValueError(
+                    f"{path}: entry {name!r} payload {arr.size} != dims {dims}"
+                )
+            out[name] = arr.reshape(dims)
+    return out

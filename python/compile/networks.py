@@ -1,0 +1,218 @@
+"""Model zoo: the paper's five case-study networks, float32 JAX forward.
+
+Architectures follow the paper's layer-configuration strings exactly:
+computing layers (conv/dense) are the approximation sites, dashes mark the
+non-computational pool positions (Table III):
+
+  mlp3     "111"            3 dense layers                    (synmnist)
+  mlp5     "11111"          5 dense layers                    (synmnist)
+  mlp7     "1111111"        7 dense layers                    (synmnist)
+  lenet5   "1-1-111"        conv P conv P fc fc fc            (synmnist)
+  alexnet  "1-1-11-1-111"   c1 P c2 P c3 c4 P c5 P fc fc fc   (syncifar)
+
+AlexNet is the CIFAR-scale variant (5 convs + 3 FCs, pools after
+c1/c2/c4/c5) with channel counts sized for the 1-core build host; DESIGN.md
+§2 documents the scaling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Layer descriptors (plain tuples so they serialize trivially):
+#   ("flatten",)
+#   ("pool", size)
+#   ("dense", in_features, out_features, relu)
+#   ("conv", in_ch, out_ch, k, stride, pad, relu)
+
+
+@dataclass(frozen=True)
+class Arch:
+    name: str
+    dataset: str
+    input_shape: Tuple[int, int, int]  # (C, H, W)
+    layers: Tuple[tuple, ...]
+
+    @property
+    def computing_layers(self) -> List[int]:
+        return [i for i, l in enumerate(self.layers) if l[0] in ("dense", "conv")]
+
+    @property
+    def config_template(self) -> str:
+        """Paper-style configuration string template with 'x' per computing
+        layer and '-' per pool."""
+        out = []
+        for l in self.layers:
+            if l[0] in ("dense", "conv"):
+                out.append("x")
+            elif l[0] == "pool":
+                out.append("-")
+        return "".join(out)
+
+
+ARCHS = {
+    "mlp3": Arch(
+        "mlp3",
+        "synmnist",
+        (1, 28, 28),
+        (
+            ("flatten",),
+            ("dense", 784, 64, True),
+            ("dense", 64, 32, True),
+            ("dense", 32, 10, False),
+        ),
+    ),
+    "mlp5": Arch(
+        "mlp5",
+        "synmnist",
+        (1, 28, 28),
+        (
+            ("flatten",),
+            ("dense", 784, 128, True),
+            ("dense", 128, 64, True),
+            ("dense", 64, 48, True),
+            ("dense", 48, 32, True),
+            ("dense", 32, 10, False),
+        ),
+    ),
+    "mlp7": Arch(
+        "mlp7",
+        "synmnist",
+        (1, 28, 28),
+        (
+            ("flatten",),
+            ("dense", 784, 192, True),
+            ("dense", 192, 128, True),
+            ("dense", 128, 96, True),
+            ("dense", 96, 64, True),
+            ("dense", 64, 48, True),
+            ("dense", 48, 32, True),
+            ("dense", 32, 10, False),
+        ),
+    ),
+    "lenet5": Arch(
+        "lenet5",
+        "synmnist",
+        (1, 28, 28),
+        (
+            ("conv", 1, 6, 5, 1, 0, True),
+            ("pool", 2),
+            ("conv", 6, 16, 5, 1, 0, True),
+            ("pool", 2),
+            ("flatten",),
+            ("dense", 256, 120, True),
+            ("dense", 120, 84, True),
+            ("dense", 84, 10, False),
+        ),
+    ),
+    "alexnet": Arch(
+        "alexnet",
+        "syncifar",
+        (3, 32, 32),
+        (
+            ("conv", 3, 16, 3, 1, 1, True),
+            ("pool", 2),
+            ("conv", 16, 32, 3, 1, 1, True),
+            ("pool", 2),
+            ("conv", 32, 48, 3, 1, 1, True),
+            ("conv", 48, 48, 3, 1, 1, True),
+            ("pool", 2),
+            ("conv", 48, 64, 3, 1, 1, True),
+            ("pool", 2),
+            ("flatten",),
+            ("dense", 256, 96, True),
+            ("dense", 96, 48, True),
+            ("dense", 48, 10, False),
+        ),
+    ),
+}
+
+PAPER_NETS = ["mlp3", "lenet5", "alexnet"]  # Table II / Table III set
+MLP_CASE_STUDY = ["mlp3", "mlp5", "mlp7"]  # Table IV set
+
+
+def init_params(arch: Arch, seed: int) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """He-normal init; returns [(w, b)] per computing layer.
+
+    Dense w: [in, out]; conv w: [out_ch, in_ch, k, k] (OIHW, the lax.conv
+    layout)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for l in arch.layers:
+        if l[0] == "dense":
+            _, fin, fout, _ = l
+            w = rng.normal(0, np.sqrt(2.0 / fin), size=(fin, fout)).astype(np.float32)
+            params.append((w, np.zeros(fout, np.float32)))
+        elif l[0] == "conv":
+            _, cin, cout, k, _, _, _ = l
+            fan_in = cin * k * k
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), size=(cout, cin, k, k)).astype(
+                np.float32
+            )
+            params.append((w, np.zeros(cout, np.float32)))
+    return params
+
+
+def _maxpool2(x: jnp.ndarray, size: int) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, 1, size, size),
+        (1, 1, size, size),
+        "VALID",
+    )
+
+
+def forward_float(arch: Arch, params: Sequence, x: jnp.ndarray, collect: bool = False):
+    """Float forward. x: [B, C, H, W]. Returns logits [B, 10]; with
+    collect=True also returns the post-activation tensor of every computing
+    layer (for quantization calibration)."""
+    acts = []
+    pi = 0
+    for l in arch.layers:
+        kind = l[0]
+        if kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "pool":
+            x = _maxpool2(x, l[1])
+        elif kind == "dense":
+            w, b = params[pi]
+            pi += 1
+            x = x @ w + b
+            if l[3]:
+                x = jax.nn.relu(x)
+            acts.append(x)
+        elif kind == "conv":
+            _, cin, cout, k, stride, pad, relu = l
+            w, b = params[pi]
+            pi += 1
+            x = jax.lax.conv_general_dilated(
+                x,
+                w,
+                window_strides=(stride, stride),
+                padding=[(pad, pad), (pad, pad)],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+            x = x + b[None, :, None, None]
+            if relu:
+                x = jax.nn.relu(x)
+            acts.append(x)
+        else:
+            raise ValueError(kind)
+    if collect:
+        return x, acts
+    return x
+
+
+def activation_shapes(arch: Arch) -> List[Tuple[int, ...]]:
+    """Per-computing-layer output shape (without batch dim), by dry-run."""
+    x = jnp.zeros((1, *arch.input_shape), jnp.float32)
+    params = init_params(arch, 0)
+    _, acts = forward_float(arch, params, x, collect=True)
+    return [tuple(a.shape[1:]) for a in acts]

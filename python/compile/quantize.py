@@ -1,0 +1,211 @@
+"""Post-training full-integer 8-bit quantization (TFLite stand-in).
+
+Scheme (documented in DESIGN.md §2, mirrored bit-for-bit by rust/src/simnet):
+
+  * activations: symmetric per-tensor int8, scale s = max|x|/127 from a
+    calibration batch; input images quantized the same way.
+  * weights: symmetric per-tensor int8.
+  * bias: int32 at scale s_in*s_w.
+  * layer compute: acc_i32[j] = b_q[j] + sum_k LUT(a_q[k], w_q[k, j]);
+    requantize with the gemmlowp-style fixed-point multiplier
+        y = clamp_i8( (acc_i64 * m0 + 2^(n-1)) >> n ),   m0 = round(r·2^n),
+    r = s_in*s_w/s_out, n chosen so m0 ∈ [2^30, 2^31) (capped at 62);
+    ReLU applied on the quantized value; every computing layer output is an
+    int8 "activation" — the paper's fault-injection site.
+
+Weights are exported in GEMM layout: dense w[in, out]; conv w[K, out_ch]
+with patch index K = (ci*k + ky)*k + kx — the same im2col ordering used by
+the Pallas kernel, the jnp reference and the rust engine.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .networks import Arch, forward_float
+
+
+def requant_params(r: float) -> Tuple[int, int]:
+    """Fixed-point representation of real multiplier r: (m0, n) with
+    m0 = round(r * 2^n), m0 in [2^30, 2^31) (n capped at 62)."""
+    if r <= 0:
+        raise ValueError(f"requant multiplier must be positive, got {r}")
+    n = 30 - math.floor(math.log2(r))
+    n = min(max(n, 0), 62)
+    m0 = int(round(r * (1 << n)))
+    if m0 >= 1 << 31:  # rounding pushed it over; renormalize
+        m0 >>= 1
+        n -= 1
+    return m0, n
+
+
+@dataclass
+class QLayer:
+    """One quantized computing layer in GEMM form."""
+
+    kind: str  # "dense" | "conv"
+    relu: bool
+    w_q: np.ndarray  # int8 [K, N]
+    b_q: np.ndarray  # int32 [N]
+    s_in: float
+    s_w: float
+    s_out: float
+    m0: int
+    nshift: int
+    # conv-only geometry (zeros for dense)
+    in_ch: int = 0
+    out_ch: int = 0
+    ksize: int = 0
+    stride: int = 0
+    pad: int = 0
+
+
+@dataclass
+class QNet:
+    name: str
+    arch: Arch
+    s_in: float  # input image scale
+    qlayers: List[QLayer]  # one per computing layer, in order
+    act_shapes: List[Tuple[int, ...]] = field(default_factory=list)
+
+    def layer_struct(self) -> List[tuple]:
+        """The full layer sequence with computing-layer indices resolved."""
+        return list(self.arch.layers)
+
+
+def _scale(max_abs: float) -> float:
+    return max(float(max_abs), 1e-6) / 127.0
+
+
+def quantize_net(
+    arch: Arch,
+    params,
+    calib_x: np.ndarray,
+    name: Optional[str] = None,
+    input_scale: Optional[float] = None,
+) -> QNet:
+    """Post-training quantization against a float calibration batch.
+
+    `input_scale` pins the image scale (the aot driver uses 1/127 so one
+    quantized test set is shared by every net on a dataset)."""
+    logits, acts = forward_float(
+        arch, [(jnp.asarray(w), jnp.asarray(b)) for w, b in params], jnp.asarray(calib_x), collect=True
+    )
+    acts = [np.asarray(a) for a in acts]
+    s_img = input_scale if input_scale is not None else _scale(np.abs(calib_x).max())
+
+    qlayers: List[QLayer] = []
+    s_in = s_img
+    pi = 0
+    for l in arch.layers:
+        kind = l[0]
+        if kind not in ("dense", "conv"):
+            continue
+        w, b = params[pi]
+        a_out = acts[pi]
+        pi += 1
+        s_w = _scale(np.abs(w).max())
+        s_out = _scale(np.abs(a_out).max())
+        if kind == "dense":
+            w_col = np.asarray(w)  # [in, out]
+            relu = l[3]
+            geom = dict(in_ch=0, out_ch=0, ksize=0, stride=0, pad=0)
+        else:
+            _, cin, cout, k, stride, pad, relu = l
+            # OIHW -> [K, N] with K = (ci*k + ky)*k + kx
+            w_col = np.asarray(w).transpose(1, 2, 3, 0).reshape(cin * k * k, cout)
+            geom = dict(in_ch=cin, out_ch=cout, ksize=k, stride=stride, pad=pad)
+        w_q = np.clip(np.round(w_col / s_w), -127, 127).astype(np.int8)
+        b_q = np.round(np.asarray(b) / (s_in * s_w)).astype(np.int64)
+        b_q = np.clip(b_q, -(2**31), 2**31 - 1).astype(np.int32)
+        m0, nshift = requant_params(s_in * s_w / s_out)
+        qlayers.append(
+            QLayer(
+                kind=kind,
+                relu=bool(relu),
+                w_q=w_q,
+                b_q=b_q,
+                s_in=float(s_in),
+                s_w=float(s_w),
+                s_out=float(s_out),
+                m0=m0,
+                nshift=nshift,
+                **geom,
+            )
+        )
+        s_in = s_out  # next layer consumes this activation
+
+    from .networks import activation_shapes
+
+    return QNet(
+        name=name or arch.name,
+        arch=arch,
+        s_in=s_img,
+        qlayers=qlayers,
+        act_shapes=activation_shapes(arch),
+    )
+
+
+def quantize_images(x: np.ndarray, s_in: float) -> np.ndarray:
+    return np.clip(np.round(x / s_in), -128, 127).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Serialization to the artifact formats (meta dict + named tensors)
+# ---------------------------------------------------------------------------
+
+
+def qnet_meta(q: QNet) -> Dict:
+    layers_meta = []
+    ci = 0
+    for l in q.arch.layers:
+        kind = l[0]
+        if kind == "flatten":
+            layers_meta.append({"kind": "flatten"})
+        elif kind == "pool":
+            layers_meta.append({"kind": "pool", "size": l[1]})
+        else:
+            ql = q.qlayers[ci]
+            layers_meta.append(
+                {
+                    "kind": ql.kind,
+                    "comp_index": ci,
+                    "relu": ql.relu,
+                    "k_dim": int(ql.w_q.shape[0]),
+                    "n_dim": int(ql.w_q.shape[1]),
+                    "s_in": ql.s_in,
+                    "s_w": ql.s_w,
+                    "s_out": ql.s_out,
+                    "m0": ql.m0,
+                    "nshift": ql.nshift,
+                    "in_ch": ql.in_ch,
+                    "out_ch": ql.out_ch,
+                    "ksize": ql.ksize,
+                    "stride": ql.stride,
+                    "pad": ql.pad,
+                    "act_shape": list(q.act_shapes[ci]),
+                }
+            )
+            ci += 1
+    return {
+        "name": q.name,
+        "dataset": q.arch.dataset,
+        "input_shape": list(q.arch.input_shape),
+        "input_scale": q.s_in,
+        "config_template": q.arch.config_template,
+        "n_comp_layers": len(q.qlayers),
+        "layers": layers_meta,
+    }
+
+
+def qnet_tensors(q: QNet) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for i, ql in enumerate(q.qlayers):
+        out[f"l{i}.w"] = ql.w_q
+        out[f"l{i}.b"] = ql.b_q
+    return out

@@ -1,0 +1,91 @@
+"""Build-time training loop (Keras stand-in): plain-JAX Adam + cross-entropy.
+
+The image has no optax/flax; Adam is ~25 lines. Training is deterministic
+given the seeds in `TRAIN_CFG` and runs once per network — `aot.py` caches
+trained parameters under artifacts/.train_cache/ and skips retraining when
+the cache matches the architecture fingerprint.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .networks import ARCHS, Arch, forward_float, init_params
+
+TRAIN_CFG = {
+    # net: (train_n, epochs, batch, lr, seed)
+    "mlp3": (8000, 12, 100, 1e-3, 11),
+    "mlp5": (8000, 12, 100, 1e-3, 12),
+    "mlp7": (8000, 12, 100, 1e-3, 13),
+    "lenet5": (8000, 8, 100, 1e-3, 14),
+    "alexnet": (8000, 10, 100, 1e-3, 15),
+}
+
+
+def _loss_fn(arch: Arch, params, x, y):
+    logits = forward_float(arch, params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def train(net: str, log=print) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Train `net` on its synthetic dataset; returns float params."""
+    arch = ARCHS[net]
+    train_n, epochs, batch, lr, seed = TRAIN_CFG[net]
+    xs, ys = datasets.load(arch.dataset, "train", train_n)
+    params = [(jnp.asarray(w), jnp.asarray(b)) for w, b in init_params(arch, seed)]
+
+    # Adam state
+    m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, x, y: _loss_fn(arch, p, x, y)))
+
+    @jax.jit
+    def adam_step(params, m, v, grads, t):
+        new_p, new_m, new_v = [], [], []
+        for (w, b), (mw, mb), (vw, vb), (gw, gb) in zip(params, m, v, grads):
+            mw = b1 * mw + (1 - b1) * gw
+            mb = b1 * mb + (1 - b1) * gb
+            vw = b2 * vw + (1 - b2) * gw**2
+            vb = b2 * vb + (1 - b2) * gb**2
+            mhw, mhb = mw / (1 - b1**t), mb / (1 - b1**t)
+            vhw, vhb = vw / (1 - b2**t), vb / (1 - b2**t)
+            new_p.append((w - lr * mhw / (jnp.sqrt(vhw) + eps), b - lr * mhb / (jnp.sqrt(vhb) + eps)))
+            new_m.append((mw, mb))
+            new_v.append((vw, vb))
+        return new_p, new_m, new_v
+
+    rng = np.random.default_rng(seed + 777)
+    n_batches = train_n // batch
+    t0 = time.time()
+    step = 0
+    for ep in range(epochs):
+        order = rng.permutation(train_n)
+        ep_loss = 0.0
+        for bi in range(n_batches):
+            idx = order[bi * batch : (bi + 1) * batch]
+            step += 1
+            loss, grads = grad_fn(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+            params, m, v = adam_step(params, m, v, grads, jnp.float32(step))
+            ep_loss += float(loss)
+        log(f"[train:{net}] epoch {ep + 1}/{epochs} loss={ep_loss / n_batches:.4f} ({time.time() - t0:.1f}s)")
+    return [(np.asarray(w), np.asarray(b)) for w, b in params]
+
+
+def eval_float(net: str, params, xs: np.ndarray, ys: np.ndarray, batch: int = 200) -> float:
+    arch = ARCHS[net]
+    fwd = jax.jit(lambda p, x: jnp.argmax(forward_float(arch, p, x), axis=-1))
+    jp = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+    correct = 0
+    for i in range(0, len(xs), batch):
+        pred = fwd(jp, jnp.asarray(xs[i : i + batch]))
+        correct += int((np.asarray(pred) == ys[i : i + batch]).sum())
+    return correct / len(xs)

@@ -1,0 +1,87 @@
+"""End-to-end build-path test: a scaled-down aot.build() on mlp3, checking
+every artifact the rust side consumes."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, nbin, train
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory, request):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    # Scale everything down: 1 training epoch, small test split.
+    orig_cfg = dict(train.TRAIN_CFG)
+    orig = (aot.TEST_N, aot.CALIB_N, aot.LOWER_BATCH, aot.EXPECTED_N, aot.FAULT_SAMPLES)
+    train.TRAIN_CFG["mlp3"] = (600, 1, 100, 1e-3, 11)
+    aot.TEST_N, aot.CALIB_N, aot.LOWER_BATCH, aot.EXPECTED_N, aot.FAULT_SAMPLES = 80, 64, 4, 16, 2
+    try:
+        aot.build(out, nets=["mlp3"], log=lambda *a: None)
+    finally:
+        train.TRAIN_CFG.update(orig_cfg)
+        aot.TEST_N, aot.CALIB_N, aot.LOWER_BATCH, aot.EXPECTED_N, aot.FAULT_SAMPLES = orig
+    return out
+
+
+def test_manifest(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    assert "mlp3" in man["nets"]
+    assert man["nets"]["mlp3"]["n_comp_layers"] == 3
+    assert 0 <= man["nets"]["mlp3"]["quant_acc"] <= 1
+
+
+def test_multipliers_json_and_luts(built):
+    with open(os.path.join(built, "multipliers.json")) as f:
+        m = json.load(f)
+    names = {r["name"] for r in m["measured"]}
+    assert {"exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"} <= names
+    for name in names:
+        lut = nbin.read_nbin(os.path.join(built, "luts", f"{name}.nbin"))["lut"]
+        assert lut.shape == (65536,) and lut.dtype == np.int32
+    exact = nbin.read_nbin(os.path.join(built, "luts", "exact.nbin"))["lut"]
+    # spot-check byte-order indexing
+    assert exact[((5 & 0xFF) << 8) | (7 & 0xFF)] == 35
+    assert exact[((-5 & 0xFF) << 8) | (7 & 0xFF)] == -35
+
+
+def test_dataset_artifact(built):
+    d = nbin.read_nbin(os.path.join(built, "synmnist.test.nbin"))
+    assert d["x_q"].shape == (80, 1, 28, 28) and d["x_q"].dtype == np.int8
+    assert d["labels"].shape == (80,) and d["labels"].dtype == np.int32
+
+
+def test_meta_and_weights(built):
+    with open(os.path.join(built, "mlp3.meta.json")) as f:
+        meta = json.load(f)
+    assert meta["n_comp_layers"] == 3
+    assert meta["input_scale"] == pytest.approx(1 / 127)
+    w = nbin.read_nbin(os.path.join(built, "mlp3.weights.nbin"))
+    for i, l in enumerate([l for l in meta["layers"] if l["kind"] != "flatten"]):
+        assert w[f"l{i}.w"].shape == (l["k_dim"], l["n_dim"])
+        assert w[f"l{i}.b"].shape == (l["n_dim"],)
+
+
+def test_expected_predictions(built):
+    e = nbin.read_nbin(os.path.join(built, "mlp3.expected.nbin"))
+    assert e["pred_exact"].shape == (16,)
+    assert e["pred_axm_kvp"].shape == (16,)
+    assert e["fault_sites"].shape == (2, 3)
+    assert e["pred_fault"].shape == (2, 16)
+    assert e["pred_exact"].min() >= 0 and e["pred_exact"].max() <= 9
+
+
+def test_hlo_text_loadable_format(built):
+    hlo = open(os.path.join(built, "mlp3.hlo.txt")).read()
+    assert hlo.startswith("HloModule") or "HloModule" in hlo[:200]
+    assert "ENTRY" in hlo
+
+
+def test_train_cache_reused(built):
+    cache = os.path.join(built, ".train_cache", "mlp3.params.nbin")
+    assert os.path.exists(cache)
+    t = nbin.read_nbin(cache)
+    assert t["p0.w"].shape == (784, 64)

@@ -1,0 +1,162 @@
+"""Pallas kernel vs pure-jnp oracle vs scalar numpy — the CORE correctness
+signal. Hypothesis sweeps shapes, data distributions and multiplier LUTs."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import luts
+from compile.kernels import ref
+from compile.kernels.axgemm import axgemm
+
+LUTS = {m.name: m.lut() for m in luts.CATALOG[:4]}
+PLANES = {m.name: m.plane() for m in luts.CATALOG[:4]}
+
+
+def scalar_gemm(a: np.ndarray, w: np.ndarray, plane: np.ndarray) -> np.ndarray:
+    """Dead-simple scalar oracle."""
+    m, k = a.shape
+    _, n = w.shape
+    out = np.zeros((m, n), np.int64)
+    for i in range(m):
+        for j in range(n):
+            out[i, j] = sum(int(plane[int(a[i, kk]) + 128, int(w[kk, j]) + 128]) for kk in range(k))
+    return out.astype(np.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 32),
+    n=st.integers(1, 24),
+    lut_name=st.sampled_from(list(LUTS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_axgemm_matches_scalar_oracle(m, k, n, lut_name, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    expect = scalar_gemm(a, w, PLANES[lut_name])
+    got_ref = np.asarray(ref.axgemm_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(LUTS[lut_name])))
+    got_pal = np.asarray(axgemm(jnp.asarray(a), jnp.asarray(w), jnp.asarray(LUTS[lut_name])))
+    assert np.array_equal(got_ref, expect)
+    assert np.array_equal(got_pal, expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(100, 400),
+    block_m=st.sampled_from([32, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_axgemm_blocking_invariance(m, block_m, seed):
+    """Output independent of the M-tile size, including ragged tails."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, (m, 17)).astype(np.int8)
+    w = rng.integers(-128, 128, (17, 9)).astype(np.int8)
+    lut = jnp.asarray(LUTS["mul8s_1kv9_s"])
+    base = np.asarray(ref.axgemm_ref(jnp.asarray(a), jnp.asarray(w), lut))
+    got = np.asarray(axgemm(jnp.asarray(a), jnp.asarray(w), lut, block_m=block_m))
+    assert np.array_equal(got, base)
+
+
+def test_axgemm_extreme_values():
+    """Full-scale corners: -128*-128 etc. accumulate without overflow."""
+    a = np.full((4, 64), -128, np.int8)
+    w = np.full((64, 4), -128, np.int8)
+    out = np.asarray(axgemm(jnp.asarray(a), jnp.asarray(w), jnp.asarray(LUTS["exact"])))
+    assert (out == 64 * 16384).all()
+
+
+def test_axgemm_ref_cube_and_scan_paths_agree():
+    """ref has a vectorized small-path and a scan big-path; force both."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(-128, 128, (64, 80)).astype(np.int8)
+    w = rng.integers(-128, 128, (80, 48)).astype(np.int8)
+    lut = jnp.asarray(LUTS["mul8s_1kvp_s"])
+    small = np.asarray(ref.axgemm_ref(jnp.asarray(a), jnp.asarray(w), lut))
+    old = ref._CUBE_BUDGET
+    try:
+        ref._CUBE_BUDGET = 0  # force scan path
+        big = np.asarray(ref.axgemm_ref(jnp.asarray(a), jnp.asarray(w), lut))
+    finally:
+        ref._CUBE_BUDGET = old
+    assert np.array_equal(small, big)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m0r=st.floats(1e-5, 0.9999),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_requantize_matches_scalar(m0r, relu, seed):
+    from compile.quantize import requant_params
+
+    m0, n = requant_params(m0r)
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**22), 2**22, 64).astype(np.int32)
+    got = np.asarray(ref.requantize(jnp.asarray(acc), m0, n, relu))
+    expect = np.clip((acc.astype(np.int64) * m0 + (1 << (n - 1))) >> n, -128, 127).astype(np.int8)
+    if relu:
+        expect = np.maximum(expect, 0)
+    assert np.array_equal(got, expect)
+
+
+def naive_im2col(x, k, stride, pad):
+    b, c, h, w = x.shape
+    xp = np.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    out = np.zeros((b * oh * ow, c * k * k), x.dtype)
+    r = 0
+    for bi in range(b):
+        for oy in range(oh):
+            for ox in range(ow):
+                for ci in range(c):
+                    for ky in range(k):
+                        for kx in range(k):
+                            out[r, (ci * k + ky) * k + kx] = xp[
+                                bi, ci, oy * stride + ky, ox * stride + kx
+                            ]
+                r += 1
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    h=st.integers(4, 12),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_matches_naive(c, h, k, stride, pad, seed):
+    if h + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (2, c, h, h)).astype(np.int8)
+    got = np.asarray(ref.im2col(jnp.asarray(x), k, stride, pad))
+    expect = naive_im2col(x, k, stride, pad)
+    assert np.array_equal(got, expect)
+
+
+def test_maxpool_i8():
+    x = np.array(
+        [[[[1, 2, 3, 4], [5, 6, 7, 8], [-1, -2, -3, -4], [-5, -6, -128, 127]]]],
+        np.int8,
+    )
+    got = np.asarray(ref.maxpool_i8(jnp.asarray(x), 2))
+    assert got.tolist() == [[[[6, 8], [-1, 127]]]]
+
+
+def test_conv_via_im2col_matches_float_conv_shape():
+    """Geometry check: im2col GEMM output reshapes to the lax.conv shape."""
+    import jax
+
+    x = np.zeros((2, 3, 8, 8), np.int8)
+    cols = np.asarray(ref.im2col(jnp.asarray(x), 3, 1, 1))
+    assert cols.shape == (2 * 8 * 8, 3 * 9)

@@ -1,0 +1,102 @@
+"""Approximate-multiplier library: LUT layout, exactness, calibration."""
+
+import numpy as np
+import pytest
+
+from compile import luts
+
+
+def test_exact_plane_is_product():
+    p = luts.plane_exact()
+    for a in (-128, -1, 0, 1, 127, 37):
+        for b in (-128, -5, 0, 2, 127):
+            assert p[a + 128, b + 128] == a * b
+
+
+def test_lut_byte_order_indexing():
+    """lut[(a_u8 << 8) | b_u8] must equal mult(a, b) for signed a, b."""
+    for m in luts.CATALOG:
+        lut = m.lut()
+        plane = m.plane()
+        rng = np.random.default_rng(1)
+        for _ in range(200):
+            a = int(rng.integers(-128, 128))
+            b = int(rng.integers(-128, 128))
+            idx = ((a & 0xFF) << 8) | (b & 0xFF)
+            assert lut[idx] == plane[a + 128, b + 128], (m.name, a, b)
+
+
+def test_exact_metrics_zero():
+    met = luts.error_metrics(luts.plane_exact())
+    assert met["mae"] == 0 and met["wce"] == 0 and met["ep_pct"] == 0
+
+
+def test_bam_underestimates_magnitude():
+    """BAM drops partial products, so |approx| <= |exact| always."""
+    for k in (2, 3, 4):
+        p = luts.plane_bam(k)
+        e = luts.plane_exact()
+        assert (np.abs(p) <= np.abs(e)).all()
+        # sign is preserved (or result is zero)
+        assert (np.sign(p) * np.sign(e) >= 0).all()
+
+
+def test_bam_monotone_error_in_k():
+    prev = -1.0
+    for k in (1, 2, 3, 4, 5, 6):
+        mae = luts.error_metrics(luts.plane_bam(k))["mae"]
+        assert mae > prev
+        prev = mae
+
+
+def test_catalog_calibration_ordering():
+    """Surrogates must preserve the paper's error ordering:
+    1KVP >> 1KV9 >> 1KV8 on every metric."""
+    met = {m.name: luts.error_metrics(m.plane()) for m in luts.CATALOG[:4]}
+    for key in ("mae", "wce", "mre_pct"):
+        assert (
+            met["mul8s_1kvp_s"][key]
+            > met["mul8s_1kv9_s"][key]
+            > met["mul8s_1kv8_s"][key]
+            > met["exact"][key]
+        ), key
+
+
+def test_catalog_ep_matches_paper_exactly():
+    """bam(3)/bam(2) were calibrated to land exactly on the paper's EP."""
+    met9 = luts.error_metrics(luts.by_name("mul8s_1kv9_s").plane())
+    met8 = luts.error_metrics(luts.by_name("mul8s_1kv8_s").plane())
+    assert met9["ep_pct"] == pytest.approx(68.75, abs=0.01)
+    assert met8["ep_pct"] == pytest.approx(50.00, abs=0.01)
+
+
+def test_rndpp_error_bound():
+    for k in (2, 3, 4):
+        p = luts.plane_rndpp(k)
+        e = luts.plane_exact()
+        assert np.abs(p - e).max() <= (1 << (k - 1))
+
+
+def test_trunc_zero_preserving():
+    p = luts.plane_trunc(3)
+    assert p[0 + 128, :].max() == 0 and p[:, 0 + 128].max() == 0
+
+
+def test_mitchell_reasonable():
+    met = luts.error_metrics(luts.plane_mitchell())
+    # Mitchell's classic worst-case relative error is ~11.1%
+    assert met["mre_pct"] < 11.2
+    assert met["mae"] > 0
+
+
+def test_by_name_raises():
+    with pytest.raises(KeyError):
+        luts.by_name("nope")
+
+
+def test_catalog_report_fields():
+    rows = luts.catalog_report()
+    assert {r["name"] for r in rows} >= {"exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"}
+    for r in rows:
+        for f in ("mae", "wce", "mre_pct", "ep_pct", "power_mw", "area_um2"):
+            assert f in r

@@ -1,0 +1,133 @@
+"""Integer network forward: ref==pallas, fault-mask semantics, lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, luts
+from compile.kernels import ref
+from compile.kernels.axgemm import axgemm
+from compile.model import accuracy_int, build_lowerable, forward_int, predict_int
+from compile.networks import ARCHS, activation_shapes, init_params
+from compile.quantize import quantize_images, quantize_net
+
+
+def _mini(net, seed=0):
+    arch = ARCHS[net]
+    params = init_params(arch, seed)
+    calib, _ = datasets.load(arch.dataset, "train", 48)
+    q = quantize_net(arch, params, calib, input_scale=1 / 127)
+    x, y = datasets.load(arch.dataset, "test", 8)
+    return q, quantize_images(x, 1 / 127), y
+
+
+EXACT = luts.by_name("exact").lut()
+KVP = luts.by_name("mul8s_1kvp_s").lut()
+
+
+@pytest.mark.parametrize("net", ["mlp3", "mlp5", "lenet5"])
+def test_ref_vs_pallas_forward(net):
+    q, x_q, _ = _mini(net)
+    lts = [jnp.asarray(EXACT)] * len(q.qlayers)
+    lo_ref = forward_int(q, jnp.asarray(x_q), lts, gemm=ref.axgemm_ref)
+    lo_pal = forward_int(q, jnp.asarray(x_q), lts, gemm=axgemm)
+    assert np.array_equal(np.asarray(lo_ref), np.asarray(lo_pal))
+    assert lo_ref.dtype == jnp.int8 and lo_ref.shape == (8, 10)
+
+
+def test_mixed_configuration_luts_change_output():
+    """Approximating only some layers is a distinct point in design space."""
+    q, x_q, _ = _mini("mlp3", seed=2)
+    n = len(q.qlayers)
+    full_exact = forward_int(q, jnp.asarray(x_q), [jnp.asarray(EXACT)] * n)
+    full_axm = forward_int(q, jnp.asarray(x_q), [jnp.asarray(KVP)] * n)
+    mixed = forward_int(
+        q, jnp.asarray(x_q), [jnp.asarray(KVP), jnp.asarray(EXACT), jnp.asarray(EXACT)]
+    )
+    assert not np.array_equal(np.asarray(full_exact), np.asarray(full_axm))
+    assert not np.array_equal(np.asarray(mixed), np.asarray(full_exact))
+    assert not np.array_equal(np.asarray(mixed), np.asarray(full_axm))
+
+
+def test_zero_mask_is_identity():
+    q, x_q, _ = _mini("mlp3")
+    n = len(q.qlayers)
+    lts = [jnp.asarray(EXACT)] * n
+    masks = [jnp.zeros((8, *q.act_shapes[i]), jnp.int8) for i in range(n)]
+    a = forward_int(q, jnp.asarray(x_q), lts)
+    b = forward_int(q, jnp.asarray(x_q), lts, masks)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_single_bit_mask_flips_one_activation():
+    """XOR mask on the last layer flips exactly the targeted logit bit."""
+    q, x_q, _ = _mini("mlp3")
+    n = len(q.qlayers)
+    lts = [jnp.asarray(EXACT)] * n
+    base = np.asarray(forward_int(q, jnp.asarray(x_q), lts))
+    masks = [None] * n
+    m = np.zeros((8, 10), np.int8)
+    m[3, 7] = np.int8(np.uint8(1 << 6).view(np.int8))
+    masks[n - 1] = jnp.asarray(m)
+    got = np.asarray(forward_int(q, jnp.asarray(x_q), lts, masks))
+    diff = got.astype(np.int32) ^ base.astype(np.int32)
+    assert (diff[3, 7] & 0xFF) == 1 << 6
+    diff[3, 7] = 0
+    assert (diff == 0).all()
+
+
+def test_hidden_layer_fault_propagates():
+    """A high-bit flip in layer 0 must be able to change the logits."""
+    q, x_q, _ = _mini("mlp3", seed=5)
+    n = len(q.qlayers)
+    lts = [jnp.asarray(EXACT)] * n
+    base = np.asarray(forward_int(q, jnp.asarray(x_q), lts))
+    masks = [None] * n
+    m = np.zeros((8, 64), np.int8)
+    m[:, 11] = np.int8(np.uint8(1 << 7).view(np.int8))  # sign bit, every image
+    masks[0] = jnp.asarray(m)
+    got = np.asarray(forward_int(q, jnp.asarray(x_q), lts, masks))
+    assert not np.array_equal(got, base)
+
+
+def test_predict_int_per_image_mask_broadcast():
+    q, x_q, _ = _mini("mlp3")
+    n = len(q.qlayers)
+    masks = [None] * n
+    mm = np.zeros(q.act_shapes[0], np.int8)
+    mm[5] = np.int8(np.uint8(1 << 7).view(np.int8))
+    masks[0] = mm
+    p = predict_int(q, x_q, [EXACT] * n, masks=masks, batch=4)
+    assert p.shape == (8,) and p.dtype == np.int32
+
+
+def test_accuracy_int_bounds():
+    q, x_q, y = _mini("mlp3")
+    acc = accuracy_int(q, x_q, y, [EXACT] * len(q.qlayers))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_activation_shapes_match_forward():
+    for net in ("mlp3", "lenet5", "alexnet"):
+        arch = ARCHS[net]
+        shapes = activation_shapes(arch)
+        assert len(shapes) == len(arch.computing_layers)
+        assert shapes[-1] == (10,)
+
+
+def test_lowerable_signature_and_hlo():
+    q, _, _ = _mini("mlp3")
+    fn, args = build_lowerable(q, 4)
+    assert len(args) == 1 + 2 * len(q.qlayers)
+    lowered = jax.jit(fn).lower(*args)
+    from compile.aot import to_hlo_text
+
+    hlo = to_hlo_text(lowered)
+    assert "ENTRY" in hlo and len(hlo) > 1000
+
+
+def test_config_template_strings():
+    assert ARCHS["mlp3"].config_template == "xxx"
+    assert ARCHS["lenet5"].config_template == "x-x-xxx"
+    assert ARCHS["alexnet"].config_template == "x-x-xx-x-xxx"

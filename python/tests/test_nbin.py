@@ -1,0 +1,64 @@
+"""nbin container format: roundtrip + error handling (format is shared with
+rust/src/nbin.rs; rust unit tests pin the same byte layout)."""
+
+import numpy as np
+import pytest
+
+from compile import nbin
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    path = str(tmp_path / "t.nbin")
+    tensors = {
+        "a_i8": np.arange(-8, 8, dtype=np.int8).reshape(4, 4),
+        "b_u8": np.arange(16, dtype=np.uint8).reshape(2, 8),
+        "c_i32": np.arange(-4, 4, dtype=np.int32).reshape(2, 2, 2),
+        "d_i64": np.array([2**40, -(2**40)], dtype=np.int64),
+        "e_f32": np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+        "f_f64": np.array([[1.5, -2.5]], dtype=np.float64),
+    }
+    nbin.write_nbin(path, tensors)
+    back = nbin.read_nbin(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype, k
+        assert back[k].shape == tensors[k].shape, k
+        assert np.array_equal(back[k], tensors[k]), k
+
+
+def test_scalar_and_empty(tmp_path):
+    path = str(tmp_path / "t.nbin")
+    nbin.write_nbin(path, {"s": np.array(7, np.int32), "e": np.zeros((0, 3), np.int8)})
+    back = nbin.read_nbin(path)
+    assert back["s"].shape == ()
+    assert int(back["s"]) == 7
+    assert back["e"].shape == (0, 3)
+
+
+def test_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.nbin")
+    with open(path, "wb") as f:
+        f.write(b"NOTNBIN")
+    with pytest.raises(ValueError, match="bad magic"):
+        nbin.read_nbin(path)
+
+
+def test_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError, match="unsupported dtype"):
+        nbin.write_nbin(str(tmp_path / "x.nbin"), {"x": np.zeros(2, np.float16)})
+
+
+def test_truncated_payload(tmp_path):
+    path = str(tmp_path / "t.nbin")
+    nbin.write_nbin(path, {"x": np.arange(100, dtype=np.int32)})
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[:-10])
+    with pytest.raises(ValueError, match="truncated"):
+        nbin.read_nbin(path)
+
+
+def test_unicode_names(tmp_path):
+    path = str(tmp_path / "t.nbin")
+    nbin.write_nbin(path, {"weights/λ0": np.ones(3, np.float32)})
+    assert "weights/λ0" in nbin.read_nbin(path)

@@ -1,0 +1,121 @@
+"""Quantization: requant fixed-point params, layouts, end-to-end fidelity."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets
+from compile.kernels import ref
+from compile.networks import ARCHS, forward_float, init_params
+from compile.quantize import QNet, quantize_images, quantize_net, requant_params
+
+
+def test_requant_params_range():
+    for r in (1e-6, 1e-3, 0.1, 0.5, 0.99, 1.0, 3.7, 100.0):
+        m0, n = requant_params(r)
+        assert 0 <= n <= 62
+        assert m0 < 1 << 31
+        # reconstruction error small
+        assert abs(m0 / (1 << n) - r) / r < 1e-6 or n == 62
+
+
+def test_requant_params_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        requant_params(0.0)
+    with pytest.raises(ValueError):
+        requant_params(-1.0)
+
+
+def test_requant_rounding_semantics():
+    """(acc * m0 + 2^(n-1)) >> n must round-half-up like the rust engine."""
+    m0, n = requant_params(0.5)
+    acc = jnp.array([-3, -2, -1, 0, 1, 2, 3], jnp.int32)
+    y = ref.requantize(acc, m0, n, relu=False)
+    # 0.5*acc rounded half-up: -1.5 -> -1, -1 -> -1, -0.5 -> 0, ...
+    assert y.tolist() == [-1, -1, 0, 0, 1, 1, 2]
+
+
+def test_quantize_images_clip():
+    x = np.array([[-2.0, 0.0, 0.5, 1.0, 2.0]], np.float32)
+    q = quantize_images(x, 1.0 / 127.0)
+    assert q.tolist() == [[-128, 0, 64, 127, 127]]
+    assert q.dtype == np.int8
+
+
+def _mini_qnet(net="mlp3", seed=0, n_calib=64):
+    arch = ARCHS[net]
+    params = init_params(arch, seed)
+    calib, _ = datasets.load(arch.dataset, "train", n_calib)
+    return arch, params, quantize_net(arch, params, calib, input_scale=1 / 127)
+
+
+def test_qnet_structure():
+    arch, params, q = _mini_qnet()
+    assert isinstance(q, QNet)
+    assert len(q.qlayers) == len(arch.computing_layers)
+    for ql in q.qlayers:
+        assert ql.w_q.dtype == np.int8
+        assert ql.b_q.dtype == np.int32
+        assert np.abs(ql.w_q).max() <= 127
+        assert 1 << 30 <= ql.m0 < 1 << 31 or ql.nshift == 62
+
+
+def test_scale_chaining():
+    """Layer l+1 input scale == layer l output scale."""
+    _, _, q = _mini_qnet("mlp5")
+    for prev, cur in zip(q.qlayers, q.qlayers[1:]):
+        assert cur.s_in == pytest.approx(prev.s_out)
+
+
+def test_conv_weight_gemm_layout():
+    """Conv weights exported as [K, N] with K = (ci*k + ky)*k + kx."""
+    arch, params, q = _mini_qnet("lenet5")
+    # first conv: OIHW [6, 1, 5, 5]
+    w = params[0][0]
+    ql = q.qlayers[0]
+    assert ql.w_q.shape == (1 * 5 * 5, 6)
+    s_w = ql.s_w
+    for co in (0, 3, 5):
+        for ci in (0,):
+            for ky in (0, 2, 4):
+                for kx in (1, 3):
+                    kidx = (ci * 5 + ky) * 5 + kx
+                    expect = int(np.clip(np.round(w[co, ci, ky, kx] / s_w), -127, 127))
+                    assert ql.w_q[kidx, co] == expect
+
+
+def test_quantized_forward_tracks_float():
+    """Integer forward (exact LUT) approximates the float forward: the
+    argmax agrees on a clear majority of easy inputs even for an untrained
+    net (logit ordering is scale-invariant)."""
+    from compile import luts
+    from compile.model import forward_int
+
+    arch, params, q = _mini_qnet("mlp3", seed=3)
+    x, _ = datasets.load(arch.dataset, "test", 64)
+    x_q = quantize_images(x, 1 / 127)
+    jl = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+    fl = np.asarray(jnp.argmax(forward_float(arch, jl, jnp.asarray(x)), axis=-1))
+    exact = [jnp.asarray(luts.by_name("exact").lut())] * len(q.qlayers)
+    il = np.asarray(jnp.argmax(forward_int(q, jnp.asarray(x_q), exact), axis=-1))
+    assert (fl == il).mean() > 0.75
+
+
+def test_meta_serialization_roundtrip_fields():
+    from compile.quantize import qnet_meta, qnet_tensors
+
+    arch, params, q = _mini_qnet("lenet5")
+    meta = qnet_meta(q)
+    assert meta["name"] == "lenet5"
+    assert meta["n_comp_layers"] == 5
+    assert meta["config_template"] == "x-x-xxx"
+    kinds = [l["kind"] for l in meta["layers"]]
+    assert kinds == ["conv", "pool", "conv", "pool", "flatten", "dense", "dense", "dense"]
+    tensors = qnet_tensors(q)
+    assert set(tensors) == {f"l{i}.{s}" for i in range(5) for s in ("w", "b")}
+    for l in meta["layers"]:
+        if l["kind"] in ("conv", "dense"):
+            assert l["m0"] > 0 and 0 <= l["nshift"] <= 62
+            assert l["k_dim"] == tensors[f"l{l['comp_index']}.w"].shape[0]

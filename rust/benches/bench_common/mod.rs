@@ -1,0 +1,33 @@
+//! Shared setup for the bench harnesses (criterion stand-ins,
+//! `harness = false`). Each bench regenerates one paper table/figure and
+//! reports wall-clock for the end-to-end harness, honouring the same env
+//! knobs as the CLI (DEEPAXE_FI_FAULTS / DEEPAXE_FI_IMAGES /
+//! DEEPAXE_EVAL_IMAGES).
+
+use deepaxe::coordinator::Ctx;
+use std::path::PathBuf;
+
+pub fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Bench-scale defaults: small enough for a 1-core box unless the caller
+/// overrides via env.
+pub fn setup(faults: usize, images: usize, eval_images: usize) -> Ctx {
+    let a = artifacts();
+    assert!(
+        a.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    std::env::set_var("DEEPAXE_ARTIFACTS", a.to_str().unwrap());
+    if std::env::var("DEEPAXE_FI_FAULTS").is_err() {
+        std::env::set_var("DEEPAXE_FI_FAULTS", faults.to_string());
+    }
+    if std::env::var("DEEPAXE_FI_IMAGES").is_err() {
+        std::env::set_var("DEEPAXE_FI_IMAGES", images.to_string());
+    }
+    if std::env::var("DEEPAXE_EVAL_IMAGES").is_err() {
+        std::env::set_var("DEEPAXE_EVAL_IMAGES", eval_images.to_string());
+    }
+    Ctx::load().expect("loading ctx")
+}

@@ -1,0 +1,14 @@
+//! Fig. 3 harness: the full LeNet-5 2^5 × 3-AxM design-space sweep with
+//! fault injection + Pareto frontier.
+
+mod bench_common;
+
+use deepaxe::report::experiments::fig3;
+use deepaxe::util::bench::time_once;
+
+fn main() {
+    let ctx = bench_common::setup(12, 20, 100);
+    let (out, dt) = time_once("fig3:sweep96", || fig3(&ctx).unwrap());
+    println!("{out}");
+    println!("fig3 harness total: {dt:.2}s (96 design points + frontier)");
+}

@@ -1,0 +1,13 @@
+//! Fig. 4 harness: per-AxM impact at full approximation for each network.
+
+mod bench_common;
+
+use deepaxe::report::experiments::fig4;
+use deepaxe::util::bench::time_once;
+
+fn main() {
+    let ctx = bench_common::setup(16, 20, 100);
+    let (out, dt) = time_once("fig4:full", || fig4(&ctx).unwrap());
+    println!("{out}");
+    println!("fig4 harness total: {dt:.2}s");
+}

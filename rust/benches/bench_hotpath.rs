@@ -1,0 +1,135 @@
+//! Hot-path microbenches: LUT-GEMM kernels, layer-replay FI speedup, and
+//! PJRT executable throughput. This is the §Perf instrument — see
+//! EXPERIMENTS.md §Perf for the recorded iteration log.
+
+mod bench_common;
+
+use deepaxe::axmul;
+use deepaxe::faultsim::{run_campaign, CampaignParams, SiteSampling};
+use deepaxe::simnet::gemm::gemm_lut;
+use deepaxe::simnet::{Buffers, Engine};
+use deepaxe::util::bench::{bench, black_box};
+use deepaxe::util::rng::Rng;
+
+/// The pre-optimization kernel (single-k inner loop), kept for an
+/// in-process A/B so the §Perf speedup is measured independent of host
+/// frequency drift between runs.
+fn gemm_lut_naive(a: &[i8], w: &[i8], lut: &deepaxe::axmul::Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
+    out[..m * n].fill(0);
+    let table = &lut.table[..];
+    for mi in 0..m {
+        let a_row = &a[mi * k..(mi + 1) * k];
+        let o_row = &mut out[mi * n..(mi + 1) * n];
+        for (ki, &av) in a_row.iter().enumerate() {
+            let base = (av as u8 as usize) << 8;
+            let lut_row = &table[base..base + 256];
+            let w_row = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in o_row.iter_mut().zip(w_row) {
+                *o += lut_row[wv as u8 as usize];
+            }
+        }
+    }
+}
+
+fn main() {
+    let ctx = bench_common::setup(30, 40, 100);
+    let exact = axmul::by_name("exact").unwrap().lut();
+
+    // --- A/B: naive vs unrolled kernel, same process (variance-immune) ---
+    {
+        let mut rng = Rng::new(7);
+        for (label, m, k, n) in
+            [("dense 784x64", 1usize, 784usize, 64usize), ("conv 256x144x32", 256, 144, 32)]
+        {
+            let a: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+            let w: Vec<i8> = (0..k * n).map(|_| rng.i8()).collect();
+            let mut out = vec![0i32; m * n];
+            let naive = bench(&format!("ab:naive:{label}"), 2, 10, || {
+                gemm_lut_naive(black_box(&a), black_box(&w), black_box(&exact), m, k, n, &mut out);
+                black_box(&out);
+            });
+            let opt = bench(&format!("ab:unrolled:{label}"), 2, 10, || {
+                gemm_lut(black_box(&a), black_box(&w), black_box(&exact), m, k, n, &mut out);
+                black_box(&out);
+            });
+            println!("  -> speedup {label}: {:.2}x", naive.min_s / opt.min_s);
+        }
+    }
+
+    // --- raw GEMM kernel across the shapes the model zoo actually runs ----
+    let mut rng = Rng::new(1);
+    for (label, m, k, n) in [
+        ("dense 784x64 (mlp3 l0)", 1usize, 784usize, 64usize),
+        ("dense 256x120 (lenet fc1)", 1, 256, 120),
+        ("conv 576x150x6 (lenet c1)", 576, 25, 6),
+        ("conv 64x144x16 (lenet c2)", 64, 150, 16),
+        ("conv 1024x27x16 (alexnet c1)", 1024, 27, 16),
+        ("conv 256x144x32 (alexnet c2)", 256, 144, 32),
+    ] {
+        let a: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| rng.i8()).collect();
+        let mut out = vec![0i32; m * n];
+        let macs = (m * k * n) as f64;
+        let r = bench(&format!("gemm_lut:{label}"), 2, 10, || {
+            gemm_lut(black_box(&a), black_box(&w), black_box(&exact), m, k, n, &mut out);
+            black_box(&out);
+        });
+        println!("  -> {:.1} M lookups/s", macs / r.mean_s / 1e6);
+    }
+
+    // --- whole-net inference ----------------------------------------------
+    for name in ["mlp3", "lenet5", "alexnet"] {
+        let net = ctx.net(name).unwrap();
+        let data = ctx.data_for(&net).unwrap().take(8);
+        let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        let r = bench(&format!("forward8:{name}"), 1, 5, || {
+            for i in 0..data.len() {
+                black_box(engine.predict(data.image(i), None, &mut buf));
+            }
+        });
+        println!(
+            "  -> {name}: {:.3} ms/inf, {:.1} M lookups/s",
+            r.mean_s / 8.0 * 1e3,
+            net.total_macs() as f64 * 8.0 / r.mean_s / 1e6
+        );
+    }
+
+    // --- FI campaign: layer-replay ON vs OFF (the §Perf headline) ---------
+    let net = ctx.net("lenet5").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    for (label, replay) in [("replay", true), ("naive", false)] {
+        let params = CampaignParams {
+            n_faults: 24,
+            n_images: 24,
+            seed: 3,
+            workers: 1,
+            sampling: SiteSampling::UniformLayer,
+            replay,
+        };
+        let r = bench(&format!("fi_campaign:lenet5:{label}"), 0, 3, || {
+            black_box(run_campaign(&engine, &data, &params));
+        });
+        println!(
+            "  -> {:.1} faulty inferences/s",
+            (24.0 * 24.0) / r.mean_s
+        );
+    }
+
+    // --- PJRT executable throughput ----------------------------------------
+    let rt = deepaxe::runtime::Runtime::cpu().unwrap();
+    let net = ctx.net("mlp3").unwrap();
+    let batch = ctx.lower_batch();
+    let exe = rt.load_net(&ctx.artifacts, &net, batch).unwrap();
+    let data = ctx.data_for(&net).unwrap().take(batch);
+    let luts: Vec<&axmul::Lut> = (0..net.n_comp()).map(|_| &ctx.luts["exact"]).collect();
+    let mut x = vec![0i8; batch * net.input_len()];
+    for b in 0..batch {
+        x[b * net.input_len()..(b + 1) * net.input_len()].copy_from_slice(data.image(b));
+    }
+    let r = bench("pjrt:mlp3:batch16", 1, 5, || {
+        black_box(exe.run(black_box(&x), &luts, None).unwrap());
+    });
+    println!("  -> PJRT {:.3} ms/batch ({:.3} ms/inference)", r.mean_s * 1e3, r.mean_s / batch as f64 * 1e3);
+}

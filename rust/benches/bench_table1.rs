@@ -1,0 +1,27 @@
+//! Table I harness: exhaustive multiplier error metrics + LUT generation.
+
+mod bench_common;
+
+use deepaxe::axmul::{metrics::error_metrics, planes, CATALOG};
+use deepaxe::report::experiments::table1;
+use deepaxe::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let ctx = bench_common::setup(20, 20, 100);
+
+    // the paper artifact
+    let (out, _) = time_once("table1:render", || table1(&ctx).unwrap());
+    println!("{out}");
+
+    // micro: plane generation + exhaustive metrics per catalog entry
+    let exact = planes::plane_exact();
+    for m in CATALOG {
+        let plane = m.plane();
+        bench(&format!("table1:metrics:{}", m.name), 1, 5, || {
+            black_box(error_metrics(black_box(&plane), black_box(&exact)));
+        });
+    }
+    bench("table1:lut_from_plane", 1, 5, || {
+        black_box(deepaxe::axmul::Lut::from_plane(black_box(&exact)));
+    });
+}

@@ -1,0 +1,34 @@
+//! Table II harness: quantized-accuracy evaluation throughput per network.
+
+mod bench_common;
+
+use deepaxe::report::experiments::table2;
+use deepaxe::simnet::{Buffers, Engine};
+use deepaxe::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let ctx = bench_common::setup(20, 20, 100);
+    let (out, _) = time_once("table2:render", || table2(&ctx).unwrap());
+    println!("{out}");
+
+    // inference throughput per network (the quantity Table II's evaluation
+    // cost is made of)
+    for name in ["mlp3", "lenet5", "alexnet"] {
+        let net = ctx.net(name).unwrap();
+        let data = ctx.data_for(&net).unwrap().take(16);
+        let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        let macs = net.total_macs();
+        let r = bench(&format!("table2:forward16:{name}"), 1, 5, || {
+            for i in 0..data.len() {
+                black_box(engine.predict(data.image(i), None, &mut buf));
+            }
+        });
+        let per_inf = r.mean_s / 16.0;
+        println!(
+            "  {name}: {:.3} ms/inference, {:.1} M MAC-lookups/s",
+            per_inf * 1e3,
+            macs as f64 / per_inf / 1e6
+        );
+    }
+}

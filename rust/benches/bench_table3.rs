@@ -1,0 +1,17 @@
+//! Table III harness: the full config × FI × HLS evaluation for the
+//! paper's listed configurations.
+
+mod bench_common;
+
+use deepaxe::report::experiments::table3;
+use deepaxe::util::bench::time_once;
+
+fn main() {
+    let ctx = bench_common::setup(20, 24, 120);
+    let nets: Vec<String> = std::env::var("DEEPAXE_BENCH_NETS")
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| vec!["mlp3".into(), "lenet5".into(), "alexnet".into()]);
+    let (out, dt) = time_once("table3:full", || table3(&ctx, &nets).unwrap());
+    println!("{out}");
+    println!("table3 harness total: {dt:.2}s for {} nets", nets.len());
+}

@@ -1,0 +1,13 @@
+//! Table IV harness: full approximation of MLP-3/5/7 per AxM.
+
+mod bench_common;
+
+use deepaxe::report::experiments::table4;
+use deepaxe::util::bench::time_once;
+
+fn main() {
+    let ctx = bench_common::setup(24, 32, 150);
+    let (out, dt) = time_once("table4:full", || table4(&ctx).unwrap());
+    println!("{out}");
+    println!("table4 harness total: {dt:.2}s");
+}

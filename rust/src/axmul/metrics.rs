@@ -1,0 +1,93 @@
+//! Exhaustive multiplier error metrics (Table I): MAE, WCE, MRE, EP over
+//! all 2^16 signed input pairs, with EvoApproxLib percentage conventions
+//! (magnitudes normalized by 2^15).
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorMetrics {
+    pub mae: f64,
+    pub wce: f64,
+    pub mre_pct: f64,
+    pub ep_pct: f64,
+    pub mae_pct: f64,
+    pub wce_pct: f64,
+}
+
+/// Compare an approximate plane against the exact plane (both in
+/// `plane[(a+128)*256+(b+128)]` layout).
+pub fn error_metrics(approx: &[i32], exact: &[i32]) -> ErrorMetrics {
+    assert_eq!(approx.len(), 65536);
+    assert_eq!(exact.len(), 65536);
+    let mut abs_sum = 0f64;
+    let mut wce = 0i64;
+    let mut rel_sum = 0f64;
+    let mut nonzero_err = 0u64;
+    for i in 0..65536 {
+        let err = (approx[i] as i64) - (exact[i] as i64);
+        let abs = err.abs();
+        abs_sum += abs as f64;
+        wce = wce.max(abs);
+        if err != 0 {
+            nonzero_err += 1;
+        }
+        if exact[i] != 0 {
+            rel_sum += abs as f64 / (exact[i] as i64).abs() as f64;
+        } else {
+            // EvoApprox counts |exact|=0 cells as |err| capped at 1
+            rel_sum += (abs as f64).min(1.0);
+        }
+    }
+    let n = 65536f64;
+    ErrorMetrics {
+        mae: abs_sum / n,
+        wce: wce as f64,
+        mre_pct: rel_sum / n * 100.0,
+        ep_pct: nonzero_err as f64 / n * 100.0,
+        mae_pct: abs_sum / n / (1u64 << 15) as f64 * 100.0,
+        wce_pct: wce as f64 / (1u64 << 15) as f64 * 100.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul::planes;
+
+    #[test]
+    fn exact_is_zero_error() {
+        let e = planes::plane_exact();
+        let m = error_metrics(&e, &e);
+        assert_eq!(m.mae, 0.0);
+        assert_eq!(m.wce, 0.0);
+        assert_eq!(m.ep_pct, 0.0);
+    }
+
+    #[test]
+    fn matches_python_measurements() {
+        // Pinned values from python/compile/luts.py catalog_report()
+        // (bam(4)/bam(3)/bam(2) over the exhaustive input space).
+        let e = planes::plane_exact();
+        let m4 = error_metrics(&planes::plane_bam(4), &e);
+        assert!((m4.mae - 12.25).abs() < 1e-9, "{}", m4.mae);
+        assert_eq!(m4.wce, 49.0);
+        assert!((m4.ep_pct - 81.25).abs() < 1e-9);
+        let m3 = error_metrics(&planes::plane_bam(3), &e);
+        assert!((m3.mae - 4.25).abs() < 1e-9);
+        assert_eq!(m3.wce, 17.0);
+        assert!((m3.ep_pct - 68.75).abs() < 1e-9);
+        let m2 = error_metrics(&planes::plane_bam(2), &e);
+        assert!((m2.mae - 1.25).abs() < 1e-9);
+        assert_eq!(m2.wce, 5.0);
+        assert!((m2.ep_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        let e = planes::plane_exact();
+        let kvp = error_metrics(&planes::plane_bam(4), &e);
+        let kv9 = error_metrics(&planes::plane_bam(3), &e);
+        let kv8 = error_metrics(&planes::plane_bam(2), &e);
+        assert!(kvp.mae > kv9.mae && kv9.mae > kv8.mae);
+        assert!(kvp.wce > kv9.wce && kv9.wce > kv8.wce);
+        assert!(kvp.mre_pct > kv9.mre_pct && kv9.mre_pct > kv8.mre_pct);
+    }
+}

@@ -1,0 +1,139 @@
+//! Approximate-multiplier library (EvoApproxLib stand-in).
+//!
+//! Mirrors `python/compile/luts.py` exactly — the integration tests
+//! cross-check every generated LUT against the artifact the python side
+//! wrote, so the two languages can never drift. See DESIGN.md §2 for the
+//! surrogate calibration story.
+
+pub mod metrics;
+pub mod planes;
+
+use crate::nbin::Nbin;
+use std::path::Path;
+
+/// A multiplier LUT in two's-complement byte order:
+/// `lut[(a_u8 << 8) | b_u8] = mult(a, b)`.
+#[derive(Clone)]
+pub struct Lut {
+    pub table: Vec<i32>,
+}
+
+impl Lut {
+    pub fn from_plane(plane: &[i32]) -> Lut {
+        assert_eq!(plane.len(), 65536);
+        // plane is indexed [a+128][b+128]; reorder to byte indexing
+        let mut table = vec![0i32; 65536];
+        for a in -128i32..128 {
+            for b in -128i32..128 {
+                let byte_idx = (((a as u8 as usize) << 8) | (b as u8 as usize)) as usize;
+                table[byte_idx] = plane[((a + 128) * 256 + (b + 128)) as usize];
+            }
+        }
+        Lut { table }
+    }
+
+    #[inline(always)]
+    pub fn mul(&self, a: i8, b: i8) -> i32 {
+        self.table[((a as u8 as usize) << 8) | (b as u8 as usize)]
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Lut, crate::nbin::NbinError> {
+        let n = Nbin::read_file(path)?;
+        let table = n.get_i32("lut")?;
+        assert_eq!(table.len(), 65536, "LUT artifact must have 65536 entries");
+        Ok(Lut { table })
+    }
+}
+
+/// Catalog entry: surrogate identity + the paper's Table I hardware
+/// parameters (inputs to the HLS cost model).
+#[derive(Debug, Clone)]
+pub struct Multiplier {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub family: &'static str,
+    pub param: u32,
+    pub power_mw: f64,
+    pub area_um2: f64,
+}
+
+impl Multiplier {
+    pub fn plane(&self) -> Vec<i32> {
+        match (self.family, self.param) {
+            ("exact", _) => planes::plane_exact(),
+            ("bam", k) => planes::plane_bam(k),
+            ("trunc", k) => planes::plane_trunc(k),
+            ("rndpp", k) => planes::plane_rndpp(k),
+            ("mitchell", _) => planes::plane_mitchell(),
+            other => panic!("unknown multiplier family {other:?}"),
+        }
+    }
+
+    pub fn lut(&self) -> Lut {
+        Lut::from_plane(&self.plane())
+    }
+}
+
+/// Must stay in sync with `python/compile/luts.py::CATALOG`.
+pub const CATALOG: &[Multiplier] = &[
+    Multiplier { name: "exact", paper_name: "exact", family: "exact", param: 0, power_mw: 0.425, area_um2: 729.8 },
+    Multiplier { name: "mul8s_1kvp_s", paper_name: "mul8s_1KVP", family: "bam", param: 4, power_mw: 0.363, area_um2: 635.0 },
+    Multiplier { name: "mul8s_1kv9_s", paper_name: "mul8s_1KV9", family: "bam", param: 3, power_mw: 0.410, area_um2: 685.2 },
+    Multiplier { name: "mul8s_1kv8_s", paper_name: "mul8s_1KV8", family: "bam", param: 2, power_mw: 0.422, area_um2: 711.0 },
+    Multiplier { name: "trunc2", paper_name: "", family: "trunc", param: 2, power_mw: 0.400, area_um2: 690.0 },
+    Multiplier { name: "rndpp4", paper_name: "", family: "rndpp", param: 4, power_mw: 0.395, area_um2: 680.0 },
+    Multiplier { name: "mitchell", paper_name: "", family: "mitchell", param: 0, power_mw: 0.310, area_um2: 560.0 },
+];
+
+/// The three AxMs of the paper's Table I (plus exact as baseline).
+pub const PAPER_AXMS: &[&str] = &["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"];
+
+pub fn by_name(name: &str) -> Option<&'static Multiplier> {
+    CATALOG.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lut_products() {
+        let lut = by_name("exact").unwrap().lut();
+        assert_eq!(lut.mul(5, 7), 35);
+        assert_eq!(lut.mul(-5, 7), -35);
+        assert_eq!(lut.mul(-128, -128), 16384);
+        assert_eq!(lut.mul(127, -128), -16256);
+        assert_eq!(lut.mul(0, 99), 0);
+    }
+
+    #[test]
+    fn catalog_names_unique() {
+        let mut names: Vec<_> = CATALOG.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), CATALOG.len());
+    }
+
+    #[test]
+    fn paper_axms_present() {
+        for n in PAPER_AXMS {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+
+    #[test]
+    fn bam_lut_underestimates() {
+        let exact = by_name("exact").unwrap().lut();
+        let kvp = by_name("mul8s_1kvp_s").unwrap().lut();
+        for a in [-128i8, -77, -1, 0, 1, 63, 127] {
+            for b in [-128i8, -9, 0, 2, 127] {
+                assert!(kvp.mul(a, b).abs() <= exact.mul(a, b).abs(), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_unknown() {
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,190 @@
+//! Product-plane generators: 256x256 signed product planes indexed
+//! `plane[(a+128)*256 + (b+128)]`, ported 1:1 from
+//! `python/compile/luts.py` (integration tests pin byte equality against
+//! the python-written artifacts).
+
+/// Exact signed 8-bit product.
+pub fn plane_exact() -> Vec<i32> {
+    let mut p = vec![0i32; 65536];
+    for a in -128i32..128 {
+        for b in -128i32..128 {
+            p[((a + 128) * 256 + (b + 128)) as usize] = a * b;
+        }
+    }
+    p
+}
+
+/// Broken-array multiplier: drop partial-product bits a_i*b_j with
+/// i + j < k (on magnitudes; sign reapplied).
+pub fn plane_bam(k: u32) -> Vec<i32> {
+    let mut p = vec![0i32; 65536];
+    for a in -128i32..128 {
+        for b in -128i32..128 {
+            let am = a.abs();
+            let bm = b.abs();
+            let sign = a.signum() * b.signum();
+            let exact = am * bm;
+            let mut dropped = 0i32;
+            for i in 0..8 {
+                let ai = (am >> i) & 1;
+                if ai == 0 {
+                    continue;
+                }
+                for j in 0..8 {
+                    if (i + j) < k as i32 {
+                        let bj = (bm >> j) & 1;
+                        dropped += ai * bj * (1 << (i + j));
+                    }
+                }
+            }
+            p[((a + 128) * 256 + (b + 128)) as usize] = sign * (exact - dropped);
+        }
+    }
+    p
+}
+
+/// Operand-LSB truncation on magnitudes.
+pub fn plane_trunc(k: u32) -> Vec<i32> {
+    let mask = !((1i32 << k) - 1);
+    let mut p = vec![0i32; 65536];
+    for a in -128i32..128 {
+        for b in -128i32..128 {
+            let sign = a.signum() * b.signum();
+            p[((a + 128) * 256 + (b + 128)) as usize] = sign * ((a.abs() & mask) * (b.abs() & mask));
+        }
+    }
+    p
+}
+
+/// Product rounded to the nearest multiple of 2^k.
+/// NOTE: matches numpy semantics `((p + half) >> k) << k` with arithmetic
+/// shift on negatives.
+pub fn plane_rndpp(k: u32) -> Vec<i32> {
+    let half = 1i32 << (k - 1);
+    let mut p = vec![0i32; 65536];
+    for a in -128i32..128 {
+        for b in -128i32..128 {
+            let prod = a * b;
+            p[((a + 128) * 256 + (b + 128)) as usize] = ((prod + half) >> k) << k;
+        }
+    }
+    p
+}
+
+/// Mitchell logarithmic multiplier (linear mantissa approximation), ported
+/// from the numpy implementation (f64 math, round-half-even via
+/// `f64::round_ties_even`... numpy `np.round` is round-half-even).
+pub fn plane_mitchell() -> Vec<i32> {
+    fn mlog(x: f64) -> f64 {
+        // characteristic + linear mantissa, x >= 1
+        let k = x.log2().floor();
+        k + (x / k.exp2() - 1.0)
+    }
+    let mut p = vec![0i32; 65536];
+    for a in -128i32..128 {
+        for b in -128i32..128 {
+            let am = a.abs() as f64;
+            let bm = b.abs() as f64;
+            let sign = (a.signum() * b.signum()) as f64;
+            let v = if a == 0 || b == 0 {
+                0.0
+            } else {
+                let s = mlog(am.max(1.0)) + mlog(bm.max(1.0));
+                let kk = s.floor();
+                kk.exp2() * (1.0 + (s - kk))
+            };
+            // numpy np.round = round half to even
+            let rounded = round_ties_even(sign * v);
+            p[((a + 128) * 256 + (b + 128)) as usize] = rounded as i32;
+        }
+    }
+    p
+}
+
+fn round_ties_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // halfway: round to even
+        let floor = x.floor();
+        if (floor as i64) % 2 == 0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(p: &[i32], a: i32, b: i32) -> i32 {
+        p[((a + 128) * 256 + (b + 128)) as usize]
+    }
+
+    #[test]
+    fn exact_spot_checks() {
+        let p = plane_exact();
+        assert_eq!(at(&p, 0, 0), 0);
+        assert_eq!(at(&p, -128, -128), 16384);
+        assert_eq!(at(&p, 127, 127), 16129);
+        assert_eq!(at(&p, -3, 9), -27);
+    }
+
+    #[test]
+    fn bam_known_cells() {
+        // bam(1) drops only a0*b0: error 1 iff both operands odd.
+        let p = plane_bam(1);
+        assert_eq!(at(&p, 3, 5), 15 - 1);
+        assert_eq!(at(&p, 2, 5), 10);
+        assert_eq!(at(&p, -3, 5), -(15 - 1));
+        assert_eq!(at(&p, 3, -5), -(15 - 1));
+        assert_eq!(at(&p, -3, -5), 15 - 1);
+    }
+
+    #[test]
+    fn bam_zero_row_col() {
+        let p = plane_bam(4);
+        for x in -128i32..128 {
+            assert_eq!(at(&p, 0, x), 0);
+            assert_eq!(at(&p, x, 0), 0);
+        }
+    }
+
+    #[test]
+    fn trunc_known() {
+        let p = plane_trunc(2);
+        // |a|&~3 * |b|&~3
+        assert_eq!(at(&p, 7, 9), 4 * 8);
+        assert_eq!(at(&p, -7, 9), -(4 * 8));
+    }
+
+    #[test]
+    fn rndpp_error_bound() {
+        let p = plane_rndpp(3);
+        let e = plane_exact();
+        for i in 0..65536 {
+            assert!((p[i] - e[i]).abs() <= 4, "i={i} p={} e={}", p[i], e[i]);
+        }
+    }
+
+    #[test]
+    fn mitchell_exact_on_powers_of_two() {
+        let p = plane_mitchell();
+        for (a, b) in [(2, 4), (8, 8), (16, 4), (64, 2), (1, 1)] {
+            assert_eq!(at(&p, a, b), a * b, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn mitchell_underestimates_between_powers() {
+        // Mitchell's approximation error is always an underestimate
+        let p = plane_mitchell();
+        let e = plane_exact();
+        for i in 0..65536 {
+            assert!(p[i].abs() <= e[i].abs() , "i={i}");
+        }
+    }
+}

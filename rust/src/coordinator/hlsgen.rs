@@ -1,0 +1,229 @@
+//! HLS implementation step (the final box of the paper's Fig. 1/2):
+//! emit a self-contained, synthesizable-style C file for a selected
+//! approximation configuration — the DeepHLS-output analog.
+//!
+//! The generated C mirrors `simnet` exactly: static int8 weight / int32
+//! bias arrays, one 64K-entry multiplier LUT per distinct multiplier in
+//! the configuration, fixed-point requantization, nested-loop conv/dense
+//! bodies (what an HLS tool would schedule), and an
+//! `int deepaxe_infer(const int8_t *image)` entry point. The integration
+//! test compiles it with the host C compiler and pins its predictions to
+//! the rust engine image-for-image.
+
+use crate::axmul::Lut;
+use crate::simnet::{CompKind, Layer, QNet};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+fn emit_i8_array(out: &mut String, name: &str, data: &[i8]) {
+    let _ = write!(out, "static const int8_t {name}[{}] = {{", data.len());
+    for (i, v) in data.iter().enumerate() {
+        if i % 24 == 0 {
+            out.push_str("\n  ");
+        }
+        let _ = write!(out, "{v},");
+    }
+    out.push_str("\n};\n");
+}
+
+fn emit_i32_array(out: &mut String, name: &str, data: &[i32]) {
+    let _ = write!(out, "static const int32_t {name}[{}] = {{", data.len());
+    for (i, v) in data.iter().enumerate() {
+        if i % 16 == 0 {
+            out.push_str("\n  ");
+        }
+        let _ = write!(out, "{v},");
+    }
+    out.push_str("\n};\n");
+}
+
+/// Generate the C source for `net` with per-computing-layer multiplier
+/// names `config` (must exist in `luts`).
+pub fn generate_c(net: &QNet, config: &[&str], luts: &BTreeMap<String, Lut>) -> String {
+    assert_eq!(config.len(), net.n_comp());
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "/* DeepAxe generated accelerator model: {} (config {})\n\
+         * Emitted by the rust coordinator's HLS-implementation step; the\n\
+         * multiplier is a LUT so exact/approximate units are interchangeable\n\
+         * (EvoApproxLib-style behavioral C). */\n\
+         #include <stdint.h>\n\n",
+        net.name,
+        net.config_string(
+            config.iter().enumerate().fold(0u64, |m, (i, c)| if *c == "exact" { m } else { m | 1 << i })
+        )
+    );
+
+    // LUTs: one per distinct multiplier
+    let mut distinct: Vec<&str> = config.to_vec();
+    distinct.sort_unstable();
+    distinct.dedup();
+    for m in &distinct {
+        let lut = luts.get(*m).unwrap_or_else(|| panic!("lut {m} not loaded"));
+        emit_i32_array(&mut out, &format!("lut_{m}"), &lut.table);
+    }
+    out.push('\n');
+
+    // weights + biases
+    for ci in 0..net.n_comp() {
+        let c = net.comp(ci);
+        emit_i8_array(&mut out, &format!("w{ci}"), &c.w);
+        emit_i32_array(&mut out, &format!("b{ci}"), &c.b);
+    }
+
+    out.push_str(
+        "\nstatic inline int8_t requant(int32_t acc, int64_t m0, int nshift, int relu) {\n\
+         \x20 int64_t y = ((int64_t)acc * m0 + ((int64_t)1 << (nshift - 1))) >> nshift;\n\
+         \x20 if (y < -128) y = -128;\n\
+         \x20 if (y > 127) y = 127;\n\
+         \x20 if (relu && y < 0) y = 0;\n\
+         \x20 return (int8_t)y;\n}\n\n\
+         #define MUL(lut, a, b) (lut[(((uint8_t)(a)) << 8) | ((uint8_t)(b))])\n\n",
+    );
+
+    // the inference function: ping-pong activation buffers
+    let max_act = (0..net.n_comp())
+        .map(|ci| net.comp(ci).act_len())
+        .chain([net.input_len()])
+        .max()
+        .unwrap();
+    let _ = write!(
+        out,
+        "int deepaxe_infer(const int8_t *image) {{\n\
+         \x20 static int8_t bufA[{max_act}], bufB[{max_act}];\n\
+         \x20 const int8_t *in = image;\n\
+         \x20 int8_t *outb = bufA;\n"
+    );
+
+    let mut shape: Vec<usize> = net.input_shape.clone();
+    let mut ci = 0usize;
+    let mut stage = 0usize;
+    for l in &net.layers {
+        match l {
+            Layer::Flatten => {
+                shape = vec![shape.iter().product()];
+            }
+            Layer::Pool { size } => {
+                let (c, h, w) = (shape[0], shape[1], shape[2]);
+                let (oh, ow) = (h / size, w / size);
+                let _ = write!(
+                    out,
+                    "  {{ /* maxpool {size}x{size}: [{c},{h},{w}] -> [{c},{oh},{ow}] */\n\
+                     \x20   for (int ch = 0; ch < {c}; ch++)\n\
+                     \x20     for (int oy = 0; oy < {oh}; oy++)\n\
+                     \x20       for (int ox = 0; ox < {ow}; ox++) {{\n\
+                     \x20         int8_t m = -128;\n\
+                     \x20         for (int ky = 0; ky < {size}; ky++)\n\
+                     \x20           for (int kx = 0; kx < {size}; kx++) {{\n\
+                     \x20             int8_t v = in[ch*{h}*{w} + (oy*{size}+ky)*{w} + ox*{size}+kx];\n\
+                     \x20             if (v > m) m = v;\n\
+                     \x20           }}\n\
+                     \x20         outb[ch*{oh}*{ow} + oy*{ow} + ox] = m;\n\
+                     \x20       }}\n\
+                     \x20 }}\n"
+                );
+                shape = vec![c, oh, ow];
+                let _ = writeln!(out, "  in = outb; outb = (outb == bufA) ? bufB : bufA;");
+                stage += 1;
+            }
+            Layer::Comp(c) => {
+                let lut = format!("lut_{}", config[ci]);
+                let relu = c.relu as i32;
+                match &c.kind {
+                    CompKind::Dense => {
+                        let (k, n) = (c.k_dim, c.n_dim);
+                        let _ = write!(
+                            out,
+                            "  {{ /* dense {k} -> {n}, mult {} */\n\
+                             \x20   for (int j = 0; j < {n}; j++) {{\n\
+                             \x20     int32_t acc = b{ci}[j];\n\
+                             \x20     for (int k = 0; k < {k}; k++)\n\
+                             \x20       acc += MUL({lut}, in[k], w{ci}[k*{n} + j]);\n\
+                             \x20     outb[j] = requant(acc, {m0}LL, {ns}, {relu});\n\
+                             \x20   }}\n\
+                             \x20 }}\n",
+                            config[ci],
+                            m0 = c.m0,
+                            ns = c.nshift,
+                        );
+                        shape = vec![n];
+                    }
+                    CompKind::Conv { in_ch, ksize, stride, pad, in_h, in_w, out_h, out_w, out_ch } => {
+                        let n = c.n_dim;
+                        let _ = write!(
+                            out,
+                            "  {{ /* conv {in_ch}x{in_h}x{in_w} -> {out_ch}x{out_h}x{out_w}, k={ksize} s={stride} p={pad}, mult {} */\n\
+                             \x20   for (int co = 0; co < {out_ch}; co++)\n\
+                             \x20     for (int oy = 0; oy < {out_h}; oy++)\n\
+                             \x20       for (int ox = 0; ox < {out_w}; ox++) {{\n\
+                             \x20         int32_t acc = b{ci}[co];\n\
+                             \x20         for (int cin = 0; cin < {in_ch}; cin++)\n\
+                             \x20           for (int ky = 0; ky < {ksize}; ky++)\n\
+                             \x20             for (int kx = 0; kx < {ksize}; kx++) {{\n\
+                             \x20               int iy = oy*{stride} + ky - {pad};\n\
+                             \x20               int ix = ox*{stride} + kx - {pad};\n\
+                             \x20               if (iy < 0 || iy >= {in_h} || ix < 0 || ix >= {in_w}) continue;\n\
+                             \x20               int8_t a = in[cin*{in_h}*{in_w} + iy*{in_w} + ix];\n\
+                             \x20               int8_t wv = w{ci}[((cin*{ksize}+ky)*{ksize}+kx)*{n} + co];\n\
+                             \x20               acc += MUL({lut}, a, wv);\n\
+                             \x20             }}\n\
+                             \x20         outb[co*{out_h}*{out_w} + oy*{out_w} + ox] = requant(acc, {m0}LL, {ns}, {relu});\n\
+                             \x20       }}\n\
+                             \x20 }}\n",
+                            config[ci],
+                            m0 = c.m0,
+                            ns = c.nshift,
+                        );
+                        shape = c.act_shape.clone();
+                    }
+                }
+                let _ = writeln!(out, "  in = outb; outb = (outb == bufA) ? bufB : bufA;");
+                ci += 1;
+                stage += 1;
+            }
+        }
+    }
+    let _ = stage;
+    let n_logits = net.comp(net.n_comp() - 1).n_dim;
+    let _ = write!(
+        out,
+        "  /* argmax over the {n_logits} int8 logits (first max wins) */\n\
+         \x20 {{\n\
+         \x20   int best = 0; int8_t bv = in[0];\n\
+         \x20   for (int i = 1; i < {n_logits}; i++) if (in[i] > bv) {{ bv = in[i]; best = i; }}\n\
+         \x20   return best;\n\
+         \x20 }}\n}}\n"
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::simnet::testutil::tiny_mlp;
+
+    #[test]
+    fn generates_compilable_shape() {
+        let net = tiny_mlp();
+        let mut luts = BTreeMap::new();
+        luts.insert("exact".to_string(), axmul::by_name("exact").unwrap().lut());
+        luts.insert("mul8s_1kvp_s".to_string(), axmul::by_name("mul8s_1kvp_s").unwrap().lut());
+        let c = generate_c(&net, &["mul8s_1kvp_s", "exact"], &luts);
+        assert!(c.contains("int deepaxe_infer"));
+        assert!(c.contains("lut_mul8s_1kvp_s"));
+        assert!(c.contains("lut_exact"));
+        assert!(c.contains("dense 4 -> 3"));
+        assert!(c.contains("requant(acc, 1073741824LL, 32, 1)"));
+    }
+
+    #[test]
+    fn distinct_luts_deduplicated() {
+        let net = tiny_mlp();
+        let mut luts = BTreeMap::new();
+        luts.insert("exact".to_string(), axmul::by_name("exact").unwrap().lut());
+        let c = generate_c(&net, &["exact", "exact"], &luts);
+        assert_eq!(c.matches("static const int32_t lut_exact").count(), 1);
+    }
+}

@@ -1,0 +1,81 @@
+//! coordinator — the DeepAxe tool-chain (Fig. 1/Fig. 2 of the paper).
+//!
+//! Owns artifact loading, the evaluation job scheduler with result
+//! caching, and the automated design pipeline (preprocess → approximate →
+//! fault-simulate → HLS-estimate → select). The CLI (`rust/src/main.rs`)
+//! is a thin shell over this module.
+
+pub mod hlsgen;
+pub mod jobs;
+pub mod pipeline;
+
+use crate::axmul::{self, Lut};
+use crate::dataset::TestSet;
+use crate::simnet::{load_qnet, QNet};
+use crate::util::json::Json;
+use anyhow::{Context as _, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Shared context: artifact paths + lazily-shareable LUT set + manifest.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub luts: BTreeMap<String, Lut>,
+    pub manifest: Json,
+}
+
+impl Ctx {
+    /// Load from the artifacts directory (env `DEEPAXE_ARTIFACTS` or the
+    /// nearest `artifacts/`). Results (CSVs, cache) go to `results/` next
+    /// to the artifacts.
+    pub fn load() -> Result<Ctx> {
+        let artifacts = crate::artifacts_dir();
+        let manifest_path = artifacts.join("manifest.json");
+        let manifest = Json::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {} — run `make artifacts` first", manifest_path.display()))?,
+        )?;
+        // Load every catalog LUT from the python-written artifacts; fall
+        // back to the rust generator (bit-identical, asserted by tests)
+        // when an artifact is missing.
+        let mut luts = BTreeMap::new();
+        for m in axmul::CATALOG {
+            let path = artifacts.join("luts").join(format!("{}.nbin", m.name));
+            let lut = if path.exists() { Lut::load(&path)? } else { m.lut() };
+            luts.insert(m.name.to_string(), lut);
+        }
+        let results = artifacts.parent().map(|p| p.join("results")).unwrap_or_else(|| "results".into());
+        std::fs::create_dir_all(&results).ok();
+        Ok(Ctx { artifacts, results, luts, manifest })
+    }
+
+    pub fn net(&self, name: &str) -> Result<QNet> {
+        load_qnet(&self.artifacts, name)
+    }
+
+    pub fn data_for(&self, net: &QNet) -> Result<TestSet> {
+        Ok(TestSet::load(&self.artifacts, &net.dataset)?)
+    }
+
+    /// Build-time (full-test-set, python-evaluated) quantized accuracy.
+    pub fn build_quant_acc(&self, net: &str) -> Option<f64> {
+        self.manifest.get("nets")?.get(net)?.get("quant_acc")?.as_f64()
+    }
+
+    pub fn paper_quant_acc(&self, net: &str) -> Option<f64> {
+        self.manifest.get("nets")?.get(net)?.get("paper_quant_acc")?.as_f64()
+    }
+
+    pub fn lower_batch(&self) -> usize {
+        self.manifest.get("lower_batch").and_then(|v| v.as_usize()).unwrap_or(16)
+    }
+
+    pub fn net_names(&self) -> Vec<String> {
+        self.manifest
+            .get("nets")
+            .and_then(|n| n.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}

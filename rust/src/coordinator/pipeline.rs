@@ -1,0 +1,113 @@
+//! The automated design pipeline — the paper's Fig. 2 flowchart as code.
+//!
+//! Given a network and user requirements (maximum tolerated approximation
+//! accuracy drop, maximum fault vulnerability), the pipeline:
+//!
+//!   1. *Preprocess*: loads the quantized network, reports the statistical
+//!      FI sample size (Leveugle pre-analysis).
+//!   2. *Approximate design*: sweeps AxM × layer-mask configurations
+//!      (accuracy check first — configurations failing the accuracy
+//!      requirement never reach fault simulation, exactly the flowchart's
+//!      inner loop).
+//!   3. *Fault simulation*: FI campaigns on the accuracy-feasible set.
+//!   4. *HLS estimation + selection*: among points meeting both
+//!      requirements, picks the utilization-minimal one (Pareto winner).
+//!
+//! Returns the full trace so callers (CLI / tests / examples) can render
+//! the paper-style report.
+
+use super::jobs::{run_sweep, SweepSpec};
+use super::Ctx;
+use crate::dse::cache::ResultCache;
+use crate::dse::{enumerate_masks, pareto_front, DesignPoint, Evaluator};
+use crate::faultsim::{self, CampaignParams};
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub net: String,
+    /// multipliers to consider (default: the paper's three AxMs)
+    pub mults: Vec<String>,
+    /// max tolerated approximation accuracy drop, percent points
+    pub max_acc_drop_pct: f64,
+    /// max tolerated fault vulnerability, percent points
+    pub max_vuln_pct: f64,
+    pub eval_images: usize,
+    pub fi: CampaignParams,
+}
+
+#[derive(Debug)]
+pub struct PipelineOutcome {
+    /// Leveugle statistical sample size for this net (pre-analysis)
+    pub required_faults: u64,
+    /// every evaluated accuracy point (stage 2)
+    pub accuracy_sweep: Vec<DesignPoint>,
+    /// points that passed the accuracy requirement and were fault-simulated
+    pub fi_points: Vec<DesignPoint>,
+    /// feasible points (accuracy + vulnerability requirements met)
+    pub feasible: Vec<DesignPoint>,
+    /// the selected design (utilization-minimal feasible point), if any
+    pub selected: Option<DesignPoint>,
+    /// Pareto frontier over (util, vulnerability) of the FI'd set
+    pub frontier: Vec<DesignPoint>,
+}
+
+pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
+    // -- stage 1: preprocess ------------------------------------------------
+    let net = ctx.net(&spec.net)?;
+    let data = ctx.data_for(&net)?;
+    let required_faults = faultsim::required_sample_size(&net);
+    eprintln!(
+        "[pipeline:{}] {} computing layers, {} neurons, {} MACs; Leveugle 95%/1% sample size = {} (campaign uses {})",
+        net.name,
+        net.n_comp(),
+        net.total_neurons(),
+        net.total_macs(),
+        required_faults,
+        spec.fi.n_faults,
+    );
+    let ev = Evaluator::new(&net, &data, &ctx.luts, spec.eval_images, spec.fi.clone());
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+
+    // -- stage 2: approximate design (accuracy pre-filter) ------------------
+    let mults: Vec<&str> = spec.mults.iter().map(|s| s.as_str()).collect();
+    if mults.is_empty() {
+        bail!("no multipliers specified");
+    }
+    let masks = enumerate_masks(net.n_comp());
+    let acc_spec = SweepSpec { mults: mults.clone(), masks, with_fi: false };
+    let accuracy_sweep = run_sweep(&ev, &mut cache, &acc_spec)?;
+    let feasible_acc: Vec<&DesignPoint> = accuracy_sweep
+        .iter()
+        .filter(|p| p.acc_drop_pct <= spec.max_acc_drop_pct)
+        .collect();
+    eprintln!(
+        "[pipeline:{}] accuracy check: {}/{} configurations within {:.2}pp drop",
+        net.name,
+        feasible_acc.len(),
+        accuracy_sweep.len(),
+        spec.max_acc_drop_pct
+    );
+
+    // -- stage 3: fault simulation on the feasible set ----------------------
+    let mut fi_points = Vec::new();
+    for p in &feasible_acc {
+        let fi_spec = SweepSpec { mults: vec![p.mult.as_str()], masks: vec![p.mask], with_fi: true };
+        fi_points.extend(run_sweep(&ev, &mut cache, &fi_spec)?);
+    }
+
+    // -- stage 4: selection --------------------------------------------------
+    let feasible: Vec<DesignPoint> = fi_points
+        .iter()
+        .filter(|p| p.fault_vuln_pct <= spec.max_vuln_pct)
+        .cloned()
+        .collect();
+    let selected = feasible
+        .iter()
+        .min_by(|a, b| a.util_pct.partial_cmp(&b.util_pct).unwrap())
+        .cloned();
+    let frontier_idx = pareto_front(&fi_points, |p| p.util_pct, |p| p.fault_vuln_pct);
+    let frontier = frontier_idx.iter().map(|&i| fi_points[i].clone()).collect();
+
+    Ok(PipelineOutcome { required_faults, accuracy_sweep, fi_points, feasible, selected, frontier })
+}

@@ -1,0 +1,115 @@
+//! Quantized test-set loading (from `artifacts/<dataset>.test.nbin`).
+
+use crate::nbin::{Nbin, NbinError};
+use crate::tensor::TensorI8;
+use std::path::Path;
+
+/// A quantized evaluation split: int8 images + labels.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub name: String,
+    /// [N, C, H, W]
+    pub x: TensorI8,
+    pub labels: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn load(artifacts: &Path, dataset: &str) -> Result<TestSet, NbinError> {
+        let n = Nbin::read_file(artifacts.join(format!("{dataset}.test.nbin")))?;
+        let xe = n.get("x_q")?;
+        if xe.dims.len() != 4 {
+            return Err(NbinError::Format(format!("x_q must be 4-d, got {:?}", xe.dims)));
+        }
+        let x = TensorI8::from_vec(&xe.dims.clone(), xe.as_i8());
+        let labels = n.get_i32("labels")?;
+        if labels.len() != x.dims[0] {
+            return Err(NbinError::Format(format!(
+                "labels {} != images {}",
+                labels.len(),
+                x.dims[0]
+            )));
+        }
+        Ok(TestSet { name: dataset.to_string(), x, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Per-image size (C*H*W).
+    pub fn image_len(&self) -> usize {
+        self.x.dims[1..].iter().product()
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[i8] {
+        let sz = self.image_len();
+        &self.x.data[i * sz..(i + 1) * sz]
+    }
+
+    /// First `n` images as a new TestSet (campaign subsets).
+    pub fn take(&self, n: usize) -> TestSet {
+        let n = n.min(self.len());
+        let sz = self.image_len();
+        let mut dims = self.x.dims.clone();
+        dims[0] = n;
+        TestSet {
+            name: self.name.clone(),
+            x: TensorI8::from_vec(&dims, self.x.data[..n * sz].to_vec()),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbin::Entry;
+
+    fn fake_testset(n: usize) -> TestSet {
+        let dims = [n, 1, 4, 4];
+        let data: Vec<i8> = (0..n * 16).map(|i| (i % 256) as u8 as i8).collect();
+        TestSet {
+            name: "fake".into(),
+            x: TensorI8::from_vec(&dims, data),
+            labels: (0..n as i32).map(|i| i % 10).collect(),
+        }
+    }
+
+    #[test]
+    fn image_slicing() {
+        let ts = fake_testset(5);
+        assert_eq!(ts.image_len(), 16);
+        assert_eq!(ts.image(1)[0], 16u8 as i8);
+        assert_eq!(ts.image(4).len(), 16);
+    }
+
+    #[test]
+    fn take_subset() {
+        let ts = fake_testset(10);
+        let s = ts.take(3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.x.dims, vec![3, 1, 4, 4]);
+        assert_eq!(s.image(2), ts.image(2));
+        // take more than available is clamped
+        assert_eq!(ts.take(99).len(), 10);
+    }
+
+    #[test]
+    fn roundtrip_via_nbin() {
+        let ts = fake_testset(4);
+        let mut n = Nbin::default();
+        n.insert("x_q", Entry::from_i8(ts.x.dims.clone(), &ts.x.data));
+        n.insert("labels", Entry::from_i32(vec![4], &ts.labels));
+        let dir = std::env::temp_dir().join("deepaxe_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        n.write_file(dir.join("fake.test.nbin")).unwrap();
+        let back = TestSet::load(&dir, "fake").unwrap();
+        assert_eq!(back.x, ts.x);
+        assert_eq!(back.labels, ts.labels);
+    }
+}

@@ -1,0 +1,191 @@
+//! Result cache: append-only JSONL of evaluated design points, keyed by
+//! (net, mult, mask, evaluation parameters). Lets the coordinator resume
+//! interrupted sweeps and share FI results between experiments (Table III
+//! rows reuse Fig. 3 sweep points, like the paper's iterative flow).
+
+use super::DesignPoint;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Evaluation-parameter fingerprint: results are only reusable when the
+/// campaign parameters match.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    pub net: String,
+    pub mult: String,
+    pub mask: u64,
+    pub n_faults: usize,
+    pub n_images: usize,
+    pub eval_images: usize,
+    pub seed: u64,
+    pub with_fi: bool,
+}
+
+impl CacheKey {
+    fn to_string_key(&self) -> String {
+        format!(
+            "{}|{}|{:x}|{}|{}|{}|{}|{}",
+            self.net,
+            self.mult,
+            self.mask,
+            self.n_faults,
+            self.n_images,
+            self.eval_images,
+            self.seed,
+            self.with_fi as u8
+        )
+    }
+}
+
+pub struct ResultCache {
+    path: PathBuf,
+    map: BTreeMap<String, DesignPoint>,
+}
+
+impl ResultCache {
+    /// Load (or start) the cache at `path`. Unparseable lines are skipped
+    /// with a warning rather than failing the run.
+    pub fn open(path: impl AsRef<Path>) -> ResultCache {
+        let path = path.as_ref().to_path_buf();
+        let mut map = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for (ln, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(line) {
+                    Ok(j) => {
+                        let key = j.get("key").and_then(|k| k.as_str()).map(str::to_string);
+                        let point = j.get("point").and_then(DesignPoint::from_json);
+                        match (key, point) {
+                            (Some(k), Some(p)) => {
+                                map.insert(k, p);
+                            }
+                            _ => eprintln!("cache {}: line {} malformed, skipped", path.display(), ln + 1),
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("cache {}: line {} unparseable ({e}), skipped", path.display(), ln + 1)
+                    }
+                }
+            }
+        }
+        ResultCache { path, map }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, key: &CacheKey) -> Option<&DesignPoint> {
+        self.map.get(&key.to_string_key())
+    }
+
+    /// Insert + append to the backing file.
+    pub fn put(&mut self, key: &CacheKey, point: DesignPoint) -> std::io::Result<()> {
+        let record = json::obj(vec![
+            ("key", json::str(key.to_string_key())),
+            ("point", point.to_json()),
+        ]);
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        writeln!(f, "{record}")?;
+        self.map.insert(key.to_string_key(), point);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(net: &str, mask: u64) -> DesignPoint {
+        DesignPoint {
+            net: net.into(),
+            mult: "exact".into(),
+            mask,
+            config_string: "000".into(),
+            base_acc: 0.9,
+            ax_acc: 0.9,
+            acc_drop_pct: 0.0,
+            fi_mean_acc: 0.8,
+            fault_vuln_pct: 10.0,
+            cycles: 100,
+            luts: 10,
+            ffs: 20,
+            util_pct: 0.5,
+            power_mw: 2.0,
+        }
+    }
+
+    fn key(net: &str, mask: u64) -> CacheKey {
+        CacheKey {
+            net: net.into(),
+            mult: "exact".into(),
+            mask,
+            n_faults: 10,
+            n_images: 20,
+            eval_images: 30,
+            seed: 1,
+            with_fi: true,
+        }
+    }
+
+    #[test]
+    fn put_get_persist() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut c = ResultCache::open(&p);
+            assert!(c.is_empty());
+            c.put(&key("mlp3", 1), point("mlp3", 1)).unwrap();
+            c.put(&key("mlp3", 2), point("mlp3", 2)).unwrap();
+            assert_eq!(c.len(), 2);
+        }
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key("mlp3", 1)).unwrap().mask, 1);
+        assert!(c.get(&key("mlp3", 3)).is_none());
+        // different params -> different key -> miss
+        let mut other = key("mlp3", 1);
+        other.n_faults = 99;
+        assert!(c.get(&other).is_none());
+    }
+
+    #[test]
+    fn malformed_lines_skipped() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        std::fs::write(&p, "not json\n{\"key\": \"k\"}\n").unwrap();
+        let c = ResultCache::open(&p);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn latest_write_wins() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let mut c = ResultCache::open(&p);
+        c.put(&key("m", 1), point("m", 1)).unwrap();
+        let mut p2 = point("m", 1);
+        p2.ax_acc = 0.42;
+        c.put(&key("m", 1), p2).unwrap();
+        drop(c);
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key("m", 1)).unwrap().ax_acc, 0.42);
+    }
+}

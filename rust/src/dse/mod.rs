@@ -1,0 +1,287 @@
+//! dse — design-space exploration over (layer-mask × multiplier) configs.
+//!
+//! A configuration selects one approximate multiplier and the subset of
+//! computing layers it replaces (mask bit ci = layer ci approximated,
+//! exact elsewhere) — exactly the paper's `2^n` per-AxM space. Evaluation
+//! produces a [`DesignPoint`] carrying the trilateral metrics: accuracy
+//! drop (approximation), fault vulnerability (FI campaign) and hardware
+//! cost (HLS model).
+
+pub mod cache;
+pub mod pareto;
+
+pub use pareto::pareto_front;
+
+use crate::axmul::{self, Lut};
+use crate::dataset::TestSet;
+use crate::faultsim::{run_campaign, CampaignParams};
+use crate::hwmodel;
+use crate::simnet::{Buffers, Engine, QNet};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One evaluated design point (a row of the paper's Table III).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub net: String,
+    pub mult: String,
+    pub mask: u64,
+    /// paper-style layer string, e.g. "0-1-101"
+    pub config_string: String,
+    /// exact-quantized accuracy on the evaluation subset (the "Base")
+    pub base_acc: f64,
+    /// AxDNN accuracy (no faults)
+    pub ax_acc: f64,
+    /// accuracy drop due to approximation, percent points
+    pub acc_drop_pct: f64,
+    /// mean accuracy under fault injection (NaN if FI skipped)
+    pub fi_mean_acc: f64,
+    /// AxDNN accuracy drop due to FI, percent points (the paper's fault
+    /// vulnerability; NaN if FI skipped)
+    pub fault_vuln_pct: f64,
+    pub cycles: u64,
+    pub luts: u64,
+    pub ffs: u64,
+    pub util_pct: f64,
+    pub power_mw: f64,
+}
+
+impl DesignPoint {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("net", json::str(&self.net)),
+            ("mult", json::str(&self.mult)),
+            ("mask", json::num(self.mask as f64)),
+            ("config", json::str(&self.config_string)),
+            ("base_acc", json::num(self.base_acc)),
+            ("ax_acc", json::num(self.ax_acc)),
+            ("acc_drop_pct", json::num(self.acc_drop_pct)),
+            (
+                "fi_mean_acc",
+                if self.fi_mean_acc.is_nan() { Json::Null } else { json::num(self.fi_mean_acc) },
+            ),
+            (
+                "fault_vuln_pct",
+                if self.fault_vuln_pct.is_nan() {
+                    Json::Null
+                } else {
+                    json::num(self.fault_vuln_pct)
+                },
+            ),
+            ("cycles", json::num(self.cycles as f64)),
+            ("luts", json::num(self.luts as f64)),
+            ("ffs", json::num(self.ffs as f64)),
+            ("util_pct", json::num(self.util_pct)),
+            ("power_mw", json::num(self.power_mw)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<DesignPoint> {
+        let nan_or = |k: &str| match j.get(k) {
+            Some(Json::Null) | None => f64::NAN,
+            Some(v) => v.as_f64().unwrap_or(f64::NAN),
+        };
+        Some(DesignPoint {
+            net: j.get("net")?.as_str()?.to_string(),
+            mult: j.get("mult")?.as_str()?.to_string(),
+            mask: j.get("mask")?.as_i64()? as u64,
+            config_string: j.get("config")?.as_str()?.to_string(),
+            base_acc: j.get("base_acc")?.as_f64()?,
+            ax_acc: j.get("ax_acc")?.as_f64()?,
+            acc_drop_pct: j.get("acc_drop_pct")?.as_f64()?,
+            fi_mean_acc: nan_or("fi_mean_acc"),
+            fault_vuln_pct: nan_or("fault_vuln_pct"),
+            cycles: j.get("cycles")?.as_i64()? as u64,
+            luts: j.get("luts")?.as_i64()? as u64,
+            ffs: j.get("ffs")?.as_i64()? as u64,
+            util_pct: j.get("util_pct")?.as_f64()?,
+            power_mw: j.get("power_mw")?.as_f64()?,
+        })
+    }
+}
+
+/// All 2^n layer masks (0 = fully exact ... 2^n-1 = fully approximated).
+pub fn enumerate_masks(n_comp: usize) -> Vec<u64> {
+    assert!(n_comp < 63);
+    (0..(1u64 << n_comp)).collect()
+}
+
+/// Parse a paper-style configuration string ("0-1-101") into a mask over
+/// computing layers (dashes ignored).
+pub fn mask_from_config_string(s: &str) -> Result<u64, String> {
+    let mut mask = 0u64;
+    let mut ci = 0;
+    for ch in s.chars() {
+        match ch {
+            '1' => {
+                mask |= 1 << ci;
+                ci += 1;
+            }
+            '0' => ci += 1,
+            '-' | ' ' => {}
+            other => return Err(format!("bad config char {other:?} in {s:?}")),
+        }
+    }
+    Ok(mask)
+}
+
+/// Binds a network + data + LUT set for repeated configuration evaluation.
+pub struct Evaluator<'a> {
+    pub net: &'a QNet,
+    pub data: &'a TestSet,
+    pub luts: &'a BTreeMap<String, Lut>,
+    /// images used for (fault-free) accuracy evaluation
+    pub eval_images: usize,
+    pub fi: CampaignParams,
+    base_acc: f64,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        net: &'a QNet,
+        data: &'a TestSet,
+        luts: &'a BTreeMap<String, Lut>,
+        eval_images: usize,
+        fi: CampaignParams,
+    ) -> Evaluator<'a> {
+        let exact = &luts["exact"];
+        let eng = Engine::uniform(net, exact);
+        let mut buf = Buffers::for_net(net);
+        let base_acc = eng.accuracy(&data.take(eval_images), &mut buf);
+        Evaluator { net, data, luts, eval_images, fi, base_acc }
+    }
+
+    pub fn base_acc(&self) -> f64 {
+        self.base_acc
+    }
+
+    /// Per-layer LUT selection for (mult, mask).
+    pub fn config_luts(&self, mult: &str, mask: u64) -> Vec<&Lut> {
+        let exact = &self.luts["exact"];
+        let axm = self
+            .luts
+            .get(mult)
+            .unwrap_or_else(|| panic!("multiplier {mult} not loaded"));
+        (0..self.net.n_comp())
+            .map(|ci| if mask >> ci & 1 == 1 { axm } else { exact })
+            .collect()
+    }
+
+    /// Evaluate one configuration; `with_fi=false` skips the fault
+    /// campaign (accuracy + hardware only — used by the full 2^n sweep
+    /// pre-filter).
+    pub fn evaluate(&self, mult: &str, mask: u64, with_fi: bool) -> DesignPoint {
+        let luts = self.config_luts(mult, mask);
+        let engine = Engine::new(self.net, luts);
+        let mut buf = Buffers::for_net(self.net);
+        let ax_acc = engine.accuracy(&self.data.take(self.eval_images), &mut buf);
+
+        let (fi_mean_acc, fault_vuln_pct) = if with_fi {
+            let r = run_campaign(&engine, self.data, &self.fi);
+            // vulnerability relative to *this* AxDNN's fault-free accuracy
+            // on the FI subset (paper: [AxDNN - FI on AxDNN])
+            (r.mean_fault_acc, (r.base_acc - r.mean_fault_acc) * 100.0)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let mults: Vec<&axmul::Multiplier> = (0..self.net.n_comp())
+            .map(|ci| {
+                axmul::by_name(if mask >> ci & 1 == 1 { mult } else { "exact" }).expect("catalog")
+            })
+            .collect();
+        let hw = hwmodel::estimate(self.net, &mults);
+
+        DesignPoint {
+            net: self.net.name.clone(),
+            mult: mult.to_string(),
+            mask,
+            config_string: self.net.config_string(mask),
+            base_acc: self.base_acc,
+            ax_acc,
+            acc_drop_pct: (self.base_acc - ax_acc) * 100.0,
+            fi_mean_acc,
+            fault_vuln_pct,
+            cycles: hw.cycles,
+            luts: hw.luts,
+            ffs: hw.ffs,
+            util_pct: hw.util_pct,
+            power_mw: hw.power_mw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_enumeration() {
+        assert_eq!(enumerate_masks(3).len(), 8);
+        assert_eq!(enumerate_masks(0), vec![0]);
+    }
+
+    #[test]
+    fn config_string_roundtrip() {
+        for s in ["111", "101", "1-1-011", "0-0-11-0-100"] {
+            let mask = mask_from_config_string(s).unwrap();
+            let bits: String = s.chars().filter(|c| *c != '-').collect();
+            let mut expect = 0u64;
+            for (i, c) in bits.chars().enumerate() {
+                if c == '1' {
+                    expect |= 1 << i;
+                }
+            }
+            assert_eq!(mask, expect, "{s}");
+        }
+        assert!(mask_from_config_string("1x0").is_err());
+    }
+
+    #[test]
+    fn design_point_json_roundtrip() {
+        let p = DesignPoint {
+            net: "mlp3".into(),
+            mult: "mul8s_1kvp_s".into(),
+            mask: 0b101,
+            config_string: "101".into(),
+            base_acc: 0.9,
+            ax_acc: 0.85,
+            acc_drop_pct: 5.0,
+            fi_mean_acc: 0.8,
+            fault_vuln_pct: 5.0,
+            cycles: 12345,
+            luts: 1000,
+            ffs: 900,
+            util_pct: 0.99,
+            power_mw: 21.5,
+        };
+        let back = DesignPoint::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn design_point_json_nan_fi() {
+        let mut p = DesignPoint {
+            net: "m".into(),
+            mult: "exact".into(),
+            mask: 0,
+            config_string: "000".into(),
+            base_acc: 0.9,
+            ax_acc: 0.9,
+            acc_drop_pct: 0.0,
+            fi_mean_acc: f64::NAN,
+            fault_vuln_pct: f64::NAN,
+            cycles: 1,
+            luts: 1,
+            ffs: 1,
+            util_pct: 0.1,
+            power_mw: 1.0,
+        };
+        let back = DesignPoint::from_json(&p.to_json()).unwrap();
+        assert!(back.fi_mean_acc.is_nan() && back.fault_vuln_pct.is_nan());
+        p.fi_mean_acc = 0.5;
+        p.fault_vuln_pct = 40.0;
+        let back = DesignPoint::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.fi_mean_acc, 0.5);
+    }
+}

@@ -1,0 +1,113 @@
+//! Pareto-frontier computation (Fig. 3 of the paper: resource utilization
+//! vs accuracy drop under FI, both minimized).
+
+/// Indices of the non-dominated points under two minimized objectives.
+/// A point dominates another if it is <= in both objectives and < in at
+/// least one. Output is sorted by the first objective.
+pub fn pareto_front<T>(points: &[T], fx: impl Fn(&T) -> f64, fy: impl Fn(&T) -> f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by x asc, then y asc
+    idx.sort_by(|&a, &b| {
+        fx(&points[a])
+            .partial_cmp(&fx(&points[b]))
+            .unwrap()
+            .then(fy(&points[a]).partial_cmp(&fy(&points[b])).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::INFINITY;
+    let mut last_x = f64::NEG_INFINITY;
+    for &i in &idx {
+        let (x, y) = (fx(&points[i]), fy(&points[i]));
+        if y < best_y {
+            front.push(i);
+            best_y = y;
+            last_x = x;
+        } else if y == best_y && x == last_x {
+            // exact duplicate of the frontier point: keep only the first
+        }
+    }
+    front
+}
+
+/// True iff `a` dominates `b` (both objectives minimized).
+pub fn dominates(ax: f64, ay: f64, bx: f64, by: f64) -> bool {
+    ax <= bx && ay <= by && (ax < bx || ay < by)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn simple_front() {
+        // (x, y): minimize both
+        let pts = vec![(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (5.0, 2.0)];
+        let f = pareto_front(&pts, |p| p.0, |p| p.1);
+        assert_eq!(f, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn single_point() {
+        let pts = vec![(1.0, 1.0)];
+        assert_eq!(pareto_front(&pts, |p| p.0, |p| p.1), vec![0]);
+    }
+
+    #[test]
+    fn duplicates_kept_once() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0), (2.0, 2.0)];
+        let f = pareto_front(&pts, |p| p.0, |p| p.1);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates(1.0, 1.0, 2.0, 2.0));
+        assert!(dominates(1.0, 2.0, 2.0, 2.0));
+        assert!(!dominates(1.0, 3.0, 2.0, 2.0));
+        assert!(!dominates(2.0, 2.0, 2.0, 2.0)); // equal doesn't dominate
+    }
+
+    #[test]
+    fn property_no_frontier_point_dominated() {
+        check("pareto front is non-dominated", 0xFAE7, 40, |rng| {
+            let n = 2 + rng.usize_below(60);
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.f64() * 10.0, rng.f64() * 10.0)).collect();
+            let front = pareto_front(&pts, |p| p.0, |p| p.1);
+            assert!(!front.is_empty());
+            // no frontier point dominated by any point
+            for &i in &front {
+                for (j, p) in pts.iter().enumerate() {
+                    if j != i {
+                        assert!(
+                            !dominates(p.0, p.1, pts[i].0, pts[i].1),
+                            "front point {i} dominated by {j}"
+                        );
+                    }
+                }
+            }
+            // every non-front point dominated by some front point
+            for (j, p) in pts.iter().enumerate() {
+                if !front.contains(&j) {
+                    let dominated_or_dup = front.iter().any(|&i| {
+                        dominates(pts[i].0, pts[i].1, p.0, p.1)
+                            || (pts[i].0 == p.0 && pts[i].1 == p.1)
+                    });
+                    assert!(dominated_or_dup, "point {j} neither dominated nor duplicate");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn front_sorted_by_x_desc_y() {
+        let pts = vec![(5.0, 0.5), (0.5, 5.0), (2.0, 2.0), (1.0, 4.0)];
+        let f = pareto_front(&pts, |p| p.0, |p| p.1);
+        // sorted by x ascending, y strictly decreasing along the front
+        for w in f.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0);
+            assert!(pts[w[0]].1 > pts[w[1]].1);
+        }
+    }
+}

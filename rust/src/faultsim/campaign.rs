@@ -1,0 +1,221 @@
+//! Fault-injection campaign runner.
+//!
+//! The hot structure is the *layer-replay* optimization (EXPERIMENTS.md
+//! §Perf): clean activations of every computing layer are traced once per
+//! image (N_img full forwards), then each of the N_fault faults replays
+//! only the network suffix after its fault site. Equivalence with the
+//! naive full-forward campaign is asserted by tests and can be forced with
+//! `replay: false` for A/B benchmarking.
+
+use super::{sample_sites, SiteSampling};
+use crate::dataset::TestSet;
+use crate::simnet::{argmax_i8, Buffers, CleanTrace, Engine};
+use crate::util::progress::Progress;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct CampaignParams {
+    /// number of independent single-bit faults (paper: 600/800/1000)
+    pub n_faults: usize,
+    /// test-subset size fed through the network per fault
+    pub n_images: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub sampling: SiteSampling,
+    /// layer-replay fast path (true) vs naive full forwards (false)
+    pub replay: bool,
+}
+
+impl CampaignParams {
+    /// Defaults scaled for this 1-core host; env `DEEPAXE_FI_FAULTS` /
+    /// `DEEPAXE_FI_IMAGES` restore paper scale (600-1000 faults, full
+    /// test set).
+    pub fn default_for(net_name: &str) -> CampaignParams {
+        use crate::util::cli::env_usize;
+        let (faults, images) = match net_name {
+            "alexnet" => (60, 60),
+            "lenet5" => (150, 120),
+            _ => (200, 150),
+        };
+        CampaignParams {
+            n_faults: env_usize("DEEPAXE_FI_FAULTS", faults),
+            n_images: env_usize("DEEPAXE_FI_IMAGES", images),
+            seed: 0xFA17,
+            workers: crate::util::threadpool::default_workers(),
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    /// fault-free accuracy of this engine configuration on the subset
+    pub base_acc: f64,
+    /// mean accuracy across faults
+    pub mean_fault_acc: f64,
+    /// per-fault accuracies
+    pub acc_per_fault: Vec<f64>,
+    /// base_acc - mean_fault_acc (the paper's fault vulnerability, as a
+    /// fraction in [−1, 1])
+    pub vulnerability: f64,
+    /// 95% CI half-width of mean_fault_acc
+    pub ci95: f64,
+    pub n_faults: usize,
+    pub n_images: usize,
+}
+
+/// Run a fault campaign for one engine configuration.
+pub fn run_campaign(engine: &Engine, data: &TestSet, params: &CampaignParams) -> CampaignResult {
+    let subset = data.take(params.n_images);
+    let n_images = subset.len();
+    assert!(n_images > 0, "empty test subset");
+
+    // 1) clean traces (one full forward per image)
+    let traces: Vec<CleanTrace> = {
+        let mut buf = Buffers::for_net(engine.net);
+        (0..n_images).map(|i| engine.trace(subset.image(i), &mut buf)).collect()
+    };
+    let base_correct =
+        (0..n_images).filter(|&i| traces[i].pred == subset.labels[i] as usize).count();
+    let base_acc = base_correct as f64 / n_images as f64;
+
+    // 2) fault sites
+    let mut rng = Rng::new(params.seed);
+    let sites = sample_sites(engine.net, params.n_faults, params.sampling, &mut rng);
+
+    // 3) per-fault accuracies, parallel over faults
+    let progress = Progress::new(&format!("fi:{}", engine.net.name), sites.len() as u64);
+    let workers = params.workers.max(1);
+    let chunk = sites.len().div_ceil(workers);
+    let mut acc_per_fault = vec![0.0f64; sites.len()];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (wi, site_chunk) in sites.chunks(chunk.max(1)).enumerate() {
+            let traces = &traces;
+            let subset = &subset;
+            let progress = &progress;
+            let params_replay = params.replay;
+            handles.push((wi, scope.spawn(move || {
+                let mut buf = Buffers::for_net(engine.net);
+                let mut act = Vec::new();
+                site_chunk
+                    .iter()
+                    .map(|&site| {
+                        let mut correct = 0usize;
+                        for i in 0..subset.len() {
+                            let pred = if params_replay {
+                                act.clear();
+                                act.extend_from_slice(&traces[i].acts[site.layer]);
+                                act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                                argmax_i8(&engine.forward_from(site.layer, &act, &mut buf))
+                            } else {
+                                engine.predict(subset.image(i), Some(site), &mut buf)
+                            };
+                            if pred == subset.labels[i] as usize {
+                                correct += 1;
+                            }
+                        }
+                        progress.add(1);
+                        correct as f64 / subset.len() as f64
+                    })
+                    .collect::<Vec<f64>>()
+            })));
+        }
+        for (wi, h) in handles {
+            let out = h.join().expect("campaign worker panicked");
+            let start = wi * chunk.max(1);
+            acc_per_fault[start..start + out.len()].copy_from_slice(&out);
+        }
+    });
+    progress.finish();
+
+    let summary = stats::summarize(&acc_per_fault);
+    CampaignResult {
+        base_acc,
+        mean_fault_acc: summary.mean,
+        vulnerability: base_acc - summary.mean,
+        ci95: stats::ci95_halfwidth(&summary),
+        acc_per_fault,
+        n_faults: sites.len(),
+        n_images,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::simnet::testutil::tiny_mlp;
+    use crate::tensor::TensorI8;
+
+    fn fake_data(n: usize) -> TestSet {
+        let mut rng = Rng::new(77);
+        let data: Vec<i8> = (0..n * 4).map(|_| rng.i8()).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        TestSet { name: "fake".into(), x: TensorI8::from_vec(&[n, 1, 2, 2], data), labels }
+    }
+
+    fn params(replay: bool) -> CampaignParams {
+        CampaignParams {
+            n_faults: 64,
+            n_images: 24,
+            seed: 42,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay,
+        }
+    }
+
+    #[test]
+    fn replay_equals_naive() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(24);
+        let a = run_campaign(&engine, &data, &params(true));
+        let b = run_campaign(&engine, &data, &params(false));
+        assert_eq!(a.acc_per_fault, b.acc_per_fault);
+        assert_eq!(a.base_acc, b.base_acc);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(16);
+        let a = run_campaign(&engine, &data, &params(true));
+        let b = run_campaign(&engine, &data, &params(true));
+        assert_eq!(a.acc_per_fault, b.acc_per_fault);
+    }
+
+    #[test]
+    fn vulnerability_is_base_minus_mean() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(16);
+        let r = run_campaign(&engine, &data, &params(true));
+        assert!((r.vulnerability - (r.base_acc - r.mean_fault_acc)).abs() < 1e-12);
+        assert!(r.mean_fault_acc >= 0.0 && r.mean_fault_acc <= 1.0);
+        assert_eq!(r.n_faults, 64);
+    }
+
+    #[test]
+    fn worker_count_invariance() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(16);
+        let mut p1 = params(true);
+        p1.workers = 1;
+        let mut p4 = params(true);
+        p4.workers = 4;
+        assert_eq!(
+            run_campaign(&engine, &data, &p1).acc_per_fault,
+            run_campaign(&engine, &data, &p4).acc_per_fault
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! faultsim — single-bit-flip fault injection (paper §IV-B).
+//!
+//! Fault model: one random bit of one random neuron's activation in one
+//! random computing layer is flipped; the whole test subset is inferred
+//! with that fault present; repeated for N independent faults; the mean
+//! accuracy across faults measures *fault vulnerability*
+//! (= AxDNN accuracy − mean faulty accuracy; opposite of resiliency).
+
+pub mod campaign;
+pub mod permanent;
+
+pub use campaign::{run_campaign, CampaignParams, CampaignResult};
+pub use permanent::{run_stuck_campaign, StuckFault, StuckValue};
+
+use crate::simnet::{FaultSite, QNet};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// How fault sites are drawn (the paper says "a random neuron in a random
+/// layer"; `UniformLayer` is that literal reading, `UniformNeuron` weights
+/// layers by size — kept as an ablation, see EXPERIMENTS.md A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteSampling {
+    UniformLayer,
+    UniformNeuron,
+}
+
+/// Draw `n` independent fault sites.
+pub fn sample_sites(net: &QNet, n: usize, sampling: SiteSampling, rng: &mut Rng) -> Vec<FaultSite> {
+    let layer_sizes: Vec<usize> = (0..net.n_comp()).map(|ci| net.comp(ci).act_len()).collect();
+    let total: usize = layer_sizes.iter().sum();
+    (0..n)
+        .map(|_| {
+            let (layer, neuron) = match sampling {
+                SiteSampling::UniformLayer => {
+                    let layer = rng.usize_below(net.n_comp());
+                    (layer, rng.usize_below(layer_sizes[layer]))
+                }
+                SiteSampling::UniformNeuron => {
+                    let mut flat = rng.usize_below(total);
+                    let mut layer = 0;
+                    while flat >= layer_sizes[layer] {
+                        flat -= layer_sizes[layer];
+                        layer += 1;
+                    }
+                    (layer, flat)
+                }
+            };
+            FaultSite { layer, neuron, bit: rng.below(8) as u8 }
+        })
+        .collect()
+}
+
+/// Fault-site population for the statistical sizing: every bit of every
+/// activation neuron.
+pub fn fault_population(net: &QNet) -> u64 {
+    net.total_neurons() * 8
+}
+
+/// Leveugle 95%/1% sample size for this network (the paper's pre-analysis
+/// step; the paper then empirically reduces to 600/800/1000).
+pub fn required_sample_size(net: &QNet) -> u64 {
+    stats::paper_sample_size(fault_population(net))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::testutil::tiny_mlp;
+
+    #[test]
+    fn sites_in_bounds() {
+        let net = tiny_mlp();
+        let mut rng = Rng::new(1);
+        for mode in [SiteSampling::UniformLayer, SiteSampling::UniformNeuron] {
+            for s in sample_sites(&net, 500, mode, &mut rng) {
+                assert!(s.layer < 2);
+                assert!(s.neuron < net.comp(s.layer).act_len());
+                assert!(s.bit < 8);
+            }
+        }
+    }
+
+    #[test]
+    fn sites_deterministic() {
+        let net = tiny_mlp();
+        let a = sample_sites(&net, 50, SiteSampling::UniformLayer, &mut Rng::new(9));
+        let b = sample_sites(&net, 50, SiteSampling::UniformLayer, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uniform_neuron_weights_by_size() {
+        // layer 0 has 3 neurons, layer 1 has 2 -> ~60/40 split
+        let net = tiny_mlp();
+        let mut rng = Rng::new(3);
+        let sites = sample_sites(&net, 10_000, SiteSampling::UniformNeuron, &mut rng);
+        let l0 = sites.iter().filter(|s| s.layer == 0).count();
+        assert!((5500..6500).contains(&l0), "{l0}");
+    }
+
+    #[test]
+    fn uniform_layer_even_split() {
+        let net = tiny_mlp();
+        let mut rng = Rng::new(4);
+        let sites = sample_sites(&net, 10_000, SiteSampling::UniformLayer, &mut rng);
+        let l0 = sites.iter().filter(|s| s.layer == 0).count();
+        assert!((4500..5500).contains(&l0), "{l0}");
+    }
+
+    #[test]
+    fn population_and_sizing() {
+        let net = tiny_mlp();
+        assert_eq!(fault_population(&net), 5 * 8);
+        // tiny population -> nearly exhaustive
+        assert!(required_sample_size(&net) >= 39);
+    }
+}

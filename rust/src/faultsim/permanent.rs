@@ -1,0 +1,186 @@
+//! Permanent-fault extension: stuck-at-0 / stuck-at-1 activation faults.
+//!
+//! The paper evaluates transient single-bit flips and cites the
+//! transient-vs-permanent distinction ([29] Zhang et al.) as motivation;
+//! this module implements the permanent model as the natural extension:
+//! a stuck bit forces the same activation bit to a fixed value on *every*
+//! inference (vs the XOR flip, which inverts whatever value was computed).
+//!
+//! Implementation detail: a stuck-at fault on activation `v` is
+//! `v' = (v & !mask) | (stuck_value ? mask : 0)` — still a pure function
+//! of the clean activation, so the layer-replay fast path applies
+//! unchanged.
+
+use super::SiteSampling;
+use crate::dataset::TestSet;
+use crate::simnet::{argmax_i8, Buffers, Engine, FaultSite};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StuckValue {
+    Zero,
+    One,
+}
+
+/// A permanent (stuck-at) fault site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StuckFault {
+    pub site: FaultSite,
+    pub value: StuckValue,
+}
+
+/// Apply a stuck-at fault to a clean activation value.
+#[inline]
+pub fn apply_stuck(v: i8, bit: u8, value: StuckValue) -> i8 {
+    let mask = 1u8 << bit;
+    match value {
+        StuckValue::Zero => (v as u8 & !mask) as i8,
+        StuckValue::One => (v as u8 | mask) as i8,
+    }
+}
+
+/// Draw `n` stuck-at faults (site sampling as in the transient model; the
+/// stuck polarity is a fair coin).
+pub fn sample_stuck(
+    net: &crate::simnet::QNet,
+    n: usize,
+    sampling: SiteSampling,
+    rng: &mut Rng,
+) -> Vec<StuckFault> {
+    super::sample_sites(net, n, sampling, rng)
+        .into_iter()
+        .map(|site| StuckFault {
+            site,
+            value: if rng.below(2) == 0 { StuckValue::Zero } else { StuckValue::One },
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct StuckCampaignResult {
+    pub base_acc: f64,
+    pub mean_fault_acc: f64,
+    pub vulnerability: f64,
+    pub ci95: f64,
+    pub acc_per_fault: Vec<f64>,
+}
+
+/// Stuck-at campaign (layer-replay; single-threaded — permanent campaigns
+/// are typically smaller than transient ones since the fault persists
+/// across the whole workload anyway).
+pub fn run_stuck_campaign(
+    engine: &Engine,
+    data: &TestSet,
+    n_faults: usize,
+    n_images: usize,
+    seed: u64,
+) -> StuckCampaignResult {
+    let subset = data.take(n_images);
+    let mut buf = Buffers::for_net(engine.net);
+    let traces: Vec<_> =
+        (0..subset.len()).map(|i| engine.trace(subset.image(i), &mut buf)).collect();
+    let base_acc = traces
+        .iter()
+        .zip(&subset.labels)
+        .filter(|(t, l)| t.pred == **l as usize)
+        .count() as f64
+        / subset.len() as f64;
+
+    let mut rng = Rng::new(seed);
+    let faults = sample_stuck(engine.net, n_faults, SiteSampling::UniformLayer, &mut rng);
+    let mut acc_per_fault = Vec::with_capacity(faults.len());
+    let mut act = Vec::new();
+    for f in &faults {
+        let mut correct = 0usize;
+        for (i, tr) in traces.iter().enumerate() {
+            act.clear();
+            act.extend_from_slice(&tr.acts[f.site.layer]);
+            act[f.site.neuron] = apply_stuck(act[f.site.neuron], f.site.bit, f.value);
+            let pred = argmax_i8(&engine.forward_from(f.site.layer, &act, &mut buf));
+            if pred == subset.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        acc_per_fault.push(correct as f64 / subset.len() as f64);
+    }
+    let s = stats::summarize(&acc_per_fault);
+    StuckCampaignResult {
+        base_acc,
+        mean_fault_acc: s.mean,
+        vulnerability: base_acc - s.mean,
+        ci95: stats::ci95_halfwidth(&s),
+        acc_per_fault,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::simnet::testutil::tiny_mlp;
+    use crate::tensor::TensorI8;
+
+    #[test]
+    fn stuck_semantics() {
+        assert_eq!(apply_stuck(0b0101, 1, StuckValue::One), 0b0111);
+        assert_eq!(apply_stuck(0b0101, 0, StuckValue::Zero), 0b0100);
+        assert_eq!(apply_stuck(0b0101, 0, StuckValue::One), 0b0101); // already set
+        assert_eq!(apply_stuck(-1, 7, StuckValue::Zero), 127);
+        assert_eq!(apply_stuck(0, 7, StuckValue::One), -128);
+    }
+
+    #[test]
+    fn stuck_is_idempotent() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = rng.i8();
+            let bit = rng.below(8) as u8;
+            for val in [StuckValue::Zero, StuckValue::One] {
+                let once = apply_stuck(v, bit, val);
+                assert_eq!(apply_stuck(once, bit, val), once);
+            }
+        }
+    }
+
+    #[test]
+    fn campaign_runs_and_bounds() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let mut rng = Rng::new(3);
+        let data = TestSet {
+            name: "fake".into(),
+            x: TensorI8::from_vec(&[20, 1, 2, 2], (0..80).map(|_| rng.i8()).collect()),
+            labels: (0..20).map(|i| i % 2).collect(),
+        };
+        let r = run_stuck_campaign(&engine, &data, 32, 20, 5);
+        assert_eq!(r.acc_per_fault.len(), 32);
+        assert!(r.mean_fault_acc >= 0.0 && r.mean_fault_acc <= 1.0);
+        // deterministic
+        let r2 = run_stuck_campaign(&engine, &data, 32, 20, 5);
+        assert_eq!(r.acc_per_fault, r2.acc_per_fault);
+    }
+
+    #[test]
+    fn stuck_matches_flip_when_it_inverts() {
+        // When the clean bit differs from the stuck value, stuck-at equals
+        // the transient flip for that inference.
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let mut buf = Buffers::for_net(&net);
+        let img = [4i8, -4, 8, 0];
+        let tr = engine.trace(&img, &mut buf);
+        let (layer, neuron, bit) = (0usize, 0usize, 1u8);
+        let clean = tr.acts[layer][neuron];
+        let clean_bit = (clean as u8 >> bit) & 1;
+        let value = if clean_bit == 1 { StuckValue::Zero } else { StuckValue::One };
+        let mut act = tr.acts[layer].clone();
+        act[neuron] = apply_stuck(clean, bit, value);
+        let stuck_logits = engine.forward_from(layer, &act, &mut buf);
+        let flip_logits =
+            engine.forward(&img, Some(FaultSite { layer, neuron, bit }), &mut buf);
+        assert_eq!(stuck_logits, flip_logits);
+    }
+}

@@ -1,0 +1,62 @@
+//! # DeepAxe — approximation/reliability DSE for DNN accelerators
+//!
+//! Rust reproduction of *"DeepAxe: A Framework for Exploration of
+//! Approximation and Reliability Trade-offs in DNN Accelerators"*
+//! (Taheri, Riazati et al., ISQED 2023), built as the Layer-3 coordinator
+//! of a three-layer rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — infrastructure substrates the offline image lacks crates
+//!   for: JSON, deterministic RNG, CLI parsing, a worker thread pool,
+//!   statistics, a micro-bench harness and a mini property-test framework.
+//! * [`nbin`] — the named-tensor container shared with the python build
+//!   path (`python/compile/nbin.py`).
+//! * [`tensor`] — minimal dense tensors for the integer inference engine.
+//! * [`axmul`] — the approximate-multiplier library (EvoApproxLib
+//!   stand-in): LUT generators, exhaustive error metrics, catalog.
+//! * [`dataset`] — quantized test-set loading.
+//! * [`simnet`] — the quantized int8 inference engine (the paper's
+//!   generated-C-model analog); every multiply is a LUT lookup, every
+//!   activation is a fault-injection site.
+//! * [`faultsim`] — single-bit-flip fault model, statistical sample
+//!   sizing, campaign runner.
+//! * [`hwmodel`] — analytic Vivado-HLS/Spartan-7 cost model (latency
+//!   cycles, LUT/FF utilization).
+//! * [`dse`] — configuration space, evaluation orchestration, Pareto
+//!   frontier.
+//! * [`runtime`] — PJRT executor for the AOT-lowered L2+L1 graphs.
+//! * [`coordinator`] — the tool-chain pipeline (Fig. 1/2 of the paper),
+//!   job scheduling, result caching, CLI entry points.
+//! * [`report`] — regenerates every paper table and figure.
+
+pub mod axmul;
+pub mod coordinator;
+pub mod dataset;
+pub mod dse;
+pub mod faultsim;
+pub mod hwmodel;
+pub mod nbin;
+pub mod report;
+pub mod runtime;
+pub mod simnet;
+pub mod tensor;
+pub mod util;
+
+/// Locate the artifacts directory: `$DEEPAXE_ARTIFACTS` or `./artifacts`
+/// (walking up from the current dir so tests work from any cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DEEPAXE_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! `repro` — the DeepAxe command-line tool-chain (Layer-3 leader).
+//!
+//! Everything runs from pre-built artifacts (`make artifacts`); python is
+//! never invoked here.
+
+use anyhow::{bail, Context, Result};
+use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
+use deepaxe::coordinator::Ctx;
+use deepaxe::dse::mask_from_config_string;
+use deepaxe::faultsim::CampaignParams;
+use deepaxe::report::experiments as exp;
+use deepaxe::report::table::{f2, pct, Table};
+use deepaxe::simnet::{Buffers, Engine};
+use deepaxe::util::cli;
+
+const USAGE: &str = "\
+deepaxe repro — approximation/reliability DSE for DNN accelerators (ISQED'23)
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  info                         artifact + model-zoo summary
+  exp <id>                     regenerate a paper experiment:
+                               table1 table2 table3 table4 fig3 fig4
+                               ablation-fi-n ablation-axm all
+  eval                         evaluate one configuration
+      --net <name> --mult <kvp|kv9|kv8|exact> --config <e.g. 1-0-110> [--fi]
+  pipeline                     automated Fig.2 design flow
+      --net <name> [--max-acc-drop pp] [--max-vuln pp]
+  parity                       simnet vs AOT/PJRT executable cross-check
+      --net <name> [--images n]
+  faults                       Leveugle statistical FI sizing per network
+  stuck                        permanent (stuck-at) fault campaign extension
+      --net <name> [--faults N] [--images N]
+  export-hls                   emit DeepHLS-style C for a configuration
+      --net <name> --mult <m> --config <cfg> [--out file.c]
+
+OPTIONS (eval/pipeline/exp)
+  --faults N       FI campaign faults        (env DEEPAXE_FI_FAULTS)
+  --images N       FI test-subset size       (env DEEPAXE_FI_IMAGES)
+  --eval-images N  accuracy-eval subset size (env DEEPAXE_EVAL_IMAGES)
+  --nets a,b,c     restrict exp table3 to these networks
+  --seed N         campaign RNG seed
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn campaign_params(args: &cli::Args, net: &str) -> Result<CampaignParams> {
+    let mut p = CampaignParams::default_for(net);
+    p.n_faults = args.get_usize("faults", p.n_faults)?;
+    p.n_images = args.get_usize("images", p.n_images)?;
+    p.seed = args.get_u64("seed", p.seed)?;
+    Ok(p)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(
+        argv,
+        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out"],
+        &["fi", "help"],
+    )
+    .map_err(anyhow::Error::msg)?;
+
+    if args.has("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    if let Some(v) = args.get("eval-images") {
+        std::env::set_var("DEEPAXE_EVAL_IMAGES", v);
+    }
+    if let Some(v) = args.get("faults") {
+        std::env::set_var("DEEPAXE_FI_FAULTS", v);
+    }
+    if let Some(v) = args.get("images") {
+        std::env::set_var("DEEPAXE_FI_IMAGES", v);
+    }
+
+    match args.subcommand.as_deref().unwrap() {
+        "info" => info(),
+        "exp" => experiment(&args),
+        "eval" => eval_one(&args),
+        "pipeline" => pipeline_cmd(&args),
+        "parity" => parity(&args),
+        "faults" => fault_sizing(),
+        "stuck" => stuck_cmd(&args),
+        "export-hls" => export_hls(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn info() -> Result<()> {
+    let ctx = Ctx::load()?;
+    println!("artifacts: {}", ctx.artifacts.display());
+    let mut t = Table::new(
+        "model zoo",
+        &["net", "dataset", "layers", "config template", "neurons", "MACs", "quant acc %"],
+    );
+    for name in ctx.net_names() {
+        let net = ctx.net(&name)?;
+        t.row(vec![
+            name.clone(),
+            net.dataset.clone(),
+            net.n_comp().to_string(),
+            net.config_template.clone(),
+            net.total_neurons().to_string(),
+            net.total_macs().to_string(),
+            f2(ctx.build_quant_acc(&name).unwrap_or(f64::NAN) * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("multipliers: {}", deepaxe::axmul::CATALOG.iter().map(|m| m.name).collect::<Vec<_>>().join(", "));
+    Ok(())
+}
+
+fn experiment(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let nets = args.get_list("nets", &["mlp3", "lenet5", "alexnet"]);
+    let mut outputs = Vec::new();
+    let ids: Vec<&str> = if id == "all" {
+        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm"]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let out = match id {
+            "table1" => exp::table1(&ctx)?,
+            "table2" => exp::table2(&ctx)?,
+            "table3" => exp::table3(&ctx, &nets)?,
+            "table4" => exp::table4(&ctx)?,
+            "fig3" => exp::fig3(&ctx)?,
+            "fig4" => exp::fig4(&ctx)?,
+            "ablation-fi-n" => exp::ablation_fi_n(&ctx)?,
+            "ablation-axm" => exp::ablation_axm(&ctx)?,
+            other => bail!("unknown experiment {other:?}"),
+        };
+        println!("{out}");
+        outputs.push(out);
+    }
+    Ok(())
+}
+
+fn eval_one(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net_name = args.get("net").context("--net required")?;
+    let net = ctx.net(net_name)?;
+    let data = ctx.data_for(&net)?;
+    let mult = exp::mult_name(args.get_or("mult", "kvp"));
+    let cfg = args.get("config").context("--config required (e.g. 1-0-110)")?;
+    let mask = mask_from_config_string(cfg).map_err(anyhow::Error::msg)?;
+    let fi = campaign_params(args, &net.name)?;
+    let ev = deepaxe::dse::Evaluator::new(&net, &data, &ctx.luts, exp::default_eval_images(), fi);
+    let p = ev.evaluate(mult, mask, args.has("fi"));
+    let mut t = Table::new(
+        &format!("evaluation: {net_name} {mult} {cfg}"),
+        &["metric", "value"],
+    );
+    t.row(vec!["base acc %".into(), f2(p.base_acc * 100.0)]);
+    t.row(vec!["AxDNN acc %".into(), f2(p.ax_acc * 100.0)]);
+    t.row(vec!["acc drop pp".into(), pct(p.acc_drop_pct)]);
+    t.row(vec!["FI mean acc %".into(), pct(p.fi_mean_acc * 100.0)]);
+    t.row(vec!["fault vulnerability pp".into(), pct(p.fault_vuln_pct)]);
+    t.row(vec!["latency cycles".into(), p.cycles.to_string()]);
+    t.row(vec!["LUTs".into(), p.luts.to_string()]);
+    t.row(vec!["FFs".into(), p.ffs.to_string()]);
+    t.row(vec!["utilization %".into(), f2(p.util_pct)]);
+    t.row(vec!["power mW (est)".into(), f2(p.power_mw)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn pipeline_cmd(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net = args.get("net").context("--net required")?.to_string();
+    let fi = campaign_params(args, &net)?;
+    let spec = PipelineSpec {
+        net: net.clone(),
+        mults: vec!["mul8s_1kvp_s".into(), "mul8s_1kv9_s".into(), "mul8s_1kv8_s".into()],
+        max_acc_drop_pct: args.get_f64("max-acc-drop", 2.0)?,
+        max_vuln_pct: args.get_f64("max-vuln", 100.0)?,
+        eval_images: exp::default_eval_images(),
+        fi,
+    };
+    let out = run_pipeline(&ctx, &spec)?;
+    println!(
+        "pipeline: {} accuracy points, {} fault-simulated, {} feasible",
+        out.accuracy_sweep.len(),
+        out.fi_points.len(),
+        out.feasible.len()
+    );
+    let mut t = Table::new(
+        &format!("Pareto frontier for {net} (util vs FI drop)"),
+        &["AxM", "config", "acc drop pp", "FI drop pp", "util %", "cycles"],
+    );
+    for p in &out.frontier {
+        t.row(vec![
+            p.mult.clone(),
+            p.config_string.clone(),
+            pct(p.acc_drop_pct),
+            pct(p.fault_vuln_pct),
+            f2(p.util_pct),
+            p.cycles.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    match &out.selected {
+        Some(p) => println!(
+            "SELECTED: {} {} (acc drop {:.2}pp, vuln {:.2}pp, util {:.2}%) -> ready for HLS implementation",
+            p.mult, p.config_string, p.acc_drop_pct, p.fault_vuln_pct, p.util_pct
+        ),
+        None => println!("no feasible configuration under the given requirements"),
+    }
+    Ok(())
+}
+
+fn parity(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net_name = args.get("net").context("--net required")?;
+    let net = ctx.net(net_name)?;
+    let data = ctx.data_for(&net)?;
+    let n = args.get_usize("images", 32)?.min(data.len());
+    let batch = args.get_usize("batch", ctx.lower_batch())?;
+
+    let rt = deepaxe::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load_net(&ctx.artifacts, &net, batch)?;
+
+    let exact = &ctx.luts["exact"];
+    let luts: Vec<&deepaxe::axmul::Lut> = (0..net.n_comp()).map(|_| exact).collect();
+    let subset = data.take(n);
+    let pjrt_preds = exe.predict_all(&subset, &luts, None)?;
+
+    let engine = Engine::uniform(&net, exact);
+    let mut buf = Buffers::for_net(&net);
+    let mut mismatches = 0;
+    for i in 0..n {
+        let simnet_pred = engine.predict(subset.image(i), None, &mut buf);
+        if simnet_pred != pjrt_preds[i] {
+            mismatches += 1;
+            eprintln!("image {i}: simnet={simnet_pred} pjrt={}", pjrt_preds[i]);
+        }
+    }
+    println!("parity over {n} images: {} mismatches", mismatches);
+    if mismatches > 0 {
+        bail!("simnet and PJRT executable disagree");
+    }
+    Ok(())
+}
+
+fn stuck_cmd(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net_name = args.get("net").context("--net required")?;
+    let net = ctx.net(net_name)?;
+    let data = ctx.data_for(&net)?;
+    let base = deepaxe::faultsim::CampaignParams::default_for(&net.name);
+    let n_faults = args.get_usize("faults", base.n_faults)?;
+    let n_images = args.get_usize("images", base.n_images)?;
+    let mult = exp::mult_name(args.get_or("mult", "exact"));
+    let lut = &ctx.luts[mult];
+    let engine = Engine::uniform(&net, lut);
+    let r = deepaxe::faultsim::run_stuck_campaign(&engine, &data, n_faults, n_images, 0x57CC);
+    let mut t = Table::new(
+        &format!("permanent (stuck-at) campaign: {net_name} / {mult}"),
+        &["metric", "value"],
+    );
+    t.row(vec!["base acc %".into(), f2(r.base_acc * 100.0)]);
+    t.row(vec!["mean stuck-fault acc %".into(), f2(r.mean_fault_acc * 100.0)]);
+    t.row(vec!["vulnerability pp".into(), f2(r.vulnerability * 100.0)]);
+    t.row(vec!["95% CI halfwidth pp".into(), f2(r.ci95 * 100.0)]);
+    t.row(vec!["faults x images".into(), format!("{n_faults} x {n_images}")]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn export_hls(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net_name = args.get("net").context("--net required")?;
+    let net = ctx.net(net_name)?;
+    let mult = exp::mult_name(args.get_or("mult", "kvp"));
+    let cfg = args.get("config").context("--config required (e.g. 1-0-110)")?;
+    let mask = mask_from_config_string(cfg).map_err(anyhow::Error::msg)?;
+    let config: Vec<&str> =
+        (0..net.n_comp()).map(|ci| if mask >> ci & 1 == 1 { mult } else { "exact" }).collect();
+    let c = deepaxe::coordinator::hlsgen::generate_c(&net, &config, &ctx.luts);
+    let out_path = args.get_or("out", "deepaxe_accel.c").to_string();
+    std::fs::write(&out_path, &c)?;
+    println!(
+        "wrote {} ({} bytes) — compile: cc -O2 -c {}",
+        out_path,
+        c.len(),
+        out_path
+    );
+    Ok(())
+}
+
+fn fault_sizing() -> Result<()> {
+    let ctx = Ctx::load()?;
+    let mut t = Table::new(
+        "Leveugle statistical FI sizing (95% confidence, 1% margin, p=0.5)",
+        &["net", "neurons", "fault population (x8 bits)", "required samples", "paper used"],
+    );
+    for name in ctx.net_names() {
+        let net = ctx.net(&name)?;
+        let paper = match name.as_str() {
+            "mlp3" => "600",
+            "lenet5" => "800",
+            "alexnet" => "1000",
+            _ => "-",
+        };
+        t.row(vec![
+            name.clone(),
+            net.total_neurons().to_string(),
+            deepaxe::faultsim::fault_population(&net).to_string(),
+            deepaxe::faultsim::required_sample_size(&net).to_string(),
+            paper.into(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

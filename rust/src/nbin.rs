@@ -1,0 +1,304 @@
+//! nbin — named-tensor binary container, byte-compatible with
+//! `python/compile/nbin.py` (see that file for the format spec).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 6] = b"NBIN1\x00";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8 = 0,
+    U8 = 1,
+    I32 = 2,
+    I64 = 3,
+    F32 = 4,
+    F64 = 5,
+}
+
+impl DType {
+    fn from_code(c: u8) -> Result<DType, NbinError> {
+        Ok(match c {
+            0 => DType::I8,
+            1 => DType::U8,
+            2 => DType::I32,
+            3 => DType::I64,
+            4 => DType::F32,
+            5 => DType::F64,
+            _ => return Err(NbinError::Format(format!("bad dtype code {c}"))),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 | DType::U8 => 1,
+            DType::I32 | DType::F32 => 4,
+            DType::I64 | DType::F64 => 8,
+        }
+    }
+}
+
+/// One stored tensor: raw little-endian payload + typed views.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NbinError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("format: {0}")]
+    Format(String),
+    #[error("entry {0:?} not found")]
+    Missing(String),
+    #[error("entry {name:?}: expected {expected:?}, found {found:?}")]
+    WrongType { name: String, expected: DType, found: DType },
+}
+
+impl Entry {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn check(&self, name: &str, dtype: DType) -> Result<(), NbinError> {
+        if self.dtype != dtype {
+            return Err(NbinError::WrongType { name: name.into(), expected: dtype, found: self.dtype });
+        }
+        Ok(())
+    }
+
+    pub fn as_i8(&self) -> Vec<i8> {
+        self.data.iter().map(|&b| b as i8).collect()
+    }
+
+    pub fn as_u8(&self) -> Vec<u8> {
+        self.data.clone()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    pub fn as_i64(&self) -> Vec<i64> {
+        self.data.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    pub fn from_i8(dims: Vec<usize>, v: &[i8]) -> Entry {
+        assert_eq!(dims.iter().product::<usize>(), v.len());
+        Entry { dtype: DType::I8, dims, data: v.iter().map(|&x| x as u8).collect() }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, v: &[i32]) -> Entry {
+        assert_eq!(dims.iter().product::<usize>(), v.len());
+        Entry { dtype: DType::I32, dims, data: v.iter().flat_map(|x| x.to_le_bytes()).collect() }
+    }
+
+    pub fn from_f32(dims: Vec<usize>, v: &[f32]) -> Entry {
+        assert_eq!(dims.iter().product::<usize>(), v.len());
+        Entry { dtype: DType::F32, dims, data: v.iter().flat_map(|x| x.to_le_bytes()).collect() }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Nbin {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Nbin {
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Nbin, NbinError> {
+        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            NbinError::Format(format!("open {}: {e}", path.as_ref().display()))
+        })?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Nbin, NbinError> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], NbinError> {
+            if *pos + n > buf.len() {
+                return Err(NbinError::Format("truncated".into()));
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 6)? != MAGIC {
+            return Err(NbinError::Format("bad magic".into()));
+        }
+        let count = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| NbinError::Format("bad utf-8 name".into()))?;
+            let hdr = take(&mut pos, 2)?;
+            let dtype = DType::from_code(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let nbytes = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            let expected = dims.iter().product::<usize>() * dtype.size();
+            if nbytes != expected {
+                return Err(NbinError::Format(format!(
+                    "entry {name:?}: payload {nbytes} != dims {dims:?} * {}",
+                    dtype.size()
+                )));
+            }
+            let data = take(&mut pos, nbytes)?.to_vec();
+            entries.insert(name, Entry { dtype, dims, data });
+        }
+        if pos != buf.len() {
+            return Err(NbinError::Format("trailing bytes".into()));
+        }
+        Ok(Nbin { entries })
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<(), NbinError> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u16).to_le_bytes());
+        for (name, e) in &self.entries {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(e.dtype as u8);
+            out.push(e.dims.len() as u8);
+            for &d in &e.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&(e.data.len() as u64).to_le_bytes());
+            out.extend_from_slice(&e.data);
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&out)?;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry, NbinError> {
+        self.entries.get(name).ok_or_else(|| NbinError::Missing(name.into()))
+    }
+
+    pub fn get_i8(&self, name: &str) -> Result<Vec<i8>, NbinError> {
+        let e = self.get(name)?;
+        e.check(name, DType::I8)?;
+        Ok(e.as_i8())
+    }
+
+    pub fn get_i32(&self, name: &str) -> Result<Vec<i32>, NbinError> {
+        let e = self.get(name)?;
+        e.check(name, DType::I32)?;
+        Ok(e.as_i32())
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<Vec<f32>, NbinError> {
+        let e = self.get(name)?;
+        e.check(name, DType::F32)?;
+        Ok(e.as_f32())
+    }
+
+    pub fn insert(&mut self, name: &str, e: Entry) {
+        self.entries.insert(name.to_string(), e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut n = Nbin::default();
+        n.insert("w", Entry::from_i8(vec![2, 3], &[1, -2, 3, -4, 5, -128]));
+        n.insert("b", Entry::from_i32(vec![3], &[i32::MAX, 0, i32::MIN]));
+        n.insert("s", Entry::from_f32(vec![1], &[0.5]));
+        let dir = std::env::temp_dir().join("deepaxe_nbin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nbin");
+        n.write_file(&p).unwrap();
+        let back = Nbin::read_file(&p).unwrap();
+        assert_eq!(back.get_i8("w").unwrap(), vec![1, -2, 3, -4, 5, -128]);
+        assert_eq!(back.get("w").unwrap().dims, vec![2, 3]);
+        assert_eq!(back.get_i32("b").unwrap(), vec![i32::MAX, 0, i32::MIN]);
+        assert_eq!(back.get_f32("s").unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn python_compat_bytes() {
+        // Byte dump produced by python/compile/nbin.py for
+        // {"s": np.int32 scalar-as-1d [7]} — pin cross-language layout.
+        let bytes: Vec<u8> = vec![
+            b'N', b'B', b'I', b'N', b'1', 0, 1, 0, // magic + count
+            1, 0, b's', // name
+            2, 1, // dtype i32, ndim 1
+            1, 0, 0, 0, // dim 1
+            4, 0, 0, 0, 0, 0, 0, 0, // nbytes
+            7, 0, 0, 0, // payload
+        ];
+        let n = Nbin::parse(&bytes).unwrap();
+        assert_eq!(n.get_i32("s").unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn bad_magic() {
+        assert!(matches!(Nbin::parse(b"NOPE"), Err(NbinError::Format(_))));
+    }
+
+    #[test]
+    fn truncated() {
+        let mut n = Nbin::default();
+        n.insert("x", Entry::from_i32(vec![4], &[1, 2, 3, 4]));
+        let dir = std::env::temp_dir().join("deepaxe_nbin_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nbin");
+        n.write_file(&p).unwrap();
+        let mut buf = std::fs::read(&p).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(Nbin::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn missing_and_wrong_type() {
+        let mut n = Nbin::default();
+        n.insert("x", Entry::from_i32(vec![1], &[1]));
+        assert!(matches!(n.get_i8("y"), Err(NbinError::Missing(_))));
+        assert!(matches!(n.get_i8("x"), Err(NbinError::WrongType { .. })));
+    }
+
+    #[test]
+    fn payload_dim_mismatch_detected() {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'x');
+        bytes.push(2); // i32
+        bytes.push(1); // ndim
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // dims [2] => 8 bytes
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // but claims 4
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(Nbin::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn negative_i8_bytes() {
+        let e = Entry::from_i8(vec![2], &[-1, -128]);
+        assert_eq!(e.data, vec![0xFF, 0x80]);
+        assert_eq!(e.as_i8(), vec![-1, -128]);
+    }
+}

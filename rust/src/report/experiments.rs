@@ -1,0 +1,422 @@
+//! Experiment harnesses: one function per paper table/figure (DESIGN.md §5
+//! experiment index). Each returns the rendered report and writes a CSV
+//! under `results/`.
+
+use super::table::{f2, pct, Table};
+use crate::coordinator::jobs::{run_sweep, SweepSpec};
+use crate::coordinator::Ctx;
+use crate::dse::cache::ResultCache;
+use crate::dse::{enumerate_masks, mask_from_config_string, pareto_front, Evaluator};
+use crate::faultsim::{run_campaign, CampaignParams};
+use crate::simnet::{Buffers, Engine};
+use crate::util::cli::env_usize;
+use crate::util::json::Json;
+use anyhow::{Context as _, Result};
+
+/// Paper-alias -> surrogate name.
+pub fn mult_name(alias: &str) -> &'static str {
+    match alias {
+        "kvp" | "mul8s_1KVP" | "mul8s_1kvp_s" => "mul8s_1kvp_s",
+        "kv9" | "mul8s_1KV9" | "mul8s_1kv9_s" => "mul8s_1kv9_s",
+        "kv8" | "mul8s_1KV8" | "mul8s_1kv8_s" => "mul8s_1kv8_s",
+        "exact" => "exact",
+        other => panic!("unknown multiplier alias {other:?}"),
+    }
+}
+
+fn paper_label(name: &str) -> &'static str {
+    match name {
+        "mul8s_1kvp_s" => "mul8s_1KVP",
+        "mul8s_1kv9_s" => "mul8s_1KV9",
+        "mul8s_1kv8_s" => "mul8s_1KV8",
+        "exact" => "exact",
+        _ => "(ablation)",
+    }
+}
+
+/// Default evaluator parameters (env-overridable; DESIGN.md §7).
+pub fn default_eval_images() -> usize {
+    env_usize("DEEPAXE_EVAL_IMAGES", 300)
+}
+
+pub fn evaluator<'a>(
+    ctx: &'a Ctx,
+    net: &'a crate::simnet::QNet,
+    data: &'a crate::dataset::TestSet,
+) -> Evaluator<'a> {
+    Evaluator::new(net, data, &ctx.luts, default_eval_images(), CampaignParams::default_for(&net.name))
+}
+
+// ===========================================================================
+// Table I — multipliers
+// ===========================================================================
+
+pub fn table1(ctx: &Ctx) -> Result<String> {
+    let text = std::fs::read_to_string(ctx.artifacts.join("multipliers.json"))
+        .context("reading multipliers.json")?;
+    let j = Json::parse(&text)?;
+    let mut t = Table::new(
+        "Table I: multipliers (measured surrogate vs paper EvoApprox circuit)",
+        &["circuit", "surrogate", "MAE%", "WCE%", "MRE%", "EP%", "Power(mW)", "Area(um2)", "paper MAE%/WCE%/MRE/EP"],
+    );
+    let paper = j.field("paper_table1")?;
+    for row in j.field("measured")?.as_arr().context("measured")? {
+        let name = row.field("name")?.as_str().unwrap_or("?");
+        let paper_name = row.field("paper_name")?.as_str().unwrap_or("");
+        let get = |k: &str| row.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let paper_cell = paper
+            .get(paper_name)
+            .map(|p| {
+                let g = |k: &str| p.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                format!("{}/{}/{}/{}", g("mae_pct"), g("wce_pct"), g("mre_pct"), g("ep_pct"))
+            })
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            paper_name.to_string(),
+            name.to_string(),
+            format!("{:.4}", get("mae_pct")),
+            format!("{:.4}", get("wce_pct")),
+            f2(get("mre_pct")),
+            f2(get("ep_pct")),
+            format!("{:.3}", get("power_mw")),
+            format!("{:.1}", get("area_um2")),
+            paper_cell,
+        ]);
+    }
+    t.save_csv(&ctx.results.join("table1.csv"))?;
+    Ok(t.render())
+}
+
+// ===========================================================================
+// Table II — quantized network accuracies
+// ===========================================================================
+
+pub fn table2(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Table II: 8-bit quantized network accuracy (synthetic datasets; paper used MNIST/CIFAR-10)",
+        &["network", "dataset", "quant acc % (build, full test)", "quant acc % (rust engine, subset)", "paper %"],
+    );
+    for name in ["mlp3", "lenet5", "alexnet"] {
+        let net = ctx.net(name)?;
+        let data = ctx.data_for(&net)?;
+        let eng = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        let sub = data.take(default_eval_images());
+        let rust_acc = eng.accuracy(&sub, &mut buf);
+        t.row(vec![
+            name.into(),
+            net.dataset.clone(),
+            f2(ctx.build_quant_acc(name).unwrap_or(f64::NAN) * 100.0),
+            f2(rust_acc * 100.0),
+            f2(ctx.paper_quant_acc(name).unwrap_or(f64::NAN)),
+        ]);
+    }
+    t.save_csv(&ctx.results.join("table2.csv"))?;
+    Ok(t.render())
+}
+
+// ===========================================================================
+// Table III — approximation configuration × fault injection
+// ===========================================================================
+
+/// (net, mult alias, paper config string, paper acc drop, paper FI drop,
+/// paper latency cycles, paper utilization %)
+pub const TABLE3_ROWS: &[(&str, &str, &str, f64, f64, u64, f64)] = &[
+    ("mlp3", "kvp", "111", 5.8, 7.62, 206_644, 0.72),
+    ("mlp3", "kvp", "101", 2.5, 11.62, 272_180, 0.81),
+    ("mlp3", "kv9", "101", 1.5, 12.78, 274_740, 0.87),
+    ("mlp3", "kv9", "100", 0.4, 14.03, 274_740, 0.90),
+    ("mlp3", "kv8", "001", 0.3, 14.72, 285_010, 0.95),
+    ("lenet5", "kvp", "1-1-111", 10.6, 2.82, 164_864, 6.27),
+    ("lenet5", "kvp", "1-1-011", 8.8, 4.67, 195_584, 6.51),
+    ("lenet5", "kv9", "0-1-111", 1.7, 12.70, 206_408, 7.93),
+    ("lenet5", "kv9", "0-1-101", 1.0, 13.66, 206_504, 8.19),
+    ("lenet5", "kv8", "0-1-111", 0.7, 13.23, 175_784, 9.12),
+    ("alexnet", "kvp", "0-0-11-0-011", 16.0, 9.12, 19_933_514, 11.75),
+    ("alexnet", "kvp", "0-0-11-0-100", 17.0, 10.41, 20_324_170, 11.84),
+    ("alexnet", "kvp", "0-0-00-0-001", 2.0, 11.10, 20_467_530, 12.35),
+    ("alexnet", "kv9", "0-1-11-1-111", 18.5, 9.58, 19_799_882, 11.04),
+    ("alexnet", "kv9", "0-1-11-1-110", 17.5, 11.80, 19_945_802, 11.93),
+    ("alexnet", "kv9", "0-0-00-0-001", 3.0, 12.60, 20_470_090, 12.45),
+    ("alexnet", "kv8", "1-1-11-1-110", 6.5, 10.90, 20_470_090, 12.18),
+    ("alexnet", "kv8", "0-1-11-1-111", 6.0, 11.70, 20_470_090, 12.19),
+    ("alexnet", "kv8", "0-1-11-1-110", 4.5, 12.00, 20_470_090, 12.21),
+    ("alexnet", "kv8", "0-0-11-0-011", 3.5, 12.00, 20_470_090, 12.35),
+    ("alexnet", "kv8", "0-0-11-0-100", 2.5, 12.15, 20_470_090, 12.33),
+    ("alexnet", "kv8", "0-0-00-0-001", 0.0, 12.64, 20_470_090, 12.43),
+];
+
+pub fn table3(ctx: &Ctx, nets: &[String]) -> Result<String> {
+    let mut t = Table::new(
+        "Table III: approximation config + fault injection (measured | paper)",
+        &[
+            "net", "multiplier", "config", "base acc%",
+            "acc drop pp (ours|paper)", "FI drop pp (ours|paper)",
+            "latency cyc (ours|paper)", "util % (ours|paper)",
+        ],
+    );
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+    for net_name in nets {
+        let net = ctx.net(net_name)?;
+        let data = ctx.data_for(&net)?;
+        let ev = evaluator(ctx, &net, &data);
+        for &(n, mult, cfg, p_drop, p_fi, p_lat, p_util) in
+            TABLE3_ROWS.iter().filter(|r| r.0 == net_name.as_str())
+        {
+            let mask = mask_from_config_string(cfg).map_err(anyhow::Error::msg)?;
+            let spec =
+                SweepSpec { mults: vec![mult_name(mult)], masks: vec![mask], with_fi: true };
+            let p = run_sweep(&ev, &mut cache, &spec)?.pop().context("sweep point")?;
+            t.row(vec![
+                n.into(),
+                paper_label(&p.mult).into(),
+                cfg.into(),
+                f2(p.base_acc * 100.0),
+                format!("{} | {}", pct(p.acc_drop_pct), f2(p_drop)),
+                format!("{} | {}", pct(p.fault_vuln_pct), f2(p_fi)),
+                format!("{} | {}", p.cycles, p_lat),
+                format!("{} | {}", f2(p.util_pct), f2(p_util)),
+            ]);
+        }
+    }
+    t.save_csv(&ctx.results.join("table3.csv"))?;
+    Ok(t.render())
+}
+
+// ===========================================================================
+// Table IV — full approximation of the three MLPs
+// ===========================================================================
+
+/// (net, mult alias, paper acc drop, paper vuln, paper norm latency,
+/// paper norm resource %). The paper's last row is partially illegible in
+/// the source scan; values marked by the paper's trend are used.
+pub const TABLE4_ROWS: &[(&str, &str, f64, f64, f64, f64)] = &[
+    ("mlp7", "kv8", 0.2, 2.45, 1.00, 96.0),
+    ("mlp7", "kv9", 1.4, 1.03, 1.00, 90.0),
+    ("mlp7", "kvp", 0.9, 1.33, 0.75, 76.0),
+    ("mlp5", "kv8", 0.0, 3.33, 1.00, 96.0),
+    ("mlp5", "kv9", 1.9, 2.12, 1.00, 89.0),
+    ("mlp5", "kvp", 3.1, 3.84, 0.78, 76.0),
+    ("mlp3", "kv8", 0.4, 14.14, 1.00, 95.0),
+    ("mlp3", "kv9", 4.6, 7.62, 1.00, 88.0),
+    ("mlp3", "kvp", 5.9, 9.54, 0.76, 74.0),
+];
+
+pub fn table4(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Table IV: full approximation of MLP-7/5/3 (measured | paper)",
+        &[
+            "net", "base acc%", "AxM",
+            "acc drop pp (ours|paper)", "vulnerability pp (ours|paper)",
+            "norm latency (ours|paper)", "norm resource % (ours|paper)",
+        ],
+    );
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+    for net_name in ["mlp7", "mlp5", "mlp3"] {
+        let net = ctx.net(net_name)?;
+        let data = ctx.data_for(&net)?;
+        let ev = evaluator(ctx, &net, &data);
+        let full: u64 = (1u64 << net.n_comp()) - 1;
+        // exact baseline for normalization
+        let exact_spec = SweepSpec { mults: vec!["exact"], masks: vec![0], with_fi: false };
+        let exact_pt = run_sweep(&ev, &mut cache, &exact_spec)?.pop().context("exact point")?;
+        for &(n, mult, p_drop, p_vuln, p_nlat, p_nres) in
+            TABLE4_ROWS.iter().filter(|r| r.0 == net_name)
+        {
+            let spec =
+                SweepSpec { mults: vec![mult_name(mult)], masks: vec![full], with_fi: true };
+            let p = run_sweep(&ev, &mut cache, &spec)?.pop().context("point")?;
+            t.row(vec![
+                n.into(),
+                f2(p.base_acc * 100.0),
+                paper_label(&p.mult).into(),
+                format!("{} | {}", pct(p.acc_drop_pct), f2(p_drop)),
+                format!("{} | {}", pct(p.fault_vuln_pct), f2(p_vuln)),
+                format!("{:.2} | {}", p.cycles as f64 / exact_pt.cycles as f64, f2(p_nlat)),
+                format!(
+                    "{:.0} | {}",
+                    p.util_pct / exact_pt.util_pct * 100.0,
+                    f2(p_nres)
+                ),
+            ]);
+        }
+    }
+    t.save_csv(&ctx.results.join("table4.csv"))?;
+    Ok(t.render())
+}
+
+// ===========================================================================
+// Fig. 3 — LeNet-5 Pareto frontier
+// ===========================================================================
+
+pub fn fig3(ctx: &Ctx) -> Result<String> {
+    let net = ctx.net("lenet5")?;
+    let data = ctx.data_for(&net)?;
+    let ev = evaluator(ctx, &net, &data);
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+    let spec = SweepSpec {
+        mults: vec!["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"],
+        masks: enumerate_masks(net.n_comp()),
+        with_fi: true,
+    };
+    let points = run_sweep(&ev, &mut cache, &spec)?;
+
+    // all points CSV (the Fig 3a scatter)
+    let mut all = Table::new("", &["mult", "config", "util_pct", "fi_acc_drop_pp", "acc_drop_pp", "cycles"]);
+    for p in &points {
+        all.row(vec![
+            paper_label(&p.mult).into(),
+            p.config_string.clone(),
+            f2(p.util_pct),
+            pct(p.fault_vuln_pct),
+            pct(p.acc_drop_pct),
+            p.cycles.to_string(),
+        ]);
+    }
+    all.save_csv(&ctx.results.join("fig3a_points.csv"))?;
+
+    // frontier (Fig 3b): minimize utilization and FI accuracy drop
+    let fidx = pareto_front(&points, |p| p.util_pct, |p| p.fault_vuln_pct);
+    let mut t = Table::new(
+        "Fig 3(b): LeNet-5 Pareto frontier (min utilization, min FI accuracy drop)",
+        &["FI acc drop pp", "resource util %", "AxM + configuration"],
+    );
+    for &i in &fidx {
+        let p = &points[i];
+        t.row(vec![
+            pct(p.fault_vuln_pct),
+            f2(p.util_pct),
+            format!("{} {}", paper_label(&p.mult), p.config_string),
+        ]);
+    }
+    t.save_csv(&ctx.results.join("fig3b_frontier.csv"))?;
+    Ok(format!(
+        "Fig 3(a): {} design points written to results/fig3a_points.csv\n{}",
+        points.len(),
+        t.render()
+    ))
+}
+
+// ===========================================================================
+// Fig. 4 — per-AxM impact at a fixed configuration, per network
+// ===========================================================================
+
+pub fn fig4(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Fig 4: impact of the AxM choice at full approximation (per network)",
+        &["net", "AxM", "acc drop pp", "fault vulnerability pp", "resource util %"],
+    );
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+    for net_name in ["mlp3", "lenet5", "alexnet"] {
+        let net = ctx.net(net_name)?;
+        let data = ctx.data_for(&net)?;
+        let ev = evaluator(ctx, &net, &data);
+        let full: u64 = (1u64 << net.n_comp()) - 1;
+        for mult in ["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"] {
+            let spec = SweepSpec { mults: vec![mult], masks: vec![full], with_fi: true };
+            let p = run_sweep(&ev, &mut cache, &spec)?.pop().context("point")?;
+            t.row(vec![
+                net_name.into(),
+                paper_label(mult).into(),
+                pct(p.acc_drop_pct),
+                pct(p.fault_vuln_pct),
+                f2(p.util_pct),
+            ]);
+        }
+    }
+    t.save_csv(&ctx.results.join("fig4.csv"))?;
+    Ok(t.render())
+}
+
+// ===========================================================================
+// Ablations
+// ===========================================================================
+
+/// A1: FI estimate stability vs sample size (Leveugle sizing context).
+pub fn ablation_fi_n(ctx: &Ctx) -> Result<String> {
+    let net = ctx.net("mlp3")?;
+    let data = ctx.data_for(&net)?;
+    let full: u64 = (1u64 << net.n_comp()) - 1;
+    let kvp = &ctx.luts["mul8s_1kvp_s"];
+    let luts: Vec<&crate::axmul::Lut> = (0..net.n_comp()).map(|_| kvp).collect();
+    let _ = full;
+    let engine = Engine::new(&net, luts);
+    let required = crate::faultsim::required_sample_size(&net);
+    let mut t = Table::new(
+        &format!("A1: FI estimate stability vs #faults (mlp3 full-kvp; Leveugle 95%/1% => {required})"),
+        &["n_faults", "mean FI acc %", "vulnerability pp", "95% CI halfwidth pp"],
+    );
+    for n_faults in [25usize, 50, 100, 200, 400] {
+        let params = CampaignParams {
+            n_faults,
+            n_images: env_usize("DEEPAXE_FI_IMAGES", 100),
+            seed: 0xAB1A,
+            workers: crate::util::threadpool::default_workers(),
+            sampling: crate::faultsim::SiteSampling::UniformLayer,
+            replay: true,
+        };
+        let r = run_campaign(&engine, &data, &params);
+        t.row(vec![
+            n_faults.to_string(),
+            f2(r.mean_fault_acc * 100.0),
+            f2(r.vulnerability * 100.0),
+            f2(r.ci95 * 100.0),
+        ]);
+    }
+    t.save_csv(&ctx.results.join("ablation_fi_n.csv"))?;
+    Ok(t.render())
+}
+
+/// A3: surrogate family comparison at full approximation (mlp3).
+pub fn ablation_axm(ctx: &Ctx) -> Result<String> {
+    let net = ctx.net("mlp3")?;
+    let data = ctx.data_for(&net)?;
+    let ev = evaluator(ctx, &net, &data);
+    let full: u64 = (1u64 << net.n_comp()) - 1;
+    let mut t = Table::new(
+        "A3: approximate-multiplier family ablation (mlp3, all layers approximated)",
+        &["family", "multiplier", "acc drop pp", "util %"],
+    );
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+    for m in crate::axmul::CATALOG.iter().filter(|m| m.name != "exact") {
+        let spec = SweepSpec { mults: vec![m.name], masks: vec![full], with_fi: false };
+        let p = run_sweep(&ev, &mut cache, &spec)?.pop().context("point")?;
+        t.row(vec![m.family.into(), m.name.into(), pct(p.acc_drop_pct), f2(p.util_pct)]);
+    }
+    t.save_csv(&ctx.results.join("ablation_axm.csv"))?;
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(mult_name("kvp"), "mul8s_1kvp_s");
+        assert_eq!(paper_label("mul8s_1kv8_s"), "mul8s_1KV8");
+    }
+
+    #[test]
+    fn table3_configs_parse() {
+        for &(_, _, cfg, ..) in TABLE3_ROWS {
+            assert!(mask_from_config_string(cfg).is_ok(), "{cfg}");
+        }
+    }
+
+    #[test]
+    fn table3_config_widths_match_nets() {
+        // config strings must have exactly as many 0/1 digits as the nets
+        // have computing layers (3 / 5 / 8)
+        for &(net, _, cfg, ..) in TABLE3_ROWS {
+            let digits = cfg.chars().filter(|c| *c == '0' || *c == '1').count();
+            let expect = match net {
+                "mlp3" => 3,
+                "lenet5" => 5,
+                "alexnet" => 8,
+                _ => unreachable!(),
+            };
+            assert_eq!(digits, expect, "{net} {cfg}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! report — regenerates every table and figure of the paper's evaluation
+//! (Tables I-IV, Fig. 3, Fig. 4) plus the ablations called out in
+//! DESIGN.md, printing measured values side-by-side with the paper's.
+
+pub mod experiments;
+pub mod table;
+
+pub use table::Table;

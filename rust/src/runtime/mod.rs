@@ -1,0 +1,156 @@
+//! runtime — PJRT executor for the AOT-lowered L2+L1 graphs.
+//!
+//! Loads `artifacts/<net>.hlo.txt` (HLO *text* — the interchange format
+//! that survives the jax>=0.5 / xla_extension 0.5.1 proto-id mismatch,
+//! see /opt/xla-example/README.md), compiles it once on the PJRT CPU
+//! client and executes it from rust. Python never runs here.
+//!
+//! Graph signature (fixed by `python/compile/model.py::build_lowerable`):
+//!   fn(x_q:  i8[B, C, H, W],
+//!      lut_0..lut_{L-1}:  i32[65536],     one per computing layer
+//!      mask_0..mask_{L-1}: i8[B, act...]) -> (i8[B, 10],)
+//!
+//! The multiplier LUTs and fault masks are *runtime data*: one compiled
+//! executable serves every approximation configuration and fault site.
+
+use crate::axmul::Lut;
+use crate::simnet::{FaultSite, QNet};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (TfrtCpuClient).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile a network executable. `batch` must match the batch
+    /// size the graph was lowered with (`manifest.json: lower_batch`).
+    pub fn load_net(&self, artifacts: &Path, net: &QNet, batch: usize) -> Result<NetExecutable> {
+        let path = artifacts.join(format!("{}.hlo.txt", net.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifacts path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compilation")?;
+        Ok(NetExecutable {
+            exe,
+            batch,
+            input_len: net.input_len(),
+            input_dims: {
+                let mut d = vec![batch];
+                d.extend(&net.input_shape);
+                d
+            },
+            act_shapes: (0..net.n_comp()).map(|ci| net.comp(ci).act_shape.clone()).collect(),
+        })
+    }
+}
+
+pub struct NetExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub input_len: usize,
+    input_dims: Vec<usize>,
+    act_shapes: Vec<Vec<usize>>,
+}
+
+fn i8_literal(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
+        .context("building i8 literal")
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, &bytes)
+        .context("building i32 literal")
+}
+
+impl NetExecutable {
+    pub fn n_comp(&self) -> usize {
+        self.act_shapes.len()
+    }
+
+    /// Execute one batch. `x` holds exactly `batch` images (pad on the
+    /// caller side if needed); `luts` selects the per-layer multiplier;
+    /// `fault`, if set, applies the same single-bit flip to that
+    /// activation in every image of the batch (matching the python parity
+    /// artifacts). Returns int8 logits, row-major [batch, 10].
+    pub fn run(&self, x: &[i8], luts: &[&Lut], fault: Option<FaultSite>) -> Result<Vec<i8>> {
+        ensure!(x.len() == self.batch * self.input_len, "input length mismatch");
+        ensure!(luts.len() == self.n_comp(), "one LUT per computing layer");
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + 2 * self.n_comp());
+        args.push(i8_literal(&self.input_dims, x)?);
+        for lut in luts {
+            args.push(i32_literal(&[65536], &lut.table)?);
+        }
+        for (ci, shape) in self.act_shapes.iter().enumerate() {
+            let act_len: usize = shape.iter().product();
+            let mut mask = vec![0i8; self.batch * act_len];
+            if let Some(f) = fault {
+                if f.layer == ci {
+                    ensure!(f.neuron < act_len, "fault neuron out of range");
+                    for b in 0..self.batch {
+                        mask[b * act_len + f.neuron] = (1u8 << f.bit) as i8;
+                    }
+                }
+            }
+            let mut dims = vec![self.batch];
+            dims.extend(shape);
+            args.push(i8_literal(&dims, &mask)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&args).context("PJRT execute")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        let out = lit.to_tuple1().context("unwrapping 1-tuple")?;
+        let logits = out.to_vec::<i8>().context("reading i8 logits")?;
+        ensure!(logits.len() == self.batch * 10, "logits length {}", logits.len());
+        Ok(logits)
+    }
+
+    /// Predict classes for exactly one batch of images.
+    pub fn predict(&self, x: &[i8], luts: &[&Lut], fault: Option<FaultSite>) -> Result<Vec<usize>> {
+        let logits = self.run(x, luts, fault)?;
+        Ok(logits.chunks_exact(10).map(crate::simnet::argmax_i8).collect())
+    }
+
+    /// Predict over an arbitrary number of images (last batch padded).
+    pub fn predict_all(
+        &self,
+        images: &crate::dataset::TestSet,
+        luts: &[&Lut],
+        fault: Option<FaultSite>,
+    ) -> Result<Vec<usize>> {
+        let n = images.len();
+        let il = images.image_len();
+        let mut preds = Vec::with_capacity(n);
+        let mut chunk = vec![0i8; self.batch * il];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(self.batch);
+            for b in 0..take {
+                chunk[b * il..(b + 1) * il].copy_from_slice(images.image(i + b));
+            }
+            for b in take..self.batch {
+                chunk[b * il..(b + 1) * il].fill(0); // padding rows, ignored
+            }
+            let p = self.predict(&chunk, luts, fault)?;
+            preds.extend_from_slice(&p[..take]);
+            i += take;
+        }
+        Ok(preds)
+    }
+}
+
+// PJRT round-trips against the real artifacts live in
+// rust/tests/integration_runtime.rs (they require `make artifacts`).

@@ -1,0 +1,367 @@
+//! The inference engine: per-image forward pass with per-layer multiplier
+//! LUTs and single-bit-flip fault hooks, plus the *layer-replay* fast path
+//! for fault campaigns (clean activations are computed once per image;
+//! each fault replays only the suffix of the network after its site).
+
+use super::gemm::gemm_lut_bias;
+use super::layers::{im2col, maxpool, requantize_slice, rows_to_chw};
+use super::{CompKind, Layer, QNet};
+use crate::axmul::Lut;
+
+/// A single-bit-flip fault at a computing-layer activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSite {
+    /// computing-layer index (0-based)
+    pub layer: usize,
+    /// flat neuron index within the layer's activation (C*H*W order)
+    pub neuron: usize,
+    /// bit position 0..8
+    pub bit: u8,
+}
+
+/// Scratch buffers reused across inferences (no allocation on the hot path).
+pub struct Buffers {
+    act_a: Vec<i8>,
+    act_b: Vec<i8>,
+    cols: Vec<i8>,
+    acc: Vec<i32>,
+    rows_q: Vec<i8>,
+}
+
+impl Buffers {
+    pub fn for_net(net: &QNet) -> Buffers {
+        let mut max_act = net.input_len();
+        let mut max_cols = 1;
+        let mut max_acc = 1;
+        for ci in 0..net.n_comp() {
+            let c = net.comp(ci);
+            max_act = max_act.max(c.act_len());
+            match &c.kind {
+                CompKind::Dense => {
+                    max_acc = max_acc.max(c.n_dim);
+                }
+                CompKind::Conv { out_h, out_w, .. } => {
+                    max_cols = max_cols.max(out_h * out_w * c.k_dim);
+                    max_acc = max_acc.max(out_h * out_w * c.n_dim);
+                }
+            }
+        }
+        Buffers {
+            act_a: vec![0; max_act],
+            act_b: vec![0; max_act],
+            cols: vec![0; max_cols],
+            acc: vec![0; max_acc],
+            rows_q: vec![0; max_acc],
+        }
+    }
+}
+
+/// Per-image clean activations of every computing layer (layer-replay
+/// cache for fault campaigns).
+#[derive(Debug, Clone)]
+pub struct CleanTrace {
+    /// acts[ci] = activation output of computing layer ci
+    pub acts: Vec<Vec<i8>>,
+    pub logits: Vec<i8>,
+    pub pred: usize,
+}
+
+/// An engine binds a network to one multiplier LUT per computing layer
+/// (= one approximation configuration).
+pub struct Engine<'a> {
+    pub net: &'a QNet,
+    pub luts: Vec<&'a Lut>,
+}
+
+/// First-max argmax (ties -> lowest index), matching jnp.argmax.
+pub fn argmax_i8(xs: &[i8]) -> usize {
+    let mut best = 0usize;
+    let mut bv = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(net: &'a QNet, luts: Vec<&'a Lut>) -> Engine<'a> {
+        assert_eq!(luts.len(), net.n_comp(), "one LUT per computing layer");
+        Engine { net, luts }
+    }
+
+    /// Uniform configuration: the same LUT on every layer.
+    pub fn uniform(net: &'a QNet, lut: &'a Lut) -> Engine<'a> {
+        Engine { net, luts: vec![lut; net.n_comp()] }
+    }
+
+    /// Forward one image; optional fault; returns the int8 logits.
+    pub fn forward(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> Vec<i8> {
+        self.run(image, fault, buf, None)
+    }
+
+    /// Forward and also record each computing layer's clean activation.
+    pub fn trace(&self, image: &[i8], buf: &mut Buffers) -> CleanTrace {
+        let mut acts: Vec<Vec<i8>> = Vec::with_capacity(self.net.n_comp());
+        let logits = self.run(image, None, buf, Some(&mut acts));
+        let pred = argmax_i8(&logits);
+        CleanTrace { acts, logits, pred }
+    }
+
+    /// Layer-replay: given the (faulted) activation of computing layer
+    /// `start_ci`, run only the remaining layers. Equivalent to a full
+    /// forward where layer start_ci produced `act` (proven equivalent in
+    /// tests + used by faultsim).
+    pub fn forward_from(&self, start_ci: usize, act: &[i8], buf: &mut Buffers) -> Vec<i8> {
+        let start_pos = self.net.comp_positions[start_ci];
+        let comp = self.net.comp(start_ci);
+        let mut shape: Vec<usize> = comp.act_shape.clone();
+        buf.act_a[..act.len()].copy_from_slice(act);
+        let mut ci = start_ci + 1;
+        self.run_layers(start_pos + 1, &mut shape, act.len(), &mut ci, None, buf, None)
+    }
+
+    // ---------------------------------------------------------------------
+
+    fn run(
+        &self,
+        image: &[i8],
+        fault: Option<FaultSite>,
+        buf: &mut Buffers,
+        mut collect: Option<&mut Vec<Vec<i8>>>,
+    ) -> Vec<i8> {
+        debug_assert_eq!(image.len(), self.net.input_len());
+        buf.act_a[..image.len()].copy_from_slice(image);
+        let mut shape = self.net.input_shape.clone();
+        let mut ci = 0usize;
+        self.run_layers(0, &mut shape, image.len(), &mut ci, fault, buf, collect.as_deref_mut())
+    }
+
+    /// Run layers[from..]; current activation lives in buf.act_a with
+    /// logical `shape` and `act_len` valid elements.
+    #[allow(clippy::too_many_arguments)]
+    fn run_layers(
+        &self,
+        from: usize,
+        shape: &mut Vec<usize>,
+        mut act_len: usize,
+        ci: &mut usize,
+        fault: Option<FaultSite>,
+        buf: &mut Buffers,
+        mut collect: Option<&mut Vec<Vec<i8>>>,
+    ) -> Vec<i8> {
+        for li in from..self.net.layers.len() {
+            match &self.net.layers[li] {
+                Layer::Flatten => {
+                    let n: usize = shape.iter().product();
+                    *shape = vec![n];
+                }
+                Layer::Pool { size } => {
+                    let (c, h, w) = (shape[0], shape[1], shape[2]);
+                    let (oh, ow) = maxpool(&buf.act_a[..act_len], c, h, w, *size, &mut buf.act_b);
+                    act_len = c * oh * ow;
+                    std::mem::swap(&mut buf.act_a, &mut buf.act_b);
+                    *shape = vec![c, oh, ow];
+                }
+                Layer::Comp(comp) => {
+                    let lut = self.luts[*ci];
+                    match &comp.kind {
+                        CompKind::Dense => {
+                            debug_assert_eq!(act_len, comp.k_dim);
+                            gemm_lut_bias(
+                                &buf.act_a[..act_len],
+                                &comp.w,
+                                &comp.b,
+                                lut,
+                                1,
+                                comp.k_dim,
+                                comp.n_dim,
+                                &mut buf.acc,
+                            );
+                            requantize_slice(
+                                &buf.acc[..comp.n_dim],
+                                comp.m0,
+                                comp.nshift,
+                                comp.relu,
+                                &mut buf.act_b[..comp.n_dim],
+                            );
+                            act_len = comp.n_dim;
+                        }
+                        CompKind::Conv { in_ch, ksize, stride, pad, in_h, in_w, out_h, out_w, .. } => {
+                            debug_assert_eq!(act_len, in_ch * in_h * in_w);
+                            let (oh, ow) = im2col(
+                                &buf.act_a[..act_len],
+                                *in_ch,
+                                *in_h,
+                                *in_w,
+                                *ksize,
+                                *stride,
+                                *pad,
+                                &mut buf.cols,
+                            );
+                            debug_assert_eq!((oh, ow), (*out_h, *out_w));
+                            let m = oh * ow;
+                            gemm_lut_bias(
+                                &buf.cols[..m * comp.k_dim],
+                                &comp.w,
+                                &comp.b,
+                                lut,
+                                m,
+                                comp.k_dim,
+                                comp.n_dim,
+                                &mut buf.acc,
+                            );
+                            requantize_slice(
+                                &buf.acc[..m * comp.n_dim],
+                                comp.m0,
+                                comp.nshift,
+                                comp.relu,
+                                &mut buf.rows_q[..m * comp.n_dim],
+                            );
+                            rows_to_chw(&buf.rows_q, comp.n_dim, oh, ow, &mut buf.act_b);
+                            act_len = comp.n_dim * oh * ow;
+                        }
+                    }
+                    std::mem::swap(&mut buf.act_a, &mut buf.act_b);
+                    *shape = comp.act_shape.clone();
+                    if let Some(f) = fault {
+                        if f.layer == *ci {
+                            debug_assert!(f.neuron < act_len);
+                            buf.act_a[f.neuron] =
+                                (buf.act_a[f.neuron] as u8 ^ (1u8 << f.bit)) as i8;
+                        }
+                    }
+                    if let Some(c) = collect.as_deref_mut() {
+                        c.push(buf.act_a[..act_len].to_vec());
+                    }
+                    *ci += 1;
+                }
+            }
+        }
+        buf.act_a[..act_len].to_vec()
+    }
+
+    /// Predict one image's class.
+    pub fn predict(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> usize {
+        argmax_i8(&self.forward(image, fault, buf))
+    }
+
+    /// Accuracy over a set of images.
+    pub fn accuracy(&self, images: &crate::dataset::TestSet, buf: &mut Buffers) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..images.len() {
+            if self.predict(images.image(i), None, buf) == images.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / images.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::simnet::testutil::tiny_mlp;
+    use once_cell::sync::Lazy;
+
+    static EXACT: Lazy<Lut> = Lazy::new(|| axmul::by_name("exact").unwrap().lut());
+
+    #[test]
+    fn tiny_mlp_hand_computed() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        // input [4, -4, 8, 0]
+        // l0 acc: b + x@w:
+        //  n0: 10 + 4*1 + -4*-1 + 8*2 + 0*0 = 10+4+4+16 = 34
+        //  n1: -5 + 4*2 + -4*0 + 8*-2 + 0*1 = -5+8-16 = -13
+        //  n2: 0 + 4*3 + -4*1 + 8*0 + 0*-1 = 8
+        // requant r=0.25 round-half-up: 34*0.25=8.5 -> 9; -13*0.25=-3.25 -> -3 relu-> 0; 8*0.25=2
+        // l1 acc:
+        //  n0: 0 + 9*1 + 0*2 + 2*0 = 9 ; r=0.5 -> 4.5 -> 5
+        //  n1: 1 + 9*-1 + 0*0 + 2*3 = -2 ; 0.5 -> -1
+        let logits = eng.forward(&[4, -4, 8, 0], None, &mut buf);
+        assert_eq!(logits, vec![5, -1]);
+        assert_eq!(eng.predict(&[4, -4, 8, 0], None, &mut buf), 0);
+    }
+
+    #[test]
+    fn fault_on_output_layer_flips_logit() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let base = eng.forward(&[4, -4, 8, 0], None, &mut buf);
+        let f = FaultSite { layer: 1, neuron: 1, bit: 6 };
+        let got = eng.forward(&[4, -4, 8, 0], Some(f), &mut buf);
+        assert_eq!(got[0], base[0]);
+        assert_eq!(got[1], (base[1] as u8 ^ 0x40) as i8);
+    }
+
+    #[test]
+    fn fault_on_hidden_layer_propagates() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let base = eng.forward(&[4, -4, 8, 0], None, &mut buf);
+        // flip sign bit of hidden neuron 0 (value 9 -> -119)
+        let f = FaultSite { layer: 0, neuron: 0, bit: 7 };
+        let got = eng.forward(&[4, -4, 8, 0], Some(f), &mut buf);
+        assert_ne!(got, base);
+    }
+
+    #[test]
+    fn trace_matches_forward() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace(&[4, -4, 8, 0], &mut buf);
+        assert_eq!(tr.acts.len(), 2);
+        assert_eq!(tr.acts[0], vec![9, 0, 2]);
+        assert_eq!(tr.logits, vec![5, -1]);
+        assert_eq!(tr.pred, 0);
+    }
+
+    #[test]
+    fn forward_from_equals_full_forward_with_fault() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img = [4i8, -4, 8, 0];
+        let tr = eng.trace(&img, &mut buf);
+        for layer in 0..2 {
+            for neuron in 0..net.comp(layer).act_len() {
+                for bit in [0u8, 3, 7] {
+                    let f = FaultSite { layer, neuron, bit };
+                    let full = eng.forward(&img, Some(f), &mut buf);
+                    let mut act = tr.acts[layer].clone();
+                    act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                    let replay = eng.forward_from(layer, &act, &mut buf);
+                    assert_eq!(full, replay, "layer={layer} neuron={neuron} bit={bit}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_first_max_ties() {
+        assert_eq!(argmax_i8(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax_i8(&[-3]), 0);
+        assert_eq!(argmax_i8(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn mixed_luts_differ_from_uniform() {
+        let net = tiny_mlp();
+        let kvp = axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let mut buf = Buffers::for_net(&net);
+        let img = [100i8, -100, 90, 70];
+        let exact_eng = Engine::uniform(&net, &EXACT);
+        let mixed = Engine::new(&net, vec![&kvp, &EXACT]);
+        let a = exact_eng.forward(&img, None, &mut buf);
+        let b = mixed.forward(&img, None, &mut buf);
+        assert_ne!(a, b);
+    }
+}

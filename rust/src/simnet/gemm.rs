@@ -1,0 +1,207 @@
+//! The LUT-multiplier GEMM hot path (rust twin of the Pallas kernel).
+//!
+//! `out[m][n] = sum_k lut(a[m][k], w[k][n])` with int32 accumulation.
+//! Layout: `a` row-major [M][K], `w` row-major [K][N], `out` [M][N].
+//!
+//! The inner loop walks `w[k]` and `out[m]` contiguously while the LUT row
+//! for `a[m][k]` (256 entries = 1 KiB) stays in L1 — see EXPERIMENTS.md
+//! §Perf for the optimization log.
+
+use crate::axmul::Lut;
+
+/// Accumulate-only GEMM (bias added by the caller via `gemm_bias`).
+pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    out[..m * n].fill(0);
+    let table = &lut.table[..];
+    for mi in 0..m {
+        let a_row = &a[mi * k..(mi + 1) * k];
+        let o_row = &mut out[mi * n..(mi + 1) * n];
+        let mut ki = 0;
+        // 2-wide k-unroll: two LUT rows in flight (§Perf)
+        while ki + 2 <= k {
+            let base0 = (a_row[ki] as u8 as usize) << 8;
+            let base1 = (a_row[ki + 1] as u8 as usize) << 8;
+            let lut_row0 = &table[base0..base0 + 256];
+            let lut_row1 = &table[base1..base1 + 256];
+            let w_row0 = &w[ki * n..(ki + 1) * n];
+            let w_row1 = &w[(ki + 1) * n..(ki + 2) * n];
+            for ((o, &w0), &w1) in o_row.iter_mut().zip(w_row0).zip(w_row1) {
+                *o += lut_row0[w0 as u8 as usize] + lut_row1[w1 as u8 as usize];
+            }
+            ki += 2;
+        }
+        if ki < k {
+            let base = (a_row[ki] as u8 as usize) << 8;
+            let lut_row = &table[base..base + 256];
+            let w_row = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in o_row.iter_mut().zip(w_row) {
+                *o += lut_row[wv as u8 as usize];
+            }
+        }
+    }
+}
+
+/// GEMM + bias: `out[m][n] = b[n] + sum_k lut(a[m][k], w[k][n])`.
+///
+/// §Perf: the k-loop is unrolled 2-wide so two independent LUT rows are in
+/// flight per inner iteration (hides gather latency behind the second load
+/// port); see EXPERIMENTS.md §Perf for the measured effect.
+pub fn gemm_lut_bias(
+    a: &[i8],
+    w: &[i8],
+    b: &[i32],
+    lut: &Lut,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(b.len(), n);
+    for mi in 0..m {
+        out[mi * n..(mi + 1) * n].copy_from_slice(b);
+    }
+    let table = &lut.table[..];
+    for mi in 0..m {
+        let a_row = &a[mi * k..(mi + 1) * k];
+        let o_row = &mut out[mi * n..(mi + 1) * n];
+        let mut ki = 0;
+        while ki + 4 <= k {
+            let base0 = (a_row[ki] as u8 as usize) << 8;
+            let base1 = (a_row[ki + 1] as u8 as usize) << 8;
+            let base2 = (a_row[ki + 2] as u8 as usize) << 8;
+            let base3 = (a_row[ki + 3] as u8 as usize) << 8;
+            let lut_row0 = &table[base0..base0 + 256];
+            let lut_row1 = &table[base1..base1 + 256];
+            let lut_row2 = &table[base2..base2 + 256];
+            let lut_row3 = &table[base3..base3 + 256];
+            let w_row0 = &w[ki * n..(ki + 1) * n];
+            let w_row1 = &w[(ki + 1) * n..(ki + 2) * n];
+            let w_row2 = &w[(ki + 2) * n..(ki + 3) * n];
+            let w_row3 = &w[(ki + 3) * n..(ki + 4) * n];
+            for i in 0..n {
+                o_row[i] += lut_row0[w_row0[i] as u8 as usize]
+                    + lut_row1[w_row1[i] as u8 as usize]
+                    + lut_row2[w_row2[i] as u8 as usize]
+                    + lut_row3[w_row3[i] as u8 as usize];
+            }
+            ki += 4;
+        }
+        while ki < k {
+            let base = (a_row[ki] as u8 as usize) << 8;
+            let lut_row = &table[base..base + 256];
+            let w_row = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in o_row.iter_mut().zip(w_row) {
+                *o += lut_row[wv as u8 as usize];
+            }
+            ki += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::util::proptest::{check, gen};
+
+    fn scalar_gemm(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0i64;
+                for ki in 0..k {
+                    acc += lut.mul(a[mi * k + ki], w[ki * n + ni]) as i64;
+                }
+                out[mi * n + ni] = acc as i32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_scalar_exact() {
+        let lut = axmul::by_name("exact").unwrap().lut();
+        let a: Vec<i8> = (0..6).map(|i| (i * 37 % 256) as u8 as i8).collect();
+        let w: Vec<i8> = (0..12).map(|i| (i * 91 % 256) as u8 as i8).collect();
+        let mut out = vec![0i32; 2 * 4];
+        gemm_lut(&a, &w, &lut, 2, 3, 4, &mut out);
+        assert_eq!(out, scalar_gemm(&a, &w, &lut, 2, 3, 4));
+    }
+
+    #[test]
+    fn property_matches_scalar_all_luts() {
+        let luts: Vec<_> = ["exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| axmul::by_name(n).unwrap().lut())
+            .collect();
+        check("gemm_lut == scalar", 0xDEEB, 30, |rng| {
+            let (m, k, n) = gen::dims(rng, 12, 24, 12);
+            let a = gen::i8_vec(rng, m * k);
+            let w = gen::i8_vec(rng, k * n);
+            let lut = &luts[rng.usize_below(luts.len())];
+            let mut out = vec![0i32; m * n];
+            gemm_lut(&a, &w, lut, m, k, n, &mut out);
+            assert_eq!(out, scalar_gemm(&a, &w, lut, m, k, n));
+        });
+    }
+
+    #[test]
+    fn property_bias_matches_scalar_across_unroll_boundary() {
+        // gemm_lut_bias has a 4-wide unrolled body + scalar tail; sweep k
+        // across the boundary (1..=9) and beyond.
+        let lut = axmul::by_name("mul8s_1kv9_s").unwrap().lut();
+        check("gemm_lut_bias == scalar + b", 0xB1A5, 40, |rng| {
+            let m = 1 + rng.usize_below(6);
+            let k = 1 + rng.usize_below(21); // crosses 4-unroll boundary
+            let n = 1 + rng.usize_below(10);
+            let a = gen::i8_vec(rng, m * k);
+            let w = gen::i8_vec(rng, k * n);
+            let b: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32 >> 8).collect();
+            let mut out = vec![0i32; m * n];
+            gemm_lut_bias(&a, &w, &b, &lut, m, k, n, &mut out);
+            let mut expect = scalar_gemm(&a, &w, &lut, m, k, n);
+            for mi in 0..m {
+                for ni in 0..n {
+                    expect[mi * n + ni] += b[ni];
+                }
+            }
+            assert_eq!(out, expect, "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn bias_version_adds_bias() {
+        let lut = axmul::by_name("exact").unwrap().lut();
+        let a = vec![1i8, 2, 3];
+        let w = vec![1i8, -1, 2, 0, 0, 3];
+        let b = vec![100, -100];
+        let mut out = vec![0i32; 2];
+        gemm_lut_bias(&a, &w, &b, &lut, 1, 3, 2, &mut out);
+        // row: 1*1+2*2+3*0=5, 1*-1+2*0+3*3=8
+        assert_eq!(out, vec![105, -92]);
+    }
+
+    #[test]
+    fn extreme_accumulation_no_overflow() {
+        // K=1024 of -128*-128 = 16.7M < i32::MAX
+        let lut = axmul::by_name("exact").unwrap().lut();
+        let a = vec![-128i8; 1024];
+        let w = vec![-128i8; 1024];
+        let mut out = vec![0i32; 1];
+        gemm_lut(&a, &w, &lut, 1, 1024, 1, &mut out);
+        assert_eq!(out[0], 1024 * 16384);
+    }
+
+    #[test]
+    fn out_buffer_reuse_cleared() {
+        let lut = axmul::by_name("exact").unwrap().lut();
+        let a = vec![0i8; 4];
+        let w = vec![0i8; 4];
+        let mut out = vec![777i32; 4];
+        gemm_lut(&a, &w, &lut, 2, 2, 2, &mut out);
+        assert_eq!(out, vec![0; 4]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Layer primitives shared by the engine: requantization, im2col, maxpool.
+//! Semantics are pinned to `python/compile/kernels/ref.py`.
+
+/// int32 accumulator -> int8 activation:
+/// `y = clamp_i8((acc * m0 + 2^(n-1)) >> n)`, then ReLU.
+#[inline(always)]
+pub fn requantize(acc: i32, m0: i64, nshift: u32, relu: bool) -> i8 {
+    let y = ((acc as i64) * m0 + (1i64 << (nshift - 1))) >> nshift;
+    let y = y.clamp(-128, 127) as i8;
+    if relu && y < 0 {
+        0
+    } else {
+        y
+    }
+}
+
+pub fn requantize_slice(acc: &[i32], m0: i64, nshift: u32, relu: bool, out: &mut [i8]) {
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = requantize(a, m0, nshift, relu);
+    }
+}
+
+/// im2col: input [C, H, W] -> cols [OH*OW, C*k*k] with patch index
+/// K = (ci*k + ky)*k + kx and rows ordered (oy, ox). Zero padding (exact
+/// for symmetric quantization).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cols: &mut [i8],
+) -> (usize, usize) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let kk = c * k * k;
+    debug_assert!(cols.len() >= oh * ow * kk);
+    cols[..oh * ow * kk].fill(0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &mut cols[(oy * ow + ox) * kk..(oy * ow + ox + 1) * kk];
+            for ci in 0..c {
+                let x_plane = &x[ci * h * w..(ci + 1) * h * w];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // row stays zero
+                    }
+                    let x_row = &x_plane[iy as usize * w..(iy as usize + 1) * w];
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        row[(ci * k + ky) * k + kx] = x_row[ix as usize];
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Transpose GEMM output rows (oy*ow + ox, n) into CHW activation layout
+/// [N, OH, OW] as int8 after requantization.
+pub fn rows_to_chw(
+    rows_q: &[i8],
+    n: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [i8],
+) {
+    debug_assert!(rows_q.len() >= oh * ow * n);
+    debug_assert!(out.len() >= n * oh * ow);
+    for pos in 0..oh * ow {
+        let row = &rows_q[pos * n..(pos + 1) * n];
+        for (ni, &v) in row.iter().enumerate() {
+            out[ni * oh * ow + pos] = v;
+        }
+    }
+}
+
+/// Max pooling [C, H, W] -> [C, H/size, W/size], stride = size.
+pub fn maxpool(x: &[i8], c: usize, h: usize, w: usize, size: usize, out: &mut [i8]) -> (usize, usize) {
+    let oh = h / size;
+    let ow = w / size;
+    debug_assert!(out.len() >= c * oh * ow);
+    for ci in 0..c {
+        let plane = &x[ci * h * w..(ci + 1) * h * w];
+        let out_plane = &mut out[ci * oh * ow..(ci + 1) * oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = i8::MIN;
+                for ky in 0..size {
+                    let row = &plane[(oy * size + ky) * w..(oy * size + ky) * w + w];
+                    for kx in 0..size {
+                        m = m.max(row[ox * size + kx]);
+                    }
+                }
+                out_plane[oy * ow + ox] = m;
+            }
+        }
+    }
+    (oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requantize_half() {
+        // m0/2^n = 0.5, round-half-up: matches python test_requant_rounding
+        let (m0, n) = (1i64 << 30, 31u32);
+        let vals: Vec<i8> = [-3, -2, -1, 0, 1, 2, 3]
+            .iter()
+            .map(|&a| requantize(a, m0, n, false))
+            .collect();
+        assert_eq!(vals, vec![-1, -1, 0, 0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn requantize_clamps_and_relu() {
+        let (m0, n) = (1i64 << 30, 30u32); // r = 1.0
+        assert_eq!(requantize(1000, m0, n, false), 127);
+        assert_eq!(requantize(-1000, m0, n, false), -128);
+        assert_eq!(requantize(-1000, m0, n, true), 0);
+        assert_eq!(requantize(5, m0, n, true), 5);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // k=1, stride=1, pad=0: cols == x reordered to (pos, c)
+        let x: Vec<i8> = (0..2 * 2 * 2).map(|i| i as i8).collect(); // [2,2,2]
+        let mut cols = vec![0i8; 4 * 2];
+        let (oh, ow) = im2col(&x, 2, 2, 2, 1, 1, 0, &mut cols);
+        assert_eq!((oh, ow), (2, 2));
+        // pos (0,0): c0=x[0], c1=x[4]
+        assert_eq!(&cols[0..2], &[0, 4]);
+        assert_eq!(&cols[6..8], &[3, 7]);
+    }
+
+    #[test]
+    fn im2col_padding_zeros() {
+        let x = vec![1i8; 9]; // [1,3,3] all ones
+        let mut cols = vec![9i8; 9 * 9];
+        let (oh, ow) = im2col(&x, 1, 3, 3, 3, 1, 1, &mut cols);
+        assert_eq!((oh, ow), (3, 3));
+        // corner patch (0,0): only 4 in-bounds cells = 1
+        let row = &cols[0..9];
+        assert_eq!(row.iter().filter(|&&v| v == 1).count(), 4);
+        assert_eq!(row.iter().filter(|&&v| v == 0).count(), 5);
+        // center patch fully in-bounds
+        let center = &cols[4 * 9..5 * 9];
+        assert!(center.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn im2col_stride() {
+        let x: Vec<i8> = (0..16).map(|i| i as i8).collect(); // [1,4,4]
+        let mut cols = vec![0i8; 4 * 4];
+        let (oh, ow) = im2col(&x, 1, 4, 4, 2, 2, 0, &mut cols);
+        assert_eq!((oh, ow), (2, 2));
+        // patch (0,0) = x[0,0],x[0,1],x[1,0],x[1,1] = 0,1,4,5
+        assert_eq!(&cols[0..4], &[0, 1, 4, 5]);
+        // patch (1,1) = 10,11,14,15
+        assert_eq!(&cols[12..16], &[10, 11, 14, 15]);
+    }
+
+    #[test]
+    fn rows_to_chw_layout() {
+        // oh=ow=2, n=2; rows (pos, n)
+        let rows = vec![
+            10i8, 20, // pos0
+            11, 21, // pos1
+            12, 22, // pos2
+            13, 23, // pos3
+        ];
+        let mut out = vec![0i8; 8];
+        rows_to_chw(&rows, 2, 2, 2, &mut out);
+        assert_eq!(out, vec![10, 11, 12, 13, 20, 21, 22, 23]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = vec![
+            1i8, 2, 3, 4, //
+            5, 6, 7, 8, //
+            -1, -2, -3, -4, //
+            -5, -6, -128, 127,
+        ];
+        let mut out = vec![0i8; 4];
+        let (oh, ow) = maxpool(&x, 1, 4, 4, 2, &mut out);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(out, vec![6, 8, -1, 127]);
+    }
+
+    #[test]
+    fn maxpool_multichannel() {
+        let mut x = vec![0i8; 2 * 2 * 2];
+        x[0..4].copy_from_slice(&[1, 2, 3, 4]);
+        x[4..8].copy_from_slice(&[-1, -2, -3, -4]);
+        let mut out = vec![0i8; 2];
+        maxpool(&x, 2, 2, 2, 2, &mut out);
+        assert_eq!(out, vec![4, -1]);
+    }
+}

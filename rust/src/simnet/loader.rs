@@ -1,0 +1,203 @@
+//! Artifact loader: `<net>.meta.json` + `<net>.weights.nbin` -> [`QNet`].
+
+use super::{CompKind, CompLayer, Layer, QNet};
+use crate::nbin::Nbin;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub fn load_qnet(artifacts: &Path, net: &str) -> Result<QNet> {
+    let meta_path = artifacts.join(format!("{net}.meta.json"));
+    let text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("reading {}", meta_path.display()))?;
+    let meta = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+    let weights = Nbin::read_file(artifacts.join(format!("{net}.weights.nbin")))
+        .with_context(|| format!("reading {net}.weights.nbin"))?;
+    build_qnet(&meta, &weights)
+}
+
+fn shape_vec(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|v| v.as_usize().context("expected unsigned int"))
+        .collect()
+}
+
+pub fn build_qnet(meta: &Json, weights: &Nbin) -> Result<QNet> {
+    let name = meta.field("name")?.as_str().context("name")?.to_string();
+    let dataset = meta.field("dataset")?.as_str().context("dataset")?.to_string();
+    let input_shape = shape_vec(meta.field("input_shape")?)?;
+    let input_scale = meta.field("input_scale")?.as_f64().context("input_scale")?;
+    let config_template =
+        meta.field("config_template")?.as_str().context("config_template")?.to_string();
+
+    let mut layers = Vec::new();
+    let mut comp_positions = Vec::new();
+    // track the running activation shape to resolve conv input dims
+    let mut shape = input_shape.clone();
+
+    for l in meta.field("layers")?.as_arr().context("layers")? {
+        let kind = l.field("kind")?.as_str().context("kind")?;
+        match kind {
+            "flatten" => {
+                shape = vec![shape.iter().product()];
+                layers.push(Layer::Flatten);
+            }
+            "pool" => {
+                let size = l.field("size")?.as_usize().context("pool size")?;
+                if shape.len() != 3 {
+                    bail!("pool on non-spatial shape {shape:?}");
+                }
+                shape = vec![shape[0], shape[1] / size, shape[2] / size];
+                layers.push(Layer::Pool { size });
+            }
+            "dense" | "conv" => {
+                let ci = l.field("comp_index")?.as_usize().context("comp_index")?;
+                let k_dim = l.field("k_dim")?.as_usize().context("k_dim")?;
+                let n_dim = l.field("n_dim")?.as_usize().context("n_dim")?;
+                let w = weights.get_i8(&format!("l{ci}.w"))?;
+                let b = weights.get_i32(&format!("l{ci}.b"))?;
+                if w.len() != k_dim * n_dim {
+                    bail!("layer {ci}: weight len {} != {k_dim}x{n_dim}", w.len());
+                }
+                if b.len() != n_dim {
+                    bail!("layer {ci}: bias len {} != {n_dim}", b.len());
+                }
+                let act_shape = shape_vec(l.field("act_shape")?)?;
+                let m0 = l.field("m0")?.as_i64().context("m0")?;
+                let nshift = l.field("nshift")?.as_usize().context("nshift")? as u32;
+                if nshift == 0 || nshift > 62 {
+                    bail!("layer {ci}: nshift {nshift} out of range");
+                }
+                let comp_kind = if kind == "dense" {
+                    if shape.len() != 1 || shape[0] != k_dim {
+                        bail!("dense layer {ci}: input shape {shape:?} != k_dim {k_dim}");
+                    }
+                    CompKind::Dense
+                } else {
+                    let in_ch = l.field("in_ch")?.as_usize().context("in_ch")?;
+                    let out_ch = l.field("out_ch")?.as_usize().context("out_ch")?;
+                    let ksize = l.field("ksize")?.as_usize().context("ksize")?;
+                    let stride = l.field("stride")?.as_usize().context("stride")?;
+                    let pad = l.field("pad")?.as_usize().context("pad")?;
+                    if shape.len() != 3 || shape[0] != in_ch {
+                        bail!("conv layer {ci}: input shape {shape:?} != in_ch {in_ch}");
+                    }
+                    let (in_h, in_w) = (shape[1], shape[2]);
+                    let out_h = (in_h + 2 * pad - ksize) / stride + 1;
+                    let out_w = (in_w + 2 * pad - ksize) / stride + 1;
+                    if act_shape != vec![out_ch, out_h, out_w] {
+                        bail!(
+                            "conv layer {ci}: act_shape {act_shape:?} != computed [{out_ch}, {out_h}, {out_w}]"
+                        );
+                    }
+                    if k_dim != in_ch * ksize * ksize {
+                        bail!("conv layer {ci}: k_dim {k_dim} != {in_ch}*{ksize}^2");
+                    }
+                    CompKind::Conv { in_ch, out_ch, ksize, stride, pad, in_h, in_w, out_h, out_w }
+                };
+                comp_positions.push(layers.len());
+                shape = act_shape.clone();
+                layers.push(Layer::Comp(CompLayer {
+                    kind: comp_kind,
+                    relu: l.field("relu")?.as_bool().context("relu")?,
+                    w,
+                    k_dim,
+                    n_dim,
+                    b,
+                    m0,
+                    nshift,
+                    act_shape,
+                }));
+            }
+            other => bail!("unknown layer kind {other:?}"),
+        }
+    }
+
+    let n_comp_meta = meta.field("n_comp_layers")?.as_usize().context("n_comp_layers")?;
+    if comp_positions.len() != n_comp_meta {
+        bail!("computing layer count {} != meta {}", comp_positions.len(), n_comp_meta);
+    }
+    Ok(QNet {
+        name,
+        dataset,
+        input_shape,
+        input_scale,
+        config_template,
+        layers,
+        comp_positions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbin::Entry;
+
+    fn mini_meta() -> Json {
+        Json::parse(
+            r#"{
+          "name": "m", "dataset": "d", "input_shape": [1, 2, 2],
+          "input_scale": 0.0078740157480314963, "config_template": "xx",
+          "n_comp_layers": 2,
+          "layers": [
+            {"kind": "flatten"},
+            {"kind": "dense", "comp_index": 0, "relu": true, "k_dim": 4, "n_dim": 3,
+             "m0": 1073741824, "nshift": 32, "act_shape": [3],
+             "s_in": 0.01, "s_w": 0.01, "s_out": 0.01,
+             "in_ch": 0, "out_ch": 0, "ksize": 0, "stride": 0, "pad": 0},
+            {"kind": "dense", "comp_index": 1, "relu": false, "k_dim": 3, "n_dim": 2,
+             "m0": 1073741824, "nshift": 31, "act_shape": [2],
+             "s_in": 0.01, "s_w": 0.01, "s_out": 0.01,
+             "in_ch": 0, "out_ch": 0, "ksize": 0, "stride": 0, "pad": 0}
+          ]}"#,
+        )
+        .unwrap()
+    }
+
+    fn mini_weights() -> Nbin {
+        let mut n = Nbin::default();
+        n.insert("l0.w", Entry::from_i8(vec![4, 3], &[1, 2, 3, -1, 0, 1, 2, -2, 0, 0, 1, -1]));
+        n.insert("l0.b", Entry::from_i32(vec![3], &[10, -5, 0]));
+        n.insert("l1.w", Entry::from_i8(vec![3, 2], &[1, -1, 2, 0, 0, 3]));
+        n.insert("l1.b", Entry::from_i32(vec![2], &[0, 1]));
+        n
+    }
+
+    #[test]
+    fn builds_and_matches_testutil() {
+        let net = build_qnet(&mini_meta(), &mini_weights()).unwrap();
+        assert_eq!(net.n_comp(), 2);
+        assert_eq!(net.comp(0).w, crate::simnet::testutil::tiny_mlp().comp(0).w);
+        assert_eq!(net.config_string(0b10), "01");
+        // engine runs identically to the hand-built net
+        let exact = crate::axmul::by_name("exact").unwrap().lut();
+        let eng = crate::simnet::Engine::uniform(&net, &exact);
+        let mut buf = crate::simnet::Buffers::for_net(&net);
+        assert_eq!(eng.forward(&[4, -4, 8, 0], None, &mut buf), vec![5, -1]);
+    }
+
+    #[test]
+    fn rejects_weight_shape_mismatch() {
+        let mut w = mini_weights();
+        w.insert("l0.w", Entry::from_i8(vec![2], &[1, 2]));
+        assert!(build_qnet(&mini_meta(), &w).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_nshift() {
+        let meta_text = mini_meta().to_string().replace("\"nshift\":31", "\"nshift\":99");
+        let meta = Json::parse(&meta_text).unwrap();
+        assert!(build_qnet(&meta, &mini_weights()).is_err());
+    }
+
+    #[test]
+    fn rejects_dense_shape_mismatch() {
+        let meta_text = mini_meta().to_string().replace("\"k_dim\":4", "\"k_dim\":5");
+        let meta = Json::parse(&meta_text).unwrap();
+        let mut w = mini_weights();
+        w.insert("l0.w", Entry::from_i8(vec![5, 3], &[0; 15]));
+        assert!(build_qnet(&meta, &w).is_err());
+    }
+}

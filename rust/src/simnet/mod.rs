@@ -1,0 +1,196 @@
+//! simnet — the quantized int8 inference engine.
+//!
+//! This is the analog of the paper's generated C model (the Keras-to-C
+//! step of DeepHLS): a bit-exact software model of the accelerator's
+//! integer datapath, where **every multiplication is a lookup into a
+//! multiplier LUT** (exact or approximate, per layer) and **every
+//! computing-layer output activation is a fault-injection site**.
+//!
+//! Bit-for-bit parity with the python reference (`kernels/ref.py` +
+//! `model.py`) and with the AOT-lowered PJRT executable is enforced by the
+//! `<net>.expected.nbin` artifacts and `rust/tests/integration_*.rs`.
+
+pub mod engine;
+pub mod gemm;
+pub mod layers;
+pub mod loader;
+
+pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite};
+pub use loader::load_qnet;
+
+/// Geometry + parameters of one computing layer (GEMM form).
+#[derive(Debug, Clone)]
+pub struct CompLayer {
+    pub kind: CompKind,
+    pub relu: bool,
+    /// int8 weights, row-major [k_dim][n_dim]
+    pub w: Vec<i8>,
+    pub k_dim: usize,
+    pub n_dim: usize,
+    pub b: Vec<i32>,
+    /// fixed-point requantization: y = (acc*m0 + 2^(n-1)) >> n, clamped
+    pub m0: i64,
+    pub nshift: u32,
+    /// output activation shape without batch: [N] or [C, H, W]
+    pub act_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompKind {
+    Dense,
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        /// input spatial dims (resolved at load time)
+        in_h: usize,
+        in_w: usize,
+        out_h: usize,
+        out_w: usize,
+    },
+}
+
+impl CompLayer {
+    pub fn act_len(&self) -> usize {
+        self.act_shape.iter().product()
+    }
+
+    /// Multiply-accumulate count for one inference (the HLS cost model's
+    /// primary input).
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            CompKind::Dense => (self.k_dim * self.n_dim) as u64,
+            CompKind::Conv { out_h, out_w, .. } => {
+                (out_h * out_w * self.k_dim * self.n_dim) as u64
+            }
+        }
+    }
+}
+
+/// One element of the full layer sequence.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Comp(CompLayer),
+    Pool { size: usize },
+    Flatten,
+}
+
+/// A loaded quantized network.
+#[derive(Debug, Clone)]
+pub struct QNet {
+    pub name: String,
+    pub dataset: String,
+    /// [C, H, W]
+    pub input_shape: Vec<usize>,
+    pub input_scale: f64,
+    pub config_template: String,
+    pub layers: Vec<Layer>,
+    /// indices into `layers` of the computing layers
+    pub comp_positions: Vec<usize>,
+}
+
+impl QNet {
+    pub fn n_comp(&self) -> usize {
+        self.comp_positions.len()
+    }
+
+    pub fn comp(&self, ci: usize) -> &CompLayer {
+        match &self.layers[self.comp_positions[ci]] {
+            Layer::Comp(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> u64 {
+        (0..self.n_comp()).map(|ci| self.comp(ci).macs()).sum()
+    }
+
+    /// Total neurons (= activation elements = fault sites per bit).
+    pub fn total_neurons(&self) -> u64 {
+        (0..self.n_comp()).map(|ci| self.comp(ci).act_len() as u64).sum()
+    }
+
+    /// Paper-style configuration string for a per-layer approximation mask,
+    /// e.g. mask 0b101 on lenet5 -> "1-0-1 00" style "1-0-100".
+    pub fn config_string(&self, mask: u64) -> String {
+        let mut out = String::new();
+        let mut ci = 0;
+        for l in &self.layers {
+            match l {
+                Layer::Comp(_) => {
+                    out.push(if mask >> ci & 1 == 1 { '1' } else { '0' });
+                    ci += 1;
+                }
+                Layer::Pool { .. } => out.push('-'),
+                Layer::Flatten => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+
+    /// Hand-built tiny dense net for unit tests: 4 -> 3 -> 2, ReLU between.
+    pub fn tiny_mlp() -> QNet {
+        let l0 = CompLayer {
+            kind: CompKind::Dense,
+            relu: true,
+            w: vec![
+                1, 2, 3, // k=0
+                -1, 0, 1, // k=1
+                2, -2, 0, // k=2
+                0, 1, -1, // k=3
+            ],
+            k_dim: 4,
+            n_dim: 3,
+            b: vec![10, -5, 0],
+            m0: 1 << 30,
+            nshift: 32, // r = 0.25
+            act_shape: vec![3],
+        };
+        let l1 = CompLayer {
+            kind: CompKind::Dense,
+            relu: false,
+            w: vec![1, -1, 2, 0, 0, 3],
+            k_dim: 3,
+            n_dim: 2,
+            b: vec![0, 1],
+            m0: 1 << 30,
+            nshift: 31, // r = 0.5
+            act_shape: vec![2],
+        };
+        QNet {
+            name: "tiny".into(),
+            dataset: "none".into(),
+            input_shape: vec![1, 2, 2],
+            input_scale: 1.0 / 127.0,
+            config_template: "xx".into(),
+            layers: vec![Layer::Flatten, Layer::Comp(l0), Layer::Comp(l1)],
+            comp_positions: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn config_string_shapes() {
+        let net = tiny_mlp();
+        assert_eq!(net.config_string(0b11), "11");
+        assert_eq!(net.config_string(0b01), "10"); // layer order left-to-right
+    }
+
+    #[test]
+    fn macs_counts() {
+        let net = tiny_mlp();
+        assert_eq!(net.total_macs(), (4 * 3 + 3 * 2) as u64);
+        assert_eq!(net.total_neurons(), 5);
+    }
+}

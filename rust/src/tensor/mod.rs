@@ -1,0 +1,141 @@
+//! Minimal dense tensors for the integer inference engine.
+//!
+//! `simnet` needs exactly two element types (i8 activations/weights, i32
+//! accumulators/biases) and contiguous C-order storage; this module keeps
+//! that small rather than pulling in a full ndarray.
+
+/// Dense C-order tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor<T> {
+    pub dims: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+pub type TensorI8 = Tensor<i8>;
+pub type TensorI32 = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "dims {:?} vs data len {}",
+            dims,
+            data.len()
+        );
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Row-major flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.dims).enumerate() {
+            debug_assert!(x < d, "index {idx:?} out of bounds {:?} at axis {i}", self.dims);
+            off = off * d + x;
+        }
+        off
+    }
+
+    pub fn get(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+}
+
+impl TensorI8 {
+    /// Flip bit `bit` of element `flat` in place (the fault model's
+    /// primitive operation).
+    pub fn flip_bit(&mut self, flat: usize, bit: u8) {
+        debug_assert!(bit < 8);
+        self.data[flat] = (self.data[flat] as u8 ^ (1u8 << bit)) as i8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: TensorI32 = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.ndim(), 3);
+        assert!(t.data.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn offsets_row_major() {
+        let t: TensorI8 = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn get_set() {
+        let mut t: TensorI32 = Tensor::zeros(&[3, 3]);
+        t.set(&[1, 2], 42);
+        assert_eq!(t.get(&[1, 2]), 42);
+        assert_eq!(t.data[5], 42);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1i8, 2, 3, 4, 5, 6]);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.get(&[2, 1]), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch() {
+        Tensor::from_vec(&[2, 2], vec![1i8, 2, 3]);
+    }
+
+    #[test]
+    fn flip_bit_involution() {
+        let mut t = Tensor::from_vec(&[4], vec![0i8, -1, 64, -128]);
+        let orig = t.data.clone();
+        for flat in 0..4 {
+            for bit in 0..8 {
+                t.flip_bit(flat, bit);
+                t.flip_bit(flat, bit);
+            }
+        }
+        assert_eq!(t.data, orig);
+        t.flip_bit(0, 7);
+        assert_eq!(t.data[0], -128);
+        t.flip_bit(1, 0);
+        assert_eq!(t.data[1], -2);
+    }
+}

@@ -1,0 +1,111 @@
+//! Micro-bench harness (criterion stand-in) used by `rust/benches/*`
+//! (`harness = false`). Warmup, timed iterations, mean/std/min reporting,
+//! and a black_box to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<4} mean={} std={} min={}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs (env `DEEPAXE_BENCH_ITERS`
+/// overrides `iters` for quick smoke runs).
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    let iters = super::cli::env_usize("DEEPAXE_BENCH_ITERS", iters as usize).max(1) as u32;
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let s = super::stats::summarize(&times);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean,
+        std_s: s.std,
+        min_s: s.min,
+    };
+    r.report();
+    r
+}
+
+/// One-shot timing for end-to-end harnesses where a single run is already
+/// minutes long.
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("timing {name:<40} {}", fmt_time(dt));
+    (out, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench("noop", 1, 5, || {
+            count += 1;
+            black_box(count);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_s >= 0.0);
+        assert!(count >= 6);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once("t", || 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

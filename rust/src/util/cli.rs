@@ -1,0 +1,178 @@
+//! CLI argument parsing (clap stand-in): subcommand + `--key value` /
+//! `--key=value` flags + positionals, with typed accessors and `--help`
+//! text assembled by the caller.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{flag}: {value:?} ({expect})")]
+    BadValue { flag: String, value: String, expect: &'static str },
+}
+
+/// `spec` lists flags that take a value; `switch_spec` lists boolean
+/// switches. Anything else starting with `--` is an error.
+pub fn parse(
+    argv: &[String],
+    spec: &[&str],
+    switch_spec: &[&str],
+) -> Result<Args, CliError> {
+    let mut out = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(rest) = a.strip_prefix("--") {
+            let (key, inline_val) = match rest.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (rest.to_string(), None),
+            };
+            if switch_spec.contains(&key.as_str()) {
+                out.switches.push(key);
+            } else if spec.contains(&key.as_str()) {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => it.next().cloned().ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                };
+                out.flags.insert(key, val);
+            } else {
+                return Err(CliError::UnknownFlag(key));
+            }
+        } else if out.subcommand.is_none() && out.positional.is_empty() {
+            out.subcommand = Some(a.clone());
+        } else {
+            out.positional.push(a.clone());
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: key.into(),
+                value: v.into(),
+                expect: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: key.into(),
+                value: v.into(),
+                expect: "unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: key.into(),
+                value: v.into(),
+                expect: "float",
+            }),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Environment override helper: `DEEPAXE_<NAME>` beats the default.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&sv(&["exp", "table3", "--nets", "mlp3,lenet5", "--faults=50"]),
+                      &["nets", "faults"], &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.get("nets"), Some("mlp3,lenet5"));
+        assert_eq!(a.get_usize("faults", 0).unwrap(), 50);
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&sv(&["run", "--verbose"]), &[], &["verbose"]).unwrap();
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(parse(&sv(&["--wat"]), &[], &[]), Err(CliError::UnknownFlag(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            parse(&sv(&["--n"]), &["n"], &[]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_typed() {
+        let a = parse(&sv(&["--n", "abc"]), &["n"], &[]).unwrap();
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&sv(&["--nets", "a,b,c"]), &["nets"], &[]).unwrap();
+        assert_eq!(a.get_list("nets", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&sv(&[]), &["k"], &[]).unwrap();
+        assert_eq!(a.get_or("k", "dflt"), "dflt");
+        assert_eq!(a.get_f64("k", 2.5).unwrap(), 2.5);
+    }
+}

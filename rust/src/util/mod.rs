@@ -1,0 +1,15 @@
+//! Infrastructure substrates.
+//!
+//! The offline build image vendors only the `xla` crate's dependency
+//! closure (no serde/clap/tokio/rayon/criterion/proptest), so the small
+//! pieces of infrastructure a framework needs are implemented here and
+//! unit-tested like everything else (DESIGN.md S13).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod progress;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,110 @@
+//! Progress reporting for long campaigns: rate + ETA lines on stderr,
+//! throttled, safe to share across worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+pub struct Progress {
+    label: String,
+    total: u64,
+    done: AtomicU64,
+    started: Instant,
+    last_print: AtomicU64, // ms since start
+    quiet: bool,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: u64) -> Self {
+        Progress {
+            label: label.to_string(),
+            total,
+            done: AtomicU64::new(0),
+            started: Instant::now(),
+            last_print: AtomicU64::new(0),
+            quiet: std::env::var("DEEPAXE_QUIET").is_ok(),
+        }
+    }
+
+    /// Record `n` completed units; prints at most ~once per second.
+    pub fn add(&self, n: u64) {
+        let done = self.done.fetch_add(n, Ordering::Relaxed) + n;
+        if self.quiet {
+            return;
+        }
+        let elapsed_ms = self.started.elapsed().as_millis() as u64;
+        let last = self.last_print.load(Ordering::Relaxed);
+        if elapsed_ms.saturating_sub(last) < 1000 && done < self.total {
+            return;
+        }
+        if self
+            .last_print
+            .compare_exchange(last, elapsed_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        let secs = elapsed_ms as f64 / 1000.0;
+        let rate = if secs > 0.0 { done as f64 / secs } else { 0.0 };
+        let eta = if rate > 0.0 && done < self.total {
+            (self.total - done) as f64 / rate
+        } else {
+            0.0
+        };
+        eprintln!(
+            "[{}] {}/{} ({:.1}%) {:.1}/s eta {:.0}s",
+            self.label,
+            done,
+            self.total,
+            done as f64 / self.total.max(1) as f64 * 100.0,
+            rate,
+            eta
+        );
+    }
+
+    pub fn done_count(&self) -> u64 {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    pub fn finish(&self) {
+        if !self.quiet {
+            eprintln!(
+                "[{}] complete: {} items in {:.1}s",
+                self.label,
+                self.done_count(),
+                self.started.elapsed().as_secs_f64()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let p = Progress::new("t", 100);
+        p.add(30);
+        p.add(70);
+        assert_eq!(p.done_count(), 100);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let p = std::sync::Arc::new(Progress::new("t", 1000));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        p.add(1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(p.done_count(), 1000);
+    }
+}

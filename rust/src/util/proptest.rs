@@ -1,0 +1,68 @@
+//! Mini property-testing framework (proptest stand-in, DESIGN.md S13).
+//!
+//! `check` runs a property over `cases` seeded inputs; on failure it
+//! reports the failing seed so the case can be replayed exactly. Shrinking
+//! is by seed replay rather than structural shrinking — adequate for the
+//! coordinator invariants it guards (routing/batching/pareto/quantization).
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `cases` derived RNG streams; panics with the failing
+/// case index + seed on the first violation.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(p) = result {
+            eprintln!(
+                "property {name:?} failed at case {case}/{cases} (replay seed: {case_seed:#x})"
+            );
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use super::Rng;
+
+    pub fn i8_vec(rng: &mut Rng, len: usize) -> Vec<i8> {
+        (0..len).map(|_| rng.i8()).collect()
+    }
+
+    pub fn dims(rng: &mut Rng, max_m: usize, max_k: usize, max_n: usize) -> (usize, usize, usize) {
+        (
+            1 + rng.usize_below(max_m),
+            1 + rng.usize_below(max_k),
+            1 + rng.usize_below(max_n),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_quietly() {
+        check("tautology", 1, 50, |rng| {
+            let v = rng.below(100);
+            assert!(v < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("false", 1, 10, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn gen_shapes() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = gen::dims(&mut rng, 10, 20, 30);
+        assert!((1..=10).contains(&m) && (1..=20).contains(&k) && (1..=30).contains(&n));
+        assert_eq!(gen::i8_vec(&mut rng, 17).len(), 17);
+    }
+}

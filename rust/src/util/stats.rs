@@ -1,0 +1,118 @@
+//! Small statistics toolkit: summary stats, confidence intervals, and the
+//! Leveugle et al. (DATE'09) statistical fault-injection sample size used
+//! by the paper's pre-analysis step.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty slice");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary { n, mean, std: var.sqrt(), min, max }
+}
+
+/// p-th percentile (0..=100), linear interpolation on sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Half-width of the 95% CI of a mean (normal approximation).
+pub fn ci95_halfwidth(s: &Summary) -> f64 {
+    if s.n < 2 {
+        return f64::INFINITY;
+    }
+    1.959964 * s.std / (s.n as f64).sqrt()
+}
+
+/// Leveugle et al. statistical FI sample size:
+///   n = N / (1 + e^2 (N-1) / (t^2 p(1-p)))
+/// with population N (total fault sites), error margin e, confidence
+/// z-score t, fault-activation prior p (0.5 = worst case).
+pub fn leveugle_sample_size(population: u64, e: f64, t: f64, p: f64) -> u64 {
+    let nf = population as f64;
+    let denom = 1.0 + e * e * (nf - 1.0) / (t * t * p * (1.0 - p));
+    (nf / denom).ceil() as u64
+}
+
+/// The paper's setting: 95% confidence (t=1.96), 1% margin, p=0.5.
+pub fn paper_sample_size(population: u64) -> u64 {
+    leveugle_sample_size(population, 0.01, 1.959964, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - 1.2909944).abs() < 1e-6);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert!(ci95_halfwidth(&s).is_infinite());
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 30.0);
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leveugle_known_values() {
+        // For very large populations the 95%/1%/p=0.5 size approaches
+        // t^2 p(1-p)/e^2 ≈ 9604.
+        let n = paper_sample_size(100_000_000);
+        assert!((9500..9700).contains(&n), "{n}");
+        // Small populations need nearly exhaustive sampling.
+        assert!(paper_sample_size(100) >= 98);
+    }
+
+    #[test]
+    fn leveugle_monotone_in_population() {
+        let a = paper_sample_size(10_000);
+        let b = paper_sample_size(100_000);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn leveugle_looser_margin_needs_fewer() {
+        let tight = leveugle_sample_size(1_000_000, 0.01, 1.96, 0.5);
+        let loose = leveugle_sample_size(1_000_000, 0.05, 1.96, 0.5);
+        assert!(loose < tight);
+    }
+}

@@ -1,0 +1,135 @@
+//! Worker thread pool (rayon stand-in).
+//!
+//! The paper's framework parallelizes fault-simulation across cores ("To
+//! speed up the simulation process, DeepAxe supports multi-thread
+//! parallelism"); this pool is the substrate for that feature. Work items
+//! are indexed closures; results come back in submission order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` closures across `workers` OS threads; returns results in job
+/// order. Panics in jobs are propagated (the pool shuts down first).
+pub fn run_jobs<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let workers = workers.max(1).min(jobs.len().max(1));
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let njobs = jobs.len();
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<(usize, F)>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let item = queue.lock().unwrap().pop();
+            match item {
+                None => break,
+                Some((idx, job)) => {
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    if tx.send((idx, res)).is_err() {
+                        break;
+                    }
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<T>> = (0..njobs).map(|_| None).collect();
+    let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for (idx, res) in rx {
+        match res {
+            Ok(v) => slots[idx] = Some(v),
+            Err(p) => panic = Some(p),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
+    }
+    slots.into_iter().map(|s| s.expect("job result missing")).collect()
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn par_map<I, T, F>(workers: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(I) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let jobs: Vec<_> = items
+        .into_iter()
+        .map(|item| {
+            let f = Arc::clone(&f);
+            move || f(item)
+        })
+        .collect();
+    run_jobs(workers, jobs)
+}
+
+/// Default worker count: `DEEPAXE_WORKERS` env or available parallelism.
+pub fn default_workers() -> usize {
+    super::cli::env_usize(
+        "DEEPAXE_WORKERS",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_order() {
+        let jobs: Vec<_> = (0..37).map(|i| move || i * 2).collect();
+        assert_eq!(run_jobs(4, jobs), (0..37).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        assert_eq!(run_jobs(1, jobs), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn par_map_order() {
+        let out = par_map(3, (0..100).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(run_jobs(4, jobs).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panic_propagates() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        run_jobs(2, jobs);
+    }
+
+    #[test]
+    fn heavier_than_workers() {
+        let out = par_map(2, (0..500).collect::<Vec<u32>>(), |x| x % 7);
+        assert_eq!(out.len(), 500);
+        assert_eq!(out[499], 499 % 7);
+    }
+}

@@ -1,0 +1,25 @@
+//! Shared helpers for integration tests (require `make artifacts`).
+#![allow(dead_code)] // not every test binary uses every helper
+
+use deepaxe::coordinator::Ctx;
+use std::path::PathBuf;
+
+/// Artifacts dir for tests: CARGO_MANIFEST_DIR/artifacts.
+pub fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn ensure_artifacts() {
+    let a = artifacts();
+    assert!(
+        a.join("manifest.json").exists(),
+        "artifacts missing at {} — run `make artifacts` first",
+        a.display()
+    );
+    std::env::set_var("DEEPAXE_ARTIFACTS", a.to_str().unwrap());
+}
+
+pub fn ctx() -> Ctx {
+    ensure_artifacts();
+    Ctx::load().expect("loading context")
+}

@@ -1,0 +1,70 @@
+//! End-to-end CLI tests: run the `repro` binary against the artifacts.
+
+mod common;
+
+use std::process::Command;
+
+fn repro(args: &[&str]) -> std::process::Output {
+    common::ensure_artifacts();
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .env("DEEPAXE_ARTIFACTS", common::artifacts())
+        .env("DEEPAXE_QUIET", "1")
+        .output()
+        .expect("spawning repro")
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = repro(&["--help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("pipeline"));
+}
+
+#[test]
+fn info_lists_model_zoo() {
+    let out = repro(&["info"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for net in ["mlp3", "mlp5", "mlp7", "lenet5", "alexnet"] {
+        assert!(text.contains(net), "missing {net}: {text}");
+    }
+}
+
+#[test]
+fn faults_prints_leveugle_sizing() {
+    let out = repro(&["faults"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Leveugle"));
+    assert!(text.contains("mlp3"));
+}
+
+#[test]
+fn eval_single_config() {
+    let out = repro(&[
+        "eval", "--net", "mlp3", "--mult", "kvp", "--config", "101",
+        "--fi", "--faults", "6", "--images", "12", "--eval-images", "40",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("acc drop pp"));
+    assert!(text.contains("utilization %"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = repro(&["wat"]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn exp_table1_runs() {
+    let out = repro(&["exp", "table1"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mul8s_1KVP"));
+    assert!(text.contains("Table I"));
+}

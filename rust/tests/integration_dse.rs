@@ -1,0 +1,164 @@
+//! DSE orchestration on the real artifacts: evaluator, sweep + cache,
+//! pipeline, and the paper's qualitative trends.
+
+mod common;
+
+use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
+use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
+use deepaxe::dse::cache::ResultCache;
+use deepaxe::dse::{enumerate_masks, pareto_front, Evaluator};
+use deepaxe::faultsim::{CampaignParams, SiteSampling};
+
+#[test]
+fn evaluator_trends_mlp3() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let fi = CampaignParams {
+        n_faults: 16,
+        n_images: 24,
+        seed: 7,
+        workers: 2,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+    };
+    let ev = Evaluator::new(&net, &data, &ctx.luts, 500, fi);
+    // exact config: no accuracy drop by definition
+    let exact = ev.evaluate("exact", 0, false);
+    assert!(exact.acc_drop_pct.abs() < 1e-9);
+    // full kvp approximation drops more than (or equal to) full kv8, up to
+    // subset noise (approximation can even help slightly on easy subsets)
+    let kvp = ev.evaluate("mul8s_1kvp_s", 0b111, false);
+    let kv8 = ev.evaluate("mul8s_1kv8_s", 0b111, false);
+    assert!(kvp.acc_drop_pct >= kv8.acc_drop_pct - 1.0, "kvp {} kv8 {}", kvp.acc_drop_pct, kv8.acc_drop_pct);
+    assert!(kvp.acc_drop_pct.abs() < 30.0 && kv8.acc_drop_pct.abs() < 30.0);
+    // hardware: full approximation cheaper than exact
+    assert!(kvp.cycles < exact.cycles);
+    assert!(kvp.util_pct < exact.util_pct);
+}
+
+#[test]
+fn sweep_cache_roundtrip() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let fi = CampaignParams {
+        n_faults: 8,
+        n_images: 16,
+        seed: 9,
+        workers: 1,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+    };
+    let ev = Evaluator::new(&net, &data, &ctx.luts, 64, fi);
+    let dir = std::env::temp_dir().join(format!("deepaxe_dse_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_path = dir.join("results.jsonl");
+    let _ = std::fs::remove_file(&cache_path);
+
+    let spec = SweepSpec {
+        mults: vec!["mul8s_1kvp_s", "mul8s_1kv8_s"],
+        masks: enumerate_masks(net.n_comp()),
+        with_fi: false,
+    };
+    let mut cache = ResultCache::open(&cache_path);
+    let t0 = std::time::Instant::now();
+    let pts = run_sweep(&ev, &mut cache, &spec).unwrap();
+    let cold = t0.elapsed();
+    assert_eq!(pts.len(), spec.n_points());
+
+    // second run: everything from cache (a fresh cache object re-reads the
+    // file, proving persistence), and much faster
+    let mut cache2 = ResultCache::open(&cache_path);
+    assert_eq!(cache2.len(), pts.len());
+    let t1 = std::time::Instant::now();
+    let pts2 = run_sweep(&ev, &mut cache2, &spec).unwrap();
+    let warm = t1.elapsed();
+    assert_eq!(pts.len(), pts2.len());
+    for (a, b) in pts.iter().zip(&pts2) {
+        // NaN-tolerant comparison (FI fields are NaN when FI is skipped)
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+    assert!(warm < cold, "warm {warm:?} !< cold {cold:?}");
+}
+
+#[test]
+fn pareto_front_on_real_sweep() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let fi = CampaignParams {
+        n_faults: 8,
+        n_images: 16,
+        seed: 9,
+        workers: 1,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+    };
+    let ev = Evaluator::new(&net, &data, &ctx.luts, 100, fi);
+    let pts: Vec<_> = enumerate_masks(3)
+        .into_iter()
+        .map(|m| ev.evaluate("mul8s_1kvp_s", m, false))
+        .collect();
+    let front = pareto_front(&pts, |p| p.util_pct, |p| p.acc_drop_pct);
+    assert!(!front.is_empty());
+    // the fully-approximated config has minimal utilization, so it must be
+    // on the frontier
+    let full_idx = pts.iter().position(|p| p.mask == 0b111).unwrap();
+    assert!(front.contains(&full_idx));
+}
+
+#[test]
+fn pipeline_selects_feasible_design() {
+    let ctx = common::ctx();
+    let spec = PipelineSpec {
+        net: "mlp3".into(),
+        mults: vec!["mul8s_1kvp_s".into(), "mul8s_1kv8_s".into()],
+        max_acc_drop_pct: 50.0,
+        max_vuln_pct: 100.0,
+        eval_images: 64,
+        fi: CampaignParams {
+            n_faults: 8,
+            n_images: 16,
+            seed: 11,
+            workers: 1,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+        },
+    };
+    let out = run_pipeline(&ctx, &spec).unwrap();
+    assert_eq!(out.accuracy_sweep.len(), 2 * 7 + 1); // 2 mults x 7 nonzero masks + exact
+    assert!(!out.fi_points.is_empty());
+    let sel = out.selected.expect("a design must be selected under loose constraints");
+    // selected point is utilization-minimal among feasible
+    for p in &out.feasible {
+        assert!(sel.util_pct <= p.util_pct + 1e-12);
+    }
+    // Leveugle sizing is bounded by the fault population and substantial
+    let net = ctx.net("mlp3").unwrap();
+    let population = deepaxe::faultsim::fault_population(&net);
+    assert!(out.required_faults > population / 2 && out.required_faults <= population);
+}
+
+#[test]
+fn pipeline_infeasible_requirements() {
+    let ctx = common::ctx();
+    let spec = PipelineSpec {
+        net: "mlp3".into(),
+        mults: vec!["mul8s_1kvp_s".into()],
+        max_acc_drop_pct: -1000.0, // impossible (drop is bounded by [-100, 100])
+        max_vuln_pct: 0.0,
+        eval_images: 32,
+        fi: CampaignParams {
+            n_faults: 4,
+            n_images: 8,
+            seed: 11,
+            workers: 1,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+        },
+    };
+    let out = run_pipeline(&ctx, &spec).unwrap();
+    assert!(out.fi_points.is_empty());
+    assert!(out.selected.is_none());
+}

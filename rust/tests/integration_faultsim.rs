@@ -1,0 +1,85 @@
+//! Fault campaigns on the real artifacts.
+
+mod common;
+
+use deepaxe::faultsim::{run_campaign, CampaignParams, SiteSampling};
+use deepaxe::simnet::Engine;
+
+fn params(n_faults: usize, n_images: usize, replay: bool) -> CampaignParams {
+    CampaignParams {
+        n_faults,
+        n_images,
+        seed: 0x5EED,
+        workers: 2,
+        sampling: SiteSampling::UniformLayer,
+        replay,
+    }
+}
+
+#[test]
+fn replay_equals_naive_on_real_net() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let fast = run_campaign(&engine, &data, &params(24, 20, true));
+    let slow = run_campaign(&engine, &data, &params(24, 20, false));
+    assert_eq!(fast.acc_per_fault, slow.acc_per_fault);
+    assert_eq!(fast.base_acc, slow.base_acc);
+}
+
+#[test]
+fn campaign_metrics_sane() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let r = run_campaign(&engine, &data, &params(60, 60, true));
+    assert!(r.base_acc > 0.6, "base acc {}", r.base_acc);
+    // faults can only hurt on average (masking can help individual images,
+    // but the mean over random single-bit flips must not *gain* much)
+    assert!(r.mean_fault_acc <= r.base_acc + 0.02);
+    assert!(r.vulnerability > -0.02);
+    assert_eq!(r.acc_per_fault.len(), 60);
+    assert!(r.ci95 > 0.0 && r.ci95 < 0.2);
+}
+
+#[test]
+fn high_bits_hurt_more_than_low_bits() {
+    // Flipping bit 7 (sign) of a mid-network activation should be at least
+    // as damaging on average as flipping bit 0.
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap().take(80);
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let mut buf = deepaxe::simnet::Buffers::for_net(&net);
+    let mut acc = [0.0f64; 2];
+    for (bi, bit) in [0u8, 7].iter().enumerate() {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for neuron in [0usize, 7, 19, 31, 44, 63] {
+            let site = deepaxe::simnet::FaultSite { layer: 0, neuron, bit: *bit };
+            for i in 0..data.len() {
+                if engine.predict(data.image(i), Some(site), &mut buf)
+                    == data.labels[i] as usize
+                {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        acc[bi] = correct as f64 / total as f64;
+    }
+    assert!(acc[1] <= acc[0] + 0.01, "bit7 acc {} vs bit0 acc {}", acc[1], acc[0]);
+}
+
+#[test]
+fn approximated_network_campaign_runs() {
+    let ctx = common::ctx();
+    let net = ctx.net("lenet5").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["mul8s_1kvp_s"]);
+    let r = run_campaign(&engine, &data, &params(30, 30, true));
+    assert!(r.base_acc > 0.5);
+    assert!(r.mean_fault_acc > 0.0 && r.mean_fault_acc <= 1.0);
+}

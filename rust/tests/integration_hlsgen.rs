@@ -1,0 +1,141 @@
+//! HLS C-emission integration test: generate C for a real configuration,
+//! compile it with the host C compiler, and pin its predictions to the
+//! rust engine image-for-image (the generated accelerator model is
+//! bit-exact with the rest of the stack).
+
+mod common;
+
+use deepaxe::coordinator::hlsgen::generate_c;
+use deepaxe::simnet::{Buffers, Engine};
+use std::io::Write;
+use std::process::Command;
+
+#[test]
+fn generated_c_matches_engine_mlp3() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let config = ["mul8s_1kvp_s", "exact", "mul8s_1kv8_s"];
+    let c_src = generate_c(&net, &config, &ctx.luts);
+
+    let dir = std::env::temp_dir().join(format!("deepaxe_hls_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("accel.c"), &c_src).unwrap();
+
+    // driver: read raw int8 images from stdin, print predictions
+    let n = 32usize;
+    let il = net.input_len();
+    let driver = format!(
+        "#include <stdio.h>\n#include <stdint.h>\n\
+         int deepaxe_infer(const int8_t *image);\n\
+         int main(void) {{\n\
+           static int8_t img[{il}];\n\
+           for (int i = 0; i < {n}; i++) {{\n\
+             if (fread(img, 1, {il}, stdin) != {il}) return 1;\n\
+             printf(\"%d\\n\", deepaxe_infer(img));\n\
+           }}\n\
+           return 0;\n\
+         }}\n"
+    );
+    std::fs::write(dir.join("driver.c"), driver).unwrap();
+
+    let cc = std::env::var("CC").unwrap_or_else(|_| "cc".into());
+    let status = Command::new(&cc)
+        .args(["-O2", "-o"])
+        .arg(dir.join("accel"))
+        .arg(dir.join("accel.c"))
+        .arg(dir.join("driver.c"))
+        .status()
+        .expect("spawning cc");
+    assert!(status.success(), "C compilation failed");
+
+    // run the compiled accelerator model on the first n test images
+    let mut child = Command::new(dir.join("accel"))
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        for i in 0..n {
+            let bytes: Vec<u8> = data.image(i).iter().map(|&v| v as u8).collect();
+            stdin.write_all(&bytes).unwrap();
+        }
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let c_preds: Vec<usize> = String::from_utf8(out.stdout)
+        .unwrap()
+        .lines()
+        .map(|l| l.trim().parse().unwrap())
+        .collect();
+    assert_eq!(c_preds.len(), n);
+
+    // rust engine with the same mixed configuration
+    let luts = vec![
+        &ctx.luts["mul8s_1kvp_s"],
+        &ctx.luts["exact"],
+        &ctx.luts["mul8s_1kv8_s"],
+    ];
+    let engine = Engine::new(&net, luts);
+    let mut buf = Buffers::for_net(&net);
+    for i in 0..n {
+        let rust_pred = engine.predict(data.image(i), None, &mut buf);
+        assert_eq!(rust_pred, c_preds[i], "image {i}");
+    }
+}
+
+#[test]
+fn generated_c_matches_engine_lenet5_conv_path() {
+    let ctx = common::ctx();
+    let net = ctx.net("lenet5").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let config = vec!["mul8s_1kv9_s"; net.n_comp()];
+    let c_src = generate_c(&net, &config, &ctx.luts);
+    let dir = std::env::temp_dir().join(format!("deepaxe_hls5_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("accel.c"), &c_src).unwrap();
+    let n = 8usize;
+    let il = net.input_len();
+    let driver = format!(
+        "#include <stdio.h>\n#include <stdint.h>\n\
+         int deepaxe_infer(const int8_t *image);\n\
+         int main(void) {{ static int8_t img[{il}];\n\
+           for (int i = 0; i < {n}; i++) {{\n\
+             if (fread(img, 1, {il}, stdin) != {il}) return 1;\n\
+             printf(\"%d\\n\", deepaxe_infer(img)); }}\n\
+           return 0; }}\n"
+    );
+    std::fs::write(dir.join("driver.c"), driver).unwrap();
+    let cc = std::env::var("CC").unwrap_or_else(|_| "cc".into());
+    assert!(Command::new(&cc)
+        .args(["-O2", "-o"])
+        .arg(dir.join("accel"))
+        .arg(dir.join("accel.c"))
+        .arg(dir.join("driver.c"))
+        .status()
+        .unwrap()
+        .success());
+    let mut child = Command::new(dir.join("accel"))
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        for i in 0..n {
+            stdin
+                .write_all(&data.image(i).iter().map(|&v| v as u8).collect::<Vec<u8>>())
+                .unwrap();
+        }
+    }
+    let out = child.wait_with_output().unwrap();
+    let c_preds: Vec<usize> =
+        String::from_utf8(out.stdout).unwrap().lines().map(|l| l.parse().unwrap()).collect();
+    let kv9 = &ctx.luts["mul8s_1kv9_s"];
+    let engine = Engine::uniform(&net, kv9);
+    let mut buf = Buffers::for_net(&net);
+    for i in 0..n {
+        assert_eq!(engine.predict(data.image(i), None, &mut buf), c_preds[i], "image {i}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-cutting property tests on the real artifacts: invariants the
+//! framework's conclusions depend on (quantization monotonicity, engine
+//! linear-algebra ground truth, campaign clamping, HLS model composition).
+
+mod common;
+
+use deepaxe::simnet::layers::requantize;
+use deepaxe::simnet::{Buffers, CompKind, Engine, Layer};
+use deepaxe::util::proptest::check;
+use deepaxe::util::rng::Rng;
+
+#[test]
+fn requantize_monotone_in_accumulator() {
+    check("requantize monotone", 0x9001, 60, |rng| {
+        let m0 = (1i64 << 30) + rng.below(1 << 30) as i64;
+        let nshift = 31 + rng.below(20) as u32;
+        let a = rng.next_u64() as i32 / 2;
+        let b = rng.next_u64() as i32 / 2;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (ylo, yhi) = (requantize(lo, m0, nshift, false), requantize(hi, m0, nshift, false));
+        assert!(ylo <= yhi, "requant not monotone: {lo}->{ylo} vs {hi}->{yhi}");
+    });
+}
+
+/// Ground truth: with the exact LUT, a dense layer must equal an i64
+/// matmul computed by a totally independent implementation.
+#[test]
+fn exact_engine_equals_integer_matmul() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let mut buf = Buffers::for_net(&net);
+
+    // independent scalar forward in i64
+    let img = data.image(0);
+    let mut act: Vec<i64> = img.iter().map(|&v| v as i64).collect();
+    for ci in 0..net.n_comp() {
+        let c = net.comp(ci);
+        assert!(matches!(c.kind, CompKind::Dense));
+        let mut next = vec![0i64; c.n_dim];
+        for (j, nj) in next.iter_mut().enumerate() {
+            let mut acc = c.b[j] as i64;
+            for (k, &a) in act.iter().enumerate() {
+                acc += a * c.w[k * c.n_dim + j] as i64;
+            }
+            // requant
+            let y = ((acc * c.m0) + (1i64 << (c.nshift - 1))) >> c.nshift;
+            let mut y = y.clamp(-128, 127);
+            if c.relu && y < 0 {
+                y = 0;
+            }
+            *nj = y;
+        }
+        act = next;
+    }
+    let expect: Vec<i8> = act.iter().map(|&v| v as i8).collect();
+    let got = engine.forward(img, None, &mut buf);
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn campaign_clamps_oversized_subset() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let params = deepaxe::faultsim::CampaignParams {
+        n_faults: 4,
+        n_images: 10_000_000, // way beyond the test set
+        seed: 1,
+        workers: 1,
+        sampling: deepaxe::faultsim::SiteSampling::UniformLayer,
+        replay: true,
+    };
+    let r = deepaxe::faultsim::run_campaign(&engine, &data, &params);
+    assert_eq!(r.n_images, data.len());
+}
+
+#[test]
+fn hwmodel_per_layer_sums_to_totals() {
+    let ctx = common::ctx();
+    for name in ["mlp3", "lenet5", "alexnet"] {
+        let net = ctx.net(name).unwrap();
+        let mults: Vec<_> =
+            (0..net.n_comp()).map(|_| deepaxe::axmul::by_name("exact").unwrap()).collect();
+        let r = deepaxe::hwmodel::estimate(&net, &mults);
+        let layer_luts: u64 = r.per_layer.iter().map(|l| l.luts).sum();
+        let layer_ffs: u64 = r.per_layer.iter().map(|l| l.ffs).sum();
+        let layer_cycles: u64 = r.per_layer.iter().map(|l| l.cycles).sum();
+        assert!(layer_luts < r.luts, "{name}: base overhead must be positive");
+        assert!(layer_ffs < r.ffs);
+        assert!(layer_cycles <= r.cycles, "{name}: pool/io cycles must be non-negative");
+        assert_eq!(r.per_layer.len(), net.n_comp());
+        let macs: u64 = r.per_layer.iter().map(|l| l.macs).sum();
+        assert_eq!(macs, net.total_macs());
+    }
+}
+
+#[test]
+fn config_string_roundtrips_masks() {
+    let ctx = common::ctx();
+    check("config_string <-> mask", 0xC0F1, 50, |rng| {
+        for name in ["mlp3", "lenet5", "alexnet"] {
+            let net = ctx.net(name).unwrap();
+            let mask = rng.below(1 << net.n_comp());
+            let s = net.config_string(mask);
+            let back = deepaxe::dse::mask_from_config_string(&s).unwrap();
+            assert_eq!(back, mask, "{name} {s}");
+        }
+    });
+}
+
+#[test]
+fn fault_free_mask_zero_fault_identity() {
+    // A fault with bit value XOR 0 semantics: flipping the same bit twice
+    // restores the baseline prediction for every image.
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap().take(16);
+    let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+    let mut buf = Buffers::for_net(&net);
+    let mut rng = Rng::new(0xF00D);
+    for i in 0..data.len() {
+        let tr = engine.trace(data.image(i), &mut buf);
+        let layer = rng.usize_below(net.n_comp());
+        let neuron = rng.usize_below(net.comp(layer).act_len());
+        let bit = rng.below(8) as u8;
+        let mut act = tr.acts[layer].clone();
+        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8; // undo
+        let replay = engine.forward_from(layer, &act, &mut buf);
+        assert_eq!(replay, tr.logits);
+    }
+}
+
+#[test]
+fn more_approximation_never_costs_more_hardware() {
+    // monotonicity of the HLS model in the layer mask (per multiplier)
+    let ctx = common::ctx();
+    let net = ctx.net("lenet5").unwrap();
+    check("hw cost monotone in mask", 0xAB, 40, |rng| {
+        let m = deepaxe::axmul::by_name("mul8s_1kvp_s").unwrap();
+        let exact = deepaxe::axmul::by_name("exact").unwrap();
+        let mask = rng.below(1 << net.n_comp());
+        let sub = mask & rng.next_u64(); // subset of mask
+        let cfg = |mk: u64| -> Vec<&deepaxe::axmul::Multiplier> {
+            (0..net.n_comp()).map(|ci| if mk >> ci & 1 == 1 { m } else { exact }).collect()
+        };
+        let full = deepaxe::hwmodel::estimate(&net, &cfg(mask));
+        let less = deepaxe::hwmodel::estimate(&net, &cfg(sub));
+        assert!(full.luts <= less.luts);
+        assert!(full.cycles <= less.cycles);
+        assert!(full.util_pct <= less.util_pct + 1e-12);
+    });
+}

@@ -1,0 +1,92 @@
+//! PJRT runtime vs simnet vs python: all three implementations of the
+//! quantized network must agree bit-for-bit.
+
+mod common;
+
+use deepaxe::axmul::Lut;
+use deepaxe::nbin::Nbin;
+use deepaxe::runtime::Runtime;
+use deepaxe::simnet::{Buffers, Engine, FaultSite};
+
+#[test]
+fn pjrt_matches_python_and_simnet_mlp3() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let batch = ctx.lower_batch();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_net(&ctx.artifacts, &net, batch).unwrap();
+
+    let exp = Nbin::read_file(common::artifacts().join("mlp3.expected.nbin")).unwrap();
+    let pred_exact = exp.get_i32("pred_exact").unwrap();
+    let n = pred_exact.len();
+
+    let exact = &ctx.luts["exact"];
+    let luts: Vec<&Lut> = (0..net.n_comp()).map(|_| exact).collect();
+    let pjrt = exe.predict_all(&data.take(n), &luts, None).unwrap();
+    for i in 0..n {
+        assert_eq!(pjrt[i] as i32, pred_exact[i], "pjrt vs python, image {i}");
+    }
+
+    // approximate configuration
+    let kvp = &ctx.luts["mul8s_1kvp_s"];
+    let luts_kvp: Vec<&Lut> = (0..net.n_comp()).map(|_| kvp).collect();
+    let pred_axm = exp.get_i32("pred_axm_kvp").unwrap();
+    let pjrt_axm = exe.predict_all(&data.take(n), &luts_kvp, None).unwrap();
+    for i in 0..n {
+        assert_eq!(pjrt_axm[i] as i32, pred_axm[i], "pjrt axm vs python, image {i}");
+    }
+}
+
+#[test]
+fn pjrt_fault_injection_matches_python_mlp3() {
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_net(&ctx.artifacts, &net, ctx.lower_batch()).unwrap();
+
+    let exp = Nbin::read_file(common::artifacts().join("mlp3.expected.nbin")).unwrap();
+    let sites = exp.get_i32("fault_sites").unwrap();
+    let preds = exp.get_i32("pred_fault").unwrap();
+    let n_cases = exp.get("fault_sites").unwrap().dims[0];
+    let n_img = exp.get("pred_fault").unwrap().dims[1];
+
+    let exact = &ctx.luts["exact"];
+    let luts: Vec<&Lut> = (0..net.n_comp()).map(|_| exact).collect();
+    for f in 0..n_cases {
+        let site = FaultSite {
+            layer: sites[f * 3] as usize,
+            neuron: sites[f * 3 + 1] as usize,
+            bit: sites[f * 3 + 2] as u8,
+        };
+        let got = exe.predict_all(&data.take(n_img), &luts, Some(site)).unwrap();
+        for i in 0..n_img {
+            assert_eq!(got[i] as i32, preds[f * n_img + i], "fault {site:?} image {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_simnet_lenet5_mixed_config() {
+    let ctx = common::ctx();
+    let net = ctx.net("lenet5").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_net(&ctx.artifacts, &net, ctx.lower_batch()).unwrap();
+
+    // mixed per-layer configuration: kv9 on conv layers, exact on dense
+    let exact = &ctx.luts["exact"];
+    let kv9 = &ctx.luts["mul8s_1kv9_s"];
+    let luts: Vec<&Lut> =
+        (0..net.n_comp()).map(|ci| if ci < 2 { kv9 } else { exact }).collect();
+
+    let n = 32;
+    let pjrt = exe.predict_all(&data.take(n), &luts, None).unwrap();
+    let engine = Engine::new(&net, luts.clone());
+    let mut buf = Buffers::for_net(&net);
+    for i in 0..n {
+        let simnet = engine.predict(data.image(i), None, &mut buf);
+        assert_eq!(simnet, pjrt[i], "image {i}");
+    }
+}

@@ -1,0 +1,131 @@
+//! simnet vs the python-pinned artifacts: the rust engine must reproduce
+//! the JAX reference predictions bit-for-bit (exact LUT, approximate LUT,
+//! and injected-fault cases).
+
+mod common;
+
+use deepaxe::axmul;
+use deepaxe::nbin::Nbin;
+use deepaxe::simnet::{Buffers, Engine, FaultSite};
+
+const NETS: &[&str] = &["mlp3", "mlp5", "mlp7", "lenet5", "alexnet"];
+
+fn expected(net: &str) -> Nbin {
+    Nbin::read_file(common::artifacts().join(format!("{net}.expected.nbin"))).unwrap()
+}
+
+#[test]
+fn predictions_match_python_exact_lut() {
+    let ctx = common::ctx();
+    for net_name in NETS {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let exp = expected(net_name);
+        let pred_exact = exp.get_i32("pred_exact").unwrap();
+        let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        for (i, &want) in pred_exact.iter().enumerate() {
+            let got = engine.predict(data.image(i), None, &mut buf);
+            assert_eq!(got as i32, want, "{net_name} image {i}");
+        }
+    }
+}
+
+#[test]
+fn predictions_match_python_kvp_lut() {
+    let ctx = common::ctx();
+    for net_name in NETS {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let exp = expected(net_name);
+        let pred_axm = exp.get_i32("pred_axm_kvp").unwrap();
+        let engine = Engine::uniform(&net, &ctx.luts["mul8s_1kvp_s"]);
+        let mut buf = Buffers::for_net(&net);
+        for (i, &want) in pred_axm.iter().enumerate() {
+            let got = engine.predict(data.image(i), None, &mut buf);
+            assert_eq!(got as i32, want, "{net_name} image {i}");
+        }
+    }
+}
+
+#[test]
+fn fault_injection_matches_python() {
+    let ctx = common::ctx();
+    for net_name in NETS {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let exp = expected(net_name);
+        let sites = exp.get_i32("fault_sites").unwrap(); // [F, 3]
+        let preds = exp.get_i32("pred_fault").unwrap(); // [F, n_img]
+        let n_cases = exp.get("fault_sites").unwrap().dims[0];
+        let n_img = exp.get("pred_fault").unwrap().dims[1];
+        let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        for f in 0..n_cases {
+            let site = FaultSite {
+                layer: sites[f * 3] as usize,
+                neuron: sites[f * 3 + 1] as usize,
+                bit: sites[f * 3 + 2] as u8,
+            };
+            for i in 0..n_img {
+                let got = engine.predict(data.image(i), Some(site), &mut buf);
+                assert_eq!(
+                    got as i32,
+                    preds[f * n_img + i],
+                    "{net_name} fault {site:?} image {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rust_luts_match_artifact_luts() {
+    // The rust axmul generators must be bit-identical to the python-written
+    // artifacts (cross-language drift guard).
+    common::ensure_artifacts();
+    for m in axmul::CATALOG {
+        let path = common::artifacts().join("luts").join(format!("{}.nbin", m.name));
+        let artifact = axmul::Lut::load(&path).unwrap();
+        let generated = m.lut();
+        assert_eq!(artifact.table, generated.table, "{}", m.name);
+    }
+}
+
+#[test]
+fn engine_accuracy_close_to_build_accuracy() {
+    // subset accuracy should be within a few points of the python-reported
+    // full-test accuracy
+    let ctx = common::ctx();
+    for net_name in NETS {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let engine = Engine::uniform(&net, &ctx.luts["exact"]);
+        let mut buf = Buffers::for_net(&net);
+        let acc = engine.accuracy(&data.take(200), &mut buf);
+        let build = ctx.build_quant_acc(net_name).unwrap();
+        assert!(
+            (acc - build).abs() < 0.08,
+            "{net_name}: subset acc {acc} vs build {build}"
+        );
+    }
+}
+
+#[test]
+fn layer_replay_equivalence_on_real_net() {
+    let ctx = common::ctx();
+    let net = ctx.net("lenet5").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let engine = Engine::uniform(&net, &ctx.luts["mul8s_1kv9_s"]);
+    let mut buf = Buffers::for_net(&net);
+    let img = data.image(3);
+    let trace = engine.trace(img, &mut buf);
+    for (layer, neuron, bit) in [(0usize, 100usize, 7u8), (1, 50, 3), (2, 10, 0), (4, 5, 6)] {
+        let site = FaultSite { layer, neuron, bit };
+        let full = engine.forward(img, Some(site), &mut buf);
+        let mut act = trace.acts[layer].clone();
+        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+        let replay = engine.forward_from(layer, &act, &mut buf);
+        assert_eq!(full, replay, "site {site:?}");
+    }
+}
