@@ -42,6 +42,8 @@ fn main() -> Result<()> {
         max_vuln_pct: 25.0,
         eval_images: deepaxe::report::experiments::default_eval_images(),
         fi: CampaignParams::default_for("lenet5"),
+        strategy: deepaxe::search::Strategy::Exhaustive,
+        budget: 0,
     };
     println!(
         "\nrunning DeepAxe pipeline (max acc drop {:.1}pp, max vulnerability {:.1}pp)...",

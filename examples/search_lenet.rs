@@ -1,0 +1,84 @@
+//! Budgeted multi-objective search on LeNet-5: NSGA-II over the
+//! generalized per-layer multiplier assignment space (4^5 = 1024 configs)
+//! with a budget of 24 evaluations — ~25% of the paper's exhaustive
+//! 94-point grid — then the exhaustive grid for comparison.
+//!
+//! Run: `cargo run --release --example search_lenet`
+//! (env knobs: DEEPAXE_FI_FAULTS / DEEPAXE_FI_IMAGES / DEEPAXE_EVAL_IMAGES)
+
+use anyhow::Result;
+use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
+use deepaxe::coordinator::Ctx;
+use deepaxe::dse::cache::ResultCache;
+use deepaxe::dse::{enumerate_masks, Evaluator};
+use deepaxe::faultsim::CampaignParams;
+use deepaxe::report::experiments::default_eval_images;
+use deepaxe::search::{
+    frontier_hv, run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
+};
+
+fn main() -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net = ctx.net("lenet5")?;
+    let data = ctx.data_for(&net)?;
+    let fi = CampaignParams::default_for(&net.name);
+    let ev = Evaluator::new(&net, &data, &ctx.luts, default_eval_images(), fi.clone());
+    let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
+
+    let mults: Vec<String> = deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let space = SearchSpace::paper(&net, &mults);
+    println!(
+        "space: {} layers x alphabet [{}] = {} configurations",
+        space.n_layers,
+        space.alphabet.join(","),
+        space.size()
+    );
+
+    // -- budgeted NSGA-II ---------------------------------------------------
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 24;
+    spec.seed = fi.seed;
+    let backend = EvaluatorBackend { ev: &ev };
+    let mut hook = ResultCacheHook {
+        cache: &mut cache,
+        net: net.name.clone(),
+        fi: fi.clone(),
+        eval_images: default_eval_images(),
+    };
+    let out = run_search(&space, &spec, &backend, &mut hook);
+    println!(
+        "\nNSGA-II: {} evaluations ({} cache hits), frontier {} points, hypervolume {:.1}",
+        out.evals_used,
+        out.cache_hits,
+        out.frontier_idx.len(),
+        out.hypervolume()
+    );
+    for p in out.frontier() {
+        println!(
+            "  {}  acc drop {:>6.2}pp  FI drop {:>6.2}pp  util {:>5.2}%",
+            p.config_string, p.acc_drop_pct, p.fault_vuln_pct, p.util_pct
+        );
+    }
+
+    // -- exhaustive reference (the paper's Fig. 3 grid) ---------------------
+    let ex_spec = SweepSpec {
+        mults: deepaxe::axmul::PAPER_AXMS.to_vec(),
+        masks: enumerate_masks(net.n_comp()),
+        with_fi: true,
+    };
+    let ex_evals = ex_spec.n_points();
+    let ex_points = run_sweep(&ev, &mut cache, &ex_spec)?;
+    let (ex_front, ex_hv) = frontier_hv(&ex_points, true);
+    println!(
+        "\nexhaustive: {} evaluations, frontier {} points, hypervolume {:.1}",
+        ex_evals,
+        ex_front.len(),
+        ex_hv
+    );
+    println!(
+        "search reached {:.1}% of the exhaustive hypervolume with {:.0}% of its evaluations",
+        out.hypervolume() / ex_hv.max(1e-12) * 100.0,
+        out.evals_used as f64 / ex_evals as f64 * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Search harness: budgeted NSGA-II vs the exhaustive LeNet-5 grid —
+//! wall-clock and frontier quality at ~25% of the exhaustive evaluation
+//! count (the subsystem's headline claim).
+
+mod bench_common;
+
+use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
+use deepaxe::dse::cache::ResultCache;
+use deepaxe::dse::{enumerate_masks, Evaluator};
+use deepaxe::faultsim::CampaignParams;
+use deepaxe::report::experiments::default_eval_images;
+use deepaxe::search::{
+    frontier_hv, run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
+};
+use deepaxe::util::bench::time_once;
+
+fn main() {
+    let ctx = bench_common::setup(12, 20, 100);
+    let net = ctx.net("lenet5").expect("lenet5");
+    let data = ctx.data_for(&net).expect("dataset");
+    let fi = CampaignParams::default_for(&net.name);
+    let ev = Evaluator::new(&net, &data, &ctx.luts, default_eval_images(), fi.clone());
+
+    // fresh caches so both sides pay their real evaluation cost
+    let dir = std::env::temp_dir().join(format!("deepaxe_bench_search_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+
+    let mults: Vec<String> =
+        deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let space = SearchSpace::paper(&net, &mults);
+
+    let ex_spec = SweepSpec {
+        mults: deepaxe::axmul::PAPER_AXMS.to_vec(),
+        masks: enumerate_masks(net.n_comp()),
+        with_fi: true,
+    };
+    let ex_evals = ex_spec.n_points();
+    let mut ex_cache = ResultCache::open(dir.join("exhaustive.jsonl"));
+    let (ex_points, ex_dt) = time_once("search:exhaustive94", || {
+        run_sweep(&ev, &mut ex_cache, &ex_spec).expect("sweep")
+    });
+    let (_, ex_hv) = frontier_hv(&ex_points, true);
+
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = ex_evals / 4;
+    spec.seed = fi.seed;
+    let backend = EvaluatorBackend { ev: &ev };
+    let mut search_cache = ResultCache::open(dir.join("search.jsonl"));
+    let mut hook = ResultCacheHook {
+        cache: &mut search_cache,
+        net: net.name.clone(),
+        fi: fi.clone(),
+        eval_images: default_eval_images(),
+    };
+    let (out, dt) = time_once("search:nsga2_25pct", || {
+        run_search(&space, &spec, &backend, &mut hook)
+    });
+
+    println!(
+        "exhaustive: {ex_evals} evals in {ex_dt:.2}s, hv {ex_hv:.1} | nsga2: {} evals in {dt:.2}s, hv {:.1} ({:.1}% of exhaustive at {:.1}% of the wall-clock)",
+        out.evals_used,
+        out.hypervolume(),
+        out.hypervolume() / ex_hv.max(1e-12) * 100.0,
+        dt / ex_dt.max(1e-9) * 100.0,
+    );
+}

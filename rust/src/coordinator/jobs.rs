@@ -51,6 +51,7 @@ pub fn run_sweep(
                 net: ev.net.name.clone(),
                 mult: mult_eff.to_string(),
                 mask: mask_eff,
+                assignment: String::new(),
                 n_faults: ev.fi.n_faults,
                 n_images: ev.fi.n_images,
                 eval_images: ev.eval_images,

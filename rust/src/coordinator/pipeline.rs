@@ -19,8 +19,11 @@
 use super::jobs::{run_sweep, SweepSpec};
 use super::Ctx;
 use crate::dse::cache::ResultCache;
-use crate::dse::{enumerate_masks, pareto_front, DesignPoint, Evaluator};
+use crate::dse::{enumerate_masks, DesignPoint, Evaluator};
 use crate::faultsim::{self, CampaignParams};
+use crate::search::{
+    run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
+};
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
@@ -34,6 +37,32 @@ pub struct PipelineSpec {
     pub max_vuln_pct: f64,
     pub eval_images: usize,
     pub fi: CampaignParams,
+    /// how to explore the space: the paper's exhaustive `2^n` flow, or a
+    /// budgeted heuristic over the generalized per-layer assignment space
+    pub strategy: Strategy,
+    /// unique-evaluation budget for heuristic strategies (0 = auto: 25%
+    /// of the generalized space); ignored by `Exhaustive`
+    pub budget: usize,
+}
+
+impl PipelineSpec {
+    /// The paper's defaults: exhaustive sweep over the three AxMs.
+    pub fn paper_defaults(net: &str) -> PipelineSpec {
+        PipelineSpec {
+            net: net.to_string(),
+            mults: vec![
+                "mul8s_1kvp_s".into(),
+                "mul8s_1kv9_s".into(),
+                "mul8s_1kv8_s".into(),
+            ],
+            max_acc_drop_pct: 2.0,
+            max_vuln_pct: 100.0,
+            eval_images: 300,
+            fi: CampaignParams::default_for(net),
+            strategy: Strategy::Exhaustive,
+            budget: 0,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -50,6 +79,10 @@ pub struct PipelineOutcome {
     pub selected: Option<DesignPoint>,
     /// Pareto frontier over (util, vulnerability) of the FI'd set
     pub frontier: Vec<DesignPoint>,
+    /// unique design-point evaluations spent (exhaustive: the full grid)
+    pub evals_used: usize,
+    /// hypervolume of `frontier` under the fixed search reference point
+    pub hypervolume: f64,
 }
 
 pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
@@ -69,11 +102,45 @@ pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
     let ev = Evaluator::new(&net, &data, &ctx.luts, spec.eval_images, spec.fi.clone());
     let mut cache = ResultCache::open(ctx.results.join("results.jsonl"));
 
-    // -- stage 2: approximate design (accuracy pre-filter) ------------------
     let mults: Vec<&str> = spec.mults.iter().map(|s| s.as_str()).collect();
     if mults.is_empty() {
         bail!("no multipliers specified");
     }
+
+    // -- stages 2+3, heuristic strategies: budgeted multi-objective search
+    // over the generalized per-layer assignment space (accuracy, fault
+    // vulnerability and utilization are co-optimized instead of staged)
+    if spec.strategy != Strategy::Exhaustive {
+        let space = SearchSpace::paper(&net, &spec.mults);
+        let mut sspec = SearchSpec::new(spec.strategy);
+        sspec.budget = spec.budget;
+        sspec.seed = spec.fi.seed;
+        sspec.with_fi = true;
+        let mut hook = ResultCacheHook {
+            cache: &mut cache,
+            net: net.name.clone(),
+            fi: spec.fi.clone(),
+            eval_images: spec.eval_images,
+        };
+        let backend = EvaluatorBackend { ev: &ev };
+        let out = run_search(&space, &sspec, &backend, &mut hook);
+        eprintln!(
+            "[pipeline:{}] {} search: {}/{} configs evaluated ({} cache hits) of a {}-point space, frontier {} (hv {:.0})",
+            net.name,
+            spec.strategy.name(),
+            out.evals_used,
+            sspec.resolved_budget(&space),
+            out.cache_hits,
+            out.space_size,
+            out.frontier_idx.len(),
+            out.hypervolume(),
+        );
+        // no staged accuracy pre-filter ran: every archive point is
+        // fault-simulated, so accuracy_sweep is empty by construction
+        return Ok(select_outcome(required_faults, Vec::new(), out.evaluated, out.evals_used, spec));
+    }
+
+    // -- stage 2: approximate design (accuracy pre-filter) ------------------
     let masks = enumerate_masks(net.n_comp());
     let acc_spec = SweepSpec { mults: mults.clone(), masks, with_fi: false };
     let accuracy_sweep = run_sweep(&ev, &mut cache, &acc_spec)?;
@@ -96,18 +163,40 @@ pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
         fi_points.extend(run_sweep(&ev, &mut cache, &fi_spec)?);
     }
 
-    // -- stage 4: selection --------------------------------------------------
+    let evals_used = accuracy_sweep.len().max(fi_points.len());
+    Ok(select_outcome(required_faults, accuracy_sweep, fi_points, evals_used, spec))
+}
+
+/// Stage 4: requirement filtering, utilization-minimal selection and the
+/// Pareto frontier + hypervolume over the fault-simulated set. Shared by
+/// the exhaustive flow and the heuristic search flow.
+fn select_outcome(
+    required_faults: u64,
+    accuracy_sweep: Vec<DesignPoint>,
+    fi_points: Vec<DesignPoint>,
+    evals_used: usize,
+    spec: &PipelineSpec,
+) -> PipelineOutcome {
     let feasible: Vec<DesignPoint> = fi_points
         .iter()
-        .filter(|p| p.fault_vuln_pct <= spec.max_vuln_pct)
+        .filter(|p| p.acc_drop_pct <= spec.max_acc_drop_pct && p.fault_vuln_pct <= spec.max_vuln_pct)
         .cloned()
         .collect();
     let selected = feasible
         .iter()
-        .min_by(|a, b| a.util_pct.partial_cmp(&b.util_pct).unwrap())
+        .min_by(|a, b| a.util_pct.total_cmp(&b.util_pct))
         .cloned();
-    let frontier_idx = pareto_front(&fi_points, |p| p.util_pct, |p| p.fault_vuln_pct);
+    let (frontier_idx, hypervolume) = crate::search::frontier_hv(&fi_points, true);
     let frontier = frontier_idx.iter().map(|&i| fi_points[i].clone()).collect();
 
-    Ok(PipelineOutcome { required_faults, accuracy_sweep, fi_points, feasible, selected, frontier })
+    PipelineOutcome {
+        required_faults,
+        accuracy_sweep,
+        fi_points,
+        feasible,
+        selected,
+        frontier,
+        evals_used,
+        hypervolume,
+    }
 }

@@ -11,11 +11,23 @@ use std::path::{Path, PathBuf};
 
 /// Evaluation-parameter fingerprint: results are only reusable when the
 /// campaign parameters match.
+///
+/// Two key shapes share the store: the legacy homogeneous shape
+/// `(net, mult, mask)` from the paper's single-AxM sweeps, and the
+/// generalized per-layer assignment shape (`assignment` = comma-joined
+/// multiplier name per computing layer) used by the `search` subsystem.
+/// [`CacheKey::for_assignment`] canonicalizes: any assignment expressible
+/// as `(mult, mask)` renders the *legacy* string key, so heterogeneous
+/// searches get hits on results that exhaustive sweeps already persisted
+/// (and vice versa), and pre-existing cache files stay valid.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CacheKey {
     pub net: String,
     pub mult: String,
     pub mask: u64,
+    /// canonical per-layer multiplier names (empty for homogeneous keys,
+    /// which use the legacy `(mult, mask)` encoding)
+    pub assignment: String,
     pub n_faults: usize,
     pub n_images: usize,
     pub eval_images: usize,
@@ -24,18 +36,75 @@ pub struct CacheKey {
 }
 
 impl CacheKey {
+    /// Canonical key for a per-layer multiplier assignment. Homogeneous
+    /// assignments (all non-exact layers share one multiplier, or fully
+    /// exact) reduce to the legacy `(net, mult, mask)` key — the
+    /// backward-compat path for existing cache files.
+    pub fn for_assignment(
+        net: &str,
+        names: &[&str],
+        n_faults: usize,
+        n_images: usize,
+        eval_images: usize,
+        seed: u64,
+        with_fi: bool,
+    ) -> CacheKey {
+        let mut mask = 0u64;
+        let mut hom: Option<&str> = None;
+        let mut mixed = false;
+        for (ci, n) in names.iter().enumerate() {
+            if *n != "exact" {
+                mask |= 1 << ci;
+                match hom {
+                    None => hom = Some(n),
+                    Some(h) if h != *n => mixed = true,
+                    _ => {}
+                }
+            }
+        }
+        let (mult, assignment) = if mixed {
+            ("mixed".to_string(), names.join(","))
+        } else {
+            (hom.unwrap_or("exact").to_string(), String::new())
+        };
+        CacheKey {
+            net: net.to_string(),
+            mult,
+            mask,
+            assignment,
+            n_faults,
+            n_images,
+            eval_images,
+            seed,
+            with_fi,
+        }
+    }
+
     fn to_string_key(&self) -> String {
-        format!(
-            "{}|{}|{:x}|{}|{}|{}|{}|{}",
-            self.net,
-            self.mult,
-            self.mask,
-            self.n_faults,
-            self.n_images,
-            self.eval_images,
-            self.seed,
-            self.with_fi as u8
-        )
+        if self.assignment.is_empty() {
+            format!(
+                "{}|{}|{:x}|{}|{}|{}|{}|{}",
+                self.net,
+                self.mult,
+                self.mask,
+                self.n_faults,
+                self.n_images,
+                self.eval_images,
+                self.seed,
+                self.with_fi as u8
+            )
+        } else {
+            format!(
+                "{}|cfg:{}|{}|{}|{}|{}|{}",
+                self.net,
+                self.assignment,
+                self.n_faults,
+                self.n_images,
+                self.eval_images,
+                self.seed,
+                self.with_fi as u8
+            )
+        }
     }
 }
 
@@ -131,6 +200,7 @@ mod tests {
             net: net.into(),
             mult: "exact".into(),
             mask,
+            assignment: String::new(),
             n_faults: 10,
             n_images: 20,
             eval_images: 30,
@@ -170,6 +240,76 @@ mod tests {
         std::fs::write(&p, "not json\n{\"key\": \"k\"}\n").unwrap();
         let c = ResultCache::open(&p);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn homogeneous_assignment_hits_legacy_keys() {
+        // a heterogeneous-genotype lookup whose assignment happens to be
+        // homogeneous must produce the exact legacy key string — existing
+        // cache files keep working
+        let legacy = CacheKey {
+            net: "mlp3".into(),
+            mult: "mul8s_1kvp_s".into(),
+            mask: 0b101,
+            assignment: String::new(),
+            n_faults: 10,
+            n_images: 20,
+            eval_images: 30,
+            seed: 1,
+            with_fi: true,
+        };
+        let via_assignment = CacheKey::for_assignment(
+            "mlp3",
+            &["mul8s_1kvp_s", "exact", "mul8s_1kvp_s"],
+            10,
+            20,
+            30,
+            1,
+            true,
+        );
+        assert_eq!(legacy.to_string_key(), via_assignment.to_string_key());
+        // fully exact reduces to the ("exact", 0) key
+        let exact = CacheKey::for_assignment("mlp3", &["exact"; 3], 10, 20, 30, 1, true);
+        assert_eq!(exact.mult, "exact");
+        assert_eq!(exact.mask, 0);
+        assert!(exact.assignment.is_empty());
+    }
+
+    #[test]
+    fn heterogeneous_assignments_get_distinct_keys() {
+        let mk = |names: &[&str]| {
+            CacheKey::for_assignment("mlp3", names, 10, 20, 30, 1, true).to_string_key()
+        };
+        let a = mk(&["mul8s_1kvp_s", "mul8s_1kv8_s", "exact"]);
+        let b = mk(&["mul8s_1kv8_s", "mul8s_1kvp_s", "exact"]);
+        let hom = mk(&["mul8s_1kvp_s", "mul8s_1kvp_s", "exact"]);
+        assert_ne!(a, b, "layer order must matter");
+        assert_ne!(a, hom);
+        assert!(a.contains("cfg:"), "{a}");
+        assert!(!hom.contains("cfg:"), "{hom}");
+    }
+
+    #[test]
+    fn heterogeneous_roundtrip_persists() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let k = CacheKey::for_assignment(
+            "mlp3",
+            &["mul8s_1kvp_s", "mul8s_1kv8_s", "exact"],
+            10,
+            20,
+            30,
+            1,
+            true,
+        );
+        {
+            let mut c = ResultCache::open(&p);
+            c.put(&k, point("mlp3", k.mask)).unwrap();
+        }
+        let c = ResultCache::open(&p);
+        assert_eq!(c.get(&k).unwrap().mask, 0b011);
     }
 
     #[test]

@@ -171,7 +171,27 @@ impl<'a> Evaluator<'a> {
     /// campaign (accuracy + hardware only — used by the full 2^n sweep
     /// pre-filter).
     pub fn evaluate(&self, mult: &str, mask: u64, with_fi: bool) -> DesignPoint {
-        let luts = self.config_luts(mult, mask);
+        let names: Vec<&str> = (0..self.net.n_comp())
+            .map(|ci| if mask >> ci & 1 == 1 { mult } else { "exact" })
+            .collect();
+        let mut p = self.evaluate_assignment(&names, with_fi);
+        // keep the caller's multiplier label even for mask 0 / fully-exact
+        p.mult = mult.to_string();
+        p
+    }
+
+    /// Evaluate a generalized per-layer multiplier assignment (`names[ci]`
+    /// runs on computing layer ci). The paper's `(mult, mask)` configs are
+    /// the homogeneous special case. `mult` on the returned point is the
+    /// shared multiplier when the assignment is homogeneous, `"exact"`
+    /// when fully exact, and `"mixed"` otherwise; `mask` is the
+    /// approximated-layer bitmask either way.
+    pub fn evaluate_assignment(&self, names: &[&str], with_fi: bool) -> DesignPoint {
+        assert_eq!(names.len(), self.net.n_comp(), "one multiplier per computing layer");
+        let luts: Vec<&Lut> = names
+            .iter()
+            .map(|n| self.luts.get(*n).unwrap_or_else(|| panic!("multiplier {n} not loaded")))
+            .collect();
         let engine = Engine::new(self.net, luts);
         let mut buf = Buffers::for_net(self.net);
         let ax_acc = engine.accuracy(&self.data.take(self.eval_images), &mut buf);
@@ -185,12 +205,24 @@ impl<'a> Evaluator<'a> {
             (f64::NAN, f64::NAN)
         };
 
-        let mults: Vec<&axmul::Multiplier> = (0..self.net.n_comp())
-            .map(|ci| {
-                axmul::by_name(if mask >> ci & 1 == 1 { mult } else { "exact" }).expect("catalog")
-            })
-            .collect();
+        let mults: Vec<&axmul::Multiplier> =
+            names.iter().map(|n| axmul::by_name(n).expect("catalog")).collect();
         let hw = hwmodel::estimate(self.net, &mults);
+
+        let mut mask = 0u64;
+        let mut label: Option<&str> = None;
+        let mut mixed = false;
+        for (ci, n) in names.iter().enumerate() {
+            if *n != "exact" {
+                mask |= 1 << ci;
+                match label {
+                    None => label = Some(n),
+                    Some(l) if l != *n => mixed = true,
+                    _ => {}
+                }
+            }
+        }
+        let mult = if mixed { "mixed" } else { label.unwrap_or("exact") };
 
         DesignPoint {
             net: self.net.name.clone(),

@@ -4,29 +4,59 @@
 /// Indices of the non-dominated points under two minimized objectives.
 /// A point dominates another if it is <= in both objectives and < in at
 /// least one. Output is sorted by the first objective.
+///
+/// Comparison is total (`f64::total_cmp`), so NaN objectives — e.g.
+/// `fault_vuln_pct` on points whose FI campaign was skipped — cannot
+/// panic; NaN-bearing points are treated as dominated and never appear on
+/// the frontier. An input of only-NaN points yields an empty frontier.
 pub fn pareto_front<T>(points: &[T], fx: impl Fn(&T) -> f64, fy: impl Fn(&T) -> f64) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| !fx(&points[i]).is_nan() && !fy(&points[i]).is_nan())
+        .collect();
     // sort by x asc, then y asc
     idx.sort_by(|&a, &b| {
         fx(&points[a])
-            .partial_cmp(&fx(&points[b]))
-            .unwrap()
-            .then(fy(&points[a]).partial_cmp(&fy(&points[b])).unwrap())
+            .total_cmp(&fx(&points[b]))
+            .then(fy(&points[a]).total_cmp(&fy(&points[b])))
     });
     let mut front = Vec::new();
     let mut best_y = f64::INFINITY;
-    let mut last_x = f64::NEG_INFINITY;
     for &i in &idx {
-        let (x, y) = (fx(&points[i]), fy(&points[i]));
-        if y < best_y {
+        if fy(&points[i]) < best_y {
             front.push(i);
-            best_y = y;
-            last_x = x;
-        } else if y == best_y && x == last_x {
-            // exact duplicate of the frontier point: keep only the first
+            best_y = fy(&points[i]);
         }
     }
     front
+}
+
+/// 2-D hypervolume indicator (both objectives minimized): the area
+/// dominated by the frontier of `points` and bounded by `reference`.
+/// Points at or beyond the reference in either objective contribute
+/// nothing; NaN points are excluded (see [`pareto_front`]). Larger is
+/// better; frontiers from different search strategies are comparable when
+/// computed against the same reference.
+pub fn hypervolume2d<T>(
+    points: &[T],
+    fx: impl Fn(&T) -> f64,
+    fy: impl Fn(&T) -> f64,
+    reference: (f64, f64),
+) -> f64 {
+    let front = pareto_front(points, &fx, &fy);
+    // front is sorted by x ascending with strictly decreasing y; sweep
+    // left-to-right accumulating the strip each point adds below the
+    // previous point's y level
+    let mut hv = 0.0;
+    let mut y_level = reference.1;
+    for &i in &front {
+        let (x, y) = (fx(&points[i]), fy(&points[i]));
+        if x >= reference.0 || y >= y_level {
+            continue;
+        }
+        hv += (reference.0 - x) * (y_level - y);
+        y_level = y;
+    }
+    hv
 }
 
 /// True iff `a` dominates `b` (both objectives minimized).
@@ -96,6 +126,63 @@ mod tests {
                     });
                     assert!(dominated_or_dup, "point {j} neither dominated nor duplicate");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_points_excluded_not_panicking() {
+        // FI-skipped points carry NaN vulnerability; they must be ignored,
+        // not panic the sort (the old partial_cmp().unwrap() did).
+        let pts = vec![
+            (1.0, f64::NAN),
+            (2.0, 3.0),
+            (f64::NAN, 1.0),
+            (3.0, 2.0),
+            (f64::NAN, f64::NAN),
+        ];
+        let f = pareto_front(&pts, |p| p.0, |p| p.1);
+        assert_eq!(f, vec![1, 3]);
+        // all-NaN input: empty frontier, still no panic
+        let all_nan = vec![(f64::NAN, f64::NAN); 3];
+        assert!(pareto_front(&all_nan, |p| p.0, |p| p.1).is_empty());
+    }
+
+    #[test]
+    fn hypervolume_single_and_multi_point() {
+        let one = vec![(2.0, 3.0)];
+        let hv = hypervolume2d(&one, |p| p.0, |p| p.1, (10.0, 10.0));
+        assert!((hv - 8.0 * 7.0).abs() < 1e-12);
+        // second non-dominated point adds exactly its strip
+        let two = vec![(2.0, 3.0), (5.0, 1.0)];
+        let hv2 = hypervolume2d(&two, |p| p.0, |p| p.1, (10.0, 10.0));
+        assert!((hv2 - (56.0 + 5.0 * 2.0)).abs() < 1e-12);
+        // dominated point contributes nothing
+        let three = vec![(2.0, 3.0), (5.0, 1.0), (6.0, 4.0)];
+        let hv3 = hypervolume2d(&three, |p| p.0, |p| p.1, (10.0, 10.0));
+        assert!((hv3 - hv2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_ignores_points_beyond_reference() {
+        let pts = vec![(20.0, 1.0), (1.0, 20.0), (f64::NAN, 0.0)];
+        assert_eq!(hypervolume2d(&pts, |p| p.0, |p| p.1, (10.0, 10.0)), 0.0);
+        let empty: Vec<(f64, f64)> = vec![];
+        assert_eq!(hypervolume2d(&empty, |p| p.0, |p| p.1, (10.0, 10.0)), 0.0);
+    }
+
+    #[test]
+    fn property_hypervolume_monotone_under_union() {
+        check("hv grows when points are added", 0x48F7, 40, |rng| {
+            let n = 1 + rng.usize_below(30);
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.f64() * 10.0, rng.f64() * 10.0)).collect();
+            let r = (10.0, 10.0);
+            let mut prev = 0.0;
+            for k in 1..=n {
+                let hv = hypervolume2d(&pts[..k], |p| p.0, |p| p.1, r);
+                assert!(hv >= prev - 1e-12, "hv shrank: {prev} -> {hv}");
+                prev = hv;
             }
         });
     }

@@ -24,7 +24,12 @@
 //! * [`hwmodel`] — analytic Vivado-HLS/Spartan-7 cost model (latency
 //!   cycles, LUT/FF utilization).
 //! * [`dse`] — configuration space, evaluation orchestration, Pareto
-//!   frontier.
+//!   frontier and hypervolume indicator.
+//! * [`search`] — scalable multi-objective DSE (NSGA-II, simulated
+//!   annealing, hill-climb) over heterogeneous per-layer multiplier
+//!   assignments; replaces the `2^n` enumeration with budgeted search so
+//!   deep-net workloads the exhaustive sweep can never touch become
+//!   tractable.
 //! * [`runtime`] — PJRT executor for the AOT-lowered L2+L1 graphs.
 //! * [`coordinator`] — the tool-chain pipeline (Fig. 1/2 of the paper),
 //!   job scheduling, result caching, CLI entry points.
@@ -39,6 +44,7 @@ pub mod hwmodel;
 pub mod nbin;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod simnet;
 pub mod tensor;
 pub mod util;

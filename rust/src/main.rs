@@ -10,6 +10,7 @@ use deepaxe::dse::mask_from_config_string;
 use deepaxe::faultsim::CampaignParams;
 use deepaxe::report::experiments as exp;
 use deepaxe::report::table::{f2, pct, Table};
+use deepaxe::search::{SearchSpace, SearchSpec, Strategy};
 use deepaxe::simnet::{Buffers, Engine};
 use deepaxe::util::cli;
 
@@ -22,11 +23,16 @@ COMMANDS
   info                         artifact + model-zoo summary
   exp <id>                     regenerate a paper experiment:
                                table1 table2 table3 table4 fig3 fig4
-                               ablation-fi-n ablation-axm all
+                               ablation-fi-n ablation-axm search all
   eval                         evaluate one configuration
       --net <name> --mult <kvp|kv9|kv8|exact> --config <e.g. 1-0-110> [--fi]
   pipeline                     automated Fig.2 design flow
       --net <name> [--max-acc-drop pp] [--max-vuln pp]
+      [--strategy exhaustive|nsga2|anneal|hillclimb] [--budget N]
+  search                       budgeted multi-objective DSE over per-layer
+                               multiplier assignments (generalizes the 2^n sweep)
+      --net <name> [--strategy nsga2|anneal|hillclimb|exhaustive]
+      [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
   parity                       simnet vs AOT/PJRT executable cross-check
       --net <name> [--images n]
   faults                       Leveugle statistical FI sizing per network
@@ -65,8 +71,8 @@ fn campaign_params(args: &cli::Args, net: &str) -> Result<CampaignParams> {
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out"],
-        &["fi", "help"],
+        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers"],
+        &["fi", "no-fi", "help"],
     )
     .map_err(anyhow::Error::msg)?;
 
@@ -89,6 +95,7 @@ fn run(argv: &[String]) -> Result<()> {
         "exp" => experiment(&args),
         "eval" => eval_one(&args),
         "pipeline" => pipeline_cmd(&args),
+        "search" => search_cmd(&args),
         "parity" => parity(&args),
         "faults" => fault_sizing(),
         "stuck" => stuck_cmd(&args),
@@ -127,7 +134,7 @@ fn experiment(args: &cli::Args) -> Result<()> {
     let nets = args.get_list("nets", &["mlp3", "lenet5", "alexnet"]);
     let mut outputs = Vec::new();
     let ids: Vec<&str> = if id == "all" {
-        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm"]
+        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm", "search"]
     } else {
         vec![id]
     };
@@ -141,6 +148,7 @@ fn experiment(args: &cli::Args) -> Result<()> {
             "fig4" => exp::fig4(&ctx)?,
             "ablation-fi-n" => exp::ablation_fi_n(&ctx)?,
             "ablation-axm" => exp::ablation_axm(&ctx)?,
+            "search" => exp::search_vs_exhaustive(&ctx)?,
             other => bail!("unknown experiment {other:?}"),
         };
         println!("{out}");
@@ -189,13 +197,19 @@ fn pipeline_cmd(args: &cli::Args) -> Result<()> {
         max_vuln_pct: args.get_f64("max-vuln", 100.0)?,
         eval_images: exp::default_eval_images(),
         fi,
+        strategy: Strategy::parse(args.get_or("strategy", "exhaustive"))
+            .map_err(anyhow::Error::msg)?,
+        budget: args.get_usize("budget", 0)?,
     };
     let out = run_pipeline(&ctx, &spec)?;
     println!(
-        "pipeline: {} accuracy points, {} fault-simulated, {} feasible",
+        "pipeline[{}]: {} accuracy points, {} fault-simulated, {} feasible, {} evaluations, frontier hv {:.0}",
+        spec.strategy.name(),
         out.accuracy_sweep.len(),
         out.fi_points.len(),
-        out.feasible.len()
+        out.feasible.len(),
+        out.evals_used,
+        out.hypervolume,
     );
     let mut t = Table::new(
         &format!("Pareto frontier for {net} (util vs FI drop)"),
@@ -218,6 +232,87 @@ fn pipeline_cmd(args: &cli::Args) -> Result<()> {
             p.mult, p.config_string, p.acc_drop_pct, p.fault_vuln_pct, p.util_pct
         ),
         None => println!("no feasible configuration under the given requirements"),
+    }
+    Ok(())
+}
+
+fn search_cmd(args: &cli::Args) -> Result<()> {
+    let ctx = Ctx::load()?;
+    let net_name = args.get("net").context("--net required")?;
+    let net = ctx.net(net_name)?;
+    let data = ctx.data_for(&net)?;
+    let fi = campaign_params(args, &net.name)?;
+    let mults: Vec<String> = args
+        .get_list("mults", &["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"])
+        .iter()
+        .map(|m| exp::mult_name(m).to_string())
+        .collect();
+    let space = SearchSpace::paper(&net, &mults);
+    let eval_images = exp::default_eval_images();
+    let ev = deepaxe::dse::Evaluator::new(&net, &data, &ctx.luts, eval_images, fi.clone());
+    let mut cache = deepaxe::dse::cache::ResultCache::open(ctx.results.join("results.jsonl"));
+
+    let mut spec = SearchSpec::new(
+        Strategy::parse(args.get_or("strategy", "nsga2")).map_err(anyhow::Error::msg)?,
+    );
+    spec.budget = args.get_usize("budget", 0)?;
+    spec.seed = fi.seed;
+    spec.with_fi = !args.has("no-fi");
+    spec.workers = args.get_usize("workers", 1)?;
+    let budget = spec.resolved_budget(&space);
+    eprintln!(
+        "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}",
+        spec.strategy.name(),
+        net.name,
+        space.n_layers,
+        space.alphabet.join(","),
+        space.size(),
+        budget,
+    );
+
+    let backend = deepaxe::search::EvaluatorBackend { ev: &ev };
+    let mut hook = deepaxe::search::ResultCacheHook {
+        cache: &mut cache,
+        net: net.name.clone(),
+        fi,
+        eval_images,
+    };
+    let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
+
+    let mut t = Table::new(
+        &format!(
+            "search frontier: {} [{}] (digit = alphabet index: {})",
+            net.name,
+            spec.strategy.name(),
+            space.alphabet.join(",")
+        ),
+        &["config", "acc drop pp", "FI drop pp", "util %", "cycles"],
+    );
+    for p in out.frontier() {
+        t.row(vec![
+            p.config_string.clone(),
+            pct(p.acc_drop_pct),
+            pct(p.fault_vuln_pct),
+            f2(p.util_pct),
+            p.cycles.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "evaluations: {} of {} budget ({} cache hits) over a {}-config space",
+        out.evals_used,
+        budget,
+        out.cache_hits,
+        out.space_size,
+    );
+    println!("hypervolume (ref {:?}): {:.1}", deepaxe::search::HV_REF, out.hypervolume());
+    for w in out.trace.windows(2) {
+        if w[1].hypervolume > w[0].hypervolume {
+            println!(
+                "  trace: eval {} -> hv {:.1} (frontier {})",
+                w[1].evals, w[1].hypervolume, w[1].frontier_size
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,244 @@
+//! Single-solution baselines: simulated annealing and greedy hill-climb.
+//!
+//! Both optimize a weighted scalarization of the minimized objective
+//! triple; the multi-objective frontier comes from the driver's archive of
+//! every evaluated point, not from the walk itself. Restarts draw fresh
+//! random weight vectors so successive walks pull toward different regions
+//! of the frontier (a poor man's decomposition, cf. MOEA/D).
+//!
+//! The `eval` closure returns `None` when the evaluation budget is
+//! exhausted; the walk stops immediately.
+
+use super::space::{Genotype, SearchSpace};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct AnnealParams {
+    /// initial temperature (in normalized-energy units)
+    pub t0: f64,
+    /// geometric cooling factor per move
+    pub cooling: f64,
+    /// restarts with fresh weights (first restart is greedy: t0 = 0)
+    pub restarts: usize,
+}
+
+impl Default for AnnealParams {
+    fn default() -> Self {
+        AnnealParams { t0: 0.6, cooling: 0.97, restarts: 4 }
+    }
+}
+
+/// Adaptive per-objective normalization for scalarized energies.
+#[derive(Debug, Clone)]
+struct Norm {
+    lo: [f64; 3],
+    hi: [f64; 3],
+}
+
+impl Norm {
+    fn new() -> Norm {
+        Norm { lo: [f64::INFINITY; 3], hi: [f64::NEG_INFINITY; 3] }
+    }
+
+    fn observe(&mut self, o: &[f64; 3]) {
+        for m in 0..3 {
+            if o[m].is_finite() {
+                self.lo[m] = self.lo[m].min(o[m]);
+                self.hi[m] = self.hi[m].max(o[m]);
+            }
+        }
+    }
+
+    fn energy(&self, o: &[f64; 3], w: &[f64; 3]) -> f64 {
+        let mut e = 0.0;
+        for m in 0..3 {
+            if !o[m].is_finite() {
+                // NaN objective (FI skipped) carries no gradient: skip it
+                // rather than drowning the finite objectives.
+                continue;
+            }
+            let span = (self.hi[m] - self.lo[m]).max(1e-12);
+            e += w[m] * (o[m] - self.lo[m]) / span;
+        }
+        e
+    }
+}
+
+fn random_weights(rng: &mut Rng) -> [f64; 3] {
+    let mut w = [0.1 + rng.f64(), 0.1 + rng.f64(), 0.1 + rng.f64()];
+    let s = w[0] + w[1] + w[2];
+    for x in w.iter_mut() {
+        *x /= s;
+    }
+    w
+}
+
+/// Simulated-annealing walk(s) from `starts`. Every genotype handed to
+/// `eval` lands in the driver's archive; the return value is the best
+/// genotype under the final restart's weights (for tests/logging).
+pub fn anneal(
+    space: &SearchSpace,
+    rng: &mut Rng,
+    params: &AnnealParams,
+    starts: &[Genotype],
+    eval: &mut dyn FnMut(&Genotype) -> Option<[f64; 3]>,
+) -> Option<Genotype> {
+    let mut norm = Norm::new();
+    // (genotype, energy) — energies from different restarts use different
+    // weights, so `best` is a logging/return convenience, not the result:
+    // the multi-objective result is the driver's archive.
+    let mut best: Option<(Genotype, f64)> = None;
+    for r in 0..params.restarts.max(1) {
+        let w = if r == 0 { [1.0 / 3.0; 3] } else { random_weights(rng) };
+        let start = if starts.is_empty() {
+            space.random(rng)
+        } else {
+            starts[r % starts.len()].clone()
+        };
+        if r == 0 {
+            // first restart is a pure greedy descent from the first seed
+            let g = hill_climb(space, &start, &w, eval);
+            if let Some(o) = eval(&g) {
+                norm.observe(&o);
+                let e = norm.energy(&o, &w);
+                if best.as_ref().map(|(_, be)| e < *be).unwrap_or(true) {
+                    best = Some((g, e));
+                }
+            } else {
+                return best.map(|(g2, _)| g2).or(Some(g));
+            }
+            continue;
+        }
+        let mut cur = start;
+        let mut cur_obj = match eval(&cur) {
+            Some(o) => o,
+            None => return best.map(|(g, _)| g),
+        };
+        norm.observe(&cur_obj);
+        let mut t = params.t0;
+        while t >= 1e-3 {
+            let cand = space.random_neighbor(rng, &cur);
+            let cand_obj = match eval(&cand) {
+                Some(o) => o,
+                None => return best.map(|(g, _)| g),
+            };
+            norm.observe(&cand_obj);
+            let de = norm.energy(&cand_obj, &w) - norm.energy(&cur_obj, &w);
+            if de < 0.0 || rng.f64() < (-de / t).exp() {
+                cur = cand;
+                cur_obj = cand_obj;
+                let e = norm.energy(&cur_obj, &w);
+                if best.as_ref().map(|(_, be)| e < *be).unwrap_or(true) {
+                    best = Some((cur.clone(), e));
+                }
+            }
+            t *= params.cooling;
+        }
+    }
+    best.map(|(g, _)| g)
+}
+
+/// Greedy steepest-descent from `start` under fixed `weights`: move to the
+/// best strictly-improving neighbor until a local optimum or the budget.
+pub fn hill_climb(
+    space: &SearchSpace,
+    start: &Genotype,
+    weights: &[f64; 3],
+    eval: &mut dyn FnMut(&Genotype) -> Option<[f64; 3]>,
+) -> Genotype {
+    let mut norm = Norm::new();
+    let mut cur = start.clone();
+    let mut cur_obj = match eval(&cur) {
+        Some(o) => o,
+        None => return cur,
+    };
+    norm.observe(&cur_obj);
+    loop {
+        let mut improved = false;
+        let mut best_n: Option<(Genotype, [f64; 3])> = None;
+        for n in space.neighbors(&cur) {
+            let o = match eval(&n) {
+                Some(o) => o,
+                None => return cur,
+            };
+            norm.observe(&o);
+            if best_n.as_ref().map(|(_, bo)| norm.energy(&o, weights) < norm.energy(bo, weights)).unwrap_or(true)
+            {
+                best_n = Some((n, o));
+            }
+        }
+        if let Some((g, o)) = best_n {
+            if norm.energy(&o, weights) + 1e-12 < norm.energy(&cur_obj, weights) {
+                cur = g;
+                cur_obj = o;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space3() -> SearchSpace {
+        SearchSpace::with_dims(
+            "t",
+            3,
+            vec!["exact".into(), "mul8s_1kvp_s".into()],
+            "xxx",
+        )
+    }
+
+    /// Separable synthetic objective: energy is minimized by genotype
+    /// [1, 1, 1] on all three objectives simultaneously.
+    fn synth(g: &Genotype) -> [f64; 3] {
+        let ones = g.iter().filter(|&&s| s == 1).count() as f64;
+        [3.0 - ones, 3.0 - ones, 3.0 - ones]
+    }
+
+    #[test]
+    fn hill_climb_finds_separable_optimum() {
+        let sp = space3();
+        let mut evals = 0;
+        let got = hill_climb(&sp, &vec![0, 0, 0], &[1.0 / 3.0; 3], &mut |g| {
+            evals += 1;
+            Some(synth(g))
+        });
+        assert_eq!(got, vec![1, 1, 1]);
+        assert!(evals <= sp.size() as usize * 3);
+    }
+
+    #[test]
+    fn anneal_respects_budget_none() {
+        let sp = space3();
+        let mut rng = Rng::new(7);
+        let mut left = 5usize;
+        let out = anneal(&sp, &mut rng, &AnnealParams::default(), &[vec![0, 0, 0]], &mut |g| {
+            if left == 0 {
+                return None;
+            }
+            left -= 1;
+            Some(synth(g))
+        });
+        // stops promptly and still reports something it saw (or None if the
+        // very first eval was refused)
+        assert!(out.is_some());
+    }
+
+    #[test]
+    fn anneal_improves_over_start() {
+        let sp = space3();
+        let mut rng = Rng::new(42);
+        let mut seen = Vec::new();
+        let _ = anneal(&sp, &mut rng, &AnnealParams { restarts: 3, ..Default::default() }, &[vec![0, 0, 0]], &mut |g| {
+            seen.push(g.clone());
+            Some(synth(g))
+        });
+        // the walk must explore beyond the all-exact start
+        assert!(seen.iter().any(|g| g.iter().any(|&s| s == 1)));
+    }
+}

@@ -1,0 +1,675 @@
+//! Budgeted search driver: owns the evaluation budget, the archive of
+//! every evaluated design, result-cache dedup, parallel population
+//! evaluation and the convergence trace.
+//!
+//! The driver is generic over an [`EvalBackend`] (production: a
+//! [`crate::dse::Evaluator`]; tests: synthetic cost models, no artifacts
+//! needed) and a [`CacheHook`] (production: [`crate::dse::cache::ResultCache`]
+//! through canonical per-layer assignment keys; tests: [`NoCache`]).
+//!
+//! Budget semantics: every *unique* genotype whose design point enters the
+//! archive consumes one unit, whether it came from the backend or from the
+//! persistent cache — so a run's `evals_used` is reproducible regardless
+//! of cache warmth (`cache_hits` reports the split). Re-visits of an
+//! already-archived genotype are free. When the budget covers the whole
+//! space, every strategy degenerates to the exhaustive sweep — heuristics
+//! can never do worse than exhaustive on spaces they can afford to cover.
+
+use super::anneal::{anneal, AnnealParams};
+use super::nsga2::{self, objectives};
+use super::space::{Genotype, SearchSpace};
+use crate::dse::cache::{CacheKey, ResultCache};
+use crate::dse::pareto::pareto_front;
+use crate::dse::{DesignPoint, Evaluator};
+use crate::faultsim::CampaignParams;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+use std::collections::HashMap;
+
+/// How the Fig. 2 flow explores the configuration space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// enumerate every configuration (the paper's `2^n` flow)
+    Exhaustive,
+    /// NSGA-II multi-objective evolutionary search
+    Nsga2,
+    /// simulated annealing over scalarized objectives
+    Anneal,
+    /// greedy steepest-descent baseline
+    HillClimb,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "exhaustive" | "full" => Ok(Strategy::Exhaustive),
+            "nsga2" | "nsga-ii" | "nsga" => Ok(Strategy::Nsga2),
+            "anneal" | "sa" => Ok(Strategy::Anneal),
+            "hillclimb" | "hill-climb" | "greedy" => Ok(Strategy::HillClimb),
+            other => Err(format!("unknown strategy {other:?} (exhaustive|nsga2|anneal|hillclimb)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Exhaustive => "exhaustive",
+            Strategy::Nsga2 => "nsga2",
+            Strategy::Anneal => "anneal",
+            Strategy::HillClimb => "hillclimb",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchSpec {
+    pub strategy: Strategy,
+    /// maximum unique design-point evaluations (0 = auto: 25% of the
+    /// space, at least one population)
+    pub budget: usize,
+    pub seed: u64,
+    /// NSGA-II population size
+    pub pop: usize,
+    /// run fault-injection campaigns (enables the vulnerability objective)
+    pub with_fi: bool,
+    /// worker threads for population evaluation (1 = serial; keep FI
+    /// campaign workers at 1 when raising this)
+    pub workers: usize,
+}
+
+impl SearchSpec {
+    pub fn new(strategy: Strategy) -> SearchSpec {
+        SearchSpec { strategy, budget: 0, seed: 0xD5E, pop: 16, with_fi: true, workers: 1 }
+    }
+
+    /// Resolve `budget = 0` against a concrete space. An explicit budget
+    /// caps every strategy — including `Exhaustive`, which then evaluates
+    /// the lexicographic prefix rather than aborting on a space it cannot
+    /// afford.
+    pub fn resolved_budget(&self, space: &SearchSpace) -> usize {
+        let size = space.size().min(usize::MAX as u128) as usize;
+        if self.budget > 0 {
+            return self.budget.min(size);
+        }
+        if self.strategy == Strategy::Exhaustive {
+            size
+        } else {
+            (size / 4).max(self.pop.max(4)).min(size)
+        }
+    }
+}
+
+/// Evaluates one per-layer multiplier assignment into a [`DesignPoint`].
+pub trait EvalBackend: Sync {
+    fn eval(&self, names: &[&str], with_fi: bool) -> DesignPoint;
+}
+
+/// Production backend over [`Evaluator`].
+pub struct EvaluatorBackend<'a> {
+    pub ev: &'a Evaluator<'a>,
+}
+
+impl EvalBackend for EvaluatorBackend<'_> {
+    fn eval(&self, names: &[&str], with_fi: bool) -> DesignPoint {
+        self.ev.evaluate_assignment(names, with_fi)
+    }
+}
+
+/// Persistent-result lookup keyed by canonical assignment.
+pub trait CacheHook {
+    fn get(&self, names: &[&str], with_fi: bool) -> Option<DesignPoint>;
+    fn put(&mut self, names: &[&str], with_fi: bool, point: &DesignPoint);
+}
+
+/// No persistence (unit tests, throwaway sweeps).
+pub struct NoCache;
+
+impl CacheHook for NoCache {
+    fn get(&self, _names: &[&str], _with_fi: bool) -> Option<DesignPoint> {
+        None
+    }
+    fn put(&mut self, _names: &[&str], _with_fi: bool, _point: &DesignPoint) {}
+}
+
+/// [`ResultCache`]-backed hook using canonical per-layer assignment keys
+/// (homogeneous assignments map onto the legacy `(net, mult, mask)` keys,
+/// so heuristic runs share results with exhaustive sweeps).
+pub struct ResultCacheHook<'a> {
+    pub cache: &'a mut ResultCache,
+    pub net: String,
+    pub fi: CampaignParams,
+    pub eval_images: usize,
+}
+
+impl ResultCacheHook<'_> {
+    fn key(&self, names: &[&str], with_fi: bool) -> CacheKey {
+        CacheKey::for_assignment(
+            &self.net,
+            names,
+            self.fi.n_faults,
+            self.fi.n_images,
+            self.eval_images,
+            self.fi.seed,
+            with_fi,
+        )
+    }
+}
+
+impl CacheHook for ResultCacheHook<'_> {
+    fn get(&self, names: &[&str], with_fi: bool) -> Option<DesignPoint> {
+        self.cache.get(&self.key(names, with_fi)).cloned()
+    }
+
+    fn put(&mut self, names: &[&str], with_fi: bool, point: &DesignPoint) {
+        if let Err(e) = self.cache.put(&self.key(names, with_fi), point.clone()) {
+            eprintln!("search: cache write failed ({e}); continuing");
+        }
+    }
+}
+
+/// Hypervolume reference point `(util %, drop pp)` — fixed so frontiers
+/// from different strategies/runs are directly comparable.
+pub const HV_REF: (f64, f64) = (100.0, 100.0);
+
+/// One trace sample, appended after every evaluated batch.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub evals: usize,
+    pub frontier_size: usize,
+    pub hypervolume: f64,
+}
+
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub strategy: Strategy,
+    /// archive: every unique evaluated design, in evaluation order
+    pub evaluated: Vec<DesignPoint>,
+    /// genotypes aligned with `evaluated`
+    pub genotypes: Vec<Genotype>,
+    /// indices into `evaluated` of the 2-D frontier (util vs FI drop, or
+    /// util vs accuracy drop when FI was skipped)
+    pub frontier_idx: Vec<usize>,
+    pub evals_used: usize,
+    pub cache_hits: usize,
+    pub space_size: u128,
+    pub trace: Vec<TracePoint>,
+}
+
+impl SearchOutcome {
+    pub fn frontier(&self) -> Vec<&DesignPoint> {
+        self.frontier_idx.iter().map(|&i| &self.evaluated[i]).collect()
+    }
+
+    pub fn hypervolume(&self) -> f64 {
+        self.trace.last().map(|t| t.hypervolume).unwrap_or(0.0)
+    }
+}
+
+/// 2-D frontier + hypervolume of a point set under the fixed [`HV_REF`].
+/// X is always utilization; Y is FI vulnerability when available, else
+/// approximation accuracy drop. Single frontier computation — the hv
+/// sweep reuses the sorted front instead of re-deriving it (this runs
+/// after every evaluated batch, so it is on the driver's hot path).
+pub fn frontier_hv(points: &[DesignPoint], with_fi: bool) -> (Vec<usize>, f64) {
+    let fy = |p: &DesignPoint| if with_fi { p.fault_vuln_pct } else { p.acc_drop_pct };
+    let idx = pareto_front(points, |p| p.util_pct, fy);
+    // idx is sorted by util ascending with strictly decreasing y — the
+    // same sweep hypervolume2d performs, without the second sort
+    let mut hv = 0.0;
+    let mut y_level = HV_REF.1;
+    for &i in &idx {
+        let (x, y) = (points[i].util_pct, fy(&points[i]));
+        if x >= HV_REF.0 || y >= y_level {
+            continue;
+        }
+        hv += (HV_REF.0 - x) * (y_level - y);
+        y_level = y;
+    }
+    (idx, hv)
+}
+
+struct Archive<'a> {
+    space: &'a SearchSpace,
+    seen: HashMap<Genotype, usize>,
+    genotypes: Vec<Genotype>,
+    points: Vec<DesignPoint>,
+    objs: Vec<[f64; 3]>,
+    evals_used: usize,
+    cache_hits: usize,
+    budget: usize,
+    with_fi: bool,
+    workers: usize,
+    trace: Vec<TracePoint>,
+}
+
+impl<'a> Archive<'a> {
+    fn new(space: &'a SearchSpace, budget: usize, with_fi: bool, workers: usize) -> Archive<'a> {
+        Archive {
+            space,
+            seen: HashMap::new(),
+            genotypes: Vec::new(),
+            points: Vec::new(),
+            objs: Vec::new(),
+            evals_used: 0,
+            cache_hits: 0,
+            budget,
+            with_fi,
+            workers,
+            trace: Vec::new(),
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.evals_used)
+    }
+
+    fn record(&mut self, g: Genotype, mut p: DesignPoint) -> usize {
+        // the archive's view of the config is the generalized digit string
+        p.config_string = self.space.config_digits(&g);
+        let idx = self.points.len();
+        self.objs.push(objectives(&p));
+        self.points.push(p);
+        self.genotypes.push(g.clone());
+        self.seen.insert(g, idx);
+        self.evals_used += 1;
+        idx
+    }
+
+    fn snapshot_trace(&mut self) {
+        let (idx, hv) = frontier_hv(&self.points, self.with_fi);
+        self.trace.push(TracePoint {
+            evals: self.evals_used,
+            frontier_size: idx.len(),
+            hypervolume: hv,
+        });
+    }
+
+    /// Evaluate a batch of candidates: dedup against the archive, serve
+    /// from the persistent cache, run the misses in parallel, persist new
+    /// results. Returns one archive index per batch item that is in the
+    /// archive afterwards (already-seen and in-batch duplicates map to
+    /// their existing index); only candidates beyond the budget are
+    /// dropped.
+    fn eval_batch<B: EvalBackend>(
+        &mut self,
+        backend: &B,
+        cache: &mut dyn CacheHook,
+        batch: Vec<Genotype>,
+    ) -> Vec<usize> {
+        let mut fresh: Vec<Genotype> = Vec::new();
+        for g in &batch {
+            if !self.seen.contains_key(g) && !fresh.contains(g) && fresh.len() < self.remaining()
+            {
+                fresh.push(g.clone());
+            }
+        }
+        if !fresh.is_empty() {
+            // cache pass (serial: ResultCache is not Sync)
+            let mut misses: Vec<(usize, Genotype)> = Vec::new();
+            let mut results: Vec<Option<DesignPoint>> = vec![None; fresh.len()];
+            for (i, g) in fresh.iter().enumerate() {
+                let names = self.space.decode(g);
+                if let Some(p) = cache.get(&names, self.with_fi) {
+                    self.cache_hits += 1;
+                    results[i] = Some(p);
+                } else {
+                    misses.push((i, g.clone()));
+                }
+            }
+            // backend pass (parallel over misses)
+            if !misses.is_empty() {
+                let with_fi = self.with_fi;
+                let space = self.space;
+                let evaluated: Vec<DesignPoint> =
+                    threadpool::scoped_map(self.workers, &misses, |(_, g)| {
+                        backend.eval(&space.decode(g), with_fi)
+                    });
+                for ((i, g), mut p) in misses.into_iter().zip(evaluated) {
+                    // persist with the generalized digit config so the
+                    // stored value (not just the key) identifies the
+                    // per-layer assignment
+                    p.config_string = self.space.config_digits(&g);
+                    cache.put(&self.space.decode(&g), self.with_fi, &p);
+                    results[i] = Some(p);
+                }
+            }
+            for (g, p) in fresh.into_iter().zip(results) {
+                self.record(g, p.expect("batch result"));
+            }
+            self.snapshot_trace();
+        }
+        batch.iter().filter_map(|g| self.seen.get(g).copied()).collect()
+    }
+
+    fn finish(mut self, strategy: Strategy) -> SearchOutcome {
+        if self.trace.is_empty() {
+            self.snapshot_trace();
+        }
+        let (frontier_idx, _) = frontier_hv(&self.points, self.with_fi);
+        SearchOutcome {
+            strategy,
+            evaluated: self.points,
+            genotypes: self.genotypes,
+            frontier_idx,
+            evals_used: self.evals_used,
+            cache_hits: self.cache_hits,
+            space_size: self.space.size(),
+            trace: self.trace,
+        }
+    }
+}
+
+/// Single-genotype evaluation for the annealing/hill-climb walks:
+/// re-visits of archived genotypes are free; `None` once the budget is
+/// exhausted.
+fn walk_eval<B: EvalBackend>(
+    archive: &mut Archive,
+    backend: &B,
+    cache: &mut dyn CacheHook,
+    g: &Genotype,
+) -> Option<[f64; 3]> {
+    if let Some(&i) = archive.seen.get(g) {
+        return Some(archive.objs[i]);
+    }
+    if archive.remaining() == 0 {
+        return None;
+    }
+    let idx = archive.eval_batch(backend, cache, vec![g.clone()]);
+    idx.first().map(|&i| archive.objs[i])
+}
+
+/// Run a budgeted search over `space`. See module docs for budget and
+/// degeneration semantics.
+pub fn run_search<B: EvalBackend>(
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    backend: &B,
+    cache: &mut dyn CacheHook,
+) -> SearchOutcome {
+    let budget = spec.resolved_budget(space);
+    let mut archive = Archive::new(space, budget, spec.with_fi, spec.workers.max(1));
+    let mut rng = Rng::new(spec.seed);
+
+    // budget covers the space: every strategy is the exhaustive sweep
+    // (lazy lexicographic prefix — no enumeration blow-up on big spaces)
+    if spec.strategy == Strategy::Exhaustive || budget as u128 >= space.size() {
+        let all = space.enumerate_first(budget);
+        for chunk in all.chunks(64.max(spec.pop)) {
+            archive.eval_batch(backend, cache, chunk.to_vec());
+        }
+        return archive.finish(spec.strategy);
+    }
+
+    match spec.strategy {
+        Strategy::Exhaustive => unreachable!("handled above"),
+        Strategy::Nsga2 => {
+            let pop_size = spec.pop.max(4).min(budget).max(1);
+            // warm start: structured seeds, then distinct random fill
+            let mut init = space.seeds();
+            init.truncate(budget);
+            let mut fill_attempts = 0;
+            while init.len() < pop_size && fill_attempts < 100 * pop_size {
+                fill_attempts += 1;
+                let g = space.random(&mut rng);
+                if !init.contains(&g) {
+                    init.push(g);
+                }
+            }
+            let mut population = archive.eval_batch(backend, cache, init);
+            while archive.remaining() > 0 {
+                let objs: Vec<[f64; 3]> = population.iter().map(|&i| archive.objs[i]).collect();
+                let ranked = nsga2::rank_population(&objs);
+                let mut offspring: Vec<Genotype> = Vec::new();
+                let mut attempts = 0;
+                while offspring.len() < pop_size.min(archive.remaining()) && attempts < 50 * pop_size
+                {
+                    attempts += 1;
+                    let a = &archive.genotypes[population[nsga2::binary_tournament(&mut rng, &ranked)]];
+                    let b = &archive.genotypes[population[nsga2::binary_tournament(&mut rng, &ranked)]];
+                    let child = space.mutate(&mut rng, &space.crossover(&mut rng, a, b));
+                    if !archive.seen.contains_key(&child) && !offspring.contains(&child) {
+                        offspring.push(child);
+                    }
+                }
+                if offspring.is_empty() {
+                    break; // space effectively exhausted around the population
+                }
+                let new_idx = archive.eval_batch(backend, cache, offspring);
+                // (μ+λ) environmental selection over parents ∪ offspring
+                let mut merged = population.clone();
+                merged.extend(new_idx);
+                merged.sort_unstable();
+                merged.dedup();
+                let merged_objs: Vec<[f64; 3]> = merged.iter().map(|&i| archive.objs[i]).collect();
+                let keep = nsga2::select_survivors(&merged_objs, pop_size);
+                population = keep.into_iter().map(|k| merged[k]).collect();
+            }
+        }
+        Strategy::Anneal | Strategy::HillClimb => {
+            // seed the archive with the structured designs first — they
+            // anchor the frontier extremes for free
+            let mut seeds = space.seeds();
+            seeds.truncate(budget);
+            archive.eval_batch(backend, cache, seeds.clone());
+            let greedy_only = spec.strategy == Strategy::HillClimb;
+            let params = AnnealParams {
+                restarts: if greedy_only { 1 } else { 4 },
+                ..AnnealParams::default()
+            };
+            // walks evaluate one genotype at a time through the archive
+            let _ = anneal(space, &mut rng, &params, &seeds, &mut |g| {
+                walk_eval(&mut archive, backend, cache, g)
+            });
+            // spend any leftover budget on random exploration
+            while archive.remaining() > 0 {
+                let batch: Vec<Genotype> =
+                    (0..archive.remaining().min(16)).map(|_| space.random(&mut rng)).collect();
+                let before = archive.evals_used;
+                archive.eval_batch(backend, cache, batch);
+                if archive.evals_used == before {
+                    break; // random draws all duplicates; give up
+                }
+            }
+        }
+    }
+    archive.finish(spec.strategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    /// Deterministic synthetic backend: per-layer additive utilization,
+    /// mildly non-separable accuracy drop, layer-position-weighted
+    /// vulnerability. No artifacts, no engine — pure cost tables.
+    struct SynthBackend {
+        space: SearchSpace,
+    }
+
+    impl SynthBackend {
+        fn point(&self, g: &Genotype) -> DesignPoint {
+            let k = self.space.n_symbols() as f64;
+            let mut util = 50.0;
+            let mut drop = 0.0;
+            let mut vuln = 5.0;
+            for (ci, &s) in g.iter().enumerate() {
+                let s = s as f64;
+                util -= 3.0 * s; // more approximation => cheaper
+                drop += s * s * 0.7 + 0.3 * s * ci as f64; // and less accurate
+                vuln += s * (k - s) * 0.9 - 0.2 * s; // non-monotone mix
+            }
+            DesignPoint {
+                net: self.space.net.clone(),
+                mult: "synthetic".into(),
+                mask: self.space.mask(g),
+                config_string: self.space.config_digits(g),
+                base_acc: 0.9,
+                ax_acc: 0.9 - drop / 100.0,
+                acc_drop_pct: drop,
+                fi_mean_acc: 0.9 - vuln / 100.0,
+                fault_vuln_pct: vuln,
+                cycles: 1000 + util as u64,
+                luts: 100,
+                ffs: 100,
+                util_pct: util,
+                power_mw: 1.0,
+            }
+        }
+    }
+
+    impl EvalBackend for SynthBackend {
+        fn eval(&self, names: &[&str], _with_fi: bool) -> DesignPoint {
+            let g: Genotype = names
+                .iter()
+                .map(|n| {
+                    self.space.alphabet.iter().position(|a| a == n).expect("name in alphabet")
+                        as u8
+                })
+                .collect();
+            self.point(&g)
+        }
+    }
+
+    fn synth_space(rng: &mut Rng) -> SearchSpace {
+        let names = ["exact", "ax_a", "ax_b", "ax_c"];
+        let n = 2 + rng.usize_below(3); // 2..=4 layers
+        let k = 2 + rng.usize_below(3); // 2..=4 symbols
+        SearchSpace::with_dims(
+            "synth",
+            n,
+            names[..k].iter().map(|s| s.to_string()).collect(),
+            &"x".repeat(n),
+        )
+    }
+
+    fn frontier_coords(out: &SearchOutcome) -> Vec<(i64, i64)> {
+        let mut v: Vec<(i64, i64)> = out
+            .frontier()
+            .iter()
+            .map(|p| ((p.util_pct * 1e6) as i64, (p.fault_vuln_pct * 1e6) as i64))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn property_full_budget_reproduces_exhaustive_frontier() {
+        check("budget >= space => exhaustive frontier", 0xB0D6, 25, |rng| {
+            let space = synth_space(rng);
+            let backend = SynthBackend { space: space.clone() };
+            let size = space.size() as usize;
+            let exhaustive = run_search(
+                &space,
+                &SearchSpec { budget: size, ..SearchSpec::new(Strategy::Exhaustive) },
+                &backend,
+                &mut NoCache,
+            );
+            assert_eq!(exhaustive.evals_used, size);
+            for strat in [Strategy::Nsga2, Strategy::Anneal, Strategy::HillClimb] {
+                let out = run_search(
+                    &space,
+                    &SearchSpec {
+                        budget: size,
+                        seed: rng.next_u64(),
+                        ..SearchSpec::new(strat)
+                    },
+                    &backend,
+                    &mut NoCache,
+                );
+                assert_eq!(out.evals_used, size, "{strat:?} must cover the space");
+                assert_eq!(
+                    frontier_coords(&out),
+                    frontier_coords(&exhaustive),
+                    "{strat:?} frontier differs"
+                );
+                let hv_ratio = out.hypervolume() / exhaustive.hypervolume().max(1e-12);
+                assert!((hv_ratio - 1.0).abs() < 1e-9, "{strat:?} hv ratio {hv_ratio}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_budget_respected_and_archive_unique() {
+        check("budget respected; archive unique", 0xBEEF, 25, |rng| {
+            let space = synth_space(rng);
+            let backend = SynthBackend { space: space.clone() };
+            let size = space.size() as usize;
+            let budget = 1 + rng.usize_below(size);
+            for strat in [Strategy::Nsga2, Strategy::Anneal, Strategy::HillClimb] {
+                let out = run_search(
+                    &space,
+                    &SearchSpec { budget, seed: rng.next_u64(), ..SearchSpec::new(strat) },
+                    &backend,
+                    &mut NoCache,
+                );
+                assert!(out.evals_used <= budget, "{strat:?} used {} > {budget}", out.evals_used);
+                assert_eq!(out.evaluated.len(), out.evals_used);
+                let mut gs = out.genotypes.clone();
+                gs.sort();
+                gs.dedup();
+                assert_eq!(gs.len(), out.genotypes.len(), "{strat:?} archive has duplicates");
+            }
+        });
+    }
+
+    #[test]
+    fn trace_hypervolume_monotone() {
+        let mut rng = Rng::new(9);
+        let space = synth_space(&mut rng);
+        let backend = SynthBackend { space: space.clone() };
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: space.size() as usize, ..SearchSpec::new(Strategy::Nsga2) },
+            &backend,
+            &mut NoCache,
+        );
+        for w in out.trace.windows(2) {
+            assert!(w[1].hypervolume >= w[0].hypervolume - 1e-12);
+            assert!(w[1].evals >= w[0].evals);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone() };
+        let mk = |workers| SearchSpec {
+            budget: 12,
+            seed: 77,
+            workers,
+            ..SearchSpec::new(Strategy::Nsga2)
+        };
+        let serial = run_search(&space, &mk(1), &backend, &mut NoCache);
+        let parallel = run_search(&space, &mk(4), &backend, &mut NoCache);
+        assert_eq!(serial.genotypes, parallel.genotypes);
+        assert_eq!(frontier_coords(&serial), frontier_coords(&parallel));
+    }
+
+    #[test]
+    fn seeds_dominate_low_budget_runs() {
+        // with budget == number of seeds, the archive is exactly the seeds
+        let space = SearchSpace::with_dims(
+            "synth",
+            4,
+            vec!["exact".into(), "ax_a".into()],
+            "xxxx",
+        );
+        let backend = SynthBackend { space: space.clone() };
+        let n_seeds = space.seeds().len();
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: n_seeds, ..SearchSpec::new(Strategy::Nsga2) },
+            &backend,
+            &mut NoCache,
+        );
+        assert_eq!(out.evals_used, n_seeds);
+        assert!(out.genotypes.contains(&vec![0, 0, 0, 0]));
+        assert!(out.genotypes.contains(&vec![1, 1, 1, 1]));
+    }
+}

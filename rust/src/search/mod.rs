@@ -1,0 +1,36 @@
+//! search — scalable multi-objective DSE over heterogeneous per-layer
+//! multiplier assignments.
+//!
+//! The paper enumerates the full `2^n` layer-mask space per approximate
+//! multiplier, which caps DeepAxe at small custom nets. This subsystem
+//! replaces enumeration with budgeted search over a *generalized* genotype
+//! — one multiplier choice per computing layer — of which the paper's
+//! `mask × single-AxM` space is the two-symbol special case:
+//!
+//! * [`space`] — genotype encode/decode ↔ config strings, neighborhood,
+//!   crossover/mutation operators (seeded from [`crate::util::rng`]).
+//! * [`nsga2`] — fast non-dominated sort, crowding distance, binary
+//!   tournament; objectives: accuracy drop, fault vulnerability, LUT+FF
+//!   utilization.
+//! * [`anneal`] — simulated annealing and greedy hill-climb baselines over
+//!   scalarized objectives.
+//! * [`driver`] — evaluation budget, parallel population evaluation on
+//!   [`crate::util::threadpool`], dedup through
+//!   [`crate::dse::cache::ResultCache`], convergence trace with the
+//!   hypervolume indicator from [`crate::dse::pareto`].
+//!
+//! The Fig. 2 pipeline selects a [`Strategy`]
+//! (`Exhaustive | Nsga2 | Anneal | HillClimb`) through
+//! [`crate::coordinator::pipeline::PipelineSpec`]; `repro search` exposes
+//! the driver directly.
+
+pub mod anneal;
+pub mod driver;
+pub mod nsga2;
+pub mod space;
+
+pub use driver::{
+    frontier_hv, run_search, CacheHook, EvalBackend, EvaluatorBackend, NoCache,
+    ResultCacheHook, SearchOutcome, SearchSpec, Strategy, TracePoint, HV_REF,
+};
+pub use space::{Genotype, SearchSpace};

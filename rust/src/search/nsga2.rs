@@ -1,0 +1,277 @@
+//! NSGA-II machinery: fast non-dominated sort, crowding distance, binary
+//! tournament and (μ+λ) environmental selection (Deb et al., 2002).
+//!
+//! Objectives are minimized triples `[accuracy drop, fault vulnerability,
+//! LUT+FF utilization]`. NaN objectives (FI skipped) compare as `+inf`, so
+//! NaN-bearing points are ranked strictly worse than any finite point on
+//! that objective and can never displace a fully-evaluated design.
+
+use crate::dse::DesignPoint;
+use crate::util::rng::Rng;
+
+pub const N_OBJ: usize = 3;
+
+/// The search's minimized objective vector for one design point.
+pub fn objectives(p: &DesignPoint) -> [f64; N_OBJ] {
+    [p.acc_drop_pct, p.fault_vuln_pct, p.util_pct]
+}
+
+/// NaN → +inf so comparisons are total (see module docs).
+fn key(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::INFINITY
+    } else {
+        v
+    }
+}
+
+/// True iff `a` Pareto-dominates `b` (all objectives minimized, NaN worst).
+pub fn obj_dominates(a: &[f64; N_OBJ], b: &[f64; N_OBJ]) -> bool {
+    let mut strict = false;
+    for m in 0..N_OBJ {
+        let (x, y) = (key(a[m]), key(b[m]));
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Fronts in rank order: `fronts[0]` is the non-dominated set, `fronts[1]`
+/// is non-dominated once `fronts[0]` is removed, and so on.
+pub fn fast_nondominated_sort(objs: &[[f64; N_OBJ]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if obj_dominates(&objs[i], &objs[j]) {
+                dominated[i].push(j);
+                count[j] += 1;
+            } else if obj_dominates(&objs[j], &objs[i]) {
+                dominated[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distances aligned with `front`'s order; boundary points get
+/// `+inf` so selection preserves the frontier's extremes.
+pub fn crowding_distances(objs: &[[f64; N_OBJ]], front: &[usize]) -> Vec<f64> {
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    for m in 0..N_OBJ {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| key(objs[front[a]][m]).total_cmp(&key(objs[front[b]][m])));
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let span = key(objs[front[order[n - 1]]][m]) - key(objs[front[order[0]]][m]);
+        if !span.is_finite() || span <= 0.0 {
+            continue;
+        }
+        for w in 1..n - 1 {
+            let lo = key(objs[front[order[w - 1]]][m]);
+            let hi = key(objs[front[order[w + 1]]][m]);
+            dist[order[w]] += (hi - lo) / span;
+        }
+    }
+    dist
+}
+
+/// Per-individual (rank, crowding) — the NSGA-II fitness.
+#[derive(Debug, Clone, Copy)]
+pub struct Ranked {
+    pub rank: usize,
+    pub crowding: f64,
+}
+
+pub fn rank_population(objs: &[[f64; N_OBJ]]) -> Vec<Ranked> {
+    let mut out = vec![Ranked { rank: usize::MAX, crowding: 0.0 }; objs.len()];
+    for (r, front) in fast_nondominated_sort(objs).iter().enumerate() {
+        let crowd = crowding_distances(objs, front);
+        for (&i, &c) in front.iter().zip(&crowd) {
+            out[i] = Ranked { rank: r, crowding: c };
+        }
+    }
+    out
+}
+
+/// Indices of the `mu` survivors: whole fronts in rank order, the cut
+/// front resolved by descending crowding distance.
+pub fn select_survivors(objs: &[[f64; N_OBJ]], mu: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(mu.min(objs.len()));
+    for front in fast_nondominated_sort(objs) {
+        if out.len() + front.len() <= mu {
+            out.extend(&front);
+        } else {
+            let crowd = crowding_distances(objs, &front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| crowd[b].total_cmp(&crowd[a]));
+            out.extend(order.into_iter().take(mu - out.len()).map(|k| front[k]));
+        }
+        if out.len() >= mu {
+            break;
+        }
+    }
+    out
+}
+
+/// Binary tournament on (rank asc, crowding desc); returns an index into
+/// `ranked`.
+pub fn binary_tournament(rng: &mut Rng, ranked: &[Ranked]) -> usize {
+    let a = rng.usize_below(ranked.len());
+    let b = rng.usize_below(ranked.len());
+    let better = ranked[a].rank < ranked[b].rank
+        || (ranked[a].rank == ranked[b].rank && ranked[a].crowding > ranked[b].crowding);
+    if better {
+        a
+    } else {
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::pareto::pareto_front;
+    use crate::util::proptest::check;
+
+    fn obj2(x: f64, y: f64) -> [f64; N_OBJ] {
+        // third objective held constant so 2-D intuition applies
+        [x, y, 0.0]
+    }
+
+    #[test]
+    fn dominance_nan_worst() {
+        assert!(obj_dominates(&[1.0, 1.0, 1.0], &[1.0, f64::NAN, 1.0]));
+        assert!(!obj_dominates(&[1.0, f64::NAN, 1.0], &[1.0, 2.0, 1.0]));
+        // NaN vs NaN on the same objective: equal (inf == inf), no strict win
+        assert!(!obj_dominates(&[1.0, f64::NAN, 1.0], &[1.0, f64::NAN, 1.0]));
+        assert!(obj_dominates(&[0.5, f64::NAN, 1.0], &[1.0, f64::NAN, 1.0]));
+    }
+
+    #[test]
+    fn sort_simple_fronts() {
+        let objs = vec![obj2(1.0, 5.0), obj2(2.0, 3.0), obj2(3.0, 4.0), obj2(4.0, 1.0)];
+        let fronts = fast_nondominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0, 1, 3]);
+        assert_eq!(fronts[1], vec![2]);
+        // every index appears exactly once
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, objs.len());
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let objs = vec![obj2(1.0, 4.0), obj2(2.0, 3.0), obj2(3.0, 2.0), obj2(4.0, 1.0)];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distances(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn survivors_keep_extremes() {
+        let objs = vec![
+            obj2(0.0, 10.0),
+            obj2(10.0, 0.0),
+            obj2(5.0, 5.0),
+            obj2(5.1, 5.1),
+            obj2(4.9, 5.2),
+        ];
+        let s = select_survivors(&objs, 3);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(&0) && s.contains(&1), "{s:?}");
+    }
+
+    #[test]
+    fn property_rank0_agrees_with_pareto_front() {
+        check("nsga2 rank-0 == pareto_front (distinct coords)", 0x2D50, 50, |rng| {
+            let n = 2 + rng.usize_below(40);
+            // coarse grid so duplicates and ties actually occur
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.below(8) as f64, rng.below(8) as f64)).collect();
+            let objs: Vec<[f64; N_OBJ]> = pts.iter().map(|p| obj2(p.0, p.1)).collect();
+            let rank0 = &fast_nondominated_sort(&objs)[0];
+            let front = pareto_front(&pts, |p| p.0, |p| p.1);
+            // pareto_front dedups identical coordinates; compare coord sets
+            let mut a: Vec<(u64, u64)> =
+                rank0.iter().map(|&i| (pts[i].0 as u64, pts[i].1 as u64)).collect();
+            let mut b: Vec<(u64, u64)> =
+                front.iter().map(|&i| (pts[i].0 as u64, pts[i].1 as u64)).collect();
+            a.sort();
+            a.dedup();
+            b.sort();
+            b.dedup();
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn property_fronts_partition_and_rank_correct() {
+        check("fronts partition population", 0xF00D, 30, |rng| {
+            let n = 1 + rng.usize_below(30);
+            let objs: Vec<[f64; N_OBJ]> =
+                (0..n).map(|_| [rng.f64(), rng.f64(), rng.f64()]).collect();
+            let fronts = fast_nondominated_sort(&objs);
+            let mut seen = vec![false; n];
+            for f in &fronts {
+                for &i in f {
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            // no point in front k is dominated by a point in front k or later
+            for (k, f) in fronts.iter().enumerate() {
+                for &i in f {
+                    for later in &fronts[k..] {
+                        for &j in later {
+                            assert!(!obj_dominates(&objs[j], &objs[i]));
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tournament_prefers_better_rank() {
+        let ranked = vec![
+            Ranked { rank: 0, crowding: f64::INFINITY },
+            Ranked { rank: 5, crowding: 0.0 },
+        ];
+        let mut rng = Rng::new(3);
+        let mut zero_wins = 0;
+        for _ in 0..200 {
+            if binary_tournament(&mut rng, &ranked) == 0 {
+                zero_wins += 1;
+            }
+        }
+        // index 0 wins every tournament it appears in (~75% of draws)
+        assert!(zero_wins > 120, "{zero_wins}");
+    }
+}

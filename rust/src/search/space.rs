@@ -1,0 +1,391 @@
+//! Genotype space: one multiplier choice per computing layer.
+//!
+//! The paper's configuration space — one approximate multiplier plus a
+//! binary layer mask — is the special case of a two-symbol alphabet
+//! `[exact, AxM]`. The generalized genotype is a vector of alphabet
+//! indices, one per computing layer, rendered as a digit string in the
+//! net's config template (e.g. genotype `[0, 2, 1, 3, 0]` on LeNet-5 →
+//! `"0-2-130"`, digit = index into the multiplier alphabet). Symbol 0 is
+//! always `exact`, so `mask()` (the paper's approximation mask) is simply
+//! "gene != 0".
+
+use crate::simnet::QNet;
+use crate::util::rng::Rng;
+
+/// Per-layer alphabet indices (`alphabet[g[ci]]` is layer ci's multiplier).
+pub type Genotype = Vec<u8>;
+
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub net: String,
+    pub n_layers: usize,
+    /// multiplier names; `alphabet[0]` is always `"exact"`
+    pub alphabet: Vec<String>,
+    /// config template, `x` per computing layer with paper-style `-`
+    /// separators (e.g. `"x-x-xxx"`)
+    pub template: String,
+}
+
+impl SearchSpace {
+    /// Space over `net`'s computing layers with `alphabet[0] == "exact"`.
+    pub fn new(net: &QNet, alphabet: Vec<String>) -> SearchSpace {
+        let template = if net.config_template.chars().filter(|c| *c != '-').count() == net.n_comp()
+        {
+            net.config_template.clone()
+        } else {
+            "x".repeat(net.n_comp())
+        };
+        Self::with_dims(&net.name, net.n_comp(), alphabet, &template)
+    }
+
+    /// The paper's space: exact plus the given AxMs, heterogeneous mixing
+    /// allowed. Duplicate names are dropped so aliased symbols cannot make
+    /// one physical design count as several genotypes.
+    pub fn paper(net: &QNet, mults: &[String]) -> SearchSpace {
+        let mut alphabet = vec!["exact".to_string()];
+        for m in mults {
+            if !alphabet.contains(m) {
+                alphabet.push(m.clone());
+            }
+        }
+        SearchSpace::new(net, alphabet)
+    }
+
+    /// Net-free constructor (unit tests, synthetic backends).
+    pub fn with_dims(net: &str, n_layers: usize, alphabet: Vec<String>, template: &str) -> SearchSpace {
+        assert!(n_layers > 0 && n_layers <= 63, "1..=63 computing layers");
+        assert!(
+            (2..=10).contains(&alphabet.len()),
+            "alphabet must have 2..=10 symbols (digit rendering)"
+        );
+        assert_eq!(alphabet[0], "exact", "alphabet[0] must be the exact multiplier");
+        assert_eq!(
+            template.chars().filter(|c| *c != '-').count(),
+            n_layers,
+            "template layer slots must match n_layers"
+        );
+        SearchSpace { net: net.to_string(), n_layers, alphabet, template: template.to_string() }
+    }
+
+    /// Number of configurations (saturating).
+    pub fn size(&self) -> u128 {
+        let mut s: u128 = 1;
+        for _ in 0..self.n_layers {
+            s = s.saturating_mul(self.alphabet.len() as u128);
+        }
+        s
+    }
+
+    pub fn n_symbols(&self) -> u8 {
+        self.alphabet.len() as u8
+    }
+
+    pub fn random(&self, rng: &mut Rng) -> Genotype {
+        (0..self.n_layers).map(|_| rng.below(self.alphabet.len() as u64) as u8).collect()
+    }
+
+    /// Per-layer multiplier names.
+    pub fn decode<'a>(&'a self, g: &Genotype) -> Vec<&'a str> {
+        assert_eq!(g.len(), self.n_layers);
+        g.iter().map(|&s| self.alphabet[s as usize].as_str()).collect()
+    }
+
+    /// Canonical per-layer assignment string (cache key material).
+    pub fn canonical(&self, g: &Genotype) -> String {
+        self.decode(g).join(",")
+    }
+
+    /// Digit rendering in the paper's template, e.g. `"0-2-130"`.
+    pub fn config_digits(&self, g: &Genotype) -> String {
+        assert_eq!(g.len(), self.n_layers);
+        let mut ci = 0;
+        self.template
+            .chars()
+            .map(|c| {
+                if c == '-' {
+                    '-'
+                } else {
+                    let d = char::from(b'0' + g[ci]);
+                    ci += 1;
+                    d
+                }
+            })
+            .collect()
+    }
+
+    /// Inverse of [`config_digits`](Self::config_digits): parse a digit
+    /// string (dashes/spaces ignored) back into a genotype.
+    pub fn parse_digits(&self, s: &str) -> Result<Genotype, String> {
+        let mut g = Genotype::new();
+        for ch in s.chars() {
+            match ch {
+                '-' | ' ' => {}
+                '0'..='9' => {
+                    let d = ch as u8 - b'0';
+                    if d >= self.n_symbols() {
+                        return Err(format!("digit {ch} out of alphabet range in {s:?}"));
+                    }
+                    g.push(d);
+                }
+                other => return Err(format!("bad config char {other:?} in {s:?}")),
+            }
+        }
+        if g.len() != self.n_layers {
+            return Err(format!("{s:?} has {} layer digits, net has {}", g.len(), self.n_layers));
+        }
+        Ok(g)
+    }
+
+    /// The paper's approximation mask: bit ci set iff layer ci is not exact.
+    pub fn mask(&self, g: &Genotype) -> u64 {
+        g.iter().enumerate().fold(0, |m, (ci, &s)| if s != 0 { m | 1 << ci } else { m })
+    }
+
+    /// `Some(symbol)` if every non-exact gene uses the same symbol (the
+    /// paper's homogeneous case; `Some(0)` = fully exact), `None` if mixed.
+    pub fn homogeneous(&self, g: &Genotype) -> Option<u8> {
+        let mut sym = 0u8;
+        for &s in g {
+            if s != 0 {
+                if sym != 0 && sym != s {
+                    return None;
+                }
+                sym = s;
+            }
+        }
+        Some(sym)
+    }
+
+    /// Point mutation: each gene resampled with probability `1/n_layers`;
+    /// at least one gene always changes.
+    pub fn mutate(&self, rng: &mut Rng, g: &Genotype) -> Genotype {
+        let mut out = g.clone();
+        let mut changed = false;
+        for gene in out.iter_mut() {
+            if rng.usize_below(self.n_layers) == 0 {
+                *gene = self.other_symbol(rng, *gene);
+                changed = true;
+            }
+        }
+        if !changed {
+            let i = rng.usize_below(self.n_layers);
+            out[i] = self.other_symbol(rng, out[i]);
+        }
+        out
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, rng: &mut Rng, a: &Genotype, b: &Genotype) -> Genotype {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| if rng.below(2) == 0 { x } else { y }).collect()
+    }
+
+    /// All Hamming-distance-1 variants (`n_layers * (n_symbols-1)` of them).
+    pub fn neighbors(&self, g: &Genotype) -> Vec<Genotype> {
+        let mut out = Vec::with_capacity(self.n_layers * (self.alphabet.len() - 1));
+        for i in 0..self.n_layers {
+            for s in 0..self.n_symbols() {
+                if s != g[i] {
+                    let mut n = g.clone();
+                    n[i] = s;
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn random_neighbor(&self, rng: &mut Rng, g: &Genotype) -> Genotype {
+        let mut out = g.clone();
+        let i = rng.usize_below(self.n_layers);
+        out[i] = self.other_symbol(rng, out[i]);
+        out
+    }
+
+    fn other_symbol(&self, rng: &mut Rng, cur: u8) -> u8 {
+        let k = self.alphabet.len() as u64;
+        let r = rng.below(k - 1) as u8;
+        if r >= cur {
+            r + 1
+        } else {
+            r
+        }
+    }
+
+    /// Every configuration, lexicographic (panics above `max` entries).
+    pub fn enumerate_capped(&self, max: usize) -> Vec<Genotype> {
+        let size = self.size();
+        assert!(size <= max as u128, "space too large to enumerate ({size} > {max})");
+        self.enumerate_first(size as usize)
+    }
+
+    /// The first `n` configurations in lexicographic order (all of them if
+    /// the space is smaller) — lazy prefix, never panics on large spaces.
+    pub fn enumerate_first(&self, n: usize) -> Vec<Genotype> {
+        let n = (n as u128).min(self.size()) as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut g = vec![0u8; self.n_layers];
+        while out.len() < n {
+            out.push(g.clone());
+            // odometer increment
+            let mut i = 0;
+            loop {
+                if i == self.n_layers {
+                    return out;
+                }
+                g[i] += 1;
+                if g[i] < self.n_symbols() {
+                    break;
+                }
+                g[i] = 0;
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Warm-start seeds: fully exact, each uniform full approximation, and
+    /// every single-layer substitution. These are the structured designs
+    /// the paper's tables are built from, and they anchor the frontier's
+    /// extremes before any random exploration happens.
+    pub fn seeds(&self) -> Vec<Genotype> {
+        let mut out = vec![vec![0u8; self.n_layers]];
+        for s in 1..self.n_symbols() {
+            out.push(vec![s; self.n_layers]);
+        }
+        if self.n_layers > 1 {
+            for i in 0..self.n_layers {
+                for s in 1..self.n_symbols() {
+                    let mut g = vec![0u8; self.n_layers];
+                    g[i] = s;
+                    out.push(g);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn abc(n: usize) -> Vec<String> {
+        let names = ["exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"];
+        names[..n].iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn size_and_enumerate() {
+        let sp = SearchSpace::with_dims("t", 3, abc(2), "xxx");
+        assert_eq!(sp.size(), 8);
+        let all = sp.enumerate_capped(16);
+        assert_eq!(all.len(), 8);
+        let mut uniq = all.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 8);
+    }
+
+    #[test]
+    fn enumerate_first_is_lazy_prefix() {
+        let sp = SearchSpace::with_dims("t", 3, abc(2), "xxx");
+        let prefix = sp.enumerate_first(3);
+        assert_eq!(prefix, vec![vec![0, 0, 0], vec![1, 0, 0], vec![0, 1, 0]]);
+        assert_eq!(sp.enumerate_first(3), sp.enumerate_capped(8)[..3].to_vec());
+        // n beyond the space clamps; no panic on huge requests
+        assert_eq!(sp.enumerate_first(usize::MAX).len(), 8);
+        // large space: only the requested prefix is materialized
+        let big = SearchSpace::with_dims("t", 40, abc(4), &"x".repeat(40));
+        assert_eq!(big.enumerate_first(5).len(), 5);
+    }
+
+    #[test]
+    fn paper_alphabet_dedups_aliased_mults() {
+        let net = crate::simnet::testutil::tiny_mlp();
+        let sp = SearchSpace::paper(
+            &net,
+            &[
+                "mul8s_1kvp_s".to_string(),
+                "mul8s_1kvp_s".to_string(), // duplicate alias
+                "exact".to_string(),        // exact is already symbol 0
+                "mul8s_1kv9_s".to_string(),
+            ],
+        );
+        assert_eq!(sp.alphabet, vec!["exact", "mul8s_1kvp_s", "mul8s_1kv9_s"]);
+        assert_eq!(sp.size(), 9); // 3 symbols ^ 2 layers
+    }
+
+    #[test]
+    fn digits_template_rendering() {
+        let sp = SearchSpace::with_dims("lenet5", 5, abc(4), "x-x-xxx");
+        assert_eq!(sp.config_digits(&vec![0, 2, 1, 3, 0]), "0-2-130");
+        assert_eq!(sp.config_digits(&vec![0; 5]), "0-0-000");
+    }
+
+    #[test]
+    fn mask_and_homogeneous() {
+        let sp = SearchSpace::with_dims("t", 4, abc(3), "xxxx");
+        assert_eq!(sp.mask(&vec![0, 1, 0, 1]), 0b1010);
+        assert_eq!(sp.homogeneous(&vec![0, 1, 0, 1]), Some(1));
+        assert_eq!(sp.homogeneous(&vec![0, 0, 0, 0]), Some(0));
+        assert_eq!(sp.homogeneous(&vec![0, 1, 2, 0]), None);
+    }
+
+    #[test]
+    fn property_digits_roundtrip() {
+        check("genotype digits roundtrip", 0x5EED, 60, |rng| {
+            let n = 1 + rng.usize_below(8);
+            let k = 2 + rng.usize_below(3);
+            let sp = SearchSpace::with_dims("t", n, abc(k), &"x".repeat(n));
+            let g = sp.random(rng);
+            let s = sp.config_digits(&g);
+            assert_eq!(sp.parse_digits(&s).unwrap(), g);
+        });
+    }
+
+    #[test]
+    fn parse_rejects_bad_inputs() {
+        let sp = SearchSpace::with_dims("t", 3, abc(2), "xxx");
+        assert!(sp.parse_digits("012").is_err()); // digit 2 out of range
+        assert!(sp.parse_digits("01").is_err()); // too short
+        assert!(sp.parse_digits("0x1").is_err()); // bad char
+        assert_eq!(sp.parse_digits("0-1 1").unwrap(), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn property_operators_stay_in_space() {
+        check("mutate/crossover/neighbors valid", 0x0A11, 40, |rng| {
+            let n = 1 + rng.usize_below(6);
+            let k = 2 + rng.usize_below(3);
+            let sp = SearchSpace::with_dims("t", n, abc(k), &"x".repeat(n));
+            let a = sp.random(rng);
+            let b = sp.random(rng);
+            let m = sp.mutate(rng, &a);
+            assert_eq!(m.len(), n);
+            assert_ne!(m, a, "mutation must change at least one gene");
+            assert!(m.iter().all(|&s| (s as usize) < k));
+            let c = sp.crossover(rng, &a, &b);
+            assert!(c.iter().zip(a.iter().zip(&b)).all(|(&g, (&x, &y))| g == x || g == y));
+            for nb in sp.neighbors(&a) {
+                let d: usize = nb.iter().zip(&a).filter(|(x, y)| x != y).count();
+                assert_eq!(d, 1);
+            }
+            assert_eq!(sp.neighbors(&a).len(), n * (k - 1));
+        });
+    }
+
+    #[test]
+    fn seeds_structured_and_unique() {
+        let sp = SearchSpace::with_dims("t", 5, abc(4), "xxxxx");
+        let seeds = sp.seeds();
+        // exact + 3 fulls + 5*3 singles
+        assert_eq!(seeds.len(), 1 + 3 + 15);
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        assert!(seeds.contains(&vec![0; 5]) && seeds.contains(&vec![1; 5]));
+    }
+}

@@ -79,6 +79,43 @@ where
     run_jobs(workers, jobs)
 }
 
+/// Borrow-friendly parallel map over a slice (scoped threads, order
+/// preserved). Unlike [`par_map`], `f` and the items may borrow from the
+/// caller's stack — this is what lets the search driver evaluate a
+/// population against a borrowed `Evaluator` without cloning networks or
+/// LUTs. Panics in `f` propagate when the scope joins.
+pub fn scoped_map<I, T, F>(workers: usize, items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(&items[i]);
+                slots.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("scoped_map result missing"))
+        .collect()
+}
+
 /// Default worker count: `DEEPAXE_WORKERS` env or available parallelism.
 pub fn default_workers() -> usize {
     super::cli::env_usize(
@@ -124,6 +161,31 @@ mod tests {
             Box::new(|| 3),
         ];
         run_jobs(2, jobs);
+    }
+
+    #[test]
+    fn scoped_map_borrows_and_preserves_order() {
+        let data: Vec<u64> = (0..200).collect();
+        let offset = 7u64; // borrowed by the closure, lives on this stack
+        let out = scoped_map(4, &data, |x| x * 2 + offset);
+        assert_eq!(out, data.iter().map(|x| x * 2 + offset).collect::<Vec<_>>());
+        // serial path
+        let one = scoped_map(1, &data[..3], |x| *x);
+        assert_eq!(one, vec![0, 1, 2]);
+        let empty: Vec<u64> = scoped_map(4, &[] as &[u64], |x: &u64| *x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped boom")]
+    fn scoped_map_panic_propagates() {
+        let data = vec![1, 2, 3];
+        let _ = scoped_map(2, &data, |x| {
+            if *x == 2 {
+                panic!("scoped boom");
+            }
+            *x
+        });
     }
 
     #[test]

@@ -68,3 +68,36 @@ fn exp_table1_runs() {
     assert!(text.contains("mul8s_1KVP"));
     assert!(text.contains("Table I"));
 }
+
+#[test]
+fn search_subcommand_runs_budgeted() {
+    let out = repro(&[
+        "search", "--net", "mlp3", "--strategy", "nsga2", "--budget", "10",
+        "--faults", "4", "--images", "8", "--eval-images", "32",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("search frontier"), "{text}");
+    assert!(text.contains("hypervolume"), "{text}");
+    assert!(text.contains("evaluations:"), "{text}");
+}
+
+#[test]
+fn search_rejects_unknown_strategy() {
+    let out = repro(&["search", "--net", "mlp3", "--strategy", "quantum"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown strategy"), "{err}");
+}
+
+#[test]
+fn pipeline_accepts_strategy_flag() {
+    let out = repro(&[
+        "pipeline", "--net", "mlp3", "--strategy", "anneal", "--budget", "8",
+        "--max-acc-drop", "50", "--max-vuln", "100",
+        "--faults", "4", "--images", "8", "--eval-images", "32",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pipeline[anneal]"), "{text}");
+}

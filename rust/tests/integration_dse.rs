@@ -125,6 +125,8 @@ fn pipeline_selects_feasible_design() {
             sampling: SiteSampling::UniformLayer,
             replay: true,
         },
+        strategy: deepaxe::search::Strategy::Exhaustive,
+        budget: 0,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert_eq!(out.accuracy_sweep.len(), 2 * 7 + 1); // 2 mults x 7 nonzero masks + exact
@@ -157,6 +159,8 @@ fn pipeline_infeasible_requirements() {
             sampling: SiteSampling::UniformLayer,
             replay: true,
         },
+        strategy: deepaxe::search::Strategy::Exhaustive,
+        budget: 0,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert!(out.fi_points.is_empty());

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + test suite, plus formatting check when
+# rustfmt is installed. Run from anywhere; operates on the repo root.
+#
+# Knobs:
+#   CI_SKIP_FMT=1   skip the cargo fmt --check step
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — tier-1 cannot run in this image." >&2
+    echo "ci.sh: install the rust toolchain (rustc >= 1.73) and re-run." >&2
+    exit 1
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+# Integration tests additionally need ./artifacts (make artifacts); unit
+# tests run regardless.
+cargo test -q
+
+if [ "${CI_SKIP_FMT:-0}" != "1" ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== style: cargo fmt --check =="
+        cargo fmt --check
+    else
+        echo "ci.sh: rustfmt not installed; skipping format check." >&2
+    fi
+fi
+
+echo "ci.sh: all checks passed"
