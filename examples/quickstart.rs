@@ -44,6 +44,8 @@ fn main() -> Result<()> {
         fi: CampaignParams::default_for("lenet5"),
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
+        fi_epsilon: 0.0,
+        fi_screen: 0,
     };
     println!(
         "\nrunning DeepAxe pipeline (max acc drop {:.1}pp, max vulnerability {:.1}pp)...",

@@ -1,0 +1,89 @@
+//! Staged-evaluation harness: points-evaluated-per-second at each fidelity
+//! tier on LeNet-5, plus the headline ratio — unique design points bought
+//! per full-campaign-equivalent of FI budget, staged ladder vs the
+//! monolithic all-FiFull path (1.0 by definition). Emits one JSON line per
+//! measurement so BENCH_*.json tooling can track the speedup.
+
+mod bench_common;
+
+use deepaxe::dse::Evaluator;
+use deepaxe::eval::{Fidelity, FidelitySpec, StagedBackend, StagedEvaluator};
+use deepaxe::faultsim::CampaignParams;
+use deepaxe::report::experiments::default_eval_images;
+use deepaxe::search::{run_search, Genotype, NoCache, SearchSpace, SearchSpec, Strategy};
+use deepaxe::util::bench::black_box;
+use deepaxe::util::json;
+use deepaxe::util::rng::Rng;
+use std::time::Instant;
+
+fn emit(bench: &str, tier: &str, value_name: &str, value: f64) {
+    let j = json::obj(vec![
+        ("bench", json::str(bench)),
+        ("tier", json::str(tier)),
+        (value_name, json::num(value)),
+    ]);
+    println!("{j}");
+}
+
+fn main() {
+    let ctx = bench_common::setup(60, 40, 100);
+    let net = ctx.net("lenet5").expect("lenet5");
+    let data = ctx.data_for(&net).expect("dataset");
+    let fi = CampaignParams::default_for(&net.name);
+    let ev = Evaluator::new(&net, &data, &ctx.luts, default_eval_images(), fi.clone());
+    let mults: Vec<String> =
+        deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let space = SearchSpace::paper(&net, &mults);
+
+    // ladder defaults for the bench: 20%-of-campaign screens, 0.5pp CI
+    let spec = FidelitySpec {
+        epsilon_pp: 0.5,
+        screen_faults: (fi.n_faults / 5).max(8),
+        ..FidelitySpec::exact()
+    };
+    let staged = StagedEvaluator::new(&ev, spec.clone());
+
+    // -- tier throughput: same genotype set through every tier ------------
+    let mut rng = Rng::new(0xBE7C);
+    let genos: Vec<Genotype> = (0..8).map(|_| space.random(&mut rng)).collect();
+    for fidelity in Fidelity::ALL {
+        let t0 = Instant::now();
+        for g in &genos {
+            black_box(staged.evaluate(&space.decode(g), fidelity, None));
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let pps = genos.len() as f64 / dt;
+        println!(
+            "bench eval:{:<6} {} points in {:6.2}s = {:8.2} points/s",
+            fidelity.name(),
+            genos.len(),
+            dt,
+            pps
+        );
+        emit("bench_eval_tier", fidelity.name(), "points_per_s", pps);
+    }
+
+    // -- headline: unique points per full-campaign-equivalent -------------
+    // monolithic FiFull evaluation pays exactly 1.0 full campaign per
+    // unique point; the staged driver screens everything and promotes only
+    // frontier survivors, so it buys more points from the same FI budget
+    let budget = 48;
+    let screened_ev = StagedEvaluator::new(&ev, spec);
+    let backend = StagedBackend { st: &screened_ev };
+    let mut sspec = SearchSpec::new(Strategy::Nsga2);
+    sspec.budget = budget;
+    sspec.seed = fi.seed;
+    sspec.screen = true;
+    let t0 = Instant::now();
+    let out = run_search(&space, &sspec, &backend, &mut NoCache);
+    let dt = t0.elapsed().as_secs_f64();
+    let equivalents = screened_ev.ledger().full_equivalents(fi.n_faults).max(1e-9);
+    let points_per_campaign = out.evals_used as f64 / equivalents;
+    println!("{}", screened_ev.ledger().summary(fi.n_faults));
+    println!(
+        "bench eval:staged-search {} unique points ({} promotions) for {:.1} full-campaign equivalents in {:.2}s -> {:.2} points per campaign (monolithic: 1.00)",
+        out.evals_used, out.promotions, equivalents, dt, points_per_campaign,
+    );
+    emit("bench_eval_search", "staged", "points_per_campaign", points_per_campaign);
+    emit("bench_eval_search", "staged", "points_per_s", out.evals_used as f64 / dt.max(1e-9));
+}

@@ -7,6 +7,7 @@
 
 use crate::dse::cache::{CacheKey, ResultCache};
 use crate::dse::{DesignPoint, Evaluator};
+use crate::eval::Fidelity;
 use crate::util::progress::Progress;
 use anyhow::Result;
 
@@ -56,7 +57,7 @@ pub fn run_sweep(
                 n_images: ev.fi.n_images,
                 eval_images: ev.eval_images,
                 seed: ev.fi.seed,
-                with_fi: spec.with_fi,
+                fidelity: Fidelity::from_with_fi(spec.with_fi),
             };
             let point = if let Some(p) = cache.get(&key) {
                 p.clone()

@@ -20,10 +20,9 @@ use super::jobs::{run_sweep, SweepSpec};
 use super::Ctx;
 use crate::dse::cache::ResultCache;
 use crate::dse::{enumerate_masks, DesignPoint, Evaluator};
+use crate::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
 use crate::faultsim::{self, CampaignParams};
-use crate::search::{
-    run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
-};
+use crate::search::{run_search, ResultCacheHook, SearchSpace, SearchSpec, Strategy};
 use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
@@ -43,10 +42,16 @@ pub struct PipelineSpec {
     /// unique-evaluation budget for heuristic strategies (0 = auto: 25%
     /// of the generalized space); ignored by `Exhaustive`
     pub budget: usize,
+    /// CI-based FI early stop, percent points (`--fi-epsilon`; 0 = off —
+    /// bit-for-bit legacy campaigns)
+    pub fi_epsilon: f64,
+    /// screen-tier fault count (`--fi-screen`; 0 = screening off)
+    pub fi_screen: usize,
 }
 
 impl PipelineSpec {
-    /// The paper's defaults: exhaustive sweep over the three AxMs.
+    /// The paper's defaults: exhaustive sweep over the three AxMs, full
+    /// fidelity everywhere.
     pub fn paper_defaults(net: &str) -> PipelineSpec {
         PipelineSpec {
             net: net.to_string(),
@@ -61,6 +66,17 @@ impl PipelineSpec {
             fi: CampaignParams::default_for(net),
             strategy: Strategy::Exhaustive,
             budget: 0,
+            fi_epsilon: 0.0,
+            fi_screen: 0,
+        }
+    }
+
+    /// Ladder knobs as a [`FidelitySpec`].
+    pub fn fidelity_spec(&self) -> FidelitySpec {
+        FidelitySpec {
+            epsilon_pp: self.fi_epsilon,
+            screen_faults: self.fi_screen,
+            ..FidelitySpec::exact()
         }
     }
 }
@@ -116,25 +132,32 @@ pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
         sspec.budget = spec.budget;
         sspec.seed = spec.fi.seed;
         sspec.with_fi = true;
+        sspec.screen = spec.fi_screen > 0;
         let mut hook = ResultCacheHook {
             cache: &mut cache,
             net: net.name.clone(),
             fi: spec.fi.clone(),
             eval_images: spec.eval_images,
         };
-        let backend = EvaluatorBackend { ev: &ev };
+        // the staged ladder: shared fault sites, block-wise CI-gated
+        // campaigns; with fi_epsilon = 0 and screening off this is
+        // bit-identical to the monolithic evaluator path
+        let staged = StagedEvaluator::new(&ev, spec.fidelity_spec());
+        let backend = StagedBackend { st: &staged };
         let out = run_search(&space, &sspec, &backend, &mut hook);
         eprintln!(
-            "[pipeline:{}] {} search: {}/{} configs evaluated ({} cache hits) of a {}-point space, frontier {} (hv {:.0})",
+            "[pipeline:{}] {} search: {}/{} configs evaluated ({} cache hits, {} promotions) of a {}-point space, frontier {} (hv {:.0})",
             net.name,
             spec.strategy.name(),
             out.evals_used,
             sspec.resolved_budget(&space),
             out.cache_hits,
+            out.promotions,
             out.space_size,
             out.frontier_idx.len(),
             out.hypervolume(),
         );
+        eprintln!("[pipeline:{}] {}", net.name, staged.ledger().summary(spec.fi.n_faults));
         // no staged accuracy pre-filter ran: every archive point is
         // fault-simulated, so accuracy_sweep is empty by construction
         return Ok(select_outcome(required_faults, Vec::new(), out.evaluated, out.evals_used, spec));

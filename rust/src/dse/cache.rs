@@ -4,6 +4,7 @@
 //! rows reuse Fig. 3 sweep points, like the paper's iterative flow).
 
 use super::DesignPoint;
+use crate::eval::Fidelity;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -20,6 +21,13 @@ use std::path::{Path, PathBuf};
 /// as `(mult, mask)` renders the *legacy* string key, so heterogeneous
 /// searches get hits on results that exhaustive sweeps already persisted
 /// (and vice versa), and pre-existing cache files stay valid.
+///
+/// Keys carry the [`Fidelity`] the point was computed at. The two legacy
+/// tiers render the historical `|0` / `|1` `with_fi` suffix unchanged —
+/// so untagged entries in pre-ladder cache files read back as
+/// [`Fidelity::FiFull`] (or [`Fidelity::Accuracy`] for `with_fi = 0`)
+/// exactly as they were written — while the new tiers append a `fid:`
+/// marker so a screen-grade estimate can never shadow a full result.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CacheKey {
     pub net: String,
@@ -32,7 +40,8 @@ pub struct CacheKey {
     pub n_images: usize,
     pub eval_images: usize,
     pub seed: u64,
-    pub with_fi: bool,
+    /// fidelity tier the cached point was evaluated at
+    pub fidelity: Fidelity,
 }
 
 impl CacheKey {
@@ -47,7 +56,7 @@ impl CacheKey {
         n_images: usize,
         eval_images: usize,
         seed: u64,
-        with_fi: bool,
+        fidelity: Fidelity,
     ) -> CacheKey {
         let mut mask = 0u64;
         let mut hom: Option<&str> = None;
@@ -76,7 +85,19 @@ impl CacheKey {
             n_images,
             eval_images,
             seed,
-            with_fi,
+            fidelity,
+        }
+    }
+
+    /// Fidelity rendering: legacy tiers keep the historical `with_fi` bit
+    /// verbatim (existing cache files stay valid); ladder-only tiers tag
+    /// on a `fid:` marker.
+    fn fidelity_suffix(&self) -> &'static str {
+        match self.fidelity {
+            Fidelity::Accuracy => "0",
+            Fidelity::FiFull => "1",
+            Fidelity::HwOnly => "0|fid:hw",
+            Fidelity::FiScreen => "1|fid:screen",
         }
     }
 
@@ -91,7 +112,7 @@ impl CacheKey {
                 self.n_images,
                 self.eval_images,
                 self.seed,
-                self.with_fi as u8
+                self.fidelity_suffix()
             )
         } else {
             format!(
@@ -102,7 +123,7 @@ impl CacheKey {
                 self.n_images,
                 self.eval_images,
                 self.seed,
-                self.with_fi as u8
+                self.fidelity_suffix()
             )
         }
     }
@@ -156,10 +177,14 @@ impl ResultCache {
         self.map.get(&key.to_string_key())
     }
 
-    /// Insert + append to the backing file.
+    /// Insert + append to the backing file. Records are tagged with the
+    /// fidelity they were computed at; pre-ladder readers ignore the extra
+    /// field, pre-ladder *writers* never produced it — which is fine,
+    /// because their keys only ever encoded the two legacy tiers.
     pub fn put(&mut self, key: &CacheKey, point: DesignPoint) -> std::io::Result<()> {
         let record = json::obj(vec![
             ("key", json::str(key.to_string_key())),
+            ("fidelity", json::str(key.fidelity.name())),
             ("point", point.to_json()),
         ]);
         if let Some(parent) = self.path.parent() {
@@ -187,6 +212,8 @@ mod tests {
             acc_drop_pct: 0.0,
             fi_mean_acc: 0.8,
             fault_vuln_pct: 10.0,
+            fi_faults: 10,
+            fi_ci95_pp: 0.5,
             cycles: 100,
             luts: 10,
             ffs: 20,
@@ -205,7 +232,7 @@ mod tests {
             n_images: 20,
             eval_images: 30,
             seed: 1,
-            with_fi: true,
+            fidelity: Fidelity::FiFull,
         }
     }
 
@@ -256,7 +283,7 @@ mod tests {
             n_images: 20,
             eval_images: 30,
             seed: 1,
-            with_fi: true,
+            fidelity: Fidelity::FiFull,
         };
         let via_assignment = CacheKey::for_assignment(
             "mlp3",
@@ -265,20 +292,61 @@ mod tests {
             20,
             30,
             1,
-            true,
+            Fidelity::FiFull,
         );
         assert_eq!(legacy.to_string_key(), via_assignment.to_string_key());
         // fully exact reduces to the ("exact", 0) key
-        let exact = CacheKey::for_assignment("mlp3", &["exact"; 3], 10, 20, 30, 1, true);
+        let exact =
+            CacheKey::for_assignment("mlp3", &["exact"; 3], 10, 20, 30, 1, Fidelity::FiFull);
         assert_eq!(exact.mult, "exact");
         assert_eq!(exact.mask, 0);
         assert!(exact.assignment.is_empty());
     }
 
     #[test]
+    fn fidelity_tiers_render_legacy_and_tagged_keys() {
+        let mk = |fid| {
+            let mut k = key("mlp3", 1);
+            k.fidelity = fid;
+            k.to_string_key()
+        };
+        // the two legacy tiers ARE the historical with_fi bit — untagged
+        // pre-ladder entries read back as FiFull / Accuracy
+        assert!(mk(Fidelity::FiFull).ends_with("|1"));
+        assert!(mk(Fidelity::Accuracy).ends_with("|0"));
+        assert!(mk(Fidelity::FiScreen).ends_with("|1|fid:screen"));
+        assert!(mk(Fidelity::HwOnly).ends_with("|0|fid:hw"));
+        // screen-grade estimates can never shadow full results
+        let keys: std::collections::BTreeSet<String> =
+            Fidelity::ALL.iter().map(|&f| mk(f)).collect();
+        assert_eq!(keys.len(), 4);
+    }
+
+    #[test]
+    fn legacy_untagged_records_are_served_to_fifull_lookups() {
+        // a cache line exactly as PR 1 wrote it: no fidelity tag anywhere
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache5_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let legacy_line = format!(
+            "{{\"key\": \"{}\", \"point\": {}}}\n",
+            key("mlp3", 1).to_string_key(),
+            point("mlp3", 1).to_json()
+        );
+        std::fs::write(&p, legacy_line).unwrap();
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key("mlp3", 1)).unwrap().mask, 1, "FiFull lookup hits legacy entry");
+        let mut screen = key("mlp3", 1);
+        screen.fidelity = Fidelity::FiScreen;
+        assert!(c.get(&screen).is_none(), "screen lookup must not alias the legacy entry");
+    }
+
+    #[test]
     fn heterogeneous_assignments_get_distinct_keys() {
         let mk = |names: &[&str]| {
-            CacheKey::for_assignment("mlp3", names, 10, 20, 30, 1, true).to_string_key()
+            CacheKey::for_assignment("mlp3", names, 10, 20, 30, 1, Fidelity::FiFull)
+                .to_string_key()
         };
         let a = mk(&["mul8s_1kvp_s", "mul8s_1kv8_s", "exact"]);
         let b = mk(&["mul8s_1kv8_s", "mul8s_1kvp_s", "exact"]);
@@ -302,7 +370,7 @@ mod tests {
             20,
             30,
             1,
-            true,
+            Fidelity::FiFull,
         );
         {
             let mut c = ResultCache::open(&p);

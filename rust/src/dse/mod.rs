@@ -39,6 +39,12 @@ pub struct DesignPoint {
     /// AxDNN accuracy drop due to FI, percent points (the paper's fault
     /// vulnerability; NaN if FI skipped)
     pub fault_vuln_pct: f64,
+    /// faults actually sampled for the FI estimate (0 if FI skipped; less
+    /// than the campaign size when the fidelity ladder stopped early)
+    pub fi_faults: usize,
+    /// 95% CI half-width of `fault_vuln_pct`, percent points (NaN if FI
+    /// skipped; legacy cache entries load as NaN)
+    pub fi_ci95_pp: f64,
     pub cycles: u64,
     pub luts: u64,
     pub ffs: u64,
@@ -68,6 +74,11 @@ impl DesignPoint {
                     json::num(self.fault_vuln_pct)
                 },
             ),
+            ("fi_faults", json::num(self.fi_faults as f64)),
+            (
+                "fi_ci95_pp",
+                if self.fi_ci95_pp.is_nan() { Json::Null } else { json::num(self.fi_ci95_pp) },
+            ),
             ("cycles", json::num(self.cycles as f64)),
             ("luts", json::num(self.luts as f64)),
             ("ffs", json::num(self.ffs as f64)),
@@ -91,6 +102,9 @@ impl DesignPoint {
             acc_drop_pct: j.get("acc_drop_pct")?.as_f64()?,
             fi_mean_acc: nan_or("fi_mean_acc"),
             fault_vuln_pct: nan_or("fault_vuln_pct"),
+            // both absent from pre-ladder cache files: default, don't fail
+            fi_faults: j.get("fi_faults").and_then(|v| v.as_i64()).unwrap_or(0) as usize,
+            fi_ci95_pp: nan_or("fi_ci95_pp"),
             cycles: j.get("cycles")?.as_i64()? as u64,
             luts: j.get("luts")?.as_i64()? as u64,
             ffs: j.get("ffs")?.as_i64()? as u64,
@@ -180,35 +194,33 @@ impl<'a> Evaluator<'a> {
         p
     }
 
-    /// Evaluate a generalized per-layer multiplier assignment (`names[ci]`
-    /// runs on computing layer ci). The paper's `(mult, mask)` configs are
-    /// the homogeneous special case. `mult` on the returned point is the
-    /// shared multiplier when the assignment is homogeneous, `"exact"`
-    /// when fully exact, and `"mixed"` otherwise; `mask` is the
-    /// approximated-layer bitmask either way.
-    pub fn evaluate_assignment(&self, names: &[&str], with_fi: bool) -> DesignPoint {
+    /// Bind one engine for a per-layer multiplier assignment.
+    pub fn assignment_engine(&self, names: &[&str]) -> Engine<'_> {
         assert_eq!(names.len(), self.net.n_comp(), "one multiplier per computing layer");
         let luts: Vec<&Lut> = names
             .iter()
             .map(|n| self.luts.get(*n).unwrap_or_else(|| panic!("multiplier {n} not loaded")))
             .collect();
-        let engine = Engine::new(self.net, luts);
+        Engine::new(self.net, luts)
+    }
+
+    /// Fault-free AxDNN accuracy of an engine on the evaluation subset.
+    pub fn ax_accuracy(&self, engine: &Engine) -> f64 {
         let mut buf = Buffers::for_net(self.net);
-        let ax_acc = engine.accuracy(&self.data.take(self.eval_images), &mut buf);
+        engine.accuracy(&self.data.take(self.eval_images), &mut buf)
+    }
 
-        let (fi_mean_acc, fault_vuln_pct) = if with_fi {
-            let r = run_campaign(&engine, self.data, &self.fi);
-            // vulnerability relative to *this* AxDNN's fault-free accuracy
-            // on the FI subset (paper: [AxDNN - FI on AxDNN])
-            (r.mean_fault_acc, (r.base_acc - r.mean_fault_acc) * 100.0)
-        } else {
-            (f64::NAN, f64::NAN)
-        };
-
+    /// Analytic HLS cost of an assignment.
+    pub fn assignment_hw(&self, names: &[&str]) -> hwmodel::HwReport {
         let mults: Vec<&axmul::Multiplier> =
             names.iter().map(|n| axmul::by_name(n).expect("catalog")).collect();
-        let hw = hwmodel::estimate(self.net, &mults);
+        hwmodel::estimate(self.net, &mults)
+    }
 
+    /// `(mult label, approximation mask)` for an assignment: the shared
+    /// multiplier when homogeneous, `"exact"` when fully exact, `"mixed"`
+    /// otherwise.
+    pub fn assignment_label(names: &[&str]) -> (String, u64) {
         let mut mask = 0u64;
         let mut label: Option<&str> = None;
         let mut mixed = false;
@@ -223,22 +235,84 @@ impl<'a> Evaluator<'a> {
             }
         }
         let mult = if mixed { "mixed" } else { label.unwrap_or("exact") };
+        (mult.to_string(), mask)
+    }
 
+    /// Assemble a [`DesignPoint`] from staged pieces (accuracy leg + an
+    /// optional FI estimate). This is the composition point shared by the
+    /// monolithic [`evaluate_assignment`](Self::evaluate_assignment) and
+    /// the fidelity ladder in [`crate::eval`].
+    pub fn compose_point(
+        &self,
+        names: &[&str],
+        ax_acc: f64,
+        fi: Option<&FiEstimate>,
+    ) -> DesignPoint {
+        let hw = self.assignment_hw(names);
+        let (mult, mask) = Self::assignment_label(names);
         DesignPoint {
             net: self.net.name.clone(),
-            mult: mult.to_string(),
+            mult,
             mask,
             config_string: self.net.config_string(mask),
             base_acc: self.base_acc,
             ax_acc,
             acc_drop_pct: (self.base_acc - ax_acc) * 100.0,
-            fi_mean_acc,
-            fault_vuln_pct,
+            fi_mean_acc: fi.map_or(f64::NAN, |e| e.mean_acc),
+            fault_vuln_pct: fi.map_or(f64::NAN, |e| e.vuln_pct),
+            fi_faults: fi.map_or(0, |e| e.n_faults),
+            fi_ci95_pp: fi.map_or(f64::NAN, |e| e.ci95_pp),
             cycles: hw.cycles,
             luts: hw.luts,
             ffs: hw.ffs,
             util_pct: hw.util_pct,
             power_mw: hw.power_mw,
+        }
+    }
+
+    /// Evaluate a generalized per-layer multiplier assignment (`names[ci]`
+    /// runs on computing layer ci) at full fidelity. The paper's
+    /// `(mult, mask)` configs are the homogeneous special case; see
+    /// [`assignment_label`](Self::assignment_label) for the returned
+    /// `mult`/`mask` conventions. The staged ladder in [`crate::eval`]
+    /// generalizes this with cheap screening tiers and CI-gated campaigns;
+    /// this monolithic path is kept for the paper's exhaustive sweep and
+    /// is bit-identical to the ladder at `FiFull` with epsilon 0.
+    pub fn evaluate_assignment(&self, names: &[&str], with_fi: bool) -> DesignPoint {
+        let engine = self.assignment_engine(names);
+        let ax_acc = self.ax_accuracy(&engine);
+        let fi = if with_fi {
+            // vulnerability relative to *this* AxDNN's fault-free accuracy
+            // on the FI subset (paper: [AxDNN - FI on AxDNN])
+            Some(FiEstimate::from_campaign(&run_campaign(&engine, self.data, &self.fi)))
+        } else {
+            None
+        };
+        self.compose_point(names, ax_acc, fi.as_ref())
+    }
+}
+
+/// The reliability leg of a design point, at whatever fidelity it was
+/// sampled.
+#[derive(Debug, Clone, Copy)]
+pub struct FiEstimate {
+    /// mean accuracy across the sampled faults
+    pub mean_acc: f64,
+    /// fault vulnerability, percent points
+    pub vuln_pct: f64,
+    /// 95% CI half-width of `vuln_pct`, percent points
+    pub ci95_pp: f64,
+    /// faults actually sampled
+    pub n_faults: usize,
+}
+
+impl FiEstimate {
+    pub fn from_campaign(r: &crate::faultsim::CampaignResult) -> FiEstimate {
+        FiEstimate {
+            mean_acc: r.mean_fault_acc,
+            vuln_pct: (r.base_acc - r.mean_fault_acc) * 100.0,
+            ci95_pp: r.ci95 * 100.0,
+            n_faults: r.n_faults,
         }
     }
 }
@@ -281,6 +355,8 @@ mod tests {
             acc_drop_pct: 5.0,
             fi_mean_acc: 0.8,
             fault_vuln_pct: 5.0,
+            fi_faults: 150,
+            fi_ci95_pp: 0.75,
             cycles: 12345,
             luts: 1000,
             ffs: 900,
@@ -289,6 +365,21 @@ mod tests {
         };
         let back = DesignPoint::from_json(&p.to_json()).unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn design_point_loads_legacy_json_without_fi_confidence_fields() {
+        // records persisted before the fidelity ladder carry neither
+        // fi_faults nor fi_ci95_pp — they must still parse (criterion:
+        // cached PR 1 result files keep loading)
+        let legacy = r#"{"net":"lenet5","mult":"mul8s_1kvp_s","mask":3,"config":"1-1-000",
+            "base_acc":0.9,"ax_acc":0.88,"acc_drop_pct":2.0,"fi_mean_acc":0.8,
+            "fault_vuln_pct":8.0,"cycles":100,"luts":10,"ffs":20,"util_pct":50.0,
+            "power_mw":2.0}"#;
+        let p = DesignPoint::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(p.fi_faults, 0);
+        assert!(p.fi_ci95_pp.is_nan());
+        assert_eq!(p.fault_vuln_pct, 8.0);
     }
 
     #[test]
@@ -303,6 +394,8 @@ mod tests {
             acc_drop_pct: 0.0,
             fi_mean_acc: f64::NAN,
             fault_vuln_pct: f64::NAN,
+            fi_faults: 0,
+            fi_ci95_pp: f64::NAN,
             cycles: 1,
             luts: 1,
             ffs: 1,

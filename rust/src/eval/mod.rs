@@ -1,0 +1,197 @@
+//! eval — the staged multi-fidelity evaluation engine.
+//!
+//! DeepAxe's cost is dominated by the reliability leg: the monolithic
+//! `evaluate_assignment` path pays a full fixed-size fault campaign for
+//! every design point the search touches. This module restructures that
+//! hot path into an explicit fidelity ladder:
+//!
+//! | tier        | cost                | what runs                          |
+//! |-------------|---------------------|------------------------------------|
+//! | [`Fidelity::HwOnly`]   | ~free    | analytic HLS model only            |
+//! | [`Fidelity::Accuracy`] | cheap    | forward pass, no fault injection   |
+//! | [`Fidelity::FiScreen`] | small    | truncated fault block (screening)  |
+//! | [`Fidelity::FiFull`]   | paper    | full campaign, CI-gated            |
+//!
+//! Three structural changes make the ladder pay off:
+//!
+//! 1. **Shared site sampling** — fault sites depend only on the net
+//!    topology and the campaign params, so [`StagedEvaluator`] samples
+//!    them *once* per `(net, params, seed)` and every design point in the
+//!    run is measured against the identical list. Per-point vulnerability
+//!    numbers become directly comparable, and screen-tier estimates are
+//!    exact prefixes of full-tier ones.
+//! 2. **CI-based early stopping** — campaigns run block-wise
+//!    ([`crate::faultsim::Campaign::advance`]) and stop sampling once the
+//!    95% CI half-width of the vulnerability estimate drops below
+//!    [`FidelitySpec::epsilon_pp`], or once the point is already
+//!    Pareto-dominated at the optimistic CI boundary ([`FiGate`]).
+//! 3. **One worker budget** — campaign workers and population workers
+//!    lease from the same [`crate::util::threadpool::WorkerBudget`], so
+//!    the two parallel layers can no longer multiply into
+//!    oversubscription.
+//!
+//! With `epsilon_pp = 0` and screening disabled the ladder degenerates to
+//! the historical path bit-for-bit (asserted by tests in [`staged`]).
+
+pub mod staged;
+
+pub use staged::{FiLedger, StagedBackend, StagedEvaluator};
+
+use crate::util::cli::{env_f64, env_usize};
+
+/// Evaluation fidelity tiers, ordered cheap → expensive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Fidelity {
+    /// analytic hardware model only (no inference)
+    HwOnly,
+    /// fault-free forward pass (the legacy `with_fi = false`)
+    Accuracy,
+    /// truncated fault campaign for population screening
+    FiScreen,
+    /// full campaign (the legacy `with_fi = true`; paper scale)
+    FiFull,
+}
+
+impl Fidelity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::HwOnly => "hw",
+            Fidelity::Accuracy => "acc",
+            Fidelity::FiScreen => "screen",
+            Fidelity::FiFull => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Fidelity, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "hw" | "hwonly" => Ok(Fidelity::HwOnly),
+            "acc" | "accuracy" => Ok(Fidelity::Accuracy),
+            "screen" | "fiscreen" => Ok(Fidelity::FiScreen),
+            "full" | "fifull" | "fi" => Ok(Fidelity::FiFull),
+            other => Err(format!("unknown fidelity {other:?} (hw|acc|screen|full)")),
+        }
+    }
+
+    /// Does this tier run fault injection?
+    pub fn runs_fi(&self) -> bool {
+        matches!(self, Fidelity::FiScreen | Fidelity::FiFull)
+    }
+
+    /// The pre-ladder `with_fi` boolean, mapped onto the ladder.
+    pub fn from_with_fi(with_fi: bool) -> Fidelity {
+        if with_fi {
+            Fidelity::FiFull
+        } else {
+            Fidelity::Accuracy
+        }
+    }
+
+    pub const ALL: [Fidelity; 4] =
+        [Fidelity::HwOnly, Fidelity::Accuracy, Fidelity::FiScreen, Fidelity::FiFull];
+}
+
+/// Ladder knobs (CLI `--fi-epsilon` / `--fi-screen`, env
+/// `DEEPAXE_FI_EPSILON` / `DEEPAXE_FI_SCREEN`).
+#[derive(Debug, Clone)]
+pub struct FidelitySpec {
+    /// CI-based early stop: a campaign stops sampling once the 95% CI
+    /// half-width of its vulnerability estimate (percent points) drops
+    /// below this. `0.0` disables early stopping entirely — the CI stop
+    /// *and* the dominance gate — which is what makes `--fi-epsilon 0`
+    /// reproduce the pre-ladder results bit-for-bit.
+    pub epsilon_pp: f64,
+    /// [`Fidelity::FiScreen`] fault count; `0` makes the screen tier run
+    /// the full site list (screening effectively disabled).
+    pub screen_faults: usize,
+    /// faults per [`crate::faultsim::Campaign::advance`] block (the
+    /// granularity at which the CI / dominance gates are checked)
+    pub block: usize,
+    /// faults that must run before any gate may stop a campaign (CI
+    /// estimates below this are too noisy to act on)
+    pub min_faults: usize,
+}
+
+impl FidelitySpec {
+    /// Ladder disabled: full campaigns, no early stop — the bit-for-bit
+    /// legacy behavior.
+    pub fn exact() -> FidelitySpec {
+        FidelitySpec { epsilon_pp: 0.0, screen_faults: 0, block: 32, min_faults: 16 }
+    }
+
+    /// Defaults with environment overrides applied.
+    pub fn default_from_env() -> FidelitySpec {
+        FidelitySpec {
+            epsilon_pp: env_f64("DEEPAXE_FI_EPSILON", 0.0),
+            screen_faults: env_usize("DEEPAXE_FI_SCREEN", 0),
+            ..FidelitySpec::exact()
+        }
+    }
+
+    /// Is the screen tier actually cheaper than the full tier?
+    pub fn screening_enabled(&self) -> bool {
+        self.screen_faults > 0
+    }
+}
+
+/// Dominance gate: a frozen `(utilization, vulnerability)` frontier
+/// snapshot. A running campaign may stop once even its *optimistic*
+/// estimate (mean − CI) is dominated by some snapshot point — the design
+/// cannot reach the frontier, so tightening its CI buys nothing.
+#[derive(Debug, Clone, Default)]
+pub struct FiGate {
+    /// `(util_pct, fault_vuln_pct)` of the current archive frontier
+    pub frontier: Vec<(f64, f64)>,
+}
+
+impl FiGate {
+    pub fn new(frontier: Vec<(f64, f64)>) -> FiGate {
+        FiGate { frontier }
+    }
+
+    /// True iff `(util_pct, optimistic_vuln_pct)` is dominated by a
+    /// snapshot point (both objectives minimized, NaN never dominated).
+    pub fn dominated(&self, util_pct: f64, optimistic_vuln_pct: f64) -> bool {
+        if util_pct.is_nan() || optimistic_vuln_pct.is_nan() {
+            return false;
+        }
+        self.frontier
+            .iter()
+            .any(|&(u, v)| crate::dse::pareto::dominates(u, v, util_pct, optimistic_vuln_pct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fidelity_order_and_names() {
+        assert!(Fidelity::HwOnly < Fidelity::Accuracy);
+        assert!(Fidelity::Accuracy < Fidelity::FiScreen);
+        assert!(Fidelity::FiScreen < Fidelity::FiFull);
+        for f in Fidelity::ALL {
+            assert_eq!(Fidelity::parse(f.name()).unwrap(), f);
+        }
+        assert!(Fidelity::parse("nope").is_err());
+        assert_eq!(Fidelity::from_with_fi(true), Fidelity::FiFull);
+        assert_eq!(Fidelity::from_with_fi(false), Fidelity::Accuracy);
+        assert!(Fidelity::FiScreen.runs_fi() && !Fidelity::Accuracy.runs_fi());
+    }
+
+    #[test]
+    fn exact_spec_disables_every_gate() {
+        let s = FidelitySpec::exact();
+        assert_eq!(s.epsilon_pp, 0.0);
+        assert!(!s.screening_enabled());
+    }
+
+    #[test]
+    fn gate_dominance() {
+        let g = FiGate::new(vec![(50.0, 5.0), (30.0, 10.0)]);
+        assert!(g.dominated(60.0, 6.0), "worse in both vs (50,5)");
+        assert!(!g.dominated(20.0, 20.0), "cheaper than every snapshot point");
+        assert!(!g.dominated(50.0, 5.0), "equal is not dominated");
+        assert!(!g.dominated(f64::NAN, 1.0));
+        assert!(!FiGate::default().dominated(99.0, 99.0), "empty gate never stops");
+    }
+}

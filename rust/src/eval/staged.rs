@@ -1,0 +1,434 @@
+//! The staged evaluator: one shared fault-site sample + block-wise,
+//! CI-gated campaigns behind the [`Fidelity`] ladder.
+
+use super::{FiGate, Fidelity, FidelitySpec};
+use crate::dse::{DesignPoint, Evaluator, FiEstimate};
+use crate::faultsim::{sample_sites, Campaign};
+use crate::simnet::FaultSite;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Why a campaign stopped before exhausting its site list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StopKind {
+    /// 95% CI half-width fell below the epsilon threshold
+    Ci,
+    /// Pareto-dominated at the optimistic CI boundary
+    Gate,
+}
+
+/// Fault-unit accounting across one evaluator's lifetime: how many faults
+/// each tier actually simulated, and how often each gate cut a campaign
+/// short. This is the "budget per fidelity tier" ledger — `bench_eval` and
+/// the CLI report cost in full-campaign equivalents from it.
+#[derive(Debug, Default)]
+pub struct FiLedger {
+    screen_campaigns: AtomicU64,
+    screen_faults: AtomicU64,
+    full_campaigns: AtomicU64,
+    full_faults: AtomicU64,
+    ci_stops: AtomicU64,
+    gate_stops: AtomicU64,
+}
+
+impl FiLedger {
+    fn record(&self, fidelity: Fidelity, faults: usize, stopped: Option<StopKind>) {
+        let (campaigns, total) = match fidelity {
+            Fidelity::FiScreen => (&self.screen_campaigns, &self.screen_faults),
+            Fidelity::FiFull => (&self.full_campaigns, &self.full_faults),
+            _ => return,
+        };
+        campaigns.fetch_add(1, Ordering::Relaxed);
+        total.fetch_add(faults as u64, Ordering::Relaxed);
+        match stopped {
+            Some(StopKind::Ci) => {
+                self.ci_stops.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(StopKind::Gate) => {
+                self.gate_stops.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+    }
+
+    pub fn screen_campaigns(&self) -> u64 {
+        self.screen_campaigns.load(Ordering::Relaxed)
+    }
+
+    pub fn full_campaigns(&self) -> u64 {
+        self.full_campaigns.load(Ordering::Relaxed)
+    }
+
+    /// Campaigns stopped by the CI epsilon threshold.
+    pub fn ci_stops(&self) -> u64 {
+        self.ci_stops.load(Ordering::Relaxed)
+    }
+
+    /// Campaigns stopped by the dominance gate.
+    pub fn gate_stops(&self) -> u64 {
+        self.gate_stops.load(Ordering::Relaxed)
+    }
+
+    /// Campaigns stopped before exhausting their site list, either way.
+    pub fn early_stops(&self) -> u64 {
+        self.ci_stops() + self.gate_stops()
+    }
+
+    /// Total faults simulated across both FI tiers.
+    pub fn total_faults(&self) -> u64 {
+        self.screen_faults.load(Ordering::Relaxed) + self.full_faults.load(Ordering::Relaxed)
+    }
+
+    /// Spent FI budget in full-campaign equivalents (`campaign_faults` =
+    /// the configured per-campaign fault count).
+    pub fn full_equivalents(&self, campaign_faults: usize) -> f64 {
+        if campaign_faults == 0 {
+            return 0.0;
+        }
+        self.total_faults() as f64 / campaign_faults as f64
+    }
+
+    /// One-line human summary for CLI / bench output.
+    pub fn summary(&self, campaign_faults: usize) -> String {
+        format!(
+            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops",
+            self.screen_campaigns(),
+            self.full_campaigns(),
+            self.total_faults(),
+            self.full_equivalents(campaign_faults),
+            self.early_stops(),
+        )
+    }
+}
+
+/// Staged replacement for the monolithic `Evaluator::evaluate_assignment`
+/// path. Construction samples the fault-site list once from
+/// `(net, params, seed)`; every design point this evaluator touches is
+/// then measured against that identical list (screen tiers against its
+/// prefix), which is what makes per-point vulnerability numbers — and
+/// screen-vs-full comparisons — directly comparable.
+pub struct StagedEvaluator<'a> {
+    pub ev: &'a Evaluator<'a>,
+    spec: FidelitySpec,
+    sites: Vec<FaultSite>,
+    ledger: FiLedger,
+}
+
+impl<'a> StagedEvaluator<'a> {
+    pub fn new(ev: &'a Evaluator<'a>, spec: FidelitySpec) -> StagedEvaluator<'a> {
+        // one site sample per (net, params, seed) — identical to what each
+        // per-point campaign used to draw for itself, hoisted out of the
+        // per-point loop and shared across the whole population
+        let mut rng = Rng::new(ev.fi.seed);
+        let sites = sample_sites(ev.net, ev.fi.n_faults, ev.fi.sampling, &mut rng);
+        StagedEvaluator { ev, spec, sites, ledger: FiLedger::default() }
+    }
+
+    pub fn spec(&self) -> &FidelitySpec {
+        &self.spec
+    }
+
+    /// The run-wide shared fault-site list.
+    pub fn sites(&self) -> &[FaultSite] {
+        &self.sites
+    }
+
+    pub fn ledger(&self) -> &FiLedger {
+        &self.ledger
+    }
+
+    /// Evaluate one assignment at the given fidelity. `gate` (optional)
+    /// lets FI campaigns stop once the point is Pareto-dominated at its
+    /// optimistic CI boundary; the spec's epsilon both sets the CI stop
+    /// threshold and arms early stopping as a whole (`0` = run every
+    /// campaign to completion, gate ignored). Thread-safe (`&self`):
+    /// population workers share one evaluator.
+    pub fn evaluate(
+        &self,
+        names: &[&str],
+        fidelity: Fidelity,
+        gate: Option<&FiGate>,
+    ) -> DesignPoint {
+        if fidelity == Fidelity::HwOnly {
+            return self.ev.compose_point(names, f64::NAN, None);
+        }
+        let engine = self.ev.assignment_engine(names);
+        let ax_acc = self.ev.ax_accuracy(&engine);
+        if !fidelity.runs_fi() {
+            return self.ev.compose_point(names, ax_acc, None);
+        }
+
+        let cap = if fidelity == Fidelity::FiScreen && self.spec.screening_enabled() {
+            self.spec.screen_faults.min(self.sites.len())
+        } else {
+            self.sites.len()
+        };
+        // the gate compares against utilization, which is analytic — fetch
+        // it up front only when a gate is active
+        let util_pct = gate.map(|_| self.ev.assignment_hw(names).util_pct);
+        let mut campaign =
+            Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites[..cap].to_vec());
+        let block = self.spec.block.max(1);
+        // epsilon 0 is the bit-for-bit switch: it disables *all* early
+        // stopping, the dominance gate included — campaigns always run
+        // their whole site list, exactly like the pre-ladder path
+        let early_stop = self.spec.epsilon_pp > 0.0;
+        let mut stopped: Option<StopKind> = None;
+        while !campaign.is_done() {
+            campaign.advance(block);
+            if !early_stop || campaign.evaluated() < self.spec.min_faults {
+                continue;
+            }
+            // gate first: "already dominated" is stronger than "tight CI"
+            if let Some(g) = gate {
+                let optimistic_vuln_pct =
+                    (campaign.base_acc() - campaign.mean() - campaign.ci95()) * 100.0;
+                if g.dominated(util_pct.unwrap(), optimistic_vuln_pct) {
+                    stopped = Some(StopKind::Gate);
+                    break;
+                }
+            }
+            if campaign.ci95() * 100.0 <= self.spec.epsilon_pp {
+                stopped = Some(StopKind::Ci);
+                break;
+            }
+        }
+        if stopped.is_some() {
+            campaign.stop();
+        }
+        self.ledger.record(fidelity, campaign.evaluated(), stopped);
+        let est = FiEstimate::from_campaign(&campaign.result());
+        self.ev.compose_point(names, ax_acc, Some(&est))
+    }
+}
+
+/// [`crate::search::EvalBackend`] over a [`StagedEvaluator`] — the
+/// production backend for the search driver's fidelity-aware batches.
+pub struct StagedBackend<'a> {
+    pub st: &'a StagedEvaluator<'a>,
+}
+
+impl crate::search::EvalBackend for StagedBackend<'_> {
+    fn eval(&self, names: &[&str], fidelity: Fidelity) -> DesignPoint {
+        self.st.evaluate(names, fidelity, None)
+    }
+
+    fn eval_gated(&self, names: &[&str], fidelity: Fidelity, gate: &FiGate) -> DesignPoint {
+        self.st.evaluate(names, fidelity, Some(gate))
+    }
+
+    fn wants_gate(&self) -> bool {
+        // epsilon 0 disables all early stopping — the gate would be
+        // ignored, so don't make the driver snapshot frontiers for it
+        self.st.spec().epsilon_pp > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul::{self, Lut};
+    use crate::dataset::TestSet;
+    use crate::dse::Evaluator;
+    use crate::faultsim::{CampaignParams, SiteSampling};
+    use crate::simnet::testutil::tiny_mlp;
+    use crate::tensor::TensorI8;
+    use crate::util::proptest::check;
+    use std::collections::BTreeMap;
+
+    fn fake_data(n: usize) -> TestSet {
+        let mut rng = Rng::new(0xDA7A);
+        let data: Vec<i8> = (0..n * 4).map(|_| rng.i8()).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        TestSet { name: "fake".into(), x: TensorI8::from_vec(&[n, 1, 2, 2], data), labels }
+    }
+
+    fn luts() -> BTreeMap<String, Lut> {
+        ["exact", "mul8s_1kvp_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| (n.to_string(), axmul::by_name(n).unwrap().lut()))
+            .collect()
+    }
+
+    fn fi_params(n_faults: usize) -> CampaignParams {
+        CampaignParams {
+            n_faults,
+            n_images: 24,
+            seed: 0x5EED5,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+        }
+    }
+
+    #[test]
+    fn sites_are_sampled_once_and_shared_across_points() {
+        // satellite: two design points in the same run must be evaluated
+        // against identical fault-site lists
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+
+        // the shared list is exactly the legacy per-point sample for these
+        // params — hoisting changed *where* sampling happens, not *what*
+        let mut rng = Rng::new(ev.fi.seed);
+        let expected = sample_sites(&net, 48, SiteSampling::UniformLayer, &mut rng);
+        assert_eq!(st.sites(), &expected[..]);
+
+        let before = st.sites().to_vec();
+        let a = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        let b = st.evaluate(&["exact", "mul8s_1kv8_s"], Fidelity::FiScreen, None);
+        assert_eq!(st.sites(), &before[..], "evaluation must not resample sites");
+        // both screened points sampled the same prefix of the same list
+        assert_eq!(a.fi_faults, 16);
+        assert_eq!(b.fi_faults, 16);
+        assert_eq!(st.ledger().screen_campaigns(), 2);
+    }
+
+    #[test]
+    fn fifull_with_epsilon_zero_is_bit_identical_to_monolithic_path() {
+        // acceptance criterion: --fi-epsilon 0 + screen=full reproduces
+        // the pre-ladder evaluator exactly
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        for names in [["mul8s_1kvp_s", "exact"], ["mul8s_1kvp_s", "mul8s_1kv8_s"]] {
+            let staged = st.evaluate(&names, Fidelity::FiFull, None);
+            let monolithic = ev.evaluate_assignment(&names, true);
+            assert_eq!(staged, monolithic, "{names:?}");
+            // screen tier with screening disabled is the full tier
+            let screen = st.evaluate(&names, Fidelity::FiScreen, None);
+            assert_eq!(screen, monolithic, "{names:?} screen=full");
+        }
+    }
+
+    #[test]
+    fn accuracy_tier_matches_monolithic_no_fi_path() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(16));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let staged = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::Accuracy, None);
+        let mono = ev.evaluate_assignment(&["mul8s_1kvp_s", "exact"], false);
+        // FI fields are NaN on both sides (NaN != NaN), so compare legs
+        assert_eq!(staged.ax_acc, mono.ax_acc);
+        assert_eq!(staged.acc_drop_pct, mono.acc_drop_pct);
+        assert_eq!(staged.util_pct, mono.util_pct);
+        assert!(staged.fi_mean_acc.is_nan() && staged.fi_ci95_pp.is_nan());
+        assert_eq!(staged.fi_faults, 0);
+        assert_eq!(st.ledger().total_faults(), 0, "no faults charged below FiScreen");
+    }
+
+    #[test]
+    fn hwonly_tier_skips_inference_entirely() {
+        let net = tiny_mlp();
+        let data = fake_data(16);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 16, fi_params(16));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let p = st.evaluate(&["mul8s_1kvp_s", "mul8s_1kvp_s"], Fidelity::HwOnly, None);
+        assert!(p.ax_acc.is_nan() && p.acc_drop_pct.is_nan());
+        assert!(p.util_pct > 0.0 && p.cycles > 0);
+        assert_eq!(p.mult, "mul8s_1kvp_s");
+        assert_eq!(p.mask, 0b11);
+    }
+
+    #[test]
+    fn property_screen_estimate_within_ci_of_full_value() {
+        // satellite: an early-stopped / screen-tier vulnerability estimate
+        // lies within its reported ci95 of the FiFull value on tiny_mlp
+        // (both CIs summed: each bounds its own mean at 95%)
+        let net = tiny_mlp();
+        let data = fake_data(40);
+        let luts = luts();
+        let alphabet = ["exact", "mul8s_1kvp_s", "mul8s_1kv8_s"];
+        check("screen within ci95 of full", 0xC1C1, 8, |rng| {
+            let names: Vec<&str> =
+                (0..2).map(|_| alphabet[rng.usize_below(3)]).collect();
+            let ev = Evaluator::new(&net, &data, &luts, 32, fi_params(160));
+            let st = StagedEvaluator::new(&ev, FidelitySpec {
+                screen_faults: 40,
+                ..FidelitySpec::exact()
+            });
+            let screen = st.evaluate(&names, Fidelity::FiScreen, None);
+            let full = st.evaluate(&names, Fidelity::FiFull, None);
+            assert_eq!(screen.fi_faults, 40);
+            assert_eq!(full.fi_faults, 160);
+            let margin = screen.fi_ci95_pp + full.fi_ci95_pp + 1e-9;
+            let diff = (screen.fault_vuln_pct - full.fault_vuln_pct).abs();
+            assert!(
+                diff <= margin,
+                "{names:?}: |{:.3} - {:.3}| = {diff:.3}pp > ci margin {margin:.3}pp",
+                screen.fault_vuln_pct,
+                full.fault_vuln_pct,
+            );
+        });
+    }
+
+    #[test]
+    fn epsilon_stops_sampling_once_ci_is_tight() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(200));
+        // a huge epsilon stops at the first gate check after min_faults
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            epsilon_pp: 100.0,
+            block: 8,
+            min_faults: 24,
+            ..FidelitySpec::exact()
+        });
+        let p = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, None);
+        assert!(p.fi_faults >= 24, "min_faults must run before any stop");
+        assert!(p.fi_faults < 200, "epsilon must cut the campaign short");
+        assert_eq!(st.ledger().ci_stops(), 1);
+        assert_eq!(st.ledger().gate_stops(), 0);
+        // the estimate is the exact prefix of the full campaign
+        let exact = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let full = exact.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, None);
+        assert!((p.fault_vuln_pct - full.fault_vuln_pct).abs() <= p.fi_ci95_pp + full.fi_ci95_pp);
+    }
+
+    #[test]
+    fn dominance_gate_stops_hopeless_points() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(200));
+        // a tiny (but nonzero) epsilon arms early stopping without ever
+        // triggering the CI stop itself — only the gate can fire
+        let armed = FidelitySpec {
+            epsilon_pp: 1e-9,
+            block: 8,
+            min_faults: 16,
+            ..FidelitySpec::exact()
+        };
+        let st = StagedEvaluator::new(&ev, armed.clone());
+        // a frontier point that dominates everything: zero cost, immune
+        // (the optimistic estimate can never go below -200pp, so the gate
+        // fires deterministically at the first post-min_faults check)
+        let gate = FiGate::new(vec![(0.0, -200.0)]);
+        let p = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, Some(&gate));
+        assert_eq!(p.fi_faults, 16, "gate must fire at the first check after min_faults");
+        assert_eq!(st.ledger().gate_stops(), 1);
+        // an empty gate never fires (a degenerate zero-variance prefix may
+        // still trip the CI stop — that is the epsilon gate's business)
+        let st2 = StagedEvaluator::new(&ev, armed);
+        let _ =
+            st2.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, Some(&FiGate::default()));
+        assert_eq!(st2.ledger().gate_stops(), 0, "empty gate must never fire");
+        // with epsilon 0 even a dominating gate is ignored (bit-for-bit)
+        let st3 = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let r = st3.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, Some(&gate));
+        assert_eq!(r.fi_faults, 200);
+        assert_eq!(st3.ledger().early_stops(), 0);
+    }
+}

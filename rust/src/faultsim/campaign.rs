@@ -6,14 +6,43 @@
 //! only the network suffix after its fault site. Equivalence with the
 //! naive full-forward campaign is asserted by tests and can be forced with
 //! `replay: false` for A/B benchmarking.
+//!
+//! Campaigns are *resumable*: [`Campaign`] holds the clean traces and a
+//! caller-supplied fault-site list and evaluates faults in blocks
+//! ([`Campaign::advance`]), maintaining a streaming mean/CI so callers —
+//! the staged fidelity ladder in [`crate::eval`] — can stop sampling as
+//! soon as the estimate is tight enough or the point is already dominated.
+//! [`run_campaign`] is the one-shot wrapper that drives a campaign to
+//! completion; it samples its own sites exactly like the pre-ladder code
+//! path, so its results are bit-identical to the historical runner.
 
 use super::{sample_sites, SiteSampling};
 use crate::dataset::TestSet;
-use crate::simnet::{argmax_i8, Buffers, CleanTrace, Engine};
+use crate::simnet::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite};
 use crate::util::progress::Progress;
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
 
+/// Campaign sizing and execution knobs.
+///
+/// Environment overrides (read by [`CampaignParams::default_for`]):
+///
+/// * `DEEPAXE_FI_FAULTS` — number of independent single-bit faults;
+///   restores paper scale (600/800/1000) from the 1-core-host defaults.
+/// * `DEEPAXE_FI_IMAGES` — test-subset size inferred per fault.
+/// * `DEEPAXE_WORKERS` — sizes the process-wide [`WorkerBudget`] that
+///   campaign workers are leased from; `workers` below is only the
+///   per-campaign *cap* on that lease, so nested parallelism (population
+///   evaluation × FI campaigns) can never oversubscribe the host.
+///
+/// The fidelity ladder adds two more knobs that live in
+/// [`crate::eval::FidelitySpec`] (not here, so existing `CampaignParams`
+/// literals keep compiling): `DEEPAXE_FI_EPSILON` — the CI-based
+/// early-stop threshold in percent points (a campaign stops sampling once
+/// the 95% CI half-width of its mean fault accuracy drops below it;
+/// `0` disables early stopping and reproduces the one-shot runner
+/// bit-for-bit) — and `DEEPAXE_FI_SCREEN`, the screen-tier fault count.
 #[derive(Debug, Clone)]
 pub struct CampaignParams {
     /// number of independent single-bit faults (paper: 600/800/1000)
@@ -21,6 +50,8 @@ pub struct CampaignParams {
     /// test-subset size fed through the network per fault
     pub n_images: usize,
     pub seed: u64,
+    /// cap on workers leased from the shared [`WorkerBudget`] (the actual
+    /// grant may be smaller when other layers hold slots)
     pub workers: usize,
     pub sampling: SiteSampling,
     /// layer-replay fast path (true) vs naive full forwards (false)
@@ -28,9 +59,8 @@ pub struct CampaignParams {
 }
 
 impl CampaignParams {
-    /// Defaults scaled for this 1-core host; env `DEEPAXE_FI_FAULTS` /
-    /// `DEEPAXE_FI_IMAGES` restore paper scale (600-1000 faults, full
-    /// test set).
+    /// Defaults scaled for this 1-core host; see the struct docs for the
+    /// `DEEPAXE_FI_*` environment overrides that restore paper scale.
     pub fn default_for(net_name: &str) -> CampaignParams {
         use crate::util::cli::env_usize;
         let (faults, images) = match net_name {
@@ -55,92 +85,190 @@ pub struct CampaignResult {
     pub base_acc: f64,
     /// mean accuracy across faults
     pub mean_fault_acc: f64,
-    /// per-fault accuracies
+    /// per-fault accuracies (the evaluated prefix of the site list)
     pub acc_per_fault: Vec<f64>,
     /// base_acc - mean_fault_acc (the paper's fault vulnerability, as a
     /// fraction in [−1, 1])
     pub vulnerability: f64,
     /// 95% CI half-width of mean_fault_acc
     pub ci95: f64,
+    /// faults actually evaluated (less than the site list when a caller
+    /// stopped the campaign early)
     pub n_faults: usize,
     pub n_images: usize,
 }
 
-/// Run a fault campaign for one engine configuration.
+/// A resumable fault campaign over a fixed site list.
+///
+/// Construction pays the clean-trace cost (one full forward per image);
+/// [`advance`](Campaign::advance) then evaluates faults block-by-block in
+/// site-list order. Per-fault accuracies are independent of block size and
+/// worker count, so an early-stopped campaign's numbers are exactly the
+/// prefix of the full campaign's — the property the fidelity ladder's
+/// CI-containment tests rely on.
+pub struct Campaign<'e> {
+    engine: &'e Engine<'e>,
+    subset: TestSet,
+    traces: Vec<CleanTrace>,
+    base_acc: f64,
+    sites: Vec<FaultSite>,
+    replay: bool,
+    workers: usize,
+    acc_per_fault: Vec<f64>,
+    stream: stats::Streaming,
+    progress: Progress,
+}
+
+impl<'e> Campaign<'e> {
+    /// Trace the clean activations and bind `sites` (typically a shared
+    /// sample from [`crate::eval::StagedEvaluator`], or a fresh per-point
+    /// sample in the legacy [`run_campaign`] path).
+    pub fn new(
+        engine: &'e Engine<'e>,
+        data: &TestSet,
+        params: &CampaignParams,
+        sites: Vec<FaultSite>,
+    ) -> Campaign<'e> {
+        let subset = data.take(params.n_images);
+        let n_images = subset.len();
+        assert!(n_images > 0, "empty test subset");
+
+        let traces: Vec<CleanTrace> = {
+            let mut buf = Buffers::for_net(engine.net);
+            (0..n_images).map(|i| engine.trace(subset.image(i), &mut buf)).collect()
+        };
+        let base_correct =
+            (0..n_images).filter(|&i| traces[i].pred == subset.labels[i] as usize).count();
+        let base_acc = base_correct as f64 / n_images as f64;
+
+        let progress = Progress::new(&format!("fi:{}", engine.net.name), sites.len() as u64);
+        Campaign {
+            engine,
+            subset,
+            traces,
+            base_acc,
+            sites,
+            replay: params.replay,
+            workers: params.workers.max(1),
+            acc_per_fault: Vec::new(),
+            stream: stats::Streaming::new(),
+            progress,
+        }
+    }
+
+    /// Faults evaluated so far.
+    pub fn evaluated(&self) -> usize {
+        self.acc_per_fault.len()
+    }
+
+    /// Faults left on the site list.
+    pub fn remaining(&self) -> usize {
+        self.sites.len() - self.acc_per_fault.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Fault-free accuracy of this configuration on the campaign subset.
+    pub fn base_acc(&self) -> f64 {
+        self.base_acc
+    }
+
+    /// Running mean fault accuracy (streaming; the final [`result`] mean
+    /// is recomputed batch-wise for bit-parity with the one-shot runner).
+    pub fn mean(&self) -> f64 {
+        self.stream.mean()
+    }
+
+    /// Running 95% CI half-width of the mean fault accuracy.
+    pub fn ci95(&self) -> f64 {
+        self.stream.ci95()
+    }
+
+    /// Evaluate up to `block` more faults (site-list order); returns how
+    /// many ran. Parallelism is leased from the shared [`WorkerBudget`],
+    /// capped at the campaign's `workers` setting.
+    pub fn advance(&mut self, block: usize) -> usize {
+        let n = block.min(self.remaining());
+        if n == 0 {
+            return 0;
+        }
+        let start = self.acc_per_fault.len();
+        let chunk = &self.sites[start..start + n];
+        let engine = self.engine;
+        let subset = &self.subset;
+        let traces = &self.traces;
+        let replay = self.replay;
+        let progress = &self.progress;
+        let accs: Vec<f64> = budgeted_map_with(
+            WorkerBudget::global(),
+            self.workers,
+            chunk,
+            || (Buffers::for_net(engine.net), Vec::<i8>::new()),
+            |(buf, act), &site| {
+                let mut correct = 0usize;
+                for i in 0..subset.len() {
+                    let pred = if replay {
+                        act.clear();
+                        act.extend_from_slice(&traces[i].acts[site.layer]);
+                        act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                        argmax_i8(&engine.forward_from(site.layer, act, buf))
+                    } else {
+                        engine.predict(subset.image(i), Some(site), buf)
+                    };
+                    if pred == subset.labels[i] as usize {
+                        correct += 1;
+                    }
+                }
+                progress.add(1);
+                correct as f64 / subset.len() as f64
+            },
+        );
+        for a in accs {
+            self.stream.push(a);
+            self.acc_per_fault.push(a);
+        }
+        if self.is_done() {
+            self.progress.finish();
+        }
+        n
+    }
+
+    /// Finalize the progress display for a campaign stopped before its
+    /// site list is exhausted (CI early stop / dominance gate).
+    pub fn stop(&self) {
+        if !self.is_done() {
+            self.progress.finish();
+        }
+    }
+
+    /// Summary over the evaluated prefix. The mean/CI are computed by the
+    /// batch [`stats::summarize`] (not the streaming accumulator), so a
+    /// full run is bit-identical to the historical one-shot runner.
+    pub fn result(&self) -> CampaignResult {
+        let summary = stats::summarize(&self.acc_per_fault);
+        CampaignResult {
+            base_acc: self.base_acc,
+            mean_fault_acc: summary.mean,
+            vulnerability: self.base_acc - summary.mean,
+            ci95: stats::ci95_halfwidth(&summary),
+            acc_per_fault: self.acc_per_fault.clone(),
+            n_faults: self.acc_per_fault.len(),
+            n_images: self.subset.len(),
+        }
+    }
+}
+
+/// Run a fault campaign to completion for one engine configuration,
+/// sampling a fresh site list from `params` (one [`Rng`] stream per call,
+/// so every configuration under the same params sees the same sites).
 pub fn run_campaign(engine: &Engine, data: &TestSet, params: &CampaignParams) -> CampaignResult {
-    let subset = data.take(params.n_images);
-    let n_images = subset.len();
-    assert!(n_images > 0, "empty test subset");
-
-    // 1) clean traces (one full forward per image)
-    let traces: Vec<CleanTrace> = {
-        let mut buf = Buffers::for_net(engine.net);
-        (0..n_images).map(|i| engine.trace(subset.image(i), &mut buf)).collect()
-    };
-    let base_correct =
-        (0..n_images).filter(|&i| traces[i].pred == subset.labels[i] as usize).count();
-    let base_acc = base_correct as f64 / n_images as f64;
-
-    // 2) fault sites
     let mut rng = Rng::new(params.seed);
     let sites = sample_sites(engine.net, params.n_faults, params.sampling, &mut rng);
-
-    // 3) per-fault accuracies, parallel over faults
-    let progress = Progress::new(&format!("fi:{}", engine.net.name), sites.len() as u64);
-    let workers = params.workers.max(1);
-    let chunk = sites.len().div_ceil(workers);
-    let mut acc_per_fault = vec![0.0f64; sites.len()];
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for (wi, site_chunk) in sites.chunks(chunk.max(1)).enumerate() {
-            let traces = &traces;
-            let subset = &subset;
-            let progress = &progress;
-            let params_replay = params.replay;
-            handles.push((wi, scope.spawn(move || {
-                let mut buf = Buffers::for_net(engine.net);
-                let mut act = Vec::new();
-                site_chunk
-                    .iter()
-                    .map(|&site| {
-                        let mut correct = 0usize;
-                        for i in 0..subset.len() {
-                            let pred = if params_replay {
-                                act.clear();
-                                act.extend_from_slice(&traces[i].acts[site.layer]);
-                                act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
-                                argmax_i8(&engine.forward_from(site.layer, &act, &mut buf))
-                            } else {
-                                engine.predict(subset.image(i), Some(site), &mut buf)
-                            };
-                            if pred == subset.labels[i] as usize {
-                                correct += 1;
-                            }
-                        }
-                        progress.add(1);
-                        correct as f64 / subset.len() as f64
-                    })
-                    .collect::<Vec<f64>>()
-            })));
-        }
-        for (wi, h) in handles {
-            let out = h.join().expect("campaign worker panicked");
-            let start = wi * chunk.max(1);
-            acc_per_fault[start..start + out.len()].copy_from_slice(&out);
-        }
-    });
-    progress.finish();
-
-    let summary = stats::summarize(&acc_per_fault);
-    CampaignResult {
-        base_acc,
-        mean_fault_acc: summary.mean,
-        vulnerability: base_acc - summary.mean,
-        ci95: stats::ci95_halfwidth(&summary),
-        acc_per_fault,
-        n_faults: sites.len(),
-        n_images,
-    }
+    let mut campaign = Campaign::new(engine, data, params, sites);
+    while campaign.advance(usize::MAX) > 0 {}
+    campaign.result()
 }
 
 #[cfg(test)]
@@ -217,5 +345,55 @@ mod tests {
             run_campaign(&engine, &data, &p1).acc_per_fault,
             run_campaign(&engine, &data, &p4).acc_per_fault
         );
+    }
+
+    #[test]
+    fn blockwise_advance_equals_one_shot() {
+        // any block schedule must reproduce the one-shot runner exactly:
+        // per-fault accuracies are a pure function of the site
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let p = params(true);
+        let reference = run_campaign(&engine, &data, &p);
+
+        let mut rng = Rng::new(p.seed);
+        let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
+        let mut c = Campaign::new(&engine, &data, &p, sites);
+        for block in [1, 7, 3, 16, usize::MAX] {
+            c.advance(block);
+        }
+        assert!(c.is_done());
+        let blockwise = c.result();
+        assert_eq!(blockwise.acc_per_fault, reference.acc_per_fault);
+        assert_eq!(blockwise.mean_fault_acc, reference.mean_fault_acc);
+        assert_eq!(blockwise.ci95, reference.ci95);
+        assert_eq!(blockwise.base_acc, reference.base_acc);
+    }
+
+    #[test]
+    fn early_stop_result_is_prefix_of_full_run() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let p = params(true);
+        let full = run_campaign(&engine, &data, &p);
+
+        let mut rng = Rng::new(p.seed);
+        let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
+        let mut c = Campaign::new(&engine, &data, &p, sites);
+        c.advance(24);
+        assert_eq!(c.evaluated(), 24);
+        assert_eq!(c.remaining(), 40);
+        c.stop();
+        let partial = c.result();
+        assert_eq!(partial.n_faults, 24);
+        assert_eq!(partial.acc_per_fault[..], full.acc_per_fault[..24]);
+        // streaming mean tracks the batch mean of the same prefix
+        let batch = stats::summarize(&full.acc_per_fault[..24]);
+        assert!((c.mean() - batch.mean).abs() < 1e-12);
+        assert!((c.ci95() - stats::ci95_halfwidth(&batch)).abs() < 1e-12);
     }
 }

@@ -9,7 +9,7 @@
 pub mod campaign;
 pub mod permanent;
 
-pub use campaign::{run_campaign, CampaignParams, CampaignResult};
+pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult};
 pub use permanent::{run_stuck_campaign, StuckFault, StuckValue};
 
 use crate::simnet::{FaultSite, QNet};

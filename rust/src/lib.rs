@@ -25,6 +25,10 @@
 //!   cycles, LUT/FF utilization).
 //! * [`dse`] — configuration space, evaluation orchestration, Pareto
 //!   frontier and hypervolume indicator.
+//! * [`eval`] — the staged multi-fidelity evaluation engine: a
+//!   `HwOnly → Accuracy → FiScreen → FiFull` ladder with one shared
+//!   fault-site sample per run, block-wise CI-gated campaigns and a
+//!   process-wide worker budget; the search stack's hot path.
 //! * [`search`] — scalable multi-objective DSE (NSGA-II, simulated
 //!   annealing, hill-climb) over heterogeneous per-layer multiplier
 //!   assignments; replaces the `2^n` enumeration with budgeted search so
@@ -39,6 +43,7 @@ pub mod axmul;
 pub mod coordinator;
 pub mod dataset;
 pub mod dse;
+pub mod eval;
 pub mod faultsim;
 pub mod hwmodel;
 pub mod nbin;

@@ -29,10 +29,12 @@ COMMANDS
   pipeline                     automated Fig.2 design flow
       --net <name> [--max-acc-drop pp] [--max-vuln pp]
       [--strategy exhaustive|nsga2|anneal|hillclimb] [--budget N]
+      [--fi-epsilon PP] [--fi-screen N]
   search                       budgeted multi-objective DSE over per-layer
                                multiplier assignments (generalizes the 2^n sweep)
       --net <name> [--strategy nsga2|anneal|hillclimb|exhaustive]
       [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
+      [--fi-epsilon PP] [--fi-screen N]
   parity                       simnet vs AOT/PJRT executable cross-check
       --net <name> [--images n]
   faults                       Leveugle statistical FI sizing per network
@@ -47,6 +49,14 @@ OPTIONS (eval/pipeline/exp)
   --eval-images N  accuracy-eval subset size (env DEEPAXE_EVAL_IMAGES)
   --nets a,b,c     restrict exp table3 to these networks
   --seed N         campaign RNG seed
+
+FIDELITY LADDER (search/pipeline)
+  --fi-epsilon PP  stop a campaign once its 95% CI half-width is below PP
+                   percent points (env DEEPAXE_FI_EPSILON; 0 = off,
+                   bit-identical to the pre-ladder path)
+  --fi-screen N    screen fresh designs with N faults and promote only
+                   frontier survivors to the full campaign
+                   (env DEEPAXE_FI_SCREEN; 0 = off)
 ";
 
 fn main() {
@@ -68,10 +78,21 @@ fn campaign_params(args: &cli::Args, net: &str) -> Result<CampaignParams> {
     Ok(p)
 }
 
+/// Fidelity-ladder knobs: flag beats env beats off (the env fallbacks live
+/// in [`deepaxe::eval::FidelitySpec::default_from_env`]).
+fn fidelity_spec(args: &cli::Args) -> Result<deepaxe::eval::FidelitySpec> {
+    let env = deepaxe::eval::FidelitySpec::default_from_env();
+    Ok(deepaxe::eval::FidelitySpec {
+        epsilon_pp: args.get_f64("fi-epsilon", env.epsilon_pp)?,
+        screen_faults: args.get_usize("fi-screen", env.screen_faults)?,
+        ..env
+    })
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers"],
+        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen"],
         &["fi", "no-fi", "help"],
     )
     .map_err(anyhow::Error::msg)?;
@@ -190,6 +211,7 @@ fn pipeline_cmd(args: &cli::Args) -> Result<()> {
     let ctx = Ctx::load()?;
     let net = args.get("net").context("--net required")?.to_string();
     let fi = campaign_params(args, &net)?;
+    let ladder = fidelity_spec(args)?;
     let spec = PipelineSpec {
         net: net.clone(),
         mults: vec!["mul8s_1kvp_s".into(), "mul8s_1kv9_s".into(), "mul8s_1kv8_s".into()],
@@ -200,6 +222,8 @@ fn pipeline_cmd(args: &cli::Args) -> Result<()> {
         strategy: Strategy::parse(args.get_or("strategy", "exhaustive"))
             .map_err(anyhow::Error::msg)?,
         budget: args.get_usize("budget", 0)?,
+        fi_epsilon: ladder.epsilon_pp,
+        fi_screen: ladder.screen_faults,
     };
     let out = run_pipeline(&ctx, &spec)?;
     println!(
@@ -252,29 +276,34 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     let ev = deepaxe::dse::Evaluator::new(&net, &data, &ctx.luts, eval_images, fi.clone());
     let mut cache = deepaxe::dse::cache::ResultCache::open(ctx.results.join("results.jsonl"));
 
+    let fidelity = fidelity_spec(args)?;
     let mut spec = SearchSpec::new(
         Strategy::parse(args.get_or("strategy", "nsga2")).map_err(anyhow::Error::msg)?,
     );
     spec.budget = args.get_usize("budget", 0)?;
     spec.seed = fi.seed;
     spec.with_fi = !args.has("no-fi");
+    spec.screen = fidelity.screening_enabled();
     spec.workers = args.get_usize("workers", 1)?;
     let budget = spec.resolved_budget(&space);
     eprintln!(
-        "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}",
+        "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, fi-epsilon {}pp, fi-screen {}",
         spec.strategy.name(),
         net.name,
         space.n_layers,
         space.alphabet.join(","),
         space.size(),
         budget,
+        fidelity.epsilon_pp,
+        fidelity.screen_faults,
     );
 
-    let backend = deepaxe::search::EvaluatorBackend { ev: &ev };
+    let staged = deepaxe::eval::StagedEvaluator::new(&ev, fidelity);
+    let backend = deepaxe::eval::StagedBackend { st: &staged };
     let mut hook = deepaxe::search::ResultCacheHook {
         cache: &mut cache,
         net: net.name.clone(),
-        fi,
+        fi: fi.clone(),
         eval_images,
     };
     let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
@@ -299,12 +328,14 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     }
     print!("{}", t.render());
     println!(
-        "evaluations: {} of {} budget ({} cache hits) over a {}-config space",
+        "evaluations: {} of {} budget ({} cache hits, {} promotions) over a {}-config space",
         out.evals_used,
         budget,
         out.cache_hits,
+        out.promotions,
         out.space_size,
     );
+    println!("{}", staged.ledger().summary(fi.n_faults));
     println!("hypervolume (ref {:?}): {:.1}", deepaxe::search::HV_REF, out.hypervolume());
     for w in out.trace.windows(2) {
         if w[1].hypervolume > w[0].hypervolume {

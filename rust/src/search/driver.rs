@@ -14,6 +14,17 @@
 //! already-archived genotype are free. When the budget covers the whole
 //! space, every strategy degenerates to the exhaustive sweep — heuristics
 //! can never do worse than exhaustive on spaces they can afford to cover.
+//!
+//! Fidelity semantics (the [`crate::eval`] ladder): with screening on
+//! (`SearchSpec::screen`), fresh genotypes are evaluated at
+//! [`Fidelity::FiScreen`] and only archive-frontier survivors are promoted
+//! to [`Fidelity::FiFull`] after each batch — the promotion loop runs to a
+//! fixpoint because refined values can reshuffle the frontier. Budget is
+//! charged per *unique genotype* exactly as before (promotions refine an
+//! already-charged point); the per-tier fault spend is accounted by the
+//! backend's [`crate::eval::FiLedger`]. With screening off and epsilon 0
+//! the driver's behavior — and its output — is bit-identical to the
+//! pre-ladder path.
 
 use super::anneal::{anneal, AnnealParams};
 use super::nsga2::{self, objectives};
@@ -21,6 +32,7 @@ use super::space::{Genotype, SearchSpace};
 use crate::dse::cache::{CacheKey, ResultCache};
 use crate::dse::pareto::pareto_front;
 use crate::dse::{DesignPoint, Evaluator};
+use crate::eval::{FiGate, Fidelity};
 use crate::faultsim::CampaignParams;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
@@ -71,14 +83,40 @@ pub struct SearchSpec {
     pub pop: usize,
     /// run fault-injection campaigns (enables the vulnerability objective)
     pub with_fi: bool,
-    /// worker threads for population evaluation (1 = serial; keep FI
-    /// campaign workers at 1 when raising this)
+    /// evaluate fresh genotypes at the cheap `FiScreen` tier and promote
+    /// only archive-frontier survivors to `FiFull` (requires a
+    /// fidelity-aware backend such as [`crate::eval::StagedBackend`];
+    /// ignored when `with_fi` is off)
+    pub screen: bool,
+    /// worker threads for population evaluation; both this layer and the
+    /// FI campaigns lease from the shared
+    /// [`crate::util::threadpool::WorkerBudget`], so raising it can no
+    /// longer oversubscribe the host
     pub workers: usize,
 }
 
 impl SearchSpec {
     pub fn new(strategy: Strategy) -> SearchSpec {
-        SearchSpec { strategy, budget: 0, seed: 0xD5E, pop: 16, with_fi: true, workers: 1 }
+        SearchSpec {
+            strategy,
+            budget: 0,
+            seed: 0xD5E,
+            pop: 16,
+            with_fi: true,
+            screen: false,
+            workers: 1,
+        }
+    }
+
+    /// Tier at which fresh (non-promoted) genotypes are evaluated.
+    pub fn fresh_fidelity(&self) -> Fidelity {
+        if !self.with_fi {
+            Fidelity::Accuracy
+        } else if self.screen {
+            Fidelity::FiScreen
+        } else {
+            Fidelity::FiFull
+        }
     }
 
     /// Resolve `budget = 0` against a concrete space. An explicit budget
@@ -98,36 +136,54 @@ impl SearchSpec {
     }
 }
 
-/// Evaluates one per-layer multiplier assignment into a [`DesignPoint`].
+/// Evaluates one per-layer multiplier assignment into a [`DesignPoint`]
+/// at a requested fidelity tier.
 pub trait EvalBackend: Sync {
-    fn eval(&self, names: &[&str], with_fi: bool) -> DesignPoint;
+    fn eval(&self, names: &[&str], fidelity: Fidelity) -> DesignPoint;
+
+    /// Evaluation with a dominance gate: fidelity-aware backends may stop
+    /// a campaign once the point is Pareto-dominated at its optimistic CI
+    /// boundary. Backends without partial campaigns ignore the gate.
+    fn eval_gated(&self, names: &[&str], fidelity: Fidelity, gate: &FiGate) -> DesignPoint {
+        let _ = gate;
+        self.eval(names, fidelity)
+    }
+
+    /// Whether [`eval_gated`](Self::eval_gated) can act on a gate at all —
+    /// lets the driver skip the per-batch frontier snapshot for backends
+    /// (or configurations, e.g. epsilon 0) that would discard it.
+    fn wants_gate(&self) -> bool {
+        false
+    }
 }
 
-/// Production backend over [`Evaluator`].
+/// Production backend over the monolithic [`Evaluator`] path (full
+/// campaigns only — [`crate::eval::StagedBackend`] is the ladder-aware
+/// alternative).
 pub struct EvaluatorBackend<'a> {
     pub ev: &'a Evaluator<'a>,
 }
 
 impl EvalBackend for EvaluatorBackend<'_> {
-    fn eval(&self, names: &[&str], with_fi: bool) -> DesignPoint {
-        self.ev.evaluate_assignment(names, with_fi)
+    fn eval(&self, names: &[&str], fidelity: Fidelity) -> DesignPoint {
+        self.ev.evaluate_assignment(names, fidelity.runs_fi())
     }
 }
 
-/// Persistent-result lookup keyed by canonical assignment.
+/// Persistent-result lookup keyed by canonical assignment + fidelity.
 pub trait CacheHook {
-    fn get(&self, names: &[&str], with_fi: bool) -> Option<DesignPoint>;
-    fn put(&mut self, names: &[&str], with_fi: bool, point: &DesignPoint);
+    fn get(&self, names: &[&str], fidelity: Fidelity) -> Option<DesignPoint>;
+    fn put(&mut self, names: &[&str], fidelity: Fidelity, point: &DesignPoint);
 }
 
 /// No persistence (unit tests, throwaway sweeps).
 pub struct NoCache;
 
 impl CacheHook for NoCache {
-    fn get(&self, _names: &[&str], _with_fi: bool) -> Option<DesignPoint> {
+    fn get(&self, _names: &[&str], _fidelity: Fidelity) -> Option<DesignPoint> {
         None
     }
-    fn put(&mut self, _names: &[&str], _with_fi: bool, _point: &DesignPoint) {}
+    fn put(&mut self, _names: &[&str], _fidelity: Fidelity, _point: &DesignPoint) {}
 }
 
 /// [`ResultCache`]-backed hook using canonical per-layer assignment keys
@@ -141,7 +197,7 @@ pub struct ResultCacheHook<'a> {
 }
 
 impl ResultCacheHook<'_> {
-    fn key(&self, names: &[&str], with_fi: bool) -> CacheKey {
+    fn key(&self, names: &[&str], fidelity: Fidelity) -> CacheKey {
         CacheKey::for_assignment(
             &self.net,
             names,
@@ -149,18 +205,35 @@ impl ResultCacheHook<'_> {
             self.fi.n_images,
             self.eval_images,
             self.fi.seed,
-            with_fi,
+            fidelity,
         )
     }
 }
 
 impl CacheHook for ResultCacheHook<'_> {
-    fn get(&self, names: &[&str], with_fi: bool) -> Option<DesignPoint> {
-        self.cache.get(&self.key(names, with_fi)).cloned()
+    fn get(&self, names: &[&str], fidelity: Fidelity) -> Option<DesignPoint> {
+        // a full-fidelity result satisfies a screen-tier lookup for free
+        // (strictly better estimate, same sites)
+        if fidelity == Fidelity::FiScreen {
+            if let Some(p) = self.cache.get(&self.key(names, Fidelity::FiFull)) {
+                return Some(p.clone());
+            }
+        }
+        self.cache.get(&self.key(names, fidelity)).cloned()
     }
 
-    fn put(&mut self, names: &[&str], with_fi: bool, point: &DesignPoint) {
-        if let Err(e) = self.cache.put(&self.key(names, with_fi), point.clone()) {
+    fn put(&mut self, names: &[&str], fidelity: Fidelity, point: &DesignPoint) {
+        // Screen-tier and early-stopped estimates are cheap, run-config-
+        // dependent partials: persisting them under the canonical key
+        // would hand a later exact run (`--fi-epsilon 0`) a lower-
+        // precision value and break its bit-for-bit guarantee. Only
+        // complete campaigns (and FI-free tiers) are durable.
+        if fidelity == Fidelity::FiScreen
+            || (fidelity == Fidelity::FiFull && point.fi_faults != self.fi.n_faults)
+        {
+            return;
+        }
+        if let Err(e) = self.cache.put(&self.key(names, fidelity), point.clone()) {
             eprintln!("search: cache write failed ({e}); continuing");
         }
     }
@@ -185,11 +258,16 @@ pub struct SearchOutcome {
     pub evaluated: Vec<DesignPoint>,
     /// genotypes aligned with `evaluated`
     pub genotypes: Vec<Genotype>,
+    /// final fidelity tier of each archive point (aligned with
+    /// `evaluated`; frontier members are promoted to `FiFull`)
+    pub fidelities: Vec<Fidelity>,
     /// indices into `evaluated` of the 2-D frontier (util vs FI drop, or
     /// util vs accuracy drop when FI was skipped)
     pub frontier_idx: Vec<usize>,
     pub evals_used: usize,
     pub cache_hits: usize,
+    /// FiScreen → FiFull re-evaluations of frontier survivors
+    pub promotions: usize,
     pub space_size: u128,
     pub trace: Vec<TracePoint>,
 }
@@ -233,27 +311,34 @@ struct Archive<'a> {
     genotypes: Vec<Genotype>,
     points: Vec<DesignPoint>,
     objs: Vec<[f64; 3]>,
+    fidelities: Vec<Fidelity>,
     evals_used: usize,
     cache_hits: usize,
+    promotions: usize,
     budget: usize,
     with_fi: bool,
+    /// tier for fresh genotypes (see [`SearchSpec::fresh_fidelity`])
+    fresh_fidelity: Fidelity,
     workers: usize,
     trace: Vec<TracePoint>,
 }
 
 impl<'a> Archive<'a> {
-    fn new(space: &'a SearchSpace, budget: usize, with_fi: bool, workers: usize) -> Archive<'a> {
+    fn new(space: &'a SearchSpace, budget: usize, spec: &SearchSpec) -> Archive<'a> {
         Archive {
             space,
             seen: HashMap::new(),
             genotypes: Vec::new(),
             points: Vec::new(),
             objs: Vec::new(),
+            fidelities: Vec::new(),
             evals_used: 0,
             cache_hits: 0,
+            promotions: 0,
             budget,
-            with_fi,
-            workers,
+            with_fi: spec.with_fi,
+            fresh_fidelity: spec.fresh_fidelity(),
+            workers: spec.workers.max(1),
             trace: Vec::new(),
         }
     }
@@ -262,16 +347,29 @@ impl<'a> Archive<'a> {
         self.budget.saturating_sub(self.evals_used)
     }
 
-    fn record(&mut self, g: Genotype, mut p: DesignPoint) -> usize {
+    fn record(&mut self, g: Genotype, mut p: DesignPoint, fidelity: Fidelity) -> usize {
         // the archive's view of the config is the generalized digit string
         p.config_string = self.space.config_digits(&g);
         let idx = self.points.len();
         self.objs.push(objectives(&p));
         self.points.push(p);
+        self.fidelities.push(fidelity);
         self.genotypes.push(g.clone());
         self.seen.insert(g, idx);
         self.evals_used += 1;
         idx
+    }
+
+    /// Current frontier as a [`FiGate`] snapshot — new campaigns may stop
+    /// once dominated at their optimistic CI boundary.
+    fn gate(&self) -> FiGate {
+        if !self.with_fi {
+            return FiGate::default();
+        }
+        let (idx, _) = frontier_hv(&self.points, true);
+        FiGate::new(
+            idx.iter().map(|&i| (self.points[i].util_pct, self.points[i].fault_vuln_pct)).collect(),
+        )
     }
 
     fn snapshot_trace(&mut self) {
@@ -288,13 +386,16 @@ impl<'a> Archive<'a> {
     /// results. Returns one archive index per batch item that is in the
     /// archive afterwards (already-seen and in-batch duplicates map to
     /// their existing index); only candidates beyond the budget are
-    /// dropped.
+    /// dropped. With screening on, fresh points run at `FiScreen` and the
+    /// archive frontier is then promoted to `FiFull` (fixpoint loop —
+    /// refined values can reshuffle the frontier).
     fn eval_batch<B: EvalBackend>(
         &mut self,
         backend: &B,
         cache: &mut dyn CacheHook,
         batch: Vec<Genotype>,
     ) -> Vec<usize> {
+        let fidelity = self.fresh_fidelity;
         let mut fresh: Vec<Genotype> = Vec::new();
         for g in &batch {
             if !self.seen.contains_key(g) && !fresh.contains(g) && fresh.len() < self.remaining()
@@ -308,36 +409,84 @@ impl<'a> Archive<'a> {
             let mut results: Vec<Option<DesignPoint>> = vec![None; fresh.len()];
             for (i, g) in fresh.iter().enumerate() {
                 let names = self.space.decode(g);
-                if let Some(p) = cache.get(&names, self.with_fi) {
+                if let Some(p) = cache.get(&names, fidelity) {
                     self.cache_hits += 1;
                     results[i] = Some(p);
                 } else {
                     misses.push((i, g.clone()));
                 }
             }
-            // backend pass (parallel over misses)
+            // backend pass (parallel over misses); the pre-batch frontier
+            // gates hopeless campaigns — both this layer and the campaign
+            // workers inside the backend lease from the shared budget
             if !misses.is_empty() {
-                let with_fi = self.with_fi;
+                let gate =
+                    if backend.wants_gate() { self.gate() } else { FiGate::default() };
                 let space = self.space;
-                let evaluated: Vec<DesignPoint> =
-                    threadpool::scoped_map(self.workers, &misses, |(_, g)| {
-                        backend.eval(&space.decode(g), with_fi)
-                    });
+                let evaluated: Vec<DesignPoint> = threadpool::budgeted_map(
+                    threadpool::WorkerBudget::global(),
+                    self.workers,
+                    &misses,
+                    |(_, g)| backend.eval_gated(&space.decode(g), fidelity, &gate),
+                );
                 for ((i, g), mut p) in misses.into_iter().zip(evaluated) {
                     // persist with the generalized digit config so the
                     // stored value (not just the key) identifies the
                     // per-layer assignment
                     p.config_string = self.space.config_digits(&g);
-                    cache.put(&self.space.decode(&g), self.with_fi, &p);
+                    cache.put(&self.space.decode(&g), fidelity, &p);
                     results[i] = Some(p);
                 }
             }
             for (g, p) in fresh.into_iter().zip(results) {
-                self.record(g, p.expect("batch result"));
+                self.record(g, p.expect("batch result"), fidelity);
+            }
+            if self.with_fi && fidelity < Fidelity::FiFull {
+                self.promote_frontier(backend, cache);
             }
             self.snapshot_trace();
         }
         batch.iter().filter_map(|g| self.seen.get(g).copied()).collect()
+    }
+
+    /// Promote archive-frontier survivors from the screen tier to
+    /// `FiFull`, looping until the frontier is entirely full-fidelity
+    /// (promotion can change objectives and therefore the frontier).
+    /// Promotions refine already-budgeted points — they consume no budget
+    /// units; their extra faults are accounted by the backend's ledger.
+    /// A promotion re-runs the campaign from fault zero rather than
+    /// resuming the screen prefix: resuming would require keeping every
+    /// screened point's clean traces (n_images × activations) alive
+    /// across batches, which does not fit in memory for real archives —
+    /// the re-simulated prefix is bounded by `screen/full` per promotion.
+    fn promote_frontier<B: EvalBackend>(&mut self, backend: &B, cache: &mut dyn CacheHook) {
+        loop {
+            let (front, _) = frontier_hv(&self.points, self.with_fi);
+            let pending: Vec<usize> =
+                front.into_iter().filter(|&i| self.fidelities[i] < Fidelity::FiFull).collect();
+            if pending.is_empty() {
+                return;
+            }
+            for idx in pending {
+                let names = self.space.decode(&self.genotypes[idx]);
+                let digits = self.space.config_digits(&self.genotypes[idx]);
+                let p = if let Some(hit) = cache.get(&names, Fidelity::FiFull) {
+                    self.cache_hits += 1;
+                    let mut p = hit;
+                    p.config_string = digits;
+                    p
+                } else {
+                    let mut p = backend.eval(&names, Fidelity::FiFull);
+                    p.config_string = digits;
+                    cache.put(&names, Fidelity::FiFull, &p);
+                    p
+                };
+                self.objs[idx] = objectives(&p);
+                self.points[idx] = p;
+                self.fidelities[idx] = Fidelity::FiFull;
+                self.promotions += 1;
+            }
+        }
     }
 
     fn finish(mut self, strategy: Strategy) -> SearchOutcome {
@@ -349,9 +498,11 @@ impl<'a> Archive<'a> {
             strategy,
             evaluated: self.points,
             genotypes: self.genotypes,
+            fidelities: self.fidelities,
             frontier_idx,
             evals_used: self.evals_used,
             cache_hits: self.cache_hits,
+            promotions: self.promotions,
             space_size: self.space.size(),
             trace: self.trace,
         }
@@ -386,7 +537,7 @@ pub fn run_search<B: EvalBackend>(
     cache: &mut dyn CacheHook,
 ) -> SearchOutcome {
     let budget = spec.resolved_budget(space);
-    let mut archive = Archive::new(space, budget, spec.with_fi, spec.workers.max(1));
+    let mut archive = Archive::new(space, budget, spec);
     let mut rng = Rng::new(spec.seed);
 
     // budget covers the space: every strategy is the exhaustive sweep
@@ -482,8 +633,11 @@ mod tests {
     /// Deterministic synthetic backend: per-layer additive utilization,
     /// mildly non-separable accuracy drop, layer-position-weighted
     /// vulnerability. No artifacts, no engine — pure cost tables.
+    /// `screen_noise` is added to the vulnerability at the screen tier
+    /// (real screens are noisy prefix estimates).
     struct SynthBackend {
         space: SearchSpace,
+        screen_noise: f64,
     }
 
     impl SynthBackend {
@@ -508,6 +662,8 @@ mod tests {
                 acc_drop_pct: drop,
                 fi_mean_acc: 0.9 - vuln / 100.0,
                 fault_vuln_pct: vuln,
+                fi_faults: 100,
+                fi_ci95_pp: 0.5,
                 cycles: 1000 + util as u64,
                 luts: 100,
                 ffs: 100,
@@ -515,18 +671,29 @@ mod tests {
                 power_mw: 1.0,
             }
         }
-    }
 
-    impl EvalBackend for SynthBackend {
-        fn eval(&self, names: &[&str], _with_fi: bool) -> DesignPoint {
-            let g: Genotype = names
+        fn decode(&self, names: &[&str]) -> Genotype {
+            names
                 .iter()
                 .map(|n| {
                     self.space.alphabet.iter().position(|a| a == n).expect("name in alphabet")
                         as u8
                 })
-                .collect();
-            self.point(&g)
+                .collect()
+        }
+    }
+
+    impl EvalBackend for SynthBackend {
+        fn eval(&self, names: &[&str], fidelity: Fidelity) -> DesignPoint {
+            let mut p = self.point(&self.decode(names));
+            if fidelity == Fidelity::FiScreen {
+                // a screen estimate is noisier and cheaper than the truth
+                p.fault_vuln_pct += self.screen_noise;
+                p.fi_mean_acc -= self.screen_noise / 100.0;
+                p.fi_faults = 20;
+                p.fi_ci95_pp = 2.0;
+            }
+            p
         }
     }
 
@@ -557,7 +724,7 @@ mod tests {
     fn property_full_budget_reproduces_exhaustive_frontier() {
         check("budget >= space => exhaustive frontier", 0xB0D6, 25, |rng| {
             let space = synth_space(rng);
-            let backend = SynthBackend { space: space.clone() };
+            let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
             let size = space.size() as usize;
             let exhaustive = run_search(
                 &space,
@@ -593,7 +760,7 @@ mod tests {
     fn property_budget_respected_and_archive_unique() {
         check("budget respected; archive unique", 0xBEEF, 25, |rng| {
             let space = synth_space(rng);
-            let backend = SynthBackend { space: space.clone() };
+            let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
             let size = space.size() as usize;
             let budget = 1 + rng.usize_below(size);
             for strat in [Strategy::Nsga2, Strategy::Anneal, Strategy::HillClimb] {
@@ -617,7 +784,7 @@ mod tests {
     fn trace_hypervolume_monotone() {
         let mut rng = Rng::new(9);
         let space = synth_space(&mut rng);
-        let backend = SynthBackend { space: space.clone() };
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
         let out = run_search(
             &space,
             &SearchSpec { budget: space.size() as usize, ..SearchSpec::new(Strategy::Nsga2) },
@@ -638,7 +805,7 @@ mod tests {
             vec!["exact".into(), "ax_a".into(), "ax_b".into()],
             "xxx",
         );
-        let backend = SynthBackend { space: space.clone() };
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
         let mk = |workers| SearchSpec {
             budget: 12,
             seed: 77,
@@ -652,6 +819,85 @@ mod tests {
     }
 
     #[test]
+    fn screening_promotes_frontier_survivors_to_full_fidelity() {
+        // with screening on, every frontier member must end at FiFull with
+        // the FiFull objective values; non-frontier points may stay cheap
+        let mut rng = Rng::new(0x5C4EE);
+        for _ in 0..10 {
+            let space = synth_space(&mut rng);
+            let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+            let size = space.size() as usize;
+            let spec = SearchSpec {
+                budget: size,
+                seed: rng.next_u64(),
+                screen: true,
+                ..SearchSpec::new(Strategy::Nsga2)
+            };
+            let out = run_search(&space, &spec, &backend, &mut NoCache);
+            assert_eq!(out.fidelities.len(), out.evaluated.len());
+            assert!(out.promotions > 0, "a frontier exists, so something must promote");
+            for &i in &out.frontier_idx {
+                assert_eq!(out.fidelities[i], Fidelity::FiFull, "frontier point {i} not promoted");
+                let truth = backend.point(&out.genotypes[i]);
+                assert_eq!(out.evaluated[i].fault_vuln_pct, truth.fault_vuln_pct);
+                assert_eq!(out.evaluated[i].fi_faults, 100);
+            }
+        }
+    }
+
+    #[test]
+    fn noise_free_screening_reproduces_the_unscreened_frontier() {
+        // when the screen tier agrees with the full tier (epsilon 0 /
+        // screen == full), screening changes cost accounting, never the
+        // frontier — the driver-level half of the bit-for-bit criterion
+        let mut rng = Rng::new(0x00F5);
+        for _ in 0..10 {
+            let space = synth_space(&mut rng);
+            let backend = SynthBackend { space: space.clone(), screen_noise: 0.0 };
+            let spec = SearchSpec {
+                budget: space.size() as usize,
+                seed: rng.next_u64(),
+                screen: true,
+                ..SearchSpec::new(Strategy::Nsga2)
+            };
+            let screened = run_search(&space, &spec, &backend, &mut NoCache);
+            let full = run_search(
+                &space,
+                &SearchSpec { screen: false, ..spec.clone() },
+                &backend,
+                &mut NoCache,
+            );
+            assert_eq!(frontier_coords(&screened), frontier_coords(&full));
+            assert_eq!(screened.evals_used, full.evals_used);
+            let hv = screened.hypervolume() / full.hypervolume().max(1e-12);
+            assert!((hv - 1.0).abs() < 1e-9, "{hv}");
+        }
+    }
+
+    #[test]
+    fn screen_disabled_runs_are_all_full_fidelity() {
+        let mut rng = Rng::new(0xF1D0);
+        let space = synth_space(&mut rng);
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: 6, ..SearchSpec::new(Strategy::Nsga2) },
+            &backend,
+            &mut NoCache,
+        );
+        assert!(out.fidelities.iter().all(|&f| f == Fidelity::FiFull));
+        assert_eq!(out.promotions, 0);
+        // no-FI runs sit at the Accuracy tier
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: 6, with_fi: false, ..SearchSpec::new(Strategy::Nsga2) },
+            &backend,
+            &mut NoCache,
+        );
+        assert!(out.fidelities.iter().all(|&f| f == Fidelity::Accuracy));
+    }
+
+    #[test]
     fn seeds_dominate_low_budget_runs() {
         // with budget == number of seeds, the archive is exactly the seeds
         let space = SearchSpace::with_dims(
@@ -660,7 +906,7 @@ mod tests {
             vec!["exact".into(), "ax_a".into()],
             "xxxx",
         );
-        let backend = SynthBackend { space: space.clone() };
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
         let n_seeds = space.seeds().len();
         let out = run_search(
             &space,

@@ -15,9 +15,16 @@
 //! * [`anneal`] — simulated annealing and greedy hill-climb baselines over
 //!   scalarized objectives.
 //! * [`driver`] — evaluation budget, parallel population evaluation on
-//!   [`crate::util::threadpool`], dedup through
+//!   [`crate::util::threadpool`] (worker counts leased from the shared
+//!   [`crate::util::threadpool::WorkerBudget`]), dedup through
 //!   [`crate::dse::cache::ResultCache`], convergence trace with the
 //!   hypervolume indicator from [`crate::dse::pareto`].
+//!
+//! Evaluation goes through the [`crate::eval`] fidelity ladder: with
+//! screening on (`SearchSpec::screen`), fresh genotypes pay only a
+//! truncated `FiScreen` campaign and the driver promotes archive-frontier
+//! survivors to `FiFull`, so a fixed fault budget buys several times more
+//! unique design points.
 //!
 //! The Fig. 2 pipeline selects a [`Strategy`]
 //! (`Exhaustive | Nsga2 | Anneal | HillClimb`) through

@@ -48,6 +48,79 @@ pub fn ci95_halfwidth(s: &Summary) -> f64 {
     1.959964 * s.std / (s.n as f64).sqrt()
 }
 
+/// Welford-style streaming mean/variance accumulator. Block-wise fault
+/// campaigns push per-fault accuracies as they arrive and read the running
+/// CI without re-scanning the prefix; numerically stable for the long,
+/// near-constant sequences FI produces (naive sum-of-squares cancels).
+#[derive(Debug, Clone)]
+pub struct Streaming {
+    n: usize,
+    mean: f64,
+    /// sum of squared deviations from the running mean (Welford's M2)
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Streaming {
+    fn default() -> Self {
+        Streaming::new()
+    }
+}
+
+impl Streaming {
+    pub fn new() -> Streaming {
+        Streaming { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator, matching [`summarize`]).
+    pub fn var(&self) -> f64 {
+        if self.n > 1 {
+            self.m2 / (self.n - 1) as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Snapshot as a batch [`Summary`] (mean/std agree with `summarize` up
+    /// to floating-point reassociation; the campaign's *final* numbers are
+    /// still produced by `summarize` so results stay bit-identical to the
+    /// one-shot runner).
+    pub fn summary(&self) -> Summary {
+        assert!(self.n > 0, "summary of empty stream");
+        Summary { n: self.n, mean: self.mean, std: self.std(), min: self.min, max: self.max }
+    }
+
+    /// 95% CI half-width of the running mean; infinite below 2 samples.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::INFINITY;
+        }
+        1.959964 * self.std() / (self.n as f64).sqrt()
+    }
+}
+
 /// Leveugle et al. statistical FI sample size:
 ///   n = N / (1 + e^2 (N-1) / (t^2 p(1-p)))
 /// with population N (total fault sites), error margin e, confidence
@@ -90,6 +163,57 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 100.0), 30.0);
         assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_streaming_matches_batch_summarize() {
+        use crate::util::proptest::check;
+        check("welford == batch summarize", 0x57A7, 60, |rng| {
+            let n = 1 + rng.usize_below(300);
+            let xs: Vec<f64> =
+                (0..n).map(|_| (rng.below(2000) as f64 - 1000.0) / 97.0).collect();
+            let batch = summarize(&xs);
+            let mut s = Streaming::new();
+            for &x in &xs {
+                s.push(x);
+            }
+            assert_eq!(s.n(), batch.n);
+            assert!((s.mean() - batch.mean).abs() <= 1e-9 * batch.mean.abs().max(1.0));
+            assert!((s.std() - batch.std).abs() <= 1e-9 * batch.std.abs().max(1.0));
+            let snap = s.summary();
+            assert_eq!(snap.min, batch.min);
+            assert_eq!(snap.max, batch.max);
+            let (a, b) = (s.ci95(), ci95_halfwidth(&batch));
+            if n < 2 {
+                assert!(a.is_infinite() && b.is_infinite());
+            } else {
+                assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_constant_sequence_has_zero_variance() {
+        // the degenerate case FI hits constantly: every fault leaves
+        // accuracy unchanged -> std must be exactly 0, not a tiny negative
+        let mut s = Streaming::new();
+        for _ in 0..50 {
+            s.push(0.9375);
+        }
+        assert_eq!(s.mean(), 0.9375);
+        assert!(s.var() >= 0.0 && s.var() < 1e-28);
+        assert!(s.ci95() < 1e-13);
+    }
+
+    #[test]
+    fn streaming_empty_and_single() {
+        let mut s = Streaming::new();
+        assert_eq!(s.n(), 0);
+        assert!(s.ci95().is_infinite());
+        s.push(3.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.std(), 0.0);
+        assert!(s.ci95().is_infinite());
     }
 
     #[test]

@@ -4,9 +4,164 @@
 //! speed up the simulation process, DeepAxe supports multi-thread
 //! parallelism"); this pool is the substrate for that feature. Work items
 //! are indexed closures; results come back in submission order.
+//!
+//! [`WorkerBudget`] is the process-wide worker-count ledger: nested
+//! parallel layers (population evaluation spawning FI campaigns) lease
+//! spawn slots from one shared cap instead of multiplying their own pool
+//! sizes, so the host is never oversubscribed no matter how the layers
+//! stack. [`budgeted_map`]/[`budgeted_map_with`] are the lease-aware maps.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Process-wide cap on concurrently live *spawned* worker threads.
+///
+/// Every parallel map leases spawn slots before starting threads; the
+/// lease grants `min(want, cap - live)` (possibly zero — the caller thread
+/// always participates, so progress never blocks on the budget) and
+/// returns the slots when dropped. With nested maps the inner layer simply
+/// sees fewer free slots: at most `cap` spawned workers exist at any
+/// instant, plus the one root caller thread.
+#[derive(Debug)]
+pub struct WorkerBudget {
+    cap: usize,
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl WorkerBudget {
+    pub fn new(cap: usize) -> WorkerBudget {
+        WorkerBudget { cap, live: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    /// The shared process budget: `DEEPAXE_WORKERS` (or available
+    /// parallelism) minus the root thread, never below 0 extra workers.
+    pub fn global() -> &'static WorkerBudget {
+        static GLOBAL: OnceLock<WorkerBudget> = OnceLock::new();
+        GLOBAL.get_or_init(|| WorkerBudget::new(default_workers().saturating_sub(1)))
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Spawned workers currently live under this budget.
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`live`](Self::live) — the regression guard for
+    /// the nested-parallelism fix.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Lease up to `want` spawn slots; the grant may be smaller (including
+    /// zero) when the budget is busy. Slots return on [`Lease`] drop.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        let mut granted;
+        loop {
+            let live = self.live.load(Ordering::SeqCst);
+            granted = want.min(self.cap.saturating_sub(live));
+            if granted == 0 {
+                break;
+            }
+            if self
+                .live
+                .compare_exchange(live, live + granted, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.peak.fetch_max(live + granted, Ordering::SeqCst);
+                break;
+            }
+        }
+        Lease { budget: self, granted }
+    }
+}
+
+/// A grant of spawn slots; returns them to the budget on drop.
+pub struct Lease<'a> {
+    budget: &'a WorkerBudget,
+    granted: usize,
+}
+
+impl Lease<'_> {
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if self.granted > 0 {
+            self.budget.live.fetch_sub(self.granted, Ordering::SeqCst);
+        }
+    }
+}
+
+/// [`budgeted_map_with`] without per-worker state.
+pub fn budgeted_map<I, T, F>(budget: &WorkerBudget, want: usize, items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    budgeted_map_with(budget, want, items, || (), |_, item| f(item))
+}
+
+/// Parallel map whose thread count is leased from a shared [`WorkerBudget`]
+/// (order preserved, caller participates). `init` builds one scratch state
+/// per worker — campaign workers reuse inference buffers across items
+/// without per-item allocation. Requesting `want` workers spawns at most
+/// `want - 1` threads (the caller is one of the `want`), further capped by
+/// the budget's free slots; with zero free slots the map degrades to the
+/// serial path instead of blocking.
+pub fn budgeted_map_with<I, S, T, FI, F>(
+    budget: &WorkerBudget,
+    want: usize,
+    items: &[I],
+    init: FI,
+    f: F,
+) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, &I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let lease = budget.lease(want.max(1).min(n).saturating_sub(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let work = || {
+        let mut state = init();
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let v = f(&mut state, &items[i]);
+            slots.lock().unwrap()[i] = Some(v);
+        }
+    };
+    std::thread::scope(|scope| {
+        for _ in 0..lease.granted() {
+            scope.spawn(&work);
+        }
+        work();
+    });
+    drop(lease);
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("budgeted_map result missing"))
+        .collect()
+}
 
 /// Run `jobs` closures across `workers` OS threads; returns results in job
 /// order. Panics in jobs are propagated (the pool shuts down first).
@@ -193,5 +348,97 @@ mod tests {
         let out = par_map(2, (0..500).collect::<Vec<u32>>(), |x| x % 7);
         assert_eq!(out.len(), 500);
         assert_eq!(out[499], 499 % 7);
+    }
+
+    #[test]
+    fn budgeted_map_order_and_serial_degradation() {
+        let budget = WorkerBudget::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let out = budgeted_map(&budget, 4, &data, |x| x * 3);
+        assert_eq!(out, data.iter().map(|x| x * 3).collect::<Vec<_>>());
+        assert_eq!(budget.live(), 0, "lease must be returned");
+        // zero-cap budget: still completes, serially
+        let zero = WorkerBudget::new(0);
+        let out = budgeted_map(&zero, 8, &data, |x| x + 1);
+        assert_eq!(out, data.iter().map(|x| x + 1).collect::<Vec<_>>());
+        assert_eq!(zero.peak(), 0);
+        let empty: Vec<u64> = budgeted_map(&budget, 4, &[] as &[u64], |x: &u64| *x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn budgeted_map_with_reuses_worker_state() {
+        let budget = WorkerBudget::new(2);
+        let inits = AtomicUsize::new(0);
+        let data: Vec<usize> = (0..64).collect();
+        let out = budgeted_map_with(
+            &budget,
+            3,
+            &data,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Vec::<usize>::new()
+            },
+            |scratch, &x| {
+                scratch.push(x);
+                x * 2
+            },
+        );
+        assert_eq!(out, data.iter().map(|x| x * 2).collect::<Vec<_>>());
+        // one scratch state per participating worker, not per item
+        assert!(inits.load(Ordering::SeqCst) <= 3, "{}", inits.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn lease_grants_are_capped_and_returned() {
+        let budget = WorkerBudget::new(4);
+        let a = budget.lease(3);
+        assert_eq!(a.granted(), 3);
+        let b = budget.lease(3);
+        assert_eq!(b.granted(), 1, "only one slot left");
+        let c = budget.lease(5);
+        assert_eq!(c.granted(), 0, "budget exhausted grants zero, never blocks");
+        drop(b);
+        assert_eq!(budget.live(), 3);
+        drop(a);
+        drop(c);
+        assert_eq!(budget.live(), 0);
+        assert_eq!(budget.peak(), 4);
+    }
+
+    /// Regression test for the nested-parallelism bug: population workers
+    /// spawning FI-campaign workers used to multiply their pool sizes
+    /// (`CampaignParams::workers` × population workers). Routed through one
+    /// shared budget, total live spawned workers must never exceed the cap
+    /// — so at most `cap + 1` closures run concurrently (+1 is the root
+    /// caller thread, which always participates but is never spawned).
+    #[test]
+    fn nested_maps_never_oversubscribe_shared_budget() {
+        let budget = WorkerBudget::new(3);
+        let running = AtomicUsize::new(0);
+        let observed_peak = AtomicUsize::new(0);
+        let outer: Vec<usize> = (0..6).collect();
+        budgeted_map(&budget, 4, &outer, |_| {
+            let inner: Vec<usize> = (0..8).collect();
+            budgeted_map(&budget, 4, &inner, |_| {
+                let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                observed_peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                running.fetch_sub(1, Ordering::SeqCst);
+            });
+        });
+        assert!(
+            budget.peak() <= budget.cap(),
+            "leased {} spawned workers over a cap of {}",
+            budget.peak(),
+            budget.cap()
+        );
+        assert!(
+            observed_peak.load(Ordering::SeqCst) <= budget.cap() + 1,
+            "{} concurrent workers over a budget of {} (+1 root)",
+            observed_peak.load(Ordering::SeqCst),
+            budget.cap()
+        );
+        assert_eq!(budget.live(), 0);
     }
 }

@@ -83,6 +83,21 @@ fn search_subcommand_runs_budgeted() {
 }
 
 #[test]
+fn search_accepts_fidelity_ladder_knobs() {
+    let out = repro(&[
+        "search", "--net", "mlp3", "--strategy", "nsga2", "--budget", "10",
+        "--faults", "16", "--images", "8", "--eval-images", "32",
+        "--fi-screen", "4", "--fi-epsilon", "0.5",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("FI ledger"), "{text}");
+    assert!(text.contains("promotions"), "{text}");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fi-epsilon 0.5pp"), "{err}");
+}
+
+#[test]
 fn search_rejects_unknown_strategy() {
     let out = repro(&["search", "--net", "mlp3", "--strategy", "quantum"]);
     assert!(!out.status.success());

@@ -127,6 +127,8 @@ fn pipeline_selects_feasible_design() {
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
+        fi_epsilon: 0.0,
+        fi_screen: 0,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert_eq!(out.accuracy_sweep.len(), 2 * 7 + 1); // 2 mults x 7 nonzero masks + exact
@@ -161,6 +163,8 @@ fn pipeline_infeasible_requirements() {
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
+        fi_epsilon: 0.0,
+        fi_screen: 0,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert!(out.fi_points.is_empty());

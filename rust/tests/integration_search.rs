@@ -9,6 +9,7 @@ use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
 use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
 use deepaxe::dse::cache::ResultCache;
 use deepaxe::dse::{enumerate_masks, pareto_front, Evaluator};
+use deepaxe::eval::Fidelity;
 use deepaxe::faultsim::{CampaignParams, SiteSampling};
 use deepaxe::search::{
     frontier_hv, run_search, EvaluatorBackend, NoCache, ResultCacheHook, SearchSpace,
@@ -155,12 +156,14 @@ fn heterogeneous_results_cache_and_reload() {
         let g = vec![1u8, 2, 0]; // kvp on layer 0, kv9 on layer 1, exact
         assert!(space.homogeneous(&g).is_none());
         let names = space.decode(&g);
-        assert!(hook.get(&names, true).is_none());
+        assert!(hook.get(&names, Fidelity::FiFull).is_none());
         let p = ev.evaluate_assignment(&names, true);
         assert_eq!(p.mult, "mixed");
         assert_eq!(p.mask, 0b011);
-        hook.put(&names, true, &p);
-        assert_eq!(hook.get(&names, true).as_ref(), Some(&p));
+        hook.put(&names, Fidelity::FiFull, &p);
+        assert_eq!(hook.get(&names, Fidelity::FiFull).as_ref(), Some(&p));
+        // a full-fidelity entry also serves screen-tier lookups for free
+        assert_eq!(hook.get(&names, Fidelity::FiScreen).as_ref(), Some(&p));
         // reload from disk: still there
         drop(hook);
         let mut cache2 = ResultCache::open(&path);
@@ -170,7 +173,7 @@ fn heterogeneous_results_cache_and_reload() {
             fi: fi.clone(),
             eval_images: 32,
         };
-        assert_eq!(hook2.get(&names, true).as_ref(), Some(&p));
+        assert_eq!(hook2.get(&names, Fidelity::FiFull).as_ref(), Some(&p));
     }
     let _ = std::fs::remove_file(&path);
 
@@ -203,6 +206,34 @@ fn heterogeneous_results_cache_and_reload() {
 }
 
 #[test]
+fn staged_backend_with_epsilon_zero_is_bit_identical_to_monolithic_backend() {
+    // acceptance criterion: with early stopping disabled (--fi-epsilon 0,
+    // screen=full) the staged ladder reproduces the pre-ladder search
+    // output exactly — same genotype trajectory, same design points
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let fi = fi_params(6, 12, 0xB17);
+    let ev = Evaluator::new(&net, &data, &ctx.luts, 48, fi);
+    let space = SearchSpace::paper(&net, &paper_mults());
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 12;
+    spec.seed = 0xB17;
+
+    let mono = run_search(&space, &spec, &EvaluatorBackend { ev: &ev }, &mut NoCache);
+    let staged_ev = StagedEvaluator::new(&ev, FidelitySpec::exact());
+    let staged =
+        run_search(&space, &spec, &StagedBackend { st: &staged_ev }, &mut NoCache);
+    assert_eq!(mono.genotypes, staged.genotypes, "search trajectory must not change");
+    assert_eq!(mono.evaluated.len(), staged.evaluated.len());
+    for (a, b) in mono.evaluated.iter().zip(&staged.evaluated) {
+        assert_eq!(a, b, "design points must be bit-identical");
+    }
+    assert_eq!(staged_ev.ledger().early_stops(), 0);
+}
+
+#[test]
 fn pipeline_dispatches_heuristic_strategy() {
     let ctx = common::ctx();
     let spec = PipelineSpec {
@@ -214,6 +245,8 @@ fn pipeline_dispatches_heuristic_strategy() {
         fi: fi_params(6, 12, 0xBEE),
         strategy: Strategy::Nsga2,
         budget: 10,
+        fi_epsilon: 0.0,
+        fi_screen: 0,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert!(out.evals_used <= 10);

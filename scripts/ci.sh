@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build + test suite, plus formatting check when
-# rustfmt is installed. Run from anywhere; operates on the repo root.
+# Tier-1 gate: release build + test suite, plus style stages (format and
+# clippy) when the respective toolchain components are installed. Run from
+# anywhere; operates on the repo root.
 #
 # Knobs:
-#   CI_SKIP_FMT=1   skip the cargo fmt --check step
+#   CI_SKIP_FMT=1     skip the cargo fmt --check step
+#   CI_SKIP_CLIPPY=1  skip the cargo clippy step
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,6 +29,15 @@ if [ "${CI_SKIP_FMT:-0}" != "1" ]; then
         cargo fmt --check
     else
         echo "ci.sh: rustfmt not installed; skipping format check." >&2
+    fi
+fi
+
+if [ "${CI_SKIP_CLIPPY:-0}" != "1" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== style: cargo clippy -D warnings =="
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "ci.sh: clippy not installed; skipping lint check." >&2
     fi
 fi
 
