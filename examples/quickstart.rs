@@ -46,6 +46,7 @@ fn main() -> Result<()> {
         budget: 0,
         fi_epsilon: 0.0,
         fi_screen: 0,
+        fi_screen_auto: false,
     };
     println!(
         "\nrunning DeepAxe pipeline (max acc drop {:.1}pp, max vulnerability {:.1}pp)...",

@@ -1,0 +1,85 @@
+//! Fault-injection hot-path harness: faults/s, faulty inferences/s, mean
+//! replay depth and masked fraction on LeNet-5 with the convergence gate
+//! on vs off, plus the naive full-forward baseline. The gate-on and
+//! gate-off campaigns must agree bit-for-bit (asserted here, not just in
+//! unit tests) — the gate buys speed, never accuracy. Emits one JSON line
+//! per measurement so BENCH_*.json tooling can track the speedup.
+
+mod bench_common;
+
+use deepaxe::faultsim::{run_campaign, CampaignParams};
+use deepaxe::simnet::Engine;
+use deepaxe::util::bench::black_box;
+use deepaxe::util::json;
+use std::time::Instant;
+
+fn emit(config: &str, metric: &str, value: f64) {
+    let j = json::obj(vec![
+        ("bench", json::str("bench_faultsim")),
+        ("config", json::str(config)),
+        (metric, json::num(value)),
+    ]);
+    println!("{j}");
+}
+
+fn main() {
+    let ctx = bench_common::setup(120, 40, 100);
+    let net = ctx.net("lenet5").expect("lenet5");
+    let data = ctx.data_for(&net).expect("dataset");
+    let base = CampaignParams::default_for(&net.name);
+    println!(
+        "bench_faultsim: lenet5, {} faults x {} images, {} workers",
+        base.n_faults, base.n_images, base.workers
+    );
+
+    // a mixed assignment exercises per-layer LUT dispatch on the suffix
+    let luts: Vec<&deepaxe::axmul::Lut> = (0..net.n_comp())
+        .map(|ci| {
+            if ci % 2 == 0 {
+                &ctx.luts["mul8s_1kvp_s"]
+            } else {
+                &ctx.luts["exact"]
+            }
+        })
+        .collect();
+    let engine = Engine::new(&net, luts);
+
+    let mut reference: Option<Vec<f64>> = None;
+    for (label, replay, gate) in
+        [("gate-on", true, true), ("gate-off", true, false), ("naive", false, false)]
+    {
+        let params = CampaignParams { replay, gate, ..base.clone() };
+        let t0 = Instant::now();
+        let r = black_box(run_campaign(&engine, &data, &params));
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        match &reference {
+            None => reference = Some(r.acc_per_fault.clone()),
+            Some(ref_accs) => assert_eq!(
+                &r.acc_per_fault, ref_accs,
+                "{label} must be bit-identical to the gated campaign"
+            ),
+        }
+        let faults_per_s = r.n_faults as f64 / dt;
+        let inferences_per_s = (r.n_faults * r.n_images) as f64 / dt;
+        println!(
+            "bench faultsim:{label:<8} {:6.2}s = {faults_per_s:8.2} faults/s ({inferences_per_s:9.0} faulty inferences/s), mean replay depth {:.3}, {:.1}% masked",
+            dt,
+            r.replay.mean_depth(),
+            r.replay.masked_fraction() * 100.0,
+        );
+        if r.replay.inferences > 0 {
+            let hist: Vec<String> = r
+                .replay
+                .depth_hist
+                .iter()
+                .enumerate()
+                .map(|(d, n)| format!("{d}:{n}"))
+                .collect();
+            println!("  replay depth hist [{}]", hist.join(" "));
+        }
+        emit(label, "faults_per_s", faults_per_s);
+        emit(label, "inferences_per_s", inferences_per_s);
+        emit(label, "mean_replay_depth", r.replay.mean_depth());
+        emit(label, "masked_fraction", r.replay.masked_fraction());
+    }
+}

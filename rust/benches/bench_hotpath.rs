@@ -107,6 +107,7 @@ fn main() {
             workers: 1,
             sampling: SiteSampling::UniformLayer,
             replay,
+            gate: true,
         };
         let r = bench(&format!("fi_campaign:lenet5:{label}"), 0, 3, || {
             black_box(run_campaign(&engine, &data, &params));

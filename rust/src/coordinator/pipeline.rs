@@ -45,8 +45,12 @@ pub struct PipelineSpec {
     /// CI-based FI early stop, percent points (`--fi-epsilon`; 0 = off —
     /// bit-for-bit legacy campaigns)
     pub fi_epsilon: f64,
-    /// screen-tier fault count (`--fi-screen`; 0 = screening off)
+    /// screen-tier fault count (`--fi-screen`; 0 = screening off unless
+    /// `fi_screen_auto`)
     pub fi_screen: usize,
+    /// size the screen tier adaptively from a pilot block's variance
+    /// (CLI `--fi-screen 0`; see [`crate::eval::StagedEvaluator`])
+    pub fi_screen_auto: bool,
 }
 
 impl PipelineSpec {
@@ -68,15 +72,20 @@ impl PipelineSpec {
             budget: 0,
             fi_epsilon: 0.0,
             fi_screen: 0,
+            fi_screen_auto: false,
         }
     }
 
-    /// Ladder knobs as a [`FidelitySpec`].
+    /// Ladder knobs as a [`FidelitySpec`]. Spread from the env defaults
+    /// (not [`FidelitySpec::exact`]) so `DEEPAXE_TRACE_CACHE_MB` is
+    /// honored on the pipeline path too; the spec's own fields override
+    /// every env-settable screen/epsilon knob.
     pub fn fidelity_spec(&self) -> FidelitySpec {
         FidelitySpec {
             epsilon_pp: self.fi_epsilon,
             screen_faults: self.fi_screen,
-            ..FidelitySpec::exact()
+            screen_auto: self.fi_screen_auto,
+            ..FidelitySpec::default_from_env()
         }
     }
 }
@@ -132,7 +141,7 @@ pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
         sspec.budget = spec.budget;
         sspec.seed = spec.fi.seed;
         sspec.with_fi = true;
-        sspec.screen = spec.fi_screen > 0;
+        sspec.screen = spec.fidelity_spec().screening_enabled();
         let mut hook = ResultCacheHook {
             cache: &mut cache,
             net: net.name.clone(),

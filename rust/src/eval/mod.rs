@@ -29,6 +29,15 @@
 //!    lease from the same [`crate::util::threadpool::WorkerBudget`], so
 //!    the two parallel layers can no longer multiply into
 //!    oversubscription.
+//! 4. **Zero-rework promotion** — screen-tier campaigns are parked in a
+//!    byte-budgeted LRU trace cache ([`FidelitySpec::trace_cache_mb`])
+//!    keyed by genotype; promoting a frontier survivor to `FiFull`
+//!    resumes the live campaign from its screen prefix via
+//!    [`crate::faultsim::Campaign::advance`] instead of re-tracing the
+//!    clean activations and re-simulating the prefix. Per-fault
+//!    accuracies are prefix-pure, so resumption is bit-identical to a
+//!    fresh full campaign; the saved work is visible in the
+//!    [`FiLedger`]'s `trace_builds`/`resumed_faults` counters.
 //!
 //! With `epsilon_pp = 0` and screening disabled the ladder degenerates to
 //! the historical path bit-for-bit (asserted by tests in [`staged`]).
@@ -91,7 +100,7 @@ impl Fidelity {
 }
 
 /// Ladder knobs (CLI `--fi-epsilon` / `--fi-screen`, env
-/// `DEEPAXE_FI_EPSILON` / `DEEPAXE_FI_SCREEN`).
+/// `DEEPAXE_FI_EPSILON` / `DEEPAXE_FI_SCREEN` / `DEEPAXE_TRACE_CACHE_MB`).
 #[derive(Debug, Clone)]
 pub struct FidelitySpec {
     /// CI-based early stop: a campaign stops sampling once the 95% CI
@@ -100,36 +109,72 @@ pub struct FidelitySpec {
     /// *and* the dominance gate — which is what makes `--fi-epsilon 0`
     /// reproduce the pre-ladder results bit-for-bit.
     pub epsilon_pp: f64,
-    /// [`Fidelity::FiScreen`] fault count; `0` makes the screen tier run
-    /// the full site list (screening effectively disabled).
+    /// [`Fidelity::FiScreen`] fault count; with `screen_auto` off, `0`
+    /// makes the screen tier run the full site list (screening
+    /// effectively disabled).
     pub screen_faults: usize,
+    /// size the screen tier adaptively from a pilot block's observed
+    /// per-fault accuracy variance instead of a fixed count (CLI
+    /// `--fi-screen 0`; see [`staged::StagedEvaluator`] for the
+    /// heuristic). Overrides `screen_faults` when set.
+    pub screen_auto: bool,
     /// faults per [`crate::faultsim::Campaign::advance`] block (the
     /// granularity at which the CI / dominance gates are checked)
     pub block: usize,
     /// faults that must run before any gate may stop a campaign (CI
     /// estimates below this are too noisy to act on)
     pub min_faults: usize,
+    /// byte budget (MiB) for the live-campaign trace cache that lets a
+    /// promotion resume from its screen prefix instead of re-tracing and
+    /// re-simulating it (`DEEPAXE_TRACE_CACHE_MB`; `0` disables the
+    /// cache). Caching never changes results — per-fault accuracies are
+    /// prefix-pure and CI/gate checks fire only at absolute `block`
+    /// boundaries, so a resumed campaign makes exactly the stop
+    /// decisions a fresh one would — only how much work promotions
+    /// repeat.
+    pub trace_cache_mb: usize,
 }
 
 impl FidelitySpec {
     /// Ladder disabled: full campaigns, no early stop — the bit-for-bit
-    /// legacy behavior.
+    /// legacy behavior. (The trace cache stays on: it changes rework,
+    /// never results.)
     pub fn exact() -> FidelitySpec {
-        FidelitySpec { epsilon_pp: 0.0, screen_faults: 0, block: 32, min_faults: 16 }
+        FidelitySpec {
+            epsilon_pp: 0.0,
+            screen_faults: 0,
+            screen_auto: false,
+            block: 32,
+            min_faults: 16,
+            trace_cache_mb: 256,
+        }
     }
 
-    /// Defaults with environment overrides applied.
+    /// Defaults with environment overrides applied. An explicitly set
+    /// `DEEPAXE_FI_SCREEN=0` requests adaptive screen sizing (mirroring
+    /// `--fi-screen 0`); leaving it unset leaves screening off.
     pub fn default_from_env() -> FidelitySpec {
+        // only a *valid* explicit 0 selects adaptive sizing; unset or
+        // unparseable values leave screening off
+        let (screen_faults, screen_auto) = match std::env::var("DEEPAXE_FI_SCREEN") {
+            Err(_) => (0, false),
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => (n, n == 0),
+                Err(_) => (0, false),
+            },
+        };
         FidelitySpec {
             epsilon_pp: env_f64("DEEPAXE_FI_EPSILON", 0.0),
-            screen_faults: env_usize("DEEPAXE_FI_SCREEN", 0),
+            screen_faults,
+            screen_auto,
+            trace_cache_mb: env_usize("DEEPAXE_TRACE_CACHE_MB", 256),
             ..FidelitySpec::exact()
         }
     }
 
     /// Is the screen tier actually cheaper than the full tier?
     pub fn screening_enabled(&self) -> bool {
-        self.screen_faults > 0
+        self.screen_faults > 0 || self.screen_auto
     }
 }
 
@@ -183,6 +228,13 @@ mod tests {
         let s = FidelitySpec::exact();
         assert_eq!(s.epsilon_pp, 0.0);
         assert!(!s.screening_enabled());
+    }
+
+    #[test]
+    fn screen_auto_enables_screening_without_a_fixed_count() {
+        let s = FidelitySpec { screen_auto: true, ..FidelitySpec::exact() };
+        assert_eq!(s.screen_faults, 0);
+        assert!(s.screening_enabled());
     }
 
     #[test]

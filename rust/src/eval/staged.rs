@@ -1,12 +1,17 @@
 //! The staged evaluator: one shared fault-site sample + block-wise,
-//! CI-gated campaigns behind the [`Fidelity`] ladder.
+//! CI-gated campaigns behind the [`Fidelity`] ladder, with a byte-budgeted
+//! trace cache that makes screen→full promotion zero-rework (the promoted
+//! campaign *resumes* from its screen prefix instead of re-tracing and
+//! re-simulating it).
 
 use super::{FiGate, Fidelity, FidelitySpec};
 use crate::dse::{DesignPoint, Evaluator, FiEstimate};
-use crate::faultsim::{sample_sites, Campaign};
+use crate::faultsim::{sample_sites, Campaign, ReplayStats};
 use crate::simnet::FaultSite;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Why a campaign stopped before exhausting its site list.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,21 +23,43 @@ enum StopKind {
 }
 
 /// Fault-unit accounting across one evaluator's lifetime: how many faults
-/// each tier actually simulated, and how often each gate cut a campaign
-/// short. This is the "budget per fidelity tier" ledger — `bench_eval` and
-/// the CLI report cost in full-campaign equivalents from it.
+/// each tier actually simulated, how often each gate cut a campaign
+/// short, how much rework the trace cache saved, and how deep the
+/// convergence-gated replays actually ran. This is the "budget per
+/// fidelity tier" ledger — `bench_eval`/`bench_faultsim` and the CLI
+/// report cost in full-campaign equivalents from it, and the zero-rework
+/// promotion criterion is asserted against its `trace_builds` /
+/// `resumed_faults` counters.
 #[derive(Debug, Default)]
 pub struct FiLedger {
     screen_campaigns: AtomicU64,
     screen_faults: AtomicU64,
     full_campaigns: AtomicU64,
     full_faults: AtomicU64,
+    pilot_faults: AtomicU64,
     ci_stops: AtomicU64,
     gate_stops: AtomicU64,
+    /// clean-trace computations (one per `Campaign::new`)
+    trace_builds: AtomicU64,
+    /// campaigns resumed from a cached screen prefix
+    resumed_campaigns: AtomicU64,
+    /// prefix faults whose re-simulation the resume skipped
+    resumed_faults: AtomicU64,
+    /// replay-path aggregates (see [`ReplayStats`])
+    replay_inferences: AtomicU64,
+    masked_inferences: AtomicU64,
+    replayed_layers: AtomicU64,
+    depth_hist: Mutex<Vec<u64>>,
 }
 
 impl FiLedger {
-    fn record(&self, fidelity: Fidelity, faults: usize, stopped: Option<StopKind>) {
+    fn record(
+        &self,
+        fidelity: Fidelity,
+        faults: usize,
+        stopped: Option<StopKind>,
+        replay: &ReplayStats,
+    ) {
         let (campaigns, total) = match fidelity {
             Fidelity::FiScreen => (&self.screen_campaigns, &self.screen_faults),
             Fidelity::FiFull => (&self.full_campaigns, &self.full_faults),
@@ -49,6 +76,37 @@ impl FiLedger {
             }
             None => {}
         }
+        self.merge_replay(replay);
+    }
+
+    fn merge_replay(&self, replay: &ReplayStats) {
+        if replay.inferences == 0 {
+            return;
+        }
+        self.replay_inferences.fetch_add(replay.inferences, Ordering::Relaxed);
+        self.masked_inferences.fetch_add(replay.masked, Ordering::Relaxed);
+        self.replayed_layers.fetch_add(replay.replayed_layers, Ordering::Relaxed);
+        let mut hist = self.depth_hist.lock().unwrap();
+        if replay.depth_hist.len() > hist.len() {
+            hist.resize(replay.depth_hist.len(), 0);
+        }
+        for (d, &n) in replay.depth_hist.iter().enumerate() {
+            hist[d] += n;
+        }
+    }
+
+    fn record_trace_build(&self) {
+        self.trace_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_resume(&self, prefix_faults: usize) {
+        self.resumed_campaigns.fetch_add(1, Ordering::Relaxed);
+        self.resumed_faults.fetch_add(prefix_faults as u64, Ordering::Relaxed);
+    }
+
+    fn record_pilot(&self, faults: usize, replay: &ReplayStats) {
+        self.pilot_faults.fetch_add(faults as u64, Ordering::Relaxed);
+        self.merge_replay(replay);
     }
 
     pub fn screen_campaigns(&self) -> u64 {
@@ -74,9 +132,53 @@ impl FiLedger {
         self.ci_stops() + self.gate_stops()
     }
 
-    /// Total faults simulated across both FI tiers.
+    /// Clean-trace computations performed (one per fresh campaign and
+    /// one per adaptive-screen pilot; a resumed promotion performs none).
+    pub fn trace_builds(&self) -> u64 {
+        self.trace_builds.load(Ordering::Relaxed)
+    }
+
+    /// Promotions that resumed a cached screen-tier campaign.
+    pub fn resumed_campaigns(&self) -> u64 {
+        self.resumed_campaigns.load(Ordering::Relaxed)
+    }
+
+    /// Prefix faults whose re-simulation resuming skipped.
+    pub fn resumed_faults(&self) -> u64 {
+        self.resumed_faults.load(Ordering::Relaxed)
+    }
+
+    /// Fault×image inferences that went through the replay path.
+    pub fn replay_inferences(&self) -> u64 {
+        self.replay_inferences.load(Ordering::Relaxed)
+    }
+
+    /// Replay inferences masked before the output layer (convergence
+    /// gate exits).
+    pub fn masked_inferences(&self) -> u64 {
+        self.masked_inferences.load(Ordering::Relaxed)
+    }
+
+    /// Mean computing layers re-simulated per replay inference.
+    pub fn mean_replay_depth(&self) -> f64 {
+        let inf = self.replay_inferences();
+        if inf == 0 {
+            return 0.0;
+        }
+        self.replayed_layers.load(Ordering::Relaxed) as f64 / inf as f64
+    }
+
+    /// Snapshot of the replay-depth histogram (index = computing layers
+    /// re-simulated after the fault site).
+    pub fn depth_hist(&self) -> Vec<u64> {
+        self.depth_hist.lock().unwrap().clone()
+    }
+
+    /// Total faults simulated across both FI tiers (+ adaptive pilots).
     pub fn total_faults(&self) -> u64 {
-        self.screen_faults.load(Ordering::Relaxed) + self.full_faults.load(Ordering::Relaxed)
+        self.screen_faults.load(Ordering::Relaxed)
+            + self.full_faults.load(Ordering::Relaxed)
+            + self.pilot_faults.load(Ordering::Relaxed)
     }
 
     /// Spent FI budget in full-campaign equivalents (`campaign_faults` =
@@ -90,14 +192,81 @@ impl FiLedger {
 
     /// One-line human summary for CLI / bench output.
     pub fn summary(&self, campaign_faults: usize) -> String {
+        let masked_pct = if self.replay_inferences() > 0 {
+            self.masked_inferences() as f64 / self.replay_inferences() as f64 * 100.0
+        } else {
+            0.0
+        };
         format!(
-            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops",
+            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built, {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}",
             self.screen_campaigns(),
             self.full_campaigns(),
             self.total_faults(),
             self.full_equivalents(campaign_faults),
             self.early_stops(),
+            self.trace_builds(),
+            self.resumed_campaigns(),
+            self.resumed_faults(),
+            masked_pct,
+            self.mean_replay_depth(),
         )
+    }
+}
+
+/// Byte-budgeted LRU of live screen-tier campaigns keyed by genotype.
+/// Each entry holds a [`Campaign`] whose clean traces and evaluated
+/// prefix a later promotion can resume, skipping the trace computation
+/// and the prefix re-simulation entirely.
+struct TraceCache {
+    cap_bytes: usize,
+    bytes: usize,
+    tick: u64,
+    /// key -> (last-use tick, byte size at insert, parked campaign)
+    entries: HashMap<String, (u64, usize, Campaign)>,
+}
+
+impl TraceCache {
+    fn new(cap_bytes: usize) -> TraceCache {
+        TraceCache { cap_bytes, bytes: 0, tick: 0, entries: HashMap::new() }
+    }
+
+    /// Remove and return the campaign for `key`, if cached.
+    fn take(&mut self, key: &str) -> Option<Campaign> {
+        let (_, sz, c) = self.entries.remove(key)?;
+        self.bytes -= sz.min(self.bytes);
+        Some(c)
+    }
+
+    /// Park a campaign, evicting least-recently-used entries until the
+    /// byte budget holds. A campaign bigger than the whole budget (or a
+    /// zero budget) is simply dropped — caching is an optimization, never
+    /// a correctness requirement.
+    fn insert(&mut self, key: String, campaign: Campaign) {
+        let sz = campaign.approx_bytes();
+        if sz > self.cap_bytes {
+            return;
+        }
+        while self.bytes + sz > self.cap_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (tick, _, _))| *tick)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let (_, vsz, _) = self.entries.remove(&k).unwrap();
+                    self.bytes -= vsz.min(self.bytes);
+                }
+                None => break,
+            }
+        }
+        self.tick += 1;
+        self.bytes += sz;
+        self.entries.insert(key, (self.tick, sz, campaign));
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
     }
 }
 
@@ -107,11 +276,23 @@ impl FiLedger {
 /// then measured against that identical list (screen tiers against its
 /// prefix), which is what makes per-point vulnerability numbers — and
 /// screen-vs-full comparisons — directly comparable.
+///
+/// **Adaptive screen sizing** (`FidelitySpec::screen_auto`, CLI
+/// `--fi-screen 0`): the screen count is derived once per run from a
+/// pilot block on the fully-exact configuration. With observed per-fault
+/// accuracy deviation σ (a [`crate::util::stats::Streaming`] over the
+/// pilot), the screen runs `n = ceil((1.96·σ / ε)²)` faults — the sample
+/// size whose 95% CI half-width is ≈ ε, where ε is `epsilon_pp` (or 1pp
+/// when epsilon is 0) — clamped to `[pilot, n_faults]`. The pilot is
+/// resolved lazily on first use, from the exact configuration, so it is
+/// deterministic regardless of which population worker gets there first.
 pub struct StagedEvaluator<'a> {
     pub ev: &'a Evaluator<'a>,
     spec: FidelitySpec,
     sites: Vec<FaultSite>,
     ledger: FiLedger,
+    trace_cache: Mutex<TraceCache>,
+    screen_size: OnceLock<usize>,
 }
 
 impl<'a> StagedEvaluator<'a> {
@@ -121,7 +302,15 @@ impl<'a> StagedEvaluator<'a> {
         // per-point loop and shared across the whole population
         let mut rng = Rng::new(ev.fi.seed);
         let sites = sample_sites(ev.net, ev.fi.n_faults, ev.fi.sampling, &mut rng);
-        StagedEvaluator { ev, spec, sites, ledger: FiLedger::default() }
+        let cache = TraceCache::new(spec.trace_cache_mb.saturating_mul(1 << 20));
+        StagedEvaluator {
+            ev,
+            spec,
+            sites,
+            ledger: FiLedger::default(),
+            trace_cache: Mutex::new(cache),
+            screen_size: OnceLock::new(),
+        }
     }
 
     pub fn spec(&self) -> &FidelitySpec {
@@ -137,12 +326,55 @@ impl<'a> StagedEvaluator<'a> {
         &self.ledger
     }
 
+    /// Live campaigns currently parked in the trace cache.
+    pub fn cached_campaigns(&self) -> usize {
+        self.trace_cache.lock().unwrap().len()
+    }
+
+    /// Screen-tier fault count for this run: the fixed
+    /// `FidelitySpec::screen_faults`, or the adaptively sized count (see
+    /// the struct docs for the heuristic).
+    pub fn screen_target(&self) -> usize {
+        let n = if self.spec.screen_auto {
+            self.auto_screen_size()
+        } else {
+            self.spec.screen_faults
+        };
+        n.min(self.sites.len())
+    }
+
+    fn auto_screen_size(&self) -> usize {
+        *self.screen_size.get_or_init(|| {
+            let names: Vec<&str> = vec!["exact"; self.ev.net.n_comp()];
+            let engine = self.ev.assignment_engine(&names);
+            let pilot = self.spec.min_faults.max(16).min(self.sites.len());
+            self.ledger.record_trace_build();
+            let mut c = Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites.clone());
+            c.advance(&engine, pilot);
+            c.stop();
+            self.ledger.record_pilot(c.evaluated(), c.replay_stats());
+            let target_pp = if self.spec.epsilon_pp > 0.0 { self.spec.epsilon_pp } else { 1.0 };
+            let sigma_pp = c.std() * 100.0;
+            let want = ((1.959964 * sigma_pp / target_pp).powi(2)).ceil() as usize;
+            let n = want.clamp(pilot, self.sites.len());
+            eprintln!(
+                "fi-screen auto: sigma {sigma_pp:.3}pp over {pilot} pilot faults -> screen {n} of {} (target ci {target_pp:.2}pp)",
+                self.sites.len(),
+            );
+            // the exact configuration is a warm-start seed in every
+            // strategy — park the pilot so its screen resumes this state
+            self.trace_cache.lock().unwrap().insert(names.join("/"), c);
+            n
+        })
+    }
+
     /// Evaluate one assignment at the given fidelity. `gate` (optional)
     /// lets FI campaigns stop once the point is Pareto-dominated at its
     /// optimistic CI boundary; the spec's epsilon both sets the CI stop
     /// threshold and arms early stopping as a whole (`0` = run every
     /// campaign to completion, gate ignored). Thread-safe (`&self`):
-    /// population workers share one evaluator.
+    /// population workers share one evaluator, and the parallel promotion
+    /// pass resumes cached campaigns concurrently.
     pub fn evaluate(
         &self,
         names: &[&str],
@@ -158,46 +390,78 @@ impl<'a> StagedEvaluator<'a> {
             return self.ev.compose_point(names, ax_acc, None);
         }
 
-        let cap = if fidelity == Fidelity::FiScreen && self.spec.screening_enabled() {
-            self.spec.screen_faults.min(self.sites.len())
+        let target = if fidelity == Fidelity::FiScreen && self.spec.screening_enabled() {
+            self.screen_target()
         } else {
             self.sites.len()
         };
         // the gate compares against utilization, which is analytic — fetch
         // it up front only when a gate is active
         let util_pct = gate.map(|_| self.ev.assignment_hw(names).util_pct);
-        let mut campaign =
-            Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites[..cap].to_vec());
+        let key = names.join("/");
+        // promotion fast path: a screen-tier evaluation of this genotype
+        // left its live campaign in the trace cache — resume it instead
+        // of re-tracing the clean activations and re-simulating the
+        // prefix (bit-identical: per-fault accuracies are prefix-pure)
+        let mut campaign = match self.trace_cache.lock().unwrap().take(&key) {
+            Some(c) => {
+                self.ledger.record_resume(c.evaluated());
+                c
+            }
+            None => {
+                self.ledger.record_trace_build();
+                Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites.clone())
+            }
+        };
+        let resumed_at = campaign.evaluated();
+        let stats_at_entry = campaign.replay_stats().clone();
         let block = self.spec.block.max(1);
         // epsilon 0 is the bit-for-bit switch: it disables *all* early
         // stopping, the dominance gate included — campaigns always run
         // their whole site list, exactly like the pre-ladder path
         let early_stop = self.spec.epsilon_pp > 0.0;
         let mut stopped: Option<StopKind> = None;
-        while !campaign.is_done() {
-            campaign.advance(block);
-            if !early_stop || campaign.evaluated() < self.spec.min_faults {
-                continue;
-            }
-            // gate first: "already dominated" is stronger than "tight CI"
-            if let Some(g) = gate {
-                let optimistic_vuln_pct =
-                    (campaign.base_acc() - campaign.mean() - campaign.ci95()) * 100.0;
-                if g.dominated(util_pct.unwrap(), optimistic_vuln_pct) {
-                    stopped = Some(StopKind::Gate);
+        loop {
+            // CI/gate checks fire only at *absolute* `block` boundaries
+            // (advance steps re-align after a resume), so stop decisions
+            // see exactly the same prefixes whether the campaign is fresh
+            // or resumed from a cached screen prefix — trace-cache state
+            // can never change a result, even with epsilon > 0
+            if early_stop
+                && campaign.evaluated() >= self.spec.min_faults
+                && campaign.evaluated() % block == 0
+            {
+                // gate first: "already dominated" beats "tight CI"
+                if let Some(g) = gate {
+                    let optimistic_vuln_pct =
+                        (campaign.base_acc() - campaign.mean() - campaign.ci95()) * 100.0;
+                    if g.dominated(util_pct.unwrap(), optimistic_vuln_pct) {
+                        stopped = Some(StopKind::Gate);
+                        break;
+                    }
+                }
+                if campaign.ci95() * 100.0 <= self.spec.epsilon_pp {
+                    stopped = Some(StopKind::Ci);
                     break;
                 }
             }
-            if campaign.ci95() * 100.0 <= self.spec.epsilon_pp {
-                stopped = Some(StopKind::Ci);
+            if campaign.evaluated() >= target {
                 break;
             }
+            let step = (block - campaign.evaluated() % block).min(target - campaign.evaluated());
+            campaign.advance(&engine, step);
         }
-        if stopped.is_some() {
+        if !campaign.is_done() {
             campaign.stop();
         }
-        self.ledger.record(fidelity, campaign.evaluated(), stopped);
+        let delta = campaign.replay_stats().minus(&stats_at_entry);
+        self.ledger.record(fidelity, campaign.evaluated() - resumed_at, stopped, &delta);
         let est = FiEstimate::from_campaign(&campaign.result());
+        // a screen-tier prefix is live state worth keeping: promotion of
+        // this genotype will resume it instead of starting over
+        if fidelity == Fidelity::FiScreen && !campaign.is_done() {
+            self.trace_cache.lock().unwrap().insert(key, campaign);
+        }
         self.ev.compose_point(names, ax_acc, Some(&est))
     }
 }
@@ -258,6 +522,7 @@ mod tests {
             workers: 2,
             sampling: SiteSampling::UniformLayer,
             replay: true,
+            gate: true,
         }
     }
 
@@ -288,6 +553,8 @@ mod tests {
         assert_eq!(a.fi_faults, 16);
         assert_eq!(b.fi_faults, 16);
         assert_eq!(st.ledger().screen_campaigns(), 2);
+        // both screen campaigns are parked, resumable
+        assert_eq!(st.cached_campaigns(), 2);
     }
 
     #[test]
@@ -307,6 +574,8 @@ mod tests {
             let screen = st.evaluate(&names, Fidelity::FiScreen, None);
             assert_eq!(screen, monolithic, "{names:?} screen=full");
         }
+        // complete campaigns are never parked (nothing left to resume)
+        assert_eq!(st.cached_campaigns(), 0);
     }
 
     #[test]
@@ -339,6 +608,155 @@ mod tests {
         assert!(p.util_pct > 0.0 && p.cycles > 0);
         assert_eq!(p.mult, "mul8s_1kvp_s");
         assert_eq!(p.mask, 0b11);
+    }
+
+    #[test]
+    fn promotion_resumes_screen_prefix_with_zero_rework() {
+        // acceptance criterion: promoting a cached screen-tier genotype
+        // performs zero clean-trace recomputation and zero screen-prefix
+        // re-simulation, asserted via the ledger counters — and the
+        // promoted point is bit-identical to a fresh full campaign
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(64));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+        let names = ["mul8s_1kvp_s", "exact"];
+        let screen = st.evaluate(&names, Fidelity::FiScreen, None);
+        assert_eq!(screen.fi_faults, 16);
+        assert_eq!(st.ledger().trace_builds(), 1);
+        assert_eq!(st.cached_campaigns(), 1);
+
+        let full = st.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(full.fi_faults, 64);
+        assert_eq!(st.ledger().trace_builds(), 1, "promotion must not re-trace");
+        assert_eq!(st.ledger().resumed_campaigns(), 1);
+        assert_eq!(st.ledger().resumed_faults(), 16, "screen prefix must not re-run");
+        // the FI spend is 16 (screen) + 48 (full remainder) = one
+        // campaign total — the screen prefix is paid exactly once
+        assert_eq!(st.ledger().total_faults(), 64);
+        assert_eq!(st.cached_campaigns(), 0, "a completed campaign is not re-parked");
+
+        let fresh = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let reference = fresh.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(full, reference, "resumed promotion must be bit-identical");
+    }
+
+    #[test]
+    fn promotion_with_epsilon_is_cache_state_invariant() {
+        // with epsilon > 0, CI checks fire only at absolute block
+        // boundaries, so a resumed promotion makes exactly the same stop
+        // decisions as a fresh one — LRU eviction can never change a
+        // search result
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(96));
+        let spec = FidelitySpec {
+            screen_faults: 12, // deliberately not a multiple of block
+            epsilon_pp: 5.0,
+            block: 8,
+            min_faults: 8,
+            ..FidelitySpec::exact()
+        };
+        let names = ["mul8s_1kvp_s", "exact"];
+        let cached = StagedEvaluator::new(&ev, spec.clone());
+        let screen_a = cached.evaluate(&names, Fidelity::FiScreen, None);
+        let full_resumed = cached.evaluate(&names, Fidelity::FiFull, None);
+        let nocache =
+            StagedEvaluator::new(&ev, FidelitySpec { trace_cache_mb: 0, ..spec });
+        let screen_b = nocache.evaluate(&names, Fidelity::FiScreen, None);
+        let full_fresh = nocache.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(screen_a, screen_b);
+        assert_eq!(full_resumed, full_fresh, "stop decisions must not depend on cache state");
+        assert!(cached.ledger().resumed_campaigns() <= 1);
+        assert_eq!(nocache.ledger().resumed_campaigns(), 0);
+    }
+
+    #[test]
+    fn trace_cache_disabled_falls_back_to_recompute() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            trace_cache_mb: 0,
+            ..FidelitySpec::exact()
+        });
+        let names = ["mul8s_1kvp_s", "exact"];
+        let screen = st.evaluate(&names, Fidelity::FiScreen, None);
+        assert_eq!(st.cached_campaigns(), 0, "cap 0 must park nothing");
+        let full = st.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(st.ledger().trace_builds(), 2, "no cache -> promotion re-traces");
+        assert_eq!(st.ledger().resumed_campaigns(), 0);
+        // identical results either way — the cache is purely a rework
+        // optimization
+        let cached = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+        assert_eq!(screen, cached.evaluate(&names, Fidelity::FiScreen, None));
+        assert_eq!(full, cached.evaluate(&names, Fidelity::FiFull, None));
+    }
+
+    #[test]
+    fn trace_cache_evicts_least_recently_used_under_byte_budget() {
+        let net = tiny_mlp();
+        let data = fake_data(24);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 16, fi_params(32));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 8,
+            ..FidelitySpec::exact()
+        });
+        // size one parked campaign, then cap the cache to hold exactly one
+        let probe = st.evaluate(&["exact", "exact"], Fidelity::FiScreen, None);
+        assert_eq!(probe.fi_faults, 8);
+        let one = {
+            let cache = st.trace_cache.lock().unwrap();
+            assert_eq!(cache.len(), 1);
+            cache.bytes
+        };
+        st.trace_cache.lock().unwrap().cap_bytes = one;
+        let _ = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        let _ = st.evaluate(&["exact", "mul8s_1kv8_s"], Fidelity::FiScreen, None);
+        let cache = st.trace_cache.lock().unwrap();
+        assert_eq!(cache.len(), 1, "budget for one campaign must hold one");
+        assert!(cache.bytes <= cache.cap_bytes);
+        assert!(
+            cache.entries.contains_key("exact/mul8s_1kv8_s"),
+            "the most recent entry survives"
+        );
+    }
+
+    #[test]
+    fn adaptive_screen_sizing_from_pilot_variance() {
+        let net = tiny_mlp();
+        let data = fake_data(40);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 32, fi_params(160));
+        let spec = FidelitySpec { screen_auto: true, min_faults: 16, ..FidelitySpec::exact() };
+        let st = StagedEvaluator::new(&ev, spec.clone());
+        let n = st.screen_target();
+        assert!((16..=160).contains(&n), "screen {n} outside [pilot, n_faults]");
+        // resolved once, deterministically: a second evaluator agrees
+        let st2 = StagedEvaluator::new(&ev, spec);
+        assert_eq!(st2.screen_target(), n);
+        // and the screen tier actually runs that many faults
+        let p = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        assert_eq!(p.fi_faults, n);
+        // the pilot block is charged to the ledger
+        assert!(st.ledger().total_faults() >= 16 + n as u64);
+        // the pilot's campaign is parked under the exact genotype, so
+        // screening the exact configuration resumes it
+        let before = st.ledger().trace_builds();
+        let _ = st.evaluate(&["exact", "exact"], Fidelity::FiScreen, None);
+        assert_eq!(st.ledger().trace_builds(), before, "exact screen resumes the pilot");
+        assert_eq!(st.ledger().resumed_campaigns(), 1);
     }
 
     #[test]
@@ -430,5 +848,22 @@ mod tests {
         let r = st3.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, Some(&gate));
         assert_eq!(r.fi_faults, 200);
         assert_eq!(st3.ledger().early_stops(), 0);
+    }
+
+    #[test]
+    fn ledger_replay_stats_observe_the_gate() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let _ = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, None);
+        let l = st.ledger();
+        assert_eq!(l.replay_inferences(), 48 * 24);
+        assert_eq!(l.depth_hist().iter().sum::<u64>(), l.replay_inferences());
+        assert!(l.mean_replay_depth() <= (net.n_comp() - 1) as f64);
+        assert!(l.masked_inferences() <= l.replay_inferences());
+        let s = l.summary(48);
+        assert!(s.contains("mean replay depth"), "{s}");
     }
 }

@@ -3,22 +3,39 @@
 //! The hot structure is the *layer-replay* optimization (EXPERIMENTS.md
 //! §Perf): clean activations of every computing layer are traced once per
 //! image (N_img full forwards), then each of the N_fault faults replays
-//! only the network suffix after its fault site. Equivalence with the
-//! naive full-forward campaign is asserted by tests and can be forced with
-//! `replay: false` for A/B benchmarking.
+//! only the network suffix after its fault site. The replay is
+//! *convergence-gated* ([`Engine::replay_from`]): it exits the moment the
+//! faulted state reconverges with the clean trace, which makes the mean
+//! per-fault cost sublinear in network depth while staying bit-identical
+//! (asserted by the property suite below). `CampaignParams::gate = false`
+//! — or the `DEEPAXE_NO_CONVERGENCE_GATE` environment switch — forces the
+//! full suffix for A/B benchmarking, and `replay: false` falls all the way
+//! back to naive full forwards.
 //!
-//! Campaigns are *resumable*: [`Campaign`] holds the clean traces and a
+//! Faults are evaluated image-major and, within one image, grouped by
+//! fault layer in sorted order: the group's clean activation is staged
+//! into scratch once and each fault flips/unflips a single byte in place,
+//! so the per-fault staging copy disappears and the suffix layers' weight
+//! and trace working set stays hot across the whole group. Per-fault
+//! accuracies are integer counts over the image set, so the regrouping is
+//! bit-identical to the historical fault-major loop.
+//!
+//! Campaigns are *resumable*: [`Campaign`] owns the clean traces and a
 //! caller-supplied fault-site list and evaluates faults in blocks
 //! ([`Campaign::advance`]), maintaining a streaming mean/CI so callers —
 //! the staged fidelity ladder in [`crate::eval`] — can stop sampling as
 //! soon as the estimate is tight enough or the point is already dominated.
+//! Since PR 3 the campaign no longer borrows its engine (the caller passes
+//! it to `advance`), so a screen-tier campaign can outlive its evaluation
+//! call inside [`crate::eval::StagedEvaluator`]'s trace cache and be
+//! resumed from its prefix when the design point is promoted.
 //! [`run_campaign`] is the one-shot wrapper that drives a campaign to
 //! completion; it samples its own sites exactly like the pre-ladder code
 //! path, so its results are bit-identical to the historical runner.
 
 use super::{sample_sites, SiteSampling};
 use crate::dataset::TestSet;
-use crate::simnet::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite};
+use crate::simnet::{Buffers, CleanTrace, Engine, FaultSite};
 use crate::util::progress::Progress;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -35,6 +52,9 @@ use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
 ///   campaign workers are leased from; `workers` below is only the
 ///   per-campaign *cap* on that lease, so nested parallelism (population
 ///   evaluation × FI campaigns) can never oversubscribe the host.
+/// * `DEEPAXE_NO_CONVERGENCE_GATE` — set to disable the convergence gate
+///   (full-suffix replays; same results, more work — the A/B escape
+///   hatch).
 ///
 /// The fidelity ladder adds two more knobs that live in
 /// [`crate::eval::FidelitySpec`] (not here, so existing `CampaignParams`
@@ -56,13 +76,16 @@ pub struct CampaignParams {
     pub sampling: SiteSampling,
     /// layer-replay fast path (true) vs naive full forwards (false)
     pub replay: bool,
+    /// convergence gate on the replay path (ignored when `replay` is
+    /// false); default on, `DEEPAXE_NO_CONVERGENCE_GATE` turns it off
+    pub gate: bool,
 }
 
 impl CampaignParams {
     /// Defaults scaled for this 1-core host; see the struct docs for the
     /// `DEEPAXE_FI_*` environment overrides that restore paper scale.
     pub fn default_for(net_name: &str) -> CampaignParams {
-        use crate::util::cli::env_usize;
+        use crate::util::cli::{env_flag, env_usize};
         let (faults, images) = match net_name {
             "alexnet" => (60, 60),
             "lenet5" => (150, 120),
@@ -75,7 +98,87 @@ impl CampaignParams {
             workers: crate::util::threadpool::default_workers(),
             sampling: SiteSampling::UniformLayer,
             replay: true,
+            gate: !env_flag("DEEPAXE_NO_CONVERGENCE_GATE"),
         }
+    }
+}
+
+/// Replay-path statistics: how deep fault replays actually ran and how
+/// many were masked. This is what makes the convergence-gate win
+/// observable ([`crate::eval::FiLedger`] aggregates it across campaigns;
+/// `bench_faultsim` reports it per configuration).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// fault × image inferences that went through the replay path
+    pub inferences: u64,
+    /// inferences whose faulted state reconverged with the clean trace
+    /// before the output layer (fault masked by construction)
+    pub masked: u64,
+    /// total computing layers re-simulated across all replay inferences
+    pub replayed_layers: u64,
+    /// depth_hist[d] = inferences that re-simulated exactly `d` computing
+    /// layers after the fault site
+    pub depth_hist: Vec<u64>,
+}
+
+impl ReplayStats {
+    pub fn new(n_comp: usize) -> ReplayStats {
+        ReplayStats { depth_hist: vec![0; n_comp], ..ReplayStats::default() }
+    }
+
+    fn record(&mut self, r: &crate::simnet::Replay) {
+        self.inferences += 1;
+        if r.converged {
+            self.masked += 1;
+        }
+        self.replayed_layers += r.depth as u64;
+        if r.depth >= self.depth_hist.len() {
+            self.depth_hist.resize(r.depth + 1, 0);
+        }
+        self.depth_hist[r.depth] += 1;
+    }
+
+    pub fn merge(&mut self, other: &ReplayStats) {
+        self.inferences += other.inferences;
+        self.masked += other.masked;
+        self.replayed_layers += other.replayed_layers;
+        if other.depth_hist.len() > self.depth_hist.len() {
+            self.depth_hist.resize(other.depth_hist.len(), 0);
+        }
+        for (d, &n) in other.depth_hist.iter().enumerate() {
+            self.depth_hist[d] += n;
+        }
+    }
+
+    /// `self - earlier`, for per-call deltas over a cumulative counter
+    /// (`earlier` must be a previous snapshot of the same stats).
+    pub fn minus(&self, earlier: &ReplayStats) -> ReplayStats {
+        let mut hist = self.depth_hist.clone();
+        for (d, &n) in earlier.depth_hist.iter().enumerate() {
+            hist[d] -= n;
+        }
+        ReplayStats {
+            inferences: self.inferences - earlier.inferences,
+            masked: self.masked - earlier.masked,
+            replayed_layers: self.replayed_layers - earlier.replayed_layers,
+            depth_hist: hist,
+        }
+    }
+
+    /// Mean computing layers re-simulated per replay inference.
+    pub fn mean_depth(&self) -> f64 {
+        if self.inferences == 0 {
+            return 0.0;
+        }
+        self.replayed_layers as f64 / self.inferences as f64
+    }
+
+    /// Fraction of replay inferences masked before the output layer.
+    pub fn masked_fraction(&self) -> f64 {
+        if self.inferences == 0 {
+            return 0.0;
+        }
+        self.masked as f64 / self.inferences as f64
     }
 }
 
@@ -96,6 +199,9 @@ pub struct CampaignResult {
     /// stopped the campaign early)
     pub n_faults: usize,
     pub n_images: usize,
+    /// replay-path statistics (empty when the campaign ran the naive
+    /// full-forward path)
+    pub replay: ReplayStats,
 }
 
 /// A resumable fault campaign over a fixed site list.
@@ -105,30 +211,34 @@ pub struct CampaignResult {
 /// site-list order. Per-fault accuracies are independent of block size and
 /// worker count, so an early-stopped campaign's numbers are exactly the
 /// prefix of the full campaign's — the property the fidelity ladder's
-/// CI-containment tests rely on.
-pub struct Campaign<'e> {
-    engine: &'e Engine<'e>,
+/// CI-containment tests rely on. The campaign owns all of its state (the
+/// engine is passed per `advance` call), so it can be parked in the
+/// staged evaluator's trace cache and resumed later with a freshly bound
+/// engine for the same configuration.
+pub struct Campaign {
     subset: TestSet,
     traces: Vec<CleanTrace>,
     base_acc: f64,
     sites: Vec<FaultSite>,
     replay: bool,
+    gate: bool,
     workers: usize,
     acc_per_fault: Vec<f64>,
     stream: stats::Streaming,
+    replay_stats: ReplayStats,
     progress: Progress,
 }
 
-impl<'e> Campaign<'e> {
+impl Campaign {
     /// Trace the clean activations and bind `sites` (typically a shared
     /// sample from [`crate::eval::StagedEvaluator`], or a fresh per-point
     /// sample in the legacy [`run_campaign`] path).
     pub fn new(
-        engine: &'e Engine<'e>,
+        engine: &Engine,
         data: &TestSet,
         params: &CampaignParams,
         sites: Vec<FaultSite>,
-    ) -> Campaign<'e> {
+    ) -> Campaign {
         let subset = data.take(params.n_images);
         let n_images = subset.len();
         assert!(n_images > 0, "empty test subset");
@@ -141,17 +251,21 @@ impl<'e> Campaign<'e> {
             (0..n_images).filter(|&i| traces[i].pred == subset.labels[i] as usize).count();
         let base_acc = base_correct as f64 / n_images as f64;
 
-        let progress = Progress::new(&format!("fi:{}", engine.net.name), sites.len() as u64);
+        // progress in fault×image inference units so workers can tick
+        // per image — a one-block campaign still shows live progress
+        let progress =
+            Progress::new(&format!("fi:{}", engine.net.name), (sites.len() * n_images) as u64);
         Campaign {
-            engine,
             subset,
             traces,
             base_acc,
             sites,
             replay: params.replay,
+            gate: params.gate,
             workers: params.workers.max(1),
             acc_per_fault: Vec::new(),
             stream: stats::Streaming::new(),
+            replay_stats: ReplayStats::new(engine.net.n_comp()),
             progress,
         }
     }
@@ -186,48 +300,103 @@ impl<'e> Campaign<'e> {
         self.stream.ci95()
     }
 
+    /// Running sample standard deviation of the per-fault accuracies
+    /// (adaptive screen sizing reads this off a pilot block).
+    pub fn std(&self) -> f64 {
+        self.stream.std()
+    }
+
+    /// Cumulative replay-path statistics over the evaluated prefix.
+    pub fn replay_stats(&self) -> &ReplayStats {
+        &self.replay_stats
+    }
+
+    /// Approximate heap footprint: what a trace cache pays to keep this
+    /// campaign resumable (dominated by the clean traces).
+    pub fn approx_bytes(&self) -> usize {
+        self.traces.iter().map(|t| t.approx_bytes()).sum::<usize>()
+            + self.subset.x.data.len()
+            + self.subset.labels.len() * std::mem::size_of::<i32>()
+            + self.sites.len() * std::mem::size_of::<FaultSite>()
+            + self.acc_per_fault.len() * std::mem::size_of::<f64>()
+            + std::mem::size_of::<Campaign>()
+    }
+
     /// Evaluate up to `block` more faults (site-list order); returns how
-    /// many ran. Parallelism is leased from the shared [`WorkerBudget`],
-    /// capped at the campaign's `workers` setting.
-    pub fn advance(&mut self, block: usize) -> usize {
+    /// many ran. Parallelism is over images, leased from the shared
+    /// [`WorkerBudget`] and capped at the campaign's `workers` setting.
+    /// `engine` must be the configuration this campaign was traced with
+    /// (the staged evaluator rebinds an identical engine on resume).
+    ///
+    /// Within one image the block's faults run grouped by fault layer in
+    /// sorted order: the group's clean activation is staged once and each
+    /// fault flips/unflips one byte in place before its gated replay.
+    /// Per-fault accuracies are integer correct-counts over the image
+    /// set, so neither the grouping nor the image-major parallelism can
+    /// change a single bit of the result.
+    pub fn advance(&mut self, engine: &Engine, block: usize) -> usize {
         let n = block.min(self.remaining());
         if n == 0 {
             return 0;
         }
         let start = self.acc_per_fault.len();
         let chunk = &self.sites[start..start + n];
-        let engine = self.engine;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| chunk[i].layer);
+        let images: Vec<usize> = (0..self.subset.len()).collect();
+        let replay = self.replay;
+        let gate = self.gate;
         let subset = &self.subset;
         let traces = &self.traces;
-        let replay = self.replay;
         let progress = &self.progress;
-        let accs: Vec<f64> = budgeted_map_with(
+        let per_image: Vec<(Vec<bool>, ReplayStats)> = budgeted_map_with(
             WorkerBudget::global(),
             self.workers,
-            chunk,
+            &images,
             || (Buffers::for_net(engine.net), Vec::<i8>::new()),
-            |(buf, act), &site| {
-                let mut correct = 0usize;
-                for i in 0..subset.len() {
-                    let pred = if replay {
-                        act.clear();
-                        act.extend_from_slice(&traces[i].acts[site.layer]);
+            |(buf, act), &img| {
+                let mut correct = vec![false; n];
+                let mut stats = ReplayStats::new(engine.net.n_comp());
+                if replay {
+                    let trace = &traces[img];
+                    let mut staged = usize::MAX; // layer currently in `act`
+                    for &oi in &order {
+                        let site = chunk[oi];
+                        if site.layer != staged {
+                            act.clear();
+                            act.extend_from_slice(&trace.acts[site.layer]);
+                            staged = site.layer;
+                        }
                         act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
-                        argmax_i8(&engine.forward_from(site.layer, act, buf))
-                    } else {
-                        engine.predict(subset.image(i), Some(site), buf)
-                    };
-                    if pred == subset.labels[i] as usize {
-                        correct += 1;
+                        let r = engine.replay_from(site.layer, act, trace, gate, buf);
+                        act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                        stats.record(&r);
+                        correct[oi] = r.pred == subset.labels[img] as usize;
+                    }
+                } else {
+                    for (fi, site) in chunk.iter().enumerate() {
+                        let pred = engine.predict(subset.image(img), Some(*site), buf);
+                        correct[fi] = pred == subset.labels[img] as usize;
                     }
                 }
-                progress.add(1);
-                correct as f64 / subset.len() as f64
+                progress.add(n as u64);
+                (correct, stats)
             },
         );
-        for a in accs {
-            self.stream.push(a);
-            self.acc_per_fault.push(a);
+        let mut counts = vec![0usize; n];
+        for (correct, stats) in &per_image {
+            for (fi, &c) in correct.iter().enumerate() {
+                if c {
+                    counts[fi] += 1;
+                }
+            }
+            self.replay_stats.merge(stats);
+        }
+        let n_images = self.subset.len() as f64;
+        for &c in &counts {
+            let acc = c as f64 / n_images;
+            self.stream.push(acc);
+            self.acc_per_fault.push(acc);
         }
         if self.is_done() {
             self.progress.finish();
@@ -236,7 +405,8 @@ impl<'e> Campaign<'e> {
     }
 
     /// Finalize the progress display for a campaign stopped before its
-    /// site list is exhausted (CI early stop / dominance gate).
+    /// site list is exhausted (CI early stop / dominance gate / screen
+    /// prefix parked in the trace cache).
     pub fn stop(&self) {
         if !self.is_done() {
             self.progress.finish();
@@ -256,6 +426,7 @@ impl<'e> Campaign<'e> {
             acc_per_fault: self.acc_per_fault.clone(),
             n_faults: self.acc_per_fault.len(),
             n_images: self.subset.len(),
+            replay: self.replay_stats.clone(),
         }
     }
 }
@@ -267,7 +438,7 @@ pub fn run_campaign(engine: &Engine, data: &TestSet, params: &CampaignParams) ->
     let mut rng = Rng::new(params.seed);
     let sites = sample_sites(engine.net, params.n_faults, params.sampling, &mut rng);
     let mut campaign = Campaign::new(engine, data, params, sites);
-    while campaign.advance(usize::MAX) > 0 {}
+    while campaign.advance(engine, usize::MAX) > 0 {}
     campaign.result()
 }
 
@@ -275,14 +446,27 @@ pub fn run_campaign(engine: &Engine, data: &TestSet, params: &CampaignParams) ->
 mod tests {
     use super::*;
     use crate::axmul;
-    use crate::simnet::testutil::tiny_mlp;
+    use crate::simnet::testutil::{random_mlp, tiny_conv, tiny_mlp};
     use crate::tensor::TensorI8;
+    use crate::util::proptest::check;
 
     fn fake_data(n: usize) -> TestSet {
         let mut rng = Rng::new(77);
         let data: Vec<i8> = (0..n * 4).map(|_| rng.i8()).collect();
         let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
         TestSet { name: "fake".into(), x: TensorI8::from_vec(&[n, 1, 2, 2], data), labels }
+    }
+
+    fn data_for(net: &crate::simnet::QNet, n: usize, seed: u64) -> TestSet {
+        let mut rng = Rng::new(seed);
+        let sz = net.input_len();
+        let data: Vec<i8> = (0..n * sz).map(|_| rng.i8()).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        TestSet {
+            name: "fake".into(),
+            x: TensorI8::from_vec(&[n, net.input_shape[0], net.input_shape[1], net.input_shape[2]], data),
+            labels,
+        }
     }
 
     fn params(replay: bool) -> CampaignParams {
@@ -293,6 +477,7 @@ mod tests {
             workers: 2,
             sampling: SiteSampling::UniformLayer,
             replay,
+            gate: true,
         }
     }
 
@@ -309,6 +494,80 @@ mod tests {
     }
 
     #[test]
+    fn convergence_gate_never_changes_outcomes() {
+        // the headline bit-identity criterion, on a net with conv + pool
+        // layers in the suffix: gate on == gate off == naive forwards
+        let net = tiny_conv();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = data_for(&net, 20, 0xC0CA);
+        let gated = run_campaign(&engine, &data, &params(true));
+        let mut off = params(true);
+        off.gate = false;
+        let ungated = run_campaign(&engine, &data, &off);
+        let naive = run_campaign(&engine, &data, &params(false));
+        assert_eq!(gated.acc_per_fault, ungated.acc_per_fault);
+        assert_eq!(gated.acc_per_fault, naive.acc_per_fault);
+        assert_eq!(gated.base_acc, naive.base_acc);
+        // the gate only ever shortens replays
+        assert_eq!(gated.replay.inferences, ungated.replay.inferences);
+        assert!(gated.replay.replayed_layers <= ungated.replay.replayed_layers);
+        assert_eq!(ungated.replay.masked, 0, "gate off must not classify masking");
+        assert_eq!(naive.replay.inferences, 0, "naive path records no replays");
+    }
+
+    #[test]
+    fn property_gated_replay_bit_identical_across_random_nets() {
+        // satellite: convergence-gated replay == naive full-forward
+        // campaign across randomized nets, LUT assignments and fault
+        // sites, including the gate-off escape hatch
+        let luts: Vec<_> = ["exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| axmul::by_name(n).unwrap().lut())
+            .collect();
+        check("gated == ungated == naive", 0xFA57, 12, |rng| {
+            let net = random_mlp(rng);
+            let assignment: Vec<&axmul::Lut> =
+                (0..net.n_comp()).map(|_| &luts[rng.usize_below(luts.len())]).collect();
+            let engine = Engine::new(&net, assignment);
+            let data = data_for(&net, 8 + rng.usize_below(12), rng.next_u64());
+            let p = CampaignParams {
+                n_faults: 24 + rng.usize_below(24),
+                n_images: data.len(),
+                seed: rng.next_u64(),
+                workers: 1 + rng.usize_below(3),
+                sampling: SiteSampling::UniformLayer,
+                replay: true,
+                gate: true,
+            };
+            let gated = run_campaign(&engine, &data, &p);
+            let ungated = run_campaign(&engine, &data, &CampaignParams { gate: false, ..p.clone() });
+            let naive = run_campaign(&engine, &data, &CampaignParams { replay: false, ..p.clone() });
+            assert_eq!(gated.acc_per_fault, ungated.acc_per_fault);
+            assert_eq!(gated.acc_per_fault, naive.acc_per_fault);
+            assert_eq!(gated.mean_fault_acc, naive.mean_fault_acc);
+            assert_eq!(gated.base_acc, naive.base_acc);
+            // stats invariants
+            let s = &gated.replay;
+            assert_eq!(s.inferences, (p.n_faults * data.len()) as u64);
+            assert_eq!(s.depth_hist.iter().sum::<u64>(), s.inferences);
+            assert!(s.masked <= s.inferences);
+            assert!(s.replayed_layers <= ungated.replay.replayed_layers);
+            // ungated replays always walk the full suffix
+            let full: u64 = ungated.replay.replayed_layers;
+            let expect: u64 = {
+                let mut rng2 = Rng::new(p.seed);
+                let sites = sample_sites(&net, p.n_faults, p.sampling, &mut rng2);
+                sites
+                    .iter()
+                    .map(|site| (net.n_comp() - 1 - site.layer) as u64 * data.len() as u64)
+                    .sum()
+            };
+            assert_eq!(full, expect);
+        });
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let net = tiny_mlp();
         let exact = axmul::by_name("exact").unwrap().lut();
@@ -317,6 +576,7 @@ mod tests {
         let a = run_campaign(&engine, &data, &params(true));
         let b = run_campaign(&engine, &data, &params(true));
         assert_eq!(a.acc_per_fault, b.acc_per_fault);
+        assert_eq!(a.replay, b.replay);
     }
 
     #[test]
@@ -362,7 +622,7 @@ mod tests {
         let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
         let mut c = Campaign::new(&engine, &data, &p, sites);
         for block in [1, 7, 3, 16, usize::MAX] {
-            c.advance(block);
+            c.advance(&engine, block);
         }
         assert!(c.is_done());
         let blockwise = c.result();
@@ -370,6 +630,7 @@ mod tests {
         assert_eq!(blockwise.mean_fault_acc, reference.mean_fault_acc);
         assert_eq!(blockwise.ci95, reference.ci95);
         assert_eq!(blockwise.base_acc, reference.base_acc);
+        assert_eq!(blockwise.replay, reference.replay, "stats are block-invariant too");
     }
 
     #[test]
@@ -384,7 +645,7 @@ mod tests {
         let mut rng = Rng::new(p.seed);
         let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
         let mut c = Campaign::new(&engine, &data, &p, sites);
-        c.advance(24);
+        c.advance(&engine, 24);
         assert_eq!(c.evaluated(), 24);
         assert_eq!(c.remaining(), 40);
         c.stop();
@@ -395,5 +656,45 @@ mod tests {
         let batch = stats::summarize(&full.acc_per_fault[..24]);
         assert!((c.mean() - batch.mean).abs() < 1e-12);
         assert!((c.ci95() - stats::ci95_halfwidth(&batch)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resumed_campaign_reproduces_full_run() {
+        // the promotion fast path in miniature: park after a prefix,
+        // rebind an identical engine, resume to completion
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let p = params(true);
+        let full = run_campaign(&engine, &data, &p);
+
+        let mut rng = Rng::new(p.seed);
+        let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
+        let mut c = Campaign::new(&engine, &data, &p, sites);
+        c.advance(&engine, 16);
+        drop(engine); // the campaign owns its state — no engine borrow
+        let engine2 = Engine::uniform(&net, &exact);
+        while c.advance(&engine2, 8) > 0 {}
+        let r = c.result();
+        assert_eq!(r.acc_per_fault, full.acc_per_fault);
+        assert_eq!(r.mean_fault_acc, full.mean_fault_acc);
+        assert_eq!(r.ci95, full.ci95);
+        assert_eq!(r.replay, full.replay);
+    }
+
+    #[test]
+    fn approx_bytes_accounts_traces() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(16);
+        let p = params(true);
+        let mut rng = Rng::new(p.seed);
+        let sites = sample_sites(engine.net, p.n_faults, p.sampling, &mut rng);
+        let c = Campaign::new(&engine, &data, &p, sites);
+        // 16 traces x (3 + 2 activations + 2 logits) plus subset + sites:
+        // must be at least the raw activation bytes
+        assert!(c.approx_bytes() > 16 * 7);
     }
 }

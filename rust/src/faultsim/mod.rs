@@ -5,11 +5,15 @@
 //! with that fault present; repeated for N independent faults; the mean
 //! accuracy across faults measures *fault vulnerability*
 //! (= AxDNN accuracy − mean faulty accuracy; opposite of resiliency).
+//!
+//! Campaigns run on the convergence-gated layer-replay fast path (see
+//! [`campaign`] and EXPERIMENTS.md §Perf); [`ReplayStats`] reports how
+//! many faults were masked and how deep replays actually ran.
 
 pub mod campaign;
 pub mod permanent;
 
-pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult};
+pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult, ReplayStats};
 pub use permanent::{run_stuck_campaign, StuckFault, StuckValue};
 
 use crate::simnet::{FaultSite, QNet};

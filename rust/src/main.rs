@@ -56,7 +56,18 @@ FIDELITY LADDER (search/pipeline)
                    bit-identical to the pre-ladder path)
   --fi-screen N    screen fresh designs with N faults and promote only
                    frontier survivors to the full campaign
-                   (env DEEPAXE_FI_SCREEN; 0 = off)
+                   (env DEEPAXE_FI_SCREEN; flag absent = off).
+                   --fi-screen 0 sizes the screen ADAPTIVELY: a pilot
+                   block on the exact configuration measures the
+                   per-fault accuracy deviation sigma and the screen runs
+                   ceil((1.96*sigma/eps)^2) faults — the count whose 95%
+                   CI is ~eps (= --fi-epsilon, or 1pp when epsilon is 0),
+                   clamped to [pilot, campaign faults]
+  promotions resume their screen-prefix campaign from a byte-budgeted
+  live-trace cache (env DEEPAXE_TRACE_CACHE_MB, default 256, 0 = off) —
+  zero re-trace / re-simulation, bit-identical results. Fault replays are
+  convergence-gated (exit at clean-state reconvergence; bit-identical);
+  set DEEPAXE_NO_CONVERGENCE_GATE to force full suffix replays.
 ";
 
 fn main() {
@@ -79,12 +90,22 @@ fn campaign_params(args: &cli::Args, net: &str) -> Result<CampaignParams> {
 }
 
 /// Fidelity-ladder knobs: flag beats env beats off (the env fallbacks live
-/// in [`deepaxe::eval::FidelitySpec::default_from_env`]).
+/// in [`deepaxe::eval::FidelitySpec::default_from_env`]). An explicit
+/// `--fi-screen 0` requests *adaptive* screen sizing (pilot-variance
+/// heuristic); leaving the flag and env unset leaves screening off.
 fn fidelity_spec(args: &cli::Args) -> Result<deepaxe::eval::FidelitySpec> {
     let env = deepaxe::eval::FidelitySpec::default_from_env();
+    let (screen_faults, screen_auto) = match args.get("fi-screen") {
+        None => (env.screen_faults, env.screen_auto),
+        Some(_) => {
+            let n = args.get_usize("fi-screen", 0)?;
+            (n, n == 0)
+        }
+    };
     Ok(deepaxe::eval::FidelitySpec {
         epsilon_pp: args.get_f64("fi-epsilon", env.epsilon_pp)?,
-        screen_faults: args.get_usize("fi-screen", env.screen_faults)?,
+        screen_faults,
+        screen_auto,
         ..env
     })
 }
@@ -224,6 +245,7 @@ fn pipeline_cmd(args: &cli::Args) -> Result<()> {
         budget: args.get_usize("budget", 0)?,
         fi_epsilon: ladder.epsilon_pp,
         fi_screen: ladder.screen_faults,
+        fi_screen_auto: ladder.screen_auto,
     };
     let out = run_pipeline(&ctx, &spec)?;
     println!(
@@ -295,7 +317,7 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         space.size(),
         budget,
         fidelity.epsilon_pp,
-        fidelity.screen_faults,
+        if fidelity.screen_auto { "auto".to_string() } else { fidelity.screen_faults.to_string() },
     );
 
     let staged = deepaxe::eval::StagedEvaluator::new(&ev, fidelity);

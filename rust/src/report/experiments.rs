@@ -428,6 +428,7 @@ pub fn ablation_fi_n(ctx: &Ctx) -> Result<String> {
             workers: crate::util::threadpool::default_workers(),
             sampling: crate::faultsim::SiteSampling::UniformLayer,
             replay: true,
+            gate: true,
         };
         let r = run_campaign(&engine, &data, &params);
         t.row(vec![

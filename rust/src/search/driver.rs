@@ -19,12 +19,15 @@
 //! (`SearchSpec::screen`), fresh genotypes are evaluated at
 //! [`Fidelity::FiScreen`] and only archive-frontier survivors are promoted
 //! to [`Fidelity::FiFull`] after each batch — the promotion loop runs to a
-//! fixpoint because refined values can reshuffle the frontier. Budget is
-//! charged per *unique genotype* exactly as before (promotions refine an
-//! already-charged point); the per-tier fault spend is accounted by the
-//! backend's [`crate::eval::FiLedger`]. With screening off and epsilon 0
-//! the driver's behavior — and its output — is bit-identical to the
-//! pre-ladder path.
+//! fixpoint because refined values can reshuffle the frontier, and each
+//! round's survivors are promoted *in parallel* through the shared
+//! [`threadpool::WorkerBudget`] (with a staged backend every promotion
+//! also resumes its cached screen-prefix campaign instead of re-running
+//! it). Budget is charged per *unique genotype* exactly as before
+//! (promotions refine an already-charged point); the per-tier fault spend
+//! is accounted by the backend's [`crate::eval::FiLedger`]. With
+//! screening off and epsilon 0 the driver's behavior — and its output —
+//! is bit-identical to the pre-ladder path.
 
 use super::anneal::{anneal, AnnealParams};
 use super::nsga2::{self, objectives};
@@ -454,11 +457,17 @@ impl<'a> Archive<'a> {
     /// (promotion can change objectives and therefore the frontier).
     /// Promotions refine already-budgeted points — they consume no budget
     /// units; their extra faults are accounted by the backend's ledger.
-    /// A promotion re-runs the campaign from fault zero rather than
-    /// resuming the screen prefix: resuming would require keeping every
-    /// screened point's clean traces (n_images × activations) alive
-    /// across batches, which does not fit in memory for real archives —
-    /// the re-simulated prefix is bounded by `screen/full` per promotion.
+    ///
+    /// The pass mirrors [`eval_batch`](Archive::eval_batch)'s structure:
+    /// persistent-cache lookups run serially (`CacheHook` is not `Sync`),
+    /// then the misses are promoted in parallel through the shared
+    /// [`threadpool::WorkerBudget`] — each promoted campaign also leases
+    /// its internal workers from the same budget, so the two layers
+    /// cannot oversubscribe the host. With a [`crate::eval::StagedBackend`]
+    /// each promotion resumes the genotype's cached screen-prefix
+    /// campaign (zero re-trace, zero prefix re-simulation); results are
+    /// deterministic regardless of worker count because promoted values
+    /// are pure per genotype and applied in frontier order.
     fn promote_frontier<B: EvalBackend>(&mut self, backend: &B, cache: &mut dyn CacheHook) {
         loop {
             let (front, _) = frontier_hv(&self.points, self.with_fi);
@@ -467,26 +476,47 @@ impl<'a> Archive<'a> {
             if pending.is_empty() {
                 return;
             }
-            for idx in pending {
+            // persistent-cache pass (serial: CacheHook is not Sync)
+            let mut misses: Vec<usize> = Vec::new();
+            for &idx in &pending {
                 let names = self.space.decode(&self.genotypes[idx]);
-                let digits = self.space.config_digits(&self.genotypes[idx]);
-                let p = if let Some(hit) = cache.get(&names, Fidelity::FiFull) {
+                if let Some(mut hit) = cache.get(&names, Fidelity::FiFull) {
                     self.cache_hits += 1;
-                    let mut p = hit;
-                    p.config_string = digits;
-                    p
+                    hit.config_string = self.space.config_digits(&self.genotypes[idx]);
+                    self.apply_promotion(idx, hit);
                 } else {
-                    let mut p = backend.eval(&names, Fidelity::FiFull);
-                    p.config_string = digits;
-                    cache.put(&names, Fidelity::FiFull, &p);
-                    p
-                };
-                self.objs[idx] = objectives(&p);
-                self.points[idx] = p;
-                self.fidelities[idx] = Fidelity::FiFull;
-                self.promotions += 1;
+                    misses.push(idx);
+                }
+            }
+            // backend pass: parallel over the frontier survivors
+            if !misses.is_empty() {
+                let space = self.space;
+                let genotypes = &self.genotypes;
+                let promoted: Vec<DesignPoint> = threadpool::budgeted_map(
+                    threadpool::WorkerBudget::global(),
+                    self.workers,
+                    &misses,
+                    |&idx| backend.eval(&space.decode(&genotypes[idx]), Fidelity::FiFull),
+                );
+                for (idx, mut p) in misses.into_iter().zip(promoted) {
+                    // persist with the generalized digit config so the
+                    // stored value (not just the key) identifies the
+                    // per-layer assignment
+                    p.config_string = self.space.config_digits(&self.genotypes[idx]);
+                    cache.put(&self.space.decode(&self.genotypes[idx]), Fidelity::FiFull, &p);
+                    self.apply_promotion(idx, p);
+                }
             }
         }
+    }
+
+    /// Install a promoted (`FiFull`) design point — `config_string`
+    /// already set to the generalized digits — over archive slot `idx`.
+    fn apply_promotion(&mut self, idx: usize, p: DesignPoint) {
+        self.objs[idx] = objectives(&p);
+        self.points[idx] = p;
+        self.fidelities[idx] = Fidelity::FiFull;
+        self.promotions += 1;
     }
 
     fn finish(mut self, strategy: Strategy) -> SearchOutcome {
@@ -816,6 +846,34 @@ mod tests {
         let parallel = run_search(&space, &mk(4), &backend, &mut NoCache);
         assert_eq!(serial.genotypes, parallel.genotypes);
         assert_eq!(frontier_coords(&serial), frontier_coords(&parallel));
+    }
+
+    #[test]
+    fn parallel_promotion_matches_serial() {
+        // the promotion pass fans frontier survivors out across the
+        // worker budget; promoted values are pure per genotype, so the
+        // outcome must be worker-count invariant
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+        let mk = |workers| SearchSpec {
+            budget: 18,
+            seed: 0x9A11,
+            workers,
+            screen: true,
+            ..SearchSpec::new(Strategy::Nsga2)
+        };
+        let serial = run_search(&space, &mk(1), &backend, &mut NoCache);
+        let parallel = run_search(&space, &mk(4), &backend, &mut NoCache);
+        assert_eq!(serial.genotypes, parallel.genotypes);
+        assert_eq!(serial.promotions, parallel.promotions);
+        assert_eq!(serial.fidelities, parallel.fidelities);
+        assert_eq!(frontier_coords(&serial), frontier_coords(&parallel));
+        assert!(serial.promotions > 0, "screened run must promote something");
     }
 
     #[test]

@@ -2,6 +2,17 @@
 //! LUTs and single-bit-flip fault hooks, plus the *layer-replay* fast path
 //! for fault campaigns (clean activations are computed once per image;
 //! each fault replays only the suffix of the network after its site).
+//!
+//! The replay path is additionally *convergence-gated*
+//! ([`Engine::replay_from`], EXPERIMENTS.md §Perf): the replay steps one
+//! layer at a time and compares the faulted activation against the
+//! per-image [`CleanTrace`] after every computing layer. The moment the
+//! two are equal the fault is masked by construction — every remaining
+//! layer is a pure function of the current activation, so the suffix is
+//! identical to the clean run and the outcome is the clean prediction.
+//! Exiting there keeps results bit-identical to the full replay while
+//! making the average fault cost sublinear in network depth (most
+//! single-bit activation flips are masked within one or two layers).
 
 use super::gemm::gemm_lut_bias;
 use super::layers::{im2col, maxpool, requantize_slice, rows_to_chw};
@@ -66,6 +77,28 @@ pub struct CleanTrace {
     pub pred: usize,
 }
 
+impl CleanTrace {
+    /// Heap footprint (trace-cache byte accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.acts.iter().map(|a| a.len() + std::mem::size_of::<Vec<i8>>()).sum::<usize>()
+            + self.logits.len()
+            + std::mem::size_of::<CleanTrace>()
+    }
+}
+
+/// Outcome of one convergence-gated fault replay ([`Engine::replay_from`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Replay {
+    /// predicted class under the fault
+    pub pred: usize,
+    /// computing layers actually re-simulated after the fault site
+    pub depth: usize,
+    /// the faulted state became equal to the clean trace before the
+    /// output layer — the fault is masked and `pred` is the clean
+    /// prediction by construction
+    pub converged: bool,
+}
+
 /// An engine binds a network to one multiplier LUT per computing layer
 /// (= one approximation configuration).
 pub struct Engine<'a> {
@@ -113,7 +146,9 @@ impl<'a> Engine<'a> {
     /// Layer-replay: given the (faulted) activation of computing layer
     /// `start_ci`, run only the remaining layers. Equivalent to a full
     /// forward where layer start_ci produced `act` (proven equivalent in
-    /// tests + used by faultsim).
+    /// tests + used by faultsim). This is the ungated full-suffix replay;
+    /// fault campaigns use the convergence-gated
+    /// [`replay_from`](Engine::replay_from) instead.
     pub fn forward_from(&self, start_ci: usize, act: &[i8], buf: &mut Buffers) -> Vec<i8> {
         let start_pos = self.net.comp_positions[start_ci];
         let comp = self.net.comp(start_ci);
@@ -121,6 +156,45 @@ impl<'a> Engine<'a> {
         buf.act_a[..act.len()].copy_from_slice(act);
         let mut ci = start_ci + 1;
         self.run_layers(start_pos + 1, &mut shape, act.len(), &mut ci, None, buf, None)
+    }
+
+    /// Convergence-gated replay of the suffix after computing layer
+    /// `start_ci`, whose (faulted) activation is `act`. Steps one layer at
+    /// a time; after each computing layer the faulted activation is
+    /// compared against `trace` and the replay exits the moment they are
+    /// equal — every remaining layer is a pure function of the current
+    /// activation, so an equal state means an identical suffix and the
+    /// outcome is the clean prediction. Bit-identical to
+    /// [`forward_from`](Engine::forward_from) + argmax (asserted in tests
+    /// and by the faultsim property suite); `gate: false` is the
+    /// `DEEPAXE_NO_CONVERGENCE_GATE` escape hatch that forces the full
+    /// suffix for A/B measurement.
+    pub fn replay_from(
+        &self,
+        start_ci: usize,
+        act: &[i8],
+        trace: &CleanTrace,
+        gate: bool,
+        buf: &mut Buffers,
+    ) -> Replay {
+        let start_pos = self.net.comp_positions[start_ci];
+        let comp = self.net.comp(start_ci);
+        let mut shape: Vec<usize> = comp.act_shape.clone();
+        buf.act_a[..act.len()].copy_from_slice(act);
+        let mut act_len = act.len();
+        let mut ci = start_ci + 1;
+        let mut depth = 0usize;
+        for li in start_pos + 1..self.net.layers.len() {
+            let is_comp = matches!(&self.net.layers[li], Layer::Comp(_));
+            act_len = self.step_layer(li, &mut shape, act_len, &mut ci, buf);
+            if is_comp {
+                depth += 1;
+                if gate && buf.act_a[..act_len] == trace.acts[ci - 1][..] {
+                    return Replay { pred: trace.pred, depth, converged: true };
+                }
+            }
+        }
+        Replay { pred: argmax_i8(&buf.act_a[..act_len]), depth, converged: false }
     }
 
     // ---------------------------------------------------------------------
@@ -153,94 +227,115 @@ impl<'a> Engine<'a> {
         mut collect: Option<&mut Vec<Vec<i8>>>,
     ) -> Vec<i8> {
         for li in from..self.net.layers.len() {
-            match &self.net.layers[li] {
-                Layer::Flatten => {
-                    let n: usize = shape.iter().product();
-                    *shape = vec![n];
+            let is_comp = matches!(&self.net.layers[li], Layer::Comp(_));
+            act_len = self.step_layer(li, shape, act_len, ci, buf);
+            if is_comp {
+                let cur = *ci - 1;
+                if let Some(f) = fault {
+                    if f.layer == cur {
+                        debug_assert!(f.neuron < act_len);
+                        buf.act_a[f.neuron] = (buf.act_a[f.neuron] as u8 ^ (1u8 << f.bit)) as i8;
+                    }
                 }
-                Layer::Pool { size } => {
-                    let (c, h, w) = (shape[0], shape[1], shape[2]);
-                    let (oh, ow) = maxpool(&buf.act_a[..act_len], c, h, w, *size, &mut buf.act_b);
-                    act_len = c * oh * ow;
-                    std::mem::swap(&mut buf.act_a, &mut buf.act_b);
-                    *shape = vec![c, oh, ow];
-                }
-                Layer::Comp(comp) => {
-                    let lut = self.luts[*ci];
-                    match &comp.kind {
-                        CompKind::Dense => {
-                            debug_assert_eq!(act_len, comp.k_dim);
-                            gemm_lut_bias(
-                                &buf.act_a[..act_len],
-                                &comp.w,
-                                &comp.b,
-                                lut,
-                                1,
-                                comp.k_dim,
-                                comp.n_dim,
-                                &mut buf.acc,
-                            );
-                            requantize_slice(
-                                &buf.acc[..comp.n_dim],
-                                comp.m0,
-                                comp.nshift,
-                                comp.relu,
-                                &mut buf.act_b[..comp.n_dim],
-                            );
-                            act_len = comp.n_dim;
-                        }
-                        CompKind::Conv { in_ch, ksize, stride, pad, in_h, in_w, out_h, out_w, .. } => {
-                            debug_assert_eq!(act_len, in_ch * in_h * in_w);
-                            let (oh, ow) = im2col(
-                                &buf.act_a[..act_len],
-                                *in_ch,
-                                *in_h,
-                                *in_w,
-                                *ksize,
-                                *stride,
-                                *pad,
-                                &mut buf.cols,
-                            );
-                            debug_assert_eq!((oh, ow), (*out_h, *out_w));
-                            let m = oh * ow;
-                            gemm_lut_bias(
-                                &buf.cols[..m * comp.k_dim],
-                                &comp.w,
-                                &comp.b,
-                                lut,
-                                m,
-                                comp.k_dim,
-                                comp.n_dim,
-                                &mut buf.acc,
-                            );
-                            requantize_slice(
-                                &buf.acc[..m * comp.n_dim],
-                                comp.m0,
-                                comp.nshift,
-                                comp.relu,
-                                &mut buf.rows_q[..m * comp.n_dim],
-                            );
-                            rows_to_chw(&buf.rows_q, comp.n_dim, oh, ow, &mut buf.act_b);
-                            act_len = comp.n_dim * oh * ow;
-                        }
-                    }
-                    std::mem::swap(&mut buf.act_a, &mut buf.act_b);
-                    *shape = comp.act_shape.clone();
-                    if let Some(f) = fault {
-                        if f.layer == *ci {
-                            debug_assert!(f.neuron < act_len);
-                            buf.act_a[f.neuron] =
-                                (buf.act_a[f.neuron] as u8 ^ (1u8 << f.bit)) as i8;
-                        }
-                    }
-                    if let Some(c) = collect.as_deref_mut() {
-                        c.push(buf.act_a[..act_len].to_vec());
-                    }
-                    *ci += 1;
+                if let Some(c) = collect.as_deref_mut() {
+                    c.push(buf.act_a[..act_len].to_vec());
                 }
             }
         }
         buf.act_a[..act_len].to_vec()
+    }
+
+    /// Run exactly one layer (`layers[li]`) on the activation in
+    /// buf.act_a, leaving the result in buf.act_a. Returns the new
+    /// activation length; advances `ci` past computing layers. This is
+    /// the stepwise primitive the convergence gate is built on — one call
+    /// per layer lets [`replay_from`](Engine::replay_from) check the
+    /// trace between layers.
+    fn step_layer(
+        &self,
+        li: usize,
+        shape: &mut Vec<usize>,
+        mut act_len: usize,
+        ci: &mut usize,
+        buf: &mut Buffers,
+    ) -> usize {
+        match &self.net.layers[li] {
+            Layer::Flatten => {
+                let n: usize = shape.iter().product();
+                *shape = vec![n];
+            }
+            Layer::Pool { size } => {
+                let (c, h, w) = (shape[0], shape[1], shape[2]);
+                let (oh, ow) = maxpool(&buf.act_a[..act_len], c, h, w, *size, &mut buf.act_b);
+                act_len = c * oh * ow;
+                std::mem::swap(&mut buf.act_a, &mut buf.act_b);
+                *shape = vec![c, oh, ow];
+            }
+            Layer::Comp(comp) => {
+                let lut = self.luts[*ci];
+                match &comp.kind {
+                    CompKind::Dense => {
+                        debug_assert_eq!(act_len, comp.k_dim);
+                        gemm_lut_bias(
+                            &buf.act_a[..act_len],
+                            &comp.w,
+                            &comp.b,
+                            lut,
+                            1,
+                            comp.k_dim,
+                            comp.n_dim,
+                            &mut buf.acc,
+                        );
+                        requantize_slice(
+                            &buf.acc[..comp.n_dim],
+                            comp.m0,
+                            comp.nshift,
+                            comp.relu,
+                            &mut buf.act_b[..comp.n_dim],
+                        );
+                        act_len = comp.n_dim;
+                    }
+                    CompKind::Conv { in_ch, ksize, stride, pad, in_h, in_w, out_h, out_w, .. } => {
+                        debug_assert_eq!(act_len, in_ch * in_h * in_w);
+                        let (oh, ow) = im2col(
+                            &buf.act_a[..act_len],
+                            *in_ch,
+                            *in_h,
+                            *in_w,
+                            *ksize,
+                            *stride,
+                            *pad,
+                            &mut buf.cols,
+                        );
+                        debug_assert_eq!((oh, ow), (*out_h, *out_w));
+                        let m = oh * ow;
+                        gemm_lut_bias(
+                            &buf.cols[..m * comp.k_dim],
+                            &comp.w,
+                            &comp.b,
+                            lut,
+                            m,
+                            comp.k_dim,
+                            comp.n_dim,
+                            &mut buf.acc,
+                        );
+                        requantize_slice(
+                            &buf.acc[..m * comp.n_dim],
+                            comp.m0,
+                            comp.nshift,
+                            comp.relu,
+                            &mut buf.rows_q[..m * comp.n_dim],
+                        );
+                        rows_to_chw(&buf.rows_q, comp.n_dim, oh, ow, &mut buf.act_b);
+                        act_len = comp.n_dim * oh * ow;
+                    }
+                }
+                std::mem::swap(&mut buf.act_a, &mut buf.act_b);
+                *shape = comp.act_shape.clone();
+                *ci += 1;
+            }
+        }
+        act_len
     }
 
     /// Predict one image's class.
@@ -343,6 +438,107 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn replay_from_matches_forward_from_gate_on_and_off() {
+        // the convergence gate must never change an outcome: for every
+        // site, gated replay == ungated replay == full forward
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img = [4i8, -4, 8, 0];
+        let tr = eng.trace(&img, &mut buf);
+        for layer in 0..2 {
+            for neuron in 0..net.comp(layer).act_len() {
+                for bit in 0..8u8 {
+                    let full =
+                        eng.forward(&img, Some(FaultSite { layer, neuron, bit }), &mut buf);
+                    let mut act = tr.acts[layer].clone();
+                    act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                    let gated = eng.replay_from(layer, &act, &tr, true, &mut buf);
+                    let ungated = eng.replay_from(layer, &act, &tr, false, &mut buf);
+                    assert_eq!(gated.pred, argmax_i8(&full), "l{layer} n{neuron} b{bit}");
+                    assert_eq!(ungated.pred, gated.pred);
+                    assert!(!ungated.converged, "gate off must never report convergence");
+                    // ungated always walks the whole suffix
+                    assert_eq!(ungated.depth, net.n_comp() - 1 - layer);
+                    assert!(gated.depth <= ungated.depth);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replay_on_last_layer_has_zero_depth() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace(&[4, -4, 8, 0], &mut buf);
+        let mut act = tr.acts[1].clone();
+        act[1] = (act[1] as u8 ^ 0x40) as i8;
+        let r = eng.replay_from(1, &act, &tr, true, &mut buf);
+        assert_eq!(r.depth, 0);
+        assert!(!r.converged, "an output-layer flip cannot reconverge");
+        assert_eq!(r.pred, argmax_i8(&eng.forward_from(1, &act, &mut buf)));
+    }
+
+    #[test]
+    fn masked_fault_converges_early_on_conv_net() {
+        // a bit-flip on a neuron that loses its maxpool window is erased
+        // by the pool: the next computing layer's activation equals the
+        // clean trace and the gated replay exits at depth 1
+        use crate::simnet::testutil::tiny_conv;
+        let net = tiny_conv();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img: Vec<i8> = (0..net.input_len()).map(|i| ((i * 13 % 19) as i8) - 9).collect();
+        let tr = eng.trace(&img, &mut buf);
+        // find a non-max conv neuron whose flipped value stays <= its 2x2
+        // pool-window max: the pool output is then unchanged, so the fault
+        // is masked by construction
+        let (c, h, w) = (tr.acts[0].len() / 16, 4usize, 4usize);
+        let mut found = false;
+        'outer: for ch in 0..c {
+            for py in 0..h / 2 {
+                for px in 0..w / 2 {
+                    let idx = |dy: usize, dx: usize| {
+                        ch * h * w + (py * 2 + dy) * w + (px * 2 + dx)
+                    };
+                    let vals: Vec<i8> =
+                        (0..4).map(|k| tr.acts[0][idx(k / 2, k % 2)]).collect();
+                    let max = *vals.iter().max().unwrap();
+                    for (k, &v) in vals.iter().enumerate() {
+                        if v >= max {
+                            continue; // flipping a max holder can change the pool
+                        }
+                        for bit in 0..8u8 {
+                            let flipped = (v as u8 ^ (1 << bit)) as i8;
+                            if flipped > max {
+                                continue;
+                            }
+                            let neuron = idx(k / 2, k % 2);
+                            let mut act = tr.acts[0].clone();
+                            act[neuron] = flipped;
+                            let r = eng.replay_from(0, &act, &tr, true, &mut buf);
+                            assert!(r.converged, "pool-dominated flip must be masked");
+                            assert_eq!(r.depth, 1);
+                            assert_eq!(r.pred, tr.pred);
+                            // and the naive full forward agrees
+                            let full = eng.forward(
+                                &img,
+                                Some(FaultSite { layer: 0, neuron, bit }),
+                                &mut buf,
+                            );
+                            assert_eq!(argmax_i8(&full), r.pred);
+                            found = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(found, "test net must contain a pool-dominated flip");
     }
 
     #[test]

@@ -20,26 +20,38 @@ pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out
         let a_row = &a[mi * k..(mi + 1) * k];
         let o_row = &mut out[mi * n..(mi + 1) * n];
         let mut ki = 0;
-        // 2-wide k-unroll: two LUT rows in flight (§Perf)
-        while ki + 2 <= k {
+        // 4-wide k-unroll: four LUT rows in flight, matching
+        // gemm_lut_bias (§Perf)
+        while ki + 4 <= k {
             let base0 = (a_row[ki] as u8 as usize) << 8;
             let base1 = (a_row[ki + 1] as u8 as usize) << 8;
+            let base2 = (a_row[ki + 2] as u8 as usize) << 8;
+            let base3 = (a_row[ki + 3] as u8 as usize) << 8;
             let lut_row0 = &table[base0..base0 + 256];
             let lut_row1 = &table[base1..base1 + 256];
+            let lut_row2 = &table[base2..base2 + 256];
+            let lut_row3 = &table[base3..base3 + 256];
             let w_row0 = &w[ki * n..(ki + 1) * n];
             let w_row1 = &w[(ki + 1) * n..(ki + 2) * n];
-            for ((o, &w0), &w1) in o_row.iter_mut().zip(w_row0).zip(w_row1) {
-                *o += lut_row0[w0 as u8 as usize] + lut_row1[w1 as u8 as usize];
+            let w_row2 = &w[(ki + 2) * n..(ki + 3) * n];
+            let w_row3 = &w[(ki + 3) * n..(ki + 4) * n];
+            for i in 0..n {
+                o_row[i] += lut_row0[w_row0[i] as u8 as usize]
+                    + lut_row1[w_row1[i] as u8 as usize]
+                    + lut_row2[w_row2[i] as u8 as usize]
+                    + lut_row3[w_row3[i] as u8 as usize];
             }
-            ki += 2;
+            ki += 4;
         }
-        if ki < k {
+        // shared scalar tail (same shape as gemm_lut_bias's)
+        while ki < k {
             let base = (a_row[ki] as u8 as usize) << 8;
             let lut_row = &table[base..base + 256];
             let w_row = &w[ki * n..(ki + 1) * n];
             for (o, &wv) in o_row.iter_mut().zip(w_row) {
                 *o += lut_row[wv as u8 as usize];
             }
+            ki += 1;
         }
     }
 }
@@ -138,6 +150,7 @@ mod tests {
             .map(|n| axmul::by_name(n).unwrap().lut())
             .collect();
         check("gemm_lut == scalar", 0xDEEB, 30, |rng| {
+            // small dims sweep k across the 4-unroll boundary (1..=24)
             let (m, k, n) = gen::dims(rng, 12, 24, 12);
             let a = gen::i8_vec(rng, m * k);
             let w = gen::i8_vec(rng, k * n);

@@ -15,7 +15,7 @@ pub mod gemm;
 pub mod layers;
 pub mod loader;
 
-pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite};
+pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite, Replay};
 pub use loader::load_qnet;
 
 /// Geometry + parameters of one computing layer (GEMM form).
@@ -177,6 +177,97 @@ pub mod testutil {
             config_template: "xx".into(),
             layers: vec![Layer::Flatten, Layer::Comp(l0), Layer::Comp(l1)],
             comp_positions: vec![1, 2],
+        }
+    }
+
+    /// Tiny conv net exercising every layer kind in the replay path:
+    /// [1,4,4] -> conv(2 filters, 3x3, pad 1, ReLU) -> maxpool 2 ->
+    /// flatten -> dense(8 -> 2).
+    pub fn tiny_conv() -> QNet {
+        let conv = CompLayer {
+            kind: CompKind::Conv {
+                in_ch: 1,
+                out_ch: 2,
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                in_h: 4,
+                in_w: 4,
+                out_h: 4,
+                out_w: 4,
+            },
+            relu: true,
+            // [k_dim = 9][n_dim = 2]
+            w: vec![1, -1, 0, 2, -1, 1, 1, 0, -2, 2, 1, -1, 0, 1, 2, -1, 1, 0],
+            k_dim: 9,
+            n_dim: 2,
+            b: vec![3, -2],
+            m0: 1 << 30,
+            nshift: 32, // r = 0.25
+            act_shape: vec![2, 4, 4],
+        };
+        let dense = CompLayer {
+            kind: CompKind::Dense,
+            relu: false,
+            w: vec![1, -1, 2, 0, -1, 1, 0, 2, 1, 1, -2, 0, 2, -1, 1, 1],
+            k_dim: 8,
+            n_dim: 2,
+            b: vec![1, -1],
+            m0: 1 << 30,
+            nshift: 31, // r = 0.5
+            act_shape: vec![2],
+        };
+        QNet {
+            name: "tinyconv".into(),
+            dataset: "none".into(),
+            input_shape: vec![1, 4, 4],
+            input_scale: 1.0 / 127.0,
+            config_template: "xx".into(),
+            layers: vec![
+                Layer::Comp(conv),
+                Layer::Pool { size: 2 },
+                Layer::Flatten,
+                Layer::Comp(dense),
+            ],
+            comp_positions: vec![0, 3],
+        }
+    }
+
+    /// Randomized dense chain (2..=4 layers, widths 2..=6) for property
+    /// tests over nets the hand-built fixtures cannot cover.
+    pub fn random_mlp(rng: &mut crate::util::rng::Rng) -> QNet {
+        let n_layers = 2 + rng.usize_below(3);
+        let mut dims: Vec<usize> = Vec::with_capacity(n_layers + 1);
+        for _ in 0..=n_layers {
+            dims.push(2 + rng.usize_below(5));
+        }
+        let mut layers = vec![Layer::Flatten];
+        let mut comp_positions = Vec::new();
+        for l in 0..n_layers {
+            let (k, n) = (dims[l], dims[l + 1]);
+            let w: Vec<i8> = (0..k * n).map(|_| (rng.below(9) as i8) - 4).collect();
+            let b: Vec<i32> = (0..n).map(|_| (rng.below(21) as i32) - 10).collect();
+            comp_positions.push(layers.len());
+            layers.push(Layer::Comp(CompLayer {
+                kind: CompKind::Dense,
+                relu: l + 1 < n_layers,
+                w,
+                k_dim: k,
+                n_dim: n,
+                b,
+                m0: 1 << 30,
+                nshift: 31 + rng.below(2) as u32, // r = 0.5 or 0.25
+                act_shape: vec![n],
+            }));
+        }
+        QNet {
+            name: "randmlp".into(),
+            dataset: "none".into(),
+            input_shape: vec![1, 1, dims[0]],
+            input_scale: 1.0 / 127.0,
+            config_template: "x".repeat(n_layers),
+            layers,
+            comp_positions,
         }
     }
 

@@ -122,6 +122,15 @@ pub fn env_f64(name: &str, default: f64) -> f64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Boolean environment switch (`DEEPAXE_NO_CONVERGENCE_GATE` and
+/// friends): set-and-not-falsy means on.
+pub fn env_flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Err(_) => false,
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "false" | "no"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +181,12 @@ mod tests {
         let a = parse(&sv(&["--nets", "a,b,c"]), &["nets"], &[]).unwrap();
         assert_eq!(a.get_list("nets", &[]), vec!["a", "b", "c"]);
         assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn env_flag_falsy_values() {
+        // unset name: deterministic regardless of the test environment
+        assert!(!env_flag("DEEPAXE_TEST_SURELY_UNSET_FLAG_12345"));
     }
 
     #[test]

@@ -21,6 +21,7 @@ fn evaluator_trends_mlp3() {
         workers: 2,
         sampling: SiteSampling::UniformLayer,
         replay: true,
+        gate: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 500, fi);
     // exact config: no accuracy drop by definition
@@ -49,6 +50,7 @@ fn sweep_cache_roundtrip() {
         workers: 1,
         sampling: SiteSampling::UniformLayer,
         replay: true,
+        gate: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 64, fi);
     let dir = std::env::temp_dir().join(format!("deepaxe_dse_{}", std::process::id()));
@@ -94,6 +96,7 @@ fn pareto_front_on_real_sweep() {
         workers: 1,
         sampling: SiteSampling::UniformLayer,
         replay: true,
+        gate: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 100, fi);
     let pts: Vec<_> = enumerate_masks(3)
@@ -124,11 +127,13 @@ fn pipeline_selects_feasible_design() {
             workers: 1,
             sampling: SiteSampling::UniformLayer,
             replay: true,
+            gate: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
         fi_epsilon: 0.0,
         fi_screen: 0,
+        fi_screen_auto: false,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert_eq!(out.accuracy_sweep.len(), 2 * 7 + 1); // 2 mults x 7 nonzero masks + exact
@@ -160,11 +165,13 @@ fn pipeline_infeasible_requirements() {
             workers: 1,
             sampling: SiteSampling::UniformLayer,
             replay: true,
+            gate: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
         fi_epsilon: 0.0,
         fi_screen: 0,
+        fi_screen_auto: false,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert!(out.fi_points.is_empty());

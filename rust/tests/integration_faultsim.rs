@@ -13,6 +13,7 @@ fn params(n_faults: usize, n_images: usize, replay: bool) -> CampaignParams {
         workers: 2,
         sampling: SiteSampling::UniformLayer,
         replay,
+        gate: true,
     }
 }
 
@@ -26,6 +27,32 @@ fn replay_equals_naive_on_real_net() {
     let slow = run_campaign(&engine, &data, &params(24, 20, false));
     assert_eq!(fast.acc_per_fault, slow.acc_per_fault);
     assert_eq!(fast.base_acc, slow.base_acc);
+}
+
+#[test]
+fn convergence_gate_bit_identical_on_real_nets() {
+    // the PR 3 acceptance criterion on real artifacts: gated replay ==
+    // ungated replay == naive forwards, for exact and approximated
+    // configurations, with the gate's savings visible in the stats
+    let ctx = common::ctx();
+    for (net_name, mult) in [("mlp3", "exact"), ("lenet5", "mul8s_1kvp_s")] {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let engine = Engine::uniform(&net, &ctx.luts[mult]);
+        let gated = run_campaign(&engine, &data, &params(24, 20, true));
+        let mut off = params(24, 20, true);
+        off.gate = false;
+        let ungated = run_campaign(&engine, &data, &off);
+        let naive = run_campaign(&engine, &data, &params(24, 20, false));
+        assert_eq!(gated.acc_per_fault, ungated.acc_per_fault, "{net_name}");
+        assert_eq!(gated.acc_per_fault, naive.acc_per_fault, "{net_name}");
+        assert_eq!(gated.mean_fault_acc, naive.mean_fault_acc, "{net_name}");
+        assert_eq!(gated.ci95, naive.ci95, "{net_name}");
+        // same inferences, never more re-simulated layers
+        assert_eq!(gated.replay.inferences, ungated.replay.inferences);
+        assert!(gated.replay.replayed_layers <= ungated.replay.replayed_layers);
+        assert_eq!(gated.replay.depth_hist.iter().sum::<u64>(), gated.replay.inferences);
+    }
 }
 
 #[test]

@@ -72,6 +72,7 @@ fn campaign_clamps_oversized_subset() {
         workers: 1,
         sampling: deepaxe::faultsim::SiteSampling::UniformLayer,
         replay: true,
+        gate: true,
     };
     let r = deepaxe::faultsim::run_campaign(&engine, &data, &params);
     assert_eq!(r.n_images, data.len());
@@ -107,6 +108,40 @@ fn config_string_roundtrips_masks() {
             let s = net.config_string(mask);
             let back = deepaxe::dse::mask_from_config_string(&s).unwrap();
             assert_eq!(back, mask, "{name} {s}");
+        }
+    });
+}
+
+#[test]
+fn property_convergence_gated_replay_matches_full_forward() {
+    // for random sites on a real net, the gated replay's prediction must
+    // equal the naive faulted forward's, and a convergence exit must
+    // imply the clean prediction
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap().take(8);
+    let engine = Engine::uniform(&net, &ctx.luts["mul8s_1kvp_s"]);
+    let mut buf = Buffers::for_net(&net);
+    check("gated replay == full forward", 0x6A7E, 40, |rng| {
+        let i = rng.usize_below(data.len());
+        let tr = engine.trace(data.image(i), &mut buf);
+        let layer = rng.usize_below(net.n_comp());
+        let neuron = rng.usize_below(net.comp(layer).act_len());
+        let bit = rng.below(8) as u8;
+        let mut act = tr.acts[layer].clone();
+        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+        let gated = engine.replay_from(layer, &act, &tr, true, &mut buf);
+        let ungated = engine.replay_from(layer, &act, &tr, false, &mut buf);
+        let full = engine.forward(
+            data.image(i),
+            Some(deepaxe::simnet::FaultSite { layer, neuron, bit }),
+            &mut buf,
+        );
+        assert_eq!(gated.pred, deepaxe::simnet::argmax_i8(&full));
+        assert_eq!(gated.pred, ungated.pred);
+        assert_eq!(ungated.depth, net.n_comp() - 1 - layer);
+        if gated.converged {
+            assert_eq!(gated.pred, tr.pred, "convergence implies the clean prediction");
         }
     });
 }

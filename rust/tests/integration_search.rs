@@ -24,6 +24,7 @@ fn fi_params(n_faults: usize, n_images: usize, seed: u64) -> CampaignParams {
         workers: 1,
         sampling: SiteSampling::UniformLayer,
         replay: true,
+        gate: true,
     }
 }
 
@@ -247,6 +248,7 @@ fn pipeline_dispatches_heuristic_strategy() {
         budget: 10,
         fi_epsilon: 0.0,
         fi_screen: 0,
+        fi_screen_auto: false,
     };
     let out = run_pipeline(&ctx, &spec).unwrap();
     assert!(out.evals_used <= 10);

@@ -23,6 +23,11 @@ echo "== tier-1: cargo test -q =="
 # tests run regardless.
 cargo test -q
 
+echo "== tier-1: cargo bench --no-run =="
+# Benches are harness-less binaries that only run with artifacts present;
+# compiling them here keeps bench_faultsim & friends from silently rotting.
+cargo bench --no-run
+
 if [ "${CI_SKIP_FMT:-0}" != "1" ]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== style: cargo fmt --check =="
