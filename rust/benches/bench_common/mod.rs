@@ -5,7 +5,22 @@
 //! DEEPAXE_EVAL_IMAGES).
 
 use deepaxe::coordinator::Ctx;
+use deepaxe::util::json;
 use std::path::PathBuf;
+
+/// One machine-readable JSON line per measurement, with one shared shape
+/// across every bench (`{"bench":..,"config":..,<metric>:..}`) so
+/// `scripts/bench.sh` can collect them into BENCH_<n>.json without
+/// per-bench special cases.
+#[allow(dead_code)]
+pub fn emit(bench: &str, config: &str, metric: &str, value: f64) {
+    let j = json::obj(vec![
+        ("bench", json::str(bench)),
+        ("config", json::str(config)),
+        (metric, json::num(value)),
+    ]);
+    println!("{j}");
+}
 
 pub fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")

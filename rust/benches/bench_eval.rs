@@ -11,19 +11,10 @@ use deepaxe::eval::{Fidelity, FidelitySpec, StagedBackend, StagedEvaluator};
 use deepaxe::faultsim::CampaignParams;
 use deepaxe::report::experiments::default_eval_images;
 use deepaxe::search::{run_search, Genotype, NoCache, SearchSpace, SearchSpec, Strategy};
+use bench_common::emit;
 use deepaxe::util::bench::black_box;
-use deepaxe::util::json;
 use deepaxe::util::rng::Rng;
 use std::time::Instant;
-
-fn emit(bench: &str, tier: &str, value_name: &str, value: f64) {
-    let j = json::obj(vec![
-        ("bench", json::str(bench)),
-        ("tier", json::str(tier)),
-        (value_name, json::num(value)),
-    ]);
-    println!("{j}");
-}
 
 fn main() {
     let ctx = bench_common::setup(60, 40, 100);
@@ -86,4 +77,14 @@ fn main() {
     );
     emit("bench_eval_search", "staged", "points_per_campaign", points_per_campaign);
     emit("bench_eval_search", "staged", "points_per_s", out.evals_used as f64 / dt.max(1e-9));
+    // prefix-trace memoization + delta-patch savings across the run
+    emit("bench_eval_search", "staged", "prefix_hits", screened_ev.ledger().prefix_hits() as f64);
+    emit(
+        "bench_eval_search",
+        "staged",
+        "prefix_layers_reused",
+        screened_ev.ledger().prefix_layers_reused() as f64,
+    );
+    emit("bench_eval_search", "staged", "trace_builds", screened_ev.ledger().trace_builds() as f64);
+    emit("bench_eval_search", "staged", "delta_replays", screened_ev.ledger().delta_replays() as f64);
 }

@@ -1,25 +1,22 @@
 //! Fault-injection hot-path harness: faults/s, faulty inferences/s, mean
-//! replay depth and masked fraction on LeNet-5 with the convergence gate
-//! on vs off, plus the naive full-forward baseline. The gate-on and
-//! gate-off campaigns must agree bit-for-bit (asserted here, not just in
-//! unit tests) — the gate buys speed, never accuracy. Emits one JSON line
-//! per measurement so BENCH_*.json tooling can track the speedup.
+//! replay depth and masked fraction on LeNet-5 with the delta patch and
+//! the convergence gate on vs off, plus the naive full-forward baseline.
+//! Every configuration must agree bit-for-bit (asserted here, not just in
+//! unit tests) — delta and gate buy speed, never accuracy. The headline
+//! ratio is delta-on vs delta-off: the first-suffix-layer GEMM is the one
+//! cost the convergence gate can never skip, and the delta patch removes
+//! it. Emits one JSON line per measurement so BENCH_*.json tooling can
+//! track the speedup.
 
 mod bench_common;
 
 use deepaxe::faultsim::{run_campaign, CampaignParams};
 use deepaxe::simnet::Engine;
 use deepaxe::util::bench::black_box;
-use deepaxe::util::json;
 use std::time::Instant;
 
 fn emit(config: &str, metric: &str, value: f64) {
-    let j = json::obj(vec![
-        ("bench", json::str("bench_faultsim")),
-        ("config", json::str(config)),
-        (metric, json::num(value)),
-    ]);
-    println!("{j}");
+    bench_common::emit("bench_faultsim", config, metric, value);
 }
 
 fn main() {
@@ -45,10 +42,14 @@ fn main() {
     let engine = Engine::new(&net, luts);
 
     let mut reference: Option<Vec<f64>> = None;
-    for (label, replay, gate) in
-        [("gate-on", true, true), ("gate-off", true, false), ("naive", false, false)]
-    {
-        let params = CampaignParams { replay, gate, ..base.clone() };
+    let mut rate: std::collections::HashMap<&str, f64> = std::collections::HashMap::new();
+    for (label, replay, gate, delta) in [
+        ("delta-on", true, true, true),
+        ("delta-off", true, true, false),
+        ("gate-off", true, false, false),
+        ("naive", false, false, false),
+    ] {
+        let params = CampaignParams { replay, gate, delta, ..base.clone() };
         let t0 = Instant::now();
         let r = black_box(run_campaign(&engine, &data, &params));
         let dt = t0.elapsed().as_secs_f64().max(1e-9);
@@ -56,16 +57,28 @@ fn main() {
             None => reference = Some(r.acc_per_fault.clone()),
             Some(ref_accs) => assert_eq!(
                 &r.acc_per_fault, ref_accs,
-                "{label} must be bit-identical to the gated campaign"
+                "{label} must be bit-identical to the delta campaign"
             ),
+        }
+        if delta {
+            assert!(r.delta_replays > 0, "delta-on must actually patch");
+        } else {
+            assert_eq!(r.delta_replays, 0, "{label} must not take the delta path");
         }
         let faults_per_s = r.n_faults as f64 / dt;
         let inferences_per_s = (r.n_faults * r.n_images) as f64 / dt;
+        rate.insert(label, faults_per_s);
+        let delta_pct = if r.replay.inferences > 0 {
+            r.delta_replays as f64 / r.replay.inferences as f64 * 100.0
+        } else {
+            0.0
+        };
         println!(
-            "bench faultsim:{label:<8} {:6.2}s = {faults_per_s:8.2} faults/s ({inferences_per_s:9.0} faulty inferences/s), mean replay depth {:.3}, {:.1}% masked",
+            "bench faultsim:{label:<9} {:6.2}s = {faults_per_s:8.2} faults/s ({inferences_per_s:9.0} faulty inferences/s), mean replay depth {:.3}, {:.1}% masked, {:.1}% delta-patched",
             dt,
             r.replay.mean_depth(),
             r.replay.masked_fraction() * 100.0,
+            delta_pct,
         );
         if r.replay.inferences > 0 {
             let hist: Vec<String> = r
@@ -81,5 +94,11 @@ fn main() {
         emit(label, "inferences_per_s", inferences_per_s);
         emit(label, "mean_replay_depth", r.replay.mean_depth());
         emit(label, "masked_fraction", r.replay.masked_fraction());
+        emit(label, "delta_patched_fraction", delta_pct / 100.0);
     }
+    // the first-suffix-layer cost drop: same gate, same results, the only
+    // difference is patch-vs-GEMM on the fault's first suffix layer
+    let speedup = rate["delta-on"] / rate["delta-off"].max(1e-12);
+    println!("bench faultsim: delta on/off speedup {speedup:.2}x (first-suffix-layer patch)");
+    emit("delta-on", "delta_speedup_vs_off", speedup);
 }

@@ -11,6 +11,12 @@ use deepaxe::simnet::{Buffers, Engine};
 use deepaxe::util::bench::{bench, black_box};
 use deepaxe::util::rng::Rng;
 
+/// One JSON line per measurement so `scripts/bench.sh` can collect the
+/// hot-path numbers into BENCH_<n>.json alongside the campaign benches.
+fn emit(config: &str, metric: &str, value: f64) {
+    bench_common::emit("bench_hotpath", config, metric, value);
+}
+
 /// The pre-optimization kernel (single-k inner loop), kept for an
 /// in-process A/B so the §Perf speedup is measured independent of host
 /// frequency drift between runs.
@@ -75,6 +81,7 @@ fn main() {
             black_box(&out);
         });
         println!("  -> {:.1} M lookups/s", macs / r.mean_s / 1e6);
+        emit(label, "mlookups_per_s", macs / r.mean_s / 1e6);
     }
 
     // --- whole-net inference ----------------------------------------------
@@ -93,6 +100,7 @@ fn main() {
             r.mean_s / 8.0 * 1e3,
             net.total_macs() as f64 * 8.0 / r.mean_s / 1e6
         );
+        emit(name, "ms_per_inference", r.mean_s / 8.0 * 1e3);
     }
 
     // --- FI campaign: layer-replay ON vs OFF (the §Perf headline) ---------
@@ -108,6 +116,7 @@ fn main() {
             sampling: SiteSampling::UniformLayer,
             replay,
             gate: true,
+            delta: true,
         };
         let r = bench(&format!("fi_campaign:lenet5:{label}"), 0, 3, || {
             black_box(run_campaign(&engine, &data, &params));
@@ -116,6 +125,7 @@ fn main() {
             "  -> {:.1} faulty inferences/s",
             (24.0 * 24.0) / r.mean_s
         );
+        emit(label, "faulty_inferences_per_s", (24.0 * 24.0) / r.mean_s);
     }
 
     // --- PJRT executable throughput ----------------------------------------

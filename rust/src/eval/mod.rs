@@ -38,6 +38,15 @@
 //!    accuracies are prefix-pure, so resumption is bit-identical to a
 //!    fresh full campaign; the saved work is visible in the
 //!    [`FiLedger`]'s `trace_builds`/`resumed_faults` counters.
+//! 5. **Exact-prefix trace memoization across genotypes** — the trace
+//!    cache is keyed by the *per-layer* LUT assignment, so a fresh
+//!    campaign inherits the clean activations and accumulators of the
+//!    longest prefix any cached genotype shares with it (trie-style
+//!    longest match) and re-traces only the differing suffix layers.
+//!    Those prefix layers are a pure function of the shared assignment,
+//!    so reuse is bit-identical; `prefix_hits`/`prefix_layers_reused`
+//!    count the saved work, and [`crate::search::driver`] dispatches
+//!    batches in lexicographic genotype order to maximize the locality.
 //!
 //! With `epsilon_pp = 0` and screening disabled the ladder degenerates to
 //! the historical path bit-for-bit (asserted by tests in [`staged`]).

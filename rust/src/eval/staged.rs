@@ -2,16 +2,20 @@
 //! CI-gated campaigns behind the [`Fidelity`] ladder, with a byte-budgeted
 //! trace cache that makes screen→full promotion zero-rework (the promoted
 //! campaign *resumes* from its screen prefix instead of re-tracing and
-//! re-simulating it).
+//! re-simulating it) and doubles as an exact-prefix memo across
+//! *genotypes*: the cache is keyed by the per-layer LUT assignment, and a
+//! fresh campaign inherits the clean activations/accumulators of the
+//! longest prefix any cached genotype shares with it (trie-style longest
+//! match) instead of re-tracing every image from the input layer.
 
 use super::{FiGate, Fidelity, FidelitySpec};
 use crate::dse::{DesignPoint, Evaluator, FiEstimate};
-use crate::faultsim::{sample_sites, Campaign, ReplayStats};
-use crate::simnet::FaultSite;
+use crate::faultsim::{sample_sites, Campaign, ReplayStats, TracePrefix};
+use crate::simnet::{CleanTrace, Engine, FaultSite};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Why a campaign stopped before exhausting its site list.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,6 +49,14 @@ pub struct FiLedger {
     resumed_campaigns: AtomicU64,
     /// prefix faults whose re-simulation the resume skipped
     resumed_faults: AtomicU64,
+    /// campaigns whose clean traces were built from another genotype's
+    /// cached layer prefix (exact-prefix memoization)
+    prefix_hits: AtomicU64,
+    /// computing-layer trace evaluations the prefix reuse skipped
+    /// (Σ shared-prefix-length × images per hit)
+    prefix_layers_reused: AtomicU64,
+    /// fault×image inferences served by the delta-patch fast path
+    delta_replays: AtomicU64,
     /// replay-path aggregates (see [`ReplayStats`])
     replay_inferences: AtomicU64,
     masked_inferences: AtomicU64,
@@ -104,6 +116,17 @@ impl FiLedger {
         self.resumed_faults.fetch_add(prefix_faults as u64, Ordering::Relaxed);
     }
 
+    fn record_prefix(&self, layers: usize, images: usize) {
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        self.prefix_layers_reused.fetch_add((layers * images) as u64, Ordering::Relaxed);
+    }
+
+    fn record_delta(&self, replays: u64) {
+        if replays > 0 {
+            self.delta_replays.fetch_add(replays, Ordering::Relaxed);
+        }
+    }
+
     fn record_pilot(&self, faults: usize, replay: &ReplayStats) {
         self.pilot_faults.fetch_add(faults as u64, Ordering::Relaxed);
         self.merge_replay(replay);
@@ -146,6 +169,24 @@ impl FiLedger {
     /// Prefix faults whose re-simulation resuming skipped.
     pub fn resumed_faults(&self) -> u64 {
         self.resumed_faults.load(Ordering::Relaxed)
+    }
+
+    /// Campaigns whose clean traces were completed from another
+    /// genotype's cached layer prefix instead of re-tracing from the
+    /// image.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits.load(Ordering::Relaxed)
+    }
+
+    /// Computing-layer trace evaluations the prefix reuse skipped
+    /// (Σ shared-prefix-length × campaign images).
+    pub fn prefix_layers_reused(&self) -> u64 {
+        self.prefix_layers_reused.load(Ordering::Relaxed)
+    }
+
+    /// Fault×image inferences served by the delta-patch fast path.
+    pub fn delta_replays(&self) -> u64 {
+        self.delta_replays.load(Ordering::Relaxed)
     }
 
     /// Fault×image inferences that went through the replay path.
@@ -197,32 +238,46 @@ impl FiLedger {
         } else {
             0.0
         };
+        let delta_pct = if self.replay_inferences() > 0 {
+            self.delta_replays() as f64 / self.replay_inferences() as f64 * 100.0
+        } else {
+            0.0
+        };
         format!(
-            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built, {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}",
+            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built ({} prefix_hits, {} prefix_layers_reused), {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}, {:.1}% delta-patched",
             self.screen_campaigns(),
             self.full_campaigns(),
             self.total_faults(),
             self.full_equivalents(campaign_faults),
             self.early_stops(),
             self.trace_builds(),
+            self.prefix_hits(),
+            self.prefix_layers_reused(),
             self.resumed_campaigns(),
             self.resumed_faults(),
             masked_pct,
             self.mean_replay_depth(),
+            delta_pct,
         )
     }
 }
 
-/// Byte-budgeted LRU of live screen-tier campaigns keyed by genotype.
-/// Each entry holds a [`Campaign`] whose clean traces and evaluated
-/// prefix a later promotion can resume, skipping the trace computation
-/// and the prefix re-simulation entirely.
+/// Byte-budgeted LRU of live screen-tier campaigns keyed by the
+/// *per-layer* LUT assignment. Each entry holds a [`Campaign`] whose
+/// clean traces and evaluated prefix a later promotion can resume
+/// (exact-key [`take`](TraceCache::take)), and whose traces double as a
+/// prefix donor for *other* genotypes sharing the first `p` computing
+/// layers ([`prefix_clone`](TraceCache::prefix_clone), trie-style
+/// longest match over the flat table): those layers' clean activations
+/// and accumulators are a pure function of the shared prefix, so a new
+/// campaign can inherit them instead of re-tracing from the image.
 struct TraceCache {
     cap_bytes: usize,
     bytes: usize,
     tick: u64,
-    /// key -> (last-use tick, byte size at insert, parked campaign)
-    entries: HashMap<String, (u64, usize, Campaign)>,
+    /// per-layer assignment -> (last-use tick, byte size at insert,
+    /// parked campaign)
+    entries: HashMap<Vec<String>, (u64, usize, Campaign)>,
 }
 
 impl TraceCache {
@@ -231,17 +286,57 @@ impl TraceCache {
     }
 
     /// Remove and return the campaign for `key`, if cached.
-    fn take(&mut self, key: &str) -> Option<Campaign> {
+    fn take(&mut self, key: &[String]) -> Option<Campaign> {
         let (_, sz, c) = self.entries.remove(key)?;
         self.bytes -= sz.min(self.bytes);
         Some(c)
+    }
+
+    /// Pick the cached campaign sharing the longest per-layer assignment
+    /// prefix with `names` (at least one layer, at most `names.len() - 1`
+    /// so there is always a suffix to re-simulate; ties go to the most
+    /// recently used entry) and return a cheap [`Arc`] handle to its
+    /// clean traces plus the shared prefix length. Reads without removing
+    /// — the donor stays parked for its own promotion — and does **no**
+    /// deep copying, so callers can hold the cache lock only for this
+    /// scan and run the expensive [`TracePrefix::from_traces`] copy
+    /// outside the critical section (the handle keeps the traces alive
+    /// even if the donor is evicted or resumed meanwhile).
+    fn prefix_handle(
+        &mut self,
+        names: &[String],
+        n_images: usize,
+    ) -> Option<(usize, Arc<Vec<CleanTrace>>)> {
+        let mut best: Option<(usize, u64, Vec<String>)> = None;
+        for (key, (tick, _, c)) in &self.entries {
+            if c.n_images() != n_images {
+                continue;
+            }
+            let p = key
+                .iter()
+                .zip(names)
+                .take_while(|(a, b)| *a == *b)
+                .count()
+                .min(names.len().saturating_sub(1));
+            if p == 0 {
+                continue;
+            }
+            if best.as_ref().map_or(true, |&(bp, bt, _)| (p, *tick) > (bp, bt)) {
+                best = Some((p, *tick, key.clone()));
+            }
+        }
+        let (p, _, key) = best?;
+        let entry = self.entries.get_mut(&key).expect("winner still cached");
+        self.tick += 1;
+        entry.0 = self.tick; // donating is a use for LRU purposes
+        Some((p, entry.2.traces_handle()))
     }
 
     /// Park a campaign, evicting least-recently-used entries until the
     /// byte budget holds. A campaign bigger than the whole budget (or a
     /// zero budget) is simply dropped — caching is an optimization, never
     /// a correctness requirement.
-    fn insert(&mut self, key: String, campaign: Campaign) {
+    fn insert(&mut self, key: Vec<String>, campaign: Campaign) {
         let sz = campaign.approx_bytes();
         if sz > self.cap_bytes {
             return;
@@ -353,6 +448,7 @@ impl<'a> StagedEvaluator<'a> {
             c.advance(&engine, pilot);
             c.stop();
             self.ledger.record_pilot(c.evaluated(), c.replay_stats());
+            self.ledger.record_delta(c.delta_replays());
             let target_pp = if self.spec.epsilon_pp > 0.0 { self.spec.epsilon_pp } else { 1.0 };
             let sigma_pp = c.std() * 100.0;
             let want = ((1.959964 * sigma_pp / target_pp).powi(2)).ceil() as usize;
@@ -363,9 +459,37 @@ impl<'a> StagedEvaluator<'a> {
             );
             // the exact configuration is a warm-start seed in every
             // strategy — park the pilot so its screen resumes this state
-            self.trace_cache.lock().unwrap().insert(names.join("/"), c);
+            let key: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+            self.trace_cache.lock().unwrap().insert(key, c);
             n
         })
+    }
+
+    /// Construct a fresh campaign for `key`, inheriting the longest
+    /// clean-trace prefix any cached genotype shares with it (two
+    /// assignments agreeing on their first `p` computing layers share
+    /// those layers' clean activations and accumulators bit-for-bit, so
+    /// only layers `p..` are re-traced per image). Trace-cache state can
+    /// never change a result — the inherited prefix is exactly what a
+    /// fresh trace would recompute — only how much of the forward pass is
+    /// repeated; the saved work is visible in the ledger's
+    /// `prefix_hits` / `prefix_layers_reused` counters.
+    fn build_campaign(&self, engine: &Engine, key: &[String]) -> Campaign {
+        self.ledger.record_trace_build();
+        let want_accs = self.ev.fi.replay && self.ev.fi.delta;
+        let n_images = self.ev.fi.n_images.min(self.ev.data.len());
+        // hold the cache lock only for the donor scan; the deep prefix
+        // copy and the suffix re-trace both run outside it
+        let handle = self.trace_cache.lock().unwrap().prefix_handle(key, n_images);
+        let pref = handle
+            .and_then(|(p, traces)| TracePrefix::from_traces(&traces, p, want_accs).map(|d| (p, d)));
+        match pref {
+            Some((p, prefixes)) => {
+                self.ledger.record_prefix(p, prefixes.len());
+                Campaign::from_prefix(engine, self.ev.data, &self.ev.fi, self.sites.clone(), prefixes)
+            }
+            None => Campaign::new(engine, self.ev.data, &self.ev.fi, self.sites.clone()),
+        }
     }
 
     /// Evaluate one assignment at the given fidelity. `gate` (optional)
@@ -398,23 +522,25 @@ impl<'a> StagedEvaluator<'a> {
         // the gate compares against utilization, which is analytic — fetch
         // it up front only when a gate is active
         let util_pct = gate.map(|_| self.ev.assignment_hw(names).util_pct);
-        let key = names.join("/");
+        let key: Vec<String> = names.iter().map(|s| s.to_string()).collect();
         // promotion fast path: a screen-tier evaluation of this genotype
         // left its live campaign in the trace cache — resume it instead
         // of re-tracing the clean activations and re-simulating the
-        // prefix (bit-identical: per-fault accuracies are prefix-pure)
-        let mut campaign = match self.trace_cache.lock().unwrap().take(&key) {
+        // prefix (bit-identical: per-fault accuracies are prefix-pure).
+        // `take` is bound to a local first: a match scrutinee would keep
+        // the MutexGuard alive across the None arm, deadlocking against
+        // build_campaign's own cache lock.
+        let parked = self.trace_cache.lock().unwrap().take(&key);
+        let mut campaign = match parked {
             Some(c) => {
                 self.ledger.record_resume(c.evaluated());
                 c
             }
-            None => {
-                self.ledger.record_trace_build();
-                Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites.clone())
-            }
+            None => self.build_campaign(&engine, &key),
         };
         let resumed_at = campaign.evaluated();
         let stats_at_entry = campaign.replay_stats().clone();
+        let deltas_at_entry = campaign.delta_replays();
         let block = self.spec.block.max(1);
         // epsilon 0 is the bit-for-bit switch: it disables *all* early
         // stopping, the dominance gate included — campaigns always run
@@ -456,6 +582,7 @@ impl<'a> StagedEvaluator<'a> {
         }
         let delta = campaign.replay_stats().minus(&stats_at_entry);
         self.ledger.record(fidelity, campaign.evaluated() - resumed_at, stopped, &delta);
+        self.ledger.record_delta(campaign.delta_replays() - deltas_at_entry);
         let est = FiEstimate::from_campaign(&campaign.result());
         // a screen-tier prefix is live state worth keeping: promotion of
         // this genotype will resume it instead of starting over
@@ -523,7 +650,12 @@ mod tests {
             sampling: SiteSampling::UniformLayer,
             replay: true,
             gate: true,
+            delta: true,
         }
+    }
+
+    fn key_of(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
     }
 
     #[test]
@@ -728,9 +860,118 @@ mod tests {
         assert_eq!(cache.len(), 1, "budget for one campaign must hold one");
         assert!(cache.bytes <= cache.cap_bytes);
         assert!(
-            cache.entries.contains_key("exact/mul8s_1kv8_s"),
+            cache.entries.contains_key(&key_of(&["exact", "mul8s_1kv8_s"])),
             "the most recent entry survives"
         );
+    }
+
+    #[test]
+    fn prefix_sharing_reuses_clean_traces_across_genotypes() {
+        // two genotypes agreeing on layer 0 share that layer's clean
+        // activations/accumulators: the second campaign inherits them from
+        // the first's parked screen campaign instead of re-tracing from
+        // the image — with bit-identical results either way
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+        let a = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        assert_eq!(st.ledger().prefix_hits(), 0, "empty cache: nothing to donate");
+        let b = st.evaluate(&["mul8s_1kvp_s", "mul8s_1kv8_s"], Fidelity::FiScreen, None);
+        assert_eq!(st.ledger().prefix_hits(), 1);
+        // 1 shared computing layer x 24 campaign images
+        assert_eq!(st.ledger().prefix_layers_reused(), 24);
+        // both campaigns still count as trace builds (the suffix ran)
+        assert_eq!(st.ledger().trace_builds(), 2);
+        // bit-identical to a cold evaluator with the cache disabled
+        let cold = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            trace_cache_mb: 0,
+            ..FidelitySpec::exact()
+        });
+        assert_eq!(a, cold.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None));
+        assert_eq!(
+            b,
+            cold.evaluate(&["mul8s_1kvp_s", "mul8s_1kv8_s"], Fidelity::FiScreen, None)
+        );
+        assert_eq!(cold.ledger().prefix_hits(), 0);
+        let s = st.ledger().summary(48);
+        assert!(s.contains("1 prefix_hits"), "{s}");
+    }
+
+    #[test]
+    fn prefix_sharing_prefers_the_longest_match() {
+        // a three-layer space: donors sharing 2 layers beat donors
+        // sharing 1, and the reused-layer accounting reflects it
+        use crate::simnet::testutil::tiny_conv2;
+        let net = tiny_conv2();
+        let data = {
+            let mut rng = Rng::new(0x3C0);
+            let n = 16;
+            let sz = net.input_len();
+            let d: Vec<i8> = (0..n * sz).map(|_| rng.i8()).collect();
+            let labels: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+            TestSet {
+                name: "fake".into(),
+                x: TensorI8::from_vec(&[n, 1, 5, 5], d),
+                labels,
+            }
+        };
+        let luts = luts();
+        let mut fi = fi_params(32);
+        fi.n_images = 12;
+        let ev = Evaluator::new(&net, &data, &luts, 12, fi);
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 8,
+            ..FidelitySpec::exact()
+        });
+        let _ = st.evaluate(&["exact", "exact", "exact"], Fidelity::FiScreen, None);
+        let _ = st.evaluate(&["exact", "mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        // shares 2 layers with the second donor, 1 with the first
+        let _ = st.evaluate(
+            &["exact", "mul8s_1kvp_s", "mul8s_1kv8_s"],
+            Fidelity::FiScreen,
+            None,
+        );
+        assert_eq!(st.ledger().prefix_hits(), 2);
+        // hit 1: p=1 (exact|*), hit 2: p=2 (exact,kvp|*): (1 + 2) x 12
+        assert_eq!(st.ledger().prefix_layers_reused(), (1 + 2) * 12);
+    }
+
+    #[test]
+    fn multi_genotype_search_run_reports_nonzero_prefix_hits() {
+        // the acceptance criterion: a screened multi-genotype search run
+        // must show prefix reuse (and delta-patched replays) in the
+        // ledger summary
+        use crate::search::{run_search, NoCache, SearchSpace, SearchSpec, Strategy};
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(32));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 8,
+            ..FidelitySpec::exact()
+        });
+        let backend = StagedBackend { st: &st };
+        let space = SearchSpace::new(
+            &net,
+            vec!["exact".into(), "mul8s_1kvp_s".into(), "mul8s_1kv8_s".into()],
+        );
+        let mut spec = SearchSpec::new(Strategy::Nsga2);
+        spec.budget = space.size() as usize;
+        spec.screen = true;
+        let out = run_search(&space, &spec, &backend, &mut NoCache);
+        assert_eq!(out.evals_used, 9, "3 symbols ^ 2 layers, fully covered");
+        let l = st.ledger();
+        assert!(l.prefix_hits() > 0, "{}", l.summary(32));
+        assert!(l.prefix_layers_reused() >= l.prefix_hits() * 24);
+        assert!(l.delta_replays() > 0, "layer-0 faults must take the delta path");
+        let s = l.summary(32);
+        assert!(s.contains("prefix_hits") && s.contains("delta-patched"), "{s}");
     }
 
     #[test]

@@ -20,6 +20,17 @@
 //! accuracies are integer counts over the image set, so the regrouping is
 //! bit-identical to the historical fault-major loop.
 //!
+//! With [`CampaignParams::delta`] (default on, `DEEPAXE_NO_DELTA` off
+//! switch) the clean traces additionally retain each layer's
+//! pre-requantize accumulators and every fault whose layer has a cached
+//! successor accumulator is served by [`Engine::replay_from_delta`]: the
+//! first suffix layer — the one layer the convergence gate can never skip
+//! — is *patched* as a rank-1 update over the clean accumulator instead
+//! of re-running its full GEMM. Bit-identical by construction (i32
+//! accumulation commutes; asserted across the property suite);
+//! [`CampaignResult::delta_replays`] reports how many inferences took the
+//! patch path.
+//!
 //! Campaigns are *resumable*: [`Campaign`] owns the clean traces and a
 //! caller-supplied fault-site list and evaluates faults in blocks
 //! ([`Campaign::advance`]), maintaining a streaming mean/CI so callers —
@@ -40,6 +51,7 @@ use crate::util::progress::Progress;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
+use std::sync::Arc;
 
 /// Campaign sizing and execution knobs.
 ///
@@ -55,6 +67,10 @@ use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
 /// * `DEEPAXE_NO_CONVERGENCE_GATE` — set to disable the convergence gate
 ///   (full-suffix replays; same results, more work — the A/B escape
 ///   hatch).
+/// * `DEEPAXE_NO_DELTA` — set to disable the delta-replay fast path
+///   ([`Engine::replay_from_delta`]: the fault's first suffix layer is
+///   patched out of cached clean accumulators instead of re-running its
+///   full GEMM; same results, more work — the delta A/B escape hatch).
 ///
 /// The fidelity ladder adds two more knobs that live in
 /// [`crate::eval::FidelitySpec`] (not here, so existing `CampaignParams`
@@ -79,6 +95,13 @@ pub struct CampaignParams {
     /// convergence gate on the replay path (ignored when `replay` is
     /// false); default on, `DEEPAXE_NO_CONVERGENCE_GATE` turns it off
     pub gate: bool,
+    /// delta-patch the fault's first suffix layer from cached clean
+    /// accumulators (ignored when `replay` is false); default on,
+    /// `DEEPAXE_NO_DELTA` turns it off. Costs ~4–5× more trace memory
+    /// (i32 accumulators ride along with the i8 activations) in exchange
+    /// for replacing the per-fault O(k·n) first-suffix GEMM with an
+    /// O(n) / O(k²·out_ch) patch; bit-identical either way.
+    pub delta: bool,
 }
 
 impl CampaignParams {
@@ -99,6 +122,7 @@ impl CampaignParams {
             sampling: SiteSampling::UniformLayer,
             replay: true,
             gate: !env_flag("DEEPAXE_NO_CONVERGENCE_GATE"),
+            delta: !env_flag("DEEPAXE_NO_DELTA"),
         }
     }
 }
@@ -182,6 +206,41 @@ impl ReplayStats {
     }
 }
 
+/// Clean-trace prefix (activations + retained accumulators of the first
+/// `p` computing layers) cloned out of a campaign whose genotype shares
+/// those layers' LUT assignment — the currency of the exact-prefix trace
+/// memoization in [`crate::eval::StagedEvaluator`]. One per campaign
+/// image.
+#[derive(Debug, Clone)]
+pub struct TracePrefix {
+    pub acts: Vec<Vec<i8>>,
+    /// empty when the donor did not retain accumulators (delta off)
+    pub accs: Vec<Vec<i32>>,
+}
+
+impl TracePrefix {
+    /// Deep-copy the first `p` computing layers of each donor trace
+    /// (`None` when accumulators are wanted but the donor did not retain
+    /// them). This is the expensive copy of the prefix-sharing path, so
+    /// callers holding a lock should clone a trace handle first and run
+    /// this outside the critical section.
+    pub fn from_traces(traces: &[CleanTrace], p: usize, want_accs: bool) -> Option<Vec<TracePrefix>> {
+        debug_assert!(p >= 1);
+        if want_accs && traces.iter().any(|t| t.accs.len() < p) {
+            return None;
+        }
+        Some(
+            traces
+                .iter()
+                .map(|t| TracePrefix {
+                    acts: t.acts[..p].to_vec(),
+                    accs: if want_accs { t.accs[..p].to_vec() } else { Vec::new() },
+                })
+                .collect(),
+        )
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct CampaignResult {
     /// fault-free accuracy of this engine configuration on the subset
@@ -202,6 +261,11 @@ pub struct CampaignResult {
     /// replay-path statistics (empty when the campaign ran the naive
     /// full-forward path)
     pub replay: ReplayStats,
+    /// fault×image inferences served by the delta-patch fast path (0 when
+    /// `CampaignParams::delta` is off or nothing was patchable). Kept out
+    /// of [`ReplayStats`] so delta-on and delta-off campaigns stay
+    /// bit-comparable on every replay metric.
+    pub delta_replays: u64,
 }
 
 /// A resumable fault campaign over a fixed site list.
@@ -217,22 +281,29 @@ pub struct CampaignResult {
 /// engine for the same configuration.
 pub struct Campaign {
     subset: TestSet,
-    traces: Vec<CleanTrace>,
+    /// Immutable after construction; behind an [`Arc`] so the staged
+    /// evaluator's trace cache can hand out cheap donor handles under its
+    /// lock and deep-copy prefixes outside it.
+    traces: Arc<Vec<CleanTrace>>,
     base_acc: f64,
     sites: Vec<FaultSite>,
     replay: bool,
     gate: bool,
+    delta: bool,
     workers: usize,
     acc_per_fault: Vec<f64>,
     stream: stats::Streaming,
     replay_stats: ReplayStats,
+    delta_replays: u64,
     progress: Progress,
 }
 
 impl Campaign {
     /// Trace the clean activations and bind `sites` (typically a shared
     /// sample from [`crate::eval::StagedEvaluator`], or a fresh per-point
-    /// sample in the legacy [`run_campaign`] path).
+    /// sample in the legacy [`run_campaign`] path). With
+    /// `params.delta` the traces also retain each computing layer's
+    /// pre-requantize accumulator — the delta-replay patch base.
     pub fn new(
         engine: &Engine,
         data: &TestSet,
@@ -240,13 +311,51 @@ impl Campaign {
         sites: Vec<FaultSite>,
     ) -> Campaign {
         let subset = data.take(params.n_images);
-        let n_images = subset.len();
-        assert!(n_images > 0, "empty test subset");
-
+        let retain_accs = params.replay && params.delta;
         let traces: Vec<CleanTrace> = {
             let mut buf = Buffers::for_net(engine.net);
-            (0..n_images).map(|i| engine.trace(subset.image(i), &mut buf)).collect()
+            (0..subset.len())
+                .map(|i| engine.trace_retaining(subset.image(i), retain_accs, &mut buf))
+                .collect()
         };
+        Campaign::assemble(engine, subset, traces, params, sites)
+    }
+
+    /// [`Campaign::new`] with the first `p` computing layers' clean traces
+    /// inherited from another genotype agreeing on those layers (one
+    /// [`TracePrefix`] per image, `p = prefixes[i].acts.len()`). Only
+    /// layers `p..` are re-simulated per image. Bit-identical to a fresh
+    /// construction: the inherited prefix is exactly what the forward
+    /// pass would recompute.
+    pub fn from_prefix(
+        engine: &Engine,
+        data: &TestSet,
+        params: &CampaignParams,
+        sites: Vec<FaultSite>,
+        prefixes: Vec<TracePrefix>,
+    ) -> Campaign {
+        let subset = data.take(params.n_images);
+        assert_eq!(prefixes.len(), subset.len(), "prefix donor must cover the subset");
+        let retain_accs = params.replay && params.delta;
+        let traces: Vec<CleanTrace> = {
+            let mut buf = Buffers::for_net(engine.net);
+            prefixes
+                .into_iter()
+                .map(|pre| engine.trace_from_prefix(pre.acts, pre.accs, retain_accs, &mut buf))
+                .collect()
+        };
+        Campaign::assemble(engine, subset, traces, params, sites)
+    }
+
+    fn assemble(
+        engine: &Engine,
+        subset: TestSet,
+        traces: Vec<CleanTrace>,
+        params: &CampaignParams,
+        sites: Vec<FaultSite>,
+    ) -> Campaign {
+        let n_images = subset.len();
+        assert!(n_images > 0, "empty test subset");
         let base_correct =
             (0..n_images).filter(|&i| traces[i].pred == subset.labels[i] as usize).count();
         let base_acc = base_correct as f64 / n_images as f64;
@@ -257,17 +366,38 @@ impl Campaign {
             Progress::new(&format!("fi:{}", engine.net.name), (sites.len() * n_images) as u64);
         Campaign {
             subset,
-            traces,
+            traces: Arc::new(traces),
             base_acc,
             sites,
             replay: params.replay,
             gate: params.gate,
+            delta: params.delta,
             workers: params.workers.max(1),
             acc_per_fault: Vec::new(),
             stream: stats::Streaming::new(),
             replay_stats: ReplayStats::new(engine.net.n_comp()),
+            delta_replays: 0,
             progress,
         }
+    }
+
+    /// Images in the campaign subset.
+    pub fn n_images(&self) -> usize {
+        self.subset.len()
+    }
+
+    /// Shared handle to this campaign's immutable clean traces — a cheap
+    /// [`Arc`] clone, so a cache can pick a donor under its lock and let
+    /// the caller run the deep [`TracePrefix::from_traces`] copy outside.
+    pub fn traces_handle(&self) -> Arc<Vec<CleanTrace>> {
+        Arc::clone(&self.traces)
+    }
+
+    /// Clone the first `p` computing layers' clean traces for reuse by a
+    /// genotype sharing that LUT-assignment prefix (`None` when
+    /// accumulators are wanted but this campaign did not retain them).
+    pub fn trace_prefix(&self, p: usize, want_accs: bool) -> Option<Vec<TracePrefix>> {
+        TracePrefix::from_traces(&self.traces, p, want_accs)
     }
 
     /// Faults evaluated so far.
@@ -311,6 +441,11 @@ impl Campaign {
         &self.replay_stats
     }
 
+    /// Fault×image inferences served by the delta-patch fast path so far.
+    pub fn delta_replays(&self) -> u64 {
+        self.delta_replays
+    }
+
     /// Approximate heap footprint: what a trace cache pays to keep this
     /// campaign resumable (dominated by the clean traces).
     pub fn approx_bytes(&self) -> usize {
@@ -346,10 +481,11 @@ impl Campaign {
         let images: Vec<usize> = (0..self.subset.len()).collect();
         let replay = self.replay;
         let gate = self.gate;
+        let delta = self.delta;
         let subset = &self.subset;
         let traces = &self.traces;
         let progress = &self.progress;
-        let per_image: Vec<(Vec<bool>, ReplayStats)> = budgeted_map_with(
+        let per_image: Vec<(Vec<bool>, ReplayStats, u64)> = budgeted_map_with(
             WorkerBudget::global(),
             self.workers,
             &images,
@@ -357,19 +493,39 @@ impl Campaign {
             |(buf, act), &img| {
                 let mut correct = vec![false; n];
                 let mut stats = ReplayStats::new(engine.net.n_comp());
+                let mut deltas = 0u64;
                 if replay {
                     let trace = &traces[img];
                     let mut staged = usize::MAX; // layer currently in `act`
                     for &oi in &order {
                         let site = chunk[oi];
-                        if site.layer != staged {
-                            act.clear();
-                            act.extend_from_slice(&trace.acts[site.layer]);
-                            staged = site.layer;
-                        }
-                        act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
-                        let r = engine.replay_from(site.layer, act, trace, gate, buf);
-                        act[site.neuron] = (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                        // delta fast path: patch the first suffix layer
+                        // from the clean accumulators — no staged copy,
+                        // no flip/unflip, no first-suffix GEMM
+                        let r = if delta {
+                            engine.replay_from_delta(site, trace, gate, buf)
+                        } else {
+                            None
+                        };
+                        let r = match r {
+                            Some(r) => {
+                                deltas += 1;
+                                r
+                            }
+                            None => {
+                                if site.layer != staged {
+                                    act.clear();
+                                    act.extend_from_slice(&trace.acts[site.layer]);
+                                    staged = site.layer;
+                                }
+                                act[site.neuron] =
+                                    (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                                let r = engine.replay_from(site.layer, act, trace, gate, buf);
+                                act[site.neuron] =
+                                    (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                                r
+                            }
+                        };
                         stats.record(&r);
                         correct[oi] = r.pred == subset.labels[img] as usize;
                     }
@@ -380,17 +536,18 @@ impl Campaign {
                     }
                 }
                 progress.add(n as u64);
-                (correct, stats)
+                (correct, stats, deltas)
             },
         );
         let mut counts = vec![0usize; n];
-        for (correct, stats) in &per_image {
+        for (correct, stats, deltas) in &per_image {
             for (fi, &c) in correct.iter().enumerate() {
                 if c {
                     counts[fi] += 1;
                 }
             }
             self.replay_stats.merge(stats);
+            self.delta_replays += *deltas;
         }
         let n_images = self.subset.len() as f64;
         for &c in &counts {
@@ -427,6 +584,7 @@ impl Campaign {
             n_faults: self.acc_per_fault.len(),
             n_images: self.subset.len(),
             replay: self.replay_stats.clone(),
+            delta_replays: self.delta_replays,
         }
     }
 }
@@ -478,6 +636,7 @@ mod tests {
             sampling: SiteSampling::UniformLayer,
             replay,
             gate: true,
+            delta: true,
         }
     }
 
@@ -539,6 +698,7 @@ mod tests {
                 sampling: SiteSampling::UniformLayer,
                 replay: true,
                 gate: true,
+                delta: rng.below(2) == 0,
             };
             let gated = run_campaign(&engine, &data, &p);
             let ungated = run_campaign(&engine, &data, &CampaignParams { gate: false, ..p.clone() });
@@ -565,6 +725,131 @@ mod tests {
             };
             assert_eq!(full, expect);
         });
+    }
+
+    #[test]
+    fn property_delta_campaign_bit_identical_across_random_nets() {
+        // satellite: delta == gated replay == naive full forward, with
+        // bit-identical preds AND ReplayStats, across randomized nets,
+        // LUT assignments and fault sites
+        let luts: Vec<_> = ["exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| axmul::by_name(n).unwrap().lut())
+            .collect();
+        check("delta == gated == naive", 0xDE17, 12, |rng| {
+            let net = random_mlp(rng);
+            let assignment: Vec<&axmul::Lut> =
+                (0..net.n_comp()).map(|_| &luts[rng.usize_below(luts.len())]).collect();
+            let engine = Engine::new(&net, assignment);
+            let data = data_for(&net, 6 + rng.usize_below(10), rng.next_u64());
+            let p = CampaignParams {
+                n_faults: 24 + rng.usize_below(24),
+                n_images: data.len(),
+                seed: rng.next_u64(),
+                workers: 1 + rng.usize_below(3),
+                sampling: SiteSampling::UniformLayer,
+                replay: true,
+                gate: rng.below(2) == 0,
+                delta: true,
+            };
+            let with_delta = run_campaign(&engine, &data, &p);
+            let without = run_campaign(&engine, &data, &CampaignParams { delta: false, ..p.clone() });
+            let naive = run_campaign(&engine, &data, &CampaignParams { replay: false, ..p.clone() });
+            assert_eq!(with_delta.acc_per_fault, without.acc_per_fault);
+            assert_eq!(with_delta.acc_per_fault, naive.acc_per_fault);
+            assert_eq!(with_delta.mean_fault_acc, naive.mean_fault_acc);
+            assert_eq!(with_delta.base_acc, naive.base_acc);
+            // the full replay stats — masked counts, depth histogram —
+            // must not move either: the delta path only changes *how* the
+            // first suffix layer is computed, never what it computes
+            assert_eq!(with_delta.replay, without.replay);
+            assert_eq!(without.delta_replays, 0);
+            // every non-final-layer fault is patchable on a dense chain
+            let expected_deltas: u64 = {
+                let mut rng2 = Rng::new(p.seed);
+                let sites = sample_sites(&net, p.n_faults, p.sampling, &mut rng2);
+                sites.iter().filter(|s| s.layer + 1 < net.n_comp()).count() as u64
+                    * data.len() as u64
+            };
+            assert_eq!(with_delta.delta_replays, expected_deltas);
+        });
+    }
+
+    #[test]
+    fn delta_campaign_bit_identical_on_conv_net() {
+        // conv + pool + dense suffixes, including last-computing-layer
+        // faults (never patchable) and padding-edge conv neurons (all
+        // conv-activation neurons are candidate sites)
+        let net = tiny_conv();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = data_for(&net, 20, 0xDEC0);
+        let p = params(true);
+        let with_delta = run_campaign(&engine, &data, &p);
+        let without = run_campaign(&engine, &data, &CampaignParams { delta: false, ..p.clone() });
+        let naive = run_campaign(&engine, &data, &CampaignParams { replay: false, ..p.clone() });
+        assert_eq!(with_delta.acc_per_fault, without.acc_per_fault);
+        assert_eq!(with_delta.acc_per_fault, naive.acc_per_fault);
+        assert_eq!(with_delta.replay, without.replay);
+        assert!(with_delta.delta_replays > 0, "conv->pool->dense faults must be patchable");
+    }
+
+    #[test]
+    fn delta_campaign_with_only_last_layer_faults_falls_back_entirely() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(12);
+        let p = params(true);
+        let last = net.n_comp() - 1;
+        let sites: Vec<FaultSite> = (0..net.comp(last).act_len())
+            .flat_map(|neuron| (0..8u8).map(move |bit| FaultSite { layer: last, neuron, bit }))
+            .collect();
+        let mut with_delta = Campaign::new(&engine, &data, &p, sites.clone());
+        while with_delta.advance(&engine, usize::MAX) > 0 {}
+        let mut without =
+            Campaign::new(&engine, &data, &CampaignParams { delta: false, ..p.clone() }, sites);
+        while without.advance(&engine, usize::MAX) > 0 {}
+        let (a, b) = (with_delta.result(), without.result());
+        assert_eq!(a.acc_per_fault, b.acc_per_fault);
+        assert_eq!(a.replay, b.replay);
+        assert_eq!(a.delta_replays, 0, "last-layer faults have no patchable successor");
+    }
+
+    #[test]
+    fn from_prefix_campaign_is_bit_identical_to_fresh() {
+        // the exact-prefix memoization core: a campaign built from a
+        // donor's layer-0 traces must reproduce the fresh campaign
+        // bit-for-bit (same genotype prefix => same clean state)
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let kvp = axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let donor_engine = Engine::new(&net, vec![&kvp, &exact]);
+        let target_engine = Engine::new(&net, vec![&kvp, &kvp]);
+        let data = fake_data(16);
+        let p = params(true);
+        let mut rng = Rng::new(p.seed);
+        let sites = sample_sites(&net, p.n_faults, p.sampling, &mut rng);
+
+        let donor = Campaign::new(&donor_engine, &data, &p, sites.clone());
+        let prefixes = donor.trace_prefix(1, true).expect("donor retains accs");
+        assert_eq!(prefixes.len(), donor.n_images());
+        let mut shared = Campaign::from_prefix(&target_engine, &data, &p, sites.clone(), prefixes);
+        let mut fresh = Campaign::new(&target_engine, &data, &p, sites);
+        while shared.advance(&target_engine, 16) > 0 {}
+        while fresh.advance(&target_engine, 16) > 0 {}
+        let (a, b) = (shared.result(), fresh.result());
+        assert_eq!(a.acc_per_fault, b.acc_per_fault);
+        assert_eq!(a.base_acc, b.base_acc);
+        assert_eq!(a.replay, b.replay);
+        assert_eq!(a.delta_replays, b.delta_replays);
+        // accs-less donors can still donate act-only prefixes
+        let q = CampaignParams { delta: false, ..params(true) };
+        let mut rng2 = Rng::new(q.seed);
+        let sites2 = sample_sites(&net, 4, q.sampling, &mut rng2);
+        let donor2 = Campaign::new(&donor_engine, &data, &q, sites2);
+        assert!(donor2.trace_prefix(1, true).is_none(), "no accs to donate");
+        assert!(donor2.trace_prefix(1, false).is_some());
     }
 
     #[test]

@@ -6,14 +6,18 @@
 //! accuracy across faults measures *fault vulnerability*
 //! (= AxDNN accuracy − mean faulty accuracy; opposite of resiliency).
 //!
-//! Campaigns run on the convergence-gated layer-replay fast path (see
-//! [`campaign`] and EXPERIMENTS.md §Perf); [`ReplayStats`] reports how
-//! many faults were masked and how deep replays actually ran.
+//! Campaigns run on the convergence-gated, delta-patched layer-replay
+//! fast path (see [`campaign`] and EXPERIMENTS.md §Perf): the first
+//! suffix layer of each fault is reconstructed from cached clean
+//! accumulators as a rank-1 patch, and the replay exits at clean-state
+//! reconvergence. [`ReplayStats`] reports how many faults were masked and
+//! how deep replays actually ran; [`CampaignResult::delta_replays`] how
+//! many inferences took the patch path.
 
 pub mod campaign;
 pub mod permanent;
 
-pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult, ReplayStats};
+pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult, ReplayStats, TracePrefix};
 pub use permanent::{run_stuck_campaign, StuckFault, StuckValue};
 
 use crate::simnet::{FaultSite, QNet};

@@ -65,9 +65,14 @@ FIDELITY LADDER (search/pipeline)
                    clamped to [pilot, campaign faults]
   promotions resume their screen-prefix campaign from a byte-budgeted
   live-trace cache (env DEEPAXE_TRACE_CACHE_MB, default 256, 0 = off) —
-  zero re-trace / re-simulation, bit-identical results. Fault replays are
+  zero re-trace / re-simulation, bit-identical results. The cache is
+  keyed per layer, so genotypes sharing a layer prefix also share those
+  layers' clean traces (exact-prefix memoization). Fault replays are
   convergence-gated (exit at clean-state reconvergence; bit-identical);
-  set DEEPAXE_NO_CONVERGENCE_GATE to force full suffix replays.
+  set DEEPAXE_NO_CONVERGENCE_GATE to force full suffix replays. The
+  first suffix layer of each fault is delta-patched from cached clean
+  accumulators (rank-1 update instead of a full GEMM; bit-identical);
+  set DEEPAXE_NO_DELTA to force full first-suffix GEMMs.
 ";
 
 fn main() {

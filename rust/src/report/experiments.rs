@@ -429,6 +429,7 @@ pub fn ablation_fi_n(ctx: &Ctx) -> Result<String> {
             sampling: crate::faultsim::SiteSampling::UniformLayer,
             replay: true,
             gate: true,
+            delta: true,
         };
         let r = run_campaign(&engine, &data, &params);
         t.row(vec![

@@ -15,6 +15,13 @@
 //! space, every strategy degenerates to the exhaustive sweep — heuristics
 //! can never do worse than exhaustive on spaces they can afford to cover.
 //!
+//! Batch dispatch order: within each batch, cache misses are handed to
+//! the backend in lexicographic genotype order, so genotypes sharing
+//! per-layer assignment prefixes evaluate adjacently and a staged
+//! backend's prefix-keyed trace cache ([`crate::eval::StagedEvaluator`])
+//! reuses their shared clean-trace prefixes. Archive order — and thus
+//! every search output — is independent of the dispatch order.
+//!
 //! Fidelity semantics (the [`crate::eval`] ladder): with screening on
 //! (`SearchSpec::screen`), fresh genotypes are evaluated at
 //! [`Fidelity::FiScreen`] and only archive-frontier survivors are promoted
@@ -423,6 +430,14 @@ impl<'a> Archive<'a> {
             // gates hopeless campaigns — both this layer and the campaign
             // workers inside the backend lease from the shared budget
             if !misses.is_empty() {
+                // lexicographic dispatch order maximizes prefix locality:
+                // genotypes sharing the longest per-layer prefixes run
+                // adjacently, so a staged backend's trace cache can hand
+                // each campaign the longest clean-trace prefix a
+                // just-finished neighbor left behind. Results are mapped
+                // back by index, so the archive order (and every output)
+                // is unchanged.
+                misses.sort_by(|a, b| a.1.cmp(&b.1));
                 let gate =
                     if backend.wants_gate() { self.gate() } else { FiGate::default() };
                 let space = self.space;

@@ -13,9 +13,17 @@
 //! Exiting there keeps results bit-identical to the full replay while
 //! making the average fault cost sublinear in network depth (most
 //! single-bit activation flips are masked within one or two layers).
+//!
+//! On top of the gate, the *delta* entry point
+//! ([`Engine::replay_from_delta`]) removes the one cost the gate cannot:
+//! the full GEMM of the fault's first suffix layer. A single bit-flip is
+//! a rank-1 perturbation, so that layer's accumulator is reconstructed
+//! from the cached clean accumulators ([`CleanTrace::accs`]) with an
+//! O(n) / O(k²·out_ch) patch ([`super::gemm::gemm_lut_delta`],
+//! [`super::layers::pixel_patch_positions`]) instead of O(k·n) gathers.
 
-use super::gemm::gemm_lut_bias;
-use super::layers::{im2col, maxpool, requantize_slice, rows_to_chw};
+use super::gemm::{gemm_lut_bias, gemm_lut_delta};
+use super::layers::{im2col, maxpool, pixel_patch_positions, requantize_slice, rows_to_chw};
 use super::{CompKind, Layer, QNet};
 use crate::axmul::Lut;
 
@@ -37,6 +45,9 @@ pub struct Buffers {
     cols: Vec<i8>,
     acc: Vec<i32>,
     rows_q: Vec<i8>,
+    /// (output position, patch column) scratch for the delta-replay conv
+    /// patch ([`Engine::replay_from_delta`])
+    patch: Vec<(usize, usize)>,
 }
 
 impl Buffers {
@@ -63,24 +74,41 @@ impl Buffers {
             cols: vec![0; max_cols],
             acc: vec![0; max_acc],
             rows_q: vec![0; max_acc],
+            patch: Vec::new(),
         }
     }
 }
 
 /// Per-image clean activations of every computing layer (layer-replay
-/// cache for fault campaigns).
+/// cache for fault campaigns), optionally with each layer's pre-requantize
+/// accumulator (the delta-replay patch base).
 #[derive(Debug, Clone)]
 pub struct CleanTrace {
     /// acts[ci] = activation output of computing layer ci
     pub acts: Vec<Vec<i8>>,
+    /// accs[ci] = pre-requantize i32 accumulator of computing layer ci in
+    /// GEMM row layout (dense: `[n]`; conv: `[(oy*ow + ox) * n + ni]`,
+    /// i.e. position-major *before* the CHW transpose), bias included.
+    /// Empty when the trace was taken without accumulator retention, and
+    /// `accs[0]` is always empty — faults sit on activations, so layer 0
+    /// is never the patched successor of a fault site.
+    pub accs: Vec<Vec<i32>>,
     pub logits: Vec<i8>,
     pub pred: usize,
 }
 
 impl CleanTrace {
-    /// Heap footprint (trace-cache byte accounting).
+    /// Heap footprint (trace-cache byte accounting). The retained i32
+    /// accumulator rows are 4× the size of the i8 activations, so they
+    /// must be charged here or the `DEEPAXE_TRACE_CACHE_MB` budget would
+    /// silently overshoot several-fold.
     pub fn approx_bytes(&self) -> usize {
         self.acts.iter().map(|a| a.len() + std::mem::size_of::<Vec<i8>>()).sum::<usize>()
+            + self
+                .accs
+                .iter()
+                .map(|a| a.len() * std::mem::size_of::<i32>() + std::mem::size_of::<Vec<i32>>())
+                .sum::<usize>()
             + self.logits.len()
             + std::mem::size_of::<CleanTrace>()
     }
@@ -132,15 +160,79 @@ impl<'a> Engine<'a> {
 
     /// Forward one image; optional fault; returns the int8 logits.
     pub fn forward(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> Vec<i8> {
-        self.run(image, fault, buf, None)
+        self.run(image, fault, buf, None, None)
     }
 
     /// Forward and also record each computing layer's clean activation.
     pub fn trace(&self, image: &[i8], buf: &mut Buffers) -> CleanTrace {
+        self.trace_retaining(image, false, buf)
+    }
+
+    /// [`trace`](Engine::trace), optionally also retaining each computing
+    /// layer's pre-requantize i32 accumulator (see [`CleanTrace::accs`]) —
+    /// the patch base [`replay_from_delta`](Engine::replay_from_delta)
+    /// needs.
+    pub fn trace_retaining(&self, image: &[i8], retain_accs: bool, buf: &mut Buffers) -> CleanTrace {
         let mut acts: Vec<Vec<i8>> = Vec::with_capacity(self.net.n_comp());
-        let logits = self.run(image, None, buf, Some(&mut acts));
+        let mut accs: Vec<Vec<i32>> = Vec::with_capacity(if retain_accs { self.net.n_comp() } else { 0 });
+        let logits = self.run(
+            image,
+            None,
+            buf,
+            Some(&mut acts),
+            if retain_accs { Some(&mut accs) } else { None },
+        );
         let pred = argmax_i8(&logits);
-        CleanTrace { acts, logits, pred }
+        CleanTrace { acts, accs, logits, pred }
+    }
+
+    /// Complete a clean trace whose first `p` computing layers were
+    /// inherited from another configuration that agrees with this engine
+    /// on those layers' LUT assignments (exact-prefix memoization across
+    /// genotypes). `prefix_acts`/`prefix_accs` are clones of the donor
+    /// trace's first `p` entries; only layers `p..` are re-simulated, from
+    /// layer `p-1`'s activation. Bit-identical to a fresh
+    /// [`trace_retaining`](Engine::trace_retaining) by construction: the
+    /// first `p` activations (and accumulators) are a pure function of the
+    /// image and the first `p` layer LUTs, which the two configurations
+    /// share.
+    pub fn trace_from_prefix(
+        &self,
+        prefix_acts: Vec<Vec<i8>>,
+        prefix_accs: Vec<Vec<i32>>,
+        retain_accs: bool,
+        buf: &mut Buffers,
+    ) -> CleanTrace {
+        let p = prefix_acts.len();
+        assert!(p >= 1 && p < self.net.n_comp(), "prefix must cover 1..n_comp-1 layers");
+        debug_assert!(!retain_accs || prefix_accs.len() == p, "accumulator prefix must match");
+        let start_pos = self.net.comp_positions[p - 1];
+        let mut shape = self.net.comp(p - 1).act_shape.clone();
+        let last_len = prefix_acts[p - 1].len();
+        buf.act_a[..last_len].copy_from_slice(&prefix_acts[p - 1]);
+        let mut ci = p;
+        let mut acts = prefix_acts;
+        let mut accs = prefix_accs;
+        let mut suffix_acts: Vec<Vec<i8>> = Vec::with_capacity(self.net.n_comp() - p);
+        let mut suffix_accs: Vec<Vec<i32>> = Vec::new();
+        let logits = self.run_layers(
+            start_pos + 1,
+            &mut shape,
+            last_len,
+            &mut ci,
+            None,
+            buf,
+            Some(&mut suffix_acts),
+            if retain_accs { Some(&mut suffix_accs) } else { None },
+        );
+        acts.extend(suffix_acts);
+        if retain_accs {
+            accs.extend(suffix_accs);
+        } else {
+            accs.clear();
+        }
+        let pred = argmax_i8(&logits);
+        CleanTrace { acts, accs, logits, pred }
     }
 
     /// Layer-replay: given the (faulted) activation of computing layer
@@ -155,7 +247,7 @@ impl<'a> Engine<'a> {
         let mut shape: Vec<usize> = comp.act_shape.clone();
         buf.act_a[..act.len()].copy_from_slice(act);
         let mut ci = start_ci + 1;
-        self.run_layers(start_pos + 1, &mut shape, act.len(), &mut ci, None, buf, None)
+        self.run_layers(start_pos + 1, &mut shape, act.len(), &mut ci, None, buf, None, None)
     }
 
     /// Convergence-gated replay of the suffix after computing layer
@@ -181,15 +273,212 @@ impl<'a> Engine<'a> {
         let comp = self.net.comp(start_ci);
         let mut shape: Vec<usize> = comp.act_shape.clone();
         buf.act_a[..act.len()].copy_from_slice(act);
-        let mut act_len = act.len();
         let mut ci = start_ci + 1;
-        let mut depth = 0usize;
-        for li in start_pos + 1..self.net.layers.len() {
+        self.replay_loop(start_pos + 1, &mut shape, act.len(), &mut ci, 0, trace, gate, buf)
+    }
+
+    /// Delta replay: serve the fault at `site` by *patching* the first
+    /// suffix computing layer out of the cached clean accumulators instead
+    /// of re-running its full GEMM, then fall into the convergence-gated
+    /// stepwise loop. A single bit-flip is a rank-1 perturbation — the
+    /// faulted first-suffix accumulator differs from the clean one by
+    /// `lut(new, w[k]) − lut(old, w[k])` per touched row
+    /// ([`gemm_lut_delta`]) — so the per-fault cost of that layer drops
+    /// from O(k·n) LUT gathers to O(n) (dense) / O(k²·out_ch) (conv, only
+    /// the output pixels whose receptive field covers the flipped neuron,
+    /// via [`pixel_patch_positions`]). Interposed Flatten layers are
+    /// identity on the flat buffer; an interposed Pool narrows the delta
+    /// to at most one pooled element (or erases it entirely when the
+    /// window max is unchanged).
+    ///
+    /// Bit-identical to staging the flip and calling
+    /// [`replay_from`](Engine::replay_from) — i32 accumulation commutes,
+    /// unpatched entries are byte-copies of the clean trace, and the gate
+    /// compares the same full activations at the same depths (asserted by
+    /// the engine and faultsim property suites). Returns `None` when the
+    /// patch is inapplicable — fault on the last computing layer, no
+    /// cached accumulator for the successor, or an interposed layer chain
+    /// the delta cannot be pushed through — and the caller falls back to
+    /// the ordinary staged-flip replay.
+    pub fn replay_from_delta(
+        &self,
+        site: FaultSite,
+        trace: &CleanTrace,
+        gate: bool,
+        buf: &mut Buffers,
+    ) -> Option<Replay> {
+        let ci = site.layer;
+        let next_ci = ci + 1;
+        if next_ci >= self.net.n_comp() {
+            return None; // no suffix computing layer to patch
+        }
+        let acc_clean = trace.accs.get(next_ci)?;
+        if acc_clean.is_empty() {
+            return None; // accumulators not retained for this layer
+        }
+        let old = trace.acts[ci][site.neuron];
+        let new = (old as u8 ^ (1u8 << site.bit)) as i8;
+
+        // push the single-element delta through the interposed
+        // Pool/Flatten layers down to the next computing layer's input
+        let mut cur_shape: Vec<usize> = self.net.comp(ci).act_shape.clone();
+        let mut delta: Option<(usize, i8, i8)> = Some((site.neuron, old, new));
+        let mut pooled = false;
+        for li in self.net.comp_positions[ci] + 1..self.net.comp_positions[next_ci] {
+            match &self.net.layers[li] {
+                Layer::Flatten => {
+                    cur_shape = vec![cur_shape.iter().product()];
+                }
+                Layer::Pool { size } => {
+                    if cur_shape.len() != 3 {
+                        return None; // pool over a non-CHW view: bail out
+                    }
+                    let (c, h, w) = (cur_shape[0], cur_shape[1], cur_shape[2]);
+                    let (oh, ow) = (h / size, w / size);
+                    // the pre-flip value is recomputed as the clean window
+                    // max, so only the index and the new value matter here
+                    if let Some((idx, _, n_val)) = delta {
+                        if pooled {
+                            // a second pool would need the (unmaterialized)
+                            // clean values of the first pool's output
+                            return None;
+                        }
+                        let (ch, y, x) = (idx / (h * w), (idx % (h * w)) / w, idx % w);
+                        let (oy, ox) = (y / size, x / size);
+                        if oy >= oh || ox >= ow {
+                            // pixel in a truncated edge row/col: no window
+                            // ever reads it, the fault is erased here
+                            delta = None;
+                        } else {
+                            let plane = &trace.acts[ci][ch * h * w..(ch + 1) * h * w];
+                            let mut m_old = i8::MIN;
+                            let mut m_new = i8::MIN;
+                            for ky in 0..*size {
+                                for kx in 0..*size {
+                                    let (yy, xx) = (oy * size + ky, ox * size + kx);
+                                    let v = plane[yy * w + xx];
+                                    m_old = m_old.max(v);
+                                    m_new = m_new.max(if yy == y && xx == x { n_val } else { v });
+                                }
+                            }
+                            delta = if m_old == m_new {
+                                None
+                            } else {
+                                Some((ch * oh * ow + oy * ow + ox, m_old, m_new))
+                            };
+                        }
+                    }
+                    cur_shape = vec![c, oh, ow];
+                    pooled = true;
+                }
+                Layer::Comp(_) => unreachable!("no computing layer between comp positions"),
+            }
+        }
+
+        // patch + requantize the first suffix computing layer
+        let comp = self.net.comp(next_ci);
+        let lut = self.luts[next_ci];
+        let act_len = comp.act_len();
+        match &comp.kind {
+            CompKind::Dense => {
+                debug_assert_eq!(acc_clean.len(), comp.n_dim);
+                buf.acc[..comp.n_dim].copy_from_slice(acc_clean);
+                if let Some((k, o_val, n_val)) = delta {
+                    debug_assert!(k < comp.k_dim);
+                    gemm_lut_delta(
+                        o_val,
+                        n_val,
+                        &comp.w[k * comp.n_dim..(k + 1) * comp.n_dim],
+                        lut,
+                        &mut buf.acc[..comp.n_dim],
+                    );
+                }
+                requantize_slice(
+                    &buf.acc[..comp.n_dim],
+                    comp.m0,
+                    comp.nshift,
+                    comp.relu,
+                    &mut buf.act_a[..comp.n_dim],
+                );
+            }
+            CompKind::Conv { ksize, stride, pad, in_h, in_w, out_h, out_w, .. } => {
+                debug_assert_eq!(acc_clean.len(), out_h * out_w * comp.n_dim);
+                // unpatched entries equal the clean activation byte-for-byte
+                buf.act_a[..act_len].copy_from_slice(&trace.acts[next_ci]);
+                if let Some((idx, o_val, n_val)) = delta {
+                    let (ch, y, x) =
+                        (idx / (in_h * in_w), (idx % (in_h * in_w)) / in_w, idx % in_w);
+                    let mut patch = std::mem::take(&mut buf.patch);
+                    pixel_patch_positions(ch, y, x, *ksize, *stride, *pad, *out_h, *out_w, &mut patch);
+                    for &(pos, col) in &patch {
+                        buf.acc[..comp.n_dim]
+                            .copy_from_slice(&acc_clean[pos * comp.n_dim..(pos + 1) * comp.n_dim]);
+                        gemm_lut_delta(
+                            o_val,
+                            n_val,
+                            &comp.w[col * comp.n_dim..(col + 1) * comp.n_dim],
+                            lut,
+                            &mut buf.acc[..comp.n_dim],
+                        );
+                        requantize_slice(
+                            &buf.acc[..comp.n_dim],
+                            comp.m0,
+                            comp.nshift,
+                            comp.relu,
+                            &mut buf.rows_q[..comp.n_dim],
+                        );
+                        for ni in 0..comp.n_dim {
+                            buf.act_a[ni * out_h * out_w + pos] = buf.rows_q[ni];
+                        }
+                    }
+                    buf.patch = patch;
+                }
+            }
+        }
+
+        // identical gate semantics to the stepwise replay: the patched
+        // layer is depth 1, compared against the clean trace before the
+        // remaining suffix runs
+        if gate && buf.act_a[..act_len] == trace.acts[next_ci][..] {
+            return Some(Replay { pred: trace.pred, depth: 1, converged: true });
+        }
+        let mut shape = comp.act_shape.clone();
+        let mut ci_next = next_ci + 1;
+        Some(self.replay_loop(
+            self.net.comp_positions[next_ci] + 1,
+            &mut shape,
+            act_len,
+            &mut ci_next,
+            1,
+            trace,
+            gate,
+            buf,
+        ))
+    }
+
+    /// The shared convergence-gated suffix walk: step layers
+    /// `layers[from_li..]` over the activation in `buf.act_a`, comparing
+    /// against the clean trace after every computing layer (when `gate`),
+    /// with `depth` already accounting for suffix computing layers the
+    /// caller produced by other means (the delta patch).
+    #[allow(clippy::too_many_arguments)]
+    fn replay_loop(
+        &self,
+        from_li: usize,
+        shape: &mut Vec<usize>,
+        mut act_len: usize,
+        ci: &mut usize,
+        mut depth: usize,
+        trace: &CleanTrace,
+        gate: bool,
+        buf: &mut Buffers,
+    ) -> Replay {
+        for li in from_li..self.net.layers.len() {
             let is_comp = matches!(&self.net.layers[li], Layer::Comp(_));
-            act_len = self.step_layer(li, &mut shape, act_len, &mut ci, buf);
+            act_len = self.step_layer(li, shape, act_len, ci, buf);
             if is_comp {
                 depth += 1;
-                if gate && buf.act_a[..act_len] == trace.acts[ci - 1][..] {
+                if gate && buf.act_a[..act_len] == trace.acts[*ci - 1][..] {
                     return Replay { pred: trace.pred, depth, converged: true };
                 }
             }
@@ -205,12 +494,22 @@ impl<'a> Engine<'a> {
         fault: Option<FaultSite>,
         buf: &mut Buffers,
         mut collect: Option<&mut Vec<Vec<i8>>>,
+        mut collect_accs: Option<&mut Vec<Vec<i32>>>,
     ) -> Vec<i8> {
         debug_assert_eq!(image.len(), self.net.input_len());
         buf.act_a[..image.len()].copy_from_slice(image);
         let mut shape = self.net.input_shape.clone();
         let mut ci = 0usize;
-        self.run_layers(0, &mut shape, image.len(), &mut ci, fault, buf, collect.as_deref_mut())
+        self.run_layers(
+            0,
+            &mut shape,
+            image.len(),
+            &mut ci,
+            fault,
+            buf,
+            collect.as_deref_mut(),
+            collect_accs.as_deref_mut(),
+        )
     }
 
     /// Run layers[from..]; current activation lives in buf.act_a with
@@ -225,12 +524,29 @@ impl<'a> Engine<'a> {
         fault: Option<FaultSite>,
         buf: &mut Buffers,
         mut collect: Option<&mut Vec<Vec<i8>>>,
+        mut collect_accs: Option<&mut Vec<Vec<i32>>>,
     ) -> Vec<i8> {
         for li in from..self.net.layers.len() {
             let is_comp = matches!(&self.net.layers[li], Layer::Comp(_));
             act_len = self.step_layer(li, shape, act_len, ci, buf);
             if is_comp {
                 let cur = *ci - 1;
+                if let Some(c) = collect_accs.as_deref_mut() {
+                    // buf.acc still holds the layer's pre-requantize
+                    // accumulator (step_layer requantizes out of it).
+                    // Layer 0 is never a fault's patched successor, so
+                    // its (potentially large) accumulator is not kept.
+                    if cur == 0 {
+                        c.push(Vec::new());
+                    } else {
+                        let comp = self.net.comp(cur);
+                        let acc_len = match &comp.kind {
+                            CompKind::Dense => comp.n_dim,
+                            CompKind::Conv { out_h, out_w, .. } => out_h * out_w * comp.n_dim,
+                        };
+                        c.push(buf.acc[..acc_len].to_vec());
+                    }
+                }
                 if let Some(f) = fault {
                     if f.layer == cur {
                         debug_assert!(f.neuron < act_len);
@@ -539,6 +855,147 @@ mod tests {
             }
         }
         assert!(found, "test net must contain a pool-dominated flip");
+    }
+
+    #[test]
+    fn trace_retaining_keeps_successor_accumulators() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace_retaining(&[4, -4, 8, 0], true, &mut buf);
+        assert_eq!(tr.accs.len(), 2);
+        assert!(tr.accs[0].is_empty(), "layer 0 acc is never a patch base");
+        // hand-computed l1 accumulator (see tiny_mlp_hand_computed): [9, -2]
+        assert_eq!(tr.accs[1], vec![9, -2]);
+        // plain trace retains nothing, and the retained variant is bigger
+        let plain = eng.trace(&[4, -4, 8, 0], &mut buf);
+        assert!(plain.accs.is_empty());
+        assert_eq!(plain.acts, tr.acts);
+        assert!(tr.approx_bytes() > plain.approx_bytes(), "i32 accs must be charged");
+    }
+
+    #[test]
+    fn delta_replay_matches_staged_replay_on_dense_net() {
+        // every site x bit on the non-final layer: the delta patch must
+        // reproduce the staged-flip replay exactly (pred, depth,
+        // converged), gate on and off; final-layer sites return None
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace_retaining(&[4, -4, 8, 0], true, &mut buf);
+        for layer in 0..2 {
+            for neuron in 0..net.comp(layer).act_len() {
+                for bit in 0..8u8 {
+                    let site = FaultSite { layer, neuron, bit };
+                    for gate in [true, false] {
+                        let got = eng.replay_from_delta(site, &tr, gate, &mut buf);
+                        if layer == net.n_comp() - 1 {
+                            assert!(got.is_none(), "last layer has no patchable successor");
+                            continue;
+                        }
+                        let mut act = tr.acts[layer].clone();
+                        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                        let want = eng.replay_from(layer, &act, &tr, gate, &mut buf);
+                        assert_eq!(got, Some(want), "l{layer} n{neuron} b{bit} gate={gate}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_replay_through_pool_matches_staged_replay() {
+        // tiny_conv: conv -> pool -> flatten -> dense; faults on the conv
+        // activation push the delta through the maxpool window (masked or
+        // narrowed to one pooled element) before the dense patch
+        use crate::simnet::testutil::tiny_conv;
+        let net = tiny_conv();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img: Vec<i8> = (0..net.input_len()).map(|i| ((i * 13 % 19) as i8) - 9).collect();
+        let tr = eng.trace_retaining(&img, true, &mut buf);
+        let mut served = 0usize;
+        for neuron in 0..net.comp(0).act_len() {
+            for bit in 0..8u8 {
+                let site = FaultSite { layer: 0, neuron, bit };
+                let got = eng.replay_from_delta(site, &tr, true, &mut buf)
+                    .expect("conv->pool->dense is delta-servable");
+                let mut act = tr.acts[0].clone();
+                act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                let want = eng.replay_from(0, &act, &tr, true, &mut buf);
+                assert_eq!(got, want, "n{neuron} b{bit}");
+                // and both agree with the naive full forward
+                let full = eng.forward(&img, Some(site), &mut buf);
+                assert_eq!(got.pred, argmax_i8(&full), "n{neuron} b{bit}");
+                served += 1;
+            }
+        }
+        assert_eq!(served, net.comp(0).act_len() * 8);
+    }
+
+    #[test]
+    fn delta_replay_conv_successor_patches_only_touched_pixels() {
+        // tiny_conv2: conv -> conv; the successor patch goes through the
+        // pixel->column inverse mapping, padding-edge neurons included
+        use crate::simnet::testutil::tiny_conv2;
+        let net = tiny_conv2();
+        let kvp = crate::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        // mixed assignment: the patched successor runs an approximate LUT
+        let exact: &Lut = &EXACT;
+        let eng = Engine::new(&net, vec![exact, &kvp, exact]);
+        let mut buf = Buffers::for_net(&net);
+        let img: Vec<i8> = (0..net.input_len()).map(|i| ((i * 17 % 23) as i8) - 11).collect();
+        let tr = eng.trace_retaining(&img, true, &mut buf);
+        for layer in [0usize, 1] {
+            for neuron in 0..net.comp(layer).act_len() {
+                for bit in [0u8, 3, 7] {
+                    let site = FaultSite { layer, neuron, bit };
+                    for gate in [true, false] {
+                        let got = eng
+                            .replay_from_delta(site, &tr, gate, &mut buf)
+                            .expect("conv successor must be delta-servable");
+                        let mut act = tr.acts[layer].clone();
+                        act[neuron] = (act[neuron] as u8 ^ (1 << bit)) as i8;
+                        let want = eng.replay_from(layer, &act, &tr, gate, &mut buf);
+                        assert_eq!(got, want, "l{layer} n{neuron} b{bit} gate={gate}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_replay_without_accs_falls_back() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace(&[4, -4, 8, 0], &mut buf); // no accumulators
+        let site = FaultSite { layer: 0, neuron: 0, bit: 7 };
+        assert!(eng.replay_from_delta(site, &tr, true, &mut buf).is_none());
+    }
+
+    #[test]
+    fn trace_from_prefix_is_bit_identical_to_fresh_trace() {
+        // two configurations sharing layer 0's LUT share acts[0]/accs[0];
+        // completing the trace from that prefix must equal a fresh trace
+        let net = tiny_mlp();
+        let kvp = crate::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let donor = Engine::new(&net, vec![&kvp, &EXACT]);
+        let target = Engine::new(&net, vec![&kvp, &kvp]);
+        let mut buf = Buffers::for_net(&net);
+        let img = [100i8, -100, 90, 70];
+        for retain in [true, false] {
+            let donor_tr = donor.trace_retaining(&img, retain, &mut buf);
+            let fresh = target.trace_retaining(&img, retain, &mut buf);
+            let prefix_acts = donor_tr.acts[..1].to_vec();
+            let prefix_accs =
+                if retain { donor_tr.accs[..1].to_vec() } else { Vec::new() };
+            let from_prefix = target.trace_from_prefix(prefix_acts, prefix_accs, retain, &mut buf);
+            assert_eq!(from_prefix.acts, fresh.acts, "retain={retain}");
+            assert_eq!(from_prefix.accs, fresh.accs, "retain={retain}");
+            assert_eq!(from_prefix.logits, fresh.logits);
+            assert_eq!(from_prefix.pred, fresh.pred);
+        }
     }
 
     #[test]

@@ -9,19 +9,21 @@
 
 use crate::axmul::Lut;
 
-/// Accumulate-only GEMM (bias added by the caller via `gemm_bias`).
-pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
+/// The one accumulate core shared by [`gemm_lut`] and [`gemm_lut_bias`]
+/// (callers differ only in how `out` is initialized). 4-wide k-unroll:
+/// four independent LUT rows in flight per inner iteration, hiding gather
+/// latency behind the second load port, with a shared scalar tail — see
+/// EXPERIMENTS.md §Perf for the measured effect.
+#[inline(always)]
+fn gemm_lut_core(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert!(out.len() >= m * n);
-    out[..m * n].fill(0);
     let table = &lut.table[..];
     for mi in 0..m {
         let a_row = &a[mi * k..(mi + 1) * k];
         let o_row = &mut out[mi * n..(mi + 1) * n];
         let mut ki = 0;
-        // 4-wide k-unroll: four LUT rows in flight, matching
-        // gemm_lut_bias (§Perf)
         while ki + 4 <= k {
             let base0 = (a_row[ki] as u8 as usize) << 8;
             let base1 = (a_row[ki + 1] as u8 as usize) << 8;
@@ -43,7 +45,6 @@ pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out
             }
             ki += 4;
         }
-        // shared scalar tail (same shape as gemm_lut_bias's)
         while ki < k {
             let base = (a_row[ki] as u8 as usize) << 8;
             let lut_row = &table[base..base + 256];
@@ -56,11 +57,13 @@ pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out
     }
 }
 
+/// Accumulate-only GEMM (bias added by the caller via `gemm_bias`).
+pub fn gemm_lut(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
+    out[..m * n].fill(0);
+    gemm_lut_core(a, w, lut, m, k, n, out);
+}
+
 /// GEMM + bias: `out[m][n] = b[n] + sum_k lut(a[m][k], w[k][n])`.
-///
-/// §Perf: the k-loop is unrolled 2-wide so two independent LUT rows are in
-/// flight per inner iteration (hides gather latency behind the second load
-/// port); see EXPERIMENTS.md §Perf for the measured effect.
 pub fn gemm_lut_bias(
     a: &[i8],
     w: &[i8],
@@ -75,41 +78,33 @@ pub fn gemm_lut_bias(
     for mi in 0..m {
         out[mi * n..(mi + 1) * n].copy_from_slice(b);
     }
-    let table = &lut.table[..];
-    for mi in 0..m {
-        let a_row = &a[mi * k..(mi + 1) * k];
-        let o_row = &mut out[mi * n..(mi + 1) * n];
-        let mut ki = 0;
-        while ki + 4 <= k {
-            let base0 = (a_row[ki] as u8 as usize) << 8;
-            let base1 = (a_row[ki + 1] as u8 as usize) << 8;
-            let base2 = (a_row[ki + 2] as u8 as usize) << 8;
-            let base3 = (a_row[ki + 3] as u8 as usize) << 8;
-            let lut_row0 = &table[base0..base0 + 256];
-            let lut_row1 = &table[base1..base1 + 256];
-            let lut_row2 = &table[base2..base2 + 256];
-            let lut_row3 = &table[base3..base3 + 256];
-            let w_row0 = &w[ki * n..(ki + 1) * n];
-            let w_row1 = &w[(ki + 1) * n..(ki + 2) * n];
-            let w_row2 = &w[(ki + 2) * n..(ki + 3) * n];
-            let w_row3 = &w[(ki + 3) * n..(ki + 4) * n];
-            for i in 0..n {
-                o_row[i] += lut_row0[w_row0[i] as u8 as usize]
-                    + lut_row1[w_row1[i] as u8 as usize]
-                    + lut_row2[w_row2[i] as u8 as usize]
-                    + lut_row3[w_row3[i] as u8 as usize];
-            }
-            ki += 4;
-        }
-        while ki < k {
-            let base = (a_row[ki] as u8 as usize) << 8;
-            let lut_row = &table[base..base + 256];
-            let w_row = &w[ki * n..(ki + 1) * n];
-            for (o, &wv) in o_row.iter_mut().zip(w_row) {
-                *o += lut_row[wv as u8 as usize];
-            }
-            ki += 1;
-        }
+    gemm_lut_core(a, w, lut, m, k, n, out);
+}
+
+/// Rank-1 accumulator patch: given that one input of a GEMM row changed
+/// from `old` to `new`, update the cached clean accumulator row in place:
+/// `acc[i] += lut(new, w_row[i]) − lut(old, w_row[i])`.
+///
+/// i32 addition is associative and commutative in two's complement, so the
+/// patched row is bit-identical to re-running the whole
+/// [`gemm_lut_bias`] row with `new` substituted for `old` — the
+/// delta-replay fast path ([`crate::simnet::Engine::replay_from_delta`])
+/// is built on exactly this identity. `w_row` is `w[k]` for the changed
+/// input index k (contiguous in the row-major `[K][N]` weight layout), and
+/// `acc` is the matching clean accumulator row (dense: the whole layer;
+/// conv: one output-pixel row), O(n) instead of the full O(k·n) GEMM.
+pub fn gemm_lut_delta(old: i8, new: i8, w_row: &[i8], lut: &Lut, acc: &mut [i32]) {
+    if old == new {
+        return;
+    }
+    debug_assert_eq!(w_row.len(), acc.len());
+    let base_old = (old as u8 as usize) << 8;
+    let base_new = (new as u8 as usize) << 8;
+    let row_old = &lut.table[base_old..base_old + 256];
+    let row_new = &lut.table[base_new..base_new + 256];
+    for (a, &wv) in acc.iter_mut().zip(w_row) {
+        let wi = wv as u8 as usize;
+        *a = a.wrapping_add(row_new[wi].wrapping_sub(row_old[wi]));
     }
 }
 
@@ -195,6 +190,45 @@ mod tests {
         gemm_lut_bias(&a, &w, &b, &lut, 1, 3, 2, &mut out);
         // row: 1*1+2*2+3*0=5, 1*-1+2*0+3*3=8
         assert_eq!(out, vec![105, -92]);
+    }
+
+    #[test]
+    fn property_delta_patch_equals_recomputed_row() {
+        // flipping one input of a bias GEMM and patching the clean
+        // accumulator must be bit-identical to re-running the GEMM with
+        // the flipped input — the delta-replay correctness core
+        let luts: Vec<_> = ["exact", "mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| axmul::by_name(n).unwrap().lut())
+            .collect();
+        check("gemm_lut_delta == recompute", 0xDE17A, 40, |rng| {
+            let (m, k, n) = gen::dims(rng, 4, 12, 8);
+            let mut a = gen::i8_vec(rng, m * k);
+            let w = gen::i8_vec(rng, k * n);
+            let b: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32 >> 8).collect();
+            let lut = &luts[rng.usize_below(luts.len())];
+            let mut clean = vec![0i32; m * n];
+            gemm_lut_bias(&a, &w, &b, lut, m, k, n, &mut clean);
+            // flip one bit of one input element
+            let (mi, ki) = (rng.usize_below(m), rng.usize_below(k));
+            let old = a[mi * k + ki];
+            let new = (old as u8 ^ (1 << rng.below(8))) as i8;
+            a[mi * k + ki] = new;
+            let mut expect = vec![0i32; m * n];
+            gemm_lut_bias(&a, &w, &b, lut, m, k, n, &mut expect);
+            // patch only row mi of the clean accumulator
+            gemm_lut_delta(old, new, &w[ki * n..(ki + 1) * n], lut, &mut clean[mi * n..(mi + 1) * n]);
+            assert_eq!(clean, expect, "m={m} k={k} n={n} mi={mi} ki={ki}");
+        });
+    }
+
+    #[test]
+    fn delta_patch_noop_when_value_unchanged() {
+        let lut = axmul::by_name("exact").unwrap().lut();
+        let w = vec![3i8, -7, 100];
+        let mut acc = vec![11, -22, 33];
+        gemm_lut_delta(5, 5, &w, &lut, &mut acc);
+        assert_eq!(acc, vec![11, -22, 33]);
     }
 
     #[test]

@@ -64,6 +64,56 @@ pub fn im2col(
     (oh, ow)
 }
 
+/// Inverse of the [`im2col`] pixel→column mapping: the `(output position,
+/// patch column)` pairs whose im2col entry is sourced from input pixel
+/// `(ci, y, x)` of a conv with geometry `(k, stride, pad, oh, ow)` —
+/// `pos = oy*ow + ox`, `col = (ci*k + ky)*k + kx`. At most `k × k` pairs
+/// (one per kernel offset that lands the pixel inside an output's
+/// receptive field), each with a distinct `pos`. This is what lets the
+/// delta-replay path patch only the accumulator rows a flipped neuron can
+/// reach instead of re-running the whole conv GEMM
+/// ([`crate::simnet::Engine::replay_from_delta`]).
+///
+/// Results are appended to `out` (cleared first) so the fault-campaign hot
+/// path can reuse one scratch allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn pixel_patch_positions(
+    ci: usize,
+    y: usize,
+    x: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<(usize, usize)>,
+) {
+    out.clear();
+    for ky in 0..k {
+        // y = oy*stride + ky - pad  =>  oy = (y + pad - ky) / stride,
+        // valid only when non-negative, divisible by stride and < oh
+        let ty = y as isize + pad as isize - ky as isize;
+        if ty < 0 || ty % stride as isize != 0 {
+            continue;
+        }
+        let oy = ty as usize / stride;
+        if oy >= oh {
+            continue;
+        }
+        for kx in 0..k {
+            let tx = x as isize + pad as isize - kx as isize;
+            if tx < 0 || tx % stride as isize != 0 {
+                continue;
+            }
+            let ox = tx as usize / stride;
+            if ox >= ow {
+                continue;
+            }
+            out.push((oy * ow + ox, (ci * k + ky) * k + kx));
+        }
+    }
+}
+
 /// Transpose GEMM output rows (oy*ow + ox, n) into CHW activation layout
 /// [N, OH, OW] as int8 after requantization.
 pub fn rows_to_chw(
@@ -168,6 +218,55 @@ mod tests {
         assert_eq!(&cols[0..4], &[0, 1, 4, 5]);
         // patch (1,1) = 10,11,14,15
         assert_eq!(&cols[12..16], &[10, 11, 14, 15]);
+    }
+
+    #[test]
+    fn property_pixel_patch_positions_inverts_im2col() {
+        // ground truth by differencing: flip one pixel, re-run im2col, and
+        // the changed column entries must be exactly the returned pairs
+        use crate::util::proptest::check;
+        check("pixel->column inverse", 0x1C01, 60, |rng| {
+            let c = 1 + rng.usize_below(3);
+            let k = 1 + rng.usize_below(3);
+            let stride = 1 + rng.usize_below(2);
+            let pad = rng.usize_below(2);
+            let h = k + rng.usize_below(4);
+            let w = k + rng.usize_below(4);
+            let oh = (h + 2 * pad - k) / stride + 1;
+            let ow = (w + 2 * pad - k) / stride + 1;
+            let kk = c * k * k;
+            let x: Vec<i8> = (0..c * h * w).map(|_| rng.i8()).collect();
+            let mut cols_a = vec![0i8; oh * ow * kk];
+            im2col(&x, c, h, w, k, stride, pad, &mut cols_a);
+            let (ci, y, xx) = (rng.usize_below(c), rng.usize_below(h), rng.usize_below(w));
+            let mut x2 = x.clone();
+            let flipped = (x2[ci * h * w + y * w + xx] as u8 ^ 0x55) as i8;
+            x2[ci * h * w + y * w + xx] = flipped;
+            let mut cols_b = vec![0i8; oh * ow * kk];
+            im2col(&x2, c, h, w, k, stride, pad, &mut cols_b);
+            let mut expect: Vec<(usize, usize)> = (0..oh * ow * kk)
+                .filter(|&i| cols_a[i] != cols_b[i])
+                .map(|i| (i / kk, i % kk))
+                .collect();
+            let mut got = Vec::new();
+            pixel_patch_positions(ci, y, xx, k, stride, pad, oh, ow, &mut got);
+            got.sort();
+            expect.sort();
+            assert_eq!(got, expect, "c={c} k={k} s={stride} p={pad} h={h} w={w} px=({ci},{y},{xx})");
+            // each affected output position appears exactly once
+            let mut pos: Vec<usize> = got.iter().map(|&(p, _)| p).collect();
+            pos.dedup();
+            assert_eq!(pos.len(), got.len(), "positions must be unique");
+            assert!(got.len() <= k * k);
+        });
+    }
+
+    #[test]
+    fn pixel_patch_positions_identity_kernel() {
+        // k=1, stride=1, pad=0: each pixel feeds exactly its own position
+        let mut out = Vec::new();
+        pixel_patch_positions(1, 2, 3, 1, 1, 0, 4, 5, &mut out);
+        assert_eq!(out, vec![(2 * 5 + 3, 1)]);
     }
 
     #[test]

@@ -233,6 +233,84 @@ pub mod testutil {
         }
     }
 
+    /// Conv→conv chain exercising the delta-replay *conv successor* patch
+    /// (the pixel→column inverse mapping, padding edges included):
+    /// [1,5,5] -> conv(2 filters, 3x3, pad 1, ReLU) -> conv(2 filters,
+    /// 3x3, pad 1, ReLU) -> flatten -> dense(50 -> 3). Weights are a
+    /// deterministic small-integer pattern.
+    pub fn tiny_conv2() -> QNet {
+        let wgen = |len: usize, salt: usize| -> Vec<i8> {
+            (0..len).map(|i| ((i * 7 + salt * 5) % 11) as i8 - 5).collect()
+        };
+        let conv1 = CompLayer {
+            kind: CompKind::Conv {
+                in_ch: 1,
+                out_ch: 2,
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                in_h: 5,
+                in_w: 5,
+                out_h: 5,
+                out_w: 5,
+            },
+            relu: true,
+            w: wgen(9 * 2, 1),
+            k_dim: 9,
+            n_dim: 2,
+            b: vec![4, -3],
+            m0: 1 << 30,
+            nshift: 32, // r = 0.25
+            act_shape: vec![2, 5, 5],
+        };
+        let conv2 = CompLayer {
+            kind: CompKind::Conv {
+                in_ch: 2,
+                out_ch: 2,
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                in_h: 5,
+                in_w: 5,
+                out_h: 5,
+                out_w: 5,
+            },
+            relu: true,
+            w: wgen(18 * 2, 2),
+            k_dim: 18,
+            n_dim: 2,
+            b: vec![-1, 2],
+            m0: 1 << 30,
+            nshift: 32, // r = 0.25
+            act_shape: vec![2, 5, 5],
+        };
+        let dense = CompLayer {
+            kind: CompKind::Dense,
+            relu: false,
+            w: wgen(50 * 3, 3),
+            k_dim: 50,
+            n_dim: 3,
+            b: vec![1, 0, -1],
+            m0: 1 << 30,
+            nshift: 31, // r = 0.5
+            act_shape: vec![3],
+        };
+        QNet {
+            name: "tinyconv2".into(),
+            dataset: "none".into(),
+            input_shape: vec![1, 5, 5],
+            input_scale: 1.0 / 127.0,
+            config_template: "xxx".into(),
+            layers: vec![
+                Layer::Comp(conv1),
+                Layer::Comp(conv2),
+                Layer::Flatten,
+                Layer::Comp(dense),
+            ],
+            comp_positions: vec![0, 1, 3],
+        }
+    }
+
     /// Randomized dense chain (2..=4 layers, widths 2..=6) for property
     /// tests over nets the hand-built fixtures cannot cover.
     pub fn random_mlp(rng: &mut crate::util::rng::Rng) -> QNet {

@@ -22,6 +22,7 @@ fn evaluator_trends_mlp3() {
         sampling: SiteSampling::UniformLayer,
         replay: true,
         gate: true,
+        delta: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 500, fi);
     // exact config: no accuracy drop by definition
@@ -51,6 +52,7 @@ fn sweep_cache_roundtrip() {
         sampling: SiteSampling::UniformLayer,
         replay: true,
         gate: true,
+        delta: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 64, fi);
     let dir = std::env::temp_dir().join(format!("deepaxe_dse_{}", std::process::id()));
@@ -97,6 +99,7 @@ fn pareto_front_on_real_sweep() {
         sampling: SiteSampling::UniformLayer,
         replay: true,
         gate: true,
+        delta: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 100, fi);
     let pts: Vec<_> = enumerate_masks(3)
@@ -128,6 +131,7 @@ fn pipeline_selects_feasible_design() {
             sampling: SiteSampling::UniformLayer,
             replay: true,
             gate: true,
+            delta: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
@@ -166,6 +170,7 @@ fn pipeline_infeasible_requirements() {
             sampling: SiteSampling::UniformLayer,
             replay: true,
             gate: true,
+            delta: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,

@@ -14,6 +14,7 @@ fn params(n_faults: usize, n_images: usize, replay: bool) -> CampaignParams {
         sampling: SiteSampling::UniformLayer,
         replay,
         gate: true,
+        delta: true,
     }
 }
 
@@ -52,6 +53,34 @@ fn convergence_gate_bit_identical_on_real_nets() {
         assert_eq!(gated.replay.inferences, ungated.replay.inferences);
         assert!(gated.replay.replayed_layers <= ungated.replay.replayed_layers);
         assert_eq!(gated.replay.depth_hist.iter().sum::<u64>(), gated.replay.inferences);
+    }
+}
+
+#[test]
+fn delta_replay_bit_identical_on_real_nets() {
+    // the PR 4 acceptance criterion on real artifacts: with DEEPAXE_NO_DELTA
+    // unset vs set (params.delta on/off), campaign results — vulnerability,
+    // masked counts, preds, the whole ReplayStats — are equal, and the
+    // delta path actually served patchable faults
+    let ctx = common::ctx();
+    for (net_name, mult) in [("mlp3", "exact"), ("lenet5", "mul8s_1kvp_s")] {
+        let net = ctx.net(net_name).unwrap();
+        let data = ctx.data_for(&net).unwrap();
+        let engine = Engine::uniform(&net, &ctx.luts[mult]);
+        let on = run_campaign(&engine, &data, &params(24, 20, true));
+        let mut p_off = params(24, 20, true);
+        p_off.delta = false;
+        let off = run_campaign(&engine, &data, &p_off);
+        let naive = run_campaign(&engine, &data, &params(24, 20, false));
+        assert_eq!(on.acc_per_fault, off.acc_per_fault, "{net_name}");
+        assert_eq!(on.acc_per_fault, naive.acc_per_fault, "{net_name}");
+        assert_eq!(on.mean_fault_acc, off.mean_fault_acc, "{net_name}");
+        assert_eq!(on.vulnerability, off.vulnerability, "{net_name}");
+        assert_eq!(on.ci95, off.ci95, "{net_name}");
+        assert_eq!(on.base_acc, off.base_acc, "{net_name}");
+        assert_eq!(on.replay, off.replay, "{net_name}: replay stats must not move");
+        assert!(on.delta_replays > 0, "{net_name}: delta path must serve faults");
+        assert_eq!(off.delta_replays, 0, "{net_name}");
     }
 }
 

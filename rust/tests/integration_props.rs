@@ -73,6 +73,7 @@ fn campaign_clamps_oversized_subset() {
         sampling: deepaxe::faultsim::SiteSampling::UniformLayer,
         replay: true,
         gate: true,
+        delta: true,
     };
     let r = deepaxe::faultsim::run_campaign(&engine, &data, &params);
     assert_eq!(r.n_images, data.len());

@@ -25,6 +25,7 @@ fn fi_params(n_faults: usize, n_images: usize, seed: u64) -> CampaignParams {
         sampling: SiteSampling::UniformLayer,
         replay: true,
         gate: true,
+        delta: true,
     }
 }
 
@@ -259,6 +260,44 @@ fn pipeline_dispatches_heuristic_strategy() {
     for p in &out.feasible {
         assert!(sel.util_pct <= p.util_pct + 1e-12);
     }
+}
+
+#[test]
+fn screened_search_shares_trace_prefixes_across_genotypes() {
+    // acceptance criterion: a multi-genotype screened search run on real
+    // artifacts reports nonzero prefix_hits (clean traces inherited
+    // across genotypes sharing a layer prefix) and delta-patched replays,
+    // and the outcome matches a run with the trace cache disabled
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let ctx = common::ctx();
+    let net = ctx.net("mlp3").unwrap();
+    let data = ctx.data_for(&net).unwrap();
+    let fi = fi_params(12, 12, 0x9F1);
+    let ev = Evaluator::new(&net, &data, &ctx.luts, 32, fi.clone());
+    let space = SearchSpace::paper(&net, &paper_mults());
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 16;
+    spec.seed = 0x9F1;
+    spec.screen = true;
+    let mk_spec = || FidelitySpec { screen_faults: 4, ..FidelitySpec::exact() };
+
+    let staged = StagedEvaluator::new(&ev, mk_spec());
+    let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+    let ledger = staged.ledger();
+    assert!(ledger.prefix_hits() > 0, "{}", ledger.summary(fi.n_faults));
+    assert!(ledger.prefix_layers_reused() > 0);
+    assert!(ledger.delta_replays() > 0);
+    let s = ledger.summary(fi.n_faults);
+    assert!(s.contains("prefix_hits") && s.contains("delta-patched"), "{s}");
+
+    // trace-cache state never changes results: cold cache, same outcome
+    let cold = StagedEvaluator::new(&ev, FidelitySpec { trace_cache_mb: 0, ..mk_spec() });
+    let out2 = run_search(&space, &spec, &StagedBackend { st: &cold }, &mut NoCache);
+    assert_eq!(out.genotypes, out2.genotypes);
+    for (a, b) in out.evaluated.iter().zip(&out2.evaluated) {
+        assert_eq!(a, b, "prefix sharing must be bit-identical");
+    }
+    assert_eq!(cold.ledger().prefix_hits(), 0);
 }
 
 #[test]

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Perf-trajectory recorder: runs the bench harnesses (bench_faultsim,
+# bench_eval, bench_hotpath) and collects every machine-readable JSON line
+# they emit into BENCH_<n>.json at the repo root (n = first unused index),
+# so faults/s, mean replay depth, delta-patch speedup and points/s per
+# fidelity tier are recorded across PRs instead of scrolling away.
+#
+#   scripts/bench.sh            full bench run (needs cargo + artifacts)
+#   scripts/bench.sh --smoke    tiny env knobs so the whole sweep runs in
+#                               seconds; exits 0 (skips) when the
+#                               toolchain or artifacts are missing — this
+#                               is the variant scripts/ci.sh wires in.
+#
+# Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
+# "records":[...one object per emitted line...]}. The per-record fields
+# come from the benches themselves (bench/config/metric keys).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SMOKE=0
+if [ "${1:-}" = "--smoke" ]; then
+    SMOKE=1
+fi
+
+skip() {
+    echo "bench.sh: $1" >&2
+    if [ "$SMOKE" = 1 ]; then
+        echo "bench.sh: smoke mode — skipping bench run." >&2
+        exit 0
+    fi
+    exit 1
+}
+
+command -v cargo >/dev/null 2>&1 || skip "cargo not found on PATH"
+ARTIFACTS="${DEEPAXE_ARTIFACTS:-artifacts}"
+[ -f "$ARTIFACTS/manifest.json" ] || skip "artifacts missing ($ARTIFACTS/manifest.json — run \`make artifacts\`)"
+
+if [ "$SMOKE" = 1 ]; then
+    export DEEPAXE_FI_FAULTS="${DEEPAXE_FI_FAULTS:-8}"
+    export DEEPAXE_FI_IMAGES="${DEEPAXE_FI_IMAGES:-8}"
+    export DEEPAXE_EVAL_IMAGES="${DEEPAXE_EVAL_IMAGES:-16}"
+fi
+
+n=0
+while [ -e "BENCH_$n.json" ]; do
+    n=$((n + 1))
+done
+out="BENCH_$n.json"
+lines="$(mktemp)"
+trap 'rm -f "$lines"' EXIT
+
+for b in bench_faultsim bench_eval bench_hotpath; do
+    echo "== bench.sh: cargo bench --bench $b =="
+    # benches print human lines + one JSON object per measurement; keep
+    # the human output on the terminal, collect the JSON. Only grep's
+    # no-match status is forgiven — a bench failure (the in-bench
+    # bit-identity assertions included) still fails the run via pipefail.
+    cargo bench --bench "$b" | tee /dev/stderr | { grep '^{' || true; } >> "$lines"
+done
+
+{
+    printf '{"schema":"deepaxe-bench-v1","run":%s,"smoke":%s,"records":[' "$n" "$SMOKE"
+    paste -sd, "$lines"
+    printf ']}\n'
+} > "$out"
+echo "bench.sh: wrote $out ($(wc -l < "$lines" | tr -d ' ') records)"

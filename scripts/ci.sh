@@ -28,6 +28,11 @@ echo "== tier-1: cargo bench --no-run =="
 # compiling them here keeps bench_faultsim & friends from silently rotting.
 cargo bench --no-run
 
+echo "== perf: scripts/bench.sh --smoke =="
+# Tiny-knob bench sweep recording BENCH_<n>.json (faults/s, replay depth,
+# delta speedup, points/s per tier); exits 0 when artifacts are absent.
+scripts/bench.sh --smoke
+
 if [ "${CI_SKIP_FMT:-0}" != "1" ]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== style: cargo fmt --check =="
