@@ -22,12 +22,14 @@ pub fn emit(bench: &str, config: &str, metric: &str, value: f64) {
     println!("{j}");
 }
 
+#[allow(dead_code)] // artifact-free benches (bench_zoo) never call this
 pub fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 /// Bench-scale defaults: small enough for a 1-core box unless the caller
 /// overrides via env.
+#[allow(dead_code)] // artifact-free benches (bench_zoo) never call this
 pub fn setup(faults: usize, images: usize, eval_images: usize) -> Ctx {
     let a = artifacts();
     assert!(

@@ -87,4 +87,41 @@ fn main() {
     );
     emit("bench_eval_search", "staged", "trace_builds", screened_ev.ledger().trace_builds() as f64);
     emit("bench_eval_search", "staged", "delta_replays", screened_ev.ledger().delta_replays() as f64);
+
+    // -- zoo tier throughput: generated 12-layer net, no artifacts --------
+    let zoo = deepaxe::zoo::build("mlp-deep-12", 0x5EED, fi.n_images.max(64)).expect("zoo");
+    let zoo_luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let zoo_fi = fi.clone();
+    let zoo_ev = Evaluator::new(&zoo.net, &zoo.data, &zoo_luts, 64, zoo_fi.clone());
+    let zoo_space = SearchSpace::paper(
+        &zoo.net,
+        &deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
+    );
+    let zoo_staged = StagedEvaluator::new(
+        &zoo_ev,
+        FidelitySpec {
+            epsilon_pp: 0.5,
+            screen_faults: (zoo_fi.n_faults / 5).max(8),
+            ..FidelitySpec::exact()
+        },
+    );
+    let mut zrng = Rng::new(0x200);
+    let zoo_genos: Vec<Genotype> = (0..6).map(|_| zoo_space.random(&mut zrng)).collect();
+    for fidelity in [Fidelity::Accuracy, Fidelity::FiScreen, Fidelity::FiFull] {
+        let t0 = Instant::now();
+        for g in &zoo_genos {
+            black_box(zoo_staged.evaluate(&zoo_space.decode(g), fidelity, None));
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let pps = zoo_genos.len() as f64 / dt;
+        println!(
+            "bench eval:zoo:{:<6} {} points in {:6.2}s = {:8.2} points/s (mlp-deep-12)",
+            fidelity.name(),
+            zoo_genos.len(),
+            dt,
+            pps
+        );
+        emit("bench_eval_zoo_tier", fidelity.name(), "points_per_s", pps);
+    }
 }

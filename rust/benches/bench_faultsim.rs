@@ -101,4 +101,25 @@ fn main() {
     let speedup = rate["delta-on"] / rate["delta-off"].max(1e-12);
     println!("bench faultsim: delta on/off speedup {speedup:.2}x (first-suffix-layer patch)");
     emit("delta-on", "delta_speedup_vs_off", speedup);
+
+    // -- zoo config: the same campaign on a generated conv net ------------
+    // (site sampling over zoo topologies; artifact-free inputs, recorded
+    // into BENCH_<n>.json alongside the artifact runs)
+    let zoo = deepaxe::zoo::build("convnet-11", 0x5EED, base.n_images).expect("zoo build");
+    let exact = deepaxe::axmul::by_name("exact").expect("catalog").lut();
+    let zoo_engine = Engine::uniform(&zoo.net, &exact);
+    let zparams = CampaignParams { replay: true, gate: true, delta: true, ..base.clone() };
+    let t0 = Instant::now();
+    let r = black_box(run_campaign(&zoo_engine, &zoo.data, &zparams));
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let faults_per_s = r.n_faults as f64 / dt;
+    println!(
+        "bench faultsim:zoo-convnet-11 {:6.2}s = {faults_per_s:8.2} faults/s, mean replay depth {:.3}, {:.1}% masked",
+        dt,
+        r.replay.mean_depth(),
+        r.replay.masked_fraction() * 100.0,
+    );
+    emit("zoo-convnet-11", "faults_per_s", faults_per_s);
+    emit("zoo-convnet-11", "mean_replay_depth", r.replay.mean_depth());
+    emit("zoo-convnet-11", "masked_fraction", r.replay.masked_fraction());
 }

@@ -63,4 +63,32 @@ fn main() {
         out.hypervolume() / ex_hv.max(1e-12) * 100.0,
         dt / ex_dt.max(1e-9) * 100.0,
     );
+
+    // -- zoo config: the search the zoo unlocks — a 16-computing-layer
+    // generated net whose 4^16 space has no exhaustive reference at all
+    let zoo = deepaxe::zoo::build("mlp-deep-16", 0x5EED, 64.max(fi.n_images)).expect("zoo");
+    let zoo_luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let zoo_ev = Evaluator::new(&zoo.net, &zoo.data, &zoo_luts, 64, fi.clone());
+    let zoo_space = SearchSpace::paper(&zoo.net, &mults);
+    let mut zoo_spec = SearchSpec::new(Strategy::Nsga2);
+    zoo_spec.budget = 24;
+    zoo_spec.seed = fi.seed;
+    let zoo_backend = EvaluatorBackend { ev: &zoo_ev };
+    let (zout, zdt) = time_once("search:zoo_mlp_deep_16", || {
+        run_search(&zoo_space, &zoo_spec, &zoo_backend, &mut deepaxe::search::NoCache)
+    });
+    println!(
+        "zoo nsga2: {} evals of a {}-config space in {zdt:.2}s, hv {:.1}",
+        zout.evals_used,
+        zout.space_size,
+        zout.hypervolume(),
+    );
+    bench_common::emit(
+        "bench_search_zoo",
+        "mlp-deep-16",
+        "points_per_s",
+        zout.evals_used as f64 / zdt.max(1e-9),
+    );
+    bench_common::emit("bench_search_zoo", "mlp-deep-16", "hv2d", zout.hypervolume());
 }

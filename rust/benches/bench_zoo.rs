@@ -1,0 +1,93 @@
+//! Zoo harness: generation throughput (net synthesis + workload) and a
+//! staged deep-net search on a generated 16-layer net — the one bench
+//! that needs **no artifacts**, so `scripts/bench.sh` records it in every
+//! container. Honours the usual env knobs (DEEPAXE_FI_FAULTS /
+//! DEEPAXE_FI_IMAGES / DEEPAXE_EVAL_IMAGES) for `--smoke` runs.
+
+mod bench_common;
+
+use bench_common::emit;
+use deepaxe::dse::Evaluator;
+use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+use deepaxe::faultsim::{CampaignParams, SiteSampling};
+use deepaxe::search::{hypervolume3, run_search, NoCache, SearchSpace, SearchSpec, Strategy};
+use deepaxe::util::bench::black_box;
+use deepaxe::util::cli::env_usize;
+use std::time::Instant;
+
+fn main() {
+    let faults = env_usize("DEEPAXE_FI_FAULTS", 24);
+    let images = env_usize("DEEPAXE_FI_IMAGES", 16);
+    let eval_images = env_usize("DEEPAXE_EVAL_IMAGES", 48);
+
+    // -- generation throughput: bundles per second ------------------------
+    for name in ["zoo-tiny", "mlp-deep-16"] {
+        let t0 = Instant::now();
+        let reps = 5;
+        let mut digest = 0u64;
+        for seed in 0..reps {
+            let b = deepaxe::zoo::build(name, seed, eval_images.max(images)).expect("zoo build");
+            digest ^= black_box(deepaxe::zoo::digest_bundle(&b));
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_s = reps as f64 / dt;
+        println!(
+            "bench zoo:gen:{name:<12} {reps} bundles in {dt:6.3}s = {per_s:7.2} bundles/s (xor digest {digest:016x})"
+        );
+        emit("bench_zoo_gen", name, "bundles_per_s", per_s);
+    }
+
+    // -- staged deep-net search: the workload the zoo unlocks -------------
+    let fi = CampaignParams {
+        n_faults: faults,
+        n_images: images,
+        seed: 0x200BEC4,
+        workers: deepaxe::util::threadpool::default_workers(),
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+        gate: true,
+        delta: true,
+    };
+    let bundle =
+        deepaxe::zoo::build("mlp-deep-16", 0x5EED, eval_images.max(fi.n_images)).expect("zoo");
+    let luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, eval_images, fi.clone());
+    let space = SearchSpace::paper(
+        &bundle.net,
+        &deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
+    );
+    let spec_fid = FidelitySpec {
+        epsilon_pp: 0.5,
+        screen_faults: (fi.n_faults / 5).max(4),
+        ..FidelitySpec::exact()
+    };
+    let staged = StagedEvaluator::new(&ev, spec_fid);
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 24;
+    spec.seed = fi.seed;
+    spec.screen = true;
+    let t0 = Instant::now();
+    let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let pps = out.evals_used as f64 / dt;
+    println!(
+        "bench zoo:search mlp-deep-16 [{}] {} evals ({} promotions) of a {}-config space in {dt:6.2}s = {pps:6.2} points/s, hv2d {:.1}, hv3d {:.0}",
+        spec.strategy.name(),
+        out.evals_used,
+        out.promotions,
+        out.space_size,
+        out.hypervolume(),
+        hypervolume3(&out.evaluated),
+    );
+    println!("{}", staged.ledger().summary(fi.n_faults));
+    emit("bench_zoo_search", "mlp-deep-16", "points_per_s", pps);
+    emit("bench_zoo_search", "mlp-deep-16", "hv2d", out.hypervolume());
+    emit("bench_zoo_search", "mlp-deep-16", "hv3d", hypervolume3(&out.evaluated));
+    emit(
+        "bench_zoo_search",
+        "mlp-deep-16",
+        "prefix_hits",
+        staged.ledger().prefix_hits() as f64,
+    );
+}

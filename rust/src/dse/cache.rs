@@ -177,6 +177,14 @@ impl ResultCache {
         self.map.get(&key.to_string_key())
     }
 
+    /// Every cached `(string key, point)` pair, in key order. The string
+    /// key layout is documented on [`CacheKey`]; consumers that need the
+    /// per-layer assignment back out of a key (e.g. warm-starting a
+    /// search from cached frontiers) parse the `cfg:` / legacy segments.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &DesignPoint)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
     /// Insert + append to the backing file. Records are tagged with the
     /// fidelity they were computed at; pre-ladder readers ignore the extra
     /// field, pre-ladder *writers* never produced it — which is fine,

@@ -64,6 +64,51 @@ pub fn dominates(ax: f64, ay: f64, bx: f64, by: f64) -> bool {
     ax <= bx && ay <= by && (ax < bx || ay < by)
 }
 
+/// 3-D hypervolume indicator (all three objectives minimized): the volume
+/// dominated by `points` and bounded by `reference`, computed by slicing
+/// along the third axis — between consecutive z-levels the dominated area
+/// is the 2-D hypervolume of every point at or below that level, so the
+/// volume is `Σ area(z) · Δz`. NaN-bearing points and points at or beyond
+/// the reference in any objective contribute nothing (dominated points
+/// add no area by construction, so no explicit 3-D front is needed).
+/// Larger is better; values are comparable across runs only under the
+/// same reference. With a degenerate third axis (all points sharing one
+/// `z`) this reduces exactly to `hypervolume2d · (reference.2 − z)` —
+/// asserted by property test.
+pub fn hypervolume3d<T>(
+    points: &[T],
+    fx: impl Fn(&T) -> f64,
+    fy: impl Fn(&T) -> f64,
+    fz: impl Fn(&T) -> f64,
+    reference: (f64, f64, f64),
+) -> f64 {
+    let mut pts: Vec<(f64, f64, f64)> = points
+        .iter()
+        .map(|p| (fx(p), fy(p), fz(p)))
+        .filter(|&(x, y, z)| {
+            !x.is_nan()
+                && !y.is_nan()
+                && !z.is_nan()
+                && x < reference.0
+                && y < reference.1
+                && z < reference.2
+        })
+        .collect();
+    pts.sort_by(|a, b| a.2.total_cmp(&b.2));
+    let mut hv = 0.0;
+    for i in 0..pts.len() {
+        let z_hi = if i + 1 < pts.len() { pts[i + 1].2 } else { reference.2 };
+        let dz = z_hi - pts[i].2;
+        if dz <= 0.0 {
+            continue; // duplicate z-level; the later slice counts both
+        }
+        let slice = &pts[..=i];
+        let area = hypervolume2d(slice, |p| p.0, |p| p.1, (reference.0, reference.1));
+        hv += area * dz;
+    }
+    hv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +229,84 @@ mod tests {
                 assert!(hv >= prev - 1e-12, "hv shrank: {prev} -> {hv}");
                 prev = hv;
             }
+        });
+    }
+
+    #[test]
+    fn hypervolume3d_single_point_is_box_volume() {
+        let one = vec![(2.0, 3.0, 4.0)];
+        let hv = hypervolume3d(&one, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0));
+        assert!((hv - 8.0 * 7.0 * 6.0).abs() < 1e-12, "{hv}");
+        // dominated point contributes nothing
+        let two = vec![(2.0, 3.0, 4.0), (5.0, 6.0, 7.0)];
+        let hv2 = hypervolume3d(&two, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0));
+        assert!((hv2 - hv).abs() < 1e-12, "{hv2} vs {hv}");
+        // beyond-reference and NaN points are excluded, never panic
+        let junk = vec![(2.0, 3.0, 14.0), (f64::NAN, 0.0, 0.0), (0.0, 11.0, 0.0)];
+        assert_eq!(hypervolume3d(&junk, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0)), 0.0);
+        let empty: Vec<(f64, f64, f64)> = vec![];
+        assert_eq!(hypervolume3d(&empty, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0)), 0.0);
+    }
+
+    #[test]
+    fn hypervolume3d_two_non_dominated_points() {
+        // hand-computed: (2,3,4) and (1,5,6); slice z∈[4,6): only the
+        // first point, area (10-2)(10-3)=56; slice z∈[6,10): both points,
+        // 2-D hv of {(2,3),(1,5)} = (10-1)(10-5) + (10-2)(5-3) = 45+16 = 61
+        let pts = vec![(2.0, 3.0, 4.0), (1.0, 5.0, 6.0)];
+        let hv = hypervolume3d(&pts, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0));
+        assert!((hv - (56.0 * 2.0 + 61.0 * 4.0)).abs() < 1e-12, "{hv}");
+    }
+
+    #[test]
+    fn property_hypervolume3d_degenerate_z_reduces_to_2d() {
+        // the satellite criterion: with every point sharing one z-level,
+        // hv3d == hv2d × (ref_z − z) exactly
+        check("hv3d degenerate z == hv2d slab", 0x3D47, 40, |rng| {
+            let n = 1 + rng.usize_below(30);
+            let z = rng.f64() * 9.0;
+            let pts: Vec<(f64, f64, f64)> =
+                (0..n).map(|_| (rng.f64() * 10.0, rng.f64() * 10.0, z)).collect();
+            let hv3 = hypervolume3d(&pts, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0));
+            let hv2 = hypervolume2d(&pts, |p| p.0, |p| p.1, (10.0, 10.0));
+            let expect = hv2 * (10.0 - z);
+            assert!(
+                (hv3 - expect).abs() <= 1e-9 * expect.max(1.0),
+                "hv3 {hv3} != hv2 {hv2} x slab {}",
+                10.0 - z
+            );
+        });
+    }
+
+    #[test]
+    fn property_hypervolume3d_monotone_under_union() {
+        check("hv3d grows when points are added", 0x48F8, 40, |rng| {
+            let n = 1 + rng.usize_below(20);
+            let pts: Vec<(f64, f64, f64)> = (0..n)
+                .map(|_| (rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0))
+                .collect();
+            let r = (10.0, 10.0, 10.0);
+            let mut prev = 0.0;
+            for k in 1..=n {
+                let hv = hypervolume3d(&pts[..k], |p| p.0, |p| p.1, |p| p.2, r);
+                assert!(hv >= prev - 1e-9, "hv shrank: {prev} -> {hv}");
+                prev = hv;
+            }
+        });
+    }
+
+    #[test]
+    fn property_hypervolume3d_bounded_by_2d_slab() {
+        // projecting away z can only grow the dominated volume: hv3d ≤
+        // hv2d(x,y) × full z-extent
+        check("hv3d <= hv2d slab bound", 0x3DB0, 40, |rng| {
+            let n = 1 + rng.usize_below(20);
+            let pts: Vec<(f64, f64, f64)> = (0..n)
+                .map(|_| (rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0))
+                .collect();
+            let hv3 = hypervolume3d(&pts, |p| p.0, |p| p.1, |p| p.2, (10.0, 10.0, 10.0));
+            let hv2 = hypervolume2d(&pts, |p| p.0, |p| p.1, (10.0, 10.0));
+            assert!(hv3 <= hv2 * 10.0 + 1e-9, "{hv3} > {hv2} x 10");
         });
     }
 

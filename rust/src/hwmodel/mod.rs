@@ -53,13 +53,25 @@ pub fn mult_cost(m: &Multiplier) -> MultCost {
 }
 
 /// DeepHLS unroll heuristic: bigger networks get wider MAC arrays (the
-/// paper's LeNet/AlexNet utilization numbers imply substantial unrolling).
-pub fn unroll_factor(net_name: &str) -> u64 {
-    match net_name {
-        "lenet5" => 8,
-        "alexnet" => 16,
-        _ => 1,
+/// paper's LeNet/AlexNet utilization numbers imply substantial
+/// unrolling). Derived from the total MAC count — doubling every octave
+/// of workload above 2^16 MACs, clamped to [1, 16] — instead of the old
+/// net-*name* table, whose silent `_ => 1` fallback gave every zoo /
+/// custom net a serial MAC array and absurd latency estimates. The
+/// paper's three case studies keep their historical factors by
+/// calibration: mlp3 (~53K MACs) → 1, lenet5 (~282K) → 8,
+/// alexnet (~4.3M) → 16 (asserted in tests).
+pub fn unroll_for_macs(macs: u64) -> u64 {
+    if macs < (1 << 16) {
+        return 1;
     }
+    let octaves = 63 - macs.leading_zeros() as u64 - 15; // log2 floor − 15
+    1u64 << octaves.min(4)
+}
+
+/// Unroll factor for a concrete network (one inference's total MACs).
+pub fn unroll_factor(net: &QNet) -> u64 {
+    unroll_for_macs(net.total_macs())
 }
 
 // Per-MAC-unit resource archetypes (one multiplier + accumulate + requant
@@ -102,7 +114,7 @@ pub struct HwReport {
 /// computing layer ci.
 pub fn estimate(net: &QNet, config: &[&Multiplier]) -> HwReport {
     assert_eq!(config.len(), net.n_comp(), "one multiplier per computing layer");
-    let u = unroll_factor(&net.name);
+    let u = unroll_factor(net);
     let mut cycles = 0u64;
     let mut luts = BASE_LUT;
     let mut ffs = BASE_FF;
@@ -266,10 +278,35 @@ mod tests {
     }
 
     #[test]
-    fn unroll_factors() {
-        assert_eq!(unroll_factor("mlp3"), 1);
-        assert_eq!(unroll_factor("lenet5"), 8);
-        assert_eq!(unroll_factor("alexnet"), 16);
+    fn unroll_calibration_points_preserved() {
+        // the historical name-table values, now reproduced from MAC
+        // counts: mlp3 = 784·64 + 64·32 + 32·10 = 52,544; lenet5 =
+        // 24²·25·6 + 8²·150·16 + 256·120 + 120·84 + 84·10 = 281,640;
+        // alexnet (CIFAR-scale variant) ≈ 4.3M
+        assert_eq!(unroll_for_macs(52_544), 1, "mlp3");
+        assert_eq!(unroll_for_macs(281_640), 8, "lenet5");
+        assert_eq!(unroll_for_macs(4_305_888), 16, "alexnet");
+        // monotone non-decreasing, clamped to [1, 16]
+        assert_eq!(unroll_for_macs(0), 1);
+        assert_eq!(unroll_for_macs(18), 1, "tiny test fixtures stay serial");
+        assert_eq!(unroll_for_macs(u64::MAX), 16);
+        let mut prev = 0;
+        for shift in 0..40 {
+            let u = unroll_for_macs(1u64 << shift);
+            assert!(u >= prev, "unroll must not shrink with workload");
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn unroll_no_longer_depends_on_the_net_name() {
+        // the satellite criterion: unknown names no longer fall back to a
+        // serial array — only the MAC count matters
+        let mut net = mlp3_sized();
+        let u = unroll_factor(&net);
+        net.name = "zoo-whatever".into();
+        assert_eq!(unroll_factor(&net), u);
+        assert_eq!(u, unroll_for_macs(net.total_macs()));
     }
 
     #[test]

@@ -34,6 +34,10 @@
 //!   assignments; replaces the `2^n` enumeration with budgeted search so
 //!   deep-net workloads the exhaustive sweep can never touch become
 //!   tractable.
+//! * [`zoo`] — parametric model zoo + synthetic workload generator:
+//!   topology grammar, seeded weight synthesis with calibrated
+//!   quantization, teacher-labeled datasets — deep nets and their
+//!   workloads as pure functions of `(spec, seed)`, no artifacts needed.
 //! * [`runtime`] — PJRT executor for the AOT-lowered L2+L1 graphs.
 //! * [`coordinator`] — the tool-chain pipeline (Fig. 1/2 of the paper),
 //!   job scheduling, result caching, CLI entry points.
@@ -53,6 +57,7 @@ pub mod search;
 pub mod simnet;
 pub mod tensor;
 pub mod util;
+pub mod zoo;
 
 /// Locate the artifacts directory: `$DEEPAXE_ARTIFACTS` or `./artifacts`
 /// (walking up from the current dir so tests work from any cwd).

@@ -23,7 +23,9 @@ COMMANDS
   info                         artifact + model-zoo summary
   exp <id>                     regenerate a paper experiment:
                                table1 table2 table3 table4 fig3 fig4
-                               ablation-fi-n ablation-axm search all
+                               ablation-fi-n ablation-axm search zoo-sweep all
+                               (zoo-sweep is artifact-free: deep-net DSE on a
+                               generated 16-layer net, hv2d/hv3d comparison)
   eval                         evaluate one configuration
       --net <name> --mult <kvp|kv9|kv8|exact> --config <e.g. 1-0-110> [--fi]
   pipeline                     automated Fig.2 design flow
@@ -34,7 +36,15 @@ COMMANDS
                                multiplier assignments (generalizes the 2^n sweep)
       --net <name> [--strategy nsga2|anneal|hillclimb|exhaustive]
       [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
-      [--fi-epsilon PP] [--fi-screen N]
+      [--fi-epsilon PP] [--fi-screen N] [--warm-start]
+  zoo list                     parametric model zoo: presets + generated stats
+  zoo build                    generate a zoo net + workload, print its digest
+      --net <preset>|--spec <topology> [--seed N] [--images N]
+      topology grammar: i<C>x<H>x<W> C<out>k<k>[s<s>][p<p>] P<size> F<n>,
+      dash-separated (e.g. C6k5-P2-C16k5-P2-F120-F84-F10); presets:
+      lenet5 lenet5-wide convnet-11 mlp-deep-12 mlp-deep-16 zoo-tiny
+  zoo search                   budgeted DSE on a generated net — no artifacts
+      --net <preset>|--spec <topology> [--seed N] plus every `search` knob
   parity                       simnet vs AOT/PJRT executable cross-check
       --net <name> [--images n]
   faults                       Leveugle statistical FI sizing per network
@@ -118,8 +128,8 @@ fn fidelity_spec(args: &cli::Args) -> Result<deepaxe::eval::FidelitySpec> {
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen"],
-        &["fi", "no-fi", "help"],
+        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen"],
+        &["fi", "no-fi", "warm-start", "help"],
     )
     .map_err(anyhow::Error::msg)?;
 
@@ -143,6 +153,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => eval_one(&args),
         "pipeline" => pipeline_cmd(&args),
         "search" => search_cmd(&args),
+        "zoo" => zoo_cmd(&args),
         "parity" => parity(&args),
         "faults" => fault_sizing(),
         "stuck" => stuck_cmd(&args),
@@ -176,12 +187,18 @@ fn info() -> Result<()> {
 }
 
 fn experiment(args: &cli::Args) -> Result<()> {
-    let ctx = Ctx::load()?;
     let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    // zoo-sweep is artifact-free by design: dispatch before Ctx::load so
+    // it runs in containers that have no ./artifacts at all
+    if id == "zoo-sweep" {
+        println!("{}", exp::zoo_sweep(args.get_usize("budget", 0)?)?);
+        return Ok(());
+    }
+    let ctx = Ctx::load()?;
     let nets = args.get_list("nets", &["mlp3", "lenet5", "alexnet"]);
     let mut outputs = Vec::new();
     let ids: Vec<&str> = if id == "all" {
-        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm", "search"]
+        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm", "search", "zoo-sweep"]
     } else {
         vec![id]
     };
@@ -196,6 +213,7 @@ fn experiment(args: &cli::Args) -> Result<()> {
             "ablation-fi-n" => exp::ablation_fi_n(&ctx)?,
             "ablation-axm" => exp::ablation_axm(&ctx)?,
             "search" => exp::search_vs_exhaustive(&ctx)?,
+            "zoo-sweep" => exp::zoo_sweep(args.get_usize("budget", 0)?)?,
             other => bail!("unknown experiment {other:?}"),
         };
         println!("{out}");
@@ -312,6 +330,7 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     spec.with_fi = !args.has("no-fi");
     spec.screen = fidelity.screening_enabled();
     spec.workers = args.get_usize("workers", 1)?;
+    spec.warm_start = args.has("warm-start");
     let budget = spec.resolved_budget(&space);
     eprintln!(
         "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, fi-epsilon {}pp, fi-screen {}",
@@ -334,11 +353,24 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         eval_images,
     };
     let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
+    print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
+    Ok(())
+}
 
+/// Frontier table + budget/ledger/hypervolume summary shared by
+/// `repro search` and `repro zoo search`.
+fn print_search_report(
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    net_name: &str,
+    out: &deepaxe::search::SearchOutcome,
+    budget: usize,
+    ledger_summary: &str,
+) {
     let mut t = Table::new(
         &format!(
             "search frontier: {} [{}] (digit = alphabet index: {})",
-            net.name,
+            net_name,
             spec.strategy.name(),
             space.alphabet.join(",")
         ),
@@ -362,8 +394,14 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         out.promotions,
         out.space_size,
     );
-    println!("{}", staged.ledger().summary(fi.n_faults));
-    println!("hypervolume (ref {:?}): {:.1}", deepaxe::search::HV_REF, out.hypervolume());
+    println!("{ledger_summary}");
+    println!(
+        "hypervolume2d (ref {:?}): {:.1} | hypervolume3d (ref {:?}): {:.0}",
+        deepaxe::search::HV_REF,
+        out.hypervolume(),
+        deepaxe::search::HV3_REF,
+        deepaxe::search::hypervolume3(&out.evaluated),
+    );
     for w in out.trace.windows(2) {
         if w[1].hypervolume > w[0].hypervolume {
             println!(
@@ -372,6 +410,139 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
             );
         }
     }
+}
+
+fn zoo_cmd(args: &cli::Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()).unwrap_or("list") {
+        "list" => zoo_list(),
+        "build" => zoo_build(args),
+        "search" => zoo_search(args),
+        other => bail!("unknown zoo subcommand {other:?} (list|build|search)\n{USAGE}"),
+    }
+}
+
+/// `--spec` wins over `--net`; one of them is required for build/search.
+fn zoo_target(args: &cli::Args) -> Result<String> {
+    args.get("spec")
+        .or_else(|| args.get("net"))
+        .map(str::to_string)
+        .context("--net <preset> or --spec <topology> required (see `repro zoo list`)")
+}
+
+fn zoo_list() -> Result<()> {
+    let reg = deepaxe::zoo::Registry::builtin();
+    let mults: Vec<String> =
+        deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let mut t = Table::new(
+        "model zoo presets (stats generated with seed 0x5EED; artifact-free)",
+        &["name", "spec", "layers", "template", "neurons", "MACs", "unroll", "space (exact+3 AxM)"],
+    );
+    for name in reg.names() {
+        let net = reg.build_net(name, 0x5EED).map_err(anyhow::Error::msg)?;
+        let space = SearchSpace::paper(&net, &mults);
+        t.row(vec![
+            name.to_string(),
+            reg.spec_of(name).unwrap_or("?").to_string(),
+            net.n_comp().to_string(),
+            net.config_template.clone(),
+            net.total_neurons().to_string(),
+            net.total_macs().to_string(),
+            deepaxe::hwmodel::unroll_factor(&net).to_string(),
+            space.size().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("grammar: i<C>x<H>x<W> C<out>k<k>[s<s>][p<p>] P<size> F<n>, dash-separated");
+    Ok(())
+}
+
+fn zoo_build(args: &cli::Args) -> Result<()> {
+    let target = zoo_target(args)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let images = args.get_usize("images", 64)?;
+    let bundle = deepaxe::zoo::build(&target, seed, images).map_err(anyhow::Error::msg)?;
+    let classes = bundle.net.comp(bundle.net.n_comp() - 1).act_len();
+    let mut t = Table::new(
+        &format!("zoo build: {} (seed {seed:#x})", bundle.net.name),
+        &["metric", "value"],
+    );
+    t.row(vec!["spec".into(), bundle.spec.render()]);
+    t.row(vec!["computing layers".into(), bundle.net.n_comp().to_string()]);
+    t.row(vec!["config template".into(), bundle.net.config_template.clone()]);
+    t.row(vec!["neurons".into(), bundle.net.total_neurons().to_string()]);
+    t.row(vec!["MACs".into(), bundle.net.total_macs().to_string()]);
+    t.row(vec!["images x classes".into(), format!("{images} x {classes}")]);
+    t.row(vec!["unroll".into(), deepaxe::hwmodel::unroll_factor(&bundle.net).to_string()]);
+    print!("{}", t.render());
+    println!(
+        "digest {:016x} — bit-identical for this (spec, seed, images) on every host/thread",
+        deepaxe::zoo::digest_bundle(&bundle)
+    );
+    Ok(())
+}
+
+/// Budgeted DSE over a generated zoo net: the full `repro search` flow —
+/// staged fidelity ladder, persistent result cache, warm start — with the
+/// network and workload synthesized on the spot. No artifacts anywhere.
+fn zoo_search(args: &cli::Args) -> Result<()> {
+    use deepaxe::util::cli::env_usize;
+    let target = zoo_target(args)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let fi = CampaignParams {
+        n_faults: env_usize("DEEPAXE_FI_FAULTS", 60),
+        n_images: env_usize("DEEPAXE_FI_IMAGES", 48),
+        seed,
+        ..CampaignParams::default_for("zoo")
+    };
+    let eval_images = env_usize("DEEPAXE_EVAL_IMAGES", 120);
+    let bundle = deepaxe::zoo::build(&target, seed, eval_images.max(fi.n_images))
+        .map_err(anyhow::Error::msg)?;
+    let net = &bundle.net;
+    let luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let mults: Vec<String> = args
+        .get_list("mults", &["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"])
+        .iter()
+        .map(|m| exp::mult_name(m).to_string())
+        .collect();
+    let space = SearchSpace::paper(net, &mults);
+    let ev = deepaxe::dse::Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
+
+    let fidelity = fidelity_spec(args)?;
+    let mut spec = SearchSpec::new(
+        Strategy::parse(args.get_or("strategy", "nsga2")).map_err(anyhow::Error::msg)?,
+    );
+    spec.budget = args.get_usize("budget", 64)?;
+    spec.seed = seed;
+    spec.with_fi = !args.has("no-fi");
+    spec.screen = fidelity.screening_enabled();
+    spec.workers = args.get_usize("workers", 1)?;
+    spec.warm_start = args.has("warm-start");
+    let budget = spec.resolved_budget(&space);
+    eprintln!(
+        "zoo search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, warm-start {}",
+        spec.strategy.name(),
+        net.name,
+        space.n_layers,
+        space.alphabet.join(","),
+        space.size(),
+        budget,
+        spec.warm_start,
+    );
+
+    std::fs::create_dir_all("results").ok();
+    let mut cache =
+        deepaxe::dse::cache::ResultCache::open(std::path::Path::new("results/zoo_results.jsonl"));
+    let staged = deepaxe::eval::StagedEvaluator::new(&ev, fidelity);
+    let backend = deepaxe::eval::StagedBackend { st: &staged };
+    let mut hook = deepaxe::search::ResultCacheHook {
+        cache: &mut cache,
+        net: net.name.clone(),
+        fi: fi.clone(),
+        eval_images,
+    };
+    let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
+    print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
     Ok(())
 }
 

@@ -103,6 +103,15 @@ pub struct SearchSpec {
     /// [`crate::util::threadpool::WorkerBudget`], so raising it can no
     /// longer oversubscribe the host
     pub workers: usize,
+    /// seed the initial population from the persistent cache's recorded
+    /// frontier for this `(net, alphabet)`
+    /// ([`CacheHook::warm_genotypes`]) in addition to the structured
+    /// seeds. Budget accounting is unchanged: warm seeds flow through the
+    /// normal batch path — typically as cache hits — and each unique one
+    /// consumes a budget unit exactly like any other genotype, so a
+    /// warm-started trajectory is reproducible regardless of cache
+    /// warmth.
+    pub warm_start: bool,
 }
 
 impl SearchSpec {
@@ -115,6 +124,7 @@ impl SearchSpec {
             with_fi: true,
             screen: false,
             workers: 1,
+            warm_start: false,
         }
     }
 
@@ -184,6 +194,13 @@ impl EvalBackend for EvaluatorBackend<'_> {
 pub trait CacheHook {
     fn get(&self, names: &[&str], fidelity: Fidelity) -> Option<DesignPoint>;
     fn put(&mut self, names: &[&str], fidelity: Fidelity, point: &DesignPoint);
+
+    /// Frontier genotypes recorded by earlier runs over the same
+    /// `(net, alphabet)` — the warm-start seed pool for
+    /// [`SearchSpec::warm_start`]. Default: none (no persistence).
+    fn warm_genotypes(&self, _space: &SearchSpace) -> Vec<Genotype> {
+        Vec::new()
+    }
 }
 
 /// No persistence (unit tests, throwaway sweeps).
@@ -218,6 +235,34 @@ impl ResultCacheHook<'_> {
             fidelity,
         )
     }
+
+    /// Reconstruct a genotype from a cache-key segment: the generalized
+    /// `cfg:` assignment or the legacy `(mult, mask)` pair. `None` when
+    /// the entry does not fit `space` (different depth, or a multiplier
+    /// outside the alphabet).
+    fn key_genotype(space: &SearchSpace, key_rest: &str) -> Option<Genotype> {
+        if let Some(cfg) = key_rest.strip_prefix("cfg:") {
+            let names = cfg.split('|').next()?;
+            let g: Option<Genotype> = names
+                .split(',')
+                .map(|n| space.alphabet.iter().position(|a| a == n).map(|i| i as u8))
+                .collect();
+            let g = g?;
+            return (g.len() == space.n_layers).then_some(g);
+        }
+        let mut parts = key_rest.split('|');
+        let mult = parts.next()?;
+        let mask = u64::from_str_radix(parts.next()?, 16).ok()?;
+        if space.n_layers < 64 && mask >> space.n_layers != 0 {
+            return None; // mask wider than this net
+        }
+        let sym = if mask == 0 {
+            0
+        } else {
+            space.alphabet.iter().position(|a| a == mult)? as u8
+        };
+        Some((0..space.n_layers).map(|ci| if mask >> ci & 1 == 1 { sym } else { 0 }).collect())
+    }
 }
 
 impl CacheHook for ResultCacheHook<'_> {
@@ -247,11 +292,68 @@ impl CacheHook for ResultCacheHook<'_> {
             eprintln!("search: cache write failed ({e}); continuing");
         }
     }
+
+    /// Warm-start pool: parse every cached entry for this net back into a
+    /// genotype of `space` (legacy `(mult, mask)` sweep rows and
+    /// generalized `cfg:` assignments both count), then return the
+    /// recorded frontier — `(util, vulnerability)` when any entry carries
+    /// an FI estimate, `(util, accuracy drop)` otherwise. Entries whose
+    /// multipliers fall outside the alphabet are skipped, so the pool is
+    /// always expressible in `space`.
+    fn warm_genotypes(&self, space: &SearchSpace) -> Vec<Genotype> {
+        let prefix = format!("{}|", self.net);
+        let mut genotypes: Vec<Genotype> = Vec::new();
+        let mut points: Vec<DesignPoint> = Vec::new();
+        for (key, point) in self.cache.entries() {
+            let Some(rest) = key.strip_prefix(prefix.as_str()) else { continue };
+            if let Some(g) = Self::key_genotype(space, rest) {
+                match genotypes.iter().position(|h| *h == g) {
+                    // a genotype cached at several tiers: keep the entry
+                    // that carries an FI estimate (an Accuracy-tier `|0`
+                    // key sorts before the FiFull `|1` key, and its NaN
+                    // vulnerability would drop the genotype from an FI
+                    // frontier)
+                    Some(i) => {
+                        if points[i].fault_vuln_pct.is_nan() && !point.fault_vuln_pct.is_nan() {
+                            points[i] = point.clone();
+                        }
+                    }
+                    None => {
+                        genotypes.push(g);
+                        points.push(point.clone());
+                    }
+                }
+            }
+        }
+        let has_fi = points.iter().any(|p| !p.fault_vuln_pct.is_nan());
+        let (front, _) = frontier_hv(&points, has_fi);
+        front.into_iter().map(|i| genotypes[i].clone()).collect()
+    }
 }
 
 /// Hypervolume reference point `(util %, drop pp)` — fixed so frontiers
 /// from different strategies/runs are directly comparable.
 pub const HV_REF: (f64, f64) = (100.0, 100.0);
+
+/// Reference for the 3-D indicator over
+/// `(accuracy drop pp, vulnerability pp, utilization %)` — all minimized,
+/// all naturally bounded by 100.
+pub const HV3_REF: (f64, f64, f64) = (100.0, 100.0, 100.0);
+
+/// 3-D hypervolume of a point set over (accuracy drop, fault
+/// vulnerability, utilization) under the fixed [`HV3_REF`] — the
+/// trilateral counterpart of [`frontier_hv`], reported alongside the 2-D
+/// indicator by `repro exp search` / `exp zoo-sweep`. Points without an
+/// FI estimate (NaN vulnerability) contribute nothing.
+pub fn hypervolume3(points: &[DesignPoint]) -> f64 {
+    crate::dse::pareto::hypervolume3d(
+        points,
+        |p| p.acc_drop_pct,
+        |p| p.fault_vuln_pct,
+        |p| p.util_pct,
+        HV3_REF,
+    )
+}
 
 /// One trace sample, appended after every evaluated batch.
 #[derive(Debug, Clone)]
@@ -585,6 +687,12 @@ pub fn run_search<B: EvalBackend>(
     let mut archive = Archive::new(space, budget, spec);
     let mut rng = Rng::new(spec.seed);
 
+    // warm start (SearchSpec::warm_start): cached frontier entries for
+    // this (net, alphabet) join the structured seeds. They are ordinary
+    // candidates — dedup'd, budget-charged, usually cache hits.
+    let warm: Vec<Genotype> =
+        if spec.warm_start { cache.warm_genotypes(space) } else { Vec::new() };
+
     // budget covers the space: every strategy is the exhaustive sweep
     // (lazy lexicographic prefix — no enumeration blow-up on big spaces)
     if spec.strategy == Strategy::Exhaustive || budget as u128 >= space.size() {
@@ -599,8 +707,14 @@ pub fn run_search<B: EvalBackend>(
         Strategy::Exhaustive => unreachable!("handled above"),
         Strategy::Nsga2 => {
             let pop_size = spec.pop.max(4).min(budget).max(1);
-            // warm start: structured seeds, then distinct random fill
+            // warm start: structured seeds (+ cached-frontier seeds), then
+            // distinct random fill
             let mut init = space.seeds();
+            for g in &warm {
+                if !init.contains(g) {
+                    init.push(g.clone());
+                }
+            }
             init.truncate(budget);
             let mut fill_attempts = 0;
             while init.len() < pop_size && fill_attempts < 100 * pop_size {
@@ -642,8 +756,14 @@ pub fn run_search<B: EvalBackend>(
         }
         Strategy::Anneal | Strategy::HillClimb => {
             // seed the archive with the structured designs first — they
-            // anchor the frontier extremes for free
+            // anchor the frontier extremes for free (cached-frontier warm
+            // seeds join them as additional walk starting points)
             let mut seeds = space.seeds();
+            for g in &warm {
+                if !seeds.contains(g) {
+                    seeds.push(g.clone());
+                }
+            }
             seeds.truncate(budget);
             archive.eval_batch(backend, cache, seeds.clone());
             let greedy_only = spec.strategy == Strategy::HillClimb;
@@ -968,6 +1088,164 @@ mod tests {
             &mut NoCache,
         );
         assert!(out.fidelities.iter().all(|&f| f == Fidelity::Accuracy));
+    }
+
+    /// Cache stub that only supplies warm-start genotypes (and counts how
+    /// often the driver asks for them).
+    struct WarmCache {
+        warm: Vec<Genotype>,
+        asked: std::cell::Cell<u32>,
+    }
+
+    impl CacheHook for WarmCache {
+        fn get(&self, _names: &[&str], _fidelity: Fidelity) -> Option<DesignPoint> {
+            None
+        }
+        fn put(&mut self, _names: &[&str], _fidelity: Fidelity, _point: &DesignPoint) {}
+        fn warm_genotypes(&self, _space: &SearchSpace) -> Vec<Genotype> {
+            self.asked.set(self.asked.get() + 1);
+            self.warm.clone()
+        }
+    }
+
+    #[test]
+    fn warm_start_seeds_join_the_initial_population() {
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.0 };
+        let warm = vec![vec![1u8, 2, 1], vec![2u8, 0, 1]];
+        // budget exactly covers structured seeds + warm pool, so the
+        // archive is deterministically seeds ∪ warm
+        let n_seeds = space.seeds().len();
+        let budget = n_seeds + warm.len();
+        for strat in [Strategy::Nsga2, Strategy::Anneal, Strategy::HillClimb] {
+            let mut cache = WarmCache { warm: warm.clone(), asked: std::cell::Cell::new(0) };
+            let spec = SearchSpec {
+                budget,
+                warm_start: true,
+                ..SearchSpec::new(strat)
+            };
+            let out = run_search(&space, &spec, &backend, &mut cache);
+            assert_eq!(cache.asked.get(), 1, "{strat:?} must consult the pool once");
+            for g in &warm {
+                assert!(out.genotypes.contains(g), "{strat:?} missing warm seed {g:?}");
+            }
+            assert!(out.evals_used <= budget, "{strat:?} budget accounting unchanged");
+        }
+        // disabled: the pool is never consulted
+        let mut cache = WarmCache { warm, asked: std::cell::Cell::new(0) };
+        let spec = SearchSpec { budget, ..SearchSpec::new(Strategy::Nsga2) };
+        let _ = run_search(&space, &spec, &backend, &mut cache);
+        assert_eq!(cache.asked.get(), 0, "warm_start off must not touch the pool");
+    }
+
+    #[test]
+    fn warm_start_duplicates_of_structured_seeds_cost_nothing_extra() {
+        // a warm pool that only repeats structured seeds changes nothing:
+        // same archive as a cold run with the same budget
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.0 };
+        let warm = vec![vec![0u8, 0, 0], vec![1u8, 1, 1]]; // both are seeds
+        let mk = |warm_start, warm: &Vec<Genotype>| {
+            let mut cache =
+                WarmCache { warm: warm.clone(), asked: std::cell::Cell::new(0) };
+            let spec = SearchSpec {
+                budget: 6,
+                seed: 0x11,
+                warm_start,
+                ..SearchSpec::new(Strategy::Nsga2)
+            };
+            run_search(&space, &spec, &backend, &mut cache)
+        };
+        let with = mk(true, &warm);
+        let without = mk(false, &warm);
+        assert_eq!(with.genotypes, without.genotypes);
+        assert_eq!(with.evals_used, without.evals_used);
+    }
+
+    #[test]
+    fn result_cache_hook_warm_genotypes_parses_legacy_and_cfg_keys() {
+        use crate::faultsim::{CampaignParams, SiteSampling};
+        let dir = std::env::temp_dir().join(format!("deepaxe_warm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let fi = CampaignParams {
+            n_faults: 10,
+            n_images: 20,
+            seed: 1,
+            workers: 1,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        let space = SearchSpace::with_dims(
+            "mlp3",
+            3,
+            vec!["exact".into(), "mul8s_1kvp_s".into(), "mul8s_1kv9_s".into()],
+            "xxx",
+        );
+        let mk_point = |util: f64, vuln: f64| DesignPoint {
+            net: "mlp3".into(),
+            mult: "x".into(),
+            mask: 0,
+            config_string: "000".into(),
+            base_acc: 0.9,
+            ax_acc: 0.88,
+            acc_drop_pct: 2.0,
+            fi_mean_acc: 0.8,
+            fault_vuln_pct: vuln,
+            fi_faults: 10,
+            fi_ci95_pp: 0.5,
+            cycles: 100,
+            luts: 10,
+            ffs: 10,
+            util_pct: util,
+            power_mw: 1.0,
+        };
+        let mut cache = ResultCache::open(&path);
+        let key = |names: &[&str]| {
+            CacheKey::for_assignment("mlp3", names, 10, 20, 30, 1, Fidelity::FiFull)
+        };
+        // legacy homogeneous row -> genotype [1, 0, 1]
+        cache.put(&key(&["mul8s_1kvp_s", "exact", "mul8s_1kvp_s"]), mk_point(40.0, 5.0)).unwrap();
+        // generalized cfg row -> genotype [1, 2, 0]
+        cache.put(&key(&["mul8s_1kvp_s", "mul8s_1kv9_s", "exact"]), mk_point(30.0, 8.0)).unwrap();
+        // dominated row: parses but loses the frontier cut
+        cache.put(&key(&["exact", "exact", "mul8s_1kvp_s"]), mk_point(50.0, 9.0)).unwrap();
+        // multiplier outside the alphabet: skipped entirely
+        cache.put(&key(&["trunc2", "exact", "exact"]), mk_point(1.0, 1.0)).unwrap();
+        // other net: skipped by the key prefix
+        let other = CacheKey::for_assignment(
+            "lenet5",
+            &["mul8s_1kvp_s", "exact", "exact"],
+            10,
+            20,
+            30,
+            1,
+            Fidelity::FiFull,
+        );
+        cache.put(&other, mk_point(0.5, 0.5)).unwrap();
+
+        let hook = ResultCacheHook {
+            cache: &mut cache,
+            net: "mlp3".into(),
+            fi,
+            eval_images: 30,
+        };
+        let mut warm = hook.warm_genotypes(&space);
+        warm.sort();
+        assert_eq!(warm, vec![vec![1u8, 0, 1], vec![1u8, 2, 0]]);
     }
 
     #[test]

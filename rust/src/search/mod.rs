@@ -37,7 +37,7 @@ pub mod nsga2;
 pub mod space;
 
 pub use driver::{
-    frontier_hv, run_search, CacheHook, EvalBackend, EvaluatorBackend, NoCache,
-    ResultCacheHook, SearchOutcome, SearchSpec, Strategy, TracePoint, HV_REF,
+    frontier_hv, hypervolume3, run_search, CacheHook, EvalBackend, EvaluatorBackend, NoCache,
+    ResultCacheHook, SearchOutcome, SearchSpec, Strategy, TracePoint, HV3_REF, HV_REF,
 };
 pub use space::{Genotype, SearchSpace};

@@ -140,6 +140,13 @@ impl QNet {
 pub mod testutil {
     use super::*;
 
+    // The hand-built fixtures below (tiny_mlp / tiny_conv / tiny_conv2)
+    // pin exact engine semantics with known weights and are asserted
+    // against by the loader/engine tests; every *generated* synthetic net
+    // comes from the shared zoo generator ([`crate::zoo::synth`]) so
+    // property tests, benches and the CLI share one synthesis +
+    // calibration path.
+
     /// Hand-built tiny dense net for unit tests: 4 -> 3 -> 2, ReLU between.
     pub fn tiny_mlp() -> QNet {
         let l0 = CompLayer {
@@ -312,41 +319,12 @@ pub mod testutil {
     }
 
     /// Randomized dense chain (2..=4 layers, widths 2..=6) for property
-    /// tests over nets the hand-built fixtures cannot cover.
+    /// tests over nets the hand-built fixtures cannot cover. Delegates to
+    /// the shared zoo generator ([`crate::zoo::synth::random_mlp`]) so
+    /// every synthetic net in the crate — property tests, benches, CLI —
+    /// comes from one seeded synthesis + calibration path.
     pub fn random_mlp(rng: &mut crate::util::rng::Rng) -> QNet {
-        let n_layers = 2 + rng.usize_below(3);
-        let mut dims: Vec<usize> = Vec::with_capacity(n_layers + 1);
-        for _ in 0..=n_layers {
-            dims.push(2 + rng.usize_below(5));
-        }
-        let mut layers = vec![Layer::Flatten];
-        let mut comp_positions = Vec::new();
-        for l in 0..n_layers {
-            let (k, n) = (dims[l], dims[l + 1]);
-            let w: Vec<i8> = (0..k * n).map(|_| (rng.below(9) as i8) - 4).collect();
-            let b: Vec<i32> = (0..n).map(|_| (rng.below(21) as i32) - 10).collect();
-            comp_positions.push(layers.len());
-            layers.push(Layer::Comp(CompLayer {
-                kind: CompKind::Dense,
-                relu: l + 1 < n_layers,
-                w,
-                k_dim: k,
-                n_dim: n,
-                b,
-                m0: 1 << 30,
-                nshift: 31 + rng.below(2) as u32, // r = 0.5 or 0.25
-                act_shape: vec![n],
-            }));
-        }
-        QNet {
-            name: "randmlp".into(),
-            dataset: "none".into(),
-            input_shape: vec![1, 1, dims[0]],
-            input_scale: 1.0 / 127.0,
-            config_template: "x".repeat(n_layers),
-            layers,
-            comp_positions,
-        }
+        crate::zoo::synth::random_mlp(rng)
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Synthetic labeled workloads for zoo nets: prototype-plus-noise images,
+//! teacher-labeled by the exact-quantized network itself.
+//!
+//! Each class `c` (one per output logit) gets a random prototype image;
+//! samples cycle through the classes with a per-sample noise level drawn
+//! from a small ladder (`σ ∈ {6, 20, 45}`), so the set spans everything
+//! from near-prototype to heavily perturbed inputs. Labels are the
+//! **exact engine's own argmax** on each image — the fidelity convention
+//! of the approximate-computing literature: the exact-quantized network
+//! scores 100% by construction, and every accuracy number downstream
+//! (`ax_acc`, FI means) measures agreement with the exact computation.
+//! Because the noise ladder yields a spread of decision margins,
+//! approximate multipliers and injected bit-flips flip a measurable
+//! fraction of predictions — accuracy orderings stay non-trivial without
+//! any downloaded artifact.
+//!
+//! Determinism: images come from a seed-derived [`Rng`] stream and labels
+//! from the deterministic integer engine, so `(net, n_images, seed)` ⇒
+//! bit-identical dataset, across runs and threads.
+
+use crate::dataset::TestSet;
+use crate::simnet::{Buffers, Engine, QNet};
+use crate::tensor::TensorI8;
+use crate::util::rng::Rng;
+
+/// Per-sample noise ladder (int8 counts, uniform `±σ`).
+const NOISE_LADDER: [u64; 3] = [6, 20, 45];
+/// Prototype pixel range (uniform `[-96, 96]` — RMS ≈ 55, matching the
+/// synthesis calibration's `INPUT_RMS`).
+const PROTO_AMP: u64 = 96;
+
+/// Generate `n_images` teacher-labeled samples for `net` (see module
+/// docs). One class per output logit.
+pub fn synth_dataset(net: &QNet, n_images: usize, seed: u64) -> TestSet {
+    let n_classes = net.comp(net.n_comp() - 1).act_len().max(1);
+    let image_len = net.input_len();
+    let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+
+    // class prototypes
+    let protos: Vec<Vec<i8>> = (0..n_classes)
+        .map(|_| {
+            (0..image_len)
+                .map(|_| (rng.below(2 * PROTO_AMP + 1) as i64 - PROTO_AMP as i64) as i8)
+                .collect()
+        })
+        .collect();
+
+    let mut data = Vec::with_capacity(n_images * image_len);
+    for i in 0..n_images {
+        let class = i % n_classes;
+        let sigma = NOISE_LADDER[(i / n_classes) % NOISE_LADDER.len()];
+        for &p in &protos[class] {
+            let noisy = p as i64 + rng.below(2 * sigma + 1) as i64 - sigma as i64;
+            data.push(noisy.clamp(-127, 127) as i8);
+        }
+    }
+
+    // teacher labels from the exact engine — base accuracy is 1.0 by
+    // construction, so every downstream drop measures real degradation
+    let exact = crate::axmul::by_name("exact").expect("catalog").lut();
+    let engine = Engine::uniform(net, &exact);
+    let mut buf = Buffers::for_net(net);
+    let labels: Vec<i32> = (0..n_images)
+        .map(|i| engine.predict(&data[i * image_len..(i + 1) * image_len], None, &mut buf) as i32)
+        .collect();
+
+    let mut dims = vec![n_images];
+    dims.extend_from_slice(&net.input_shape);
+    TestSet {
+        name: format!("zoo:{}", net.name),
+        x: TensorI8::from_vec(&dims, data),
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::{grammar::resolve, synth::synth_qnet};
+
+    fn tiny_net() -> QNet {
+        synth_qnet(&resolve("zoo-tiny").unwrap(), "zoo-tiny", 11).unwrap()
+    }
+
+    #[test]
+    fn zoo_dataset_teacher_labels_match_exact_engine() {
+        let net = tiny_net();
+        let ds = synth_dataset(&net, 30, 99);
+        assert_eq!(ds.len(), 30);
+        assert_eq!(ds.x.dims, vec![30, 1, 8, 8]);
+        let exact = crate::axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let mut buf = Buffers::for_net(&net);
+        let acc = engine.accuracy(&ds, &mut buf);
+        assert_eq!(acc, 1.0, "exact engine must score 100% on its own labels");
+    }
+
+    #[test]
+    fn zoo_dataset_is_deterministic() {
+        let net = tiny_net();
+        let a = synth_dataset(&net, 24, 5);
+        let b = synth_dataset(&net, 24, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        let c = synth_dataset(&net, 24, 6);
+        assert_ne!(a.x, c.x, "different seeds must differ");
+    }
+
+    #[test]
+    fn zoo_dataset_covers_multiple_classes() {
+        // teacher labels are real argmaxes, so a healthy net + prototype
+        // structure should label more than one class across 60 samples
+        let net = tiny_net();
+        let ds = synth_dataset(&net, 60, 3);
+        let mut seen: Vec<i32> = ds.labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert!(
+            seen.len() >= 2,
+            "all {} samples collapsed onto class {:?}",
+            ds.len(),
+            seen
+        );
+        let n_classes = net.comp(net.n_comp() - 1).act_len() as i32;
+        assert!(ds.labels.iter().all(|&l| l >= 0 && l < n_classes));
+    }
+
+    #[test]
+    fn zoo_dataset_pixels_in_clamped_range() {
+        let net = tiny_net();
+        let ds = synth_dataset(&net, 12, 1);
+        assert!(ds.x.data.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+}

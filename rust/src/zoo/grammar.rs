@@ -1,0 +1,443 @@
+//! Topology grammar: compact dash-separated specs → [`TopoSpec`].
+//!
+//! A spec is a `-`-separated token list. Structural tokens are uppercase;
+//! lowercase letters inside a token are parameter markers:
+//!
+//! | token                      | meaning                                   |
+//! |----------------------------|-------------------------------------------|
+//! | `i<C>x<H>x<W>` (first only)| input shape, default `i1x28x28`           |
+//! | `C<out>k<k>[s<s>][p<p>]`   | conv, `out` filters, `k×k`, stride, pad   |
+//! | `P<size>`                  | max-pool `size×size`, stride = size       |
+//! | `F<n>`                     | dense layer with `n` outputs              |
+//!
+//! `C6k5-P2-C16k5-P2-F120-F84-F10` is the LeNet-5 topology; a `Flatten`
+//! is inserted automatically before the first dense layer that follows a
+//! spatial shape. Every computing layer gets ReLU except the last (the
+//! classifier logits). Rendering via [`TopoSpec::render`] is canonical
+//! (defaults `s1`/`p0` are omitted) and round-trips through [`parse`].
+
+/// One grammar-level operation (pre-synthesis: no weights, no shapes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    Conv { out_ch: usize, k: usize, stride: usize, pad: usize },
+    Pool { size: usize },
+    Dense { n: usize },
+}
+
+impl Op {
+    pub fn is_computing(&self) -> bool {
+        matches!(self, Op::Conv { .. } | Op::Dense { .. })
+    }
+}
+
+/// A parsed, validated network topology.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopoSpec {
+    /// input shape `[C, H, W]`
+    pub input: [usize; 3],
+    pub ops: Vec<Op>,
+}
+
+impl TopoSpec {
+    /// Number of computing (conv/dense) layers — the genotype length.
+    pub fn n_comp(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_computing()).count()
+    }
+
+    /// Paper-style config template: `x` per computing layer, `-` per pool
+    /// (matches [`crate::simnet::QNet::config_string`] conventions).
+    pub fn template(&self) -> String {
+        self.ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Conv { .. } | Op::Dense { .. } => Some('x'),
+                Op::Pool { .. } => Some('-'),
+            })
+            .collect()
+    }
+
+    /// Canonical spec string; `parse(render(s)) == s` for every valid spec.
+    pub fn render(&self) -> String {
+        let mut out = format!("i{}x{}x{}", self.input[0], self.input[1], self.input[2]);
+        for op in &self.ops {
+            out.push('-');
+            match op {
+                Op::Conv { out_ch, k, stride, pad } => {
+                    out.push_str(&format!("C{out_ch}k{k}"));
+                    if *stride != 1 {
+                        out.push_str(&format!("s{stride}"));
+                    }
+                    if *pad != 0 {
+                        out.push_str(&format!("p{pad}"));
+                    }
+                }
+                Op::Pool { size } => out.push_str(&format!("P{size}")),
+                Op::Dense { n } => out.push_str(&format!("F{n}")),
+            }
+        }
+        out
+    }
+
+    /// Walk the ops tracking activation shapes; errors on any geometry a
+    /// [`crate::simnet::QNet`] could not execute. Returns the per-op
+    /// *output* shapes (3-d `[C,H,W]` until the implicit flatten, then
+    /// 1-d `[N]`) and the total MAC count.
+    pub fn shape_walk(&self) -> Result<(Vec<Vec<usize>>, u64), String> {
+        if self.input.iter().any(|&d| d == 0) {
+            return Err(format!("input shape {:?} has a zero dim", self.input));
+        }
+        let n_comp = self.n_comp();
+        if n_comp == 0 {
+            return Err("spec has no computing layer".into());
+        }
+        if n_comp > 63 {
+            return Err(format!("{n_comp} computing layers exceeds the 63-layer genotype limit"));
+        }
+        let mut shape: Vec<usize> = self.input.to_vec();
+        let mut shapes = Vec::with_capacity(self.ops.len());
+        let mut macs = 0u64;
+        for (i, op) in self.ops.iter().enumerate() {
+            match op {
+                Op::Conv { out_ch, k, stride, pad } => {
+                    if shape.len() != 3 {
+                        return Err(format!("op {i}: conv after flatten (shape {shape:?})"));
+                    }
+                    if *out_ch == 0 || *k == 0 || *stride == 0 {
+                        return Err(format!("op {i}: conv params must be nonzero"));
+                    }
+                    let (c, h, w) = (shape[0], shape[1], shape[2]);
+                    // checked arithmetic: spec numbers are CLI input, and
+                    // wrap-around here would fabricate plausible geometry
+                    let padded = |d: usize| {
+                        pad.checked_mul(2)
+                            .and_then(|p| d.checked_add(p))
+                            .ok_or_else(|| format!("op {i}: pad {pad} overflows"))
+                    };
+                    let (ph, pw) = (padded(h)?, padded(w)?);
+                    if ph < *k || pw < *k {
+                        return Err(format!(
+                            "op {i}: kernel {k} larger than padded input {h}x{w} (pad {pad})"
+                        ));
+                    }
+                    let oh = (ph - k) / stride + 1;
+                    let ow = (pw - k) / stride + 1;
+                    let layer_macs = [ow, c, *k, *k, *out_ch]
+                        .iter()
+                        .try_fold(oh, |acc, &d| acc.checked_mul(d))
+                        .ok_or_else(|| format!("op {i}: MAC count overflows"))?;
+                    macs = macs
+                        .checked_add(layer_macs as u64)
+                        .ok_or_else(|| format!("op {i}: MAC count overflows"))?;
+                    shape = vec![*out_ch, oh, ow];
+                }
+                Op::Pool { size } => {
+                    if shape.len() != 3 {
+                        return Err(format!("op {i}: pool after flatten (shape {shape:?})"));
+                    }
+                    if *size == 0 || shape[1] < *size || shape[2] < *size {
+                        return Err(format!(
+                            "op {i}: pool {size} does not fit {}x{}",
+                            shape[1], shape[2]
+                        ));
+                    }
+                    shape = vec![shape[0], shape[1] / size, shape[2] / size];
+                }
+                Op::Dense { n } => {
+                    if *n == 0 {
+                        return Err(format!("op {i}: dense width must be nonzero"));
+                    }
+                    let k_dim = shape
+                        .iter()
+                        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                        .ok_or_else(|| format!("op {i}: flatten width overflows"))?;
+                    let layer_macs = k_dim
+                        .checked_mul(*n)
+                        .ok_or_else(|| format!("op {i}: MAC count overflows"))?;
+                    macs = macs
+                        .checked_add(layer_macs as u64)
+                        .ok_or_else(|| format!("op {i}: MAC count overflows"))?;
+                    shape = vec![*n];
+                }
+            }
+            shapes.push(shape.clone());
+        }
+        Ok((shapes, macs))
+    }
+}
+
+/// Built-in presets, name → spec. `lenet5` mirrors the artifact LeNet-5
+/// topology exactly (5 computing layers, 256-wide flatten); `convnet-11`
+/// and the `mlp-deep-*` family are the deep nets the exhaustive `2^n`
+/// flow can never sweep (4-symbol spaces of 4^11 … 4^16 configurations).
+pub const PRESETS: &[(&str, &str)] = &[
+    ("lenet5", "i1x28x28-C6k5-P2-C16k5-P2-F120-F84-F10"),
+    ("lenet5-wide", "i1x28x28-C12k5-P2-C32k5-P2-F240-F120-F10"),
+    (
+        "convnet-11",
+        "i1x16x16-C8k3p1-C8k3p1-P2-C16k3p1-C16k3p1-P2-C32k3p1-C32k3p1-P2-F128-F64-F32-F16-F10",
+    ),
+    (
+        "mlp-deep-12",
+        "i1x8x8-F80-F72-F64-F56-F48-F40-F32-F28-F24-F20-F16-F10",
+    ),
+    (
+        "mlp-deep-16",
+        "i1x8x8-F96-F88-F80-F72-F64-F56-F48-F44-F40-F36-F32-F28-F24-F20-F16-F10",
+    ),
+    ("zoo-tiny", "i1x8x8-C4k3p1-P2-F24-F10"),
+];
+
+/// Spec string for a preset name.
+pub fn preset(name: &str) -> Option<&'static str> {
+    PRESETS.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+}
+
+/// Parse a spec string (see module docs for the token grammar).
+pub fn parse(spec: &str) -> Result<TopoSpec, String> {
+    let mut input = [1usize, 28, 28];
+    let mut ops = Vec::new();
+    for (i, tok) in spec.split('-').enumerate() {
+        let bytes = tok.as_bytes();
+        if bytes.is_empty() {
+            return Err(format!("empty token in {spec:?}"));
+        }
+        let mut s = Scanner { bytes, pos: 1 };
+        match bytes[0] {
+            b'i' => {
+                if i != 0 {
+                    return Err(format!("input token {tok:?} must come first"));
+                }
+                let c = s.number(tok)?;
+                s.expect(b'x', tok)?;
+                let h = s.number(tok)?;
+                s.expect(b'x', tok)?;
+                let w = s.number(tok)?;
+                s.end(tok)?;
+                input = [c, h, w];
+            }
+            b'C' => {
+                let out_ch = s.number(tok)?;
+                s.expect(b'k', tok)?;
+                let k = s.number(tok)?;
+                let mut stride = 1;
+                let mut pad = 0;
+                while !s.done() {
+                    match s.bytes[s.pos] {
+                        b's' => {
+                            s.pos += 1;
+                            stride = s.number(tok)?;
+                        }
+                        b'p' => {
+                            s.pos += 1;
+                            pad = s.number(tok)?;
+                        }
+                        other => {
+                            return Err(format!(
+                                "unexpected {:?} in conv token {tok:?}",
+                                other as char
+                            ))
+                        }
+                    }
+                }
+                ops.push(Op::Conv { out_ch, k, stride, pad });
+            }
+            b'P' => {
+                let size = s.number(tok)?;
+                s.end(tok)?;
+                ops.push(Op::Pool { size });
+            }
+            b'F' => {
+                let n = s.number(tok)?;
+                s.end(tok)?;
+                ops.push(Op::Dense { n });
+            }
+            other => {
+                return Err(format!(
+                    "unknown token kind {:?} in {tok:?} (expect i/C/P/F)",
+                    other as char
+                ))
+            }
+        }
+    }
+    let spec = TopoSpec { input, ops };
+    spec.shape_walk()?; // geometry must be executable
+    Ok(spec)
+}
+
+/// Resolve a preset name or a raw spec string.
+pub fn resolve(name_or_spec: &str) -> Result<TopoSpec, String> {
+    match preset(name_or_spec) {
+        Some(s) => parse(s),
+        None => parse(name_or_spec).map_err(|e| {
+            format!(
+                "{name_or_spec:?} is neither a preset ({}) nor a valid spec: {e}",
+                PRESETS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+            )
+        }),
+    }
+}
+
+struct Scanner<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Scanner<'_> {
+    fn number(&mut self, tok: &str) -> Result<usize, String> {
+        let start = self.pos;
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_digit() {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(format!("expected a number at offset {start} of {tok:?}"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|_| format!("number out of range in {tok:?}"))
+    }
+
+    fn expect(&mut self, b: u8, tok: &str) -> Result<(), String> {
+        if self.pos < self.bytes.len() && self.bytes[self.pos] == b {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {} of {tok:?}", b as char, self.pos))
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.bytes.len()
+    }
+
+    fn end(&self, tok: &str) -> Result<(), String> {
+        if self.done() {
+            Ok(())
+        } else {
+            Err(format!("trailing characters in {tok:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet5_spec_parses_to_five_computing_layers() {
+        let t = resolve("lenet5").unwrap();
+        assert_eq!(t.input, [1, 28, 28]);
+        assert_eq!(t.n_comp(), 5);
+        assert_eq!(t.template(), "x-x-xxx");
+        let (shapes, macs) = t.shape_walk().unwrap();
+        // conv 24x24, pool 12, conv 8x8, pool 4 -> flatten 256 -> 120/84/10
+        assert_eq!(shapes[0], vec![6, 24, 24]);
+        assert_eq!(shapes[3], vec![16, 4, 4]);
+        assert_eq!(shapes.last().unwrap(), &vec![10]);
+        // 24²·25·6 + 8²·150·16 + 256·120 + 120·84 + 84·10
+        assert_eq!(macs, 86_400 + 153_600 + 30_720 + 10_080 + 840);
+    }
+
+    #[test]
+    fn deep_presets_have_declared_depths() {
+        assert_eq!(resolve("convnet-11").unwrap().n_comp(), 11);
+        assert_eq!(resolve("mlp-deep-12").unwrap().n_comp(), 12);
+        assert_eq!(resolve("mlp-deep-16").unwrap().n_comp(), 16);
+        assert_eq!(resolve("zoo-tiny").unwrap().n_comp(), 3);
+    }
+
+    #[test]
+    fn every_preset_parses_and_roundtrips() {
+        for (name, spec) in PRESETS {
+            let t = parse(spec).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(parse(&t.render()).unwrap(), t, "{name} must roundtrip");
+            assert!(t.n_comp() >= 1);
+        }
+    }
+
+    #[test]
+    fn conv_stride_pad_roundtrip() {
+        let t = parse("i3x9x9-C4k3s2p1-P2-F10").unwrap();
+        assert_eq!(
+            t.ops[0],
+            Op::Conv { out_ch: 4, k: 3, stride: 2, pad: 1 }
+        );
+        assert_eq!(t.render(), "i3x9x9-C4k3s2p1-P2-F10");
+        let (shapes, _) = t.shape_walk().unwrap();
+        assert_eq!(shapes[0], vec![4, 5, 5]); // (9+2-3)/2+1
+    }
+
+    #[test]
+    fn default_input_is_28x28() {
+        let t = parse("F32-F10").unwrap();
+        assert_eq!(t.input, [1, 28, 28]);
+        let (shapes, macs) = t.shape_walk().unwrap();
+        assert_eq!(shapes[0], vec![32]);
+        assert_eq!(macs, 784 * 32 + 32 * 10);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "",                      // empty token
+            "Q5",                    // unknown kind
+            "F10-i1x4x4",            // input not first
+            "C4",                    // conv without kernel
+            "i1x4x4-C4k9",           // kernel larger than input
+            "i1x4x4-P8",             // pool larger than input
+            "i1x4x4-P2-P4",          // pool after pool shrinks below size
+            "i1x4x4-F8-C2k1",        // conv after flatten
+            "i1x4x4-F8-P2",          // pool after flatten
+            "i1x4x4-F0",             // zero width
+            "i1x4x4-P2",             // no computing layer
+            "i0x4x4-F4",             // zero input dim
+            "i1x4x4-F8x",            // trailing garbage
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn absurd_spec_numbers_error_instead_of_overflowing() {
+        // CLI-supplied dimensions near usize::MAX must come back as parse
+        // errors, not debug panics / release wrap-around
+        for bad in [
+            "i1x4x4-C1k3p9223372036854775000",  // padded geometry explodes
+            "i1x4x4-F9223372036854775000-F2",   // dense MAC product overflows
+            "i1x4x4-C1k1s9223372036854775000",  // ok stride, huge => oh=1: valid
+        ] {
+            let r = parse(bad);
+            if bad.contains("s922") {
+                assert!(r.is_ok(), "huge stride collapses to one output: {r:?}");
+            } else {
+                let e = r.unwrap_err();
+                assert!(e.contains("overflow"), "{bad}: {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_names_unknown_gracefully() {
+        let err = resolve("no-such-net!").unwrap_err();
+        assert!(err.contains("neither a preset"), "{err}");
+        assert!(err.contains("mlp-deep-16"), "error must list presets: {err}");
+    }
+
+    #[test]
+    fn preset_names_unique() {
+        let mut names: Vec<_> = PRESETS.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PRESETS.len());
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let mut s = String::from("i1x4x4");
+        for _ in 0..64 {
+            s.push_str("-F4");
+        }
+        let err = parse(&s).unwrap_err();
+        assert!(err.contains("63-layer"), "{err}");
+    }
+}

@@ -1,0 +1,332 @@
+//! zoo — parametric model zoo + synthetic workload generator.
+//!
+//! Every deep-net code path in this crate used to be gated on downloaded
+//! artifacts (`artifacts/manifest.json`), which capped the search
+//! subsystem at nets small enough to enumerate. This module removes the
+//! gate: a topology grammar ([`grammar`]) parses compact specs like
+//! `C6k5-P2-C16k5-P2-F120-F84-F10` (and named presets — `lenet5`,
+//! `lenet5-wide`, `convnet-11`, `mlp-deep-12`, `mlp-deep-16`,
+//! `zoo-tiny`) into executable [`QNet`]s with seeded weight synthesis and
+//! analytically calibrated quantization ([`synth`]), and a paired
+//! generator emits teacher-labeled workloads whose class margins make
+//! accuracy meaningful and measurably degraded by approximation and
+//! faults ([`data`]). Everything is a pure function of `(spec, seed)` —
+//! bit-identical across runs, threads and hosts — so `Accuracy`,
+//! `FiScreen` and `FiFull` evaluations run anywhere, and the budgeted
+//! search strategies can finally be exercised on spaces (`4^12 … 4^16`
+//! configurations) the paper's exhaustive `2^n` flow can never touch.
+//!
+//! Entry points: [`Registry`] (preset catalog + custom registrations),
+//! [`build`] / [`build_net`] (one-call bundle/net construction), and
+//! [`digest_qnet`] / [`digest_bundle`] (order-sensitive FNV-1a
+//! fingerprints that make the determinism guarantee auditable from tests
+//! and the `repro zoo build` CLI).
+//!
+//! Zoo nets are namespaced `zoo-*` in [`QNet::name`] so their cache keys
+//! ([`crate::dse::cache::CacheKey`]) can never collide with the
+//! artifact-built networks of the same topology.
+
+pub mod data;
+pub mod grammar;
+pub mod synth;
+
+pub use data::synth_dataset;
+pub use grammar::{parse, preset, resolve, TopoSpec, PRESETS};
+pub use synth::{random_mlp, synth_qnet};
+
+use crate::dataset::TestSet;
+use crate::simnet::{Layer, QNet};
+
+/// A generated network plus its paired synthetic workload.
+pub struct ZooBundle {
+    /// preset name (or `"custom"` for raw specs)
+    pub name: String,
+    pub spec: TopoSpec,
+    pub net: QNet,
+    pub data: TestSet,
+}
+
+/// Preset catalog with optional user registrations. All lookups fall
+/// through to raw-spec parsing, so a `Registry` accepts everything
+/// [`resolve`] does plus its own entries.
+pub struct Registry {
+    entries: Vec<(String, String)>,
+}
+
+impl Registry {
+    /// The built-in presets ([`grammar::PRESETS`]).
+    pub fn builtin() -> Registry {
+        Registry {
+            entries: PRESETS.iter().map(|(n, s)| (n.to_string(), s.to_string())).collect(),
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn spec_of(&self, name: &str) -> Option<&str> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, s)| s.as_str())
+    }
+
+    /// Register a custom named spec (validated; duplicate names rejected).
+    pub fn register(&mut self, name: &str, spec: &str) -> Result<(), String> {
+        if self.spec_of(name).is_some() {
+            return Err(format!("zoo name {name:?} already registered"));
+        }
+        grammar::parse(spec)?;
+        self.entries.push((name.to_string(), spec.to_string()));
+        Ok(())
+    }
+
+    /// Resolve a registered name or a raw spec string.
+    pub fn resolve(&self, name_or_spec: &str) -> Result<(String, TopoSpec), String> {
+        if let Some(s) = self.spec_of(name_or_spec) {
+            return Ok((name_or_spec.to_string(), grammar::parse(s)?));
+        }
+        grammar::parse(name_or_spec)
+            .map(|t| ("custom".to_string(), t))
+            .map_err(|e| {
+                format!(
+                    "{name_or_spec:?} is neither a registered zoo net ({}) nor a valid spec: {e}",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Build just the network (weights, no workload) — `repro zoo list`
+    /// and the HLS cost model need nothing more.
+    pub fn build_net(&self, name_or_spec: &str, seed: u64) -> Result<QNet, String> {
+        let (name, spec) = self.resolve(name_or_spec)?;
+        synth::synth_qnet(&spec, &qnet_name(&name, &spec), seed)
+    }
+
+    /// Build a network plus its paired `n_images`-sample workload.
+    pub fn build(&self, name_or_spec: &str, seed: u64, n_images: usize) -> Result<ZooBundle, String> {
+        let (name, spec) = self.resolve(name_or_spec)?;
+        let net = synth::synth_qnet(&spec, &qnet_name(&name, &spec), seed)?;
+        let data = data::synth_dataset(&net, n_images, seed);
+        Ok(ZooBundle { name, spec, net, data })
+    }
+}
+
+/// `QNet::name` for a zoo net: `zoo-`-prefixed so cache keys can never
+/// collide with artifact-built networks of the same topology; raw specs
+/// carry their canonical rendering (self-describing keys).
+fn qnet_name(name: &str, spec: &TopoSpec) -> String {
+    if name == "custom" {
+        format!("zoo[{}]", spec.render())
+    } else if name.starts_with("zoo") {
+        name.to_string()
+    } else {
+        format!("zoo-{name}")
+    }
+}
+
+/// One-call bundle construction through the built-in registry.
+pub fn build(name_or_spec: &str, seed: u64, n_images: usize) -> Result<ZooBundle, String> {
+    Registry::builtin().build(name_or_spec, seed, n_images)
+}
+
+/// One-call net construction through the built-in registry.
+pub fn build_net(name_or_spec: &str, seed: u64) -> Result<QNet, String> {
+    Registry::builtin().build_net(name_or_spec, seed)
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn i8s(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.byte(v as u8);
+        }
+    }
+}
+
+/// Order-sensitive FNV-1a fingerprint of everything that defines a
+/// network's behavior: name, shapes, weights, biases and requantization
+/// constants. Equal digests ⇔ bit-identical nets (up to hash collision).
+pub fn digest_qnet(net: &QNet) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(net.name.as_bytes());
+    for &d in &net.input_shape {
+        h.u64(d as u64);
+    }
+    for l in &net.layers {
+        match l {
+            Layer::Flatten => h.byte(0xF1),
+            Layer::Pool { size } => {
+                h.byte(0xB0);
+                h.u64(*size as u64);
+            }
+            Layer::Comp(c) => {
+                h.byte(0xC0);
+                // kind + full conv geometry: stride/pad variants can share
+                // k_dim/n_dim/act_shape yet compute different functions
+                match &c.kind {
+                    crate::simnet::CompKind::Dense => h.byte(0xD0),
+                    crate::simnet::CompKind::Conv {
+                        in_ch,
+                        out_ch,
+                        ksize,
+                        stride,
+                        pad,
+                        in_h,
+                        in_w,
+                        out_h,
+                        out_w,
+                    } => {
+                        h.byte(0xC1);
+                        for &d in &[*in_ch, *out_ch, *ksize, *stride, *pad, *in_h, *in_w, *out_h, *out_w]
+                        {
+                            h.u64(d as u64);
+                        }
+                    }
+                }
+                h.u64(c.k_dim as u64);
+                h.u64(c.n_dim as u64);
+                h.u64(c.m0 as u64);
+                h.u64(c.nshift as u64);
+                h.byte(c.relu as u8);
+                h.i8s(&c.w);
+                for &b in &c.b {
+                    h.u64(b as u64);
+                }
+                for &d in &c.act_shape {
+                    h.u64(d as u64);
+                }
+            }
+        }
+    }
+    h.0
+}
+
+/// Digest of a full bundle: the net fingerprint plus every image byte and
+/// label — the value `repro zoo build` prints and the determinism tests
+/// compare across threads.
+pub fn digest_bundle(bundle: &ZooBundle) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(digest_qnet(&bundle.net));
+    for &d in &bundle.data.x.dims {
+        h.u64(d as u64);
+    }
+    h.i8s(&bundle.data.x.data);
+    for &l in &bundle.data.labels {
+        h.u64(l as u64);
+    }
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_registry_lists_builtin_presets() {
+        let r = Registry::builtin();
+        for name in ["lenet5", "lenet5-wide", "convnet-11", "mlp-deep-12", "mlp-deep-16", "zoo-tiny"]
+        {
+            assert!(r.names().contains(&name), "{name} missing");
+            assert!(r.spec_of(name).is_some());
+        }
+    }
+
+    #[test]
+    fn zoo_registry_register_and_reject_duplicates() {
+        let mut r = Registry::builtin();
+        r.register("my-net", "i1x4x4-F8-F2").unwrap();
+        assert_eq!(r.spec_of("my-net"), Some("i1x4x4-F8-F2"));
+        assert!(r.register("my-net", "i1x4x4-F4-F2").is_err(), "duplicate name");
+        assert!(r.register("other", "not a spec").is_err(), "invalid spec");
+        let net = r.build_net("my-net", 3).unwrap();
+        assert_eq!(net.name, "zoo-my-net");
+        assert_eq!(net.n_comp(), 2);
+    }
+
+    #[test]
+    fn zoo_names_are_namespaced_against_artifact_nets() {
+        // the zoo lenet5 must never share cache keys with the artifact
+        // lenet5 — same topology, different weights
+        let net = build_net("lenet5", 1).unwrap();
+        assert_eq!(net.name, "zoo-lenet5");
+        let custom = build_net("i1x4x4-F8-F2", 1).unwrap();
+        assert!(custom.name.starts_with("zoo["), "{}", custom.name);
+        let tiny = build_net("zoo-tiny", 1).unwrap();
+        assert_eq!(tiny.name, "zoo-tiny", "already-prefixed names stay as-is");
+    }
+
+    #[test]
+    fn zoo_bundle_build_is_deterministic_across_threads() {
+        // the acceptance criterion: same (spec, seed) ⇒ bit-identical net
+        // and dataset, even when generation races on two threads
+        let here = build("zoo-tiny", 0xD5, 40).unwrap();
+        let digests: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| s.spawn(|| digest_bundle(&build("zoo-tiny", 0xD5, 40).unwrap())))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let local = digest_bundle(&here);
+        assert!(digests.iter().all(|&d| d == local), "{local:x} vs {digests:x?}");
+        // and the digest actually discriminates
+        assert_ne!(local, digest_bundle(&build("zoo-tiny", 0xD6, 40).unwrap()));
+        assert_ne!(local, digest_bundle(&build("zoo-tiny", 0xD5, 41).unwrap()));
+    }
+
+    #[test]
+    fn zoo_digest_sensitive_to_single_weight_flip() {
+        let mut bundle = build("zoo-tiny", 9, 8).unwrap();
+        let before = digest_bundle(&bundle);
+        let net_digest = digest_qnet(&bundle.net);
+        if let crate::simnet::Layer::Comp(c) = &mut bundle.net.layers[0] {
+            c.w[0] = c.w[0].wrapping_add(1);
+        }
+        assert_ne!(digest_qnet(&bundle.net), net_digest);
+        assert_ne!(digest_bundle(&bundle), before);
+    }
+
+    #[test]
+    fn zoo_digest_distinguishes_conv_geometry() {
+        // stride/pad variants can share k_dim, n_dim, act_shape and (same
+        // seed) the identical weight stream — the digest must still tell
+        // them apart via the conv geometry
+        let a = synth::synth_qnet(&grammar::parse("i1x4x4-C2k3-F10").unwrap(), "g", 1).unwrap();
+        let b =
+            synth::synth_qnet(&grammar::parse("i1x4x4-C2k3s2p1-F10").unwrap(), "g", 1).unwrap();
+        assert_eq!(a.comp(0).k_dim, b.comp(0).k_dim);
+        assert_eq!(a.comp(0).act_shape, b.comp(0).act_shape);
+        assert_eq!(a.comp(0).w, b.comp(0).w, "same seed, same draw order");
+        assert_ne!(digest_qnet(&a), digest_qnet(&b), "geometry must be hashed");
+    }
+
+    #[test]
+    fn zoo_deep_space_is_beyond_enumeration() {
+        // the whole point: a 4-symbol alphabet over mlp-deep-16 is a
+        // 4^16 ≈ 4.3e9-configuration space
+        let net = build_net("mlp-deep-16", 1).unwrap();
+        let space = crate::search::SearchSpace::paper(
+            &net,
+            &crate::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
+        );
+        assert_eq!(net.n_comp(), 16);
+        assert!(space.size() > 4_000_000_000u128, "{}", space.size());
+    }
+}

@@ -1,0 +1,245 @@
+//! Seeded weight synthesis + calibrated quantization: [`TopoSpec`] →
+//! executable [`QNet`], no artifacts, bit-identical for a given
+//! `(spec, seed)`.
+//!
+//! Weights are small ints drawn from the deterministic
+//! [`crate::util::rng::Rng`] stream (same `[-4, 4]` range the hand-built
+//! test fixtures use). The requantization constants are *calibrated
+//! analytically from the generated weights themselves*: for a layer with
+//! per-neuron weight columns `w[·][n]` fed by activations of RMS `x_rms`,
+//! the accumulator RMS is `x_rms · sqrt(meanₙ Σₖ w[k][n]²)`, and the
+//! layer's fixed-point scale `r = m0 / 2^nshift` is chosen to map that to
+//! a mid-range int8 target (hidden layers ≈ 40, logits ≈ 24). Keeping the
+//! logits deliberately small leaves class margins that approximate
+//! multipliers and injected faults can actually flip — the property that
+//! makes `Accuracy`/`FiScreen`/`FiFull` orderings non-trivial on zoo nets.
+//! No data is consulted, so calibration is a pure function of
+//! `(spec, seed)` and determinism is trivial to audit.
+
+use super::grammar::{Op, TopoSpec};
+use crate::simnet::{CompKind, CompLayer, Layer, QNet};
+use crate::util::rng::Rng;
+
+/// Input-activation RMS assumed by the calibration (class prototypes are
+/// drawn roughly uniform in `[-96, 96]`; see [`super::data`]).
+const INPUT_RMS: f64 = 58.0;
+/// Post-requantization activation RMS targets.
+const HIDDEN_RMS: f64 = 40.0;
+const LOGIT_RMS: f64 = 24.0;
+/// All synthesized layers share one shift; only `m0` carries the scale.
+const NSHIFT: u32 = 32;
+
+/// Synthesize a quantized network from a topology (see module docs).
+/// The result is bit-identical for a given `(spec, seed)` regardless of
+/// host, thread, or call order — the RNG stream is derived from `seed`
+/// alone.
+pub fn synth_qnet(spec: &TopoSpec, name: &str, seed: u64) -> Result<QNet, String> {
+    let mut rng = Rng::new(seed ^ 0x200_D00D);
+    synth_qnet_with_rng(spec, name, &mut rng)
+}
+
+/// Core generator over a caller-owned RNG stream (the property-test entry
+/// point; [`synth_qnet`] wraps it with a seed-derived stream).
+pub fn synth_qnet_with_rng(spec: &TopoSpec, name: &str, rng: &mut Rng) -> Result<QNet, String> {
+    spec.shape_walk()?; // validate before touching the RNG
+    let n_comp = spec.n_comp();
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut comp_positions = Vec::new();
+    let mut shape: Vec<usize> = spec.input.to_vec();
+    let mut x_rms = INPUT_RMS;
+    let mut ci = 0usize;
+
+    for op in &spec.ops {
+        match op {
+            Op::Pool { size } => {
+                shape = vec![shape[0], shape[1] / size, shape[2] / size];
+                layers.push(Layer::Pool { size: *size });
+            }
+            Op::Conv { .. } | Op::Dense { .. } => {
+                let (kind, k_dim, n_dim, act_shape) = match op {
+                    Op::Conv { out_ch, k, stride, pad } => {
+                        let (c, h, w) = (shape[0], shape[1], shape[2]);
+                        let oh = (h + 2 * pad - k) / stride + 1;
+                        let ow = (w + 2 * pad - k) / stride + 1;
+                        (
+                            CompKind::Conv {
+                                in_ch: c,
+                                out_ch: *out_ch,
+                                ksize: *k,
+                                stride: *stride,
+                                pad: *pad,
+                                in_h: h,
+                                in_w: w,
+                                out_h: oh,
+                                out_w: ow,
+                            },
+                            c * k * k,
+                            *out_ch,
+                            vec![*out_ch, oh, ow],
+                        )
+                    }
+                    Op::Dense { n } => {
+                        if shape.len() == 3 {
+                            layers.push(Layer::Flatten);
+                            shape = vec![shape.iter().product()];
+                        }
+                        (CompKind::Dense, shape[0], *n, vec![*n])
+                    }
+                    Op::Pool { .. } => unreachable!(),
+                };
+                let relu = ci + 1 < n_comp;
+                let w: Vec<i8> =
+                    (0..k_dim * n_dim).map(|_| (rng.below(9) as i8) - 4).collect();
+                // accumulator RMS from the weights actually drawn:
+                // meanₙ Σₖ w[k][n]² = (Σ all w²) / n_dim
+                let sum_sq: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                let acc_rms = x_rms * (sum_sq / n_dim as f64).sqrt().max(1e-9);
+                let target = if relu { HIDDEN_RMS } else { LOGIT_RMS };
+                let r = (target / acc_rms).min(4.0);
+                let m0 = ((r * (1u64 << NSHIFT) as f64).round() as i64).max(1);
+                let bmax = ((acc_rms / 8.0).round() as i32).max(1);
+                let b: Vec<i32> = (0..n_dim)
+                    .map(|_| rng.below(2 * bmax as u64 + 1) as i32 - bmax)
+                    .collect();
+                comp_positions.push(layers.len());
+                layers.push(Layer::Comp(CompLayer {
+                    kind,
+                    relu,
+                    w,
+                    k_dim,
+                    n_dim,
+                    b,
+                    m0,
+                    nshift: NSHIFT,
+                    act_shape: act_shape.clone(),
+                }));
+                shape = act_shape;
+                // the requantizer maps acc_rms → target; ReLU halves power
+                x_rms = if relu { target / std::f64::consts::SQRT_2 } else { target };
+                ci += 1;
+            }
+        }
+    }
+
+    Ok(QNet {
+        name: name.to_string(),
+        dataset: "zoo".into(),
+        input_shape: spec.input.to_vec(),
+        input_scale: 1.0 / 127.0,
+        config_template: spec.template(),
+        layers,
+        comp_positions,
+    })
+}
+
+/// Randomized dense chain (2..=4 layers, widths 2..=6) through the shared
+/// zoo generator — the one source of synthetic nets for property tests
+/// (replaces the ad-hoc generator `simnet::testutil::random_mlp` wrapped).
+pub fn random_mlp(rng: &mut Rng) -> QNet {
+    let n_layers = 2 + rng.usize_below(3);
+    let mut widths = Vec::with_capacity(n_layers + 1);
+    for _ in 0..=n_layers {
+        widths.push(2 + rng.usize_below(5));
+    }
+    let spec = TopoSpec {
+        input: [1, 1, widths[0]],
+        ops: widths[1..].iter().map(|&n| Op::Dense { n }).collect(),
+    };
+    synth_qnet_with_rng(&spec, "randmlp", rng).expect("random dense spec is always valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{Buffers, Engine};
+    use crate::zoo::grammar::resolve;
+
+    fn exact_lut() -> crate::axmul::Lut {
+        crate::axmul::by_name("exact").unwrap().lut()
+    }
+
+    #[test]
+    fn zoo_synth_is_deterministic_for_spec_and_seed() {
+        let spec = resolve("zoo-tiny").unwrap();
+        let a = synth_qnet(&spec, "zoo-tiny", 7).unwrap();
+        let b = synth_qnet(&spec, "zoo-tiny", 7).unwrap();
+        for ci in 0..a.n_comp() {
+            assert_eq!(a.comp(ci).w, b.comp(ci).w, "layer {ci} weights");
+            assert_eq!(a.comp(ci).b, b.comp(ci).b, "layer {ci} bias");
+            assert_eq!(a.comp(ci).m0, b.comp(ci).m0);
+            assert_eq!(a.comp(ci).nshift, b.comp(ci).nshift);
+        }
+        let c = synth_qnet(&spec, "zoo-tiny", 8).unwrap();
+        assert_ne!(a.comp(0).w, c.comp(0).w, "different seeds must differ");
+    }
+
+    #[test]
+    fn zoo_nets_execute_end_to_end() {
+        let lut = exact_lut();
+        for name in ["zoo-tiny", "lenet5", "convnet-11", "mlp-deep-16"] {
+            let spec = resolve(name).unwrap();
+            let net = synth_qnet(&spec, name, 1).unwrap();
+            assert_eq!(net.n_comp(), spec.n_comp(), "{name}");
+            assert_eq!(net.config_template, spec.template(), "{name}");
+            let eng = Engine::uniform(&net, &lut);
+            let mut buf = Buffers::for_net(&net);
+            let img: Vec<i8> = (0..net.input_len()).map(|i| (i % 255) as u8 as i8).collect();
+            let out = eng.forward(&img, None, &mut buf);
+            assert_eq!(out.len(), net.comp(net.n_comp() - 1).act_len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn zoo_quantization_constants_are_loader_legal() {
+        let spec = resolve("mlp-deep-16").unwrap();
+        let net = synth_qnet(&spec, "mlp-deep-16", 3).unwrap();
+        for ci in 0..net.n_comp() {
+            let c = net.comp(ci);
+            assert!(c.nshift >= 1 && c.nshift <= 62, "layer {ci} nshift {}", c.nshift);
+            assert!(c.m0 >= 1, "layer {ci} m0 {}", c.m0);
+            assert!(c.w.iter().all(|&v| (-4..=4).contains(&v)), "layer {ci} weight range");
+            // scale stays in a range where i64 accumulate cannot overflow
+            assert!(c.m0 <= 4 * (1i64 << 32), "layer {ci} m0 {}", c.m0);
+            // hidden layers ReLU, logits linear
+            assert_eq!(c.relu, ci + 1 < net.n_comp(), "layer {ci} relu");
+        }
+    }
+
+    #[test]
+    fn zoo_activations_are_not_degenerate() {
+        // the calibration must keep mid-network activations off the clamp
+        // rails: on a random image, the logits are neither all-saturated
+        // nor identically zero
+        let lut = exact_lut();
+        let spec = resolve("mlp-deep-12").unwrap();
+        let net = synth_qnet(&spec, "mlp-deep-12", 5).unwrap();
+        let eng = Engine::uniform(&net, &lut);
+        let mut buf = Buffers::for_net(&net);
+        let mut rng = Rng::new(42);
+        let mut any_nonzero = false;
+        let mut all_saturated = true;
+        for _ in 0..8 {
+            let img: Vec<i8> = (0..net.input_len()).map(|_| rng.i8()).collect();
+            let out = eng.forward(&img, None, &mut buf);
+            any_nonzero |= out.iter().any(|&v| v != 0);
+            all_saturated &= out.iter().all(|&v| v == 127 || v == -128);
+        }
+        assert!(any_nonzero, "logits identically zero — calibration collapsed");
+        assert!(!all_saturated, "logits pinned to the clamp rails");
+    }
+
+    #[test]
+    fn random_mlp_stays_in_historical_size_envelope() {
+        let mut rng = Rng::new(0xA11);
+        for _ in 0..20 {
+            let net = random_mlp(&mut rng);
+            assert!((2..=4).contains(&net.n_comp()));
+            for ci in 0..net.n_comp() {
+                let c = net.comp(ci);
+                assert!((2..=6).contains(&c.n_dim));
+                assert!(c.k_dim >= 2);
+            }
+            assert!(!net.comp(net.n_comp() - 1).relu);
+        }
+    }
+}

@@ -1,4 +1,7 @@
 //! End-to-end CLI tests: run the `repro` binary against the artifacts.
+//! The `zoo_`-prefixed tests run the binary with **no artifacts** (from a
+//! temp cwd) — the zoo subcommands and `exp zoo-sweep` must work in any
+//! container.
 
 mod common;
 
@@ -9,6 +12,19 @@ fn repro(args: &[&str]) -> std::process::Output {
     Command::new(env!("CARGO_BIN_EXE_repro"))
         .args(args)
         .env("DEEPAXE_ARTIFACTS", common::artifacts())
+        .env("DEEPAXE_QUIET", "1")
+        .output()
+        .expect("spawning repro")
+}
+
+/// Run `repro` from an empty temp directory with no artifacts reachable.
+fn repro_no_artifacts(args: &[&str]) -> std::process::Output {
+    let dir = std::env::temp_dir().join(format!("deepaxe_zoo_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp cwd");
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(&dir)
+        .env("DEEPAXE_ARTIFACTS", dir.join("no-artifacts-here"))
         .env("DEEPAXE_QUIET", "1")
         .output()
         .expect("spawning repro")
@@ -103,6 +119,76 @@ fn search_rejects_unknown_strategy() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("unknown strategy"), "{err}");
+}
+
+#[test]
+fn zoo_list_runs_without_artifacts() {
+    let out = repro_no_artifacts(&["zoo", "list"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["lenet5", "convnet-11", "mlp-deep-16", "zoo-tiny"] {
+        assert!(text.contains(name), "missing {name}: {text}");
+    }
+    assert!(text.contains("grammar"), "{text}");
+}
+
+#[test]
+fn zoo_build_prints_stable_digest_without_artifacts() {
+    let run = || {
+        let out = repro_no_artifacts(&[
+            "zoo", "build", "--spec", "i1x6x6-C3k3p1-P2-F8-F4", "--seed", "9", "--images", "12",
+        ]);
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        let digest_line = text
+            .lines()
+            .find(|l| l.starts_with("digest "))
+            .unwrap_or_else(|| panic!("no digest line in {text}"))
+            .to_string();
+        (text, digest_line)
+    };
+    let (text, d1) = run();
+    let (_, d2) = run();
+    assert_eq!(d1, d2, "zoo build must be deterministic across processes");
+    assert!(text.contains("computing layers"), "{text}");
+    // an invalid spec fails with the grammar error, not a panic
+    let bad = repro_no_artifacts(&["zoo", "build", "--spec", "i1x4x4-Q9"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("token"), "bad-spec diagnostics");
+}
+
+#[test]
+fn zoo_search_runs_budgeted_without_artifacts() {
+    let out = repro_no_artifacts(&[
+        "zoo", "search", "--net", "zoo-tiny", "--strategy", "nsga2", "--budget", "6",
+        "--faults", "4", "--images", "8", "--eval-images", "16",
+        "--fi-screen", "2", "--fi-epsilon", "0.5",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("search frontier"), "{text}");
+    assert!(text.contains("hypervolume2d"), "{text}");
+    assert!(text.contains("hypervolume3d"), "{text}");
+    assert!(text.contains("FI ledger"), "{text}");
+}
+
+#[test]
+fn zoo_sweep_experiment_runs_deep_net_without_artifacts() {
+    // the PR acceptance criterion: `repro exp zoo-sweep` runs a
+    // >=12-computing-layer zoo net end to end (NSGA-II + anneal, staged
+    // fidelity) and prints a hypervolume2d/3d comparison — no artifacts
+    let out = repro_no_artifacts(&[
+        "exp", "zoo-sweep", "--budget", "8",
+        "--faults", "6", "--images", "8", "--eval-images", "24",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("zoo-sweep"), "{text}");
+    assert!(text.contains("16 computing layers"), "{text}");
+    assert!(text.contains("nsga2"), "{text}");
+    assert!(text.contains("anneal"), "{text}");
+    assert!(text.contains("hv2d") && text.contains("hv3d"), "{text}");
+    assert!(text.contains("FI ledger"), "{text}");
 }
 
 #[test]

@@ -1,9 +1,12 @@
-//! Fault campaigns on the real artifacts.
+//! Fault campaigns on the real artifacts — plus `zoo_`-prefixed variants
+//! on generated networks that need **no artifacts at all** (these are the
+//! tests `scripts/ci.sh` runs unconditionally).
 
 mod common;
 
-use deepaxe::faultsim::{run_campaign, CampaignParams, SiteSampling};
+use deepaxe::faultsim::{run_campaign, sample_sites, CampaignParams, SiteSampling};
 use deepaxe::simnet::Engine;
+use deepaxe::util::rng::Rng;
 
 fn params(n_faults: usize, n_images: usize, replay: bool) -> CampaignParams {
     CampaignParams {
@@ -138,4 +141,76 @@ fn approximated_network_campaign_runs() {
     let r = run_campaign(&engine, &data, &params(30, 30, true));
     assert!(r.base_acc > 0.5);
     assert!(r.mean_fault_acc > 0.0 && r.mean_fault_acc <= 1.0);
+}
+
+// ===========================================================================
+// zoo_ — artifact-free campaigns on generated networks
+// ===========================================================================
+
+#[test]
+fn zoo_delta_and_gate_bit_identical_on_generated_conv_net() {
+    // the delta/gate parity suite on a zoo conv net: no common::ctx(),
+    // no manifest — this runs in every container
+    let net = deepaxe::zoo::build_net("zoo-tiny", 0xA5).unwrap();
+    let data = deepaxe::zoo::synth_dataset(&net, 24, 0xA5);
+    for mult in ["exact", "mul8s_1kvp_s"] {
+        let lut = deepaxe::axmul::by_name(mult).unwrap().lut();
+        let engine = Engine::uniform(&net, &lut);
+        let on = run_campaign(&engine, &data, &params(24, 16, true));
+        let mut p_nodelta = params(24, 16, true);
+        p_nodelta.delta = false;
+        let nodelta = run_campaign(&engine, &data, &p_nodelta);
+        let mut p_nogate = p_nodelta.clone();
+        p_nogate.gate = false;
+        let nogate = run_campaign(&engine, &data, &p_nogate);
+        let naive = run_campaign(&engine, &data, &params(24, 16, false));
+        assert_eq!(on.acc_per_fault, nodelta.acc_per_fault, "{mult}: delta must not move results");
+        assert_eq!(on.acc_per_fault, nogate.acc_per_fault, "{mult}: gate must not move results");
+        assert_eq!(on.acc_per_fault, naive.acc_per_fault, "{mult}: replay == naive");
+        assert_eq!(on.vulnerability, naive.vulnerability, "{mult}");
+        assert_eq!(on.ci95, naive.ci95, "{mult}");
+        assert!(on.delta_replays > 0, "{mult}: conv fault sites must take the delta path");
+        assert_eq!(nodelta.delta_replays, 0, "{mult}");
+    }
+}
+
+#[test]
+fn zoo_campaign_vulnerability_is_nonnegative_on_teacher_labels() {
+    // teacher-labeled data puts the exact engine at 100%: any injected
+    // fault can only lose agreement, so vulnerability >= 0 exactly
+    let net = deepaxe::zoo::build_net("zoo-tiny", 0x77).unwrap();
+    let data = deepaxe::zoo::synth_dataset(&net, 32, 0x77);
+    let lut = deepaxe::axmul::by_name("exact").unwrap().lut();
+    let engine = Engine::uniform(&net, &lut);
+    let r = run_campaign(&engine, &data, &params(40, 24, true));
+    assert_eq!(r.base_acc, 1.0, "exact engine on its own labels");
+    assert!(r.vulnerability >= 0.0, "{}", r.vulnerability);
+    assert!(r.mean_fault_acc <= 1.0);
+    assert_eq!(r.acc_per_fault.len(), 40);
+}
+
+#[test]
+fn zoo_site_sampling_covers_deep_topologies() {
+    // site sampling over a 12-computing-layer zoo net: every site in
+    // bounds, both modes deterministic, and UniformLayer actually reaches
+    // the deep tail of the network
+    let net = deepaxe::zoo::build_net("mlp-deep-12", 1).unwrap();
+    assert_eq!(net.n_comp(), 12);
+    for mode in [SiteSampling::UniformLayer, SiteSampling::UniformNeuron] {
+        let a = sample_sites(&net, 1200, mode, &mut Rng::new(9));
+        let b = sample_sites(&net, 1200, mode, &mut Rng::new(9));
+        assert_eq!(a, b, "{mode:?} must be deterministic");
+        for s in &a {
+            assert!(s.layer < net.n_comp());
+            assert!(s.neuron < net.comp(s.layer).act_len());
+            assert!(s.bit < 8);
+        }
+        if mode == SiteSampling::UniformLayer {
+            let mut hit = vec![false; net.n_comp()];
+            for s in &a {
+                hit[s.layer] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "1200 uniform-layer draws must hit all 12 layers");
+        }
+    }
 }

@@ -300,6 +300,196 @@ fn screened_search_shares_trace_prefixes_across_genotypes() {
     assert_eq!(cold.ledger().prefix_hits(), 0);
 }
 
+// ===========================================================================
+// zoo_ — artifact-free search on generated networks (these are the tests
+// scripts/ci.sh runs unconditionally: no common::ctx(), no manifest)
+// ===========================================================================
+
+fn zoo_luts() -> std::collections::BTreeMap<String, deepaxe::axmul::Lut> {
+    deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect()
+}
+
+#[test]
+fn zoo_deep_net_search_runs_where_exhaustive_cannot() {
+    // the acceptance criterion: budgeted NSGA-II + anneal on a
+    // 16-computing-layer generated net whose 4^16 space no exhaustive
+    // sweep can enumerate, staged fidelity end to end, both hypervolume
+    // indicators finite — with zero artifacts
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let bundle = deepaxe::zoo::build("mlp-deep-16", 0x5EED, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(8, 10, 0x5EED);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 32, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    assert_eq!(space.n_layers, 16);
+    assert!(space.size() > 4_000_000_000u128, "space must be beyond enumeration");
+
+    for strategy in [Strategy::Nsga2, Strategy::Anneal] {
+        let staged = StagedEvaluator::new(
+            &ev,
+            FidelitySpec { screen_faults: 3, epsilon_pp: 0.5, ..FidelitySpec::exact() },
+        );
+        let mut spec = SearchSpec::new(strategy);
+        spec.budget = 20;
+        spec.seed = fi.seed;
+        spec.screen = true;
+        let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+        assert_eq!(out.evals_used, 20, "{strategy:?} must spend the whole budget");
+        assert!(!out.frontier_idx.is_empty(), "{strategy:?}");
+        assert!(out.hypervolume() > 0.0, "{strategy:?}");
+        assert!(deepaxe::search::hypervolume3(&out.evaluated).is_finite(), "{strategy:?}");
+        // frontier survivors were promoted to full fidelity
+        for &i in &out.frontier_idx {
+            assert_eq!(
+                out.fidelities[i],
+                deepaxe::eval::Fidelity::FiFull,
+                "{strategy:?} frontier point {i}"
+            );
+        }
+        assert!(staged.ledger().total_faults() > 0, "{strategy:?} must run FI");
+    }
+}
+
+#[test]
+fn zoo_staged_epsilon_zero_is_bit_identical_to_monolithic() {
+    // the delta/prefix parity suite, zoo-backed: with every early-stop
+    // disabled the staged ladder reproduces the monolithic evaluator
+    // bit-for-bit on a generated conv net
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0xB17, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(10, 12, 0xB17);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 32, fi);
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 14;
+    spec.seed = 0xB17;
+
+    let mono = run_search(&space, &spec, &EvaluatorBackend { ev: &ev }, &mut NoCache);
+    let staged_ev = StagedEvaluator::new(&ev, FidelitySpec::exact());
+    let staged = run_search(&space, &spec, &StagedBackend { st: &staged_ev }, &mut NoCache);
+    assert_eq!(mono.genotypes, staged.genotypes);
+    for (a, b) in mono.evaluated.iter().zip(&staged.evaluated) {
+        assert_eq!(a, b, "zoo design points must be bit-identical");
+    }
+    assert_eq!(staged_ev.ledger().early_stops(), 0);
+}
+
+#[test]
+fn zoo_screened_search_shares_trace_prefixes() {
+    // zoo-backed prefix parity: a screened multi-genotype run on a
+    // generated net reports prefix reuse and delta replays, and disabling
+    // the trace cache changes nothing but the rework counters
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0x9F1, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(12, 10, 0x9F1);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 16;
+    spec.seed = 0x9F1;
+    spec.screen = true;
+    let mk_spec = || FidelitySpec { screen_faults: 4, ..FidelitySpec::exact() };
+
+    let staged = StagedEvaluator::new(&ev, mk_spec());
+    let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+    let ledger = staged.ledger();
+    assert!(ledger.prefix_hits() > 0, "{}", ledger.summary(fi.n_faults));
+    assert!(ledger.delta_replays() > 0);
+
+    let cold = StagedEvaluator::new(&ev, FidelitySpec { trace_cache_mb: 0, ..mk_spec() });
+    let out2 = run_search(&space, &spec, &StagedBackend { st: &cold }, &mut NoCache);
+    assert_eq!(out.genotypes, out2.genotypes);
+    for (a, b) in out.evaluated.iter().zip(&out2.evaluated) {
+        assert_eq!(a, b, "zoo prefix sharing must be bit-identical");
+    }
+    assert_eq!(cold.ledger().prefix_hits(), 0);
+}
+
+#[test]
+fn zoo_warm_start_seeds_search_from_cached_frontier() {
+    // satellite: SearchSpec::warm_start seeds the initial population from
+    // ResultCache frontier entries for the same (net, alphabet), budget
+    // accounting unchanged
+    use deepaxe::search::CacheHook;
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0x44, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(6, 8, 0x44);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    // a 3-symbol alphabet: 27 configs, 9 structured seeds — budgets below
+    // keep the heuristic branch (no exhaustive degeneration)
+    let mults: Vec<String> = vec!["mul8s_1kvp_s".into(), "mul8s_1kv9_s".into()];
+    let space = SearchSpace::paper(&bundle.net, &mults);
+    assert_eq!(space.size(), 27);
+    let n_seeds = space.seeds().len();
+
+    let dir = std::env::temp_dir().join(format!("deepaxe_zoo_warm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("zoo_results.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let backend = EvaluatorBackend { ev: &ev };
+    let budget = 14;
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = budget;
+    spec.seed = 0x44;
+
+    // run 1: populate the cache
+    let first = {
+        let mut cache = ResultCache::open(&path);
+        let mut hook = ResultCacheHook {
+            cache: &mut cache,
+            net: bundle.net.name.clone(),
+            fi: fi.clone(),
+            eval_images: 24,
+        };
+        run_search(&space, &spec, &backend, &mut hook)
+    };
+
+    // the recorded warm pool is exactly run 1's archive frontier
+    let mut cache = ResultCache::open(&path);
+    let mut hook = ResultCacheHook {
+        cache: &mut cache,
+        net: bundle.net.name.clone(),
+        fi: fi.clone(),
+        eval_images: 24,
+    };
+    let warm = hook.warm_genotypes(&space);
+    assert!(!warm.is_empty());
+    // every warm genotype is one run 1 evaluated, and its point is
+    // non-dominated within run 1's archive (coordinate ties between
+    // distinct genotypes make exact genotype-set equality ill-defined,
+    // so assert frontier membership by coordinates)
+    let coord = |p: &deepaxe::dse::DesignPoint| {
+        ((p.util_pct * 1e9) as i64, (p.fault_vuln_pct * 1e9) as i64)
+    };
+    let front_coords: Vec<_> =
+        first.frontier_idx.iter().map(|&i| coord(&first.evaluated[i])).collect();
+    for g in &warm {
+        let pos = first
+            .genotypes
+            .iter()
+            .position(|h| h == g)
+            .unwrap_or_else(|| panic!("warm seed {g:?} was never evaluated by run 1"));
+        assert!(
+            front_coords.contains(&coord(&first.evaluated[pos])),
+            "warm seed {g:?} is not on run 1's frontier"
+        );
+    }
+
+    // run 2, warm-started: the first (budget - n_seeds) warm genotypes are
+    // guaranteed into the initial population; budget semantics unchanged
+    spec.warm_start = true;
+    spec.seed = 0x45; // different trajectory, same warm pool
+    let second = run_search(&space, &spec, &backend, &mut hook);
+    assert!(second.evals_used <= budget);
+    let guaranteed = warm.len().min(budget.saturating_sub(n_seeds));
+    for g in warm.iter().filter(|g| !space.seeds().contains(g)).take(guaranteed) {
+        assert!(second.genotypes.contains(g), "warm seed {g:?} missing from archive");
+    }
+    assert!(second.cache_hits > 0, "warm seeds should be served from the cache");
+}
+
 #[test]
 fn fi_skipped_points_excluded_from_vuln_frontier() {
     // with_fi = false leaves NaN vulnerability — the frontier over

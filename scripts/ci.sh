@@ -18,6 +18,13 @@ fi
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+echo "== tier-1: zoo-backed integration tests (artifact-free, no skip) =="
+# The zoo_ suites generate their nets and workloads from seeds, so they
+# run in every container — with or without ./artifacts.
+cargo test -q --test integration_search zoo_
+cargo test -q --test integration_faultsim zoo_
+cargo test -q --test integration_cli zoo_
+
 echo "== tier-1: cargo test -q =="
 # Integration tests additionally need ./artifacts (make artifacts); unit
 # tests run regardless.
@@ -30,7 +37,9 @@ cargo bench --no-run
 
 echo "== perf: scripts/bench.sh --smoke =="
 # Tiny-knob bench sweep recording BENCH_<n>.json (faults/s, replay depth,
-# delta speedup, points/s per tier); exits 0 when artifacts are absent.
+# delta speedup, points/s per tier). The artifact-free bench_zoo record is
+# always collected; the artifact-gated benches are skipped (exit 0) when
+# ./artifacts is absent.
 scripts/bench.sh --smoke
 
 if [ "${CI_SKIP_FMT:-0}" != "1" ]; then
