@@ -122,4 +122,34 @@ fn main() {
     emit("zoo-convnet-11", "faults_per_s", faults_per_s);
     emit("zoo-convnet-11", "mean_replay_depth", r.replay.mean_depth());
     emit("zoo-convnet-11", "masked_fraction", r.replay.masked_fraction());
+
+    // -- fault-model zoo: faults/s per model on a generated net -----------
+    // (bitflip/stuckat/multibit ride the block-wise Campaign with its
+    // replay fast paths; lutplane rebuilds a multiplier table per fault
+    // and pays full forwards — the rate gap is the point of the record)
+    use deepaxe::faultsim::{run_model_campaign, FaultModelKind};
+    let mzoo = deepaxe::zoo::build("zoo-tiny", 0x5EED, 32).expect("zoo build");
+    let mengine = Engine::uniform(&mzoo.net, &exact);
+    let mparams = CampaignParams {
+        n_faults: 64,
+        n_images: 32,
+        replay: true,
+        gate: true,
+        delta: true,
+        ..base.clone()
+    };
+    for kind in FaultModelKind::ALL {
+        let t0 = Instant::now();
+        let r = black_box(run_model_campaign(kind, &mengine, &mzoo.data, &mparams));
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let faults_per_s = r.n_faults as f64 / dt;
+        println!(
+            "bench faultsim:model-{:<8} {:6.2}s = {faults_per_s:8.2} faults/s (zoo-tiny, {} faults x {} images)",
+            kind.name(),
+            dt,
+            r.n_faults,
+            r.n_images,
+        );
+        emit(&format!("model-{}", kind.name()), "faults_per_s", faults_per_s);
+    }
 }

@@ -7,7 +7,7 @@ mod bench_common;
 use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
 use deepaxe::dse::cache::ResultCache;
 use deepaxe::dse::{enumerate_masks, Evaluator};
-use deepaxe::faultsim::CampaignParams;
+use deepaxe::faultsim::{CampaignParams, FaultModelKind};
 use deepaxe::report::experiments::default_eval_images;
 use deepaxe::search::{
     frontier_hv, run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
@@ -51,6 +51,7 @@ fn main() {
         net: net.name.clone(),
         fi: fi.clone(),
         eval_images: default_eval_images(),
+        fault_model: FaultModelKind::BitFlip,
     };
     let (out, dt) = time_once("search:nsga2_25pct", || {
         run_search(&space, &spec, &backend, &mut hook)

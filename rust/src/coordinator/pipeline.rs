@@ -21,7 +21,7 @@ use super::Ctx;
 use crate::dse::cache::ResultCache;
 use crate::dse::{enumerate_masks, DesignPoint, Evaluator};
 use crate::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
-use crate::faultsim::{self, CampaignParams};
+use crate::faultsim::{self, CampaignParams, FaultModelKind};
 use crate::search::{run_search, ResultCacheHook, SearchSpace, SearchSpec, Strategy};
 use anyhow::{bail, Result};
 
@@ -147,6 +147,7 @@ pub fn run_pipeline(ctx: &Ctx, spec: &PipelineSpec) -> Result<PipelineOutcome> {
             net: net.name.clone(),
             fi: spec.fi.clone(),
             eval_images: spec.eval_images,
+            fault_model: FaultModelKind::BitFlip,
         };
         // the staged ladder: shared fault sites, block-wise CI-gated
         // campaigns; with fi_epsilon = 0 and screening off this is

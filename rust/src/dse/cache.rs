@@ -5,6 +5,7 @@
 
 use super::DesignPoint;
 use crate::eval::Fidelity;
+use crate::faultsim::FaultModelKind;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -42,6 +43,12 @@ pub struct CacheKey {
     pub seed: u64,
     /// fidelity tier the cached point was evaluated at
     pub fidelity: Fidelity,
+    /// fault model the FI numbers were computed under. [`FaultModelKind::BitFlip`]
+    /// (the historical model, and the default) renders *nothing* — every
+    /// pre-PR-6 untagged cache line reads back as a BitFlip record — while
+    /// the other models append a `fm:` tag so e.g. a stuck-at vulnerability
+    /// can never shadow a bit-flip one.
+    pub fault_model: FaultModelKind,
 }
 
 impl CacheKey {
@@ -86,7 +93,14 @@ impl CacheKey {
             eval_images,
             seed,
             fidelity,
+            fault_model: FaultModelKind::BitFlip,
         }
+    }
+
+    /// Same key under a different fault model (builder for zoo campaigns).
+    pub fn with_fault_model(mut self, fault_model: FaultModelKind) -> CacheKey {
+        self.fault_model = fault_model;
+        self
     }
 
     /// Fidelity rendering: legacy tiers keep the historical `with_fi` bit
@@ -101,10 +115,18 @@ impl CacheKey {
         }
     }
 
+    /// Fault-model rendering: BitFlip is the untagged legacy encoding.
+    fn fault_model_suffix(&self) -> String {
+        match self.fault_model {
+            FaultModelKind::BitFlip => String::new(),
+            other => format!("|fm:{}", other.name()),
+        }
+    }
+
     fn to_string_key(&self) -> String {
         if self.assignment.is_empty() {
             format!(
-                "{}|{}|{:x}|{}|{}|{}|{}|{}",
+                "{}|{}|{:x}|{}|{}|{}|{}|{}{}",
                 self.net,
                 self.mult,
                 self.mask,
@@ -112,18 +134,20 @@ impl CacheKey {
                 self.n_images,
                 self.eval_images,
                 self.seed,
-                self.fidelity_suffix()
+                self.fidelity_suffix(),
+                self.fault_model_suffix()
             )
         } else {
             format!(
-                "{}|cfg:{}|{}|{}|{}|{}|{}",
+                "{}|cfg:{}|{}|{}|{}|{}|{}{}",
                 self.net,
                 self.assignment,
                 self.n_faults,
                 self.n_images,
                 self.eval_images,
                 self.seed,
-                self.fidelity_suffix()
+                self.fidelity_suffix(),
+                self.fault_model_suffix()
             )
         }
     }
@@ -241,6 +265,7 @@ mod tests {
             eval_images: 30,
             seed: 1,
             fidelity: Fidelity::FiFull,
+            fault_model: FaultModelKind::BitFlip,
         }
     }
 
@@ -292,6 +317,7 @@ mod tests {
             eval_images: 30,
             seed: 1,
             fidelity: Fidelity::FiFull,
+            fault_model: FaultModelKind::BitFlip,
         };
         let via_assignment = CacheKey::for_assignment(
             "mlp3",
@@ -348,6 +374,69 @@ mod tests {
         let mut screen = key("mlp3", 1);
         screen.fidelity = Fidelity::FiScreen;
         assert!(c.get(&screen).is_none(), "screen lookup must not alias the legacy entry");
+    }
+
+    #[test]
+    fn fault_models_tag_keys_bitflip_stays_legacy() {
+        // BitFlip (the default) renders the exact pre-PR-6 key string;
+        // every other model appends an fm: tag, and all four are distinct
+        let base = key("mlp3", 1);
+        assert_eq!(base.to_string_key(), base.clone().with_fault_model(FaultModelKind::BitFlip).to_string_key());
+        assert!(!base.to_string_key().contains("fm:"));
+        let stuck = base.clone().with_fault_model(FaultModelKind::StuckAt);
+        assert!(stuck.to_string_key().ends_with("|fm:stuckat"), "{}", stuck.to_string_key());
+        let keys: std::collections::BTreeSet<String> = FaultModelKind::ALL
+            .iter()
+            .map(|&fm| base.clone().with_fault_model(fm).to_string_key())
+            .collect();
+        assert_eq!(keys.len(), 4, "one key per fault model");
+        // the tag composes with the cfg: shape too
+        let het = CacheKey::for_assignment(
+            "mlp3",
+            &["mul8s_1kvp_s", "mul8s_1kv8_s", "exact"],
+            10,
+            20,
+            30,
+            1,
+            Fidelity::FiFull,
+        )
+        .with_fault_model(FaultModelKind::MultiBit);
+        assert!(het.to_string_key().contains("cfg:"));
+        assert!(het.to_string_key().ends_with("|fm:multibit"));
+    }
+
+    #[test]
+    fn pre_pr6_cache_lines_round_trip_as_bitflip() {
+        // a cache line byte-for-byte as PR 1 wrote it (no fm: tag, no
+        // fidelity tag): a BitFlip FiFull lookup must hit it, and lookups
+        // under any other fault model must miss
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache6_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let legacy_line = format!(
+            "{{\"key\": \"mlp3|exact|1|10|20|30|1|1\", \"point\": {}}}\n",
+            point("mlp3", 1).to_json()
+        );
+        std::fs::write(&p, legacy_line).unwrap();
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 1);
+        assert_eq!(
+            c.get(&key("mlp3", 1)).unwrap().mask,
+            1,
+            "default (BitFlip) lookup hits the untagged pre-PR-6 record"
+        );
+        for fm in [FaultModelKind::StuckAt, FaultModelKind::LutPlane, FaultModelKind::MultiBit] {
+            let k = key("mlp3", 1).with_fault_model(fm);
+            assert!(c.get(&k).is_none(), "{} must not alias the legacy entry", fm.name());
+        }
+        // and a tagged write round-trips through the file
+        let mut c = ResultCache::open(&p);
+        let k = key("mlp3", 2).with_fault_model(FaultModelKind::StuckAt);
+        c.put(&k, point("mlp3", 2)).unwrap();
+        drop(c);
+        let c = ResultCache::open(&p);
+        assert_eq!(c.get(&k).unwrap().mask, 2);
+        assert!(c.get(&key("mlp3", 2)).is_none(), "untagged lookup misses the tagged record");
     }
 
     #[test]

@@ -217,6 +217,19 @@ impl<'a> Evaluator<'a> {
         hwmodel::estimate(self.net, &mults)
     }
 
+    /// Analytic HLS cost of an assignment under per-layer selective
+    /// hardening (the PR 6 protection surcharge; all-`None` levels reduce
+    /// to [`assignment_hw`](Self::assignment_hw) exactly).
+    pub fn assignment_hw_hardened(
+        &self,
+        names: &[&str],
+        levels: &[crate::faultsim::HardenLevel],
+    ) -> hwmodel::HwReport {
+        let mults: Vec<&axmul::Multiplier> =
+            names.iter().map(|n| axmul::by_name(n).expect("catalog")).collect();
+        hwmodel::estimate_hardened(self.net, &mults, levels)
+    }
+
     /// `(mult label, approximation mask)` for an assignment: the shared
     /// multiplier when homogeneous, `"exact"` when fully exact, `"mixed"`
     /// otherwise.

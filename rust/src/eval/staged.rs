@@ -10,8 +10,11 @@
 
 use super::{FiGate, Fidelity, FidelitySpec};
 use crate::dse::{DesignPoint, Evaluator, FiEstimate};
-use crate::faultsim::{sample_sites, Campaign, ReplayStats, TracePrefix};
-use crate::simnet::{CleanTrace, Engine, FaultSite};
+use crate::faultsim::{
+    models, sample_lut_faults, sample_model_faults, sample_sites, Campaign, FaultModelKind,
+    HardenLevel, LutFault, ReplayStats, TracePrefix,
+};
+use crate::simnet::{CleanTrace, Engine, FaultSite, Perturb};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -62,6 +65,13 @@ pub struct FiLedger {
     masked_inferences: AtomicU64,
     replayed_layers: AtomicU64,
     depth_hist: Mutex<Vec<u64>>,
+    /// per-fault-model spend (faults simulated under each
+    /// [`FaultModelKind`], pilots included) — the fault-zoo experiment
+    /// reports budget per model from these
+    bitflip_faults: AtomicU64,
+    stuckat_faults: AtomicU64,
+    lutplane_faults: AtomicU64,
+    multibit_faults: AtomicU64,
 }
 
 impl FiLedger {
@@ -130,6 +140,16 @@ impl FiLedger {
     fn record_pilot(&self, faults: usize, replay: &ReplayStats) {
         self.pilot_faults.fetch_add(faults as u64, Ordering::Relaxed);
         self.merge_replay(replay);
+    }
+
+    fn record_model(&self, model: FaultModelKind, faults: usize) {
+        let counter = match model {
+            FaultModelKind::BitFlip => &self.bitflip_faults,
+            FaultModelKind::StuckAt => &self.stuckat_faults,
+            FaultModelKind::LutPlane => &self.lutplane_faults,
+            FaultModelKind::MultiBit => &self.multibit_faults,
+        };
+        counter.fetch_add(faults as u64, Ordering::Relaxed);
     }
 
     pub fn screen_campaigns(&self) -> u64 {
@@ -215,6 +235,16 @@ impl FiLedger {
         self.depth_hist.lock().unwrap().clone()
     }
 
+    /// Faults simulated under one fault model (pilots included).
+    pub fn model_faults(&self, model: FaultModelKind) -> u64 {
+        match model {
+            FaultModelKind::BitFlip => self.bitflip_faults.load(Ordering::Relaxed),
+            FaultModelKind::StuckAt => self.stuckat_faults.load(Ordering::Relaxed),
+            FaultModelKind::LutPlane => self.lutplane_faults.load(Ordering::Relaxed),
+            FaultModelKind::MultiBit => self.multibit_faults.load(Ordering::Relaxed),
+        }
+    }
+
     /// Total faults simulated across both FI tiers (+ adaptive pilots).
     pub fn total_faults(&self) -> u64 {
         self.screen_faults.load(Ordering::Relaxed)
@@ -243,8 +273,18 @@ impl FiLedger {
         } else {
             0.0
         };
+        let per_model: Vec<String> = FaultModelKind::ALL
+            .iter()
+            .filter(|m| self.model_faults(**m) > 0)
+            .map(|m| format!("{} {}", m.name(), self.model_faults(*m)))
+            .collect();
+        let per_model = if per_model.is_empty() {
+            String::new()
+        } else {
+            format!("; per-model faults: {}", per_model.join(", "))
+        };
         format!(
-            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built ({} prefix_hits, {} prefix_layers_reused), {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}, {:.1}% delta-patched",
+            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built ({} prefix_hits, {} prefix_layers_reused), {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}, {:.1}% delta-patched{per_model}",
             self.screen_campaigns(),
             self.full_campaigns(),
             self.total_faults(),
@@ -384,7 +424,16 @@ impl TraceCache {
 pub struct StagedEvaluator<'a> {
     pub ev: &'a Evaluator<'a>,
     spec: FidelitySpec,
+    /// which fault model this run injects (default [`FaultModelKind::BitFlip`])
+    model: FaultModelKind,
+    /// shared activation-fault sites (empty for [`FaultModelKind::LutPlane`])
     sites: Vec<FaultSite>,
+    /// per-site perturbations for non-bitflip activation models (empty
+    /// for bitflip, whose campaigns default to `Perturb::Flip` — keeping
+    /// the legacy path byte-identical)
+    perturbs: Vec<Perturb>,
+    /// shared LUT-plane fault list ([`FaultModelKind::LutPlane`] only)
+    lut_faults: Vec<LutFault>,
     ledger: FiLedger,
     trace_cache: Mutex<TraceCache>,
     screen_size: OnceLock<usize>,
@@ -392,16 +441,43 @@ pub struct StagedEvaluator<'a> {
 
 impl<'a> StagedEvaluator<'a> {
     pub fn new(ev: &'a Evaluator<'a>, spec: FidelitySpec) -> StagedEvaluator<'a> {
-        // one site sample per (net, params, seed) — identical to what each
-        // per-point campaign used to draw for itself, hoisted out of the
-        // per-point loop and shared across the whole population
+        StagedEvaluator::new_with_model(ev, spec, FaultModelKind::BitFlip)
+    }
+
+    /// A staged evaluator injecting `model` faults. The bitflip arm calls
+    /// [`sample_sites`] exactly like the pre-zoo constructor (same RNG
+    /// stream → same sites), so `new` stays bit-for-bit compatible.
+    pub fn new_with_model(
+        ev: &'a Evaluator<'a>,
+        spec: FidelitySpec,
+        model: FaultModelKind,
+    ) -> StagedEvaluator<'a> {
+        // one fault sample per (net, params, seed, model) — identical to
+        // what each per-point campaign used to draw for itself, hoisted
+        // out of the per-point loop and shared across the whole population
         let mut rng = Rng::new(ev.fi.seed);
-        let sites = sample_sites(ev.net, ev.fi.n_faults, ev.fi.sampling, &mut rng);
+        let (sites, perturbs, lut_faults) = match model {
+            FaultModelKind::BitFlip => {
+                let sites = sample_sites(ev.net, ev.fi.n_faults, ev.fi.sampling, &mut rng);
+                (sites, Vec::new(), Vec::new())
+            }
+            FaultModelKind::LutPlane => {
+                (Vec::new(), Vec::new(), sample_lut_faults(ev.net, ev.fi.n_faults, &mut rng))
+            }
+            FaultModelKind::StuckAt | FaultModelKind::MultiBit => {
+                let (sites, perturbs) =
+                    sample_model_faults(ev.net, ev.fi.n_faults, ev.fi.sampling, &mut rng, model);
+                (sites, perturbs, Vec::new())
+            }
+        };
         let cache = TraceCache::new(spec.trace_cache_mb.saturating_mul(1 << 20));
         StagedEvaluator {
             ev,
             spec,
+            model,
             sites,
+            perturbs,
+            lut_faults,
             ledger: FiLedger::default(),
             trace_cache: Mutex::new(cache),
             screen_size: OnceLock::new(),
@@ -412,9 +488,28 @@ impl<'a> StagedEvaluator<'a> {
         &self.spec
     }
 
-    /// The run-wide shared fault-site list.
+    /// The fault model this evaluator injects.
+    pub fn model(&self) -> FaultModelKind {
+        self.model
+    }
+
+    /// The run-wide shared fault-site list (activation models).
     pub fn sites(&self) -> &[FaultSite] {
         &self.sites
+    }
+
+    /// The run-wide shared LUT-plane fault list (lutplane model).
+    pub fn lut_faults(&self) -> &[LutFault] {
+        &self.lut_faults
+    }
+
+    /// Faults in the shared sample for this run's model.
+    fn fault_pool(&self) -> usize {
+        if self.model == FaultModelKind::LutPlane {
+            self.lut_faults.len()
+        } else {
+            self.sites.len()
+        }
     }
 
     pub fn ledger(&self) -> &FiLedger {
@@ -431,11 +526,18 @@ impl<'a> StagedEvaluator<'a> {
     /// the struct docs for the heuristic).
     pub fn screen_target(&self) -> usize {
         let n = if self.spec.screen_auto {
-            self.auto_screen_size()
+            if self.model == FaultModelKind::LutPlane {
+                // lutplane campaigns bypass the block-wise Campaign the
+                // pilot heuristic is built on — fall back to a fixed
+                // min_faults-sized screen
+                self.spec.min_faults.max(16)
+            } else {
+                self.auto_screen_size()
+            }
         } else {
             self.spec.screen_faults
         };
-        n.min(self.sites.len())
+        n.min(self.fault_pool())
     }
 
     fn auto_screen_size(&self) -> usize {
@@ -445,9 +547,13 @@ impl<'a> StagedEvaluator<'a> {
             let pilot = self.spec.min_faults.max(16).min(self.sites.len());
             self.ledger.record_trace_build();
             let mut c = Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites.clone());
+            if !self.perturbs.is_empty() {
+                c = c.with_perturbs(self.perturbs.clone());
+            }
             c.advance(&engine, pilot);
             c.stop();
             self.ledger.record_pilot(c.evaluated(), c.replay_stats());
+            self.ledger.record_model(self.model, c.evaluated());
             self.ledger.record_delta(c.delta_replays());
             let target_pp = if self.spec.epsilon_pp > 0.0 { self.spec.epsilon_pp } else { 1.0 };
             let sigma_pp = c.std() * 100.0;
@@ -483,12 +589,20 @@ impl<'a> StagedEvaluator<'a> {
         let handle = self.trace_cache.lock().unwrap().prefix_handle(key, n_images);
         let pref = handle
             .and_then(|(p, traces)| TracePrefix::from_traces(&traces, p, want_accs).map(|d| (p, d)));
-        match pref {
+        let c = match pref {
             Some((p, prefixes)) => {
                 self.ledger.record_prefix(p, prefixes.len());
                 Campaign::from_prefix(engine, self.ev.data, &self.ev.fi, self.sites.clone(), prefixes)
             }
             None => Campaign::new(engine, self.ev.data, &self.ev.fi, self.sites.clone()),
+        };
+        // non-bitflip activation models carry their own per-site
+        // perturbations; bitflip keeps the campaign default (all-Flip)
+        // so the legacy path is byte-identical
+        if self.perturbs.is_empty() {
+            c
+        } else {
+            c.with_perturbs(self.perturbs.clone())
         }
     }
 
@@ -505,24 +619,67 @@ impl<'a> StagedEvaluator<'a> {
         fidelity: Fidelity,
         gate: Option<&FiGate>,
     ) -> DesignPoint {
+        let n_comp = self.ev.net.n_comp();
+        // a genotype from a hardening-enabled search space carries one
+        // harden-level name per computing layer after the multiplier
+        // names — split them off; plain assignments pass through intact
+        let (mult_names, levels): (Vec<&str>, Vec<HardenLevel>) = if names.len() == 2 * n_comp {
+            let levels = names[n_comp..]
+                .iter()
+                .map(|s| HardenLevel::parse(s).expect("harden level name"))
+                .collect();
+            (names[..n_comp].to_vec(), levels)
+        } else {
+            (names.to_vec(), vec![HardenLevel::None; n_comp])
+        };
+        let hardened = levels.iter().any(|l| *l != HardenLevel::None);
         if fidelity == Fidelity::HwOnly {
-            return self.ev.compose_point(names, f64::NAN, None);
+            return self.finish(&mult_names, &levels, hardened, f64::NAN, None);
         }
-        let engine = self.ev.assignment_engine(names);
+        let engine = self.ev.assignment_engine(&mult_names);
         let ax_acc = self.ev.ax_accuracy(&engine);
         if !fidelity.runs_fi() {
-            return self.ev.compose_point(names, ax_acc, None);
+            return self.finish(&mult_names, &levels, hardened, ax_acc, None);
         }
 
         let target = if fidelity == Fidelity::FiScreen && self.spec.screening_enabled() {
             self.screen_target()
         } else {
-            self.sites.len()
+            self.fault_pool()
         };
+        // hardened FI re-summarizes the *unhardened* campaign (masked
+        // faults scored at base accuracy), so the dominance gate's
+        // optimistic boundary — built from unhardened running stats —
+        // would mis-gate hardened points; run them ungated
+        let gate = if hardened { None } else { gate };
+
+        if self.model == FaultModelKind::LutPlane {
+            // LUT-plane stuck-ats rebuild the multiplier table per fault —
+            // there is no clean-trace prefix or resume to exploit, so the
+            // campaign runs eagerly over the shared fault-list prefix
+            // (sample_lut_faults draws sequentially, so re-sampling with
+            // n_faults = target reproduces exactly lut_faults[..target])
+            let mut params = self.ev.fi.clone();
+            params.n_faults = target;
+            let result = models::run_lut_plane_campaign(&engine, self.ev.data, &params);
+            let result = if hardened {
+                models::hardened_lut_result(&result, &self.lut_faults, &levels)
+            } else {
+                result
+            };
+            self.ledger.record(fidelity, result.n_faults, None, &result.replay);
+            self.ledger.record_model(self.model, result.n_faults);
+            let est = FiEstimate::from_campaign(&result);
+            return self.finish(&mult_names, &levels, hardened, ax_acc, Some(&est));
+        }
+
         // the gate compares against utilization, which is analytic — fetch
         // it up front only when a gate is active
-        let util_pct = gate.map(|_| self.ev.assignment_hw(names).util_pct);
-        let key: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        let util_pct = gate.map(|_| self.ev.assignment_hw(&mult_names).util_pct);
+        // campaigns are keyed (and parked) by the multiplier assignment
+        // alone: hardened and unhardened variants of the same LUT
+        // configuration share one campaign's traces and evaluated prefix
+        let key: Vec<String> = mult_names.iter().map(|s| s.to_string()).collect();
         // promotion fast path: a screen-tier evaluation of this genotype
         // left its live campaign in the trace cache — resume it instead
         // of re-tracing the clean activations and re-simulating the
@@ -582,14 +739,51 @@ impl<'a> StagedEvaluator<'a> {
         }
         let delta = campaign.replay_stats().minus(&stats_at_entry);
         self.ledger.record(fidelity, campaign.evaluated() - resumed_at, stopped, &delta);
+        self.ledger.record_model(self.model, campaign.evaluated() - resumed_at);
         self.ledger.record_delta(campaign.delta_replays() - deltas_at_entry);
-        let est = FiEstimate::from_campaign(&campaign.result());
+        let result = campaign.result();
+        let result = if hardened {
+            // selective hardening never re-runs the campaign: masked
+            // faults are re-scored at base accuracy, the rest keep their
+            // simulated per-fault accuracies (prefix-pure re-summary)
+            if self.perturbs.is_empty() {
+                let flips = vec![Perturb::Flip; self.sites.len()];
+                models::hardened_result(&result, &self.sites, &flips, &levels)
+            } else {
+                models::hardened_result(&result, &self.sites, &self.perturbs, &levels)
+            }
+        } else {
+            result
+        };
+        let est = FiEstimate::from_campaign(&result);
         // a screen-tier prefix is live state worth keeping: promotion of
         // this genotype will resume it instead of starting over
         if fidelity == Fidelity::FiScreen && !campaign.is_done() {
             self.trace_cache.lock().unwrap().insert(key, campaign);
         }
-        self.ev.compose_point(names, ax_acc, Some(&est))
+        self.finish(&mult_names, &levels, hardened, ax_acc, Some(&est))
+    }
+
+    /// Compose the design point, swapping in the selectively-hardened
+    /// area/power estimate when harden levels are present. Cycles and
+    /// latency are untouched — TMR/ECC replicate area, not the schedule.
+    fn finish(
+        &self,
+        mult_names: &[&str],
+        levels: &[HardenLevel],
+        hardened: bool,
+        ax_acc: f64,
+        fi: Option<&FiEstimate>,
+    ) -> DesignPoint {
+        let mut p = self.ev.compose_point(mult_names, ax_acc, fi);
+        if hardened {
+            let hw = self.ev.assignment_hw_hardened(mult_names, levels);
+            p.luts = hw.luts;
+            p.ffs = hw.ffs;
+            p.util_pct = hw.util_pct;
+            p.power_mw = hw.power_mw;
+        }
+        p
     }
 }
 
@@ -1106,5 +1300,164 @@ mod tests {
         assert!(l.masked_inferences() <= l.replay_inferences());
         let s = l.summary(48);
         assert!(s.contains("mean replay depth"), "{s}");
+    }
+
+    #[test]
+    fn fault_model_default_is_bitflip_and_unchanged() {
+        // `new` must stay bit-for-bit the pre-zoo constructor: same sites,
+        // same points, with the spend now visible under the bitflip model
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        assert_eq!(st.model(), FaultModelKind::BitFlip);
+        let explicit =
+            StagedEvaluator::new_with_model(&ev, FidelitySpec::exact(), FaultModelKind::BitFlip);
+        assert_eq!(st.sites(), explicit.sites());
+        let names = ["mul8s_1kvp_s", "exact"];
+        assert_eq!(
+            st.evaluate(&names, Fidelity::FiFull, None),
+            explicit.evaluate(&names, Fidelity::FiFull, None)
+        );
+        assert_eq!(st.ledger().model_faults(FaultModelKind::BitFlip), 48);
+        assert_eq!(st.ledger().model_faults(FaultModelKind::StuckAt), 0);
+        let s = st.ledger().summary(48);
+        assert!(s.contains("per-model faults: bitflip 48"), "{s}");
+    }
+
+    #[test]
+    fn activation_model_campaigns_match_run_model_campaign() {
+        // stuck-at and multi-bit through the staged path (epsilon 0,
+        // FiFull) reproduce the standalone run_model_campaign numbers
+        use crate::faultsim::run_model_campaign;
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        for kind in [FaultModelKind::StuckAt, FaultModelKind::MultiBit] {
+            let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+            let st = StagedEvaluator::new_with_model(&ev, FidelitySpec::exact(), kind);
+            let names = ["mul8s_1kvp_s", "exact"];
+            let p = st.evaluate(&names, Fidelity::FiFull, None);
+            let engine = ev.assignment_engine(&names);
+            let r = run_model_campaign(kind, &engine, &data, &ev.fi);
+            assert_eq!(p.fi_faults, r.n_faults, "{kind:?}");
+            assert_eq!(p.fi_mean_acc, r.mean_fault_acc, "{kind:?}");
+            assert_eq!(p.fault_vuln_pct, r.vulnerability * 100.0, "{kind:?}");
+            assert_eq!(st.ledger().model_faults(kind), 48, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn lutplane_campaigns_run_through_staged_path() {
+        use crate::faultsim::run_model_campaign;
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(32));
+        let st =
+            StagedEvaluator::new_with_model(&ev, FidelitySpec::exact(), FaultModelKind::LutPlane);
+        assert!(st.sites().is_empty());
+        assert_eq!(st.lut_faults().len(), 32);
+        let names = ["mul8s_1kvp_s", "exact"];
+        let p = st.evaluate(&names, Fidelity::FiFull, None);
+        let engine = ev.assignment_engine(&names);
+        let r = run_model_campaign(FaultModelKind::LutPlane, &engine, &data, &ev.fi);
+        assert_eq!(p.fi_faults, 32);
+        assert_eq!(p.fi_mean_acc, r.mean_fault_acc);
+        assert_eq!(p.fault_vuln_pct, r.vulnerability * 100.0);
+        // the screen tier truncates the shared fault list, never resamples
+        let st2 = StagedEvaluator::new_with_model(
+            &ev,
+            FidelitySpec { screen_faults: 8, ..FidelitySpec::exact() },
+            FaultModelKind::LutPlane,
+        );
+        let s8 = st2.evaluate(&names, Fidelity::FiScreen, None);
+        assert_eq!(s8.fi_faults, 8);
+        assert_eq!(st2.ledger().model_faults(FaultModelKind::LutPlane), 8);
+        assert_eq!(st2.cached_campaigns(), 0, "lutplane campaigns are never parked");
+        let s = st2.ledger().summary(32);
+        assert!(s.contains("lutplane 8"), "{s}");
+    }
+
+    #[test]
+    fn hardened_names_mask_faults_and_charge_area() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let plain = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, None);
+        // TMR everywhere masks every activation fault: vulnerability goes
+        // to zero while the area/power legs pay for the replication
+        let tmr = st.evaluate(&["mul8s_1kvp_s", "exact", "tmr", "tmr"], Fidelity::FiFull, None);
+        assert_eq!(tmr.fi_faults, plain.fi_faults);
+        assert!(tmr.fault_vuln_pct.abs() < 1e-9, "{}", tmr.fault_vuln_pct);
+        assert!((tmr.fi_mean_acc - tmr.base_acc).abs() < 1e-12);
+        assert!(tmr.luts > plain.luts && tmr.ffs > plain.ffs);
+        assert!(tmr.power_mw > plain.power_mw && tmr.util_pct > plain.util_pct);
+        assert_eq!(tmr.cycles, plain.cycles, "hardening must not change the schedule");
+        assert_eq!(tmr.ax_acc, plain.ax_acc, "hardening is transparent fault-free");
+        // a genotype spelled with explicit "none" levels IS the plain point
+        let none = st.evaluate(&["mul8s_1kvp_s", "exact", "none", "none"], Fidelity::FiFull, None);
+        assert_eq!(none, plain);
+    }
+
+    #[test]
+    fn hardened_and_unhardened_variants_share_one_campaign() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(64));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+        let _ = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiScreen, None);
+        assert_eq!(st.ledger().trace_builds(), 1);
+        assert_eq!(st.cached_campaigns(), 1);
+        // the hardened variant of the same multiplier assignment resumes
+        // the parked unhardened screen campaign: hardening is a re-summary
+        // of the shared campaign, never a second one
+        let h = st.evaluate(&["mul8s_1kvp_s", "exact", "ecc", "none"], Fidelity::FiFull, None);
+        assert_eq!(h.fi_faults, 64);
+        assert_eq!(st.ledger().trace_builds(), 1, "hardened promotion must not re-trace");
+        assert_eq!(st.ledger().resumed_campaigns(), 1);
+        assert_eq!(st.ledger().resumed_faults(), 16);
+    }
+
+    #[test]
+    fn ecc_masks_single_bit_flips_but_not_bursts() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(32));
+        // bitflip: every fault is width 1, ECC everywhere masks them all
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let ecc = st.evaluate(&["mul8s_1kvp_s", "exact", "ecc", "ecc"], Fidelity::FiFull, None);
+        assert!(ecc.fault_vuln_pct.abs() < 1e-9, "{}", ecc.fault_vuln_pct);
+        // multi-bit bursts defeat ECC — except where the byte edge clips a
+        // burst to a single surviving bit; ECC masks exactly those. Verify
+        // against a by-hand re-summary of the standalone campaign.
+        use crate::faultsim::run_model_campaign;
+        let mst =
+            StagedEvaluator::new_with_model(&ev, FidelitySpec::exact(), FaultModelKind::MultiBit);
+        let plain = mst.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::FiFull, None);
+        let mecc = mst.evaluate(&["mul8s_1kvp_s", "exact", "ecc", "ecc"], Fidelity::FiFull, None);
+        let engine = ev.assignment_engine(&["mul8s_1kvp_s", "exact"]);
+        let r = run_model_campaign(FaultModelKind::MultiBit, &engine, &data, &ev.fi);
+        let expect: Vec<f64> = r
+            .acc_per_fault
+            .iter()
+            .zip(&mst.perturbs)
+            .map(|(&a, p)| if p.width() <= 1 { r.base_acc } else { a })
+            .collect();
+        let mean = expect.iter().sum::<f64>() / expect.len() as f64;
+        assert!((mecc.fi_mean_acc - mean).abs() < 1e-12, "{} vs {mean}", mecc.fi_mean_acc);
+        assert!(mst.perturbs.iter().any(|p| p.width() >= 2), "bursts must exist");
+        assert!(mecc.luts > plain.luts);
+        // TMR still masks bursts of every width
+        let mtmr = mst.evaluate(&["mul8s_1kvp_s", "exact", "tmr", "tmr"], Fidelity::FiFull, None);
+        assert!(mtmr.fault_vuln_pct.abs() < 1e-9, "{}", mtmr.fault_vuln_pct);
     }
 }

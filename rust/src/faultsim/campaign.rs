@@ -46,7 +46,7 @@
 
 use super::{sample_sites, SiteSampling};
 use crate::dataset::TestSet;
-use crate::simnet::{Buffers, CleanTrace, Engine, FaultSite};
+use crate::simnet::{Buffers, CleanTrace, Engine, FaultSite, Perturb};
 use crate::util::progress::Progress;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -287,6 +287,9 @@ pub struct Campaign {
     traces: Arc<Vec<CleanTrace>>,
     base_acc: f64,
     sites: Vec<FaultSite>,
+    /// sites[i] is perturbed by perturbs[i]; all-`Flip` unless the caller
+    /// rebinds the model via [`Campaign::with_perturbs`]
+    perturbs: Vec<Perturb>,
     replay: bool,
     gate: bool,
     delta: bool,
@@ -368,6 +371,7 @@ impl Campaign {
             subset,
             traces: Arc::new(traces),
             base_acc,
+            perturbs: vec![Perturb::Flip; sites.len()],
             sites,
             replay: params.replay,
             gate: params.gate,
@@ -379,6 +383,20 @@ impl Campaign {
             delta_replays: 0,
             progress,
         }
+    }
+
+    /// Rebind the per-site perturbation model (one [`Perturb`] per fault
+    /// site, same order). The default is all-[`Perturb::Flip`], which is
+    /// byte-for-byte the historical transient campaign; stuck-at and
+    /// multi-bit models go through exactly the same staged/delta replay
+    /// paths because every perturbation is a pure function of the clean
+    /// activation byte. Must be called before the first
+    /// [`advance`](Campaign::advance).
+    pub fn with_perturbs(mut self, perturbs: Vec<Perturb>) -> Campaign {
+        assert_eq!(perturbs.len(), self.sites.len(), "one perturbation per fault site");
+        assert_eq!(self.evaluated(), 0, "perturbation model is fixed once faults have run");
+        self.perturbs = perturbs;
+        self
     }
 
     /// Images in the campaign subset.
@@ -453,6 +471,7 @@ impl Campaign {
             + self.subset.x.data.len()
             + self.subset.labels.len() * std::mem::size_of::<i32>()
             + self.sites.len() * std::mem::size_of::<FaultSite>()
+            + self.perturbs.len() * std::mem::size_of::<Perturb>()
             + self.acc_per_fault.len() * std::mem::size_of::<f64>()
             + std::mem::size_of::<Campaign>()
     }
@@ -465,7 +484,7 @@ impl Campaign {
     ///
     /// Within one image the block's faults run grouped by fault layer in
     /// sorted order: the group's clean activation is staged once and each
-    /// fault flips/unflips one byte in place before its gated replay.
+    /// fault perturbs/restores one byte in place before its gated replay.
     /// Per-fault accuracies are integer correct-counts over the image
     /// set, so neither the grouping nor the image-major parallelism can
     /// change a single bit of the result.
@@ -476,6 +495,7 @@ impl Campaign {
         }
         let start = self.acc_per_fault.len();
         let chunk = &self.sites[start..start + n];
+        let chunk_p = &self.perturbs[start..start + n];
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| chunk[i].layer);
         let images: Vec<usize> = (0..self.subset.len()).collect();
@@ -499,11 +519,12 @@ impl Campaign {
                     let mut staged = usize::MAX; // layer currently in `act`
                     for &oi in &order {
                         let site = chunk[oi];
+                        let perturb = chunk_p[oi];
                         // delta fast path: patch the first suffix layer
                         // from the clean accumulators — no staged copy,
-                        // no flip/unflip, no first-suffix GEMM
+                        // no perturb/restore, no first-suffix GEMM
                         let r = if delta {
-                            engine.replay_from_delta(site, trace, gate, buf)
+                            engine.replay_from_delta_perturbed(site, perturb, trace, gate, buf)
                         } else {
                             None
                         };
@@ -518,11 +539,10 @@ impl Campaign {
                                     act.extend_from_slice(&trace.acts[site.layer]);
                                     staged = site.layer;
                                 }
-                                act[site.neuron] =
-                                    (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                                let clean = act[site.neuron];
+                                act[site.neuron] = perturb.apply(clean, site.bit);
                                 let r = engine.replay_from(site.layer, act, trace, gate, buf);
-                                act[site.neuron] =
-                                    (act[site.neuron] as u8 ^ (1 << site.bit)) as i8;
+                                act[site.neuron] = clean;
                                 r
                             }
                         };
@@ -530,8 +550,9 @@ impl Campaign {
                         correct[oi] = r.pred == subset.labels[img] as usize;
                     }
                 } else {
-                    for (fi, site) in chunk.iter().enumerate() {
-                        let pred = engine.predict(subset.image(img), Some(*site), buf);
+                    for (fi, (site, perturb)) in chunk.iter().zip(chunk_p).enumerate() {
+                        let pred =
+                            engine.predict_perturbed(subset.image(img), *site, *perturb, buf);
                         correct[fi] = pred == subset.labels[img] as usize;
                     }
                 }

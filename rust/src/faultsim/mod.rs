@@ -13,11 +13,23 @@
 //! reconvergence. [`ReplayStats`] reports how many faults were masked and
 //! how deep replays actually ran; [`CampaignResult::delta_replays`] how
 //! many inferences took the patch path.
+//!
+//! Since PR 6 the single-bit transient flip is one member of a *fault-model
+//! zoo* ([`models`]): permanent activation stuck-ats, multiplier LUT-plane
+//! stuck-ats, and multi-bit bursts all run through the same campaign
+//! machinery (the activation models literally through [`Campaign`] via
+//! [`crate::simnet::Perturb`]), plus per-layer selective hardening
+//! ([`models::HardenLevel`]) as a search dimension.
 
 pub mod campaign;
+pub mod models;
 pub mod permanent;
 
 pub use campaign::{run_campaign, Campaign, CampaignParams, CampaignResult, ReplayStats, TracePrefix};
+pub use models::{
+    run_model_campaign, sample_lut_faults, sample_model_faults, FaultModelKind, HardenLevel,
+    LutFault,
+};
 pub use permanent::{run_stuck_campaign, StuckFault, StuckValue};
 
 use crate::simnet::{FaultSite, QNet};
@@ -105,6 +117,40 @@ mod tests {
         let sites = sample_sites(&net, 10_000, SiteSampling::UniformNeuron, &mut rng);
         let l0 = sites.iter().filter(|s| s.layer == 0).count();
         assert!((5500..6500).contains(&l0), "{l0}");
+    }
+
+    #[test]
+    fn property_uniform_neuron_layer_distribution_proportional_to_sizes() {
+        // On random topologies, UniformNeuron's empirical per-layer hit
+        // counts must track layer sizes: every layer within ~4 standard
+        // deviations of its binomial expectation n * size/total (a bound a
+        // correct sampler leaves with probability < 1e-4 per layer, while
+        // e.g. a uniform-layer sampler on a skewed net blows through it).
+        use crate::simnet::testutil::random_mlp;
+        crate::util::proptest::check("uniform_neuron_proportional", 0x5A3E, 25, |rng| {
+            let net = random_mlp(rng);
+            let sizes: Vec<usize> =
+                (0..net.n_comp()).map(|ci| net.comp(ci).act_len()).collect();
+            let total: usize = sizes.iter().sum();
+            let n = 4000usize;
+            let mut site_rng = Rng::new(rng.next_u64());
+            let sites = sample_sites(&net, n, SiteSampling::UniformNeuron, &mut site_rng);
+            let mut hits = vec![0usize; net.n_comp()];
+            for s in &sites {
+                hits[s.layer] += 1;
+            }
+            for (ci, (&h, &sz)) in hits.iter().zip(&sizes).enumerate() {
+                let p = sz as f64 / total as f64;
+                let expect = n as f64 * p;
+                let sd = (n as f64 * p * (1.0 - p)).sqrt();
+                let tol = 4.0 * sd + 1.0;
+                assert!(
+                    (h as f64 - expect).abs() <= tol,
+                    "layer {ci}: {h} hits, expected {expect:.1} ± {tol:.1} \
+                     (sizes {sizes:?})"
+                );
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,792 @@
+//! The fault-model zoo: one campaign machinery, many fault scenarios.
+//!
+//! The campaign runner ([`super::campaign`]) is generic over *how* a fault
+//! perturbs the network — every activation model is a pure function of the
+//! clean activation byte ([`Perturb`]), so delta patching and the
+//! convergence gate serve all of them unchanged. This module names the
+//! scenarios ([`FaultModelKind`]), samples their fault populations with a
+//! shared site stream (per-model vulnerability numbers stay comparable
+//! because every byte-perturbation model under the same `(net, params,
+//! seed)` draws the *same* sites before its model-specific extras), and
+//! runs them to a [`CampaignResult`]:
+//!
+//! * [`FaultModelKind::BitFlip`] — the historical transient single-event
+//!   upset (XOR of one activation bit). Delegates to [`run_campaign`]
+//!   verbatim, bit-for-bit.
+//! * [`FaultModelKind::StuckAt`] — permanent activation stuck-at-0/1
+//!   ([`super::permanent`]), now on the shared block-wise [`Campaign`]
+//!   instead of the orphaned single-threaded runner.
+//! * [`FaultModelKind::LutPlane`] — a stuck-at on one output bit-plane of
+//!   a layer's approximate-multiplier product table ([`LutFault`]): the
+//!   engine executes against a *modified multiplier LUT*, which is
+//!   near-free in the LUT engine — the faulted table costs exactly what
+//!   the clean one does, and every inference shares the fault.
+//! * [`FaultModelKind::MultiBit`] — burst upsets of 2–4 adjacent
+//!   activation bits (one [`Perturb::Burst`] per site; bursts clip at the
+//!   byte edge, the site bit is always a member).
+//!
+//! On top sits selective hardening ([`HardenLevel`]): per-layer
+//! none/TMR/ECC protection as a *search dimension*. Hardening never
+//! re-runs a campaign — a protected fault is masked, i.e. scored at the
+//! fault-free accuracy, so the hardened estimate is a pure
+//! re-summarization of the unhardened campaign's per-fault accuracies
+//! ([`hardened_result`]) and hardened/unhardened genotypes share parked
+//! campaign state. The area/power bill lives in
+//! [`crate::hwmodel::estimate_hardened`].
+
+use super::campaign::{run_campaign, Campaign, CampaignParams, CampaignResult, ReplayStats};
+use super::permanent::{sample_stuck, StuckValue};
+use super::{sample_sites, SiteSampling};
+use crate::axmul::Lut;
+use crate::dataset::TestSet;
+use crate::simnet::{Buffers, Engine, FaultSite, Perturb, QNet};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
+
+/// The fault scenarios the campaign machinery can run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum FaultModelKind {
+    /// transient single-bit activation flip (the paper's model; default)
+    #[default]
+    BitFlip,
+    /// permanent single-bit activation stuck-at (fair-coin polarity)
+    StuckAt,
+    /// stuck-at on one output bit-plane of a layer's multiplier LUT
+    LutPlane,
+    /// burst upset of 2–4 adjacent activation bits
+    MultiBit,
+}
+
+impl FaultModelKind {
+    pub const ALL: [FaultModelKind; 4] = [
+        FaultModelKind::BitFlip,
+        FaultModelKind::StuckAt,
+        FaultModelKind::LutPlane,
+        FaultModelKind::MultiBit,
+    ];
+
+    /// Canonical name (CLI value, cache-key tag, report row).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultModelKind::BitFlip => "bitflip",
+            FaultModelKind::StuckAt => "stuckat",
+            FaultModelKind::LutPlane => "lutplane",
+            FaultModelKind::MultiBit => "multibit",
+        }
+    }
+
+    /// Parse a CLI/query spelling; hyphens/underscores are ignored, so
+    /// `stuck-at`, `stuck_at` and `stuckat` all name the same model.
+    pub fn parse(s: &str) -> Option<FaultModelKind> {
+        let norm: String =
+            s.chars().filter(|c| *c != '-' && *c != '_').collect::<String>().to_lowercase();
+        match norm.as_str() {
+            "bitflip" => Some(FaultModelKind::BitFlip),
+            "stuckat" => Some(FaultModelKind::StuckAt),
+            "lutplane" => Some(FaultModelKind::LutPlane),
+            "multibit" => Some(FaultModelKind::MultiBit),
+            _ => None,
+        }
+    }
+
+    /// Is the fault an activation-byte perturbation (servable by the
+    /// shared replay [`Campaign`])? `LutPlane` is the one model that is
+    /// not — it faults the multiplier table itself.
+    pub fn is_activation(self) -> bool {
+        !matches!(self, FaultModelKind::LutPlane)
+    }
+}
+
+/// The adjacent-bit burst mask for a [`FaultModelKind::MultiBit`] site:
+/// `width` bits starting at `bit`, clipped at the byte edge (the site bit
+/// is always a member; a site at bit 7 degrades to an effective single-bit
+/// burst).
+pub fn burst_mask(bit: u8, width: u8) -> u8 {
+    ((((1u32 << width) - 1) << bit) & 0xFF) as u8
+}
+
+/// Sample `n` activation faults for `kind` as parallel `(site, perturb)`
+/// lists for [`Campaign::with_perturbs`].
+///
+/// Draw order is the comparability contract: ALL `n` sites are drawn
+/// first — the exact [`sample_sites`] stream, so every activation model
+/// under the same `(net, n, sampling, seed)` faults the same sites — and
+/// the model-specific extras (stuck polarities, burst widths) follow as a
+/// second block. `BitFlip` draws no extras at all, which keeps its stream
+/// identical to the legacy pre-zoo campaign.
+///
+/// Panics for [`FaultModelKind::LutPlane`] — LUT-plane faults are not
+/// activation faults; sample them with [`sample_lut_faults`].
+pub fn sample_model_faults(
+    net: &QNet,
+    n: usize,
+    sampling: SiteSampling,
+    rng: &mut Rng,
+    kind: FaultModelKind,
+) -> (Vec<FaultSite>, Vec<Perturb>) {
+    match kind {
+        FaultModelKind::BitFlip => {
+            let sites = sample_sites(net, n, sampling, rng);
+            let perturbs = vec![Perturb::Flip; sites.len()];
+            (sites, perturbs)
+        }
+        FaultModelKind::StuckAt => {
+            // sample_stuck draws all sites, then all polarity coins —
+            // the shared-site contract above by construction
+            let faults = sample_stuck(net, n, sampling, rng);
+            let sites = faults.iter().map(|f| f.site).collect();
+            let perturbs = faults
+                .iter()
+                .map(|f| Perturb::Stuck(matches!(f.value, StuckValue::One)))
+                .collect();
+            (sites, perturbs)
+        }
+        FaultModelKind::MultiBit => {
+            let sites = sample_sites(net, n, sampling, rng);
+            let perturbs = sites
+                .iter()
+                .map(|s| Perturb::Burst(burst_mask(s.bit, 2 + rng.below(3) as u8)))
+                .collect();
+            (sites, perturbs)
+        }
+        FaultModelKind::LutPlane => {
+            panic!("LutPlane faults the multiplier table, not activations; use sample_lut_faults")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT-plane stuck-ats
+// ---------------------------------------------------------------------------
+
+/// A stuck-at fault on one output bit-plane of a layer's multiplier LUT:
+/// bit `bit` of every product in the 256×256 table is forced to
+/// `stuck_one`. Signed 8×8 products span [-16256, 16384], so the table
+/// entries round-trip through `i16` losslessly and the plane index runs
+/// 0..16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutFault {
+    /// computing-layer index whose multiplier table is faulted
+    pub layer: usize,
+    /// output bit-plane of the product table, 0..16
+    pub bit: u8,
+    /// stuck polarity of the plane
+    pub stuck_one: bool,
+}
+
+/// Draw `n` LUT-plane faults: layer uniform over computing layers, plane
+/// uniform over the 16 product bits, polarity a fair coin.
+pub fn sample_lut_faults(net: &QNet, n: usize, rng: &mut Rng) -> Vec<LutFault> {
+    (0..n)
+        .map(|_| LutFault {
+            layer: rng.usize_below(net.n_comp()),
+            bit: rng.below(16) as u8,
+            stuck_one: rng.below(2) == 1,
+        })
+        .collect()
+}
+
+/// Force bit `bit` of every product in the table to `stuck_one`
+/// (idempotent, like any stuck-at).
+pub fn apply_lut_stuck(lut: &mut Lut, bit: u8, stuck_one: bool) {
+    let m = 1u16 << bit;
+    for t in lut.table.iter_mut() {
+        let v = *t as i16 as u16;
+        *t = (if stuck_one { v | m } else { v & !m }) as i16 as i32;
+    }
+}
+
+/// Accuracy of `engine` with `f` injected: the faulted layer's LUT is
+/// cloned, the plane is stuck, and the engine runs against the modified
+/// table — the per-inference cost is exactly the clean engine's (a LUT
+/// gather is a LUT gather), which is what makes this model near-free.
+pub fn lut_fault_accuracy(
+    engine: &Engine,
+    subset: &TestSet,
+    f: LutFault,
+    buf: &mut Buffers,
+) -> f64 {
+    let mut lut = engine.luts[f.layer].clone();
+    apply_lut_stuck(&mut lut, f.bit, f.stuck_one);
+    let luts: Vec<&Lut> =
+        engine.luts.iter().enumerate().map(|(ci, &l)| if ci == f.layer { &lut } else { l }).collect();
+    let faulted = Engine::new(engine.net, luts);
+    faulted.accuracy(subset, buf)
+}
+
+/// LUT-plane campaign: every fault is one full accuracy pass against a
+/// modified multiplier table (fault-major parallelism — the fault is
+/// shared by all inferences, so there is nothing to replay and the
+/// [`ReplayStats`] are structurally zero).
+pub fn run_lut_plane_campaign(
+    engine: &Engine,
+    data: &TestSet,
+    params: &CampaignParams,
+) -> CampaignResult {
+    let subset = data.take(params.n_images);
+    let n_images = subset.len();
+    assert!(n_images > 0, "empty test subset");
+    let mut rng = Rng::new(params.seed);
+    let faults = sample_lut_faults(engine.net, params.n_faults, &mut rng);
+    let mut buf = Buffers::for_net(engine.net);
+    let base_acc = engine.accuracy(&subset, &mut buf);
+    let acc_per_fault: Vec<f64> = budgeted_map_with(
+        WorkerBudget::global(),
+        params.workers.max(1),
+        &faults,
+        || Buffers::for_net(engine.net),
+        |buf, f| lut_fault_accuracy(engine, &subset, *f, buf),
+    );
+    let s = stats::summarize(&acc_per_fault);
+    CampaignResult {
+        base_acc,
+        mean_fault_acc: s.mean,
+        vulnerability: base_acc - s.mean,
+        ci95: stats::ci95_halfwidth(&s),
+        n_faults: acc_per_fault.len(),
+        n_images,
+        acc_per_fault,
+        replay: ReplayStats::new(engine.net.n_comp()),
+        delta_replays: 0,
+    }
+}
+
+/// Run a `kind` campaign to completion for one engine configuration —
+/// the model-generic face of [`run_campaign`]. `BitFlip` delegates to
+/// [`run_campaign`] verbatim (bit-for-bit the pre-zoo runner); `StuckAt`
+/// and `MultiBit` drive the same block-wise [`Campaign`] with their
+/// perturbation lists; `LutPlane` takes the modified-table path.
+pub fn run_model_campaign(
+    kind: FaultModelKind,
+    engine: &Engine,
+    data: &TestSet,
+    params: &CampaignParams,
+) -> CampaignResult {
+    match kind {
+        FaultModelKind::BitFlip => run_campaign(engine, data, params),
+        FaultModelKind::LutPlane => run_lut_plane_campaign(engine, data, params),
+        FaultModelKind::StuckAt | FaultModelKind::MultiBit => {
+            let mut rng = Rng::new(params.seed);
+            let (sites, perturbs) =
+                sample_model_faults(engine.net, params.n_faults, params.sampling, &mut rng, kind);
+            let mut campaign =
+                Campaign::new(engine, data, params, sites).with_perturbs(perturbs);
+            while campaign.advance(engine, usize::MAX) > 0 {}
+            campaign.result()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selective hardening
+// ---------------------------------------------------------------------------
+
+/// Per-layer protection level — the genotype dimension selective
+/// hardening adds to the search ([`crate::search::SearchSpace`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum HardenLevel {
+    /// unprotected (free)
+    #[default]
+    None,
+    /// triple modular redundancy: masks every fault in its layer —
+    /// activation upsets of any width and the layer's multiplier table —
+    /// for ~3× the layer's logic plus a voter
+    Tmr,
+    /// SEC-style error correction on the activation registers: masks
+    /// single-bit activation faults (flips and stuck-ats; a burst of
+    /// effective width 1 counts) but not multi-bit bursts and never the
+    /// multiplier table, for ~1 parity bit per byte plus corrector logic
+    Ecc,
+}
+
+impl HardenLevel {
+    pub const ALL: [HardenLevel; 3] = [HardenLevel::None, HardenLevel::Tmr, HardenLevel::Ecc];
+
+    /// Canonical name (genotype decode, CLI, config strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            HardenLevel::None => "none",
+            HardenLevel::Tmr => "tmr",
+            HardenLevel::Ecc => "ecc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HardenLevel> {
+        match s.to_lowercase().as_str() {
+            "none" => Some(HardenLevel::None),
+            "tmr" => Some(HardenLevel::Tmr),
+            "ecc" => Some(HardenLevel::Ecc),
+            _ => None,
+        }
+    }
+
+    /// Does this level mask an activation perturbation in its layer?
+    pub fn masks_activation(self, perturb: Perturb) -> bool {
+        match self {
+            HardenLevel::None => false,
+            HardenLevel::Tmr => true,
+            HardenLevel::Ecc => perturb.width() <= 1,
+        }
+    }
+
+    /// Does this level mask a LUT-plane fault in its layer? Only TMR —
+    /// ECC protects activation registers, not the multiplier datapath.
+    pub fn masks_lut_plane(self) -> bool {
+        matches!(self, HardenLevel::Tmr)
+    }
+}
+
+fn resummarize(result: &CampaignResult, acc_per_fault: Vec<f64>) -> CampaignResult {
+    let s = stats::summarize(&acc_per_fault);
+    CampaignResult {
+        base_acc: result.base_acc,
+        mean_fault_acc: s.mean,
+        vulnerability: result.base_acc - s.mean,
+        ci95: stats::ci95_halfwidth(&s),
+        n_faults: acc_per_fault.len(),
+        n_images: result.n_images,
+        acc_per_fault,
+        replay: result.replay.clone(),
+        delta_replays: result.delta_replays,
+    }
+}
+
+/// Re-summarize an activation campaign's evaluated prefix under per-layer
+/// hardening: every fault whose layer's [`HardenLevel`] masks its
+/// perturbation is scored at the fault-free accuracy (the protected
+/// hardware corrects it before it propagates), the rest keep their
+/// measured accuracies. Hardening therefore never re-runs a campaign —
+/// hardened and unhardened genotypes with the same multiplier assignment
+/// share the same campaign (and parked trace-cache state) exactly.
+///
+/// `sites`/`perturbs` are the campaign's full sampled lists; only the
+/// first `result.acc_per_fault.len()` entries (the evaluated prefix) are
+/// read.
+pub fn hardened_result(
+    result: &CampaignResult,
+    sites: &[FaultSite],
+    perturbs: &[Perturb],
+    levels: &[HardenLevel],
+) -> CampaignResult {
+    let acc: Vec<f64> = result
+        .acc_per_fault
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| {
+            if levels[sites[i].layer].masks_activation(perturbs[i]) {
+                result.base_acc
+            } else {
+                a
+            }
+        })
+        .collect();
+    resummarize(result, acc)
+}
+
+/// [`hardened_result`] for a LUT-plane campaign: TMR masks its layer's
+/// table fault, ECC masks nothing.
+pub fn hardened_lut_result(
+    result: &CampaignResult,
+    faults: &[LutFault],
+    levels: &[HardenLevel],
+) -> CampaignResult {
+    let acc: Vec<f64> = result
+        .acc_per_fault
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| {
+            if levels[faults[i].layer].masks_lut_plane() {
+                result.base_acc
+            } else {
+                a
+            }
+        })
+        .collect();
+    resummarize(result, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axmul;
+    use crate::simnet::testutil::tiny_mlp;
+    use crate::tensor::TensorI8;
+
+    fn fake_data(n: usize) -> TestSet {
+        let mut rng = Rng::new(0xF00D);
+        let data: Vec<i8> = (0..n * 4).map(|_| rng.i8()).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        TestSet { name: "fake".into(), x: TensorI8::from_vec(&[n, 1, 2, 2], data), labels }
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in FaultModelKind::ALL {
+            assert_eq!(FaultModelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(FaultModelKind::parse("stuck-at"), Some(FaultModelKind::StuckAt));
+        assert_eq!(FaultModelKind::parse("LUT-plane"), Some(FaultModelKind::LutPlane));
+        assert_eq!(FaultModelKind::parse("multi_bit"), Some(FaultModelKind::MultiBit));
+        assert_eq!(FaultModelKind::parse("bogus"), None);
+        assert_eq!(FaultModelKind::default(), FaultModelKind::BitFlip);
+    }
+
+    #[test]
+    fn harden_names_round_trip() {
+        for lv in HardenLevel::ALL {
+            assert_eq!(HardenLevel::parse(lv.name()), Some(lv));
+        }
+        assert_eq!(HardenLevel::parse("TMR"), Some(HardenLevel::Tmr));
+        assert_eq!(HardenLevel::parse("bogus"), None);
+        assert_eq!(HardenLevel::default(), HardenLevel::None);
+    }
+
+    #[test]
+    fn activation_models_share_the_site_stream() {
+        // the comparability contract: same (net, n, sampling, seed) =>
+        // identical sites for every activation model, and BitFlip's
+        // stream is exactly the legacy sample_sites stream
+        let net = tiny_mlp();
+        let legacy = sample_sites(&net, 40, SiteSampling::UniformLayer, &mut Rng::new(42));
+        for kind in
+            [FaultModelKind::BitFlip, FaultModelKind::StuckAt, FaultModelKind::MultiBit]
+        {
+            let (sites, perturbs) = sample_model_faults(
+                &net,
+                40,
+                SiteSampling::UniformLayer,
+                &mut Rng::new(42),
+                kind,
+            );
+            assert_eq!(sites, legacy, "{kind:?} must fault the legacy sites");
+            assert_eq!(perturbs.len(), 40);
+        }
+    }
+
+    #[test]
+    fn model_perturbs_have_model_shapes() {
+        let net = tiny_mlp();
+        let (_, flips) = sample_model_faults(
+            &net,
+            30,
+            SiteSampling::UniformLayer,
+            &mut Rng::new(7),
+            FaultModelKind::BitFlip,
+        );
+        assert!(flips.iter().all(|p| *p == Perturb::Flip));
+        let (_, stucks) = sample_model_faults(
+            &net,
+            200,
+            SiteSampling::UniformLayer,
+            &mut Rng::new(7),
+            FaultModelKind::StuckAt,
+        );
+        assert!(stucks.iter().all(|p| matches!(p, Perturb::Stuck(_))));
+        assert!(stucks.iter().any(|p| *p == Perturb::Stuck(true)));
+        assert!(stucks.iter().any(|p| *p == Perturb::Stuck(false)));
+        let (sites, bursts) = sample_model_faults(
+            &net,
+            200,
+            SiteSampling::UniformLayer,
+            &mut Rng::new(7),
+            FaultModelKind::MultiBit,
+        );
+        for (s, p) in sites.iter().zip(&bursts) {
+            let Perturb::Burst(mask) = *p else { panic!("multibit must burst") };
+            assert_ne!(mask & (1 << s.bit), 0, "site bit is always a member");
+            let w = mask.count_ones();
+            assert!((1..=4).contains(&w), "burst width {w} out of range");
+            // the mask is a contiguous run starting at the site bit
+            assert_eq!(mask >> s.bit << s.bit, mask);
+            assert_eq!((mask >> s.bit).count_ones(), (mask >> s.bit).trailing_ones());
+        }
+        // widths 2..=4 all occur before byte-edge clipping
+        let widths: Vec<u32> = sites
+            .iter()
+            .zip(&bursts)
+            .filter(|(s, _)| s.bit <= 4)
+            .map(|(_, p)| p.width())
+            .collect();
+        for w in [2, 3, 4] {
+            assert!(widths.contains(&w), "width {w} never drawn");
+        }
+    }
+
+    #[test]
+    fn burst_mask_clips_at_byte_edge() {
+        assert_eq!(burst_mask(0, 2), 0b0000_0011);
+        assert_eq!(burst_mask(3, 4), 0b0111_1000);
+        assert_eq!(burst_mask(6, 3), 0b1100_0000);
+        assert_eq!(burst_mask(7, 4), 0b1000_0000);
+    }
+
+    #[test]
+    fn bitflip_model_campaign_is_the_legacy_runner() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let params = CampaignParams {
+            n_faults: 24,
+            n_images: 16,
+            seed: 0xBEEF,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        let legacy = run_campaign(&engine, &data, &params);
+        let model = run_model_campaign(FaultModelKind::BitFlip, &engine, &data, &params);
+        assert_eq!(legacy.acc_per_fault, model.acc_per_fault);
+        assert_eq!(legacy.replay, model.replay);
+        assert_eq!(legacy.delta_replays, model.delta_replays);
+    }
+
+    #[test]
+    fn generalized_campaign_with_flip_perturbs_matches_legacy() {
+        // the worker-closure rewrite (save/apply/restore instead of
+        // XOR/XOR) must be byte-identical for Flip — asserted through the
+        // explicit with_perturbs path, ReplayStats included
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let params = CampaignParams {
+            n_faults: 24,
+            n_images: 16,
+            seed: 0xBEEF,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        let legacy = run_campaign(&engine, &data, &params);
+        let mut rng = Rng::new(params.seed);
+        let (sites, perturbs) = sample_model_faults(
+            &net,
+            params.n_faults,
+            params.sampling,
+            &mut rng,
+            FaultModelKind::BitFlip,
+        );
+        let mut c = Campaign::new(&engine, &data, &params, sites).with_perturbs(perturbs);
+        while c.advance(&engine, 7) > 0 {}
+        let got = c.result();
+        assert_eq!(legacy.acc_per_fault, got.acc_per_fault);
+        assert_eq!(legacy.base_acc, got.base_acc);
+        assert_eq!(legacy.ci95, got.ci95);
+        assert_eq!(legacy.replay, got.replay);
+        assert_eq!(legacy.delta_replays, got.delta_replays);
+    }
+
+    #[test]
+    fn stuckat_and_multibit_campaigns_run_deterministically() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let params = CampaignParams {
+            n_faults: 32,
+            n_images: 16,
+            seed: 0x5AFE,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        for kind in [FaultModelKind::StuckAt, FaultModelKind::MultiBit] {
+            let a = run_model_campaign(kind, &engine, &data, &params);
+            let b = run_model_campaign(kind, &engine, &data, &params);
+            assert_eq!(a.acc_per_fault, b.acc_per_fault, "{kind:?}");
+            assert_eq!(a.acc_per_fault.len(), 32);
+            assert!(a.acc_per_fault.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            // replay path ran and the gate bookkeeping is consistent
+            assert_eq!(a.replay.depth_hist.iter().sum::<u64>(), a.replay.inferences);
+        }
+    }
+
+    #[test]
+    fn stuckat_replay_matches_naive_forwards() {
+        // gate + delta must be bit-identical for stuck-ats just like for
+        // flips: replay on/off cannot move a single per-fault accuracy
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(24);
+        let mk = |replay: bool, gate: bool, delta: bool| CampaignParams {
+            n_faults: 40,
+            n_images: 20,
+            seed: 0xD00D,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay,
+            gate,
+            delta,
+        };
+        for kind in [FaultModelKind::StuckAt, FaultModelKind::MultiBit] {
+            let fast = run_model_campaign(kind, &engine, &data, &mk(true, true, true));
+            let nogate = run_model_campaign(kind, &engine, &data, &mk(true, false, false));
+            let naive = run_model_campaign(kind, &engine, &data, &mk(false, false, false));
+            assert_eq!(fast.acc_per_fault, nogate.acc_per_fault, "{kind:?}");
+            assert_eq!(fast.acc_per_fault, naive.acc_per_fault, "{kind:?}");
+            assert_eq!(fast.base_acc, naive.base_acc, "{kind:?}");
+            assert!(fast.delta_replays > 0, "{kind:?}: delta path must serve faults");
+        }
+    }
+
+    #[test]
+    fn lut_stuck_is_idempotent_and_hits_every_entry() {
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let mut lut = exact.clone();
+        apply_lut_stuck(&mut lut, 0, true);
+        assert!(lut.table.iter().all(|t| t & 1 == 1), "plane 0 stuck at 1 everywhere");
+        let snapshot = lut.table.clone();
+        apply_lut_stuck(&mut lut, 0, true);
+        assert_eq!(lut.table, snapshot, "stuck-at is idempotent");
+        // exact mul: 3*4 = 12 (bit 0 clear) must now read 13
+        assert_eq!(lut.mul(3, 4), 13);
+        let mut zeroed = exact.clone();
+        apply_lut_stuck(&mut zeroed, 0, false);
+        assert_eq!(zeroed.mul(3, 5), 14, "15 with bit 0 cleared");
+        // sign region round-trips through the i16 cast
+        let mut hi = exact.clone();
+        apply_lut_stuck(&mut hi, 15, true);
+        assert_eq!(hi.mul(0, 0), -32768i16 as i32, "0 with bit 15 set is i16-negative");
+    }
+
+    #[test]
+    fn lut_plane_campaign_runs_and_is_deterministic() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let params = CampaignParams {
+            n_faults: 16,
+            n_images: 16,
+            seed: 0x107,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        let a = run_model_campaign(FaultModelKind::LutPlane, &engine, &data, &params);
+        let b = run_model_campaign(FaultModelKind::LutPlane, &engine, &data, &params);
+        assert_eq!(a.acc_per_fault, b.acc_per_fault);
+        assert_eq!(a.acc_per_fault.len(), 16);
+        assert!(a.acc_per_fault.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert_eq!(a.replay, ReplayStats::new(net.n_comp()), "nothing to replay");
+        assert_eq!(a.delta_replays, 0);
+        // a low-plane stuck-at is a tiny product perturbation; a clean
+        // engine accuracy stays a probability either way
+        assert!(a.base_acc >= 0.0 && a.base_acc <= 1.0);
+    }
+
+    #[test]
+    fn sample_lut_faults_in_bounds_and_deterministic() {
+        let net = tiny_mlp();
+        let a = sample_lut_faults(&net, 100, &mut Rng::new(11));
+        let b = sample_lut_faults(&net, 100, &mut Rng::new(11));
+        assert_eq!(a, b);
+        for f in &a {
+            assert!(f.layer < net.n_comp());
+            assert!(f.bit < 16);
+        }
+        assert!(a.iter().any(|f| f.stuck_one) && a.iter().any(|f| !f.stuck_one));
+    }
+
+    #[test]
+    fn hardening_masks_by_level_and_width() {
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = fake_data(20);
+        let params = CampaignParams {
+            n_faults: 40,
+            n_images: 16,
+            seed: 0xAB,
+            workers: 2,
+            sampling: SiteSampling::UniformLayer,
+            replay: true,
+            gate: true,
+            delta: true,
+        };
+        let mut rng = Rng::new(params.seed);
+        let (sites, perturbs) = sample_model_faults(
+            &net,
+            params.n_faults,
+            params.sampling,
+            &mut rng,
+            FaultModelKind::BitFlip,
+        );
+        let mut c =
+            Campaign::new(&engine, &data, &params, sites.clone()).with_perturbs(perturbs.clone());
+        while c.advance(&engine, usize::MAX) > 0 {}
+        let result = c.result();
+        // full TMR masks everything: zero vulnerability by construction
+        let tmr = hardened_result(&result, &sites, &perturbs, &[HardenLevel::Tmr; 2]);
+        assert!(tmr.acc_per_fault.iter().all(|&a| a == result.base_acc));
+        assert_eq!(tmr.vulnerability, 0.0);
+        // full ECC masks all single-bit faults — for BitFlip that is
+        // every fault, so it coincides with TMR here
+        let ecc = hardened_result(&result, &sites, &perturbs, &[HardenLevel::Ecc; 2]);
+        assert_eq!(ecc.acc_per_fault, tmr.acc_per_fault);
+        // no hardening is the identity
+        let none = hardened_result(&result, &sites, &perturbs, &[HardenLevel::None; 2]);
+        assert_eq!(none.acc_per_fault, result.acc_per_fault);
+        assert_eq!(none.mean_fault_acc, result.mean_fault_acc);
+        // selective: hardening only layer 0 masks exactly layer-0 faults
+        let sel =
+            hardened_result(&result, &sites, &perturbs, &[HardenLevel::Tmr, HardenLevel::None]);
+        for (i, s) in sites.iter().enumerate() {
+            if s.layer == 0 {
+                assert_eq!(sel.acc_per_fault[i], result.base_acc);
+            } else {
+                assert_eq!(sel.acc_per_fault[i], result.acc_per_fault[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn ecc_does_not_mask_wide_bursts() {
+        let flip = Perturb::Flip;
+        let narrow = Perturb::Burst(0b1000_0000); // byte-edge clip, width 1
+        let wide = Perturb::Burst(0b0000_0110);
+        assert!(HardenLevel::Ecc.masks_activation(flip));
+        assert!(HardenLevel::Ecc.masks_activation(narrow));
+        assert!(!HardenLevel::Ecc.masks_activation(wide));
+        assert!(HardenLevel::Tmr.masks_activation(wide));
+        assert!(!HardenLevel::None.masks_activation(flip));
+        assert!(HardenLevel::Tmr.masks_lut_plane());
+        assert!(!HardenLevel::Ecc.masks_lut_plane());
+    }
+
+    #[test]
+    fn hardened_lut_result_masks_tmr_layers_only() {
+        let base = CampaignResult {
+            base_acc: 0.9,
+            mean_fault_acc: 0.5,
+            vulnerability: 0.4,
+            ci95: 0.1,
+            acc_per_fault: vec![0.2, 0.4, 0.6, 0.8],
+            n_faults: 4,
+            n_images: 10,
+            replay: ReplayStats::default(),
+            delta_replays: 0,
+        };
+        let faults = vec![
+            LutFault { layer: 0, bit: 3, stuck_one: true },
+            LutFault { layer: 1, bit: 7, stuck_one: false },
+            LutFault { layer: 0, bit: 15, stuck_one: true },
+            LutFault { layer: 1, bit: 0, stuck_one: true },
+        ];
+        let got =
+            hardened_lut_result(&base, &faults, &[HardenLevel::Tmr, HardenLevel::Ecc]);
+        assert_eq!(got.acc_per_fault, vec![0.9, 0.4, 0.9, 0.8]);
+        assert_eq!(got.base_acc, 0.9);
+    }
+}

@@ -66,15 +66,62 @@ pub struct StuckCampaignResult {
     pub acc_per_fault: Vec<f64>,
 }
 
-/// Stuck-at campaign (layer-replay; single-threaded — permanent campaigns
-/// are typically smaller than transient ones since the fault persists
-/// across the whole workload anyway).
+/// Stuck-at campaign on the unified block-wise [`Campaign`]
+/// ([`super::models::run_model_campaign`] with
+/// [`super::models::FaultModelKind::StuckAt`]): image-major parallelism,
+/// convergence gate and delta patching included — a stuck-at is still a
+/// pure function of the clean activation, so the whole replay fast path
+/// applies unchanged. Fault sampling matches [`sample_stuck`] under the
+/// same `(n_faults, sampling, seed)` exactly, and the result is asserted
+/// bit-identical to the historical single-threaded runner (kept as
+/// [`run_stuck_campaign_reference`]) in this module's parity test.
 pub fn run_stuck_campaign(
     engine: &Engine,
     data: &TestSet,
     n_faults: usize,
     n_images: usize,
     seed: u64,
+    sampling: SiteSampling,
+) -> StuckCampaignResult {
+    use crate::util::cli::env_flag;
+    let params = super::campaign::CampaignParams {
+        n_faults,
+        n_images,
+        seed,
+        workers: crate::util::threadpool::default_workers(),
+        sampling,
+        replay: true,
+        gate: !env_flag("DEEPAXE_NO_CONVERGENCE_GATE"),
+        delta: !env_flag("DEEPAXE_NO_DELTA"),
+    };
+    let r = super::models::run_model_campaign(
+        super::models::FaultModelKind::StuckAt,
+        engine,
+        data,
+        &params,
+    );
+    StuckCampaignResult {
+        base_acc: r.base_acc,
+        mean_fault_acc: r.mean_fault_acc,
+        vulnerability: r.vulnerability,
+        ci95: r.ci95,
+        acc_per_fault: r.acc_per_fault,
+    }
+}
+
+/// The historical stuck-at runner: single-threaded, ungated full-suffix
+/// replays. Kept as the independent reference implementation the unified
+/// path is parity-tested against (it shares no campaign machinery beyond
+/// [`Engine::forward_from`]). The `sampling` parameter used to be
+/// hardwired to `UniformLayer` despite [`sample_stuck`] taking it; it is
+/// plumbed through here too so both paths draw identical fault lists.
+pub fn run_stuck_campaign_reference(
+    engine: &Engine,
+    data: &TestSet,
+    n_faults: usize,
+    n_images: usize,
+    seed: u64,
+    sampling: SiteSampling,
 ) -> StuckCampaignResult {
     let subset = data.take(n_images);
     let mut buf = Buffers::for_net(engine.net);
@@ -88,7 +135,7 @@ pub fn run_stuck_campaign(
         / subset.len() as f64;
 
     let mut rng = Rng::new(seed);
-    let faults = sample_stuck(engine.net, n_faults, SiteSampling::UniformLayer, &mut rng);
+    let faults = sample_stuck(engine.net, n_faults, sampling, &mut rng);
     let mut acc_per_fault = Vec::with_capacity(faults.len());
     let mut act = Vec::new();
     for f in &faults {
@@ -154,12 +201,49 @@ mod tests {
             x: TensorI8::from_vec(&[20, 1, 2, 2], (0..80).map(|_| rng.i8()).collect()),
             labels: (0..20).map(|i| i % 2).collect(),
         };
-        let r = run_stuck_campaign(&engine, &data, 32, 20, 5);
+        let r = run_stuck_campaign(&engine, &data, 32, 20, 5, SiteSampling::UniformLayer);
         assert_eq!(r.acc_per_fault.len(), 32);
         assert!(r.mean_fault_acc >= 0.0 && r.mean_fault_acc <= 1.0);
         // deterministic
-        let r2 = run_stuck_campaign(&engine, &data, 32, 20, 5);
+        let r2 = run_stuck_campaign(&engine, &data, 32, 20, 5, SiteSampling::UniformLayer);
         assert_eq!(r.acc_per_fault, r2.acc_per_fault);
+    }
+
+    #[test]
+    fn unified_campaign_is_bit_identical_to_reference_runner() {
+        // the satellite-1 parity criterion: the Campaign-backed stuck-at
+        // path (parallel, gated, delta-patched) must equal the historical
+        // single-threaded ungated runner on every per-fault accuracy, for
+        // both sampling modes — they share sample_stuck but nothing else
+        let net = tiny_mlp();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let mut rng = Rng::new(0x7E57);
+        let data = TestSet {
+            name: "fake".into(),
+            x: TensorI8::from_vec(&[24, 1, 2, 2], (0..96).map(|_| rng.i8()).collect()),
+            labels: (0..24).map(|i| i % 2).collect(),
+        };
+        for sampling in [SiteSampling::UniformLayer, SiteSampling::UniformNeuron] {
+            let unified = run_stuck_campaign(&engine, &data, 48, 20, 0x57CC, sampling);
+            let reference =
+                run_stuck_campaign_reference(&engine, &data, 48, 20, 0x57CC, sampling);
+            assert_eq!(unified.acc_per_fault, reference.acc_per_fault, "{sampling:?}");
+            assert_eq!(unified.base_acc, reference.base_acc, "{sampling:?}");
+            assert_eq!(unified.mean_fault_acc, reference.mean_fault_acc, "{sampling:?}");
+            assert_eq!(unified.vulnerability, reference.vulnerability, "{sampling:?}");
+            assert_eq!(unified.ci95, reference.ci95, "{sampling:?}");
+        }
+    }
+
+    #[test]
+    fn sampling_parameter_actually_changes_the_draw() {
+        // regression for the hardwired-UniformLayer bug: the two modes
+        // must produce different fault lists under the same seed
+        let net = tiny_mlp();
+        let a = sample_stuck(&net, 64, SiteSampling::UniformLayer, &mut Rng::new(2));
+        let b = sample_stuck(&net, 64, SiteSampling::UniformNeuron, &mut Rng::new(2));
+        assert_ne!(a, b);
     }
 
     #[test]

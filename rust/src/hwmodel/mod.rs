@@ -184,6 +184,57 @@ pub fn estimate_uniform(net: &QNet, m: &Multiplier) -> HwReport {
     estimate(net, &vec![m; net.n_comp()])
 }
 
+// Selective-hardening surcharges (per protected computing layer).
+// TMR triplicates the layer's datapath and adds a majority voter on the
+// activation width; ECC adds one parity bit per activation byte on the
+// registers plus SEC corrector logic. Dynamic power scales with the added
+// logic; static power does not replicate.
+const TMR_VOTER_LUTS: u64 = 48;
+const TMR_VOTER_FFS: u64 = 8;
+const ECC_LOGIC_LUTS: u64 = 32;
+const ECC_LOGIC_FFS: u64 = 8;
+
+/// [`estimate`] plus the per-layer selective-hardening surcharge
+/// (`levels[ci]` protects computing layer ci): the approximation ×
+/// protection co-design bill. With all levels `None` this is exactly
+/// [`estimate`] — the surcharge is zero, so unhardened genotypes cost
+/// what they always did.
+pub fn estimate_hardened(
+    net: &QNet,
+    config: &[&Multiplier],
+    levels: &[crate::faultsim::HardenLevel],
+) -> HwReport {
+    use crate::faultsim::HardenLevel;
+    assert_eq!(levels.len(), net.n_comp(), "one harden level per computing layer");
+    let mut r = estimate(net, config);
+    let logic_before = (r.luts + r.ffs) as f64;
+    let mut extra_luts = 0u64;
+    let mut extra_ffs = 0u64;
+    for lc in &r.per_layer {
+        match levels[lc.comp_index] {
+            HardenLevel::None => {}
+            HardenLevel::Tmr => {
+                // two more copies of the layer's datapath plus a voter
+                extra_luts += 2 * lc.luts + TMR_VOTER_LUTS;
+                extra_ffs += 2 * lc.ffs + TMR_VOTER_FFS;
+            }
+            HardenLevel::Ecc => {
+                // +1/8 register bits plus encoder/corrector logic
+                extra_luts += lc.luts / 8 + ECC_LOGIC_LUTS;
+                extra_ffs += lc.ffs.div_ceil(8) + ECC_LOGIC_FFS;
+            }
+        }
+    }
+    r.luts += extra_luts;
+    r.ffs += extra_ffs;
+    let dev = r.device;
+    r.util_pct = (r.luts + r.ffs) as f64 / (dev.luts + dev.ffs) as f64 * 100.0;
+    // dynamic power scales with the logic growth; static floor stays
+    let growth = (r.luts + r.ffs) as f64 / logic_before;
+    r.power_mw = STATIC_POWER_MW + (r.power_mw - STATIC_POWER_MW) * growth;
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +374,60 @@ mod tests {
         let exact = estimate_uniform(&net, by_name("exact").unwrap());
         let kvp = estimate_uniform(&net, by_name("mul8s_1kvp_s").unwrap());
         assert!(kvp.power_mw < exact.power_mw);
+    }
+
+    #[test]
+    fn hardened_none_is_identity() {
+        use crate::faultsim::HardenLevel;
+        let net = tiny_mlp();
+        let config = cfg(&["exact", "exact"]);
+        let base = estimate(&net, &config);
+        let h = estimate_hardened(&net, &config, &[HardenLevel::None, HardenLevel::None]);
+        assert_eq!(h.luts, base.luts);
+        assert_eq!(h.ffs, base.ffs);
+        assert_eq!(h.cycles, base.cycles);
+        assert_eq!(h.util_pct, base.util_pct);
+        assert_eq!(h.power_mw, base.power_mw);
+    }
+
+    #[test]
+    fn hardening_cost_ordering_tmr_over_ecc_over_none() {
+        use crate::faultsim::HardenLevel;
+        let net = mlp3_sized();
+        let config = cfg(&["exact", "exact", "exact"]);
+        let none = estimate_hardened(&net, &config, &[HardenLevel::None; 3]);
+        let ecc = estimate_hardened(&net, &config, &[HardenLevel::Ecc; 3]);
+        let tmr = estimate_hardened(&net, &config, &[HardenLevel::Tmr; 3]);
+        assert!(none.luts < ecc.luts && ecc.luts < tmr.luts);
+        assert!(none.ffs < ecc.ffs && ecc.ffs < tmr.ffs);
+        assert!(none.util_pct < ecc.util_pct && ecc.util_pct < tmr.util_pct);
+        assert!(none.power_mw < ecc.power_mw && ecc.power_mw < tmr.power_mw);
+        // TMR roughly triples the per-layer datapath (plus base overheads,
+        // so the whole-report ratio sits between 1x and 3x)
+        assert!(tmr.luts as f64 / none.luts as f64 > 2.0);
+        assert!((tmr.luts as f64) < 3.5 * none.luts as f64);
+        // hardening is an area/power bill, not a latency one
+        assert_eq!(tmr.cycles, none.cycles);
+        assert_eq!(tmr.latency_ms, none.latency_ms);
+    }
+
+    #[test]
+    fn selective_hardening_charges_only_its_layer() {
+        use crate::faultsim::HardenLevel;
+        let net = mlp3_sized();
+        let config = cfg(&["exact", "exact", "exact"]);
+        let base = estimate(&net, &config);
+        let sel = estimate_hardened(
+            &net,
+            &config,
+            &[HardenLevel::Tmr, HardenLevel::None, HardenLevel::None],
+        );
+        let l0 = &base.per_layer[0];
+        assert_eq!(sel.luts, base.luts + 2 * l0.luts + TMR_VOTER_LUTS);
+        assert_eq!(sel.ffs, base.ffs + 2 * l0.ffs + TMR_VOTER_FFS);
+        // static power floor is not replicated
+        let growth = (sel.luts + sel.ffs) as f64 / (base.luts + base.ffs) as f64;
+        let expect = STATIC_POWER_MW + (base.power_mw - STATIC_POWER_MW) * growth;
+        assert!((sel.power_mw - expect).abs() < 1e-9);
     }
 }

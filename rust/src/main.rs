@@ -7,7 +7,7 @@ use anyhow::{bail, Context, Result};
 use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
 use deepaxe::coordinator::Ctx;
 use deepaxe::dse::mask_from_config_string;
-use deepaxe::faultsim::CampaignParams;
+use deepaxe::faultsim::{CampaignParams, FaultModelKind, SiteSampling};
 use deepaxe::report::experiments as exp;
 use deepaxe::report::table::{f2, pct, Table};
 use deepaxe::search::{SearchSpace, SearchSpec, Strategy};
@@ -23,9 +23,12 @@ COMMANDS
   info                         artifact + model-zoo summary
   exp <id>                     regenerate a paper experiment:
                                table1 table2 table3 table4 fig3 fig4
-                               ablation-fi-n ablation-axm search zoo-sweep all
+                               ablation-fi-n ablation-axm search zoo-sweep
+                               fault-zoo all
                                (zoo-sweep is artifact-free: deep-net DSE on a
-                               generated 16-layer net, hv2d/hv3d comparison)
+                               generated 16-layer net, hv2d/hv3d comparison;
+                               fault-zoo is artifact-free: per-fault-model
+                               vulnerability + hardened frontier comparison)
   eval                         evaluate one configuration
       --net <name> --mult <kvp|kv9|kv8|exact> --config <e.g. 1-0-110> [--fi]
   pipeline                     automated Fig.2 design flow
@@ -37,6 +40,7 @@ COMMANDS
       --net <name> [--strategy nsga2|anneal|hillclimb|exhaustive]
       [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
       [--fi-epsilon PP] [--fi-screen N] [--warm-start]
+      [--fault-model bitflip|stuckat|lutplane|multibit] [--harden]
   zoo list                     parametric model zoo: presets + generated stats
   zoo build                    generate a zoo net + workload, print its digest
       --net <preset>|--spec <topology> [--seed N] [--images N]
@@ -50,6 +54,22 @@ COMMANDS
   faults                       Leveugle statistical FI sizing per network
   stuck                        permanent (stuck-at) fault campaign extension
       --net <name> [--faults N] [--images N]
+
+FAULT-MODEL ZOO (search/zoo search)
+  --fault-model M  which faults the FI tiers inject: bitflip (default,
+                   transient single-bit upsets — bit-identical to the
+                   pre-zoo path), stuckat (permanent activation stuck-ats),
+                   lutplane (stuck output bit-planes in the approximate
+                   multiplier tables), multibit (2-4 adjacent-bit bursts).
+                   Activation models share one site sample per
+                   (net, params, seed); result-cache lines are tagged
+                   per model (bitflip keeps the legacy untagged keys)
+  --harden         add per-layer selective hardening (none|tmr|ecc) as a
+                   genotype dimension: TMR masks everything in its layer
+                   for ~3x area, ECC masks single-bit activation upsets
+                   for ~12.5% + fixed logic; the hw model charges the
+                   surcharge and the FI tier re-scores masked faults at
+                   base accuracy
   export-hls                   emit DeepHLS-style C for a configuration
       --net <name> --mult <m> --config <cfg> [--out file.c]
 
@@ -125,11 +145,20 @@ fn fidelity_spec(args: &cli::Args) -> Result<deepaxe::eval::FidelitySpec> {
     })
 }
 
+/// `--fault-model` knob: absent = bitflip, the legacy transient model.
+fn fault_model_arg(args: &cli::Args) -> Result<FaultModelKind> {
+    match args.get("fault-model") {
+        None => Ok(FaultModelKind::default()),
+        Some(s) => FaultModelKind::parse(s)
+            .with_context(|| format!("unknown fault model {s:?} (bitflip|stuckat|lutplane|multibit)")),
+    }
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen"],
-        &["fi", "no-fi", "warm-start", "help"],
+        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen", "fault-model"],
+        &["fi", "no-fi", "warm-start", "harden", "help"],
     )
     .map_err(anyhow::Error::msg)?;
 
@@ -188,17 +217,21 @@ fn info() -> Result<()> {
 
 fn experiment(args: &cli::Args) -> Result<()> {
     let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
-    // zoo-sweep is artifact-free by design: dispatch before Ctx::load so
-    // it runs in containers that have no ./artifacts at all
+    // zoo-sweep and fault-zoo are artifact-free by design: dispatch before
+    // Ctx::load so they run in containers that have no ./artifacts at all
     if id == "zoo-sweep" {
         println!("{}", exp::zoo_sweep(args.get_usize("budget", 0)?)?);
+        return Ok(());
+    }
+    if id == "fault-zoo" {
+        println!("{}", exp::fault_zoo(args.get_usize("budget", 0)?)?);
         return Ok(());
     }
     let ctx = Ctx::load()?;
     let nets = args.get_list("nets", &["mlp3", "lenet5", "alexnet"]);
     let mut outputs = Vec::new();
     let ids: Vec<&str> = if id == "all" {
-        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm", "search", "zoo-sweep"]
+        vec!["table1", "table2", "table3", "table4", "fig3", "fig4", "ablation-fi-n", "ablation-axm", "search", "zoo-sweep", "fault-zoo"]
     } else {
         vec![id]
     };
@@ -214,6 +247,7 @@ fn experiment(args: &cli::Args) -> Result<()> {
             "ablation-axm" => exp::ablation_axm(&ctx)?,
             "search" => exp::search_vs_exhaustive(&ctx)?,
             "zoo-sweep" => exp::zoo_sweep(args.get_usize("budget", 0)?)?,
+            "fault-zoo" => exp::fault_zoo(args.get_usize("budget", 0)?)?,
             other => bail!("unknown experiment {other:?}"),
         };
         println!("{out}");
@@ -316,7 +350,11 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         .iter()
         .map(|m| exp::mult_name(m).to_string())
         .collect();
-    let space = SearchSpace::paper(&net, &mults);
+    let mut space = SearchSpace::paper(&net, &mults);
+    if args.has("harden") {
+        space = space.with_hardening();
+    }
+    let fault_model = fault_model_arg(args)?;
     let eval_images = exp::default_eval_images();
     let ev = deepaxe::dse::Evaluator::new(&net, &data, &ctx.luts, eval_images, fi.clone());
     let mut cache = deepaxe::dse::cache::ResultCache::open(ctx.results.join("results.jsonl"));
@@ -333,7 +371,7 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     spec.warm_start = args.has("warm-start");
     let budget = spec.resolved_budget(&space);
     eprintln!(
-        "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, fi-epsilon {}pp, fi-screen {}",
+        "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, fi-epsilon {}pp, fi-screen {}, fault-model {}{}",
         spec.strategy.name(),
         net.name,
         space.n_layers,
@@ -342,15 +380,18 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         budget,
         fidelity.epsilon_pp,
         if fidelity.screen_auto { "auto".to_string() } else { fidelity.screen_faults.to_string() },
+        fault_model.name(),
+        if space.hardening { ", hardening none|tmr|ecc" } else { "" },
     );
 
-    let staged = deepaxe::eval::StagedEvaluator::new(&ev, fidelity);
+    let staged = deepaxe::eval::StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
     let backend = deepaxe::eval::StagedBackend { st: &staged };
     let mut hook = deepaxe::search::ResultCacheHook {
         cache: &mut cache,
         net: net.name.clone(),
         fi: fi.clone(),
         eval_images,
+        fault_model,
     };
     let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
     print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
@@ -505,7 +546,11 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
         .iter()
         .map(|m| exp::mult_name(m).to_string())
         .collect();
-    let space = SearchSpace::paper(net, &mults);
+    let mut space = SearchSpace::paper(net, &mults);
+    if args.has("harden") {
+        space = space.with_hardening();
+    }
+    let fault_model = fault_model_arg(args)?;
     let ev = deepaxe::dse::Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
 
     let fidelity = fidelity_spec(args)?;
@@ -520,7 +565,7 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
     spec.warm_start = args.has("warm-start");
     let budget = spec.resolved_budget(&space);
     eprintln!(
-        "zoo search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, warm-start {}",
+        "zoo search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, warm-start {}, fault-model {}{}",
         spec.strategy.name(),
         net.name,
         space.n_layers,
@@ -528,18 +573,21 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
         space.size(),
         budget,
         spec.warm_start,
+        fault_model.name(),
+        if space.hardening { ", hardening none|tmr|ecc" } else { "" },
     );
 
     std::fs::create_dir_all("results").ok();
     let mut cache =
         deepaxe::dse::cache::ResultCache::open(std::path::Path::new("results/zoo_results.jsonl"));
-    let staged = deepaxe::eval::StagedEvaluator::new(&ev, fidelity);
+    let staged = deepaxe::eval::StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
     let backend = deepaxe::eval::StagedBackend { st: &staged };
     let mut hook = deepaxe::search::ResultCacheHook {
         cache: &mut cache,
         net: net.name.clone(),
         fi: fi.clone(),
         eval_images,
+        fault_model,
     };
     let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
     print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
@@ -591,7 +639,14 @@ fn stuck_cmd(args: &cli::Args) -> Result<()> {
     let mult = exp::mult_name(args.get_or("mult", "exact"));
     let lut = &ctx.luts[mult];
     let engine = Engine::uniform(&net, lut);
-    let r = deepaxe::faultsim::run_stuck_campaign(&engine, &data, n_faults, n_images, 0x57CC);
+    let r = deepaxe::faultsim::run_stuck_campaign(
+        &engine,
+        &data,
+        n_faults,
+        n_images,
+        0x57CC,
+        SiteSampling::UniformLayer,
+    );
     let mut t = Table::new(
         &format!("permanent (stuck-at) campaign: {net_name} / {mult}"),
         &["metric", "value"],

@@ -7,7 +7,7 @@ use crate::coordinator::jobs::{run_sweep, SweepSpec};
 use crate::coordinator::Ctx;
 use crate::dse::cache::ResultCache;
 use crate::dse::{enumerate_masks, mask_from_config_string, pareto_front, Evaluator};
-use crate::faultsim::{run_campaign, CampaignParams};
+use crate::faultsim::{run_campaign, CampaignParams, FaultModelKind};
 use crate::simnet::{Buffers, Engine};
 use crate::util::cli::env_usize;
 use crate::util::json::Json;
@@ -388,6 +388,7 @@ pub fn search_vs_exhaustive(ctx: &Ctx) -> Result<String> {
             net: net.name.clone(),
             fi: fi.clone(),
             eval_images: default_eval_images(),
+            fault_model: FaultModelKind::BitFlip,
         };
         let out = run_search(&space, &spec, &backend, &mut hook);
         let hv = out.hypervolume();
@@ -498,6 +499,128 @@ pub fn zoo_sweep(budget: usize) -> Result<String> {
     std::fs::create_dir_all("results").ok();
     t.save_csv(std::path::Path::new("results/zoo_sweep.csv"))?;
     Ok(format!("{}{}\n", t.render(), ledgers.join("\n")))
+}
+
+// ===========================================================================
+// Fault-model zoo — per-model vulnerability + selective hardening
+// ===========================================================================
+
+/// E2: the fault-model zoo on generated nets — **no artifacts anywhere**.
+///
+/// Part 1 measures each [`FaultModelKind`]'s vulnerability of the
+/// all-exact and all-kvp configurations on `zoo-tiny` and `lenet5`
+/// through per-model staged evaluators (FiFull, epsilon 0), with the
+/// ledger's per-model fault spend as its own column. Part 2 runs two
+/// staged NSGA-II searches on `zoo-tiny` — multipliers only vs
+/// multipliers + the none/tmr/ecc selective-hardening genotype dimension
+/// — and compares frontiers; the hardened space can trade area for
+/// vulnerability the plain space cannot reach. `budget = 0` defaults to
+/// 32 unique evaluations per search.
+pub fn fault_zoo(budget: usize) -> Result<String> {
+    use crate::eval::{Fidelity, FidelitySpec, StagedBackend, StagedEvaluator};
+    use crate::faultsim::SiteSampling;
+    use crate::search::{run_search, NoCache, SearchSpace, SearchSpec, Strategy};
+
+    let budget = if budget == 0 { 32 } else { budget };
+    let fi = CampaignParams {
+        n_faults: env_usize("DEEPAXE_FI_FAULTS", 48),
+        n_images: env_usize("DEEPAXE_FI_IMAGES", 32),
+        seed: 0xFA017,
+        workers: crate::util::threadpool::default_workers(),
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+        gate: true,
+        delta: true,
+    };
+    let eval_images = default_eval_images().min(96);
+    let luts: std::collections::BTreeMap<String, crate::axmul::Lut> =
+        crate::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "fault-zoo: per-model vulnerability, FiFull, {} faults x {} images (artifact-free)",
+            fi.n_faults, fi.n_images,
+        ),
+        &["net", "fault model", "exact vuln pp", "ci95 pp", "kvp vuln pp", "ci95 pp", "model faults spent"],
+    );
+    for preset in ["zoo-tiny", "lenet5"] {
+        let bundle = crate::zoo::build(preset, 0x5EED, eval_images.max(fi.n_images))
+            .map_err(anyhow::Error::msg)?;
+        let net = &bundle.net;
+        let ev = Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
+        for kind in FaultModelKind::ALL {
+            let staged = StagedEvaluator::new_with_model(&ev, FidelitySpec::exact(), kind);
+            let exact: Vec<&str> = vec!["exact"; net.n_comp()];
+            let kvp: Vec<&str> = vec!["mul8s_1kvp_s"; net.n_comp()];
+            let pe = staged.evaluate(&exact, Fidelity::FiFull, None);
+            let pk = staged.evaluate(&kvp, Fidelity::FiFull, None);
+            t.row(vec![
+                preset.into(),
+                kind.name().into(),
+                pct(pe.fault_vuln_pct),
+                f2(pe.fi_ci95_pp),
+                pct(pk.fault_vuln_pct),
+                f2(pk.fi_ci95_pp),
+                staged.ledger().model_faults(kind).to_string(),
+            ]);
+        }
+    }
+
+    // Part 2: hardened vs unhardened frontier on zoo-tiny (bitflip)
+    let bundle = crate::zoo::build("zoo-tiny", 0x5EED, eval_images.max(fi.n_images))
+        .map_err(anyhow::Error::msg)?;
+    let net = &bundle.net;
+    let ev = Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
+    let mults: Vec<String> = crate::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let fidelity = FidelitySpec {
+        epsilon_pp: 0.5,
+        screen_faults: (fi.n_faults / 4).max(8),
+        ..FidelitySpec::exact()
+    };
+    let mut ft = Table::new(
+        &format!(
+            "fault-zoo: hardened vs unhardened search frontier (zoo-tiny, bitflip, budget {budget}/search)"
+        ),
+        &["search space", "genotype len", "evaluations", "frontier", "hv2d", "min vuln pp", "@ util %"],
+    );
+    let mut ledgers = Vec::new();
+    for harden in [false, true] {
+        let mut space = SearchSpace::paper(net, &mults);
+        if harden {
+            space = space.with_hardening();
+        }
+        let staged = StagedEvaluator::new(&ev, fidelity.clone());
+        let backend = StagedBackend { st: &staged };
+        let mut spec = SearchSpec::new(Strategy::Nsga2);
+        spec.budget = budget;
+        spec.seed = fi.seed;
+        spec.screen = fidelity.screening_enabled();
+        let out = run_search(&space, &spec, &backend, &mut NoCache);
+        let best = out
+            .frontier()
+            .into_iter()
+            .min_by(|a, b| a.fault_vuln_pct.total_cmp(&b.fault_vuln_pct));
+        let (bv, bu) =
+            best.map(|p| (p.fault_vuln_pct, p.util_pct)).unwrap_or((f64::NAN, f64::NAN));
+        ft.row(vec![
+            if harden { "mults + none|tmr|ecc" } else { "mults only" }.into(),
+            space.genotype_len().to_string(),
+            out.evals_used.to_string(),
+            out.frontier_idx.len().to_string(),
+            format!("{:.1}", out.hypervolume()),
+            pct(bv),
+            f2(bu),
+        ]);
+        ledgers.push(format!(
+            "[{}] {}",
+            if harden { "hardened" } else { "plain" },
+            staged.ledger().summary(fi.n_faults)
+        ));
+    }
+    std::fs::create_dir_all("results").ok();
+    t.save_csv(std::path::Path::new("results/fault_zoo.csv"))?;
+    ft.save_csv(std::path::Path::new("results/fault_zoo_hardening.csv"))?;
+    Ok(format!("{}{}{}\n", t.render(), ft.render(), ledgers.join("\n")))
 }
 
 // ===========================================================================

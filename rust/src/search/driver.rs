@@ -43,7 +43,7 @@ use crate::dse::cache::{CacheKey, ResultCache};
 use crate::dse::pareto::pareto_front;
 use crate::dse::{DesignPoint, Evaluator};
 use crate::eval::{FiGate, Fidelity};
-use crate::faultsim::CampaignParams;
+use crate::faultsim::{CampaignParams, FaultModelKind};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 use std::collections::HashMap;
@@ -215,12 +215,16 @@ impl CacheHook for NoCache {
 
 /// [`ResultCache`]-backed hook using canonical per-layer assignment keys
 /// (homogeneous assignments map onto the legacy `(net, mult, mask)` keys,
-/// so heuristic runs share results with exhaustive sweeps).
+/// so heuristic runs share results with exhaustive sweeps). Keys carry the
+/// campaign's [`FaultModelKind`]: `BitFlip` renders the untagged legacy
+/// encoding, other models an `fm:` tag — stuck-at/burst/LUT-plane sweeps
+/// share the store without ever aliasing bit-flip results.
 pub struct ResultCacheHook<'a> {
     pub cache: &'a mut ResultCache,
     pub net: String,
     pub fi: CampaignParams,
     pub eval_images: usize,
+    pub fault_model: FaultModelKind,
 }
 
 impl ResultCacheHook<'_> {
@@ -234,6 +238,7 @@ impl ResultCacheHook<'_> {
             self.fi.seed,
             fidelity,
         )
+        .with_fault_model(self.fault_model)
     }
 
     /// Reconstruct a genotype from a cache-key segment: the generalized
@@ -247,8 +252,14 @@ impl ResultCacheHook<'_> {
                 .split(',')
                 .map(|n| space.alphabet.iter().position(|a| a == n).map(|i| i as u8))
                 .collect();
-            let g = g?;
-            return (g.len() == space.n_layers).then_some(g);
+            let mut g = g?;
+            if g.len() != space.n_layers {
+                return None;
+            }
+            // hardened spaces re-seed cached unhardened rows as
+            // unprotected genotypes
+            g.resize(space.genotype_len(), 0);
+            return Some(g);
         }
         let mut parts = key_rest.split('|');
         let mult = parts.next()?;
@@ -261,7 +272,10 @@ impl ResultCacheHook<'_> {
         } else {
             space.alphabet.iter().position(|a| a == mult)? as u8
         };
-        Some((0..space.n_layers).map(|ci| if mask >> ci & 1 == 1 { sym } else { 0 }).collect())
+        let mut g: Genotype =
+            (0..space.n_layers).map(|ci| if mask >> ci & 1 == 1 { sym } else { 0 }).collect();
+        g.resize(space.genotype_len(), 0);
+        Some(g)
     }
 }
 
@@ -1242,6 +1256,7 @@ mod tests {
             net: "mlp3".into(),
             fi,
             eval_images: 30,
+            fault_model: FaultModelKind::BitFlip,
         };
         let mut warm = hook.warm_genotypes(&space);
         warm.sort();

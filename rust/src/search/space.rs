@@ -8,11 +8,21 @@
 //! `"0-2-130"`, digit = index into the multiplier alphabet). Symbol 0 is
 //! always `exact`, so `mask()` (the paper's approximation mask) is simply
 //! "gene != 0".
+//!
+//! PR 6 adds selective hardening as an *optional* second genotype block
+//! ([`SearchSpace::with_hardening`]): the genotype becomes length
+//! `2·n_layers` — multiplier digits first, then one radix-3 harden digit
+//! per layer (0 = none, 1 = TMR, 2 = ECC). Spaces without hardening are
+//! untouched: every operator takes the same RNG draws as before, so
+//! pre-PR-6 searches replay bit-identically.
 
+use crate::faultsim::HardenLevel;
 use crate::simnet::QNet;
 use crate::util::rng::Rng;
 
 /// Per-layer alphabet indices (`alphabet[g[ci]]` is layer ci's multiplier).
+/// In a hardening space the vector is twice as long; `g[n_layers + ci]` is
+/// layer ci's [`HardenLevel`] index.
 pub type Genotype = Vec<u8>;
 
 #[derive(Debug, Clone)]
@@ -24,6 +34,8 @@ pub struct SearchSpace {
     /// config template, `x` per computing layer with paper-style `-`
     /// separators (e.g. `"x-x-xxx"`)
     pub template: String,
+    /// when set, genotypes carry a per-layer harden digit block
+    pub hardening: bool,
 }
 
 impl SearchSpace {
@@ -64,14 +76,42 @@ impl SearchSpace {
             n_layers,
             "template layer slots must match n_layers"
         );
-        SearchSpace { net: net.to_string(), n_layers, alphabet, template: template.to_string() }
+        SearchSpace {
+            net: net.to_string(),
+            n_layers,
+            alphabet,
+            template: template.to_string(),
+            hardening: false,
+        }
+    }
+
+    /// Enable the per-layer selective-hardening block (genotype length
+    /// doubles; the new digits are radix-3 [`HardenLevel`] indices).
+    pub fn with_hardening(mut self) -> SearchSpace {
+        self.hardening = true;
+        self
+    }
+
+    /// Genotype length: `n_layers`, or `2·n_layers` with hardening.
+    pub fn genotype_len(&self) -> usize {
+        self.n_layers * if self.hardening { 2 } else { 1 }
+    }
+
+    /// Radix of genotype position `i` (multiplier alphabet for the first
+    /// block, the 3 harden levels for the second).
+    fn radix(&self, i: usize) -> u64 {
+        if i < self.n_layers {
+            self.alphabet.len() as u64
+        } else {
+            HardenLevel::ALL.len() as u64
+        }
     }
 
     /// Number of configurations (saturating).
     pub fn size(&self) -> u128 {
         let mut s: u128 = 1;
-        for _ in 0..self.n_layers {
-            s = s.saturating_mul(self.alphabet.len() as u128);
+        for i in 0..self.genotype_len() {
+            s = s.saturating_mul(self.radix(i) as u128);
         }
         s
     }
@@ -81,13 +121,39 @@ impl SearchSpace {
     }
 
     pub fn random(&self, rng: &mut Rng) -> Genotype {
-        (0..self.n_layers).map(|_| rng.below(self.alphabet.len() as u64) as u8).collect()
+        (0..self.genotype_len()).map(|i| rng.below(self.radix(i)) as u8).collect()
     }
 
-    /// Per-layer multiplier names.
+    /// Per-position symbol names: one multiplier name per layer, followed
+    /// (in a hardening space) by one harden-level name per layer — so
+    /// [`canonical`](Self::canonical) keys hardened variants apart.
     pub fn decode<'a>(&'a self, g: &Genotype) -> Vec<&'a str> {
-        assert_eq!(g.len(), self.n_layers);
-        g.iter().map(|&s| self.alphabet[s as usize].as_str()).collect()
+        assert_eq!(g.len(), self.genotype_len());
+        g.iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                if i < self.n_layers {
+                    self.alphabet[s as usize].as_str()
+                } else {
+                    HardenLevel::ALL[s as usize].name()
+                }
+            })
+            .collect()
+    }
+
+    /// The multiplier block only (first `n_layers` names).
+    pub fn decode_mults<'a>(&'a self, g: &Genotype) -> Vec<&'a str> {
+        self.decode(g)[..self.n_layers].to_vec()
+    }
+
+    /// The harden block as levels (all-`None` when the space has no
+    /// hardening dimension, so callers need not branch).
+    pub fn decode_harden(&self, g: &Genotype) -> Vec<HardenLevel> {
+        assert_eq!(g.len(), self.genotype_len());
+        if !self.hardening {
+            return vec![HardenLevel::None; self.n_layers];
+        }
+        g[self.n_layers..].iter().map(|&s| HardenLevel::ALL[s as usize]).collect()
     }
 
     /// Canonical per-layer assignment string (cache key material).
@@ -95,11 +161,14 @@ impl SearchSpace {
         self.decode(g).join(",")
     }
 
-    /// Digit rendering in the paper's template, e.g. `"0-2-130"`.
+    /// Digit rendering in the paper's template, e.g. `"0-2-130"`. In a
+    /// hardening space the harden block follows as `+h<digits>`
+    /// (e.g. `"0-2-130+h00120"`).
     pub fn config_digits(&self, g: &Genotype) -> String {
-        assert_eq!(g.len(), self.n_layers);
+        assert_eq!(g.len(), self.genotype_len());
         let mut ci = 0;
-        self.template
+        let mut out: String = self
+            .template
             .chars()
             .map(|c| {
                 if c == '-' {
@@ -110,14 +179,30 @@ impl SearchSpace {
                     d
                 }
             })
-            .collect()
+            .collect();
+        if self.hardening {
+            out.push_str("+h");
+            for &s in &g[self.n_layers..] {
+                out.push(char::from(b'0' + s));
+            }
+        }
+        out
     }
 
     /// Inverse of [`config_digits`](Self::config_digits): parse a digit
-    /// string (dashes/spaces ignored) back into a genotype.
+    /// string (dashes/spaces ignored) back into a genotype. A hardening
+    /// space requires the `+h<digits>` suffix.
     pub fn parse_digits(&self, s: &str) -> Result<Genotype, String> {
+        let (mult_part, harden_part) = match s.split_once("+h") {
+            Some((m, h)) if self.hardening => (m, Some(h)),
+            Some(_) => return Err(format!("{s:?} has a +h harden block but this space has no hardening dimension")),
+            None if self.hardening => {
+                return Err(format!("{s:?} is missing the +h harden block"))
+            }
+            None => (s, None),
+        };
         let mut g = Genotype::new();
-        for ch in s.chars() {
+        for ch in mult_part.chars() {
             match ch {
                 '-' | ' ' => {}
                 '0'..='9' => {
@@ -133,19 +218,42 @@ impl SearchSpace {
         if g.len() != self.n_layers {
             return Err(format!("{s:?} has {} layer digits, net has {}", g.len(), self.n_layers));
         }
+        if let Some(h) = harden_part {
+            for ch in h.chars() {
+                match ch {
+                    '-' | ' ' => {}
+                    '0'..='2' => g.push(ch as u8 - b'0'),
+                    other => {
+                        return Err(format!("bad harden digit {other:?} in {s:?} (0..=2)"))
+                    }
+                }
+            }
+            if g.len() != self.genotype_len() {
+                return Err(format!(
+                    "{s:?} has {} harden digits, net has {} layers",
+                    g.len() - self.n_layers,
+                    self.n_layers
+                ));
+            }
+        }
         Ok(g)
     }
 
-    /// The paper's approximation mask: bit ci set iff layer ci is not exact.
+    /// The paper's approximation mask: bit ci set iff layer ci is not exact
+    /// (multiplier block only — hardening does not approximate).
     pub fn mask(&self, g: &Genotype) -> u64 {
-        g.iter().enumerate().fold(0, |m, (ci, &s)| if s != 0 { m | 1 << ci } else { m })
+        g[..self.n_layers]
+            .iter()
+            .enumerate()
+            .fold(0, |m, (ci, &s)| if s != 0 { m | 1 << ci } else { m })
     }
 
-    /// `Some(symbol)` if every non-exact gene uses the same symbol (the
-    /// paper's homogeneous case; `Some(0)` = fully exact), `None` if mixed.
+    /// `Some(symbol)` if every non-exact multiplier gene uses the same
+    /// symbol (the paper's homogeneous case; `Some(0)` = fully exact),
+    /// `None` if mixed. Harden digits are ignored.
     pub fn homogeneous(&self, g: &Genotype) -> Option<u8> {
         let mut sym = 0u8;
-        for &s in g {
+        for &s in &g[..self.n_layers] {
             if s != 0 {
                 if sym != 0 && sym != s {
                     return None;
@@ -156,20 +264,23 @@ impl SearchSpace {
         Some(sym)
     }
 
-    /// Point mutation: each gene resampled with probability `1/n_layers`;
-    /// at least one gene always changes.
+    /// Point mutation: each gene resampled with probability
+    /// `1/genotype_len`; at least one gene always changes. (For spaces
+    /// without hardening `genotype_len == n_layers`, so the draw stream is
+    /// exactly the historical one.)
     pub fn mutate(&self, rng: &mut Rng, g: &Genotype) -> Genotype {
+        let len = self.genotype_len();
         let mut out = g.clone();
         let mut changed = false;
-        for gene in out.iter_mut() {
-            if rng.usize_below(self.n_layers) == 0 {
-                *gene = self.other_symbol(rng, *gene);
+        for (i, gene) in out.iter_mut().enumerate() {
+            if rng.usize_below(len) == 0 {
+                *gene = self.other_symbol(rng, *gene, self.radix(i));
                 changed = true;
             }
         }
         if !changed {
-            let i = rng.usize_below(self.n_layers);
-            out[i] = self.other_symbol(rng, out[i]);
+            let i = rng.usize_below(len);
+            out[i] = self.other_symbol(rng, out[i], self.radix(i));
         }
         out
     }
@@ -180,11 +291,12 @@ impl SearchSpace {
         a.iter().zip(b).map(|(&x, &y)| if rng.below(2) == 0 { x } else { y }).collect()
     }
 
-    /// All Hamming-distance-1 variants (`n_layers * (n_symbols-1)` of them).
+    /// All Hamming-distance-1 variants (`Σ_i (radix_i − 1)` of them).
     pub fn neighbors(&self, g: &Genotype) -> Vec<Genotype> {
-        let mut out = Vec::with_capacity(self.n_layers * (self.alphabet.len() - 1));
-        for i in 0..self.n_layers {
-            for s in 0..self.n_symbols() {
+        let len = self.genotype_len();
+        let mut out = Vec::with_capacity(len * (self.alphabet.len() - 1));
+        for i in 0..len {
+            for s in 0..self.radix(i) as u8 {
                 if s != g[i] {
                     let mut n = g.clone();
                     n[i] = s;
@@ -197,14 +309,13 @@ impl SearchSpace {
 
     pub fn random_neighbor(&self, rng: &mut Rng, g: &Genotype) -> Genotype {
         let mut out = g.clone();
-        let i = rng.usize_below(self.n_layers);
-        out[i] = self.other_symbol(rng, out[i]);
+        let i = rng.usize_below(self.genotype_len());
+        out[i] = self.other_symbol(rng, out[i], self.radix(i));
         out
     }
 
-    fn other_symbol(&self, rng: &mut Rng, cur: u8) -> u8 {
-        let k = self.alphabet.len() as u64;
-        let r = rng.below(k - 1) as u8;
+    fn other_symbol(&self, rng: &mut Rng, cur: u8, radix: u64) -> u8 {
+        let r = rng.below(radix - 1) as u8;
         if r >= cur {
             r + 1
         } else {
@@ -223,18 +334,19 @@ impl SearchSpace {
     /// the space is smaller) — lazy prefix, never panics on large spaces.
     pub fn enumerate_first(&self, n: usize) -> Vec<Genotype> {
         let n = (n as u128).min(self.size()) as usize;
+        let len = self.genotype_len();
         let mut out = Vec::with_capacity(n);
-        let mut g = vec![0u8; self.n_layers];
+        let mut g = vec![0u8; len];
         while out.len() < n {
             out.push(g.clone());
             // odometer increment
             let mut i = 0;
             loop {
-                if i == self.n_layers {
+                if i == len {
                     return out;
                 }
                 g[i] += 1;
-                if g[i] < self.n_symbols() {
+                if (g[i] as u64) < self.radix(i) {
                     break;
                 }
                 g[i] = 0;
@@ -247,7 +359,10 @@ impl SearchSpace {
     /// Warm-start seeds: fully exact, each uniform full approximation, and
     /// every single-layer substitution. These are the structured designs
     /// the paper's tables are built from, and they anchor the frontier's
-    /// extremes before any random exploration happens.
+    /// extremes before any random exploration happens. In a hardening
+    /// space the multiplier seeds carry an all-`none` harden block, plus
+    /// two protection anchors: fully-exact with uniform TMR and with
+    /// uniform ECC.
     pub fn seeds(&self) -> Vec<Genotype> {
         let mut out = vec![vec![0u8; self.n_layers]];
         for s in 1..self.n_symbols() {
@@ -260,6 +375,16 @@ impl SearchSpace {
                     g[i] = s;
                     out.push(g);
                 }
+            }
+        }
+        if self.hardening {
+            for g in out.iter_mut() {
+                g.extend(std::iter::repeat(0u8).take(self.n_layers));
+            }
+            for harden in [1u8, 2u8] {
+                let mut g = vec![0u8; self.n_layers];
+                g.extend(std::iter::repeat(harden).take(self.n_layers));
+                out.push(g);
             }
         }
         out
@@ -387,5 +512,98 @@ mod tests {
         uniq.dedup();
         assert_eq!(uniq.len(), seeds.len());
         assert!(seeds.contains(&vec![0; 5]) && seeds.contains(&vec![1; 5]));
+    }
+
+    #[test]
+    fn hardening_doubles_the_genotype() {
+        let sp = SearchSpace::with_dims("t", 3, abc(2), "xxx").with_hardening();
+        assert_eq!(sp.genotype_len(), 6);
+        assert_eq!(sp.size(), 8 * 27); // 2^3 mult digits × 3^3 harden digits
+        let g = vec![0, 1, 0, 0, 1, 2];
+        assert_eq!(sp.decode(&g), vec!["exact", "mul8s_1kvp_s", "exact", "none", "tmr", "ecc"]);
+        assert_eq!(sp.decode_mults(&g), vec!["exact", "mul8s_1kvp_s", "exact"]);
+        assert_eq!(
+            sp.decode_harden(&g),
+            vec![HardenLevel::None, HardenLevel::Tmr, HardenLevel::Ecc]
+        );
+        // mask/homogeneous look at the multiplier block only
+        assert_eq!(sp.mask(&g), 0b010);
+        assert_eq!(sp.homogeneous(&g), Some(1));
+    }
+
+    #[test]
+    fn hardening_digits_roundtrip_with_suffix() {
+        let sp = SearchSpace::with_dims("lenet5", 5, abc(4), "x-x-xxx").with_hardening();
+        let g = vec![0, 2, 1, 3, 0, 0, 1, 2, 0, 1];
+        let s = sp.config_digits(&g);
+        assert_eq!(s, "0-2-130+h01201");
+        assert_eq!(sp.parse_digits(&s).unwrap(), g);
+        // missing/misplaced harden blocks are rejected
+        assert!(sp.parse_digits("0-2-130").is_err());
+        assert!(sp.parse_digits("0-2-130+h012").is_err()); // wrong length
+        assert!(sp.parse_digits("0-2-130+h01203x").is_err());
+        assert!(sp.parse_digits("0-2-130+h01231").is_err()); // harden digit 3
+        let plain = SearchSpace::with_dims("lenet5", 5, abc(4), "x-x-xxx");
+        assert!(plain.parse_digits("0-2-130+h01201").is_err());
+    }
+
+    #[test]
+    fn unhardened_space_behavior_is_unchanged() {
+        // the off-by-default guarantee: same RNG draw streams with and
+        // without the hardening field present in the struct
+        let sp = SearchSpace::with_dims("t", 4, abc(3), "xxxx");
+        assert_eq!(sp.genotype_len(), 4);
+        let g = sp.random(&mut Rng::new(7));
+        assert_eq!(g.len(), 4);
+        assert!(sp.parse_digits(&sp.config_digits(&g)).unwrap() == g);
+        assert_eq!(sp.decode_harden(&g), vec![HardenLevel::None; 4]);
+        assert_eq!(sp.decode_mults(&g), sp.decode(&g));
+    }
+
+    #[test]
+    fn property_hardening_operators_stay_in_space() {
+        check("hardened mutate/crossover/neighbors valid", 0x4A2D, 40, |rng| {
+            let n = 1 + rng.usize_below(5);
+            let k = 2 + rng.usize_below(3);
+            let sp = SearchSpace::with_dims("t", n, abc(k), &"x".repeat(n)).with_hardening();
+            let a = sp.random(rng);
+            let b = sp.random(rng);
+            assert_eq!(a.len(), 2 * n);
+            let in_space = |g: &Genotype| {
+                g.iter().enumerate().all(|(i, &s)| {
+                    (s as u64) < if i < n { k as u64 } else { 3 }
+                })
+            };
+            assert!(in_space(&a) && in_space(&b));
+            let m = sp.mutate(rng, &a);
+            assert_ne!(m, a);
+            assert!(in_space(&m));
+            let c = sp.crossover(rng, &a, &b);
+            assert!(in_space(&c));
+            let nb = sp.random_neighbor(rng, &a);
+            assert!(in_space(&nb));
+            assert_eq!(nb.iter().zip(&a).filter(|(x, y)| x != y).count(), 1);
+            assert_eq!(sp.neighbors(&a).len(), n * (k - 1) + n * 2);
+            for v in sp.neighbors(&a) {
+                assert!(in_space(&v));
+            }
+        });
+    }
+
+    #[test]
+    fn hardened_seeds_carry_protection_anchors() {
+        let sp = SearchSpace::with_dims("t", 3, abc(2), "xxx").with_hardening();
+        let seeds = sp.seeds();
+        assert!(seeds.iter().all(|g| g.len() == 6));
+        // every multiplier seed unprotected, plus uniform-TMR and
+        // uniform-ECC exact anchors
+        assert!(seeds.contains(&vec![0, 0, 0, 0, 0, 0]));
+        assert!(seeds.contains(&vec![1, 1, 1, 0, 0, 0]));
+        assert!(seeds.contains(&vec![0, 0, 0, 1, 1, 1]));
+        assert!(seeds.contains(&vec![0, 0, 0, 2, 2, 2]));
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
     }
 }

@@ -38,6 +38,48 @@ pub struct FaultSite {
     pub bit: u8,
 }
 
+/// How a fault perturbs the clean activation byte at its [`FaultSite`].
+///
+/// Every variant is a pure function of the clean byte, which is the
+/// property the whole replay machinery rests on: the faulted activation
+/// can be reconstructed from the clean trace alone, so delta patching and
+/// the convergence gate apply to all of them unchanged. `Flip` reproduces
+/// the original single-bit transient model byte-for-byte (`apply` is the
+/// same XOR the campaign used to inline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Perturb {
+    /// transient single-event upset: XOR the site bit
+    Flip,
+    /// permanent stuck-at: force the site bit to 0 (`false`) or 1 (`true`)
+    Stuck(bool),
+    /// multi-bit burst upset: XOR the whole mask (the site bit is always
+    /// a member; adjacent higher bits are clipped at the byte edge)
+    Burst(u8),
+}
+
+impl Perturb {
+    /// The faulted byte for clean value `v` at bit position `bit`.
+    #[inline]
+    pub fn apply(self, v: i8, bit: u8) -> i8 {
+        let b = v as u8;
+        (match self {
+            Perturb::Flip => b ^ (1u8 << bit),
+            Perturb::Stuck(false) => b & !(1u8 << bit),
+            Perturb::Stuck(true) => b | (1u8 << bit),
+            Perturb::Burst(mask) => b ^ mask,
+        }) as i8
+    }
+
+    /// Number of bits the perturbation can actually change (ECC-style
+    /// single-error correction masks exactly the `<= 1` cases).
+    pub fn width(self) -> u32 {
+        match self {
+            Perturb::Flip | Perturb::Stuck(_) => 1,
+            Perturb::Burst(mask) => mask.count_ones(),
+        }
+    }
+}
+
 /// Scratch buffers reused across inferences (no allocation on the hot path).
 pub struct Buffers {
     act_a: Vec<i8>,
@@ -160,7 +202,20 @@ impl<'a> Engine<'a> {
 
     /// Forward one image; optional fault; returns the int8 logits.
     pub fn forward(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> Vec<i8> {
-        self.run(image, fault, buf, None, None)
+        self.run(image, fault.map(|f| (f, Perturb::Flip)), buf, None, None)
+    }
+
+    /// [`forward`](Engine::forward) with an explicit perturbation model at
+    /// the fault site (the `Option<FaultSite>` entry points keep the
+    /// historical bit-flip semantics).
+    pub fn forward_perturbed(
+        &self,
+        image: &[i8],
+        site: FaultSite,
+        perturb: Perturb,
+        buf: &mut Buffers,
+    ) -> Vec<i8> {
+        self.run(image, Some((site, perturb)), buf, None, None)
     }
 
     /// Forward and also record each computing layer's clean activation.
@@ -307,6 +362,25 @@ impl<'a> Engine<'a> {
         gate: bool,
         buf: &mut Buffers,
     ) -> Option<Replay> {
+        self.replay_from_delta_perturbed(site, Perturb::Flip, trace, gate, buf)
+    }
+
+    /// [`replay_from_delta`](Engine::replay_from_delta) with an explicit
+    /// perturbation model. Every [`Perturb`] is a pure function of the
+    /// clean byte, so the rank-1 patch argument is unchanged: the faulted
+    /// accumulator differs from the clean one only through the single
+    /// rewritten input element. A perturbation that leaves the byte
+    /// unchanged (e.g. a stuck-at matching the clean bit) degenerates to a
+    /// zero delta and the gate converges at depth 1 with the clean
+    /// prediction — no special case needed.
+    pub fn replay_from_delta_perturbed(
+        &self,
+        site: FaultSite,
+        perturb: Perturb,
+        trace: &CleanTrace,
+        gate: bool,
+        buf: &mut Buffers,
+    ) -> Option<Replay> {
         let ci = site.layer;
         let next_ci = ci + 1;
         if next_ci >= self.net.n_comp() {
@@ -317,7 +391,7 @@ impl<'a> Engine<'a> {
             return None; // accumulators not retained for this layer
         }
         let old = trace.acts[ci][site.neuron];
-        let new = (old as u8 ^ (1u8 << site.bit)) as i8;
+        let new = perturb.apply(old, site.bit);
 
         // push the single-element delta through the interposed
         // Pool/Flatten layers down to the next computing layer's input
@@ -491,7 +565,7 @@ impl<'a> Engine<'a> {
     fn run(
         &self,
         image: &[i8],
-        fault: Option<FaultSite>,
+        fault: Option<(FaultSite, Perturb)>,
         buf: &mut Buffers,
         mut collect: Option<&mut Vec<Vec<i8>>>,
         mut collect_accs: Option<&mut Vec<Vec<i32>>>,
@@ -521,7 +595,7 @@ impl<'a> Engine<'a> {
         shape: &mut Vec<usize>,
         mut act_len: usize,
         ci: &mut usize,
-        fault: Option<FaultSite>,
+        fault: Option<(FaultSite, Perturb)>,
         buf: &mut Buffers,
         mut collect: Option<&mut Vec<Vec<i8>>>,
         mut collect_accs: Option<&mut Vec<Vec<i32>>>,
@@ -547,10 +621,10 @@ impl<'a> Engine<'a> {
                         c.push(buf.acc[..acc_len].to_vec());
                     }
                 }
-                if let Some(f) = fault {
+                if let Some((f, p)) = fault {
                     if f.layer == cur {
                         debug_assert!(f.neuron < act_len);
-                        buf.act_a[f.neuron] = (buf.act_a[f.neuron] as u8 ^ (1u8 << f.bit)) as i8;
+                        buf.act_a[f.neuron] = p.apply(buf.act_a[f.neuron], f.bit);
                     }
                 }
                 if let Some(c) = collect.as_deref_mut() {
@@ -657,6 +731,17 @@ impl<'a> Engine<'a> {
     /// Predict one image's class.
     pub fn predict(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> usize {
         argmax_i8(&self.forward(image, fault, buf))
+    }
+
+    /// Predict one image's class under an explicit perturbation model.
+    pub fn predict_perturbed(
+        &self,
+        image: &[i8],
+        site: FaultSite,
+        perturb: Perturb,
+        buf: &mut Buffers,
+    ) -> usize {
+        argmax_i8(&self.forward_perturbed(image, site, perturb, buf))
     }
 
     /// Accuracy over a set of images.
@@ -1016,5 +1101,103 @@ mod tests {
         let a = exact_eng.forward(&img, None, &mut buf);
         let b = mixed.forward(&img, None, &mut buf);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn perturb_apply_semantics() {
+        for v in i8::MIN..=i8::MAX {
+            for bit in 0..8u8 {
+                let m = 1u8 << bit;
+                assert_eq!(Perturb::Flip.apply(v, bit), (v as u8 ^ m) as i8);
+                assert_eq!(Perturb::Stuck(false).apply(v, bit) as u8 & m, 0);
+                assert_eq!(Perturb::Stuck(true).apply(v, bit) as u8 & m, m);
+                // stuck-at is idempotent; flip is an involution
+                let s = Perturb::Stuck(true).apply(v, bit);
+                assert_eq!(Perturb::Stuck(true).apply(s, bit), s);
+                assert_eq!(Perturb::Flip.apply(Perturb::Flip.apply(v, bit), bit), v);
+                // a burst of just the site bit is exactly a flip
+                assert_eq!(Perturb::Burst(m).apply(v, bit), Perturb::Flip.apply(v, bit));
+            }
+        }
+        assert_eq!(Perturb::Flip.width(), 1);
+        assert_eq!(Perturb::Stuck(false).width(), 1);
+        assert_eq!(Perturb::Burst(0b0000_1100).width(), 2);
+        assert_eq!(Perturb::Burst(0b1110_0000).width(), 3);
+    }
+
+    #[test]
+    fn perturbed_forward_flip_equals_legacy_fault_path() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img = [4i8, -4, 8, 0];
+        for layer in 0..2 {
+            for neuron in 0..net.comp(layer).act_len() {
+                for bit in 0..8u8 {
+                    let site = FaultSite { layer, neuron, bit };
+                    let legacy = eng.forward(&img, Some(site), &mut buf);
+                    let perturbed = eng.forward_perturbed(&img, site, Perturb::Flip, &mut buf);
+                    assert_eq!(legacy, perturbed, "l{layer} n{neuron} b{bit}");
+                    assert_eq!(
+                        eng.predict(&img, Some(site), &mut buf),
+                        eng.predict_perturbed(&img, site, Perturb::Flip, &mut buf)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perturbed_delta_replay_matches_staged_replay_for_all_models() {
+        // the delta patch must serve stuck-ats and bursts exactly like the
+        // staged-byte replay, including the zero-delta stuck-at case where
+        // the clean bit already matches (gate converges at depth 1)
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace_retaining(&[4, -4, 8, 0], true, &mut buf);
+        let models = [
+            Perturb::Flip,
+            Perturb::Stuck(false),
+            Perturb::Stuck(true),
+            Perturb::Burst(0b11),
+            Perturb::Burst(0b0001_1100),
+        ];
+        for neuron in 0..net.comp(0).act_len() {
+            for bit in 0..8u8 {
+                for p in models {
+                    let site = FaultSite { layer: 0, neuron, bit };
+                    for gate in [true, false] {
+                        let got = eng
+                            .replay_from_delta_perturbed(site, p, &tr, gate, &mut buf)
+                            .expect("dense successor is delta-servable");
+                        let mut act = tr.acts[0].clone();
+                        act[neuron] = p.apply(act[neuron], bit);
+                        let want = eng.replay_from(0, &act, &tr, gate, &mut buf);
+                        assert_eq!(got, want, "n{neuron} b{bit} {p:?} gate={gate}");
+                        // and the naive full forward agrees on the class
+                        let full = eng.forward_perturbed(&[4, -4, 8, 0], site, p, &mut buf);
+                        assert_eq!(got.pred, argmax_i8(&full), "n{neuron} b{bit} {p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stuck_at_matching_clean_bit_is_masked_at_depth_one() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let tr = eng.trace_retaining(&[4, -4, 8, 0], true, &mut buf);
+        // clean hidden activation is [9, 0, 2]: bit 0 of neuron 0 is 1,
+        // so stuck-at-1 there leaves the byte unchanged
+        let site = FaultSite { layer: 0, neuron: 0, bit: 0 };
+        let r = eng
+            .replay_from_delta_perturbed(site, Perturb::Stuck(true), &tr, true, &mut buf)
+            .unwrap();
+        assert!(r.converged);
+        assert_eq!(r.depth, 1);
+        assert_eq!(r.pred, tr.pred);
     }
 }

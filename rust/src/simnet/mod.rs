@@ -15,7 +15,7 @@ pub mod gemm;
 pub mod layers;
 pub mod loader;
 
-pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite, Replay};
+pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite, Perturb, Replay};
 pub use loader::load_qnet;
 
 /// Geometry + parameters of one computing layer (GEMM form).

@@ -10,7 +10,7 @@ use deepaxe::coordinator::pipeline::{run_pipeline, PipelineSpec};
 use deepaxe::dse::cache::ResultCache;
 use deepaxe::dse::{enumerate_masks, pareto_front, Evaluator};
 use deepaxe::eval::Fidelity;
-use deepaxe::faultsim::{CampaignParams, SiteSampling};
+use deepaxe::faultsim::{CampaignParams, FaultModelKind, SiteSampling};
 use deepaxe::search::{
     frontier_hv, run_search, EvaluatorBackend, NoCache, ResultCacheHook, SearchSpace,
     SearchSpec, Strategy,
@@ -72,6 +72,7 @@ fn nsga2_quarter_budget_reaches_95pct_of_exhaustive_hypervolume() {
         net: net.name.clone(),
         fi: fi.clone(),
         eval_images: 64,
+        fault_model: FaultModelKind::BitFlip,
     };
     let out = run_search(&space, &spec, &backend, &mut hook);
     assert!(out.cache_hits >= 19, "homogeneous seeds should hit the sweep cache");
@@ -154,6 +155,7 @@ fn heterogeneous_results_cache_and_reload() {
             net: net.name.clone(),
             fi: fi.clone(),
             eval_images: 32,
+            fault_model: FaultModelKind::BitFlip,
         };
         let g = vec![1u8, 2, 0]; // kvp on layer 0, kv9 on layer 1, exact
         assert!(space.homogeneous(&g).is_none());
@@ -174,6 +176,7 @@ fn heterogeneous_results_cache_and_reload() {
             net: net.name.clone(),
             fi: fi.clone(),
             eval_images: 32,
+            fault_model: FaultModelKind::BitFlip,
         };
         assert_eq!(hook2.get(&names, Fidelity::FiFull).as_ref(), Some(&p));
     }
@@ -186,6 +189,7 @@ fn heterogeneous_results_cache_and_reload() {
             net: net.name.clone(),
             fi: fi.clone(),
             eval_images: 32,
+            fault_model: FaultModelKind::BitFlip,
         };
         run_search(&space, &spec, &backend, &mut hook)
     };
@@ -199,6 +203,7 @@ fn heterogeneous_results_cache_and_reload() {
             net: net.name.clone(),
             fi: fi.clone(),
             eval_images: 32,
+            fault_model: FaultModelKind::BitFlip,
         };
         run_search(&space, &spec, &backend, &mut hook)
     };
@@ -442,6 +447,7 @@ fn zoo_warm_start_seeds_search_from_cached_frontier() {
             net: bundle.net.name.clone(),
             fi: fi.clone(),
             eval_images: 24,
+            fault_model: FaultModelKind::BitFlip,
         };
         run_search(&space, &spec, &backend, &mut hook)
     };
@@ -453,6 +459,7 @@ fn zoo_warm_start_seeds_search_from_cached_frontier() {
         net: bundle.net.name.clone(),
         fi: fi.clone(),
         eval_images: 24,
+        fault_model: FaultModelKind::BitFlip,
     };
     let warm = hook.warm_genotypes(&space);
     assert!(!warm.is_empty());

@@ -15,7 +15,11 @@
 #
 # bench_zoo needs no artifacts (nets + workloads are generated from
 # seeds), so it is recorded unconditionally; the artifact-gated benches
-# follow when ./artifacts exists.
+# follow when ./artifacts exists. bench_faultsim additionally records
+# per-fault-model faults/s ("model-bitflip" / "model-stuckat" /
+# "model-lutplane" / "model-multibit" config records) on a generated net,
+# so the zoo of fault models gets a perf trajectory alongside the
+# replay/delta/gate knobs.
 #
 # Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
 # "records":[...one object per emitted line...]}. The per-record fields

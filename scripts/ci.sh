@@ -25,6 +25,12 @@ cargo test -q --test integration_search zoo_
 cargo test -q --test integration_faultsim zoo_
 cargo test -q --test integration_cli zoo_
 
+echo "== tier-1: fault-model zoo integration tests (artifact-free, no skip) =="
+# The fault_model_ suite covers the unified FaultModel subsystem (bitflip
+# bit-for-bit parity, stuck-at/multibit/lutplane campaigns, selective
+# hardening) on generated nets — runs in every container.
+cargo test -q --test integration_faultsim fault_model_
+
 echo "== tier-1: cargo test -q =="
 # Integration tests additionally need ./artifacts (make artifacts); unit
 # tests run regardless.
