@@ -5,8 +5,10 @@
 //! unit tests) — delta and gate buy speed, never accuracy. The headline
 //! ratio is delta-on vs delta-off: the first-suffix-layer GEMM is the one
 //! cost the convergence gate can never skip, and the delta patch removes
-//! it. Emits one JSON line per measurement so BENCH_*.json tooling can
-//! track the speedup.
+//! it. PR 7 adds `batch_speedup_vs_scalar` (fault-major group replay vs
+//! the image-major loop) and `simd_speedup_vs_scalar` (portable-SIMD
+//! kernels on vs off over the batched campaign). Emits one JSON line per
+//! measurement so BENCH_*.json tooling can track the speedups.
 
 mod bench_common;
 
@@ -49,7 +51,9 @@ fn main() {
         ("gate-off", true, false, false),
         ("naive", false, false, false),
     ] {
-        let params = CampaignParams { replay, gate, delta, ..base.clone() };
+        // batch off: this ladder isolates the delta/gate wins on the
+        // image-major loop; the batch/simd A/B below has its own records
+        let params = CampaignParams { replay, gate, delta, batch: false, ..base.clone() };
         let t0 = Instant::now();
         let r = black_box(run_campaign(&engine, &data, &params));
         let dt = t0.elapsed().as_secs_f64().max(1e-9);
@@ -101,6 +105,40 @@ fn main() {
     let speedup = rate["delta-on"] / rate["delta-off"].max(1e-12);
     println!("bench faultsim: delta on/off speedup {speedup:.2}x (first-suffix-layer patch)");
     emit("delta-on", "delta_speedup_vs_off", speedup);
+
+    // -- batch-major fault-major campaign vs image-major (§Perf P9) -------
+    // same engine, same faults; one worker owns a fault and replay_group
+    // serves every image from one delta LUT row. Bit-identity asserted on
+    // the full result including ReplayStats before the ratio is recorded.
+    let run_batch = |batch: bool| {
+        let p = CampaignParams { replay: true, gate: true, delta: true, batch, ..base.clone() };
+        let t0 = Instant::now();
+        let r = black_box(run_campaign(&engine, &data, &p));
+        (r, t0.elapsed().as_secs_f64().max(1e-9))
+    };
+    let (r_on, dt_on) = run_batch(true);
+    let (r_off, dt_off) = run_batch(false);
+    assert_eq!(r_on.acc_per_fault, r_off.acc_per_fault, "batch must be bit-identical");
+    assert_eq!(r_on.replay, r_off.replay, "batch must not move replay stats");
+    assert_eq!(r_on.delta_replays, r_off.delta_replays);
+    let batch_speedup = (r_on.n_faults as f64 / dt_on) / (r_off.n_faults as f64 / dt_off);
+    println!("bench faultsim: batch on/off speedup {batch_speedup:.2}x (fault-major group replay)");
+    emit("batch-on", "faults_per_s", r_on.n_faults as f64 / dt_on);
+    emit("batch-off", "faults_per_s", r_off.n_faults as f64 / dt_off);
+    emit("batch-on", "batch_speedup_vs_scalar", batch_speedup);
+
+    // simd on/off over the batched campaign (no-op 1.0x-ish ratio when the
+    // `simd` feature is compiled out)
+    let prev = deepaxe::simnet::set_simd(false);
+    let (r_soff, dt_soff) = run_batch(true);
+    deepaxe::simnet::set_simd(true);
+    let (r_son, dt_son) = run_batch(true);
+    deepaxe::simnet::set_simd(prev);
+    assert_eq!(r_son.acc_per_fault, r_soff.acc_per_fault, "simd must be bit-identical");
+    assert_eq!(r_son.replay, r_soff.replay);
+    let simd_speedup = dt_soff / dt_son.max(1e-12);
+    println!("bench faultsim: simd on/off speedup {simd_speedup:.2}x");
+    emit("batch-on", "simd_speedup_vs_scalar", simd_speedup);
 
     // -- zoo config: the same campaign on a generated conv net ------------
     // (site sampling over zoo topologies; artifact-free inputs, recorded

@@ -7,7 +7,7 @@ mod bench_common;
 use deepaxe::axmul;
 use deepaxe::faultsim::{run_campaign, CampaignParams, SiteSampling};
 use deepaxe::simnet::gemm::gemm_lut;
-use deepaxe::simnet::{Buffers, Engine};
+use deepaxe::simnet::{set_simd, Batch, Buffers, Engine};
 use deepaxe::util::bench::{bench, black_box};
 use deepaxe::util::rng::Rng;
 
@@ -103,6 +103,54 @@ fn main() {
         emit(name, "ms_per_inference", r.mean_s / 8.0 * 1e3);
     }
 
+    // --- batch-major forward vs per-image scalar (§Perf P9) ---------------
+    // zoo-generated net so the A/B needs no artifacts; asserts the batched
+    // predictions are bit-identical before timing anything
+    {
+        let net = deepaxe::zoo::build_net("zoo-tiny", 0xB1).unwrap();
+        let data = deepaxe::zoo::synth_dataset(&net, 64, 0xB1);
+        let lut = axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let engine = Engine::uniform(&net, &lut);
+        let (n, sz) = (data.len(), data.image_len());
+        let mut buf = Buffers::for_net(&net);
+        let mut bt = Batch::for_net(&net, n);
+        let mut preds = Vec::new();
+        let reference: Vec<usize> =
+            (0..n).map(|i| engine.predict(data.image(i), None, &mut buf)).collect();
+        engine.predict_batch(&data.x.data[..n * sz], &mut bt, &mut preds);
+        assert_eq!(preds, reference, "batched forward must be bit-identical");
+
+        let scalar = bench("batch_ab:scalar:zoo-tiny-64", 1, 5, || {
+            for i in 0..n {
+                black_box(engine.predict(data.image(i), None, &mut buf));
+            }
+        });
+        let batched = bench("batch_ab:batched:zoo-tiny-64", 1, 5, || {
+            engine.predict_batch(black_box(&data.x.data[..n * sz]), &mut bt, &mut preds);
+            black_box(&preds);
+        });
+        let speedup = scalar.min_s / batched.min_s;
+        println!("  -> batch-major forward speedup: {speedup:.2}x");
+        emit("forward64:zoo-tiny", "batch_speedup_vs_scalar", speedup);
+
+        // SIMD on vs off over the same batched path (exactly 1.0x-ish when
+        // the `simd` feature is compiled out — set_simd is then a no-op)
+        let prev = set_simd(false);
+        let simd_off = bench("batch_ab:simd-off:zoo-tiny-64", 1, 5, || {
+            engine.predict_batch(black_box(&data.x.data[..n * sz]), &mut bt, &mut preds);
+            black_box(&preds);
+        });
+        set_simd(true);
+        let simd_on = bench("batch_ab:simd-on:zoo-tiny-64", 1, 5, || {
+            engine.predict_batch(black_box(&data.x.data[..n * sz]), &mut bt, &mut preds);
+            black_box(&preds);
+        });
+        set_simd(prev);
+        let simd_speedup = simd_off.min_s / simd_on.min_s;
+        println!("  -> simd kernel speedup: {simd_speedup:.2}x");
+        emit("forward64:zoo-tiny", "simd_speedup_vs_scalar", simd_speedup);
+    }
+
     // --- FI campaign: layer-replay ON vs OFF (the §Perf headline) ---------
     let net = ctx.net("lenet5").unwrap();
     let data = ctx.data_for(&net).unwrap();
@@ -117,6 +165,7 @@ fn main() {
             replay,
             gate: true,
             delta: true,
+            batch: true,
         };
         let r = bench(&format!("fi_campaign:lenet5:{label}"), 0, 3, || {
             black_box(run_campaign(&engine, &data, &params));

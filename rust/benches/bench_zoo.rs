@@ -47,6 +47,7 @@ fn main() {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     };
     let bundle =
         deepaxe::zoo::build("mlp-deep-16", 0x5EED, eval_images.max(fi.n_images)).expect("zoo");

@@ -845,6 +845,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         }
     }
 

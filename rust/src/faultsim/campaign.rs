@@ -12,13 +12,21 @@
 //! full suffix for A/B benchmarking, and `replay: false` falls all the way
 //! back to naive full forwards.
 //!
-//! Faults are evaluated image-major and, within one image, grouped by
-//! fault layer in sorted order: the group's clean activation is staged
-//! into scratch once and each fault flips/unflips a single byte in place,
-//! so the per-fault staging copy disappears and the suffix layers' weight
-//! and trace working set stays hot across the whole group. Per-fault
-//! accuracies are integer counts over the image set, so the regrouping is
-//! bit-identical to the historical fault-major loop.
+//! With [`CampaignParams::batch`] (default on, `DEEPAXE_NO_BATCH` off
+//! switch) clean tracing runs through the batch-major engine path — one
+//! blocked LUT-GEMM per layer serves a whole image stride — and faults
+//! are evaluated *fault-major*: one worker owns a fault and
+//! [`Engine::replay_group`] patches every image's cached accumulator from
+//! a single per-`(old,new)` delta LUT row, so the row build and the patch
+//! geometry are paid once per fault instead of once per fault×image.
+//! With batch off, faults are evaluated image-major and, within one
+//! image, grouped by fault layer in sorted order: the group's clean
+//! activation is staged into scratch once and each fault flips/unflips a
+//! single byte in place, so the per-fault staging copy disappears and the
+//! suffix layers' weight and trace working set stays hot across the whole
+//! group. Per-fault accuracies are integer counts over the image set and
+//! replay stats are commutative sums, so both orderings are bit-identical
+//! to the historical fault-major naive loop.
 //!
 //! With [`CampaignParams::delta`] (default on, `DEEPAXE_NO_DELTA` off
 //! switch) the clean traces additionally retain each layer's
@@ -46,12 +54,17 @@
 
 use super::{sample_sites, SiteSampling};
 use crate::dataset::TestSet;
-use crate::simnet::{Buffers, CleanTrace, Engine, FaultSite, Perturb};
+use crate::simnet::{Batch, Buffers, CleanTrace, Engine, FaultSite, Perturb, Replay};
 use crate::util::progress::Progress;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::threadpool::{budgeted_map_with, WorkerBudget};
 use std::sync::Arc;
+
+/// Image stride for batched clean tracing: bounds the [`Batch`] slab
+/// footprint while keeping the GEMMs wide enough to amortize LUT-row
+/// loads. Chunk size cannot change a bit of the traces.
+const TRACE_CHUNK: usize = 64;
 
 /// Campaign sizing and execution knobs.
 ///
@@ -71,6 +84,10 @@ use std::sync::Arc;
 ///   ([`Engine::replay_from_delta`]: the fault's first suffix layer is
 ///   patched out of cached clean accumulators instead of re-running its
 ///   full GEMM; same results, more work — the delta A/B escape hatch).
+/// * `DEEPAXE_NO_BATCH` — set to disable the batch-major execution path
+///   (batched clean tracing via [`crate::simnet::Batch`] and fault-major
+///   group replays via [`Engine::replay_group`]; same results, more
+///   work — the batch A/B escape hatch).
 ///
 /// The fidelity ladder adds two more knobs that live in
 /// [`crate::eval::FidelitySpec`] (not here, so existing `CampaignParams`
@@ -102,6 +119,14 @@ pub struct CampaignParams {
     /// for replacing the per-fault O(k·n) first-suffix GEMM with an
     /// O(n) / O(k²·out_ch) patch; bit-identical either way.
     pub delta: bool,
+    /// batch-major execution (EXPERIMENTS.md §Perf P9): clean tracing
+    /// runs through the batched LUT-GEMM and, when `replay && delta`,
+    /// faults are evaluated fault-major via [`Engine::replay_group`] so
+    /// one fault's delta LUT rows and patch geometry serve every image.
+    /// Default on, `DEEPAXE_NO_BATCH` turns it off; bit-identical either
+    /// way (per-fault accuracies are integer counts and the replay stats
+    /// are commutative sums over fault×image pairs).
+    pub batch: bool,
 }
 
 impl CampaignParams {
@@ -123,6 +148,7 @@ impl CampaignParams {
             replay: true,
             gate: !env_flag("DEEPAXE_NO_CONVERGENCE_GATE"),
             delta: !env_flag("DEEPAXE_NO_DELTA"),
+            batch: !env_flag("DEEPAXE_NO_BATCH"),
         }
     }
 }
@@ -293,6 +319,7 @@ pub struct Campaign {
     replay: bool,
     gate: bool,
     delta: bool,
+    batch: bool,
     workers: usize,
     acc_per_fault: Vec<f64>,
     stream: stats::Streaming,
@@ -315,7 +342,27 @@ impl Campaign {
     ) -> Campaign {
         let subset = data.take(params.n_images);
         let retain_accs = params.replay && params.delta;
-        let traces: Vec<CleanTrace> = {
+        let traces: Vec<CleanTrace> = if params.batch {
+            // batch-major tracing: one blocked GEMM per layer serves a
+            // whole image stride. Chunked so slab memory stays bounded on
+            // paper-scale subsets; chunking cannot change a bit (images
+            // are independent GEMM rows).
+            let cap = subset.len().clamp(1, TRACE_CHUNK);
+            let mut bt = Batch::for_net(engine.net, cap);
+            let sz = subset.image_len();
+            let mut traces = Vec::with_capacity(subset.len());
+            let mut i = 0;
+            while i < subset.len() {
+                let m = cap.min(subset.len() - i);
+                traces.extend(engine.trace_batch_retaining(
+                    &subset.x.data[i * sz..(i + m) * sz],
+                    retain_accs,
+                    &mut bt,
+                ));
+                i += m;
+            }
+            traces
+        } else {
             let mut buf = Buffers::for_net(engine.net);
             (0..subset.len())
                 .map(|i| engine.trace_retaining(subset.image(i), retain_accs, &mut buf))
@@ -376,6 +423,7 @@ impl Campaign {
             replay: params.replay,
             gate: params.gate,
             delta: params.delta,
+            batch: params.batch,
             workers: params.workers.max(1),
             acc_per_fault: Vec::new(),
             stream: stats::Streaming::new(),
@@ -477,17 +525,23 @@ impl Campaign {
     }
 
     /// Evaluate up to `block` more faults (site-list order); returns how
-    /// many ran. Parallelism is over images, leased from the shared
-    /// [`WorkerBudget`] and capped at the campaign's `workers` setting.
-    /// `engine` must be the configuration this campaign was traced with
-    /// (the staged evaluator rebinds an identical engine on resume).
+    /// many ran. Parallelism is leased from the shared [`WorkerBudget`]
+    /// and capped at the campaign's `workers` setting. `engine` must be
+    /// the configuration this campaign was traced with (the staged
+    /// evaluator rebinds an identical engine on resume).
     ///
-    /// Within one image the block's faults run grouped by fault layer in
-    /// sorted order: the group's clean activation is staged once and each
-    /// fault perturbs/restores one byte in place before its gated replay.
-    /// Per-fault accuracies are integer correct-counts over the image
-    /// set, so neither the grouping nor the image-major parallelism can
-    /// change a single bit of the result.
+    /// With `batch && replay && delta` (the default) the block runs
+    /// *fault-major*: one worker owns a fault and [`Engine::replay_group`]
+    /// serves every image from it, so the per-`(old,new)` delta LUT row
+    /// and the patch geometry are resolved once per fault instead of once
+    /// per fault×image. Otherwise the block runs image-major with the
+    /// block's faults grouped by fault layer in sorted order: the group's
+    /// clean activation is staged once and each fault perturbs/restores
+    /// one byte in place before its gated replay. Either way per-fault
+    /// accuracies are integer correct-counts over the image set and the
+    /// replay stats are commutative sums over fault×image pairs, so
+    /// neither the loop transposition nor the parallelism can change a
+    /// single bit of the result.
     pub fn advance(&mut self, engine: &Engine, block: usize) -> usize {
         let n = block.min(self.remaining());
         if n == 0 {
@@ -498,77 +552,129 @@ impl Campaign {
         let chunk_p = &self.perturbs[start..start + n];
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| chunk[i].layer);
-        let images: Vec<usize> = (0..self.subset.len()).collect();
         let replay = self.replay;
         let gate = self.gate;
         let delta = self.delta;
         let subset = &self.subset;
         let traces = &self.traces;
         let progress = &self.progress;
-        let per_image: Vec<(Vec<bool>, ReplayStats, u64)> = budgeted_map_with(
-            WorkerBudget::global(),
-            self.workers,
-            &images,
-            || (Buffers::for_net(engine.net), Vec::<i8>::new()),
-            |(buf, act), &img| {
-                let mut correct = vec![false; n];
-                let mut stats = ReplayStats::new(engine.net.n_comp());
-                let mut deltas = 0u64;
-                if replay {
-                    let trace = &traces[img];
-                    let mut staged = usize::MAX; // layer currently in `act`
-                    for &oi in &order {
-                        let site = chunk[oi];
-                        let perturb = chunk_p[oi];
-                        // delta fast path: patch the first suffix layer
-                        // from the clean accumulators — no staged copy,
-                        // no perturb/restore, no first-suffix GEMM
-                        let r = if delta {
-                            engine.replay_from_delta_perturbed(site, perturb, trace, gate, buf)
-                        } else {
-                            None
-                        };
-                        let r = match r {
-                            Some(r) => {
-                                deltas += 1;
-                                r
-                            }
-                            None => {
-                                if site.layer != staged {
-                                    act.clear();
-                                    act.extend_from_slice(&trace.acts[site.layer]);
-                                    staged = site.layer;
-                                }
-                                let clean = act[site.neuron];
-                                act[site.neuron] = perturb.apply(clean, site.bit);
-                                let r = engine.replay_from(site.layer, act, trace, gate, buf);
-                                act[site.neuron] = clean;
-                                r
-                            }
-                        };
-                        stats.record(&r);
-                        correct[oi] = r.pred == subset.labels[img] as usize;
-                    }
-                } else {
-                    for (fi, (site, perturb)) in chunk.iter().zip(chunk_p).enumerate() {
-                        let pred =
-                            engine.predict_perturbed(subset.image(img), *site, *perturb, buf);
-                        correct[fi] = pred == subset.labels[img] as usize;
-                    }
-                }
-                progress.add(n as u64);
-                (correct, stats, deltas)
-            },
-        );
         let mut counts = vec![0usize; n];
-        for (correct, stats, deltas) in &per_image {
-            for (fi, &c) in correct.iter().enumerate() {
-                if c {
-                    counts[fi] += 1;
-                }
+        if self.batch && replay && delta {
+            // fault-major (order still sorted by layer, so neighbouring
+            // workers share suffix weight working sets)
+            let per_fault: Vec<(usize, usize, ReplayStats, u64)> = budgeted_map_with(
+                WorkerBudget::global(),
+                self.workers,
+                &order,
+                || (Buffers::for_net(engine.net), Vec::<i8>::new(), Vec::<Replay>::new()),
+                |(buf, act, group), &oi| {
+                    let site = chunk[oi];
+                    let perturb = chunk_p[oi];
+                    let mut stats = ReplayStats::new(engine.net.n_comp());
+                    let mut deltas = 0u64;
+                    let mut count = 0usize;
+                    if engine.replay_group(site, perturb, traces, gate, buf, group) {
+                        deltas += group.len() as u64;
+                        for (img, r) in group.iter().enumerate() {
+                            stats.record(r);
+                            if r.pred == subset.labels[img] as usize {
+                                count += 1;
+                            }
+                        }
+                    } else {
+                        // unservable site (last computing layer, or a
+                        // pool route the rank-1 patch cannot express).
+                        // Servability is image-independent and matches
+                        // [`Engine::replay_from_delta`]'s bail-outs, so
+                        // the per-image delta attempt would return `None`
+                        // for every image — go straight to staged replay.
+                        for (img, trace) in traces.iter().enumerate() {
+                            act.clear();
+                            act.extend_from_slice(&trace.acts[site.layer]);
+                            let clean = act[site.neuron];
+                            act[site.neuron] = perturb.apply(clean, site.bit);
+                            let r = engine.replay_from(site.layer, act, trace, gate, buf);
+                            stats.record(&r);
+                            if r.pred == subset.labels[img] as usize {
+                                count += 1;
+                            }
+                        }
+                    }
+                    progress.add(traces.len() as u64);
+                    (oi, count, stats, deltas)
+                },
+            );
+            for (oi, count, stats, deltas) in &per_fault {
+                counts[*oi] = *count;
+                self.replay_stats.merge(stats);
+                self.delta_replays += *deltas;
             }
-            self.replay_stats.merge(stats);
-            self.delta_replays += *deltas;
+        } else {
+            let images: Vec<usize> = (0..self.subset.len()).collect();
+            let per_image: Vec<(Vec<bool>, ReplayStats, u64)> = budgeted_map_with(
+                WorkerBudget::global(),
+                self.workers,
+                &images,
+                || (Buffers::for_net(engine.net), Vec::<i8>::new()),
+                |(buf, act), &img| {
+                    let mut correct = vec![false; n];
+                    let mut stats = ReplayStats::new(engine.net.n_comp());
+                    let mut deltas = 0u64;
+                    if replay {
+                        let trace = &traces[img];
+                        let mut staged = usize::MAX; // layer currently in `act`
+                        for &oi in &order {
+                            let site = chunk[oi];
+                            let perturb = chunk_p[oi];
+                            // delta fast path: patch the first suffix layer
+                            // from the clean accumulators — no staged copy,
+                            // no perturb/restore, no first-suffix GEMM
+                            let r = if delta {
+                                engine.replay_from_delta_perturbed(site, perturb, trace, gate, buf)
+                            } else {
+                                None
+                            };
+                            let r = match r {
+                                Some(r) => {
+                                    deltas += 1;
+                                    r
+                                }
+                                None => {
+                                    if site.layer != staged {
+                                        act.clear();
+                                        act.extend_from_slice(&trace.acts[site.layer]);
+                                        staged = site.layer;
+                                    }
+                                    let clean = act[site.neuron];
+                                    act[site.neuron] = perturb.apply(clean, site.bit);
+                                    let r = engine.replay_from(site.layer, act, trace, gate, buf);
+                                    act[site.neuron] = clean;
+                                    r
+                                }
+                            };
+                            stats.record(&r);
+                            correct[oi] = r.pred == subset.labels[img] as usize;
+                        }
+                    } else {
+                        for (fi, (site, perturb)) in chunk.iter().zip(chunk_p).enumerate() {
+                            let pred =
+                                engine.predict_perturbed(subset.image(img), *site, *perturb, buf);
+                            correct[fi] = pred == subset.labels[img] as usize;
+                        }
+                    }
+                    progress.add(n as u64);
+                    (correct, stats, deltas)
+                },
+            );
+            for (correct, stats, deltas) in &per_image {
+                for (fi, &c) in correct.iter().enumerate() {
+                    if c {
+                        counts[fi] += 1;
+                    }
+                }
+                self.replay_stats.merge(stats);
+                self.delta_replays += *deltas;
+            }
         }
         let n_images = self.subset.len() as f64;
         for &c in &counts {
@@ -658,6 +764,7 @@ mod tests {
             replay,
             gate: true,
             delta: true,
+            batch: true,
         }
     }
 
@@ -720,6 +827,7 @@ mod tests {
                 replay: true,
                 gate: true,
                 delta: rng.below(2) == 0,
+                batch: rng.below(2) == 0,
             };
             let gated = run_campaign(&engine, &data, &p);
             let ungated = run_campaign(&engine, &data, &CampaignParams { gate: false, ..p.clone() });
@@ -772,6 +880,7 @@ mod tests {
                 replay: true,
                 gate: rng.below(2) == 0,
                 delta: true,
+                batch: rng.below(2) == 0,
             };
             let with_delta = run_campaign(&engine, &data, &p);
             let without = run_campaign(&engine, &data, &CampaignParams { delta: false, ..p.clone() });
@@ -813,6 +922,30 @@ mod tests {
         assert_eq!(with_delta.acc_per_fault, naive.acc_per_fault);
         assert_eq!(with_delta.replay, without.replay);
         assert!(with_delta.delta_replays > 0, "conv->pool->dense faults must be patchable");
+    }
+
+    #[test]
+    fn batch_campaign_bit_identical_to_image_major_on_conv_net() {
+        // the PR-7 headline criterion: batched tracing + fault-major
+        // group replay reproduces the image-major campaign bit-for-bit —
+        // per-fault accuracies AND the full ReplayStats AND delta counts
+        let net = tiny_conv();
+        let exact = axmul::by_name("exact").unwrap().lut();
+        let engine = Engine::uniform(&net, &exact);
+        let data = data_for(&net, 20, 0xBA7C);
+        let p = params(true);
+        let batched = run_campaign(&engine, &data, &p);
+        let scalar = run_campaign(&engine, &data, &CampaignParams { batch: false, ..p.clone() });
+        assert_eq!(batched.acc_per_fault, scalar.acc_per_fault);
+        assert_eq!(batched.base_acc, scalar.base_acc);
+        assert_eq!(batched.replay, scalar.replay);
+        assert_eq!(batched.delta_replays, scalar.delta_replays);
+        assert!(batched.delta_replays > 0, "group replay must serve conv faults");
+        // batch with the delta patch disabled falls back to the
+        // image-major staged loop — still bit-identical
+        let no_delta =
+            run_campaign(&engine, &data, &CampaignParams { delta: false, ..p.clone() });
+        assert_eq!(batched.acc_per_fault, no_delta.acc_per_fault);
     }
 
     #[test]

@@ -536,6 +536,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         let legacy = run_campaign(&engine, &data, &params);
         let model = run_model_campaign(FaultModelKind::BitFlip, &engine, &data, &params);
@@ -562,6 +563,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         let legacy = run_campaign(&engine, &data, &params);
         let mut rng = Rng::new(params.seed);
@@ -597,6 +599,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         for kind in [FaultModelKind::StuckAt, FaultModelKind::MultiBit] {
             let a = run_model_campaign(kind, &engine, &data, &params);
@@ -626,6 +629,7 @@ mod tests {
             replay,
             gate,
             delta,
+            batch: true,
         };
         for kind in [FaultModelKind::StuckAt, FaultModelKind::MultiBit] {
             let fast = run_model_campaign(kind, &engine, &data, &mk(true, true, true));
@@ -673,6 +677,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         let a = run_model_campaign(FaultModelKind::LutPlane, &engine, &data, &params);
         let b = run_model_campaign(FaultModelKind::LutPlane, &engine, &data, &params);
@@ -714,6 +719,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         let mut rng = Rng::new(params.seed);
         let (sites, perturbs) = sample_model_faults(

@@ -93,6 +93,7 @@ pub fn run_stuck_campaign(
         replay: true,
         gate: !env_flag("DEEPAXE_NO_CONVERGENCE_GATE"),
         delta: !env_flag("DEEPAXE_NO_DELTA"),
+        batch: !env_flag("DEEPAXE_NO_BATCH"),
     };
     let r = super::models::run_model_campaign(
         super::models::FaultModelKind::StuckAt,

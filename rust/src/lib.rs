@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # DeepAxe — approximation/reliability DSE for DNN accelerators
 //!
 //! Rust reproduction of *"DeepAxe: A Framework for Exploration of

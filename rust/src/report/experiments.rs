@@ -436,6 +436,7 @@ pub fn zoo_sweep(budget: usize) -> Result<String> {
         replay: true,
         gate: true,
         delta: true,
+        batch: !crate::util::cli::env_flag("DEEPAXE_NO_BATCH"),
     };
     let eval_images = default_eval_images().min(200);
     let bundle = crate::zoo::build("mlp-deep-16", 0x5EED, eval_images.max(fi.n_images))
@@ -531,6 +532,7 @@ pub fn fault_zoo(budget: usize) -> Result<String> {
         replay: true,
         gate: true,
         delta: true,
+        batch: !crate::util::cli::env_flag("DEEPAXE_NO_BATCH"),
     };
     let eval_images = default_eval_images().min(96);
     let luts: std::collections::BTreeMap<String, crate::axmul::Lut> =
@@ -651,6 +653,7 @@ pub fn ablation_fi_n(ctx: &Ctx) -> Result<String> {
             replay: true,
             gate: true,
             delta: true,
+            batch: !crate::util::cli::env_flag("DEEPAXE_NO_BATCH"),
         };
         let r = run_campaign(&engine, &data, &params);
         t.row(vec![

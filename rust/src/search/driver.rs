@@ -1202,6 +1202,7 @@ mod tests {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         };
         let space = SearchSpace::with_dims(
             "mlp3",

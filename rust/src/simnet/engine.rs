@@ -22,10 +22,26 @@
 //! O(n) / O(k²·out_ch) patch ([`super::gemm::gemm_lut_delta`],
 //! [`super::layers::pixel_patch_positions`]) instead of O(k·n) gathers.
 
-use super::gemm::{gemm_lut_bias, gemm_lut_delta};
+use super::gemm::{gemm_lut_bias, gemm_lut_delta, gemm_lut_delta_apply, gemm_lut_delta_diff};
 use super::layers::{im2col, maxpool, pixel_patch_positions, requantize_slice, rows_to_chw};
+use super::simd::acts_equal;
 use super::{CompKind, Layer, QNet};
 use crate::axmul::Lut;
+
+/// Runtime switch for the batch-major execution paths
+/// ([`Engine::accuracy`], [`crate::faultsim::CampaignParams::batch`], the
+/// zoo teacher-labeling pass). `DEEPAXE_NO_BATCH` forces the per-image
+/// scalar paths, mirroring the `DEEPAXE_NO_DELTA` convention; both paths
+/// are bit-identical, so this is an A/B and escape hatch, not a semantic
+/// knob.
+pub fn batch_enabled() -> bool {
+    !crate::util::cli::env_flag("DEEPAXE_NO_BATCH")
+}
+
+/// Images per [`Batch`] chunk in [`Engine::accuracy`]: big enough to
+/// amortize the weight-tile loads across an image stride, small enough
+/// that the conv im2col slab stays cache-resident.
+const ACCURACY_CHUNK: usize = 64;
 
 /// A single-bit-flip fault at a computing-layer activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,26 +106,85 @@ pub struct Buffers {
     /// (output position, patch column) scratch for the delta-replay conv
     /// patch ([`Engine::replay_from_delta`])
     patch: Vec<(usize, usize)>,
+    /// per-fault diff-row cache for the batched fault-group delta patch
+    /// ([`Engine::replay_group`]); empty until that path first runs
+    delta: DeltaCache,
+}
+
+/// Diff-row cache for the batched fault-group delta patch: per fault, the
+/// `(old, new)` LUT row pair is folded into one 256-entry difference row
+/// (`diff[wv] = lut(new, wv) − lut(old, wv)`) **once per distinct clean
+/// byte** and then reused for every image in the group — the LUT rows are
+/// read once per fault instead of once per image. Slots are direct-mapped
+/// on the clean byte and tagged with the faulted byte (the pool-narrowed
+/// case can map one clean byte to different faulted maxima across images;
+/// a tag mismatch just refills the slot). Generation stamps make
+/// `begin_group` O(1); the 256 KiB backing store is allocated on first
+/// use so per-image callers pay nothing.
+struct DeltaCache {
+    diff: Vec<i32>,
+    tag: Vec<u8>,
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl DeltaCache {
+    fn empty() -> DeltaCache {
+        DeltaCache { diff: Vec::new(), tag: Vec::new(), stamp: Vec::new(), gen: 0 }
+    }
+
+    /// Invalidate all cached rows (start of a new fault group).
+    fn begin_group(&mut self) {
+        if self.diff.is_empty() {
+            self.diff = vec![0; 256 * 256];
+            self.tag = vec![0; 256];
+            self.stamp = vec![0; 256];
+        }
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            self.stamp.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    /// The difference row for `(old, new)`, computing it on miss.
+    fn row(&mut self, lut: &Lut, old: i8, new: i8) -> &[i32] {
+        let oi = old as u8 as usize;
+        if self.stamp[oi] != self.gen || self.tag[oi] != new as u8 {
+            gemm_lut_delta_diff(old, new, lut, &mut self.diff[oi * 256..oi * 256 + 256]);
+            self.stamp[oi] = self.gen;
+            self.tag[oi] = new as u8;
+        }
+        &self.diff[oi * 256..oi * 256 + 256]
+    }
+}
+
+/// Per-image scratch maxima over the net's layers: (activation, im2col
+/// columns, accumulator) element counts. Shared sizing for [`Buffers`]
+/// (one image) and [`Batch`] (capacity × these).
+fn scratch_maxima(net: &QNet) -> (usize, usize, usize) {
+    let mut max_act = net.input_len();
+    let mut max_cols = 1;
+    let mut max_acc = 1;
+    for ci in 0..net.n_comp() {
+        let c = net.comp(ci);
+        max_act = max_act.max(c.act_len());
+        match &c.kind {
+            CompKind::Dense => {
+                max_acc = max_acc.max(c.n_dim);
+            }
+            CompKind::Conv { out_h, out_w, .. } => {
+                max_cols = max_cols.max(out_h * out_w * c.k_dim);
+                max_acc = max_acc.max(out_h * out_w * c.n_dim);
+            }
+        }
+    }
+    (max_act, max_cols, max_acc)
 }
 
 impl Buffers {
     pub fn for_net(net: &QNet) -> Buffers {
-        let mut max_act = net.input_len();
-        let mut max_cols = 1;
-        let mut max_acc = 1;
-        for ci in 0..net.n_comp() {
-            let c = net.comp(ci);
-            max_act = max_act.max(c.act_len());
-            match &c.kind {
-                CompKind::Dense => {
-                    max_acc = max_acc.max(c.n_dim);
-                }
-                CompKind::Conv { out_h, out_w, .. } => {
-                    max_cols = max_cols.max(out_h * out_w * c.k_dim);
-                    max_acc = max_acc.max(out_h * out_w * c.n_dim);
-                }
-            }
-        }
+        let (max_act, max_cols, max_acc) = scratch_maxima(net);
         Buffers {
             act_a: vec![0; max_act],
             act_b: vec![0; max_act],
@@ -117,7 +192,43 @@ impl Buffers {
             acc: vec![0; max_acc],
             rows_q: vec![0; max_acc],
             patch: Vec::new(),
+            delta: DeltaCache::empty(),
         }
+    }
+}
+
+/// Scratch for the batch-major execution path: the [`Buffers`] layout
+/// replicated `capacity` images wide, every per-layer slab packed
+/// image-major (`[img * per_image_len + j]`). One [`Batch`] serves any
+/// batch size up to its capacity, so callers size it once for their chunk
+/// and stream the workload through it.
+pub struct Batch {
+    capacity: usize,
+    act_a: Vec<i8>,
+    act_b: Vec<i8>,
+    cols: Vec<i8>,
+    acc: Vec<i32>,
+    rows_q: Vec<i8>,
+}
+
+impl Batch {
+    /// Scratch sized for up to `capacity` images of `net`.
+    pub fn for_net(net: &QNet, capacity: usize) -> Batch {
+        assert!(capacity >= 1, "batch capacity must be >= 1");
+        let (max_act, max_cols, max_acc) = scratch_maxima(net);
+        Batch {
+            capacity,
+            act_a: vec![0; max_act * capacity],
+            act_b: vec![0; max_act * capacity],
+            cols: vec![0; max_cols * capacity],
+            acc: vec![0; max_acc * capacity],
+            rows_q: vec![0; max_acc * capacity],
+        }
+    }
+
+    /// Maximum images per call.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 }
 
@@ -513,7 +624,7 @@ impl<'a> Engine<'a> {
         // identical gate semantics to the stepwise replay: the patched
         // layer is depth 1, compared against the clean trace before the
         // remaining suffix runs
-        if gate && buf.act_a[..act_len] == trace.acts[next_ci][..] {
+        if gate && acts_equal(&buf.act_a[..act_len], &trace.acts[next_ci]) {
             return Some(Replay { pred: trace.pred, depth: 1, converged: true });
         }
         let mut shape = comp.act_shape.clone();
@@ -528,6 +639,234 @@ impl<'a> Engine<'a> {
             gate,
             buf,
         ))
+    }
+
+    /// Batched fault-group delta replay: serve one `(site, perturb)` fault
+    /// for **all** images in one pass, pushing one [`Replay`] per trace
+    /// into `out` (cleared first). Everything image-independent is hoisted
+    /// out of the image loop: the interposed Pool/Flatten route, the
+    /// pooled destination index, the conv `pixel_patch_positions`, and —
+    /// via the [`DeltaCache`] — the per-`(old, new)`-value LUT row pair,
+    /// which is folded into a difference row once per distinct clean byte
+    /// per fault instead of once per image (the "batch delta patches"
+    /// idea; EXPERIMENTS.md §Perf P9).
+    ///
+    /// Returns `false` without touching `out` when the site is not
+    /// delta-servable. Servability depends only on the topology (fault on
+    /// the last computing layer, accumulators not retained, a pool over a
+    /// non-CHW view, a second interposed pool) — never on the image — so
+    /// a single check serves the whole group and the caller falls back to
+    /// per-image staged replay for every image, exactly like the scalar
+    /// path. Per image this is bit-identical to
+    /// [`replay_from_delta_perturbed`](Engine::replay_from_delta_perturbed)
+    /// (pred, depth and converged): the patch arithmetic is the same
+    /// wrapping i32 delta, the gate compares the same activations at the
+    /// same depths, and the non-converged tail runs the same
+    /// `replay_loop` (asserted by the engine unit tests and the
+    /// `zoo_batch_` faultsim property suite).
+    pub fn replay_group(
+        &self,
+        site: FaultSite,
+        perturb: Perturb,
+        traces: &[CleanTrace],
+        gate: bool,
+        buf: &mut Buffers,
+        out: &mut Vec<Replay>,
+    ) -> bool {
+        let ci = site.layer;
+        let next_ci = ci + 1;
+        if next_ci >= self.net.n_comp() {
+            return false; // no suffix computing layer to patch
+        }
+        match traces.first() {
+            None => {
+                out.clear();
+                return true; // vacuously served
+            }
+            // traces of one campaign are built uniformly: one check serves all
+            Some(t) => match t.accs.get(next_ci) {
+                Some(a) if !a.is_empty() => {}
+                _ => return false, // accumulators not retained
+            },
+        }
+
+        // The image-independent route through the interposed Pool/Flatten
+        // layers: where the delta lands (`dst` = None when the pixel sits
+        // in a truncated edge row/col no pool window reads — erased for
+        // every image) and the window geometry for the per-image max
+        // recompute.
+        struct PoolRoute {
+            size: usize,
+            h: usize,
+            w: usize,
+            ch: usize,
+            y: usize,
+            x: usize,
+            oy: usize,
+            ox: usize,
+            dst: Option<usize>,
+        }
+        let mut cur_shape: Vec<usize> = self.net.comp(ci).act_shape.clone();
+        let mut pool: Option<PoolRoute> = None;
+        for li in self.net.comp_positions[ci] + 1..self.net.comp_positions[next_ci] {
+            match &self.net.layers[li] {
+                Layer::Flatten => {
+                    cur_shape = vec![cur_shape.iter().product()];
+                }
+                Layer::Pool { size } => {
+                    // same bail-outs as the scalar path: a pool over a
+                    // non-CHW view, or a second pool (would need the
+                    // unmaterialized first pool output)
+                    if cur_shape.len() != 3 || pool.is_some() {
+                        return false;
+                    }
+                    let (c, h, w) = (cur_shape[0], cur_shape[1], cur_shape[2]);
+                    let (oh, ow) = (h / size, w / size);
+                    let idx = site.neuron;
+                    let (ch, y, x) = (idx / (h * w), (idx % (h * w)) / w, idx % w);
+                    let (oy, ox) = (y / size, x / size);
+                    let dst = if oy >= oh || ox >= ow {
+                        None
+                    } else {
+                        Some(ch * oh * ow + oy * ow + ox)
+                    };
+                    pool = Some(PoolRoute { size: *size, h, w, ch, y, x, oy, ox, dst });
+                    cur_shape = vec![c, oh, ow];
+                }
+                Layer::Comp(_) => unreachable!("no computing layer between comp positions"),
+            }
+        }
+
+        // Successor geometry, also image-independent: the delta index is
+        // `site.neuron` (direct) or the pooled destination, so the dense
+        // weight row / conv patch positions are computed once per fault.
+        let comp = self.net.comp(next_ci);
+        let lut = self.luts[next_ci];
+        let act_len = comp.act_len();
+        let dst_idx = match &pool {
+            None => Some(site.neuron),
+            Some(p) => p.dst,
+        };
+        let mut patch = std::mem::take(&mut buf.patch);
+        patch.clear();
+        if let (
+            Some(idx),
+            CompKind::Conv { ksize, stride, pad, in_h, in_w, out_h, out_w, .. },
+        ) = (dst_idx, &comp.kind)
+        {
+            let (ch, y, x) = (idx / (in_h * in_w), (idx % (in_h * in_w)) / in_w, idx % in_w);
+            pixel_patch_positions(ch, y, x, *ksize, *stride, *pad, *out_h, *out_w, &mut patch);
+        }
+
+        buf.delta.begin_group();
+        out.clear();
+        out.reserve(traces.len());
+        for trace in traces {
+            debug_assert!(!trace.accs[next_ci].is_empty(), "uniform acc retention");
+            let old = trace.acts[ci][site.neuron];
+            let new = perturb.apply(old, site.bit);
+            // the per-image delta *values* after the interposed layers
+            let delta: Option<(i8, i8)> = match &pool {
+                None => {
+                    if old == new {
+                        None
+                    } else {
+                        Some((old, new))
+                    }
+                }
+                Some(p) => match p.dst {
+                    None => None,
+                    Some(_) => {
+                        let plane = &trace.acts[ci][p.ch * p.h * p.w..(p.ch + 1) * p.h * p.w];
+                        let mut m_old = i8::MIN;
+                        let mut m_new = i8::MIN;
+                        for ky in 0..p.size {
+                            for kx in 0..p.size {
+                                let (yy, xx) = (p.oy * p.size + ky, p.ox * p.size + kx);
+                                let v = plane[yy * p.w + xx];
+                                m_old = m_old.max(v);
+                                m_new = m_new.max(if yy == p.y && xx == p.x { new } else { v });
+                            }
+                        }
+                        if m_old == m_new {
+                            None
+                        } else {
+                            Some((m_old, m_new))
+                        }
+                    }
+                },
+            };
+
+            let acc_clean = &trace.accs[next_ci];
+            match &comp.kind {
+                CompKind::Dense => {
+                    debug_assert_eq!(acc_clean.len(), comp.n_dim);
+                    buf.acc[..comp.n_dim].copy_from_slice(acc_clean);
+                    if let Some((o_val, n_val)) = delta {
+                        let k = dst_idx.expect("delta implies a destination index");
+                        debug_assert!(k < comp.k_dim);
+                        let d = buf.delta.row(lut, o_val, n_val);
+                        gemm_lut_delta_apply(
+                            &comp.w[k * comp.n_dim..(k + 1) * comp.n_dim],
+                            d,
+                            &mut buf.acc[..comp.n_dim],
+                        );
+                    }
+                    requantize_slice(
+                        &buf.acc[..comp.n_dim],
+                        comp.m0,
+                        comp.nshift,
+                        comp.relu,
+                        &mut buf.act_a[..comp.n_dim],
+                    );
+                }
+                CompKind::Conv { out_h, out_w, .. } => {
+                    buf.act_a[..act_len].copy_from_slice(&trace.acts[next_ci]);
+                    if let Some((o_val, n_val)) = delta {
+                        let d = buf.delta.row(lut, o_val, n_val);
+                        for &(pos, col) in &patch {
+                            buf.acc[..comp.n_dim].copy_from_slice(
+                                &acc_clean[pos * comp.n_dim..(pos + 1) * comp.n_dim],
+                            );
+                            gemm_lut_delta_apply(
+                                &comp.w[col * comp.n_dim..(col + 1) * comp.n_dim],
+                                d,
+                                &mut buf.acc[..comp.n_dim],
+                            );
+                            requantize_slice(
+                                &buf.acc[..comp.n_dim],
+                                comp.m0,
+                                comp.nshift,
+                                comp.relu,
+                                &mut buf.rows_q[..comp.n_dim],
+                            );
+                            for ni in 0..comp.n_dim {
+                                buf.act_a[ni * out_h * out_w + pos] = buf.rows_q[ni];
+                            }
+                        }
+                    }
+                }
+            }
+
+            if gate && acts_equal(&buf.act_a[..act_len], &trace.acts[next_ci]) {
+                out.push(Replay { pred: trace.pred, depth: 1, converged: true });
+            } else {
+                let mut shape = comp.act_shape.clone();
+                let mut ci_next = next_ci + 1;
+                out.push(self.replay_loop(
+                    self.net.comp_positions[next_ci] + 1,
+                    &mut shape,
+                    act_len,
+                    &mut ci_next,
+                    1,
+                    trace,
+                    gate,
+                    buf,
+                ));
+            }
+        }
+        buf.patch = patch;
+        true
     }
 
     /// The shared convergence-gated suffix walk: step layers
@@ -552,7 +891,7 @@ impl<'a> Engine<'a> {
             act_len = self.step_layer(li, shape, act_len, ci, buf);
             if is_comp {
                 depth += 1;
-                if gate && buf.act_a[..act_len] == trace.acts[*ci - 1][..] {
+                if gate && acts_equal(&buf.act_a[..act_len], &trace.acts[*ci - 1]) {
                     return Replay { pred: trace.pred, depth, converged: true };
                 }
             }
@@ -728,6 +1067,246 @@ impl<'a> Engine<'a> {
         act_len
     }
 
+    // --- batch-major execution path (EXPERIMENTS.md §Perf P9) ---------
+
+    /// Batched clean forward over `n` images packed image-major in
+    /// `images` (`n = images.len() / input_len`, at most
+    /// [`Batch::capacity`]). Returns the packed `n × classes` logit
+    /// matrix. Bit-identical per image to [`forward`](Engine::forward):
+    /// GEMM rows are independent, so the m=n dense GEMM and the
+    /// m=n·pixels conv GEMM compute exactly the per-image rows, and the
+    /// pool/im2col/transpose steps run per image unchanged.
+    pub fn forward_batch(&self, images: &[i8], bt: &mut Batch) -> Vec<i8> {
+        let n = self.load_batch(images, bt);
+        let out_len = self.run_layers_batch(n, self.net.input_len(), bt, None, None);
+        bt.act_a[..n * out_len].to_vec()
+    }
+
+    /// Batched [`predict`](Engine::predict): per-image argmax of the
+    /// batched forward, written into `out` (cleared first).
+    pub fn predict_batch(&self, images: &[i8], bt: &mut Batch, out: &mut Vec<usize>) {
+        let n = self.load_batch(images, bt);
+        let out_len = self.run_layers_batch(n, self.net.input_len(), bt, None, None);
+        out.clear();
+        out.reserve(n);
+        for img in 0..n {
+            out.push(argmax_i8(&bt.act_a[img * out_len..(img + 1) * out_len]));
+        }
+    }
+
+    /// Batched [`trace_retaining`](Engine::trace_retaining): one batched
+    /// forward producing the per-image [`CleanTrace`]s a campaign needs.
+    /// The conv accumulator slabs come out of the batched GEMM already in
+    /// the per-image position-major layout `CleanTrace::accs` documents,
+    /// so the traces are bit-identical to per-image tracing.
+    pub fn trace_batch_retaining(
+        &self,
+        images: &[i8],
+        retain_accs: bool,
+        bt: &mut Batch,
+    ) -> Vec<CleanTrace> {
+        let n = self.load_batch(images, bt);
+        let mut acts: Vec<Vec<Vec<i8>>> =
+            (0..n).map(|_| Vec::with_capacity(self.net.n_comp())).collect();
+        let mut accs: Vec<Vec<Vec<i32>>> = if retain_accs {
+            (0..n).map(|_| Vec::with_capacity(self.net.n_comp())).collect()
+        } else {
+            Vec::new()
+        };
+        let out_len = self.run_layers_batch(
+            n,
+            self.net.input_len(),
+            bt,
+            Some(&mut acts),
+            if retain_accs { Some(&mut accs) } else { None },
+        );
+        acts.into_iter()
+            .enumerate()
+            .map(|(img, a)| {
+                let logits = bt.act_a[img * out_len..(img + 1) * out_len].to_vec();
+                let pred = argmax_i8(&logits);
+                let tr_accs =
+                    if retain_accs { std::mem::take(&mut accs[img]) } else { Vec::new() };
+                CleanTrace { acts: a, accs: tr_accs, logits, pred }
+            })
+            .collect()
+    }
+
+    /// Copy the packed images into `bt.act_a`; returns the batch size.
+    fn load_batch(&self, images: &[i8], bt: &mut Batch) -> usize {
+        let in_len = self.net.input_len();
+        debug_assert_eq!(images.len() % in_len, 0, "packed images");
+        let n = images.len() / in_len;
+        assert!(n <= bt.capacity, "batch of {n} exceeds capacity {}", bt.capacity);
+        bt.act_a[..images.len()].copy_from_slice(images);
+        n
+    }
+
+    /// The batched layer walk: run every layer over the `n` images packed
+    /// in `bt.act_a`, returning the final per-image activation length.
+    /// `collect`/`collect_accs` mirror the per-image
+    /// [`run_layers`](Engine::run_layers) hooks, indexed
+    /// `[image][computing layer]` with the same layer-0 accumulator
+    /// elision.
+    fn run_layers_batch(
+        &self,
+        n: usize,
+        in_len: usize,
+        bt: &mut Batch,
+        mut collect: Option<&mut [Vec<Vec<i8>>]>,
+        mut collect_accs: Option<&mut [Vec<Vec<i32>>]>,
+    ) -> usize {
+        let mut shape = self.net.input_shape.clone();
+        let mut act_len = in_len;
+        let mut ci = 0usize;
+        for li in 0..self.net.layers.len() {
+            let is_comp = matches!(&self.net.layers[li], Layer::Comp(_));
+            act_len = self.step_layer_batch(li, &mut shape, act_len, &mut ci, n, bt);
+            if is_comp {
+                let cur = ci - 1;
+                if let Some(c) = collect_accs.as_deref_mut() {
+                    let comp = self.net.comp(cur);
+                    let acc_len = match &comp.kind {
+                        CompKind::Dense => comp.n_dim,
+                        CompKind::Conv { out_h, out_w, .. } => out_h * out_w * comp.n_dim,
+                    };
+                    for (img, per_img) in c.iter_mut().enumerate() {
+                        if cur == 0 {
+                            per_img.push(Vec::new());
+                        } else {
+                            per_img.push(bt.acc[img * acc_len..(img + 1) * acc_len].to_vec());
+                        }
+                    }
+                }
+                if let Some(c) = collect.as_deref_mut() {
+                    for (img, per_img) in c.iter_mut().enumerate() {
+                        per_img.push(bt.act_a[img * act_len..(img + 1) * act_len].to_vec());
+                    }
+                }
+            }
+        }
+        act_len
+    }
+
+    /// Batched [`step_layer`](Engine::step_layer): one layer over all `n`
+    /// images. Dense layers run one m=n GEMM over the packed activation
+    /// matrix; conv layers im2col per image into one packed column slab
+    /// and run one m=n·pixels GEMM — the cache-blocked GEMM core then
+    /// keeps each 4-row weight tile hot across the whole image stride.
+    fn step_layer_batch(
+        &self,
+        li: usize,
+        shape: &mut Vec<usize>,
+        act_len: usize,
+        ci: &mut usize,
+        n: usize,
+        bt: &mut Batch,
+    ) -> usize {
+        match &self.net.layers[li] {
+            Layer::Flatten => {
+                let flat: usize = shape.iter().product();
+                *shape = vec![flat];
+                act_len
+            }
+            Layer::Pool { size } => {
+                let (c, h, w) = (shape[0], shape[1], shape[2]);
+                let (oh, ow) = (h / size, w / size);
+                let out_len = c * oh * ow;
+                for img in 0..n {
+                    maxpool(
+                        &bt.act_a[img * act_len..img * act_len + act_len],
+                        c,
+                        h,
+                        w,
+                        *size,
+                        &mut bt.act_b[img * out_len..(img + 1) * out_len],
+                    );
+                }
+                std::mem::swap(&mut bt.act_a, &mut bt.act_b);
+                *shape = vec![c, oh, ow];
+                out_len
+            }
+            Layer::Comp(comp) => {
+                let lut = self.luts[*ci];
+                let out_len = match &comp.kind {
+                    CompKind::Dense => {
+                        debug_assert_eq!(act_len, comp.k_dim);
+                        gemm_lut_bias(
+                            &bt.act_a[..n * comp.k_dim],
+                            &comp.w,
+                            &comp.b,
+                            lut,
+                            n,
+                            comp.k_dim,
+                            comp.n_dim,
+                            &mut bt.acc,
+                        );
+                        requantize_slice(
+                            &bt.acc[..n * comp.n_dim],
+                            comp.m0,
+                            comp.nshift,
+                            comp.relu,
+                            &mut bt.act_b[..n * comp.n_dim],
+                        );
+                        comp.n_dim
+                    }
+                    CompKind::Conv {
+                        in_ch, ksize, stride, pad, in_h, in_w, out_h, out_w, ..
+                    } => {
+                        debug_assert_eq!(act_len, in_ch * in_h * in_w);
+                        let m = out_h * out_w;
+                        let kk = comp.k_dim;
+                        for img in 0..n {
+                            let (oh, ow) = im2col(
+                                &bt.act_a[img * act_len..img * act_len + act_len],
+                                *in_ch,
+                                *in_h,
+                                *in_w,
+                                *ksize,
+                                *stride,
+                                *pad,
+                                &mut bt.cols[img * m * kk..(img + 1) * m * kk],
+                            );
+                            debug_assert_eq!((oh, ow), (*out_h, *out_w));
+                        }
+                        gemm_lut_bias(
+                            &bt.cols[..n * m * kk],
+                            &comp.w,
+                            &comp.b,
+                            lut,
+                            n * m,
+                            kk,
+                            comp.n_dim,
+                            &mut bt.acc,
+                        );
+                        requantize_slice(
+                            &bt.acc[..n * m * comp.n_dim],
+                            comp.m0,
+                            comp.nshift,
+                            comp.relu,
+                            &mut bt.rows_q[..n * m * comp.n_dim],
+                        );
+                        let out_len = comp.n_dim * m;
+                        for img in 0..n {
+                            rows_to_chw(
+                                &bt.rows_q[img * m * comp.n_dim..(img + 1) * m * comp.n_dim],
+                                comp.n_dim,
+                                *out_h,
+                                *out_w,
+                                &mut bt.act_b[img * out_len..(img + 1) * out_len],
+                            );
+                        }
+                        out_len
+                    }
+                };
+                std::mem::swap(&mut bt.act_a, &mut bt.act_b);
+                *shape = comp.act_shape.clone();
+                *ci += 1;
+                out_len
+            }
+        }
+    }
+
     /// Predict one image's class.
     pub fn predict(&self, image: &[i8], fault: Option<FaultSite>, buf: &mut Buffers) -> usize {
         argmax_i8(&self.forward(image, fault, buf))
@@ -744,15 +1323,40 @@ impl<'a> Engine<'a> {
         argmax_i8(&self.forward_perturbed(image, site, perturb, buf))
     }
 
-    /// Accuracy over a set of images.
+    /// Accuracy over a set of images. Runs the batched forward path in
+    /// chunks of one reused [`Batch`] (no per-image allocation); falls
+    /// back to the per-image `predict` loop under `DEEPAXE_NO_BATCH`.
+    /// Per-image predictions are bit-identical either way, so both paths
+    /// return the same value (asserted by
+    /// `accuracy_batched_equals_per_image_loop`).
     pub fn accuracy(&self, images: &crate::dataset::TestSet, buf: &mut Buffers) -> f64 {
-        let mut correct = 0usize;
-        for i in 0..images.len() {
-            if self.predict(images.image(i), None, buf) == images.labels[i] as usize {
-                correct += 1;
+        let n = images.len();
+        if n == 0 || !batch_enabled() {
+            let mut correct = 0usize;
+            for i in 0..n {
+                if self.predict(images.image(i), None, buf) == images.labels[i] as usize {
+                    correct += 1;
+                }
             }
+            return correct as f64 / n as f64;
         }
-        correct as f64 / images.len() as f64
+        let in_len = images.image_len();
+        let chunk = n.min(ACCURACY_CHUNK);
+        let mut bt = Batch::for_net(self.net, chunk);
+        let mut preds = Vec::with_capacity(chunk);
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let m = chunk.min(n - i);
+            self.predict_batch(&images.x.data[i * in_len..(i + m) * in_len], &mut bt, &mut preds);
+            for (j, &p) in preds.iter().enumerate() {
+                if p == images.labels[i + j] as usize {
+                    correct += 1;
+                }
+            }
+            i += m;
+        }
+        correct as f64 / n as f64
     }
 }
 
@@ -1182,6 +1786,175 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn test_images(net: &QNet, n: usize, salt: usize) -> Vec<i8> {
+        (0..n * net.input_len())
+            .map(|i| (((i * 13 + salt * 7) % 23) as i8) - 11)
+            .collect()
+    }
+
+    #[test]
+    fn batch_forward_bit_identical_to_per_image() {
+        // the batched walk (m=n dense GEMM, packed conv GEMM, per-image
+        // pools) must reproduce every per-image forward bit for bit, at
+        // every batch size including a partial fill of the Batch capacity
+        use crate::simnet::testutil::{tiny_conv, tiny_conv2, tiny_mlp};
+        for net in [tiny_mlp(), tiny_conv(), tiny_conv2()] {
+            let eng = Engine::uniform(&net, &EXACT);
+            let mut buf = Buffers::for_net(&net);
+            let in_len = net.input_len();
+            for n in [1usize, 3, 7] {
+                let images = test_images(&net, n, n);
+                let mut bt = Batch::for_net(&net, n + 2); // partial fill
+                let logits = eng.forward_batch(&images, &mut bt);
+                let mut preds = Vec::new();
+                eng.predict_batch(&images, &mut bt, &mut preds);
+                assert_eq!(preds.len(), n);
+                for img in 0..n {
+                    let want = eng.forward(&images[img * in_len..(img + 1) * in_len], None, &mut buf);
+                    let got = &logits[img * want.len()..(img + 1) * want.len()];
+                    assert_eq!(got, &want[..], "net={} n={n} img={img}", net.name);
+                    assert_eq!(preds[img], argmax_i8(&want));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_trace_bit_identical_to_per_image() {
+        use crate::simnet::testutil::tiny_conv2;
+        let net = tiny_conv2();
+        let kvp = crate::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let exact: &Lut = &EXACT;
+        let eng = Engine::new(&net, vec![exact, &kvp, exact]);
+        let mut buf = Buffers::for_net(&net);
+        let in_len = net.input_len();
+        let n = 5usize;
+        let images = test_images(&net, n, 3);
+        let mut bt = Batch::for_net(&net, n);
+        for retain in [true, false] {
+            let batched = eng.trace_batch_retaining(&images, retain, &mut bt);
+            assert_eq!(batched.len(), n);
+            for (img, got) in batched.iter().enumerate() {
+                let want =
+                    eng.trace_retaining(&images[img * in_len..(img + 1) * in_len], retain, &mut buf);
+                assert_eq!(got.acts, want.acts, "img={img} retain={retain}");
+                assert_eq!(got.accs, want.accs, "img={img} retain={retain}");
+                assert_eq!(got.logits, want.logits);
+                assert_eq!(got.pred, want.pred);
+            }
+        }
+    }
+
+    #[test]
+    fn replay_group_bit_identical_to_per_image_delta_replay() {
+        // one fault patched across all traces at once: every Replay
+        // (pred, depth, converged) and the servability verdict itself
+        // must match the per-image delta path — dense successor, pool
+        // route and conv successor alike
+        use crate::simnet::testutil::{tiny_conv, tiny_conv2, tiny_mlp};
+        let kvp = crate::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        for net in [tiny_mlp(), tiny_conv(), tiny_conv2()] {
+            let exact: &Lut = &EXACT;
+            let luts: Vec<&Lut> =
+                (0..net.n_comp()).map(|i| if i == 1 { &kvp } else { exact }).collect();
+            let eng = Engine::new(&net, luts);
+            let mut buf = Buffers::for_net(&net);
+            let in_len = net.input_len();
+            let n = 4usize;
+            let images = test_images(&net, n, 11);
+            let traces: Vec<CleanTrace> = (0..n)
+                .map(|i| eng.trace_retaining(&images[i * in_len..(i + 1) * in_len], true, &mut buf))
+                .collect();
+            let models = [Perturb::Flip, Perturb::Stuck(true), Perturb::Burst(0b110)];
+            let mut group = Vec::new();
+            for layer in 0..net.n_comp() {
+                for neuron in (0..net.comp(layer).act_len()).step_by(3) {
+                    for bit in [0u8, 4, 7] {
+                        for p in models {
+                            let site = FaultSite { layer, neuron, bit };
+                            for gate in [true, false] {
+                                let served =
+                                    eng.replay_group(site, p, &traces, gate, &mut buf, &mut group);
+                                for (ti, trace) in traces.iter().enumerate() {
+                                    let want = eng.replay_from_delta_perturbed(
+                                        site, p, trace, gate, &mut buf,
+                                    );
+                                    match want {
+                                        None => assert!(
+                                            !served,
+                                            "net={} l{layer} n{neuron}: servability must agree",
+                                            net.name
+                                        ),
+                                        Some(w) => {
+                                            assert!(served, "net={} l{layer} n{neuron}", net.name);
+                                            assert_eq!(
+                                                group[ti], w,
+                                                "net={} l{layer} n{neuron} b{bit} {p:?} gate={gate} img={ti}",
+                                                net.name
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replay_group_unservable_without_accs_and_on_last_layer() {
+        let net = tiny_mlp();
+        let eng = Engine::uniform(&net, &EXACT);
+        let mut buf = Buffers::for_net(&net);
+        let img = [4i8, -4, 8, 0];
+        let mut out = vec![Replay { pred: 9, depth: 9, converged: false }];
+        // no retained accumulators -> unservable, out untouched
+        let plain = vec![eng.trace(&img, &mut buf)];
+        let site = FaultSite { layer: 0, neuron: 0, bit: 7 };
+        assert!(!eng.replay_group(site, Perturb::Flip, &plain, true, &mut buf, &mut out));
+        assert_eq!(out.len(), 1, "unservable must leave out untouched");
+        // last computing layer -> unservable
+        let retained = vec![eng.trace_retaining(&img, true, &mut buf)];
+        let last = FaultSite { layer: net.n_comp() - 1, neuron: 0, bit: 1 };
+        assert!(!eng.replay_group(last, Perturb::Flip, &retained, true, &mut buf, &mut out));
+        // empty trace set is vacuously served
+        assert!(eng.replay_group(site, Perturb::Flip, &[], true, &mut buf, &mut out));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn accuracy_batched_equals_per_image_loop() {
+        // satellite regression test: Engine::accuracy (batched path) must
+        // return exactly the per-image predict loop's value
+        use crate::dataset::TestSet;
+        use crate::simnet::testutil::tiny_conv;
+        use crate::tensor::TensorI8;
+        let net = tiny_conv();
+        let kvp = crate::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let eng = Engine::uniform(&net, &kvp);
+        let mut buf = Buffers::for_net(&net);
+        // n deliberately not a multiple of the chunk size
+        let n = 67usize;
+        let in_len = net.input_len();
+        let data = test_images(&net, n, 5);
+        let labels: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+        let ts = TestSet {
+            name: "synthetic".into(),
+            x: TensorI8::from_vec(&[n, in_len], data),
+            labels,
+        };
+        let mut correct = 0usize;
+        for i in 0..n {
+            if eng.predict(ts.image(i), None, &mut buf) == ts.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let want = correct as f64 / n as f64;
+        assert_eq!(eng.accuracy(&ts, &mut buf), want);
     }
 
     #[test]

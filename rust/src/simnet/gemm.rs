@@ -6,54 +6,76 @@
 //! The inner loop walks `w[k]` and `out[m]` contiguously while the LUT row
 //! for `a[m][k]` (256 entries = 1 KiB) stays in L1 — see EXPERIMENTS.md
 //! §Perf for the optimization log.
+//!
+//! Batch-major callers (the images×features path, EXPERIMENTS.md §Perf
+//! P9) reuse these same entry points with `m` = images (dense) or
+//! images×pixels (conv): rows are independent, so an m=N GEMM is
+//! bit-identical to N m=1 GEMMs, and the m-stride blocking below keeps
+//! one 4-row weight tile hot across the whole image stride. The n-extent
+//! inner loops all dispatch through [`crate::simnet::simd`] — the single
+//! seam where the `simd` feature inserts vector bodies.
 
 use crate::axmul::Lut;
+use crate::simnet::simd;
+
+/// Rows per cache block: one 4-row weight tile (4·n i8) is revisited this
+/// many times before the k-loop advances, so batched calls amortize the
+/// tile load across the image stride while the per-row LUT rows (1 KiB
+/// each) still fit L1 alongside it.
+const M_STRIDE: usize = 8;
 
 /// The one accumulate core shared by [`gemm_lut`] and [`gemm_lut_bias`]
-/// (callers differ only in how `out` is initialized). 4-wide k-unroll:
-/// four independent LUT rows in flight per inner iteration, hiding gather
-/// latency behind the second load port, with a shared scalar tail — see
-/// EXPERIMENTS.md §Perf for the measured effect.
+/// (callers differ only in how `out` is initialized), and — with `m > 1`
+/// — the batched images×features path. Blocked over `M_STRIDE` rows; per
+/// block the k-loop runs 4-wide (four independent LUT rows in flight per
+/// inner call, hiding gather latency behind the second load port) with a
+/// shared scalar tail. The k-order per output row is unchanged from the
+/// unblocked core, so results are bit-identical — see EXPERIMENTS.md
+/// §Perf for the measured effect.
 #[inline(always)]
 fn gemm_lut_core(a: &[i8], w: &[i8], lut: &Lut, m: usize, k: usize, n: usize, out: &mut [i32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert!(out.len() >= m * n);
     let table = &lut.table[..];
-    for mi in 0..m {
-        let a_row = &a[mi * k..(mi + 1) * k];
-        let o_row = &mut out[mi * n..(mi + 1) * n];
+    let mut m0 = 0;
+    while m0 < m {
+        let m1 = (m0 + M_STRIDE).min(m);
         let mut ki = 0;
         while ki + 4 <= k {
-            let base0 = (a_row[ki] as u8 as usize) << 8;
-            let base1 = (a_row[ki + 1] as u8 as usize) << 8;
-            let base2 = (a_row[ki + 2] as u8 as usize) << 8;
-            let base3 = (a_row[ki + 3] as u8 as usize) << 8;
-            let lut_row0 = &table[base0..base0 + 256];
-            let lut_row1 = &table[base1..base1 + 256];
-            let lut_row2 = &table[base2..base2 + 256];
-            let lut_row3 = &table[base3..base3 + 256];
             let w_row0 = &w[ki * n..(ki + 1) * n];
             let w_row1 = &w[(ki + 1) * n..(ki + 2) * n];
             let w_row2 = &w[(ki + 2) * n..(ki + 3) * n];
             let w_row3 = &w[(ki + 3) * n..(ki + 4) * n];
-            for i in 0..n {
-                o_row[i] += lut_row0[w_row0[i] as u8 as usize]
-                    + lut_row1[w_row1[i] as u8 as usize]
-                    + lut_row2[w_row2[i] as u8 as usize]
-                    + lut_row3[w_row3[i] as u8 as usize];
+            for mi in m0..m1 {
+                let a_row = &a[mi * k..(mi + 1) * k];
+                let base0 = (a_row[ki] as u8 as usize) << 8;
+                let base1 = (a_row[ki + 1] as u8 as usize) << 8;
+                let base2 = (a_row[ki + 2] as u8 as usize) << 8;
+                let base3 = (a_row[ki + 3] as u8 as usize) << 8;
+                simd::accum4(
+                    &mut out[mi * n..(mi + 1) * n],
+                    &table[base0..base0 + 256],
+                    &table[base1..base1 + 256],
+                    &table[base2..base2 + 256],
+                    &table[base3..base3 + 256],
+                    w_row0,
+                    w_row1,
+                    w_row2,
+                    w_row3,
+                );
             }
             ki += 4;
         }
         while ki < k {
-            let base = (a_row[ki] as u8 as usize) << 8;
-            let lut_row = &table[base..base + 256];
             let w_row = &w[ki * n..(ki + 1) * n];
-            for (o, &wv) in o_row.iter_mut().zip(w_row) {
-                *o += lut_row[wv as u8 as usize];
+            for mi in m0..m1 {
+                let base = (a[mi * k + ki] as u8 as usize) << 8;
+                simd::accum1(&mut out[mi * n..(mi + 1) * n], &table[base..base + 256], w_row);
             }
             ki += 1;
         }
+        m0 = m1;
     }
 }
 
@@ -102,10 +124,34 @@ pub fn gemm_lut_delta(old: i8, new: i8, w_row: &[i8], lut: &Lut, acc: &mut [i32]
     let base_new = (new as u8 as usize) << 8;
     let row_old = &lut.table[base_old..base_old + 256];
     let row_new = &lut.table[base_new..base_new + 256];
-    for (a, &wv) in acc.iter_mut().zip(w_row) {
-        let wi = wv as u8 as usize;
-        *a = a.wrapping_add(row_new[wi].wrapping_sub(row_old[wi]));
+    simd::delta_apply_rows(acc, w_row, row_old, row_new);
+}
+
+/// The per-fault half of the batched delta patch: fill
+/// `diff[wv] = lut(new, wv) − lut(old, wv)` (wrapping) for all 256 weight
+/// bytes. A fault group computes this once per distinct `(old, new)` pair
+/// and then patches every image in the group via
+/// [`gemm_lut_delta_apply`] — the LUT row pair is read once per fault
+/// instead of once per image.
+pub fn gemm_lut_delta_diff(old: i8, new: i8, lut: &Lut, diff: &mut [i32]) {
+    debug_assert!(diff.len() >= 256);
+    let base_old = (old as u8 as usize) << 8;
+    let base_new = (new as u8 as usize) << 8;
+    let row_old = &lut.table[base_old..base_old + 256];
+    let row_new = &lut.table[base_new..base_new + 256];
+    for wv in 0..256 {
+        diff[wv] = row_new[wv].wrapping_sub(row_old[wv]);
     }
+}
+
+/// The per-image half of the batched delta patch:
+/// `acc[i] += diff[w_row[i]]` (wrapping) with `diff` from
+/// [`gemm_lut_delta_diff`]. Identical arithmetic to [`gemm_lut_delta`] —
+/// `diff` is exactly `row_new − row_old` — so the patched accumulator is
+/// bit-identical either way.
+pub fn gemm_lut_delta_apply(w_row: &[i8], diff: &[i32], acc: &mut [i32]) {
+    debug_assert_eq!(w_row.len(), acc.len());
+    simd::delta_apply(acc, w_row, diff);
 }
 
 #[cfg(test)]
@@ -219,6 +265,53 @@ mod tests {
             // patch only row mi of the clean accumulator
             gemm_lut_delta(old, new, &w[ki * n..(ki + 1) * n], lut, &mut clean[mi * n..(mi + 1) * n]);
             assert_eq!(clean, expect, "m={m} k={k} n={n} mi={mi} ki={ki}");
+        });
+    }
+
+    #[test]
+    fn property_diff_row_patch_equals_direct_delta() {
+        // the batched fault-group patch (diff row computed once, applied
+        // per image) must equal the per-image dual-row patch bit for bit
+        let luts: Vec<_> = ["exact", "mul8s_1kvp_s", "mul8s_1kv8_s"]
+            .iter()
+            .map(|n| axmul::by_name(n).unwrap().lut())
+            .collect();
+        check("diff-row patch == gemm_lut_delta", 0xD1FF, 40, |rng| {
+            let n = 1 + rng.usize_below(40);
+            let w = gen::i8_vec(rng, n);
+            let acc0: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32 >> 4).collect();
+            let (old, new) = (rng.i8(), rng.i8());
+            let lut = &luts[rng.usize_below(luts.len())];
+            let mut direct = acc0.clone();
+            gemm_lut_delta(old, new, &w, lut, &mut direct);
+            let mut diff = vec![0i32; 256];
+            gemm_lut_delta_diff(old, new, lut, &mut diff);
+            let mut batched = acc0;
+            gemm_lut_delta_apply(&w, &diff, &mut batched);
+            assert_eq!(batched, direct, "n={n} old={old} new={new}");
+        });
+    }
+
+    #[test]
+    fn property_batched_rows_equal_per_row_gemms() {
+        // rows are independent: an m=N GEMM is bit-identical to N m=1
+        // GEMMs — the identity the batched engine path stands on. Sweep m
+        // across the M_STRIDE cache-block boundary.
+        let lut = axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        check("m=N gemm == N m=1 gemms", 0xBA7C, 30, |rng| {
+            let m = 1 + rng.usize_below(2 * super::M_STRIDE + 3);
+            let k = 1 + rng.usize_below(13);
+            let n = 1 + rng.usize_below(10);
+            let a = gen::i8_vec(rng, m * k);
+            let w = gen::i8_vec(rng, k * n);
+            let b: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32 >> 8).collect();
+            let mut batched = vec![0i32; m * n];
+            gemm_lut_bias(&a, &w, &b, &lut, m, k, n, &mut batched);
+            for mi in 0..m {
+                let mut row = vec![0i32; n];
+                gemm_lut_bias(&a[mi * k..(mi + 1) * k], &w, &b, &lut, 1, k, n, &mut row);
+                assert_eq!(batched[mi * n..(mi + 1) * n], row, "m={m} k={k} n={n} mi={mi}");
+            }
         });
     }
 

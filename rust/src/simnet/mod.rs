@@ -14,9 +14,13 @@ pub mod engine;
 pub mod gemm;
 pub mod layers;
 pub mod loader;
+pub mod simd;
 
-pub use engine::{argmax_i8, Buffers, CleanTrace, Engine, FaultSite, Perturb, Replay};
+pub use engine::{
+    argmax_i8, batch_enabled, Batch, Buffers, CleanTrace, Engine, FaultSite, Perturb, Replay,
+};
 pub use loader::load_qnet;
+pub use simd::{set_simd, simd_enabled};
 
 /// Geometry + parameters of one computing layer (GEMM form).
 #[derive(Debug, Clone)]

@@ -1,0 +1,350 @@
+//! The single dispatch seam for the vectorized hot kernels.
+//!
+//! Three inner loops dominate the fault-campaign profile: the LUT gather
+//! inside `gemm_lut_core`, the rank-1 delta patch in `gemm_lut_delta`,
+//! and the convergence-gate activation compare in `replay_loop`. Each is
+//! exposed here as one free function with a scalar body that is always
+//! compiled, plus a portable-`std::simd` body behind the `simd` cargo
+//! feature (EXPERIMENTS.md §Perf P9). The SIMD body is bit-identical by
+//! construction — gathers read the same table entries and integer `+` on
+//! `Simd` lanes is two's-complement wrapping, the same arithmetic the
+//! scalar path performs — so the feature flag and the runtime switch are
+//! pure speed knobs.
+//!
+//! Runtime control mirrors the `DEEPAXE_NO_DELTA` convention:
+//! `DEEPAXE_NO_SIMD` disables the vector bodies even in a `--features
+//! simd` build, and [`set_simd`] flips the same switch programmatically
+//! (used by the A/B benches and the on/off property tests). Without the
+//! feature the switch is inert and every call lowers to the scalar body.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNSET: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Process-wide SIMD switch, lazily initialized from `DEEPAXE_NO_SIMD`.
+static STATE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// True when the `simd` feature is compiled in and the runtime switch is
+/// on (default: on unless `DEEPAXE_NO_SIMD` is set).
+#[inline]
+pub fn simd_enabled() -> bool {
+    if !cfg!(feature = "simd") {
+        return false;
+    }
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = !crate::util::cli::env_flag("DEEPAXE_NO_SIMD");
+            STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Flip the runtime SIMD switch; returns the previous setting. A no-op
+/// returning `false` when the `simd` feature is not compiled in. Both
+/// paths are bit-identical, so flipping mid-run is safe — the benches and
+/// the batch/SIMD property tests use this for in-process A/B.
+pub fn set_simd(on: bool) -> bool {
+    if !cfg!(feature = "simd") {
+        return false;
+    }
+    let prev = simd_enabled();
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+    prev
+}
+
+/// One k-step of the LUT-GEMM inner loop: `out[i] += lut_row[w_row[i]]`
+/// for the whole n-extent. `lut_row` is the 256-entry product row for a
+/// fixed activation value.
+#[inline(always)]
+pub fn accum1(out: &mut [i32], lut_row: &[i32], w_row: &[i8]) {
+    debug_assert!(lut_row.len() >= 256 && w_row.len() >= out.len());
+    #[cfg(feature = "simd")]
+    if simd_enabled() {
+        return v::accum1(out, lut_row, w_row);
+    }
+    for (o, &w) in out.iter_mut().zip(w_row) {
+        *o += lut_row[w as u8 as usize];
+    }
+}
+
+/// Four fused k-steps (the 4-wide unroll of `gemm_lut_core`): four LUT
+/// rows and four weight rows in flight per n-lane, hiding gather latency.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn accum4(
+    out: &mut [i32],
+    l0: &[i32],
+    l1: &[i32],
+    l2: &[i32],
+    l3: &[i32],
+    w0: &[i8],
+    w1: &[i8],
+    w2: &[i8],
+    w3: &[i8],
+) {
+    #[cfg(feature = "simd")]
+    if simd_enabled() {
+        return v::accum4(out, l0, l1, l2, l3, w0, w1, w2, w3);
+    }
+    for i in 0..out.len() {
+        out[i] += l0[w0[i] as u8 as usize]
+            + l1[w1[i] as u8 as usize]
+            + l2[w2[i] as u8 as usize]
+            + l3[w3[i] as u8 as usize];
+    }
+}
+
+/// Rank-1 delta patch against a precomputed difference row:
+/// `acc[i] += diff[w_row[i]]` (wrapping), where `diff[wv] =
+/// lut(new, wv) - lut(old, wv)`. The batched fault-group path builds
+/// `diff` once per distinct clean byte per fault and reuses it across
+/// every image in the group.
+#[inline(always)]
+pub fn delta_apply(acc: &mut [i32], w_row: &[i8], diff: &[i32]) {
+    debug_assert!(diff.len() >= 256 && w_row.len() >= acc.len());
+    #[cfg(feature = "simd")]
+    if simd_enabled() {
+        return v::delta_apply(acc, w_row, diff);
+    }
+    for (a, &w) in acc.iter_mut().zip(w_row) {
+        *a = a.wrapping_add(diff[w as u8 as usize]);
+    }
+}
+
+/// Rank-1 delta patch straight from the two LUT rows (the per-image
+/// `gemm_lut_delta` body): `acc[i] += new_row[w] - old_row[w]`
+/// (wrapping). Identical arithmetic to [`delta_apply`] with
+/// `diff = new_row - old_row`.
+#[inline(always)]
+pub fn delta_apply_rows(acc: &mut [i32], w_row: &[i8], row_old: &[i32], row_new: &[i32]) {
+    debug_assert!(row_old.len() >= 256 && row_new.len() >= 256);
+    #[cfg(feature = "simd")]
+    if simd_enabled() {
+        return v::delta_apply_rows(acc, w_row, row_old, row_new);
+    }
+    for (a, &w) in acc.iter_mut().zip(w_row) {
+        let wi = w as u8 as usize;
+        *a = a.wrapping_add(row_new[wi].wrapping_sub(row_old[wi]));
+    }
+}
+
+/// Convergence-gate compare: are the two activation slices identical?
+/// The hot exit of `replay_loop` — most faults are masked within a layer
+/// or two, so this compare runs once per replayed layer per fault.
+#[inline(always)]
+pub fn acts_equal(a: &[i8], b: &[i8]) -> bool {
+    #[cfg(feature = "simd")]
+    if simd_enabled() {
+        return v::acts_equal(a, b);
+    }
+    a == b
+}
+
+#[cfg(feature = "simd")]
+mod v {
+    use std::simd::prelude::*;
+
+    /// Gather width for the i32 accumulator lanes.
+    const LANES: usize = 8;
+    /// Compare width for the i8 activation lanes.
+    const CMP_LANES: usize = 32;
+
+    #[inline(always)]
+    fn gather(table_row: &[i32], w: &[i8], i: usize) -> Simd<i32, LANES> {
+        // i8 -> u8 -> usize zero-extends, matching `w as u8 as usize`.
+        let idx = Simd::<i8, LANES>::from_slice(&w[i..i + LANES])
+            .cast::<u8>()
+            .cast::<usize>();
+        Simd::gather_or_default(table_row, idx)
+    }
+
+    pub fn accum1(out: &mut [i32], lut_row: &[i32], w_row: &[i8]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = Simd::<i32, LANES>::from_slice(&out[i..i + LANES]);
+            (o + gather(lut_row, w_row, i)).copy_to_slice(&mut out[i..i + LANES]);
+            i += LANES;
+        }
+        while i < n {
+            out[i] = out[i].wrapping_add(lut_row[w_row[i] as u8 as usize]);
+            i += 1;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn accum4(
+        out: &mut [i32],
+        l0: &[i32],
+        l1: &[i32],
+        l2: &[i32],
+        l3: &[i32],
+        w0: &[i8],
+        w1: &[i8],
+        w2: &[i8],
+        w3: &[i8],
+    ) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = Simd::<i32, LANES>::from_slice(&out[i..i + LANES]);
+            let s = gather(l0, w0, i) + gather(l1, w1, i) + gather(l2, w2, i) + gather(l3, w3, i);
+            (o + s).copy_to_slice(&mut out[i..i + LANES]);
+            i += LANES;
+        }
+        while i < n {
+            out[i] = out[i]
+                .wrapping_add(l0[w0[i] as u8 as usize])
+                .wrapping_add(l1[w1[i] as u8 as usize])
+                .wrapping_add(l2[w2[i] as u8 as usize])
+                .wrapping_add(l3[w3[i] as u8 as usize]);
+            i += 1;
+        }
+    }
+
+    pub fn delta_apply(acc: &mut [i32], w_row: &[i8], diff: &[i32]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let a = Simd::<i32, LANES>::from_slice(&acc[i..i + LANES]);
+            (a + gather(diff, w_row, i)).copy_to_slice(&mut acc[i..i + LANES]);
+            i += LANES;
+        }
+        while i < n {
+            acc[i] = acc[i].wrapping_add(diff[w_row[i] as u8 as usize]);
+            i += 1;
+        }
+    }
+
+    pub fn delta_apply_rows(acc: &mut [i32], w_row: &[i8], row_old: &[i32], row_new: &[i32]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let a = Simd::<i32, LANES>::from_slice(&acc[i..i + LANES]);
+            let d = gather(row_new, w_row, i) - gather(row_old, w_row, i);
+            (a + d).copy_to_slice(&mut acc[i..i + LANES]);
+            i += LANES;
+        }
+        while i < n {
+            let wi = w_row[i] as u8 as usize;
+            acc[i] = acc[i].wrapping_add(row_new[wi].wrapping_sub(row_old[wi]));
+            i += 1;
+        }
+    }
+
+    pub fn acts_equal(a: &[i8], b: &[i8]) -> bool {
+        if a.len() != b.len() {
+            return false;
+        }
+        let n = a.len();
+        let mut i = 0;
+        while i + CMP_LANES <= n {
+            let va = Simd::<i8, CMP_LANES>::from_slice(&a[i..i + CMP_LANES]);
+            let vb = Simd::<i8, CMP_LANES>::from_slice(&b[i..i + CMP_LANES]);
+            if va.simd_ne(vb).any() {
+                return false;
+            }
+            i += CMP_LANES;
+        }
+        a[i..] == b[i..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn scalar_accum4_ref(
+        out: &mut [i32],
+        ls: [&[i32]; 4],
+        ws: [&[i8]; 4],
+    ) {
+        for i in 0..out.len() {
+            for j in 0..4 {
+                out[i] = out[i].wrapping_add(ls[j][ws[j][i] as u8 as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn set_simd_returns_previous_and_round_trips() {
+        let first = set_simd(true);
+        if cfg!(feature = "simd") {
+            assert!(set_simd(false));
+            assert!(!set_simd(true));
+            assert!(simd_enabled());
+        } else {
+            // Inert without the feature: always scalar, always false.
+            assert!(!first);
+            assert!(!simd_enabled());
+            assert!(!set_simd(false));
+        }
+        set_simd(first);
+    }
+
+    #[test]
+    fn kernels_match_scalar_reference_both_settings() {
+        let mut rng = Rng::new(0x51D0);
+        for &n in &[1usize, 7, 8, 9, 31, 32, 33, 100] {
+            let rows: Vec<Vec<i32>> = (0..6)
+                .map(|_| (0..256).map(|_| rng.i8() as i32 * 17).collect())
+                .collect();
+            let ws: Vec<Vec<i8>> = (0..4).map(|_| (0..n).map(|_| rng.i8()).collect()).collect();
+            let acc0: Vec<i32> = (0..n).map(|_| rng.i8() as i32 * 1000).collect();
+            let diff: Vec<i32> = (0..256).map(|i| rows[4][i].wrapping_sub(rows[5][i])).collect();
+
+            let mut want4 = acc0.clone();
+            scalar_accum4_ref(
+                &mut want4,
+                [&rows[0], &rows[1], &rows[2], &rows[3]],
+                [&ws[0], &ws[1], &ws[2], &ws[3]],
+            );
+            let want1: Vec<i32> = acc0
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| a.wrapping_add(rows[0][ws[0][i] as u8 as usize]))
+                .collect();
+            let want_d: Vec<i32> = acc0
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| a.wrapping_add(diff[ws[1][i] as u8 as usize]))
+                .collect();
+
+            for on in [false, true] {
+                let prev = set_simd(on);
+                let mut got = acc0.clone();
+                accum4(
+                    &mut got, &rows[0], &rows[1], &rows[2], &rows[3], &ws[0], &ws[1], &ws[2],
+                    &ws[3],
+                );
+                assert_eq!(got, want4, "accum4 n={n} simd={on}");
+
+                let mut got = acc0.clone();
+                accum1(&mut got, &rows[0], &ws[0]);
+                assert_eq!(got, want1, "accum1 n={n} simd={on}");
+
+                let mut got = acc0.clone();
+                delta_apply(&mut got, &ws[1], &diff);
+                assert_eq!(got, want_d, "delta_apply n={n} simd={on}");
+
+                let mut got = acc0.clone();
+                delta_apply_rows(&mut got, &ws[1], &rows[5], &rows[4]);
+                assert_eq!(got, want_d, "delta_apply_rows n={n} simd={on}");
+
+                let xs: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+                assert!(acts_equal(&xs, &xs.clone()), "acts_equal self n={n}");
+                let mut ys = xs.clone();
+                ys[n - 1] = ys[n - 1].wrapping_add(1);
+                assert!(!acts_equal(&xs, &ys), "acts_equal diff n={n}");
+                assert!(!acts_equal(&xs, &ys[..n - 1]), "acts_equal len n={n}");
+                set_simd(prev);
+            }
+        }
+    }
+}

@@ -19,7 +19,7 @@
 //! bit-identical dataset, across runs and threads.
 
 use crate::dataset::TestSet;
-use crate::simnet::{Buffers, Engine, QNet};
+use crate::simnet::{Batch, Buffers, Engine, QNet};
 use crate::tensor::TensorI8;
 use crate::util::rng::Rng;
 
@@ -56,13 +56,32 @@ pub fn synth_dataset(net: &QNet, n_images: usize, seed: u64) -> TestSet {
     }
 
     // teacher labels from the exact engine — base accuracy is 1.0 by
-    // construction, so every downstream drop measures real degradation
+    // construction, so every downstream drop measures real degradation.
+    // Labeled through the batch-major path (bit-identical to per-image
+    // prediction; DEEPAXE_NO_BATCH falls back to the scalar loop).
     let exact = crate::axmul::by_name("exact").expect("catalog").lut();
     let engine = Engine::uniform(net, &exact);
-    let mut buf = Buffers::for_net(net);
-    let labels: Vec<i32> = (0..n_images)
-        .map(|i| engine.predict(&data[i * image_len..(i + 1) * image_len], None, &mut buf) as i32)
-        .collect();
+    let labels: Vec<i32> = if crate::simnet::batch_enabled() && n_images > 0 {
+        let chunk = n_images.min(64);
+        let mut bt = Batch::for_net(net, chunk);
+        let mut preds = Vec::new();
+        let mut labels = Vec::with_capacity(n_images);
+        let mut i = 0;
+        while i < n_images {
+            let m = chunk.min(n_images - i);
+            engine.predict_batch(&data[i * image_len..(i + m) * image_len], &mut bt, &mut preds);
+            labels.extend(preds.iter().map(|&p| p as i32));
+            i += m;
+        }
+        labels
+    } else {
+        let mut buf = Buffers::for_net(net);
+        (0..n_images)
+            .map(|i| {
+                engine.predict(&data[i * image_len..(i + 1) * image_len], None, &mut buf) as i32
+            })
+            .collect()
+    };
 
     let mut dims = vec![n_images];
     dims.extend_from_slice(&net.input_shape);

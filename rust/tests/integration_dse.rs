@@ -23,6 +23,7 @@ fn evaluator_trends_mlp3() {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 500, fi);
     // exact config: no accuracy drop by definition
@@ -53,6 +54,7 @@ fn sweep_cache_roundtrip() {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 64, fi);
     let dir = std::env::temp_dir().join(format!("deepaxe_dse_{}", std::process::id()));
@@ -100,6 +102,7 @@ fn pareto_front_on_real_sweep() {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     };
     let ev = Evaluator::new(&net, &data, &ctx.luts, 100, fi);
     let pts: Vec<_> = enumerate_masks(3)
@@ -132,6 +135,7 @@ fn pipeline_selects_feasible_design() {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,
@@ -171,6 +175,7 @@ fn pipeline_infeasible_requirements() {
             replay: true,
             gate: true,
             delta: true,
+            batch: true,
         },
         strategy: deepaxe::search::Strategy::Exhaustive,
         budget: 0,

@@ -18,6 +18,7 @@ fn params(n_faults: usize, n_images: usize, replay: bool) -> CampaignParams {
         replay,
         gate: true,
         delta: true,
+        batch: true,
     }
 }
 
@@ -212,6 +213,80 @@ fn zoo_site_sampling_covers_deep_topologies() {
             }
             assert!(hit.iter().all(|&h| h), "1200 uniform-layer draws must hit all 12 layers");
         }
+    }
+}
+
+// ===========================================================================
+// zoo_batch_ — batch-major engine path parity (PR 7; artifact-free, runs
+// under the zoo_ filter in ci.sh)
+// ===========================================================================
+
+#[test]
+fn zoo_batch_forward_bit_identical_across_batch_sizes_and_simd() {
+    // satellite: batch forward == per-image forward, bit for bit, across
+    // generated nets, batch sizes {1, 7, 64, n}, and SIMD on/off (set_simd
+    // is a no-op returning the scalar path on toolchains without the
+    // `simd` feature, so both iterations are exercised either way)
+    use deepaxe::simnet::{set_simd, Batch, Buffers};
+    for (spec, seed) in [("zoo-tiny", 0xA5u64), ("zoo-tiny", 0x3C), ("mlp-deep-12", 7)] {
+        let net = deepaxe::zoo::build_net(spec, seed).unwrap();
+        let data = deepaxe::zoo::synth_dataset(&net, 19, seed);
+        let n = data.len();
+        let sz = data.image_len();
+        let lut = deepaxe::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+        let engine = Engine::uniform(&net, &lut);
+        let mut buf = Buffers::for_net(&net);
+        let reference: Vec<usize> =
+            (0..n).map(|i| engine.predict(data.image(i), None, &mut buf)).collect();
+        for simd in [false, true] {
+            let prev = set_simd(simd);
+            for bsz in [1usize, 7, 64, n] {
+                let cap = bsz.min(n);
+                let mut bt = Batch::for_net(&net, cap);
+                let mut preds = Vec::new();
+                let mut got = Vec::with_capacity(n);
+                let mut i = 0;
+                while i < n {
+                    let m = cap.min(n - i);
+                    engine.predict_batch(&data.x.data[i * sz..(i + m) * sz], &mut bt, &mut preds);
+                    got.extend_from_slice(&preds);
+                    i += m;
+                }
+                assert_eq!(got, reference, "{spec}/{seed:x} bsz={bsz} simd={simd}");
+            }
+            set_simd(prev);
+        }
+    }
+}
+
+#[test]
+fn zoo_batch_campaign_bit_identical_with_stats_and_simd() {
+    // satellite: fault-major group replay (batch on) == image-major
+    // campaign (batch off) == the same with SIMD toggled — per-fault
+    // accuracies AND the full ReplayStats AND the delta-serve counts
+    // (servability is image-independent, so fault-major groups serve
+    // exactly the faults the per-image delta path serves)
+    use deepaxe::simnet::set_simd;
+    let net = deepaxe::zoo::build_net("zoo-tiny", 0xBA).unwrap();
+    let data = deepaxe::zoo::synth_dataset(&net, 24, 0xBA);
+    let lut = deepaxe::axmul::by_name("mul8s_1kvp_s").unwrap().lut();
+    let engine = Engine::uniform(&net, &lut);
+    let p = params(32, 16, true);
+    let mut p_off = p.clone();
+    p_off.batch = false;
+    let reference = run_campaign(&engine, &data, &p_off);
+    for simd in [false, true] {
+        let prev = set_simd(simd);
+        let batched = run_campaign(&engine, &data, &p);
+        let scalar = run_campaign(&engine, &data, &p_off);
+        set_simd(prev);
+        for (label, r) in [("batch", &batched), ("scalar", &scalar)] {
+            assert_eq!(r.acc_per_fault, reference.acc_per_fault, "{label} simd={simd}");
+            assert_eq!(r.base_acc, reference.base_acc, "{label} simd={simd}");
+            assert_eq!(r.replay, reference.replay, "{label} simd={simd}: stats must not move");
+            assert_eq!(r.delta_replays, reference.delta_replays, "{label} simd={simd}");
+        }
+        assert!(batched.delta_replays > 0, "conv sites must take the group-delta path");
     }
 }
 

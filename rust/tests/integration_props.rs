@@ -74,6 +74,7 @@ fn campaign_clamps_oversized_subset() {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     };
     let r = deepaxe::faultsim::run_campaign(&engine, &data, &params);
     assert_eq!(r.n_images, data.len());

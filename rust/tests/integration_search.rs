@@ -26,6 +26,7 @@ fn fi_params(n_faults: usize, n_images: usize, seed: u64) -> CampaignParams {
         replay: true,
         gate: true,
         delta: true,
+        batch: true,
     }
 }
 

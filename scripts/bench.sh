@@ -19,7 +19,11 @@
 # per-fault-model faults/s ("model-bitflip" / "model-stuckat" /
 # "model-lutplane" / "model-multibit" config records) on a generated net,
 # so the zoo of fault models gets a perf trajectory alongside the
-# replay/delta/gate knobs.
+# replay/delta/gate knobs. PR 7 adds `batch_speedup_vs_scalar` (batched
+# LUT-GEMM forward + fault-major group replay vs the per-image scalar
+# loops) and `simd_speedup_vs_scalar` (portable-SIMD kernels on vs off;
+# ~1.0 when the `simd` cargo feature is not compiled in) to both
+# bench_hotpath and bench_faultsim.
 #
 # Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
 # "records":[...one object per emitted line...]}. The per-record fields

@@ -36,6 +36,18 @@ echo "== tier-1: cargo test -q =="
 # tests run regardless.
 cargo test -q
 
+echo "== tier-1: --features simd build + test (skipped without std::simd) =="
+# The `simd` feature turns on portable-SIMD kernels (nightly
+# `portable_simd`); the scalar path is always compiled and bit-identical,
+# so a toolchain without std::simd just skips this stage. The probe is a
+# real (cached) build, not a version sniff — whatever toolchain is
+# installed decides.
+if cargo build --release --features simd >/dev/null 2>&1; then
+    cargo test -q --features simd
+else
+    echo "ci.sh: toolchain lacks std::simd (portable_simd); skipping the simd stage." >&2
+fi
+
 echo "== tier-1: cargo bench --no-run =="
 # Benches are harness-less binaries that only run with artifacts present;
 # compiling them here keeps bench_faultsim & friends from silently rotting.
