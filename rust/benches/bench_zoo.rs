@@ -10,7 +10,9 @@ use bench_common::emit;
 use deepaxe::dse::Evaluator;
 use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
 use deepaxe::faultsim::{CampaignParams, SiteSampling};
-use deepaxe::search::{hypervolume3, run_search, NoCache, SearchSpace, SearchSpec, Strategy};
+use deepaxe::search::{
+    hypervolume3, run_search, run_search_journaled, NoCache, SearchSpace, SearchSpec, Strategy,
+};
 use deepaxe::util::bench::black_box;
 use deepaxe::util::cli::env_usize;
 use std::time::Instant;
@@ -58,12 +60,12 @@ fn main() {
         &bundle.net,
         &deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
     );
-    let spec_fid = FidelitySpec {
+    let mk_fid = || FidelitySpec {
         epsilon_pp: 0.5,
         screen_faults: (fi.n_faults / 5).max(4),
         ..FidelitySpec::exact()
     };
-    let staged = StagedEvaluator::new(&ev, spec_fid);
+    let staged = StagedEvaluator::new(&ev, mk_fid());
     let mut spec = SearchSpec::new(Strategy::Nsga2);
     spec.budget = 24;
     spec.seed = fi.seed;
@@ -91,4 +93,30 @@ fn main() {
         "prefix_hits",
         staged.ledger().prefix_hits() as f64,
     );
+
+    // -- journal overhead: the same search under a write-ahead run journal
+    //    committing every generation (the crash-safe default). The delta
+    //    against the plain run above is the full cost of checkpointing.
+    let jdir =
+        std::env::temp_dir().join(format!("deepaxe_bench_journal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jdir);
+    let staged_j = StagedEvaluator::new(&ev, mk_fid());
+    let mut journal = deepaxe::recovery::JournalWriter::create(&jdir, "bench-zoo-journal", 1);
+    journal.set_provider(&staged_j);
+    let t0 = Instant::now();
+    let out_j = run_search_journaled(
+        &space,
+        &spec,
+        &StagedBackend { st: &staged_j },
+        &mut NoCache,
+        &mut journal,
+    );
+    let dt_j = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(out_j.genotypes, out.genotypes, "journaling must not perturb the search");
+    let overhead_pct = (dt_j - dt) / dt * 100.0;
+    println!(
+        "bench zoo:journal mlp-deep-16 journaled {dt_j:6.2}s vs plain {dt:6.2}s = {overhead_pct:+6.1}% checkpoint overhead"
+    );
+    emit("bench_zoo_search", "mlp-deep-16", "checkpoint_overhead_pct", overhead_pct);
+    let _ = std::fs::remove_dir_all(&jdir);
 }

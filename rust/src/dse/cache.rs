@@ -8,7 +8,8 @@ use crate::eval::Fidelity;
 use crate::faultsim::FaultModelKind;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
-use std::io::Write;
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 /// Evaluation-parameter fingerprint: results are only reusable when the
@@ -153,40 +154,95 @@ impl CacheKey {
     }
 }
 
+/// What `ResultCache::open` found on disk: total non-empty lines, how many
+/// loaded cleanly, and how many were quarantined (torn by a crash mid-append,
+/// or otherwise unparseable). Quarantined lines are skipped — never aborted
+/// on — so a cache file damaged by `kill -9` still serves every record that
+/// made it to disk intact. `repro cache verify` prints this; `repro cache
+/// compact` rewrites the file so the next report is clean.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// non-empty lines seen in the file
+    pub lines: usize,
+    /// lines that parsed into a (key, point) record
+    pub loaded: usize,
+    /// torn / malformed lines skipped
+    pub quarantined: usize,
+}
+
+impl RecoveryReport {
+    pub fn is_clean(&self) -> bool {
+        self.quarantined == 0
+    }
+}
+
+/// Recover the stored fidelity name from a string key (used when compacting:
+/// the original `CacheKey` is gone, but the suffix encodes the tier).
+fn fidelity_from_string_key(key: &str) -> &'static str {
+    // strip an optional fault-model tag, then read the fidelity suffix
+    let base = match key.rfind("|fm:") {
+        Some(i) => &key[..i],
+        None => key,
+    };
+    if base.ends_with("|fid:screen") {
+        "screen"
+    } else if base.ends_with("|fid:hw") {
+        "hw"
+    } else if base.ends_with("|0") {
+        "acc"
+    } else {
+        "full"
+    }
+}
+
 pub struct ResultCache {
     path: PathBuf,
     map: BTreeMap<String, DesignPoint>,
+    /// held line-buffered appender; opened lazily on first `put`
+    writer: Option<BufWriter<File>>,
+    /// flush after every append (the pre-journal behavior, and the default);
+    /// journaled searches turn this off and flush at checkpoints instead
+    autoflush: bool,
+    report: RecoveryReport,
 }
 
 impl ResultCache {
     /// Load (or start) the cache at `path`. Unparseable lines are skipped
-    /// with a warning rather than failing the run.
+    /// with a warning rather than failing the run; the tally is kept in
+    /// [`ResultCache::recovery_report`].
     pub fn open(path: impl AsRef<Path>) -> ResultCache {
         let path = path.as_ref().to_path_buf();
         let mut map = BTreeMap::new();
+        let mut report = RecoveryReport::default();
         if let Ok(text) = std::fs::read_to_string(&path) {
             for (ln, line) in text.lines().enumerate() {
                 if line.trim().is_empty() {
                     continue;
                 }
+                report.lines += 1;
                 match Json::parse(line) {
                     Ok(j) => {
                         let key = j.get("key").and_then(|k| k.as_str()).map(str::to_string);
                         let point = j.get("point").and_then(DesignPoint::from_json);
                         match (key, point) {
                             (Some(k), Some(p)) => {
+                                report.loaded += 1;
                                 map.insert(k, p);
                             }
-                            _ => eprintln!("cache {}: line {} malformed, skipped", path.display(), ln + 1),
+                            _ => {
+                                report.quarantined += 1;
+                                eprintln!("cache {}: line {} malformed, skipped", path.display(), ln + 1)
+                            }
                         }
                     }
                     Err(e) => {
+                        report.quarantined += 1;
                         eprintln!("cache {}: line {} unparseable ({e}), skipped", path.display(), ln + 1)
                     }
                 }
             }
         }
-        ResultCache { path, map }
+        ResultCache { path, map, writer: None, autoflush: true, report }
     }
 
     pub fn len(&self) -> usize {
@@ -195,6 +251,18 @@ impl ResultCache {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// What `open` found on disk (torn-line quarantine tally).
+    pub fn recovery_report(&self) -> &RecoveryReport {
+        &self.report
+    }
+
+    /// When off, appends stay in the held writer's buffer until
+    /// [`ResultCache::flush`] — journaled searches flush at checkpoint
+    /// boundaries so the on-disk cache never runs ahead of the journal.
+    pub fn set_autoflush(&mut self, on: bool) {
+        self.autoflush = on;
     }
 
     pub fn get(&self, key: &CacheKey) -> Option<&DesignPoint> {
@@ -219,13 +287,75 @@ impl ResultCache {
             ("fidelity", json::str(key.fidelity.name())),
             ("point", point.to_json()),
         ]);
+        if self.writer.is_none() {
+            if let Some(parent) = self.path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+            self.writer = Some(BufWriter::new(f));
+        }
+        let w = self.writer.as_mut().unwrap();
+        writeln!(w, "{record}")?;
+        if self.autoflush {
+            w.flush()?;
+        }
+        self.map.insert(key.to_string_key(), point);
+        Ok(())
+    }
+
+    /// Flush buffered appends to disk (fsync included) and return the
+    /// durable byte length of the backing file. The journal records that
+    /// length at each checkpoint so a resumed run can roll the cache back
+    /// to exactly the bytes the checkpoint saw.
+    pub fn flush(&mut self) -> u64 {
+        if let Some(w) = self.writer.as_mut() {
+            let _ = w.flush();
+            let _ = w.get_ref().sync_all();
+        }
+        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Truncate the backing file to `bytes` (a length previously returned
+    /// by [`ResultCache::flush`]) and reload. Used on `--resume`: appends
+    /// made after the checkpoint being resumed from are discarded so replay
+    /// re-derives them deterministically instead of double-counting.
+    pub fn rollback_to(&mut self, bytes: u64) -> std::io::Result<()> {
+        self.writer = None; // drop (and flush) the appender before truncating
+        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&self.path) {
+            if f.metadata()?.len() > bytes {
+                f.set_len(bytes)?;
+                f.sync_all()?;
+            }
+        }
+        let autoflush = self.autoflush;
+        *self = ResultCache::open(&self.path);
+        self.autoflush = autoflush;
+        Ok(())
+    }
+
+    /// Rewrite the backing file as a clean, deduplicated segment: one line
+    /// per surviving record, in key order, written atomically (temp file +
+    /// rename + dir fsync) so a crash mid-compact leaves the old file
+    /// intact. Quarantined lines are dropped for good; returns the number
+    /// of records written.
+    pub fn compact(&mut self) -> std::io::Result<usize> {
+        self.writer = None; // the appender's fd goes stale across the rename
+        let mut out = String::new();
+        for (k, p) in &self.map {
+            let record = json::obj(vec![
+                ("key", json::str(k)),
+                ("fidelity", json::str(fidelity_from_string_key(k))),
+                ("point", p.to_json()),
+            ]);
+            out.push_str(&record.to_string());
+            out.push('\n');
+        }
         if let Some(parent) = self.path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
-        writeln!(f, "{record}")?;
-        self.map.insert(key.to_string_key(), point);
-        Ok(())
+        crate::recovery::atomic_write(&self.path, &out)?;
+        self.report = RecoveryReport { lines: self.map.len(), loaded: self.map.len(), quarantined: 0 };
+        Ok(self.map.len())
     }
 }
 
@@ -492,5 +622,142 @@ mod tests {
         let c = ResultCache::open(&p);
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(&key("m", 1)).unwrap().ax_acc, 0.42);
+    }
+
+    #[test]
+    fn recovery_report_counts_quarantined_lines() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache7_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let good = |mask| {
+            format!(
+                "{{\"key\": \"{}\", \"point\": {}}}",
+                key("mlp3", mask).to_string_key(),
+                point("mlp3", mask).to_json()
+            )
+        };
+        std::fs::write(&p, format!("{}\n{{\"key\": \"torn\n{}\n", good(1), good(2))).unwrap();
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 2);
+        let r = c.recovery_report();
+        assert_eq!((r.lines, r.loaded, r.quarantined), (3, 2, 1));
+        assert!(!r.is_clean());
+    }
+
+    /// Satellite (c): a crash can truncate the file at ANY byte of the
+    /// final append. Whatever the cut point, load must succeed, quarantine
+    /// at most the torn line, serve every complete record — and a compact
+    /// pass must round-trip the survivors into a clean segment.
+    #[test]
+    fn property_truncation_at_every_offset_is_recoverable() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache8_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut c = ResultCache::open(&p);
+            for mask in 1..=3 {
+                c.put(&key("mlp3", mask), point("mlp3", mask)).unwrap();
+            }
+        }
+        let full = std::fs::read(&p).unwrap();
+        // byte length of the first two complete records (incl. newline)
+        let text = String::from_utf8(full.clone()).unwrap();
+        let mut nl = text.match_indices('\n');
+        let keep = nl.nth(1).unwrap().0 + 1;
+        // stop before full.len() - 1: cutting only the trailing newline
+        // leaves the third record complete, not torn
+        for cut in keep..full.len() - 1 {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let mut c = ResultCache::open(&p);
+            let r = c.recovery_report().clone();
+            assert_eq!(r.loaded, 2, "cut at byte {cut}: both intact records load");
+            assert!(r.quarantined <= 1, "cut at byte {cut}: at most the torn line quarantined");
+            assert_eq!(c.get(&key("mlp3", 1)).unwrap().mask, 1);
+            assert_eq!(c.get(&key("mlp3", 2)).unwrap().mask, 2);
+            assert!(c.get(&key("mlp3", 3)).is_none(), "cut at byte {cut}: torn record must not load");
+            // compact → clean segment, survivors intact
+            assert_eq!(c.compact().unwrap(), 2);
+            assert!(!p.with_extension("tmp").exists());
+            let c2 = ResultCache::open(&p);
+            assert!(c2.recovery_report().is_clean(), "cut at byte {cut}: compacted file is clean");
+            assert_eq!(c2.len(), 2);
+            assert_eq!(c2.get(&key("mlp3", 2)).unwrap().mask, 2);
+        }
+    }
+
+    #[test]
+    fn compact_preserves_fidelity_and_fault_model_tags() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache9_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let mut c = ResultCache::open(&p);
+        let mut screen = key("mlp3", 1);
+        screen.fidelity = Fidelity::FiScreen;
+        let tagged = key("mlp3", 2).with_fault_model(FaultModelKind::StuckAt);
+        c.put(&screen, point("mlp3", 1)).unwrap();
+        c.put(&tagged, point("mlp3", 2)).unwrap();
+        c.put(&key("mlp3", 3), point("mlp3", 3)).unwrap();
+        c.compact().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            let k = j.get("key").and_then(|k| k.as_str()).unwrap().to_string();
+            let fid = j.get("fidelity").and_then(|f| f.as_str()).unwrap().to_string();
+            assert_eq!(fid, fidelity_from_string_key(&k), "compacted fidelity field matches key");
+        }
+        let c = ResultCache::open(&p);
+        assert_eq!(c.get(&screen).unwrap().mask, 1);
+        assert_eq!(c.get(&tagged).unwrap().mask, 2);
+        assert_eq!(c.get(&key("mlp3", 3)).unwrap().mask, 3);
+    }
+
+    #[test]
+    fn flush_reports_bytes_and_rollback_truncates() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache10_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let mut c = ResultCache::open(&p);
+        c.put(&key("m", 1), point("m", 1)).unwrap();
+        c.put(&key("m", 2), point("m", 2)).unwrap();
+        let checkpoint_bytes = c.flush();
+        assert_eq!(checkpoint_bytes, std::fs::metadata(&p).unwrap().len());
+        c.put(&key("m", 4), point("m", 4)).unwrap();
+        assert!(c.flush() > checkpoint_bytes);
+        // resume path: discard the post-checkpoint append
+        c.rollback_to(checkpoint_bytes).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key("m", 4)).is_none());
+        assert!(c.recovery_report().is_clean(), "rollback lands on a line boundary");
+        // appends still work after a rollback
+        c.put(&key("m", 8), point("m", 8)).unwrap();
+        drop(c);
+        let c = ResultCache::open(&p);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(&key("m", 8)).unwrap().mask, 8);
+    }
+
+    #[test]
+    fn buffered_appends_become_durable_on_flush() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache11_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let mut c = ResultCache::open(&p);
+        c.set_autoflush(false);
+        c.put(&key("m", 1), point("m", 1)).unwrap();
+        // a small record sits in the BufWriter until flushed
+        let on_disk = ResultCache::open(&p);
+        assert_eq!(on_disk.len(), 0, "unflushed append must not be visible on disk");
+        c.flush();
+        let on_disk = ResultCache::open(&p);
+        assert_eq!(on_disk.len(), 1, "flush makes the append durable");
+        // dropping the cache also drains the buffer (BufWriter flush-on-drop)
+        c.put(&key("m", 2), point("m", 2)).unwrap();
+        drop(c);
+        let on_disk = ResultCache::open(&p);
+        assert_eq!(on_disk.len(), 2);
     }
 }

@@ -53,7 +53,7 @@
 
 pub mod staged;
 
-pub use staged::{FiLedger, StagedBackend, StagedEvaluator};
+pub use staged::{FiLedger, LedgerSnapshot, StagedBackend, StagedEvaluator};
 
 use crate::util::cli::{env_f64, env_usize};
 
@@ -142,6 +142,15 @@ pub struct FidelitySpec {
     /// decisions a fresh one would — only how much work promotions
     /// repeat.
     pub trace_cache_mb: usize,
+    /// per-evaluation wall-clock deadline in seconds (CLI
+    /// `--eval-deadline-s`, env `DEEPAXE_EVAL_DEADLINE_S`; `0` = no
+    /// deadline). An over-deadline campaign is parked at its current
+    /// `block` boundary and scored at the streaming-CI estimate — a
+    /// *degraded* point (`fi_faults` short of the configured count) that
+    /// is never persisted to the result cache, mirroring the screen-tier
+    /// rule. A later evaluation of the same assignment resumes the parked
+    /// prefix, so every call makes at least one block of progress.
+    pub eval_deadline_s: f64,
 }
 
 impl FidelitySpec {
@@ -156,6 +165,7 @@ impl FidelitySpec {
             block: 32,
             min_faults: 16,
             trace_cache_mb: 256,
+            eval_deadline_s: 0.0,
         }
     }
 
@@ -177,6 +187,7 @@ impl FidelitySpec {
             screen_faults,
             screen_auto,
             trace_cache_mb: env_usize("DEEPAXE_TRACE_CACHE_MB", 256),
+            eval_deadline_s: env_f64("DEEPAXE_EVAL_DEADLINE_S", 0.0),
             ..FidelitySpec::exact()
         }
     }

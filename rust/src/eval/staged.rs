@@ -15,10 +15,12 @@ use crate::faultsim::{
     HardenLevel, LutFault, ReplayStats, TracePrefix,
 };
 use crate::simnet::{CleanTrace, Engine, FaultSite, Perturb};
+use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Why a campaign stopped before exhausting its site list.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,6 +29,9 @@ enum StopKind {
     Ci,
     /// Pareto-dominated at the optimistic CI boundary
     Gate,
+    /// wall-clock deadline expired ([`FidelitySpec::eval_deadline_s`]);
+    /// the campaign is parked and its point scored degraded
+    Deadline,
 }
 
 /// Fault-unit accounting across one evaluator's lifetime: how many faults
@@ -46,6 +51,9 @@ pub struct FiLedger {
     pilot_faults: AtomicU64,
     ci_stops: AtomicU64,
     gate_stops: AtomicU64,
+    /// campaigns parked by the per-evaluation wall-clock deadline
+    /// (degraded-estimate stops; see [`FidelitySpec::eval_deadline_s`])
+    deadline_stops: AtomicU64,
     /// clean-trace computations (one per `Campaign::new`)
     trace_builds: AtomicU64,
     /// campaigns resumed from a cached screen prefix
@@ -95,6 +103,9 @@ impl FiLedger {
             }
             Some(StopKind::Gate) => {
                 self.gate_stops.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(StopKind::Deadline) => {
+                self.deadline_stops.fetch_add(1, Ordering::Relaxed);
             }
             None => {}
         }
@@ -170,7 +181,14 @@ impl FiLedger {
         self.gate_stops.load(Ordering::Relaxed)
     }
 
-    /// Campaigns stopped before exhausting their site list, either way.
+    /// Campaigns parked by the wall-clock deadline (degraded estimates).
+    pub fn deadline_stops(&self) -> u64 {
+        self.deadline_stops.load(Ordering::Relaxed)
+    }
+
+    /// Campaigns stopped before exhausting their site list by a
+    /// *deterministic* gate (CI or dominance); deadline parks are counted
+    /// separately — they depend on wall clock, not on the data.
     pub fn early_stops(&self) -> u64 {
         self.ci_stops() + self.gate_stops()
     }
@@ -283,8 +301,15 @@ impl FiLedger {
         } else {
             format!("; per-model faults: {}", per_model.join(", "))
         };
+        // appended only when a deadline actually fired, so deadline-free
+        // runs keep the historical summary format byte-for-byte
+        let deadline = if self.deadline_stops() > 0 {
+            format!("; {} deadline parks (degraded estimates)", self.deadline_stops())
+        } else {
+            String::new()
+        };
         format!(
-            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built ({} prefix_hits, {} prefix_layers_reused), {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}, {:.1}% delta-patched{per_model}",
+            "FI ledger: {} screen + {} full campaigns, {} faults (= {:.1} full-campaign equivalents), {} early stops; {} traces built ({} prefix_hits, {} prefix_layers_reused), {} promotions resumed ({} prefix faults saved); {:.1}% masked @ mean replay depth {:.2}, {:.1}% delta-patched{per_model}{deadline}",
             self.screen_campaigns(),
             self.full_campaigns(),
             self.total_faults(),
@@ -299,6 +324,118 @@ impl FiLedger {
             self.mean_replay_depth(),
             delta_pct,
         )
+    }
+
+    /// Counter names in canonical snapshot order. `snapshot`/`restore`
+    /// and the JSON round-trip all walk this list, so adding a counter
+    /// here is the single change needed to journal it.
+    const COUNTERS: [&'static str; 21] = [
+        "screen_campaigns",
+        "screen_faults",
+        "full_campaigns",
+        "full_faults",
+        "pilot_faults",
+        "ci_stops",
+        "gate_stops",
+        "deadline_stops",
+        "trace_builds",
+        "resumed_campaigns",
+        "resumed_faults",
+        "prefix_hits",
+        "prefix_layers_reused",
+        "delta_replays",
+        "replay_inferences",
+        "masked_inferences",
+        "replayed_layers",
+        "bitflip_faults",
+        "stuckat_faults",
+        "lutplane_faults",
+        "multibit_faults",
+    ];
+
+    fn counter(&self, name: &str) -> &AtomicU64 {
+        match name {
+            "screen_campaigns" => &self.screen_campaigns,
+            "screen_faults" => &self.screen_faults,
+            "full_campaigns" => &self.full_campaigns,
+            "full_faults" => &self.full_faults,
+            "pilot_faults" => &self.pilot_faults,
+            "ci_stops" => &self.ci_stops,
+            "gate_stops" => &self.gate_stops,
+            "deadline_stops" => &self.deadline_stops,
+            "trace_builds" => &self.trace_builds,
+            "resumed_campaigns" => &self.resumed_campaigns,
+            "resumed_faults" => &self.resumed_faults,
+            "prefix_hits" => &self.prefix_hits,
+            "prefix_layers_reused" => &self.prefix_layers_reused,
+            "delta_replays" => &self.delta_replays,
+            "replay_inferences" => &self.replay_inferences,
+            "masked_inferences" => &self.masked_inferences,
+            "replayed_layers" => &self.replayed_layers,
+            "bitflip_faults" => &self.bitflip_faults,
+            "stuckat_faults" => &self.stuckat_faults,
+            "lutplane_faults" => &self.lutplane_faults,
+            "multibit_faults" => &self.multibit_faults,
+            other => unreachable!("unknown ledger counter {other:?}"),
+        }
+    }
+
+    /// Owned copy of every counter plus the replay-depth histogram —
+    /// what the run journal checkpoints at each boundary.
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        LedgerSnapshot {
+            counters: FiLedger::COUNTERS
+                .iter()
+                .map(|n| (n.to_string(), self.counter(n).load(Ordering::Relaxed)))
+                .collect(),
+            depth_hist: self.depth_hist(),
+        }
+    }
+
+    /// Overwrite this ledger with a snapshot's counters verbatim (the
+    /// `--resume` path: the restored ledger then accumulates the replayed
+    /// run's deltas exactly as the original run would have).
+    pub fn restore(&self, snap: &LedgerSnapshot) {
+        for (name, value) in &snap.counters {
+            self.counter(name).store(*value, Ordering::Relaxed);
+        }
+        *self.depth_hist.lock().unwrap() = snap.depth_hist.clone();
+    }
+}
+
+/// Owned, serializable copy of a [`FiLedger`]'s state. Counters ride as
+/// JSON numbers (all ≪ 2^53) under their canonical names, the histogram
+/// as an array — so a journal written today reads back under a future
+/// counter set (missing counters default to 0, unknown ones are ignored).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LedgerSnapshot {
+    counters: Vec<(String, u64)>,
+    depth_hist: Vec<u64>,
+}
+
+impl LedgerSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            self.counters.iter().map(|(n, v)| (n.as_str(), json::num(*v as f64))).collect();
+        pairs.push((
+            "depth_hist",
+            Json::Arr(self.depth_hist.iter().map(|&n| json::num(n as f64)).collect()),
+        ));
+        json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Option<LedgerSnapshot> {
+        j.as_obj()?;
+        let counters = FiLedger::COUNTERS
+            .iter()
+            .map(|n| (n.to_string(), j.get(n).and_then(Json::as_f64).unwrap_or(0.0) as u64))
+            .collect();
+        let depth_hist = j
+            .get("depth_hist")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).map(|f| f as u64).collect())
+            .unwrap_or_default();
+        Some(LedgerSnapshot { counters, depth_hist })
     }
 }
 
@@ -402,6 +539,23 @@ impl TraceCache {
 
     fn len(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Every parked campaign as `(assignment key, evaluated per-fault
+    /// accuracy prefix)`, least-recently-used first — what the run
+    /// journal checkpoints. Re-parking the entries in this order through
+    /// [`TraceCache::insert`] reproduces the LRU ordering, and replaying
+    /// each accuracy prefix through a fresh campaign
+    /// ([`Campaign::fast_forward`]) reproduces the parked state
+    /// bit-for-bit (per-fault accuracies are prefix-pure).
+    fn export(&self) -> Vec<(Vec<String>, Vec<f64>)> {
+        let mut v: Vec<(u64, Vec<String>, Vec<f64>)> = self
+            .entries
+            .iter()
+            .map(|(k, (tick, _, c))| (*tick, k.clone(), c.acc_prefix().to_vec()))
+            .collect();
+        v.sort_by_key(|e| e.0);
+        v.into_iter().map(|(_, k, a)| (k, a)).collect()
     }
 }
 
@@ -699,6 +853,11 @@ impl<'a> StagedEvaluator<'a> {
         let stats_at_entry = campaign.replay_stats().clone();
         let deltas_at_entry = campaign.delta_replays();
         let block = self.spec.block.max(1);
+        // wall-clock deadline: armed per evaluation, checked at the same
+        // absolute block boundaries as the CI/gate stops — but
+        // independently of `early_stop`, so `--fi-epsilon 0` runs can
+        // still bound a pathological campaign
+        let deadline = (self.spec.eval_deadline_s > 0.0).then(Instant::now);
         // epsilon 0 is the bit-for-bit switch: it disables *all* early
         // stopping, the dominance gate included — campaigns always run
         // their whole site list, exactly like the pre-ladder path
@@ -731,6 +890,19 @@ impl<'a> StagedEvaluator<'a> {
             if campaign.evaluated() >= target {
                 break;
             }
+            // deadline last: deterministic stops (CI/gate/target) win at
+            // a shared boundary, and the `> resumed_at` guard guarantees
+            // at least one block of forward progress per call even when
+            // the deadline is already expired on entry
+            if let Some(start) = deadline {
+                if campaign.evaluated() > resumed_at
+                    && campaign.evaluated() % block == 0
+                    && start.elapsed().as_secs_f64() >= self.spec.eval_deadline_s
+                {
+                    stopped = Some(StopKind::Deadline);
+                    break;
+                }
+            }
             let step = (block - campaign.evaluated() % block).min(target - campaign.evaluated());
             campaign.advance(&engine, step);
         }
@@ -757,8 +929,12 @@ impl<'a> StagedEvaluator<'a> {
         };
         let est = FiEstimate::from_campaign(&result);
         // a screen-tier prefix is live state worth keeping: promotion of
-        // this genotype will resume it instead of starting over
-        if fidelity == Fidelity::FiScreen && !campaign.is_done() {
+        // this genotype will resume it instead of starting over. A
+        // deadline-parked campaign is kept for the same reason — the next
+        // evaluation of this assignment resumes where the clock ran out
+        if (fidelity == Fidelity::FiScreen || stopped == Some(StopKind::Deadline))
+            && !campaign.is_done()
+        {
             self.trace_cache.lock().unwrap().insert(key, campaign);
         }
         self.finish(&mult_names, &levels, hardened, ax_acc, Some(&est))
@@ -784,6 +960,87 @@ impl<'a> StagedEvaluator<'a> {
             p.power_mw = hw.power_mw;
         }
         p
+    }
+}
+
+/// What the run journal checkpoints of a [`StagedEvaluator`]: the full
+/// [`FiLedger`], the resolved adaptive screen size (if any), and every
+/// parked campaign as its assignment key + evaluated accuracy prefix.
+/// `restore_state` rebuilds each parked campaign by re-tracing its clean
+/// activations (a pure function of the assignment) and replaying the
+/// recorded prefix through [`Campaign::fast_forward`] — bit-identical
+/// state, paid for with one trace build per parked campaign at resume.
+impl crate::recovery::StateProvider for StagedEvaluator<'_> {
+    fn checkpoint_state(&self) -> Json {
+        let parked: Vec<Json> = self
+            .trace_cache
+            .lock()
+            .unwrap()
+            .export()
+            .into_iter()
+            .map(|(key, accs)| {
+                json::obj(vec![
+                    ("key", Json::Arr(key.iter().map(json::str).collect())),
+                    ("accs", Json::Arr(accs.iter().map(|&a| json::num(a)).collect())),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("ledger", self.ledger.snapshot().to_json()),
+            (
+                "screen_size",
+                match self.screen_size.get() {
+                    Some(&n) => json::num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("parked", Json::Arr(parked)),
+        ])
+    }
+
+    fn restore_state(&self, state: &Json) {
+        if let Some(snap) = state.get("ledger").and_then(LedgerSnapshot::from_json) {
+            self.ledger.restore(&snap);
+        }
+        if let Some(n) = state.get("screen_size").and_then(Json::as_usize) {
+            // pre-resolved adaptive screen size: the pilot must not rerun
+            // (its faults are already on the restored ledger)
+            let _ = self.screen_size.set(n);
+        }
+        if self.model == FaultModelKind::LutPlane {
+            return; // lutplane campaigns are never parked
+        }
+        let entries = match state.get("parked").and_then(Json::as_arr) {
+            Some(a) => a,
+            None => return,
+        };
+        for entry in entries {
+            let key: Vec<String> = match entry.get("key").and_then(Json::as_arr) {
+                Some(a) => a.iter().filter_map(Json::as_str).map(str::to_string).collect(),
+                None => continue,
+            };
+            let accs: Vec<f64> = match entry.get("accs").and_then(Json::as_arr) {
+                Some(a) => a.iter().filter_map(Json::as_f64).collect(),
+                None => continue,
+            };
+            if key.len() != self.ev.net.n_comp() || accs.len() > self.sites.len() {
+                continue; // journal from an incompatible run — skip, don't abort
+            }
+            let names: Vec<&str> = key.iter().map(|s| s.as_str()).collect();
+            let engine = self.ev.assignment_engine(&names);
+            // ledger-silent rebuild: the restored snapshot already carries
+            // this campaign's trace build and fault spend; the fresh trace
+            // here is resume-time work, not new campaign work
+            let mut c = Campaign::new(&engine, self.ev.data, &self.ev.fi, self.sites.clone());
+            if !self.perturbs.is_empty() {
+                c = c.with_perturbs(self.perturbs.clone());
+            }
+            c.fast_forward(&accs);
+            if !c.is_done() {
+                c.stop();
+            }
+            self.trace_cache.lock().unwrap().insert(key, c);
+        }
     }
 }
 
@@ -1460,5 +1717,119 @@ mod tests {
         // TMR still masks bursts of every width
         let mtmr = mst.evaluate(&["mul8s_1kvp_s", "exact", "tmr", "tmr"], Fidelity::FiFull, None);
         assert!(mtmr.fault_vuln_pct.abs() < 1e-9, "{}", mtmr.fault_vuln_pct);
+    }
+
+    #[test]
+    fn deadline_parks_campaign_and_scores_degraded() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        // an already-expired deadline: the campaign still makes one block
+        // of progress, then parks with a degraded (prefix) estimate —
+        // even with epsilon 0, where every other early stop is disabled
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            eval_deadline_s: 1e-9,
+            block: 8,
+            ..FidelitySpec::exact()
+        });
+        let names = ["mul8s_1kvp_s", "exact"];
+        let p = st.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(p.fi_faults, 8, "exactly one block before the park");
+        assert_eq!(st.ledger().deadline_stops(), 1);
+        assert_eq!(st.ledger().early_stops(), 0, "deadline parks are not CI/gate stops");
+        assert_eq!(st.cached_campaigns(), 1, "over-deadline FiFull campaign is parked");
+        let s = st.ledger().summary(48);
+        assert!(s.contains("1 deadline parks"), "{s}");
+        // graceful degradation: the next call resumes the parked prefix
+        // and advances one more block — monotone forward progress
+        let p2 = st.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(p2.fi_faults, 16);
+        assert_eq!(st.ledger().resumed_campaigns(), 1);
+        // the degraded estimate is the exact prefix of the full campaign
+        let off = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        let full = off.evaluate(&names, Fidelity::FiFull, None);
+        assert_eq!(full.fi_faults, 48);
+        assert_eq!(off.ledger().deadline_stops(), 0, "deadline 0 never fires");
+        assert!((p.fault_vuln_pct - full.fault_vuln_pct).abs() <= p.fi_ci95_pp + full.fi_ci95_pp);
+        assert!(!off.ledger().summary(48).contains("deadline"), "quiet when it never fired");
+    }
+
+    #[test]
+    fn ledger_snapshot_json_roundtrip_restores_counters() {
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(48));
+        let st = StagedEvaluator::new(&ev, FidelitySpec {
+            screen_faults: 16,
+            ..FidelitySpec::exact()
+        });
+        let names = ["mul8s_1kvp_s", "exact"];
+        let _ = st.evaluate(&names, Fidelity::FiScreen, None);
+        let _ = st.evaluate(&names, Fidelity::FiFull, None);
+        let snap = st.ledger().snapshot();
+        let text = snap.to_json().to_string();
+        let back = LedgerSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap, "snapshot must survive the JSON round-trip exactly");
+        let fresh = FiLedger::default();
+        fresh.restore(&back);
+        assert_eq!(fresh.summary(48), st.ledger().summary(48));
+        assert_eq!(fresh.depth_hist(), st.ledger().depth_hist());
+        assert_eq!(fresh.total_faults(), st.ledger().total_faults());
+        assert_eq!(fresh.resumed_faults(), 16);
+    }
+
+    #[test]
+    fn state_provider_roundtrip_reparks_bit_identical_campaigns() {
+        use crate::recovery::StateProvider;
+        let net = tiny_mlp();
+        let data = fake_data(32);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 24, fi_params(64));
+        let spec = FidelitySpec { screen_faults: 16, ..FidelitySpec::exact() };
+        let st = StagedEvaluator::new(&ev, spec.clone());
+        let a = ["mul8s_1kvp_s", "exact"];
+        let b = ["exact", "mul8s_1kv8_s"];
+        let _ = st.evaluate(&a, Fidelity::FiScreen, None);
+        let _ = st.evaluate(&b, Fidelity::FiScreen, None);
+        assert_eq!(st.cached_campaigns(), 2);
+        // checkpoint through a JSON string round-trip, as the journal does
+        let state = Json::parse(&st.checkpoint_state().to_string()).unwrap();
+        let st2 = StagedEvaluator::new(&ev, spec);
+        st2.restore_state(&state);
+        assert_eq!(st2.cached_campaigns(), 2, "both parked campaigns restored");
+        assert_eq!(st2.ledger().summary(64), st.ledger().summary(64));
+        // promoting on the restored evaluator resumes the re-parked prefix
+        // and is bit-identical to promoting on the original
+        let pa2 = st2.evaluate(&a, Fidelity::FiFull, None);
+        let pa = st.evaluate(&a, Fidelity::FiFull, None);
+        assert_eq!(pa2, pa);
+        assert_eq!(st2.ledger().resumed_campaigns(), st.ledger().resumed_campaigns());
+        assert_eq!(
+            st2.ledger().trace_builds(),
+            st.ledger().trace_builds(),
+            "a restored promotion re-traces nothing"
+        );
+    }
+
+    #[test]
+    fn restored_screen_size_skips_the_pilot() {
+        use crate::recovery::StateProvider;
+        let net = tiny_mlp();
+        let data = fake_data(40);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 32, fi_params(160));
+        let spec = FidelitySpec { screen_auto: true, min_faults: 16, ..FidelitySpec::exact() };
+        let st = StagedEvaluator::new(&ev, spec.clone());
+        let n = st.screen_target();
+        let state = Json::parse(&st.checkpoint_state().to_string()).unwrap();
+        let st2 = StagedEvaluator::new(&ev, spec);
+        st2.restore_state(&state);
+        let builds = st2.ledger().trace_builds();
+        assert_eq!(st2.screen_target(), n);
+        assert_eq!(st2.ledger().trace_builds(), builds, "restored size must not rerun the pilot");
+        assert_eq!(st2.ledger().pilot_faults.load(Ordering::Relaxed), 16);
+        assert_eq!(st2.cached_campaigns(), 1, "the pilot's parked campaign is restored");
     }
 }

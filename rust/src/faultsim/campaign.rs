@@ -447,6 +447,36 @@ impl Campaign {
         self
     }
 
+    /// Seed a freshly constructed campaign with a checkpointed per-fault
+    /// accuracy prefix without re-running any fault — the resume path's
+    /// way to rebuild a parked campaign from the run journal. Per-fault
+    /// accuracies are a pure function of (engine config, site order), so
+    /// replaying the recorded prefix leaves the streaming accumulator and
+    /// prefix vector exactly as if [`advance`](Campaign::advance) had
+    /// produced them; a later `advance` continues from the same position.
+    /// Replay statistics stay empty, which is safe for resumed campaigns:
+    /// the staged evaluator records replay deltas relative to the stats
+    /// at resume entry.
+    pub fn fast_forward(&mut self, accs: &[f64]) {
+        assert_eq!(self.evaluated(), 0, "fast_forward only seeds a fresh campaign");
+        assert!(accs.len() <= self.sites.len(), "accuracy prefix longer than the site list");
+        for &acc in accs {
+            self.stream.push(acc);
+            self.acc_per_fault.push(acc);
+        }
+        self.progress.add((accs.len() * self.subset.len()) as u64);
+        if self.is_done() {
+            self.progress.finish();
+        }
+    }
+
+    /// The evaluated per-fault accuracy prefix — what
+    /// [`fast_forward`](Campaign::fast_forward) on a rebuilt campaign
+    /// needs to reproduce this one.
+    pub fn acc_prefix(&self) -> &[f64] {
+        &self.acc_per_fault
+    }
+
     /// Images in the campaign subset.
     pub fn n_images(&self) -> usize {
         self.subset.len()

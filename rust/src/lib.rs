@@ -35,6 +35,9 @@
 //!   assignments; replaces the `2^n` enumeration with budgeted search so
 //!   deep-net workloads the exhaustive sweep can never touch become
 //!   tractable.
+//! * [`recovery`] — crash-safe search runtime: deterministic run-ids,
+//!   an atomically-rewritten run journal with checkpoint/replay resume,
+//!   and the state hooks the staged evaluator checkpoints through.
 //! * [`zoo`] — parametric model zoo + synthetic workload generator:
 //!   topology grammar, seeded weight synthesis with calibrated
 //!   quantization, teacher-labeled datasets — deep nets and their
@@ -52,6 +55,7 @@ pub mod eval;
 pub mod faultsim;
 pub mod hwmodel;
 pub mod nbin;
+pub mod recovery;
 pub mod report;
 pub mod runtime;
 pub mod search;

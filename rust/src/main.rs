@@ -41,6 +41,11 @@ COMMANDS
       [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
       [--fi-epsilon PP] [--fi-screen N] [--warm-start]
       [--fault-model bitflip|stuckat|lutplane|multibit] [--harden]
+      [--checkpoint-every N] [--resume RUN] [--eval-deadline-s S]
+  cache verify|compact [path]  inspect / repair a result-cache jsonl file
+                               (default results/results.jsonl): verify
+                               reports torn lines quarantined at load,
+                               compact atomically rewrites a clean segment
   zoo list                     parametric model zoo: presets + generated stats
   zoo build                    generate a zoo net + workload, print its digest
       --net <preset>|--spec <topology> [--seed N] [--images N]
@@ -103,6 +108,21 @@ FIDELITY LADDER (search/pipeline)
   first suffix layer of each fault is delta-patched from cached clean
   accumulators (rank-1 update instead of a full GEMM; bit-identical);
   set DEEPAXE_NO_DELTA to force full first-suffix GEMMs.
+
+crash safety (search / zoo search):
+  every journaled run gets a deterministic run-id and a write-ahead
+  journal at <results>/runs/<run-id>.journal, committed atomically every
+  --checkpoint-every N generations (default 1; 0 disables journaling and
+  reproduces the unjournaled flow bit-for-bit). After a crash or kill -9,
+  `--resume <run-id>` (with the SAME flags as the original run) replays
+  the journal to a bit-identical frontier, budget count, and FI ledger,
+  then continues live. Evaluations run under panic isolation: a panicking
+  genotype is retried once, then quarantined as a poisoned design point
+  (recorded in the journal and the run summary; DEEPAXE_NO_CATCH lets
+  panics unwind for debugging). --eval-deadline-s S (env
+  DEEPAXE_EVAL_DEADLINE_S) parks over-deadline FI campaigns at a block
+  boundary and scores them at the streaming-CI estimate — degraded points
+  are never persisted to the result cache.
 ";
 
 fn main() {
@@ -141,6 +161,7 @@ fn fidelity_spec(args: &cli::Args) -> Result<deepaxe::eval::FidelitySpec> {
         epsilon_pp: args.get_f64("fi-epsilon", env.epsilon_pp)?,
         screen_faults,
         screen_auto,
+        eval_deadline_s: args.get_f64("eval-deadline-s", env.eval_deadline_s)?,
         ..env
     })
 }
@@ -157,7 +178,7 @@ fn fault_model_arg(args: &cli::Args) -> Result<FaultModelKind> {
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen", "fault-model"],
+        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen", "fault-model", "checkpoint-every", "resume", "eval-deadline-s"],
         &["fi", "no-fi", "warm-start", "harden", "help"],
     )
     .map_err(anyhow::Error::msg)?;
@@ -183,6 +204,7 @@ fn run(argv: &[String]) -> Result<()> {
         "pipeline" => pipeline_cmd(&args),
         "search" => search_cmd(&args),
         "zoo" => zoo_cmd(&args),
+        "cache" => cache_cmd(&args),
         "parity" => parity(&args),
         "faults" => fault_sizing(),
         "stuck" => stuck_cmd(&args),
@@ -384,6 +406,7 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         if space.hardening { ", hardening none|tmr|ecc" } else { "" },
     );
 
+    let fp = run_fingerprint(&net.name, &space, &spec, budget, &fi, eval_images, fault_model, &fidelity);
     let staged = deepaxe::eval::StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
     let backend = deepaxe::eval::StagedBackend { st: &staged };
     let mut hook = deepaxe::search::ResultCacheHook {
@@ -393,9 +416,140 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
         eval_images,
         fault_model,
     };
-    let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
+    let out = journaled_search(args, &space, &spec, &backend, &staged, &mut hook, &fp, &ctx.results.join("runs"))?;
     print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
     Ok(())
+}
+
+/// Deterministic fingerprint of everything that shapes a journaled run's
+/// event stream. The run-id is hashed from this string, so `--resume`
+/// refuses to replay a journal recorded under different settings — the
+/// replay would diverge silently otherwise. `--workers` and the
+/// trace-cache byte budget are deliberately excluded: both change only
+/// scheduling and memory, never results.
+#[allow(clippy::too_many_arguments)]
+fn run_fingerprint(
+    net_name: &str,
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    budget: usize,
+    fi: &CampaignParams,
+    eval_images: usize,
+    fault_model: FaultModelKind,
+    fidelity: &deepaxe::eval::FidelitySpec,
+) -> String {
+    format!(
+        "net={} alphabet={} layers={} hardening={} strategy={} budget={} seed={} pop={} \
+         with_fi={} screen={} warm={} fi_faults={} fi_images={} fi_seed={} eval_images={} \
+         fault_model={} epsilon={} screen_faults={} screen_auto={} block={} min_faults={} \
+         deadline_s={}",
+        net_name,
+        space.alphabet.join(","),
+        space.n_layers,
+        space.hardening,
+        spec.strategy.name(),
+        budget,
+        spec.seed,
+        spec.pop,
+        spec.with_fi,
+        spec.screen,
+        spec.warm_start,
+        fi.n_faults,
+        fi.n_images,
+        fi.seed,
+        eval_images,
+        fault_model.name(),
+        fidelity.epsilon_pp,
+        fidelity.screen_faults,
+        fidelity.screen_auto,
+        fidelity.block,
+        fidelity.min_faults,
+        fidelity.eval_deadline_s,
+    )
+}
+
+/// Shared crash-safe entry point for `repro search` and `repro zoo
+/// search`: `--checkpoint-every 0` bypasses journaling entirely
+/// (bit-for-bit the pre-journal flow), otherwise every run gets a
+/// write-ahead journal under `runs_dir` and `--resume <run-id>` replays
+/// one to the exact interrupted state (cache rolled back to the last
+/// checkpointed byte length, evaluator ledger / parked campaigns
+/// restored, RNG re-driven through the recorded event stream).
+fn journaled_search(
+    args: &cli::Args,
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    backend: &deepaxe::eval::StagedBackend,
+    staged: &deepaxe::eval::StagedEvaluator,
+    hook: &mut deepaxe::search::ResultCacheHook,
+    fingerprint: &str,
+    runs_dir: &std::path::Path,
+) -> Result<deepaxe::search::SearchOutcome> {
+    use deepaxe::recovery::{JournalWriter, StateProvider};
+    let every = args.get_usize("checkpoint-every", 1)?;
+    if every == 0 {
+        if args.get("resume").is_some() {
+            bail!("--resume requires journaling; drop --checkpoint-every 0");
+        }
+        return Ok(deepaxe::search::run_search(space, spec, backend, hook));
+    }
+    let mut journal = match args.get("resume") {
+        Some(run) => {
+            let j = JournalWriter::resume(runs_dir, run, fingerprint, every)
+                .map_err(anyhow::Error::msg)?;
+            hook.cache.rollback_to(j.cache_bytes())?;
+            if let Some(state) = j.eval_state() {
+                staged.restore_state(state);
+            }
+            eprintln!(
+                "resuming run {} from checkpoint {} (journal {})",
+                j.run_id(),
+                j.commits(),
+                j.path().display()
+            );
+            j
+        }
+        None => {
+            let j = JournalWriter::create(runs_dir, fingerprint, every);
+            eprintln!("run-id: {} (journal {})", j.run_id(), j.path().display());
+            j
+        }
+    };
+    journal.set_provider(staged);
+    // journaled runs flush the cache at checkpoint commits, not per append
+    hook.cache.set_autoflush(false);
+    Ok(deepaxe::search::run_search_journaled(space, spec, backend, hook, &mut journal))
+}
+
+/// `repro cache verify|compact [path]` — inspect / repair a result-cache
+/// jsonl segment. Loading already skips-and-quarantines torn lines
+/// (crash-safe appends leave at most one); `verify` surfaces the tally,
+/// `compact` atomically rewrites the surviving records as a clean segment.
+fn cache_cmd(args: &cli::Args) -> Result<()> {
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("verify");
+    let path = args.positional.get(1).map(|s| s.as_str()).unwrap_or("results/results.jsonl");
+    let mut cache = deepaxe::dse::cache::ResultCache::open(std::path::Path::new(path));
+    let r = cache.recovery_report().clone();
+    println!(
+        "cache {path}: {} lines, {} loaded, {} quarantined",
+        r.lines, r.loaded, r.quarantined
+    );
+    match action {
+        "verify" => {
+            if r.is_clean() {
+                println!("clean");
+            } else {
+                println!("run `repro cache compact {path}` to rewrite a clean segment");
+            }
+            Ok(())
+        }
+        "compact" => {
+            let kept = cache.compact().context("compacting cache")?;
+            println!("compacted: {kept} records kept, {} torn lines dropped", r.quarantined);
+            Ok(())
+        }
+        other => bail!("unknown cache subcommand {other:?} (verify|compact)\n{USAGE}"),
+    }
 }
 
 /// Frontier table + budget/ledger/hypervolume summary shared by
@@ -435,6 +589,15 @@ fn print_search_report(
         out.promotions,
         out.space_size,
     );
+    if !out.poisoned.is_empty() {
+        println!(
+            "poisoned design points: {} (panicked twice, quarantined; see journal for triage)",
+            out.poisoned.len()
+        );
+        for (g, err) in &out.poisoned {
+            println!("  poisoned: {} ({err})", space.config_digits(g));
+        }
+    }
     println!("{ledger_summary}");
     println!(
         "hypervolume2d (ref {:?}): {:.1} | hypervolume3d (ref {:?}): {:.0}",
@@ -580,6 +743,7 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
     std::fs::create_dir_all("results").ok();
     let mut cache =
         deepaxe::dse::cache::ResultCache::open(std::path::Path::new("results/zoo_results.jsonl"));
+    let fp = run_fingerprint(&net.name, &space, &spec, budget, &fi, eval_images, fault_model, &fidelity);
     let staged = deepaxe::eval::StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
     let backend = deepaxe::eval::StagedBackend { st: &staged };
     let mut hook = deepaxe::search::ResultCacheHook {
@@ -589,7 +753,7 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
         eval_images,
         fault_model,
     };
-    let out = deepaxe::search::run_search(&space, &spec, &backend, &mut hook);
+    let out = journaled_search(args, &space, &spec, &backend, &staged, &mut hook, &fp, std::path::Path::new("results/runs"))?;
     print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
     Ok(())
 }

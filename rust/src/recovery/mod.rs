@@ -1,0 +1,744 @@
+//! recovery — crash-safe search runtime: journaled checkpoint/resume.
+//!
+//! A multi-hour DSE run dies ugly without a durable record: one panic or
+//! `kill -9` throws away every in-memory archive, RNG position and ledger
+//! counter, and only completed evaluations survive in the result cache.
+//! This module gives every search run a deterministic run-id and a
+//! **run journal**: an append-structured jsonl file holding the run's
+//! fingerprint, the warm-start pool, every evaluation outcome since the
+//! last checkpoint, and a checkpoint record (budget counters, RNG stream
+//! position, result-cache high-water mark, and an opaque evaluator state
+//! blob for the FI ledger / parked campaigns). The file is rewritten
+//! atomically (temp file + rename + fsync of file and directory) at each
+//! checkpoint, so an interrupt at any instant leaves either the previous
+//! or the new checkpoint on disk — never a torn one.
+//!
+//! Resume (`repro search --resume <run-id>`) replays the recorded events
+//! through the unchanged search driver: the driver runs its normal
+//! proposal logic (seeded RNG makes it deterministic) but each evaluation
+//! is served from the journal instead of the backend, and the journal
+//! verifies kind/configuration/fidelity of every replayed event. When the
+//! event queue drains, the driver's counters must equal the checkpointed
+//! ones (including the RNG stream position when recorded) — only then
+//! does the journal flip to live mode and let the backend run again. The
+//! acceptance gate is bit-identity: frontier, budget count and FiLedger
+//! of a resumed run equal the uninterrupted run's exactly.
+
+use crate::dse::DesignPoint;
+use crate::eval::Fidelity;
+use crate::util::json::{self, Json};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Deterministic run identifier: FNV-1a (64-bit) over the run fingerprint
+/// string. The fingerprint must cover everything that steers the search
+/// (net, space, spec, fidelity, seeds) and nothing that doesn't (worker
+/// count, cache sizing), so re-running the same command line finds the
+/// same journal.
+pub fn run_id(fingerprint: &str) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in fingerprint.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Write `contents` to `path` atomically: temp file in the same
+/// directory, fsync, rename over the target, fsync the directory. An
+/// interrupt at any instant leaves either the old file or the new one.
+pub fn atomic_write(path: &Path, contents: &str) -> std::io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty()).map(Path::to_path_buf);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    if let Some(dir) = dir {
+        // directory fsync makes the rename itself durable; best-effort on
+        // filesystems that refuse to open directories
+        if let Ok(d) = fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Driver-side counters checkpointed with (and verified against) the
+/// journal. `rng_state` is the strategy RNG's raw xoshiro256** state at
+/// the checkpoint — `None` at boundaries where no strategy RNG is in
+/// scope (e.g. inside an annealing walk).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RunCounters {
+    pub evals_used: usize,
+    pub cache_hits: usize,
+    pub promotions: usize,
+    pub archive_len: usize,
+    pub rng_state: Option<[u64; 4]>,
+}
+
+/// What a replayed event resolves to: a finished design point (with its
+/// original cache-hit flag, so budget accounting replays exactly) or a
+/// poisoned genotype that panicked twice in the original run.
+pub enum Replayed {
+    Point { hit: bool, point: DesignPoint },
+    Poisoned(String),
+}
+
+/// Opaque evaluator-state hook: the staged evaluator checkpoints its
+/// FI ledger, adaptive screen size and parked screen campaigns through
+/// this, without the journal knowing the schema.
+pub trait StateProvider {
+    fn checkpoint_state(&self) -> Json;
+    fn restore_state(&self, state: &Json);
+}
+
+/// The driver's view of a run journal. The default implementation
+/// ([`NoJournal`]) is a no-op on every hook, so an unjournaled search
+/// compiles to exactly the pre-journal control flow.
+pub trait RunJournal {
+    /// True while recorded events remain to be served; the driver skips
+    /// the backend *and* the result cache for replayed evaluations.
+    fn replaying(&self) -> bool {
+        false
+    }
+    /// Serve the next recorded evaluation; panics if the recorded event
+    /// does not match (kind, configuration, fidelity) — a mismatch means
+    /// the journal belongs to a different run.
+    fn replay_eval(&mut self, _cfg: &str, _fidelity: Fidelity) -> Replayed {
+        panic!("replay_eval outside a resuming journal")
+    }
+    /// Serve the next recorded frontier promotion (always FiFull).
+    fn replay_promotion(&mut self, _cfg: &str) -> Replayed {
+        panic!("replay_promotion outside a resuming journal")
+    }
+    fn record_eval(&mut self, _cfg: &str, _fidelity: Fidelity, _hit: bool, _point: &DesignPoint) {}
+    fn record_promotion(&mut self, _cfg: &str, _hit: bool, _point: &DesignPoint) {}
+    fn record_poison(&mut self, _cfg: &str, _fidelity: Fidelity, _err: &str) {}
+    /// Record the warm-start pool the run actually used (resume must not
+    /// recompute it from a cache that has since grown).
+    fn record_warm(&mut self, _warm: &[String]) {}
+    /// The recorded warm-start pool, when resuming.
+    fn warm_override(&self) -> Option<Vec<String>> {
+        None
+    }
+    /// Called by the driver at every generation/batch boundary. Returns
+    /// true when the journal wants a checkpoint committed — the driver
+    /// then flushes the result cache and calls
+    /// [`commit_checkpoint`](RunJournal::commit_checkpoint) with the
+    /// flushed byte length. During replay this is where the journal
+    /// verifies drained-queue counter parity and flips to live mode.
+    fn boundary(&mut self, _counters: &RunCounters) -> bool {
+        false
+    }
+    fn commit_checkpoint(&mut self, _counters: &RunCounters, _cache_bytes: u64) {}
+}
+
+/// The no-op journal: `run_search` without checkpointing.
+pub struct NoJournal;
+
+impl RunJournal for NoJournal {}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Event {
+    Eval { cfg: String, fidelity: Fidelity, hit: bool, point: DesignPoint },
+    Promote { cfg: String, hit: bool, point: DesignPoint },
+    Poison { cfg: String, fidelity: Fidelity, err: String },
+}
+
+impl Event {
+    fn to_json(&self) -> Json {
+        match self {
+            Event::Eval { cfg, fidelity, hit, point } => json::obj(vec![
+                ("ev", json::str("eval")),
+                ("cfg", json::str(cfg)),
+                ("fid", json::str(fidelity.name())),
+                ("hit", Json::Bool(*hit)),
+                ("point", point.to_json()),
+            ]),
+            Event::Promote { cfg, hit, point } => json::obj(vec![
+                ("ev", json::str("promote")),
+                ("cfg", json::str(cfg)),
+                ("hit", Json::Bool(*hit)),
+                ("point", point.to_json()),
+            ]),
+            Event::Poison { cfg, fidelity, err } => json::obj(vec![
+                ("ev", json::str("poison")),
+                ("cfg", json::str(cfg)),
+                ("fid", json::str(fidelity.name())),
+                ("err", json::str(err)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Option<Event> {
+        let cfg = j.get("cfg")?.as_str()?.to_string();
+        match j.get("ev")?.as_str()? {
+            "eval" => Some(Event::Eval {
+                cfg,
+                fidelity: Fidelity::parse(j.get("fid")?.as_str()?).ok()?,
+                hit: j.get("hit")?.as_bool()?,
+                point: DesignPoint::from_json(j.get("point")?)?,
+            }),
+            "promote" => Some(Event::Promote {
+                cfg,
+                hit: j.get("hit")?.as_bool()?,
+                point: DesignPoint::from_json(j.get("point")?)?,
+            }),
+            "poison" => Some(Event::Poison {
+                cfg,
+                fidelity: Fidelity::parse(j.get("fid")?.as_str()?).ok()?,
+                err: j.get("err")?.as_str()?.to_string(),
+            }),
+            _ => None,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Event::Eval { .. } => "eval",
+            Event::Promote { .. } => "promote",
+            Event::Poison { .. } => "poison",
+        }
+    }
+
+    fn cfg(&self) -> &str {
+        match self {
+            Event::Eval { cfg, .. } | Event::Promote { cfg, .. } | Event::Poison { cfg, .. } => cfg,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Checkpoint {
+    counters: RunCounters,
+    cache_bytes: u64,
+    eval_state: Option<Json>,
+}
+
+fn rng_to_json(rng: &Option<[u64; 4]>) -> Json {
+    // full-range u64 words cannot ride Json::Num (f64 mantissa); hex
+    // strings round-trip every bit
+    match rng {
+        Some(s) => Json::Arr(s.iter().map(|w| json::str(format!("{w:016x}"))).collect()),
+        None => Json::Null,
+    }
+}
+
+fn rng_from_json(j: Option<&Json>) -> Option<[u64; 4]> {
+    let arr = j?.as_arr()?;
+    if arr.len() != 4 {
+        return None;
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = u64::from_str_radix(w.as_str()?, 16).ok()?;
+    }
+    Some(s)
+}
+
+impl Checkpoint {
+    fn to_json(&self) -> Json {
+        let c = &self.counters;
+        json::obj(vec![(
+            "checkpoint",
+            json::obj(vec![
+                ("evals_used", json::num(c.evals_used as f64)),
+                ("cache_hits", json::num(c.cache_hits as f64)),
+                ("promotions", json::num(c.promotions as f64)),
+                ("archive_len", json::num(c.archive_len as f64)),
+                ("rng", rng_to_json(&c.rng_state)),
+                ("cache_bytes", json::num(self.cache_bytes as f64)),
+                ("eval_state", self.eval_state.clone().unwrap_or(Json::Null)),
+            ]),
+        )])
+    }
+
+    fn from_json(j: &Json) -> Option<Checkpoint> {
+        let c = j.get("checkpoint")?;
+        Some(Checkpoint {
+            counters: RunCounters {
+                evals_used: c.get("evals_used")?.as_usize()?,
+                cache_hits: c.get("cache_hits")?.as_usize()?,
+                promotions: c.get("promotions")?.as_usize()?,
+                archive_len: c.get("archive_len")?.as_usize()?,
+                rng_state: rng_from_json(c.get("rng")),
+            },
+            cache_bytes: c.get("cache_bytes")?.as_i64()? as u64,
+            eval_state: match c.get("eval_state") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.clone()),
+            },
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    Live,
+    Replay,
+}
+
+/// A journal bound to one run: accumulates the full evaluation-event
+/// history and rewrites the whole journal file atomically at each commit
+/// (history + checkpoint), so the persisted journal always ends exactly
+/// at a committed generation/batch boundary and resume can rebuild the
+/// archive by replaying the history through the unchanged driver.
+pub struct JournalWriter<'a> {
+    path: PathBuf,
+    run_id: String,
+    fingerprint: String,
+    /// commit every Nth boundary (>= 1)
+    every: usize,
+    warm: Vec<String>,
+    events: Vec<Event>,
+    /// next event to serve during replay (== events.len() when live)
+    replay_at: usize,
+    mode: Mode,
+    checkpoint: Option<Checkpoint>,
+    boundaries: usize,
+    commits: usize,
+    /// test hook: stop committing after this many checkpoints, so the
+    /// persisted journal freezes at checkpoint k while the run completes
+    /// — a deterministic stand-in for `kill -9` right after commit k
+    commit_limit: Option<usize>,
+    provider: Option<&'a dyn StateProvider>,
+    resumed: bool,
+}
+
+impl<'a> JournalWriter<'a> {
+    /// Journal path for a run-id under the journal directory.
+    pub fn path_for(dir: &Path, run_id: &str) -> PathBuf {
+        dir.join(format!("{run_id}.journal"))
+    }
+
+    /// Open a fresh journal for a new run. Nothing is written until the
+    /// first checkpoint commits.
+    pub fn create(dir: &Path, fingerprint: &str, every: usize) -> JournalWriter<'a> {
+        assert!(every >= 1, "checkpoint interval must be >= 1 (0 disables journaling)");
+        let id = run_id(fingerprint);
+        JournalWriter {
+            path: Self::path_for(dir, &id),
+            run_id: id,
+            fingerprint: fingerprint.to_string(),
+            every,
+            warm: Vec::new(),
+            events: Vec::new(),
+            replay_at: 0,
+            mode: Mode::Live,
+            checkpoint: None,
+            boundaries: 0,
+            commits: 0,
+            commit_limit: None,
+            provider: None,
+            resumed: false,
+        }
+    }
+
+    /// Load an existing journal for resumption. Refuses a journal whose
+    /// fingerprint differs from the current invocation's — `--resume`
+    /// requires the same search flags the run was started with.
+    pub fn resume(
+        dir: &Path,
+        run: &str,
+        fingerprint: &str,
+        every: usize,
+    ) -> Result<JournalWriter<'a>, String> {
+        let mut w = Self::create(dir, fingerprint, every);
+        if w.run_id != run {
+            return Err(format!(
+                "run-id {run} does not match these search flags (their run-id is {}); \
+                 --resume requires the exact flags the run was started with",
+                w.run_id
+            ));
+        }
+        let text = fs::read_to_string(&w.path)
+            .map_err(|e| format!("cannot read journal {}: {e}", w.path.display()))?;
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines
+            .next()
+            .and_then(|l| Json::parse(l).ok())
+            .ok_or_else(|| format!("journal {}: missing header", w.path.display()))?;
+        if header.get("deepaxe_journal").and_then(Json::as_i64) != Some(1) {
+            return Err(format!("journal {}: not a deepaxe run journal", w.path.display()));
+        }
+        let stored = header.get("fingerprint").and_then(Json::as_str).unwrap_or("");
+        if stored != fingerprint {
+            return Err(format!(
+                "journal {} was started with different flags:\n  theirs: {stored}\n  ours:   {fingerprint}",
+                w.path.display()
+            ));
+        }
+        if let Some(warm) = header.get("warm").and_then(Json::as_arr) {
+            w.warm = warm.iter().filter_map(|v| v.as_str().map(str::to_string)).collect();
+        }
+        for line in lines {
+            let j = Json::parse(line)
+                .map_err(|e| format!("journal {}: bad line ({e})", w.path.display()))?;
+            if let Some(cp) = Checkpoint::from_json(&j) {
+                w.checkpoint = Some(cp);
+            } else if let Some(ev) = Event::from_json(&j) {
+                w.events.push(ev);
+            } else {
+                return Err(format!("journal {}: unrecognized line {line:?}", w.path.display()));
+            }
+        }
+        if w.checkpoint.is_none() {
+            return Err(format!("journal {}: no checkpoint record", w.path.display()));
+        }
+        w.mode = Mode::Replay;
+        w.resumed = true;
+        // the first commit after resume rewrites the same state plus any
+        // live events — a correct (if redundant) file either way
+        Ok(w)
+    }
+
+    /// Bind the evaluator-state hook (FI ledger + parked campaigns).
+    pub fn set_provider(&mut self, provider: &'a dyn StateProvider) {
+        self.provider = Some(provider);
+    }
+
+    /// Test hook: after `k` committed checkpoints, stop committing. The
+    /// run continues (and completes) but the persisted journal stays
+    /// frozen at checkpoint `k` — resuming from it must reproduce the
+    /// completed run bit-for-bit.
+    pub fn limit_checkpoints(&mut self, k: usize) {
+        self.commit_limit = Some(k);
+    }
+
+    pub fn run_id(&self) -> &str {
+        &self.run_id
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Committed checkpoints so far (replay starts past the loaded one).
+    pub fn commits(&self) -> usize {
+        self.commits
+    }
+
+    /// Result-cache byte length at the loaded checkpoint — the caller
+    /// truncates the cache file back to this before the resumed run, so
+    /// post-checkpoint entries are re-evaluated live instead of becoming
+    /// phantom cache hits.
+    pub fn cache_bytes(&self) -> u64 {
+        self.checkpoint.as_ref().map_or(0, |c| c.cache_bytes)
+    }
+
+    /// The opaque evaluator state at the loaded checkpoint.
+    pub fn eval_state(&self) -> Option<&Json> {
+        self.checkpoint.as_ref().and_then(|c| c.eval_state.as_ref())
+    }
+
+    fn verify(&self, counters: &RunCounters) {
+        let cp = self.checkpoint.as_ref().expect("replay without a checkpoint");
+        let c = &cp.counters;
+        let same_rng = match (c.rng_state, counters.rng_state) {
+            (Some(a), Some(b)) => a == b,
+            _ => true,
+        };
+        assert!(
+            c.evals_used == counters.evals_used
+                && c.cache_hits == counters.cache_hits
+                && c.promotions == counters.promotions
+                && c.archive_len == counters.archive_len
+                && same_rng,
+            "journal {}: replay diverged from the checkpoint\n  checkpoint: {c:?}\n  replayed:   {counters:?}",
+            self.run_id
+        );
+    }
+
+    fn next_event(&mut self, kind: &str, cfg: &str) -> Event {
+        assert!(
+            self.replay_at < self.events.len(),
+            "journal {}: replay ran past the recorded event log",
+            self.run_id
+        );
+        let ev = self.events[self.replay_at].clone();
+        // a poison is a valid answer to either replay question: the
+        // recorded run's evaluation (or promotion) of this genotype died
+        assert!(
+            (ev.kind() == kind || ev.kind() == "poison") && ev.cfg() == cfg,
+            "journal {}: event #{} mismatch — recorded {} of {:?}, replay wants {kind} of {cfg:?}",
+            self.run_id,
+            self.replay_at,
+            ev.kind(),
+            ev.cfg(),
+        );
+        self.replay_at += 1;
+        ev
+    }
+
+    fn write_file(&self) -> std::io::Result<()> {
+        let mut out = String::new();
+        let header = json::obj(vec![
+            ("deepaxe_journal", json::num(1.0)),
+            ("run_id", json::str(&self.run_id)),
+            ("fingerprint", json::str(&self.fingerprint)),
+            ("warm", Json::Arr(self.warm.iter().map(json::str).collect())),
+        ]);
+        out.push_str(&header.to_string());
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        if let Some(cp) = &self.checkpoint {
+            out.push_str(&cp.to_json().to_string());
+            out.push('\n');
+        }
+        atomic_write(&self.path, &out)
+    }
+}
+
+impl RunJournal for JournalWriter<'_> {
+    fn replaying(&self) -> bool {
+        self.mode == Mode::Replay
+    }
+
+    fn replay_eval(&mut self, cfg: &str, fidelity: Fidelity) -> Replayed {
+        match self.next_event("eval", cfg) {
+            Event::Eval { fidelity: f, hit, point, .. } => {
+                assert_eq!(f, fidelity, "journal {}: fidelity mismatch at {cfg:?}", self.run_id);
+                Replayed::Point { hit, point }
+            }
+            Event::Poison { err, .. } => Replayed::Poisoned(err),
+            _ => unreachable!(),
+        }
+    }
+
+    fn replay_promotion(&mut self, cfg: &str) -> Replayed {
+        match self.next_event("promote", cfg) {
+            Event::Promote { hit, point, .. } => Replayed::Point { hit, point },
+            Event::Poison { err, .. } => Replayed::Poisoned(err),
+            _ => unreachable!(),
+        }
+    }
+
+    fn record_eval(&mut self, cfg: &str, fidelity: Fidelity, hit: bool, point: &DesignPoint) {
+        debug_assert!(self.mode == Mode::Live, "recording while replaying");
+        self.events.push(Event::Eval {
+            cfg: cfg.to_string(),
+            fidelity,
+            hit,
+            point: point.clone(),
+        });
+    }
+
+    fn record_promotion(&mut self, cfg: &str, hit: bool, point: &DesignPoint) {
+        debug_assert!(self.mode == Mode::Live, "recording while replaying");
+        self.events.push(Event::Promote { cfg: cfg.to_string(), hit, point: point.clone() });
+    }
+
+    fn record_poison(&mut self, cfg: &str, fidelity: Fidelity, err: &str) {
+        debug_assert!(self.mode == Mode::Live, "recording while replaying");
+        self.events.push(Event::Poison {
+            cfg: cfg.to_string(),
+            fidelity,
+            err: err.to_string(),
+        });
+    }
+
+    fn record_warm(&mut self, warm: &[String]) {
+        if !self.resumed {
+            self.warm = warm.to_vec();
+        }
+    }
+
+    fn warm_override(&self) -> Option<Vec<String>> {
+        if self.resumed {
+            Some(self.warm.clone())
+        } else {
+            None
+        }
+    }
+
+    fn boundary(&mut self, counters: &RunCounters) -> bool {
+        match self.mode {
+            Mode::Replay => {
+                if self.replay_at < self.events.len() {
+                    return false;
+                }
+                self.verify(counters);
+                self.mode = Mode::Live;
+                // the replayed history stays in `events`: the next commit
+                // rewrites the whole file (full history + new live events
+                // + the new checkpoint), which a later resume replays from
+                // the beginning again
+                false
+            }
+            Mode::Live => {
+                self.boundaries += 1;
+                self.boundaries >= self.every
+                    && self.commit_limit.map_or(true, |limit| self.commits < limit)
+            }
+        }
+    }
+
+    fn commit_checkpoint(&mut self, counters: &RunCounters, cache_bytes: u64) {
+        self.boundaries = 0;
+        self.commits += 1;
+        self.checkpoint = Some(Checkpoint {
+            counters: counters.clone(),
+            cache_bytes,
+            eval_state: self.provider.map(|p| p.checkpoint_state()),
+        });
+        if let Err(e) = self.write_file() {
+            // a failing checkpoint must not kill a healthy run
+            eprintln!("journal {}: checkpoint write failed ({e}); run continues unjournaled", self.run_id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(cfg: &str) -> DesignPoint {
+        DesignPoint {
+            net: "synth".into(),
+            mult: "m0".into(),
+            mask: 5,
+            config_string: cfg.into(),
+            base_acc: 0.9,
+            ax_acc: 0.85,
+            acc_drop_pct: 5.0,
+            fi_mean_acc: 0.8,
+            fault_vuln_pct: 5.0,
+            fi_faults: 64,
+            fi_ci95_pp: 0.25,
+            cycles: 100,
+            luts: 1000,
+            ffs: 900,
+            util_pct: 42.0,
+            power_mw: 21.5,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("deepaxe_jrnl_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn run_id_deterministic_and_fingerprint_sensitive() {
+        let a = run_id("net=zoo-tiny seed=42");
+        assert_eq!(a, run_id("net=zoo-tiny seed=42"));
+        assert_ne!(a, run_id("net=zoo-tiny seed=43"));
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn commit_load_replay_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let fp = "net=synth budget=4";
+        let mut w = JournalWriter::create(&dir, fp, 1);
+        w.record_warm(&["0011".into()]);
+        w.record_eval("0011", Fidelity::FiFull, false, &point("0011"));
+        w.record_poison("0110", Fidelity::FiFull, "boom");
+        w.record_promotion("0011", true, &point("0011"));
+        let counters = RunCounters {
+            evals_used: 2,
+            cache_hits: 1,
+            promotions: 1,
+            archive_len: 1,
+            rng_state: Some([1, u64::MAX, 3, 0xDEADBEEFDEADBEEF]),
+        };
+        assert!(w.boundary(&counters));
+        w.commit_checkpoint(&counters, 123);
+
+        let mut r = JournalWriter::resume(&dir, w.run_id(), fp, 1).unwrap();
+        assert!(r.replaying());
+        assert_eq!(r.cache_bytes(), 123);
+        assert_eq!(r.warm_override(), Some(vec!["0011".to_string()]));
+        match r.replay_eval("0011", Fidelity::FiFull) {
+            Replayed::Point { hit, point: p } => {
+                assert!(!hit);
+                assert_eq!(p, point("0011"));
+            }
+            _ => panic!("expected a point"),
+        }
+        match r.replay_eval("0110", Fidelity::FiFull) {
+            Replayed::Poisoned(err) => assert_eq!(err, "boom"),
+            _ => panic!("expected poison"),
+        }
+        match r.replay_promotion("0011") {
+            Replayed::Point { hit, .. } => assert!(hit),
+            _ => panic!("expected a point"),
+        }
+        // queue drained + counters match -> flips live
+        assert!(!r.boundary(&counters));
+        assert!(!r.replaying());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_different_flags() {
+        let dir = tmp_dir("flags");
+        let mut w = JournalWriter::create(&dir, "seed=1", 1);
+        let c = RunCounters::default();
+        assert!(w.boundary(&c));
+        w.commit_checkpoint(&c, 0);
+        // a different fingerprint hashes to a different run-id
+        let id = w.run_id().to_string();
+        assert!(JournalWriter::resume(&dir, &id, "seed=2", 1).is_err());
+        // and a missing journal is a load error, not a panic
+        assert!(JournalWriter::resume(&dir, &run_id("seed=3"), "seed=3", 1).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_is_atomic_no_tmp_left_behind() {
+        let dir = tmp_dir("atomic");
+        let mut w = JournalWriter::create(&dir, "seed=9", 2);
+        let c = RunCounters::default();
+        // every=2: first boundary does not commit
+        assert!(!w.boundary(&c));
+        assert!(w.boundary(&c));
+        w.commit_checkpoint(&c, 0);
+        assert!(w.path().exists());
+        assert!(!w.path().with_extension("tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn limit_checkpoints_freezes_the_file() {
+        let dir = tmp_dir("limit");
+        let mut w = JournalWriter::create(&dir, "seed=5", 1);
+        w.limit_checkpoints(1);
+        let c1 = RunCounters { evals_used: 1, ..Default::default() };
+        assert!(w.boundary(&c1));
+        w.commit_checkpoint(&c1, 10);
+        let frozen = fs::read_to_string(w.path()).unwrap();
+        // past the limit, boundaries stop requesting commits
+        let c2 = RunCounters { evals_used: 2, ..Default::default() };
+        assert!(!w.boundary(&c2));
+        assert_eq!(fs::read_to_string(w.path()).unwrap(), frozen);
+        let r = JournalWriter::resume(&dir, w.run_id(), "seed=5", 1).unwrap();
+        assert_eq!(r.cache_bytes(), 10);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn replay_panics_on_wrong_config() {
+        let dir = tmp_dir("mismatch");
+        let fp = "seed=7";
+        let mut w = JournalWriter::create(&dir, fp, 1);
+        w.record_eval("0000", Fidelity::FiFull, false, &point("0000"));
+        let c = RunCounters { evals_used: 1, archive_len: 1, ..Default::default() };
+        assert!(w.boundary(&c));
+        w.commit_checkpoint(&c, 0);
+        let mut r = JournalWriter::resume(&dir, w.run_id(), fp, 1).unwrap();
+        let _ = fs::remove_dir_all(&dir);
+        let _ = r.replay_eval("1111", Fidelity::FiFull);
+    }
+}

@@ -44,9 +44,10 @@ use crate::dse::pareto::pareto_front;
 use crate::dse::{DesignPoint, Evaluator};
 use crate::eval::{FiGate, Fidelity};
 use crate::faultsim::{CampaignParams, FaultModelKind};
+use crate::recovery::{NoJournal, Replayed, RunCounters, RunJournal};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// How the Fig. 2 flow explores the configuration space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -201,6 +202,14 @@ pub trait CacheHook {
     fn warm_genotypes(&self, _space: &SearchSpace) -> Vec<Genotype> {
         Vec::new()
     }
+
+    /// Flush any buffered writes and return the durable byte length of
+    /// the backing store — the run journal checkpoints it so a resumed
+    /// run can roll the store back to exactly the checkpoint. Stores
+    /// without a file return 0.
+    fn flush(&mut self) -> u64 {
+        0
+    }
 }
 
 /// No persistence (unit tests, throwaway sweeps).
@@ -289,6 +298,10 @@ impl CacheHook for ResultCacheHook<'_> {
             }
         }
         self.cache.get(&self.key(names, fidelity)).cloned()
+    }
+
+    fn flush(&mut self) -> u64 {
+        self.cache.flush()
     }
 
     fn put(&mut self, names: &[&str], fidelity: Fidelity, point: &DesignPoint) {
@@ -396,6 +409,12 @@ pub struct SearchOutcome {
     pub promotions: usize,
     pub space_size: u128,
     pub trace: Vec<TracePoint>,
+    /// genotypes whose evaluation (or promotion) panicked twice and was
+    /// quarantined instead of killing the run, with the panic message —
+    /// empty on a healthy run. A poisoned promotion leaves its screen-tier
+    /// point in the archive; a poisoned fresh evaluation consumes no
+    /// budget and is never re-proposed.
+    pub poisoned: Vec<(Genotype, String)>,
 }
 
 impl SearchOutcome {
@@ -447,6 +466,14 @@ struct Archive<'a> {
     fresh_fidelity: Fidelity,
     workers: usize,
     trace: Vec<TracePoint>,
+    /// poisoned genotypes (double-panic evaluations), evaluation order
+    poisoned: Vec<(Genotype, String)>,
+    /// fresh-evaluation poisons: excluded from re-proposal forever
+    quarantined: HashSet<Genotype>,
+    /// archive indices whose FiFull promotion poisoned — the fixpoint
+    /// loop skips them so a permanently panicking frontier survivor
+    /// cannot wedge the search
+    promo_failed: HashSet<usize>,
 }
 
 impl<'a> Archive<'a> {
@@ -466,6 +493,21 @@ impl<'a> Archive<'a> {
             fresh_fidelity: spec.fresh_fidelity(),
             workers: spec.workers.max(1),
             trace: Vec::new(),
+            poisoned: Vec::new(),
+            quarantined: HashSet::new(),
+            promo_failed: HashSet::new(),
+        }
+    }
+
+    /// Driver-side counters for journal checkpoints and replay
+    /// verification.
+    fn counters(&self, rng_state: Option<[u64; 4]>) -> RunCounters {
+        RunCounters {
+            evals_used: self.evals_used,
+            cache_hits: self.cache_hits,
+            promotions: self.promotions,
+            archive_len: self.points.len(),
+            rng_state,
         }
     }
 
@@ -519,68 +561,148 @@ impl<'a> Archive<'a> {
         &mut self,
         backend: &B,
         cache: &mut dyn CacheHook,
+        journal: &mut dyn RunJournal,
         batch: Vec<Genotype>,
     ) -> Vec<usize> {
         let fidelity = self.fresh_fidelity;
         let mut fresh: Vec<Genotype> = Vec::new();
         for g in &batch {
-            if !self.seen.contains_key(g) && !fresh.contains(g) && fresh.len() < self.remaining()
+            if !self.seen.contains_key(g)
+                && !self.quarantined.contains(g)
+                && !fresh.contains(g)
+                && fresh.len() < self.remaining()
             {
                 fresh.push(g.clone());
             }
         }
         if !fresh.is_empty() {
-            // cache pass (serial: ResultCache is not Sync)
-            let mut misses: Vec<(usize, Genotype)> = Vec::new();
-            let mut results: Vec<Option<DesignPoint>> = vec![None; fresh.len()];
-            for (i, g) in fresh.iter().enumerate() {
-                let names = self.space.decode(g);
-                if let Some(p) = cache.get(&names, fidelity) {
-                    self.cache_hits += 1;
-                    results[i] = Some(p);
-                } else {
-                    misses.push((i, g.clone()));
-                }
+            if journal.replaying() {
+                self.replay_batch(journal, fresh, fidelity);
+            } else {
+                self.live_batch(backend, cache, journal, fresh, fidelity);
             }
-            // backend pass (parallel over misses); the pre-batch frontier
-            // gates hopeless campaigns — both this layer and the campaign
-            // workers inside the backend lease from the shared budget
-            if !misses.is_empty() {
-                // lexicographic dispatch order maximizes prefix locality:
-                // genotypes sharing the longest per-layer prefixes run
-                // adjacently, so a staged backend's trace cache can hand
-                // each campaign the longest clean-trace prefix a
-                // just-finished neighbor left behind. Results are mapped
-                // back by index, so the archive order (and every output)
-                // is unchanged.
-                misses.sort_by(|a, b| a.1.cmp(&b.1));
-                let gate =
-                    if backend.wants_gate() { self.gate() } else { FiGate::default() };
-                let space = self.space;
-                let evaluated: Vec<DesignPoint> = threadpool::budgeted_map(
-                    threadpool::WorkerBudget::global(),
-                    self.workers,
-                    &misses,
-                    |(_, g)| backend.eval_gated(&space.decode(g), fidelity, &gate),
-                );
-                for ((i, g), mut p) in misses.into_iter().zip(evaluated) {
+            if self.with_fi && fidelity < Fidelity::FiFull {
+                self.promote_frontier(backend, cache, journal);
+            }
+            self.snapshot_trace();
+        }
+        batch.iter().filter_map(|g| self.seen.get(g).copied()).collect()
+    }
+
+    /// Serve one fresh batch from the resume journal. Replay bypasses the
+    /// backend *and* the persistent cache: the cache file was rolled back
+    /// to the checkpoint high-water mark, which already holds every entry
+    /// flushed before the checkpoint — re-putting would duplicate lines,
+    /// and re-getting would turn rolled-forward misses into phantom hits.
+    fn replay_batch(
+        &mut self,
+        journal: &mut dyn RunJournal,
+        fresh: Vec<Genotype>,
+        fidelity: Fidelity,
+    ) {
+        for g in fresh {
+            let cfg = self.space.config_digits(&g);
+            match journal.replay_eval(&cfg, fidelity) {
+                Replayed::Point { hit, point } => {
+                    if hit {
+                        self.cache_hits += 1;
+                    }
+                    self.record(g, point, fidelity);
+                }
+                Replayed::Poisoned(err) => self.quarantine(g, err),
+            }
+        }
+    }
+
+    /// Evaluate one fresh batch live: serial cache pass, parallel
+    /// panic-guarded backend pass, then record in `fresh` order (so the
+    /// journaled event order — and with it the whole archive — is
+    /// deterministic and replayable).
+    fn live_batch<B: EvalBackend>(
+        &mut self,
+        backend: &B,
+        cache: &mut dyn CacheHook,
+        journal: &mut dyn RunJournal,
+        fresh: Vec<Genotype>,
+        fidelity: Fidelity,
+    ) {
+        // cache pass (serial: ResultCache is not Sync)
+        let mut misses: Vec<(usize, Genotype)> = Vec::new();
+        let mut results: Vec<Option<Result<DesignPoint, String>>> = vec![None; fresh.len()];
+        let mut hits: Vec<bool> = vec![false; fresh.len()];
+        for (i, g) in fresh.iter().enumerate() {
+            let names = self.space.decode(g);
+            if let Some(p) = cache.get(&names, fidelity) {
+                hits[i] = true;
+                results[i] = Some(Ok(p));
+            } else {
+                misses.push((i, g.clone()));
+            }
+        }
+        // backend pass (parallel over misses); the pre-batch frontier
+        // gates hopeless campaigns — both this layer and the campaign
+        // workers inside the backend lease from the shared budget
+        if !misses.is_empty() {
+            // lexicographic dispatch order maximizes prefix locality:
+            // genotypes sharing the longest per-layer prefixes run
+            // adjacently, so a staged backend's trace cache can hand
+            // each campaign the longest clean-trace prefix a
+            // just-finished neighbor left behind. Results are mapped
+            // back by index, so the archive order (and every output)
+            // is unchanged.
+            misses.sort_by(|a, b| a.1.cmp(&b.1));
+            let gate = if backend.wants_gate() { self.gate() } else { FiGate::default() };
+            let space = self.space;
+            // a panicking evaluation is retried once, then reported as a
+            // poisoned design point instead of unwinding through the pool
+            let evaluated: Vec<Result<DesignPoint, String>> = threadpool::budgeted_map(
+                threadpool::WorkerBudget::global(),
+                self.workers,
+                &misses,
+                |(_, g)| {
+                    threadpool::catch_retry(|| {
+                        backend.eval_gated(&space.decode(g), fidelity, &gate)
+                    })
+                },
+            );
+            for ((i, g), r) in misses.into_iter().zip(evaluated) {
+                results[i] = Some(r.map(|mut p| {
                     // persist with the generalized digit config so the
                     // stored value (not just the key) identifies the
                     // per-layer assignment
                     p.config_string = self.space.config_digits(&g);
                     cache.put(&self.space.decode(&g), fidelity, &p);
-                    results[i] = Some(p);
+                    p
+                }));
+            }
+        }
+        for ((g, r), hit) in fresh.into_iter().zip(results).zip(hits) {
+            let cfg = self.space.config_digits(&g);
+            match r.expect("batch result") {
+                Ok(p) => {
+                    if hit {
+                        self.cache_hits += 1;
+                    }
+                    journal.record_eval(&cfg, fidelity, hit, &p);
+                    self.record(g, p, fidelity);
+                }
+                Err(err) => {
+                    journal.record_poison(&cfg, fidelity, &err);
+                    self.quarantine(g, err);
                 }
             }
-            for (g, p) in fresh.into_iter().zip(results) {
-                self.record(g, p.expect("batch result"), fidelity);
-            }
-            if self.with_fi && fidelity < Fidelity::FiFull {
-                self.promote_frontier(backend, cache);
-            }
-            self.snapshot_trace();
         }
-        batch.iter().filter_map(|g| self.seen.get(g).copied()).collect()
+    }
+
+    /// Quarantine a poisoned fresh genotype: no budget charge, no archive
+    /// entry, never proposed again this run.
+    fn quarantine(&mut self, g: Genotype, err: String) {
+        eprintln!(
+            "search: genotype {} panicked twice; quarantined as poisoned ({err})",
+            self.space.config_digits(&g)
+        );
+        self.quarantined.insert(g.clone());
+        self.poisoned.push((g, err));
     }
 
     /// Promote archive-frontier survivors from the screen tier to
@@ -599,46 +721,109 @@ impl<'a> Archive<'a> {
     /// campaign (zero re-trace, zero prefix re-simulation); results are
     /// deterministic regardless of worker count because promoted values
     /// are pure per genotype and applied in frontier order.
-    fn promote_frontier<B: EvalBackend>(&mut self, backend: &B, cache: &mut dyn CacheHook) {
+    fn promote_frontier<B: EvalBackend>(
+        &mut self,
+        backend: &B,
+        cache: &mut dyn CacheHook,
+        journal: &mut dyn RunJournal,
+    ) {
         loop {
             let (front, _) = frontier_hv(&self.points, self.with_fi);
-            let pending: Vec<usize> =
-                front.into_iter().filter(|&i| self.fidelities[i] < Fidelity::FiFull).collect();
+            let pending: Vec<usize> = front
+                .into_iter()
+                .filter(|&i| {
+                    self.fidelities[i] < Fidelity::FiFull && !self.promo_failed.contains(&i)
+                })
+                .collect();
             if pending.is_empty() {
                 return;
             }
+            if journal.replaying() {
+                // replay skips cache and backend exactly like replay_batch
+                for idx in pending {
+                    let cfg = self.space.config_digits(&self.genotypes[idx]);
+                    match journal.replay_promotion(&cfg) {
+                        Replayed::Point { hit, point } => {
+                            if hit {
+                                self.cache_hits += 1;
+                            }
+                            self.apply_promotion(idx, point);
+                        }
+                        Replayed::Poisoned(err) => self.fail_promotion(idx, err),
+                    }
+                }
+                continue;
+            }
             // persistent-cache pass (serial: CacheHook is not Sync)
+            let mut results: HashMap<usize, (bool, Result<DesignPoint, String>)> = HashMap::new();
             let mut misses: Vec<usize> = Vec::new();
             for &idx in &pending {
                 let names = self.space.decode(&self.genotypes[idx]);
                 if let Some(mut hit) = cache.get(&names, Fidelity::FiFull) {
-                    self.cache_hits += 1;
                     hit.config_string = self.space.config_digits(&self.genotypes[idx]);
-                    self.apply_promotion(idx, hit);
+                    results.insert(idx, (true, Ok(hit)));
                 } else {
                     misses.push(idx);
                 }
             }
-            // backend pass: parallel over the frontier survivors
+            // backend pass: parallel over the frontier survivors, panics
+            // guarded the same way as fresh evaluations
             if !misses.is_empty() {
                 let space = self.space;
                 let genotypes = &self.genotypes;
-                let promoted: Vec<DesignPoint> = threadpool::budgeted_map(
+                let promoted: Vec<Result<DesignPoint, String>> = threadpool::budgeted_map(
                     threadpool::WorkerBudget::global(),
                     self.workers,
                     &misses,
-                    |&idx| backend.eval(&space.decode(&genotypes[idx]), Fidelity::FiFull),
+                    |&idx| {
+                        threadpool::catch_retry(|| {
+                            backend.eval(&space.decode(&genotypes[idx]), Fidelity::FiFull)
+                        })
+                    },
                 );
-                for (idx, mut p) in misses.into_iter().zip(promoted) {
-                    // persist with the generalized digit config so the
-                    // stored value (not just the key) identifies the
-                    // per-layer assignment
-                    p.config_string = self.space.config_digits(&self.genotypes[idx]);
-                    cache.put(&self.space.decode(&self.genotypes[idx]), Fidelity::FiFull, &p);
-                    self.apply_promotion(idx, p);
+                for (idx, r) in misses.into_iter().zip(promoted) {
+                    let r = r.map(|mut p| {
+                        // persist with the generalized digit config so the
+                        // stored value (not just the key) identifies the
+                        // per-layer assignment
+                        p.config_string = self.space.config_digits(&self.genotypes[idx]);
+                        cache.put(&self.space.decode(&self.genotypes[idx]), Fidelity::FiFull, &p);
+                        p
+                    });
+                    results.insert(idx, (false, r));
+                }
+            }
+            // apply in pending order so the journaled event order — and
+            // the promotions counter — is deterministic and replayable
+            for idx in pending {
+                let (hit, r) = results.remove(&idx).expect("promotion result");
+                let cfg = self.space.config_digits(&self.genotypes[idx]);
+                match r {
+                    Ok(p) => {
+                        if hit {
+                            self.cache_hits += 1;
+                        }
+                        journal.record_promotion(&cfg, hit, &p);
+                        self.apply_promotion(idx, p);
+                    }
+                    Err(err) => {
+                        journal.record_poison(&cfg, Fidelity::FiFull, &err);
+                        self.fail_promotion(idx, err);
+                    }
                 }
             }
         }
+    }
+
+    /// A frontier survivor whose FiFull promotion poisoned: keep its
+    /// screen-tier point, exclude it from further promotion rounds.
+    fn fail_promotion(&mut self, idx: usize, err: String) {
+        eprintln!(
+            "search: promotion of {} panicked twice; keeping its screen-tier estimate ({err})",
+            self.points[idx].config_string
+        );
+        self.promo_failed.insert(idx);
+        self.poisoned.push((self.genotypes[idx].clone(), err));
     }
 
     /// Install a promoted (`FiFull`) design point — `config_string`
@@ -666,7 +851,24 @@ impl<'a> Archive<'a> {
             promotions: self.promotions,
             space_size: self.space.size(),
             trace: self.trace,
+            poisoned: self.poisoned,
         }
+    }
+}
+
+/// Journal-boundary hook: called after every batch/generation. When the
+/// journal asks for a checkpoint, the persistent cache is flushed first
+/// so the checkpointed high-water mark covers everything durable.
+fn checkpoint(
+    journal: &mut dyn RunJournal,
+    cache: &mut dyn CacheHook,
+    archive: &Archive,
+    rng_state: Option<[u64; 4]>,
+) {
+    let counters = archive.counters(rng_state);
+    if journal.boundary(&counters) {
+        let bytes = cache.flush();
+        journal.commit_checkpoint(&counters, bytes);
     }
 }
 
@@ -677,6 +879,7 @@ fn walk_eval<B: EvalBackend>(
     archive: &mut Archive,
     backend: &B,
     cache: &mut dyn CacheHook,
+    journal: &mut dyn RunJournal,
     g: &Genotype,
 ) -> Option<[f64; 3]> {
     if let Some(&i) = archive.seen.get(g) {
@@ -685,17 +888,34 @@ fn walk_eval<B: EvalBackend>(
     if archive.remaining() == 0 {
         return None;
     }
-    let idx = archive.eval_batch(backend, cache, vec![g.clone()]);
+    let idx = archive.eval_batch(backend, cache, journal, vec![g.clone()]);
     idx.first().map(|&i| archive.objs[i])
 }
 
 /// Run a budgeted search over `space`. See module docs for budget and
-/// degeneration semantics.
+/// degeneration semantics. Equivalent to [`run_search_journaled`] with
+/// the no-op journal — bit-for-bit the unjournaled control flow.
 pub fn run_search<B: EvalBackend>(
     space: &SearchSpace,
     spec: &SearchSpec,
     backend: &B,
     cache: &mut dyn CacheHook,
+) -> SearchOutcome {
+    run_search_journaled(space, spec, backend, cache, &mut NoJournal)
+}
+
+/// [`run_search`] under a [`RunJournal`]: every batch/generation boundary
+/// offers the journal a checkpoint (driver counters + RNG stream position
+/// + flushed cache length), and a resuming journal serves recorded
+/// evaluations back through the identical control flow until its event
+/// queue drains — producing a bit-identical archive, frontier, and budget
+/// account, then continuing live.
+pub fn run_search_journaled<B: EvalBackend>(
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    backend: &B,
+    cache: &mut dyn CacheHook,
+    journal: &mut dyn RunJournal,
 ) -> SearchOutcome {
     let budget = spec.resolved_budget(space);
     let mut archive = Archive::new(space, budget, spec);
@@ -703,16 +923,31 @@ pub fn run_search<B: EvalBackend>(
 
     // warm start (SearchSpec::warm_start): cached frontier entries for
     // this (net, alphabet) join the structured seeds. They are ordinary
-    // candidates — dedup'd, budget-charged, usually cache hits.
-    let warm: Vec<Genotype> =
-        if spec.warm_start { cache.warm_genotypes(space) } else { Vec::new() };
+    // candidates — dedup'd, budget-charged, usually cache hits. A
+    // resuming journal overrides the pool with the one the original run
+    // recorded: the cache has grown since, and recomputing would steer
+    // the replay onto a different trajectory.
+    let warm: Vec<Genotype> = if spec.warm_start {
+        match journal.warm_override() {
+            Some(digits) => digits.iter().filter_map(|d| space.parse_digits(d).ok()).collect(),
+            None => {
+                let warm = cache.warm_genotypes(space);
+                let digits: Vec<String> = warm.iter().map(|g| space.config_digits(g)).collect();
+                journal.record_warm(&digits);
+                warm
+            }
+        }
+    } else {
+        Vec::new()
+    };
 
     // budget covers the space: every strategy is the exhaustive sweep
     // (lazy lexicographic prefix — no enumeration blow-up on big spaces)
     if spec.strategy == Strategy::Exhaustive || budget as u128 >= space.size() {
         let all = space.enumerate_first(budget);
         for chunk in all.chunks(64.max(spec.pop)) {
-            archive.eval_batch(backend, cache, chunk.to_vec());
+            archive.eval_batch(backend, cache, journal, chunk.to_vec());
+            checkpoint(journal, cache, &archive, Some(rng.state()));
         }
         return archive.finish(spec.strategy);
     }
@@ -738,7 +973,8 @@ pub fn run_search<B: EvalBackend>(
                     init.push(g);
                 }
             }
-            let mut population = archive.eval_batch(backend, cache, init);
+            let mut population = archive.eval_batch(backend, cache, journal, init);
+            checkpoint(journal, cache, &archive, Some(rng.state()));
             while archive.remaining() > 0 {
                 let objs: Vec<[f64; 3]> = population.iter().map(|&i| archive.objs[i]).collect();
                 let ranked = nsga2::rank_population(&objs);
@@ -750,14 +986,17 @@ pub fn run_search<B: EvalBackend>(
                     let a = &archive.genotypes[population[nsga2::binary_tournament(&mut rng, &ranked)]];
                     let b = &archive.genotypes[population[nsga2::binary_tournament(&mut rng, &ranked)]];
                     let child = space.mutate(&mut rng, &space.crossover(&mut rng, a, b));
-                    if !archive.seen.contains_key(&child) && !offspring.contains(&child) {
+                    if !archive.seen.contains_key(&child)
+                        && !archive.quarantined.contains(&child)
+                        && !offspring.contains(&child)
+                    {
                         offspring.push(child);
                     }
                 }
                 if offspring.is_empty() {
                     break; // space effectively exhausted around the population
                 }
-                let new_idx = archive.eval_batch(backend, cache, offspring);
+                let new_idx = archive.eval_batch(backend, cache, journal, offspring);
                 // (μ+λ) environmental selection over parents ∪ offspring
                 let mut merged = population.clone();
                 merged.extend(new_idx);
@@ -766,6 +1005,7 @@ pub fn run_search<B: EvalBackend>(
                 let merged_objs: Vec<[f64; 3]> = merged.iter().map(|&i| archive.objs[i]).collect();
                 let keep = nsga2::select_survivors(&merged_objs, pop_size);
                 population = keep.into_iter().map(|k| merged[k]).collect();
+                checkpoint(journal, cache, &archive, Some(rng.state()));
             }
         }
         Strategy::Anneal | Strategy::HillClimb => {
@@ -779,22 +1019,28 @@ pub fn run_search<B: EvalBackend>(
                 }
             }
             seeds.truncate(budget);
-            archive.eval_batch(backend, cache, seeds.clone());
+            archive.eval_batch(backend, cache, journal, seeds.clone());
+            checkpoint(journal, cache, &archive, Some(rng.state()));
             let greedy_only = spec.strategy == Strategy::HillClimb;
             let params = AnnealParams {
                 restarts: if greedy_only { 1 } else { 4 },
                 ..AnnealParams::default()
             };
-            // walks evaluate one genotype at a time through the archive
+            // walks evaluate one genotype at a time through the archive;
+            // the walk RNG is mutably lent to the annealer, so walk-time
+            // checkpoints carry no RNG state to verify against
             let _ = anneal(space, &mut rng, &params, &seeds, &mut |g| {
-                walk_eval(&mut archive, backend, cache, g)
+                let r = walk_eval(&mut archive, backend, cache, journal, g);
+                checkpoint(journal, cache, &archive, None);
+                r
             });
             // spend any leftover budget on random exploration
             while archive.remaining() > 0 {
                 let batch: Vec<Genotype> =
                     (0..archive.remaining().min(16)).map(|_| space.random(&mut rng)).collect();
                 let before = archive.evals_used;
-                archive.eval_batch(backend, cache, batch);
+                archive.eval_batch(backend, cache, journal, batch);
+                checkpoint(journal, cache, &archive, Some(rng.state()));
                 if archive.evals_used == before {
                     break; // random draws all duplicates; give up
                 }
@@ -1262,6 +1508,165 @@ mod tests {
         let mut warm = hook.warm_genotypes(&space);
         warm.sort();
         assert_eq!(warm, vec![vec![1u8, 0, 1], vec![1u8, 2, 0]]);
+    }
+
+    /// Backend whose evaluation panics for one specific genotype —
+    /// exercises the catch-and-quarantine path.
+    struct PanicBackend {
+        inner: SynthBackend,
+        poison: Genotype,
+        /// panic only at this tier (None: every tier)
+        only_at: Option<Fidelity>,
+    }
+
+    impl EvalBackend for PanicBackend {
+        fn eval(&self, names: &[&str], fidelity: Fidelity) -> DesignPoint {
+            if self.inner.decode(names) == self.poison
+                && self.only_at.map_or(true, |f| f == fidelity)
+            {
+                panic!("injected panic");
+            }
+            self.inner.eval(names, fidelity)
+        }
+    }
+
+    #[test]
+    fn panicking_genotype_is_quarantined_and_search_completes() {
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into()],
+            "xxx",
+        );
+        let backend = PanicBackend {
+            inner: SynthBackend { space: space.clone(), screen_noise: 0.0 },
+            poison: vec![1, 0, 1],
+            only_at: None,
+        };
+        let size = space.size() as usize;
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: size, ..SearchSpec::new(Strategy::Exhaustive) },
+            &backend,
+            &mut NoCache,
+        );
+        assert_eq!(out.poisoned.len(), 1, "exactly one poisoned point");
+        assert_eq!(out.poisoned[0].0, vec![1, 0, 1]);
+        assert!(out.poisoned[0].1.contains("injected panic"), "{}", out.poisoned[0].1);
+        // the poisoned genotype consumed no budget and never entered the
+        // archive; every other configuration did
+        assert_eq!(out.evals_used, size - 1);
+        assert!(!out.genotypes.contains(&vec![1u8, 0, 1]));
+    }
+
+    #[test]
+    fn poisoned_promotion_keeps_the_screen_estimate() {
+        // the fully-approximated genotype has the lowest utilization, so
+        // it is always a frontier extreme — and its FiFull promotion
+        // always panics. The search must finish with its screen-tier
+        // value in place instead of looping the promotion fixpoint.
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into()],
+            "xxx",
+        );
+        let poison = vec![1u8, 1, 1];
+        let backend = PanicBackend {
+            inner: SynthBackend { space: space.clone(), screen_noise: 0.4 },
+            poison: poison.clone(),
+            only_at: Some(Fidelity::FiFull),
+        };
+        let size = space.size() as usize;
+        let out = run_search(
+            &space,
+            &SearchSpec { budget: size, screen: true, ..SearchSpec::new(Strategy::Exhaustive) },
+            &backend,
+            &mut NoCache,
+        );
+        let idx = out.genotypes.iter().position(|g| *g == poison).expect("archived at screen");
+        assert_eq!(out.fidelities[idx], Fidelity::FiScreen, "screen estimate kept");
+        assert!(out.poisoned.iter().any(|(g, _)| *g == poison));
+        // every other frontier member still promoted to full fidelity
+        for &i in &out.frontier_idx {
+            if out.genotypes[i] != poison {
+                assert_eq!(out.fidelities[i], Fidelity::FiFull);
+            }
+        }
+    }
+
+    #[test]
+    fn journaled_resume_is_bit_identical() {
+        use crate::recovery::{run_id, JournalWriter};
+        let dir = std::env::temp_dir().join(format!("deepaxe_drv_jrnl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+        let spec = SearchSpec {
+            budget: 18,
+            seed: 0x5EED,
+            screen: true,
+            ..SearchSpec::new(Strategy::Nsga2)
+        };
+        let baseline = run_search(&space, &spec, &backend, &mut NoCache);
+        assert!(baseline.promotions > 0, "test must exercise promotion replay");
+        let fp = "driver-test-fingerprint";
+        for k in 1..=3 {
+            // run to completion, but freeze the persisted journal at
+            // checkpoint k — a deterministic stand-in for kill -9
+            let mut w = JournalWriter::create(&dir, fp, 1);
+            w.limit_checkpoints(k);
+            let full = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut w);
+            assert_eq!(full.genotypes, baseline.genotypes, "journaling changed the run");
+            assert_eq!(full.evals_used, baseline.evals_used);
+            // resume from the frozen checkpoint: bit-identical outcome
+            let mut r = JournalWriter::resume(&dir, &run_id(fp), fp, 1).unwrap();
+            let resumed = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut r);
+            assert_eq!(resumed.genotypes, baseline.genotypes, "k={k}: genotypes differ");
+            assert_eq!(resumed.evals_used, baseline.evals_used, "k={k}");
+            assert_eq!(resumed.cache_hits, baseline.cache_hits, "k={k}");
+            assert_eq!(resumed.promotions, baseline.promotions, "k={k}");
+            assert_eq!(resumed.fidelities, baseline.fidelities, "k={k}");
+            assert_eq!(frontier_coords(&resumed), frontier_coords(&baseline), "k={k}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journaled_resume_replays_poisoned_points() {
+        use crate::recovery::{run_id, JournalWriter};
+        let dir = std::env::temp_dir().join(format!("deepaxe_drv_poi_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into()],
+            "xxx",
+        );
+        let backend = PanicBackend {
+            inner: SynthBackend { space: space.clone(), screen_noise: 0.0 },
+            poison: vec![0, 1, 0],
+            only_at: None,
+        };
+        let size = space.size() as usize;
+        let spec = SearchSpec { budget: size, ..SearchSpec::new(Strategy::Exhaustive) };
+        let fp = "poison-replay";
+        let mut w = JournalWriter::create(&dir, fp, 1);
+        w.limit_checkpoints(1);
+        let full = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut w);
+        let mut r = JournalWriter::resume(&dir, &run_id(fp), fp, 1).unwrap();
+        let resumed = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut r);
+        assert_eq!(resumed.genotypes, full.genotypes);
+        assert_eq!(resumed.poisoned.len(), full.poisoned.len());
+        assert_eq!(resumed.evals_used, full.evals_used);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

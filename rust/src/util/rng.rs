@@ -29,6 +29,13 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw xoshiro256** state — the run journal checkpoints it so a
+    /// resumed search can verify its replayed RNG landed on the same
+    /// stream position as the original run.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

@@ -217,6 +217,24 @@ mod tests {
     }
 
     #[test]
+    fn regression_ci95_below_two_samples_is_infinite_not_zero() {
+        // Guard the fidelity ladder's early-stop gates: at n < 2 the CI
+        // half-width is undefined, and returning 0.0 (or NaN, which
+        // compares false against any epsilon) would let a campaign stop
+        // after a single fault. Both the streaming and batch paths must
+        // report an infinite half-width so no epsilon can be satisfied.
+        let empty = Streaming::new();
+        assert_eq!(empty.ci95(), f64::INFINITY);
+        let mut one = Streaming::new();
+        one.push(0.5);
+        assert_eq!(one.ci95(), f64::INFINITY);
+        assert_eq!(ci95_halfwidth(&summarize(&[0.5])), f64::INFINITY);
+        // and the gate opens as soon as a second sample arrives
+        one.push(0.5);
+        assert!(one.ci95().is_finite());
+    }
+
+    #[test]
     fn leveugle_known_values() {
         // For very large populations the 95%/1%/p=0.5 size approaches
         // t^2 p(1-p)/e^2 ≈ 9604.

@@ -280,6 +280,36 @@ where
         .collect()
 }
 
+/// Run a fallible-by-panic evaluation with one retry, converting a
+/// double panic into `Err(message)` instead of unwinding. The search
+/// driver wraps backend evaluations in this so one poisoned design point
+/// (a genotype whose campaign panics) is quarantined rather than taking
+/// down the whole run. `DEEPAXE_NO_CATCH` bypasses the guard entirely so
+/// a debugger sees the original unwind site.
+pub fn catch_retry<T>(mut f: impl FnMut() -> T) -> Result<T, String> {
+    if super::cli::env_flag("DEEPAXE_NO_CATCH") {
+        return Ok(f());
+    }
+    let mut last = None;
+    for _ in 0..2 {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&mut f)) {
+            Ok(v) => return Ok(v),
+            Err(p) => last = Some(panic_message(p)),
+        }
+    }
+    Err(last.unwrap_or_else(|| "unknown panic".into()))
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".into()
+    }
+}
+
 /// Default worker count: `DEEPAXE_WORKERS` env or available parallelism.
 pub fn default_workers() -> usize {
     super::cli::env_usize(
@@ -413,6 +443,26 @@ mod tests {
         drop(c);
         assert_eq!(budget.live(), 0);
         assert_eq!(budget.peak(), 4);
+    }
+
+    #[test]
+    fn catch_retry_retries_once_then_reports() {
+        // first call panics, retry succeeds
+        let mut calls = 0;
+        let out = catch_retry(|| {
+            calls += 1;
+            if calls == 1 {
+                panic!("transient");
+            }
+            42
+        });
+        assert_eq!(out, Ok(42));
+        assert_eq!(calls, 2);
+        // both attempts panic: the payload comes back as Err, no unwind
+        let out: Result<i32, String> = catch_retry(|| panic!("poisoned genotype"));
+        assert_eq!(out, Err("poisoned genotype".to_string()));
+        let out: Result<i32, String> = catch_retry(|| panic!("{}", format!("fmt {}", 7)));
+        assert_eq!(out, Err("fmt 7".to_string()));
     }
 
     /// Regression test for the nested-parallelism bug: population workers

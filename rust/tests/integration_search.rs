@@ -498,6 +498,226 @@ fn zoo_warm_start_seeds_search_from_cached_frontier() {
     assert!(second.cache_hits > 0, "warm seeds should be served from the cache");
 }
 
+// ===========================================================================
+// recovery_ — crash-safe journaled search, artifact-free (scripts/ci.sh
+// runs these unconditionally alongside the zoo_ stage)
+// ===========================================================================
+
+/// One kill-and-resume scenario. Three runs over the same zoo net and
+/// seed: a plain (unjournaled) reference, a journaled run whose journal
+/// is frozen at checkpoint 2 — the atomic temp-file+rename commit
+/// discipline means a kill -9 leaves exactly such a file — and a
+/// `--resume`-style replay of the frozen journal on a fresh evaluator
+/// with the result cache rolled back to the checkpointed byte length.
+/// All three must agree bit-for-bit: trajectory, design points,
+/// counters, both hypervolume indicators, and the FI ledger.
+fn resume_case(screen: bool, tag: &str) {
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    use deepaxe::recovery::{JournalWriter, RunJournal, StateProvider};
+    use deepaxe::search::run_search_journaled;
+
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0x7E5, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(10, 10, 0x7E5);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 16;
+    spec.pop = 4; // several generations => several checkpoint boundaries
+    spec.seed = 0x7E5;
+    spec.screen = screen;
+    let mk_spec = || {
+        if screen {
+            FidelitySpec { screen_faults: 4, epsilon_pp: 0.5, ..FidelitySpec::exact() }
+        } else {
+            FidelitySpec::exact()
+        }
+    };
+    let dir =
+        std::env::temp_dir().join(format!("deepaxe_recovery_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let runs = dir.join("runs");
+    let fp = format!("it-resume screen={screen}");
+
+    // 1. unjournaled reference on its own fresh cache
+    let ref_staged = StagedEvaluator::new(&ev, mk_spec());
+    let reference = {
+        let mut cache = ResultCache::open(&dir.join("ref.jsonl"));
+        let mut hook = ResultCacheHook {
+            cache: &mut cache,
+            net: bundle.net.name.clone(),
+            fi: fi.clone(),
+            eval_images: 24,
+            fault_model: FaultModelKind::BitFlip,
+        };
+        run_search(&space, &spec, &StagedBackend { st: &ref_staged }, &mut hook)
+    };
+    assert!(reference.poisoned.is_empty());
+
+    // 2. journaled run, journal frozen at checkpoint 2 (simulated crash)
+    let crash_path = dir.join("crash.jsonl");
+    let run = {
+        let full_staged = StagedEvaluator::new(&ev, mk_spec());
+        let mut cache = ResultCache::open(&crash_path);
+        cache.set_autoflush(false);
+        let mut journal = JournalWriter::create(&runs, &fp, 1);
+        let run = journal.run_id().to_string();
+        journal.limit_checkpoints(2);
+        journal.set_provider(&full_staged);
+        let mut hook = ResultCacheHook {
+            cache: &mut cache,
+            net: bundle.net.name.clone(),
+            fi: fi.clone(),
+            eval_images: 24,
+            fault_model: FaultModelKind::BitFlip,
+        };
+        let full = run_search_journaled(
+            &space,
+            &spec,
+            &StagedBackend { st: &full_staged },
+            &mut hook,
+            &mut journal,
+        );
+        // journaling itself must not perturb the search (checkpoint-every
+        // 0, i.e. the unjournaled flow, stays bit-for-bit reproducible)
+        assert_eq!(full.genotypes, reference.genotypes, "journaled != plain");
+        for (a, b) in full.evaluated.iter().zip(&reference.evaluated) {
+            assert_eq!(a, b, "journaled design points must match the plain run");
+        }
+        run
+    };
+
+    // 3. resume the frozen journal: fresh evaluator, cache rolled back
+    let staged = StagedEvaluator::new(&ev, mk_spec());
+    let mut cache = ResultCache::open(&crash_path);
+    cache.set_autoflush(false);
+    let mut journal = JournalWriter::resume(&runs, &run, &fp, 1).unwrap();
+    assert!(journal.replaying(), "resume must start in replay mode");
+    cache.rollback_to(journal.cache_bytes()).unwrap();
+    if let Some(state) = journal.eval_state() {
+        staged.restore_state(state);
+    }
+    journal.set_provider(&staged);
+    let resumed = {
+        let mut hook = ResultCacheHook {
+            cache: &mut cache,
+            net: bundle.net.name.clone(),
+            fi: fi.clone(),
+            eval_images: 24,
+            fault_model: FaultModelKind::BitFlip,
+        };
+        run_search_journaled(&space, &spec, &StagedBackend { st: &staged }, &mut hook, &mut journal)
+    };
+
+    assert_eq!(resumed.genotypes, reference.genotypes, "resumed trajectory diverged");
+    assert_eq!(resumed.fidelities, reference.fidelities);
+    assert_eq!(resumed.evals_used, reference.evals_used, "budget count must restore");
+    assert_eq!(resumed.cache_hits, reference.cache_hits);
+    assert_eq!(resumed.promotions, reference.promotions);
+    assert_eq!(resumed.frontier_idx, reference.frontier_idx);
+    for (a, b) in resumed.evaluated.iter().zip(&reference.evaluated) {
+        assert_eq!(a, b, "resumed design points must be bit-identical");
+    }
+    assert_eq!(resumed.hypervolume().to_bits(), reference.hypervolume().to_bits());
+    assert_eq!(
+        deepaxe::search::hypervolume3(&resumed.evaluated).to_bits(),
+        deepaxe::search::hypervolume3(&reference.evaluated).to_bits(),
+    );
+    assert_eq!(
+        staged.ledger().snapshot(),
+        ref_staged.ledger().snapshot(),
+        "FI ledger must restore bit-identically"
+    );
+    assert_eq!(
+        staged.ledger().summary(fi.n_faults),
+        ref_staged.ledger().summary(fi.n_faults),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_resume_is_bit_identical_full_fidelity() {
+    resume_case(false, "full");
+}
+
+#[test]
+fn recovery_resume_is_bit_identical_with_fi_screen() {
+    resume_case(true, "screen");
+}
+
+/// A backend that panics on one specific assignment — stand-in for a
+/// buggy accelerator kernel taking down a worker.
+struct PanickingBackend<'a> {
+    inner: EvaluatorBackend<'a>,
+    poison: Vec<String>,
+}
+
+impl deepaxe::search::EvalBackend for PanickingBackend<'_> {
+    fn eval(&self, names: &[&str], fidelity: Fidelity) -> deepaxe::dse::DesignPoint {
+        if names.len() == self.poison.len()
+            && names.iter().zip(&self.poison).all(|(a, b)| *a == b.as_str())
+        {
+            panic!("injected evaluator fault");
+        }
+        self.inner.eval(names, fidelity)
+    }
+}
+
+#[test]
+fn recovery_panicking_genotype_is_quarantined_and_replayable() {
+    // a genotype that panics twice is quarantined as a poisoned design
+    // point: no budget charge, never re-proposed, the search completes,
+    // and the journal both records the poison and replays it on resume
+    use deepaxe::recovery::JournalWriter;
+    use deepaxe::search::run_search_journaled;
+
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0xDEAD, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(6, 8, 0xDEAD);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    // poison the all-exact structured seed: first into every initial
+    // population, so the quarantine path always triggers
+    let poison: Vec<String> = vec!["exact".to_string(); space.n_layers];
+    let backend = PanickingBackend { inner: EvaluatorBackend { ev: &ev }, poison };
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 12;
+    spec.pop = 4;
+    spec.seed = 0xDEAD;
+
+    let dir = std::env::temp_dir().join(format!("deepaxe_recovery_poison_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let fp = "it-poison";
+
+    let mut journal = JournalWriter::create(&dir, fp, 1);
+    let run = journal.run_id().to_string();
+    journal.limit_checkpoints(1); // freeze right after the poisoned batch
+    let out = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut journal);
+    assert_eq!(out.poisoned.len(), 1, "exactly the injected genotype must poison");
+    let (bad, err) = &out.poisoned[0];
+    assert!(space.decode(bad).iter().all(|n| *n == "exact"));
+    assert!(err.contains("injected evaluator fault"), "{err}");
+    assert!(!out.genotypes.contains(bad), "poisoned genotype must not enter the archive");
+    assert!(!out.frontier_idx.is_empty(), "search must complete around the poison");
+    assert!(out.evals_used <= spec.budget);
+    // the journal records the poison for post-mortem triage
+    let text = std::fs::read_to_string(journal.path()).unwrap();
+    assert!(text.contains("\"poison\""), "journal must record the poisoned point");
+
+    // resume replays the recorded poison instead of re-running the
+    // panicking evaluation, and re-quarantines the genotype
+    let mut journal2 = JournalWriter::resume(&dir, &run, fp, 1).unwrap();
+    let resumed = run_search_journaled(&space, &spec, &backend, &mut NoCache, &mut journal2);
+    assert_eq!(resumed.poisoned, out.poisoned);
+    assert_eq!(resumed.genotypes, out.genotypes);
+    for (a, b) in resumed.evaluated.iter().zip(&out.evaluated) {
+        assert_eq!(a, b, "resume across a poison must stay bit-identical");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn fi_skipped_points_excluded_from_vuln_frontier() {
     // with_fi = false leaves NaN vulnerability — the frontier over

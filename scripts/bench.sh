@@ -23,7 +23,10 @@
 # LUT-GEMM forward + fault-major group replay vs the per-image scalar
 # loops) and `simd_speedup_vs_scalar` (portable-SIMD kernels on vs off;
 # ~1.0 when the `simd` cargo feature is not compiled in) to both
-# bench_hotpath and bench_faultsim.
+# bench_hotpath and bench_faultsim. PR 8 adds `checkpoint_overhead_pct`
+# to bench_zoo: the same zoo search run plain and under a write-ahead
+# run journal committing every generation, so the cost of the crash-safe
+# default is tracked across PRs.
 #
 # Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
 # "records":[...one object per emitted line...]}. The per-record fields

@@ -25,6 +25,13 @@ cargo test -q --test integration_search zoo_
 cargo test -q --test integration_faultsim zoo_
 cargo test -q --test integration_cli zoo_
 
+echo "== tier-1: crash-safe recovery integration tests (artifact-free, no skip) =="
+# The recovery_ suite covers the journaled checkpoint/resume runtime:
+# kill-and-resume bit-identity (with and without FI screening) and
+# poisoned design-point quarantine + replay — zoo-generated nets only,
+# so it runs in every container.
+cargo test -q --test integration_search recovery_
+
 echo "== tier-1: fault-model zoo integration tests (artifact-free, no skip) =="
 # The fault_model_ suite covers the unified FaultModel subsystem (bitflip
 # bit-for-bit parity, stuck-at/multibit/lutplane campaigns, selective
