@@ -1,20 +1,107 @@
-//! Search harness: budgeted NSGA-II vs the exhaustive LeNet-5 grid —
-//! wall-clock and frontier quality at ~25% of the exhaustive evaluation
-//! count (the subsystem's headline claim).
+//! Search harness, two records:
+//!
+//! 1. **async A/B** (artifact-free, always runs): the same staged zoo
+//!    search under the generational `--sync` barrier and the async
+//!    planner/executor runtime. Bit-identity is asserted in-process
+//!    *before* any timing is reported, then `async_speedup_vs_sync` and
+//!    `executor_idle_pct` go into BENCH_<n>.json via scripts/bench.sh.
+//! 2. **lenet5 grid** (needs ./artifacts): budgeted NSGA-II vs the
+//!    exhaustive grid — wall-clock and frontier quality at ~25% of the
+//!    exhaustive evaluation count (the subsystem's headline claim).
 
 mod bench_common;
 
 use deepaxe::coordinator::jobs::{run_sweep, SweepSpec};
 use deepaxe::dse::cache::ResultCache;
 use deepaxe::dse::{enumerate_masks, Evaluator};
-use deepaxe::faultsim::{CampaignParams, FaultModelKind};
+use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+use deepaxe::faultsim::{CampaignParams, FaultModelKind, SiteSampling};
 use deepaxe::report::experiments::default_eval_images;
 use deepaxe::search::{
-    frontier_hv, run_search, EvaluatorBackend, ResultCacheHook, SearchSpace, SearchSpec, Strategy,
+    frontier_hv, run_search, EvaluatorBackend, NoCache, ResultCacheHook, SearchSpace, SearchSpec,
+    Strategy,
 };
 use deepaxe::util::bench::time_once;
+use deepaxe::util::cli::env_usize;
 
-fn main() {
+/// Generational vs steady-state on a generated 12-layer net. The inner
+/// FI pool is pinned to one worker so the search executor is the only
+/// parallelism under test.
+fn async_ab() {
+    let fi = CampaignParams {
+        n_faults: env_usize("DEEPAXE_FI_FAULTS", 24),
+        n_images: env_usize("DEEPAXE_FI_IMAGES", 16),
+        seed: 0xA51C,
+        workers: 1,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+        gate: true,
+        delta: true,
+        batch: true,
+    };
+    let eval_images = env_usize("DEEPAXE_EVAL_IMAGES", 48);
+    let zoo =
+        deepaxe::zoo::build("mlp-deep-12", 0xA51C, eval_images.max(fi.n_images)).expect("zoo");
+    let luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let ev = Evaluator::new(&zoo.net, &zoo.data, &luts, eval_images, fi.clone());
+    let mults: Vec<String> =
+        deepaxe::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect();
+    let space = SearchSpace::paper(&zoo.net, &mults);
+    let mut fidelity = FidelitySpec::exact();
+    fidelity.screen_faults = (fi.n_faults / 4).max(4);
+    let workers = deepaxe::util::threadpool::default_workers();
+
+    let run = |sync: bool| {
+        let staged = StagedEvaluator::new(&ev, fidelity.clone());
+        let backend = StagedBackend { st: &staged };
+        let mut spec = SearchSpec::new(Strategy::Nsga2);
+        spec.budget = env_usize("DEEPAXE_BENCH_SEARCH_BUDGET", 24);
+        spec.seed = fi.seed;
+        spec.screen = fidelity.screening_enabled();
+        spec.workers = workers;
+        spec.sync = sync;
+        let label = if sync { "search:async_ab_sync" } else { "search:async_ab_async" };
+        let (out, dt) = time_once(label, || run_search(&space, &spec, &backend, &mut NoCache));
+        (out, staged.ledger().snapshot(), dt)
+    };
+    let (sync_out, sync_snap, sync_dt) = run(true);
+    let (async_out, async_snap, async_dt) = run(false);
+
+    // the speedup record is meaningless if the runtime changed the answer:
+    // assert bit-identity before reporting a single number
+    assert_eq!(sync_out.genotypes, async_out.genotypes, "async trajectory diverged");
+    assert_eq!(sync_out.evals_used, async_out.evals_used, "async budget account diverged");
+    assert_eq!(sync_out.promotions, async_out.promotions, "async promotions diverged");
+    assert_eq!(sync_out.frontier_idx, async_out.frontier_idx, "async frontier diverged");
+    for (a, b) in sync_out.evaluated.iter().zip(&async_out.evaluated) {
+        assert_eq!(a, b, "async design points diverged");
+    }
+    assert_eq!(
+        sync_out.hypervolume().to_bits(),
+        async_out.hypervolume().to_bits(),
+        "async hypervolume diverged"
+    );
+    assert_eq!(sync_snap, async_snap, "async FI ledger diverged");
+    assert!(sync_out.executor.is_none(), "--sync must not lease an executor");
+    let stats = async_out.executor.expect("async run reports executor stats");
+
+    let speedup = sync_dt / async_dt.max(1e-9);
+    println!(
+        "async A/B (mlp-deep-12, {} evals, {workers} workers): sync {sync_dt:.2}s vs async {async_dt:.2}s = {speedup:.2}x | {} jobs ({} inline), {} steals, idle {:.1}%",
+        sync_out.evals_used,
+        stats.jobs,
+        stats.inline_jobs,
+        stats.steals,
+        stats.idle_pct(),
+    );
+    bench_common::emit("bench_search_async", "mlp-deep-12", "async_speedup_vs_sync", speedup);
+    bench_common::emit("bench_search_async", "mlp-deep-12", "executor_idle_pct", stats.idle_pct());
+    bench_common::emit("bench_search_async", "mlp-deep-12", "executor_steals", stats.steals as f64);
+}
+
+/// The original lenet5 record: budgeted NSGA-II vs the exhaustive grid.
+fn lenet_vs_exhaustive() {
     let ctx = bench_common::setup(12, 20, 100);
     let net = ctx.net("lenet5").expect("lenet5");
     let data = ctx.data_for(&net).expect("dataset");
@@ -77,7 +164,7 @@ fn main() {
     zoo_spec.seed = fi.seed;
     let zoo_backend = EvaluatorBackend { ev: &zoo_ev };
     let (zout, zdt) = time_once("search:zoo_mlp_deep_16", || {
-        run_search(&zoo_space, &zoo_spec, &zoo_backend, &mut deepaxe::search::NoCache)
+        run_search(&zoo_space, &zoo_spec, &zoo_backend, &mut NoCache)
     });
     println!(
         "zoo nsga2: {} evals of a {}-config space in {zdt:.2}s, hv {:.1}",
@@ -92,4 +179,15 @@ fn main() {
         zout.evals_used as f64 / zdt.max(1e-9),
     );
     bench_common::emit("bench_search_zoo", "mlp-deep-16", "hv2d", zout.hypervolume());
+}
+
+fn main() {
+    async_ab();
+    if !bench_common::artifacts().join("manifest.json").exists() {
+        println!(
+            "bench_search: artifacts missing — recorded the artifact-free async A/B only."
+        );
+        return;
+    }
+    lenet_vs_exhaustive();
 }

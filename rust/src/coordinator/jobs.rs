@@ -8,6 +8,7 @@
 use crate::dse::cache::{CacheKey, ResultCache};
 use crate::dse::{DesignPoint, Evaluator};
 use crate::eval::Fidelity;
+use crate::faultsim::FaultModelKind;
 use crate::util::progress::Progress;
 use anyhow::Result;
 
@@ -58,9 +59,11 @@ pub fn run_sweep(
                 eval_images: ev.eval_images,
                 seed: ev.fi.seed,
                 fidelity: Fidelity::from_with_fi(spec.with_fi),
+                // the mult×mask sweep is the legacy bit-flip flow
+                fault_model: FaultModelKind::BitFlip,
             };
             let point = if let Some(p) = cache.get(&key) {
-                p.clone()
+                p
             } else {
                 let p = ev.evaluate(mult_eff, mask_eff, spec.with_fi);
                 cache.put(&key, p.clone())?;

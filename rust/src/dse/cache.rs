@@ -2,6 +2,18 @@
 //! (net, mult, mask, evaluation parameters). Lets the coordinator resume
 //! interrupted sweeps and share FI results between experiments (Table III
 //! rows reuse Fig. 3 sweep points, like the paper's iterative flow).
+//!
+//! The store is **sharded**: records append to N lock-striped segments
+//! under `<file>.shards/shard-<i>.jsonl` (FNV-1a of the string key picks
+//! the shard), so concurrent readers stripe across N mutexes instead of
+//! serializing on one map + one `BufWriter`. The original single file at
+//! the base path remains fully supported: it is loaded first (legacy
+//! caches work transparently, segments override on key collision) and it
+//! is the target `compact` merges every segment back into. Durability
+//! marks are per-segment ([`CacheMark`]): `flush` fsyncs each dirty shard
+//! and records every segment's byte length; `rollback_to` truncates
+//! *every* segment back to a mark, which is what keeps the crash-safe
+//! resume contract (PR 8) intact across the sharded layout.
 
 use super::DesignPoint;
 use crate::eval::Fidelity;
@@ -11,6 +23,7 @@ use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 /// Evaluation-parameter fingerprint: results are only reusable when the
 /// campaign parameters match.
@@ -195,155 +208,341 @@ fn fidelity_from_string_key(key: &str) -> &'static str {
     }
 }
 
-pub struct ResultCache {
-    path: PathBuf,
+/// Per-segment durability mark: the byte length of the base file plus
+/// every shard segment at a flush. The run journal stores one of these at
+/// each checkpoint so `--resume` can [`ResultCache::rollback_to`] exactly
+/// the bytes the checkpoint saw — in every segment, not just one file.
+///
+/// Pre-shard journals only recorded a single length; [`CacheMark::legacy`]
+/// lifts it (that length belongs to the base file, and every shard segment
+/// rolls back to empty).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheMark {
+    /// durable bytes of the single-file (legacy / compacted) segment
+    pub base: u64,
+    /// durable bytes of `shard-<i>.jsonl`, indexed by shard
+    pub shards: Vec<u64>,
+}
+
+impl CacheMark {
+    /// Mark equivalent to a pre-shard journal's single `cache_bytes` value.
+    pub fn legacy(bytes: u64) -> CacheMark {
+        CacheMark { base: bytes, shards: Vec::new() }
+    }
+
+    /// Total durable bytes across every segment (the journal's legacy
+    /// `cache_bytes` field keeps reporting this).
+    pub fn total(&self) -> u64 {
+        self.base + self.shards.iter().sum::<u64>()
+    }
+}
+
+/// Default shard count when neither existing segments nor
+/// `DEEPAXE_CACHE_SHARDS` say otherwise.
+const DEFAULT_SHARDS: usize = 8;
+
+/// FNV-1a of the string key, reduced to a shard index. Stable across runs
+/// — the same key always appends to the same segment for a given count.
+fn shard_of(key: &str, n: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % n.max(1) as u64) as usize
+}
+
+fn shard_dir(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "cache".into());
+    path.with_file_name(format!("{name}.shards"))
+}
+
+fn shard_path(path: &Path, i: usize) -> PathBuf {
+    shard_dir(path).join(format!("shard-{i}.jsonl"))
+}
+
+/// Shard count already on disk (max segment index + 1), if any. The
+/// existing layout is sticky: it wins over env/default so reopened caches
+/// keep appending to the segments they already have.
+fn existing_shard_count(path: &Path) -> Option<usize> {
+    let rd = std::fs::read_dir(shard_dir(path)).ok()?;
+    let mut max: Option<usize> = None;
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(i) = name
+            .strip_prefix("shard-")
+            .and_then(|s| s.strip_suffix(".jsonl"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            max = Some(max.map_or(i, |m| m.max(i)));
+        }
+    }
+    max.map(|m| m + 1)
+}
+
+fn file_len(path: &Path) -> u64 {
+    std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+}
+
+fn truncate_file(path: &Path, bytes: u64) -> std::io::Result<()> {
+    if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+        if f.metadata()?.len() > bytes {
+            f.set_len(bytes)?;
+            f.sync_all()?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse one JSONL segment, quarantining (never aborting on) torn lines.
+fn load_segment(path: &Path, report: &mut RecoveryReport) -> Vec<(String, DesignPoint)> {
+    let mut out = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            report.lines += 1;
+            match Json::parse(line) {
+                Ok(j) => {
+                    let key = j.get("key").and_then(|k| k.as_str()).map(str::to_string);
+                    let point = j.get("point").and_then(DesignPoint::from_json);
+                    match (key, point) {
+                        (Some(k), Some(p)) => {
+                            report.loaded += 1;
+                            out.push((k, p));
+                        }
+                        _ => {
+                            report.quarantined += 1;
+                            eprintln!("cache {}: line {} malformed, skipped", path.display(), ln + 1)
+                        }
+                    }
+                }
+                Err(e) => {
+                    report.quarantined += 1;
+                    eprintln!("cache {}: line {} unparseable ({e}), skipped", path.display(), ln + 1)
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One lock stripe: a shard's in-memory map, its lazily opened segment
+/// appender, and what loading its segment found.
+#[derive(Default)]
+struct Shard {
     map: BTreeMap<String, DesignPoint>,
-    /// held line-buffered appender; opened lazily on first `put`
     writer: Option<BufWriter<File>>,
+    report: RecoveryReport,
+}
+
+pub struct ResultCache {
+    /// base (legacy single-file / compact-target) segment path
+    path: PathBuf,
+    /// lock-striped shards; a key's stripe is `shard_of(key, len)`
+    shards: Vec<Mutex<Shard>>,
     /// flush after every append (the pre-journal behavior, and the default);
     /// journaled searches turn this off and flush at checkpoints instead
     autoflush: bool,
+    base_report: RecoveryReport,
+    /// aggregate of base + every shard segment
     report: RecoveryReport,
 }
 
 impl ResultCache {
     /// Load (or start) the cache at `path`. Unparseable lines are skipped
     /// with a warning rather than failing the run; the tally is kept in
-    /// [`ResultCache::recovery_report`].
+    /// [`ResultCache::recovery_report`]. Shard count: existing segments on
+    /// disk win, else `DEEPAXE_CACHE_SHARDS`, else 8.
     pub fn open(path: impl AsRef<Path>) -> ResultCache {
+        let n = crate::util::cli::env_usize("DEEPAXE_CACHE_SHARDS", DEFAULT_SHARDS).max(1);
+        ResultCache::open_with_shards(path, n)
+    }
+
+    /// [`ResultCache::open`] with an explicit shard count (tests, tools).
+    /// Segments already on disk still win — reopening a cache never
+    /// changes its layout mid-life.
+    pub fn open_with_shards(path: impl AsRef<Path>, shards: usize) -> ResultCache {
         let path = path.as_ref().to_path_buf();
-        let mut map = BTreeMap::new();
-        let mut report = RecoveryReport::default();
-        if let Ok(text) = std::fs::read_to_string(&path) {
-            for (ln, line) in text.lines().enumerate() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                report.lines += 1;
-                match Json::parse(line) {
-                    Ok(j) => {
-                        let key = j.get("key").and_then(|k| k.as_str()).map(str::to_string);
-                        let point = j.get("point").and_then(DesignPoint::from_json);
-                        match (key, point) {
-                            (Some(k), Some(p)) => {
-                                report.loaded += 1;
-                                map.insert(k, p);
-                            }
-                            _ => {
-                                report.quarantined += 1;
-                                eprintln!("cache {}: line {} malformed, skipped", path.display(), ln + 1)
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        report.quarantined += 1;
-                        eprintln!("cache {}: line {} unparseable ({e}), skipped", path.display(), ln + 1)
-                    }
-                }
-            }
+        let n = existing_shard_count(&path).unwrap_or(shards.max(1));
+        let mut stripes: Vec<Shard> = (0..n).map(|_| Shard::default()).collect();
+        // base segment first, shard segments after: on key collision the
+        // segment record (the newer write) wins
+        let mut base_report = RecoveryReport::default();
+        for (k, p) in load_segment(&path, &mut base_report) {
+            stripes[shard_of(&k, n)].map.insert(k, p);
         }
-        ResultCache { path, map, writer: None, autoflush: true, report }
+        for i in 0..n {
+            let mut rep = RecoveryReport::default();
+            // records are re-striped by hash at load, so a cache whose
+            // shard count changed on disk still serves every record
+            for (k, p) in load_segment(&shard_path(&path, i), &mut rep) {
+                stripes[shard_of(&k, n)].map.insert(k, p);
+            }
+            stripes[i].report = rep;
+        }
+        let mut report = base_report.clone();
+        for s in &stripes {
+            report.lines += s.report.lines;
+            report.loaded += s.report.loaded;
+            report.quarantined += s.report.quarantined;
+        }
+        ResultCache {
+            path,
+            shards: stripes.into_iter().map(Mutex::new).collect(),
+            autoflush: true,
+            base_report,
+            report,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
-    /// What `open` found on disk (torn-line quarantine tally).
+    /// Number of lock stripes / append segments.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// What `open` found on disk, aggregated across every segment.
     pub fn recovery_report(&self) -> &RecoveryReport {
         &self.report
     }
 
-    /// When off, appends stay in the held writer's buffer until
+    /// Per-segment load reports: the base file first, then every shard
+    /// segment present on disk. `repro cache verify` prints these.
+    pub fn segment_reports(&self) -> Vec<(String, RecoveryReport)> {
+        let mut out = vec![(self.path.display().to_string(), self.base_report.clone())];
+        for (i, s) in self.shards.iter().enumerate() {
+            let sp = shard_path(&self.path, i);
+            if sp.exists() {
+                out.push((sp.display().to_string(), s.lock().unwrap().report.clone()));
+            }
+        }
+        out
+    }
+
+    /// When off, appends stay in the shard writers' buffers until
     /// [`ResultCache::flush`] — journaled searches flush at checkpoint
     /// boundaries so the on-disk cache never runs ahead of the journal.
     pub fn set_autoflush(&mut self, on: bool) {
         self.autoflush = on;
     }
 
-    pub fn get(&self, key: &CacheKey) -> Option<&DesignPoint> {
-        self.map.get(&key.to_string_key())
+    /// Look a key up in its shard. Takes `&self` — concurrent readers
+    /// stripe across the shard mutexes instead of one global lock.
+    pub fn get(&self, key: &CacheKey) -> Option<DesignPoint> {
+        let k = key.to_string_key();
+        self.shards[shard_of(&k, self.shards.len())].lock().unwrap().map.get(&k).cloned()
     }
 
-    /// Every cached `(string key, point)` pair, in key order. The string
-    /// key layout is documented on [`CacheKey`]; consumers that need the
-    /// per-layer assignment back out of a key (e.g. warm-starting a
-    /// search from cached frontiers) parse the `cfg:` / legacy segments.
-    pub fn entries(&self) -> impl Iterator<Item = (&str, &DesignPoint)> {
-        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    /// Every cached `(string key, point)` pair, in key order across all
+    /// shards. The string key layout is documented on [`CacheKey`];
+    /// consumers that need the per-layer assignment back out of a key
+    /// (e.g. warm-starting a search from cached frontiers) parse the
+    /// `cfg:` / legacy segments.
+    pub fn entries(&self) -> Vec<(String, DesignPoint)> {
+        let mut all: Vec<(String, DesignPoint)> = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            all.extend(s.map.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
     }
 
-    /// Insert + append to the backing file. Records are tagged with the
-    /// fidelity they were computed at; pre-ladder readers ignore the extra
-    /// field, pre-ladder *writers* never produced it — which is fine,
-    /// because their keys only ever encoded the two legacy tiers.
+    /// Insert + append to the key's shard segment. Records are tagged with
+    /// the fidelity they were computed at; pre-ladder readers ignore the
+    /// extra field, pre-ladder *writers* never produced it — which is
+    /// fine, because their keys only ever encoded the two legacy tiers.
     pub fn put(&mut self, key: &CacheKey, point: DesignPoint) -> std::io::Result<()> {
+        let k = key.to_string_key();
         let record = json::obj(vec![
-            ("key", json::str(key.to_string_key())),
+            ("key", json::str(k.as_str())),
             ("fidelity", json::str(key.fidelity.name())),
             ("point", point.to_json()),
         ]);
-        if self.writer.is_none() {
-            if let Some(parent) = self.path.parent() {
+        let i = shard_of(&k, self.shards.len());
+        let seg = shard_path(&self.path, i);
+        let autoflush = self.autoflush;
+        let shard = self.shards[i].get_mut().unwrap();
+        if shard.writer.is_none() {
+            if let Some(parent) = seg.parent() {
                 std::fs::create_dir_all(parent)?;
             }
-            let f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
-            self.writer = Some(BufWriter::new(f));
+            let f = std::fs::OpenOptions::new().create(true).append(true).open(&seg)?;
+            shard.writer = Some(BufWriter::new(f));
         }
-        let w = self.writer.as_mut().unwrap();
+        let w = shard.writer.as_mut().unwrap();
         writeln!(w, "{record}")?;
-        if self.autoflush {
+        if autoflush {
             w.flush()?;
         }
-        self.map.insert(key.to_string_key(), point);
+        shard.map.insert(k, point);
         Ok(())
     }
 
-    /// Flush buffered appends to disk (fsync included) and return the
-    /// durable byte length of the backing file. The journal records that
-    /// length at each checkpoint so a resumed run can roll the cache back
-    /// to exactly the bytes the checkpoint saw.
-    pub fn flush(&mut self) -> u64 {
-        if let Some(w) = self.writer.as_mut() {
-            let _ = w.flush();
-            let _ = w.get_ref().sync_all();
+    /// Flush buffered appends (fsync included, **per shard**) and return
+    /// the durable byte length of every segment. The journal records the
+    /// mark at each checkpoint so a resumed run can roll the cache back to
+    /// exactly the bytes the checkpoint saw.
+    pub fn flush(&mut self) -> CacheMark {
+        let mut mark =
+            CacheMark { base: file_len(&self.path), shards: Vec::with_capacity(self.shards.len()) };
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            let shard = s.get_mut().unwrap();
+            if let Some(w) = shard.writer.as_mut() {
+                let _ = w.flush();
+                let _ = w.get_ref().sync_all();
+            }
+            mark.shards.push(file_len(&shard_path(&self.path, i)));
         }
-        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+        mark
     }
 
-    /// Truncate the backing file to `bytes` (a length previously returned
-    /// by [`ResultCache::flush`]) and reload. Used on `--resume`: appends
-    /// made after the checkpoint being resumed from are discarded so replay
-    /// re-derives them deterministically instead of double-counting.
-    pub fn rollback_to(&mut self, bytes: u64) -> std::io::Result<()> {
-        self.writer = None; // drop (and flush) the appender before truncating
-        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&self.path) {
-            if f.metadata()?.len() > bytes {
-                f.set_len(bytes)?;
-                f.sync_all()?;
-            }
+    /// Truncate **every** segment back to `mark` (a mark previously
+    /// returned by [`ResultCache::flush`]) and reload. Used on `--resume`:
+    /// appends made after the checkpoint being resumed from are discarded
+    /// — in all shards, so no segment can run ahead of the journal — and
+    /// replay re-derives them deterministically instead of double-counting.
+    /// A [`CacheMark::legacy`] mark empties every shard segment.
+    pub fn rollback_to(&mut self, mark: &CacheMark) -> std::io::Result<()> {
+        let n = self.shards.len();
+        for s in self.shards.iter_mut() {
+            // drop (and flush) the appenders before truncating
+            s.get_mut().unwrap().writer = None;
+        }
+        truncate_file(&self.path, mark.base)?;
+        for i in 0..n {
+            truncate_file(&shard_path(&self.path, i), mark.shards.get(i).copied().unwrap_or(0))?;
         }
         let autoflush = self.autoflush;
-        *self = ResultCache::open(&self.path);
+        *self = ResultCache::open_with_shards(&self.path, n);
         self.autoflush = autoflush;
         Ok(())
     }
 
-    /// Rewrite the backing file as a clean, deduplicated segment: one line
-    /// per surviving record, in key order, written atomically (temp file +
-    /// rename + dir fsync) so a crash mid-compact leaves the old file
-    /// intact. Quarantined lines are dropped for good; returns the number
-    /// of records written.
+    /// Merge every segment into one clean, deduplicated base file: one
+    /// line per surviving record, in key order, written atomically (temp
+    /// file + rename + dir fsync) so a crash mid-compact leaves the old
+    /// layout intact; shard segments are removed after the rename lands.
+    /// Quarantined lines are dropped for good; returns the number of
+    /// records written.
     pub fn compact(&mut self) -> std::io::Result<usize> {
-        self.writer = None; // the appender's fd goes stale across the rename
+        let entries = self.entries();
         let mut out = String::new();
-        for (k, p) in &self.map {
+        for (k, p) in &entries {
             let record = json::obj(vec![
-                ("key", json::str(k)),
+                ("key", json::str(k.as_str())),
                 ("fidelity", json::str(fidelity_from_string_key(k))),
                 ("point", p.to_json()),
             ]);
@@ -354,8 +553,17 @@ impl ResultCache {
             std::fs::create_dir_all(parent)?;
         }
         crate::recovery::atomic_write(&self.path, &out)?;
-        self.report = RecoveryReport { lines: self.map.len(), loaded: self.map.len(), quarantined: 0 };
-        Ok(self.map.len())
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            let shard = s.get_mut().unwrap();
+            shard.writer = None; // the appender's fd goes stale across removal
+            shard.report = RecoveryReport::default();
+            let _ = std::fs::remove_file(shard_path(&self.path, i));
+        }
+        let _ = std::fs::remove_dir(shard_dir(&self.path));
+        self.base_report =
+            RecoveryReport { lines: entries.len(), loaded: entries.len(), quarantined: 0 };
+        self.report = self.base_report.clone();
+        Ok(entries.len())
     }
 }
 
@@ -399,12 +607,19 @@ mod tests {
         }
     }
 
+    /// Remove a cache's base file AND its shard segment directory, so a
+    /// stale layout from an earlier run can't leak into a test.
+    fn reset(p: &Path) {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_dir_all(shard_dir(p));
+    }
+
     #[test]
     fn put_get_persist() {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         {
             let mut c = ResultCache::open(&p);
             assert!(c.is_empty());
@@ -427,6 +642,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache2_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
+        reset(&p);
         std::fs::write(&p, "not json\n{\"key\": \"k\"}\n").unwrap();
         let c = ResultCache::open(&p);
         assert!(c.is_empty());
@@ -497,6 +713,7 @@ mod tests {
             key("mlp3", 1).to_string_key(),
             point("mlp3", 1).to_json()
         );
+        reset(&p);
         std::fs::write(&p, legacy_line).unwrap();
         let c = ResultCache::open(&p);
         assert_eq!(c.len(), 1);
@@ -547,6 +764,7 @@ mod tests {
             "{{\"key\": \"mlp3|exact|1|10|20|30|1|1\", \"point\": {}}}\n",
             point("mlp3", 1).to_json()
         );
+        reset(&p);
         std::fs::write(&p, legacy_line).unwrap();
         let c = ResultCache::open(&p);
         assert_eq!(c.len(), 1);
@@ -589,7 +807,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache4_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         let k = CacheKey::for_assignment(
             "mlp3",
             &["mul8s_1kvp_s", "mul8s_1kv8_s", "exact"],
@@ -612,7 +830,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache3_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         let mut c = ResultCache::open(&p);
         c.put(&key("m", 1), point("m", 1)).unwrap();
         let mut p2 = point("m", 1);
@@ -636,6 +854,7 @@ mod tests {
                 point("mlp3", mask).to_json()
             )
         };
+        reset(&p);
         std::fs::write(&p, format!("{}\n{{\"key\": \"torn\n{}\n", good(1), good(2))).unwrap();
         let c = ResultCache::open(&p);
         assert_eq!(c.len(), 2);
@@ -644,23 +863,25 @@ mod tests {
         assert!(!r.is_clean());
     }
 
-    /// Satellite (c): a crash can truncate the file at ANY byte of the
+    /// Satellite (c): a crash can truncate a segment at ANY byte of the
     /// final append. Whatever the cut point, load must succeed, quarantine
     /// at most the torn line, serve every complete record — and a compact
-    /// pass must round-trip the survivors into a clean segment.
+    /// pass must round-trip the survivors into a clean segment. Runs on a
+    /// single-shard cache so every record shares one segment file.
     #[test]
     fn property_truncation_at_every_offset_is_recoverable() {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache8_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         {
-            let mut c = ResultCache::open(&p);
+            let mut c = ResultCache::open_with_shards(&p, 1);
             for mask in 1..=3 {
                 c.put(&key("mlp3", mask), point("mlp3", mask)).unwrap();
             }
         }
-        let full = std::fs::read(&p).unwrap();
+        let seg = shard_path(&p, 0);
+        let full = std::fs::read(&seg).unwrap();
         // byte length of the first two complete records (incl. newline)
         let text = String::from_utf8(full.clone()).unwrap();
         let mut nl = text.match_indices('\n');
@@ -668,18 +889,23 @@ mod tests {
         // stop before full.len() - 1: cutting only the trailing newline
         // leaves the third record complete, not torn
         for cut in keep..full.len() - 1 {
-            std::fs::write(&p, &full[..cut]).unwrap();
-            let mut c = ResultCache::open(&p);
+            // compact (below) merged the previous iteration into the base
+            // file and removed the segments; restore the crashed layout
+            let _ = std::fs::remove_file(&p);
+            std::fs::create_dir_all(shard_dir(&p)).unwrap();
+            std::fs::write(&seg, &full[..cut]).unwrap();
+            let mut c = ResultCache::open_with_shards(&p, 1);
             let r = c.recovery_report().clone();
             assert_eq!(r.loaded, 2, "cut at byte {cut}: both intact records load");
             assert!(r.quarantined <= 1, "cut at byte {cut}: at most the torn line quarantined");
             assert_eq!(c.get(&key("mlp3", 1)).unwrap().mask, 1);
             assert_eq!(c.get(&key("mlp3", 2)).unwrap().mask, 2);
             assert!(c.get(&key("mlp3", 3)).is_none(), "cut at byte {cut}: torn record must not load");
-            // compact → clean segment, survivors intact
+            // compact → clean base segment, survivors intact
             assert_eq!(c.compact().unwrap(), 2);
             assert!(!p.with_extension("tmp").exists());
-            let c2 = ResultCache::open(&p);
+            assert!(!seg.exists(), "cut at byte {cut}: compact removes the shard segment");
+            let c2 = ResultCache::open_with_shards(&p, 1);
             assert!(c2.recovery_report().is_clean(), "cut at byte {cut}: compacted file is clean");
             assert_eq!(c2.len(), 2);
             assert_eq!(c2.get(&key("mlp3", 2)).unwrap().mask, 2);
@@ -691,7 +917,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache9_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         let mut c = ResultCache::open(&p);
         let mut screen = key("mlp3", 1);
         screen.fidelity = Fidelity::FiScreen;
@@ -714,29 +940,128 @@ mod tests {
     }
 
     #[test]
-    fn flush_reports_bytes_and_rollback_truncates() {
+    fn flush_reports_marks_and_rollback_truncates() {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache10_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
-        let mut c = ResultCache::open(&p);
+        reset(&p);
+        let mut c = ResultCache::open_with_shards(&p, 2);
         c.put(&key("m", 1), point("m", 1)).unwrap();
         c.put(&key("m", 2), point("m", 2)).unwrap();
-        let checkpoint_bytes = c.flush();
-        assert_eq!(checkpoint_bytes, std::fs::metadata(&p).unwrap().len());
+        let mark = c.flush();
+        assert_eq!(mark.shards.len(), 2);
+        let on_disk: u64 = (0..2).map(|i| file_len(&shard_path(&p, i))).sum();
+        assert_eq!(mark.total(), on_disk + file_len(&p));
         c.put(&key("m", 4), point("m", 4)).unwrap();
-        assert!(c.flush() > checkpoint_bytes);
+        assert!(c.flush().total() > mark.total());
         // resume path: discard the post-checkpoint append
-        c.rollback_to(checkpoint_bytes).unwrap();
+        c.rollback_to(&mark).unwrap();
         assert_eq!(c.len(), 2);
         assert!(c.get(&key("m", 4)).is_none());
         assert!(c.recovery_report().is_clean(), "rollback lands on a line boundary");
+        for (i, &bytes) in mark.shards.iter().enumerate() {
+            assert_eq!(file_len(&shard_path(&p, i)), bytes, "shard {i} back at its mark");
+        }
         // appends still work after a rollback
         c.put(&key("m", 8), point("m", 8)).unwrap();
         drop(c);
         let c = ResultCache::open(&p);
         assert_eq!(c.len(), 3);
         assert_eq!(c.get(&key("m", 8)).unwrap().mask, 8);
+        assert_eq!(c.shard_count(), 2, "on-disk layout is sticky over the env default");
+    }
+
+    /// Satellite bugfix regression: tear ONE shard mid-record while the
+    /// others stay intact. Only that segment may quarantine a line, every
+    /// other record must be served, and a legacy (shard-less) mark must
+    /// empty every shard segment on rollback.
+    #[test]
+    fn torn_single_shard_quarantines_only_that_segment() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache12_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        reset(&p);
+        let mut c = ResultCache::open_with_shards(&p, 4);
+        for mask in 1..=12 {
+            c.put(&key("m", mask), point("m", mask)).unwrap();
+        }
+        let mark = c.flush();
+        drop(c);
+        // tear the last record of the fullest segment mid-line
+        let (victim, victim_bytes) = mark
+            .shards
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by_key(|&(_, b)| b)
+            .unwrap();
+        assert!(victim_bytes > 0, "at least one shard must hold records");
+        let seg = shard_path(&p, victim);
+        let bytes = std::fs::read(&seg).unwrap();
+        let torn: Vec<String> = {
+            let text = String::from_utf8(bytes.clone()).unwrap();
+            text.lines().map(str::to_string).collect()
+        };
+        std::fs::write(&seg, &bytes[..bytes.len() - 10]).unwrap();
+        let c = ResultCache::open(&p);
+        assert_eq!(c.shard_count(), 4);
+        assert_eq!(c.recovery_report().quarantined, 1, "exactly the torn line quarantined");
+        assert_eq!(c.len(), 11, "every intact record is served");
+        // the per-segment report pins the damage to the torn shard
+        let dirty: Vec<String> = c
+            .segment_reports()
+            .into_iter()
+            .filter(|(_, r)| !r.is_clean())
+            .map(|(name, _)| name)
+            .collect();
+        assert_eq!(dirty, vec![seg.display().to_string()]);
+        // the torn record is the victim segment's last line — all other
+        // masks still resolve
+        let lost = torn.last().unwrap();
+        for mask in 1..=12u64 {
+            let hit = c.get(&key("m", mask)).is_some();
+            let expect_lost = lost.contains(&key("m", mask).to_string_key());
+            assert_eq!(hit, !expect_lost, "mask {mask}");
+        }
+        // pre-shard journals carry a single byte length: rolling back to
+        // a legacy mark must truncate every shard segment to empty
+        let mut c = c;
+        c.rollback_to(&CacheMark::legacy(0)).unwrap();
+        assert!(c.is_empty());
+        for i in 0..4 {
+            assert_eq!(file_len(&shard_path(&p, i)), 0, "shard {i} emptied by legacy rollback");
+        }
+    }
+
+    #[test]
+    fn compact_merges_segments_into_base_and_marks_collapse() {
+        let dir = std::env::temp_dir().join(format!("deepaxe_cache13_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("results.jsonl");
+        reset(&p);
+        // a legacy base record plus sharded appends over it
+        let legacy_line = format!(
+            "{{\"key\": \"{}\", \"point\": {}}}\n",
+            key("m", 1).to_string_key(),
+            point("m", 1).to_json()
+        );
+        std::fs::write(&p, legacy_line).unwrap();
+        let mut c = ResultCache::open_with_shards(&p, 3);
+        assert_eq!(c.len(), 1, "legacy single-file cache loads transparently");
+        let mut newer = point("m", 1);
+        newer.ax_acc = 0.123;
+        c.put(&key("m", 1), newer).unwrap();
+        c.put(&key("m", 2), point("m", 2)).unwrap();
+        assert_eq!(c.get(&key("m", 1)).unwrap().ax_acc, 0.123, "segment overrides base");
+        assert_eq!(c.compact().unwrap(), 2);
+        assert!(!shard_dir(&p).exists(), "compact removes the segment directory");
+        let mark = c.flush();
+        assert_eq!(mark.shards.iter().sum::<u64>(), 0, "all bytes live in the base segment");
+        assert_eq!(mark.base, file_len(&p));
+        let c = ResultCache::open_with_shards(&p, 3);
+        assert!(c.recovery_report().is_clean());
+        assert_eq!(c.get(&key("m", 1)).unwrap().ax_acc, 0.123);
+        assert_eq!(c.get(&key("m", 2)).unwrap().mask, 2);
     }
 
     #[test]
@@ -744,7 +1069,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("deepaxe_cache11_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("results.jsonl");
-        let _ = std::fs::remove_file(&p);
+        reset(&p);
         let mut c = ResultCache::open(&p);
         c.set_autoflush(false);
         c.put(&key("m", 1), point("m", 1)).unwrap();

@@ -80,6 +80,14 @@ pub struct FiLedger {
     stuckat_faults: AtomicU64,
     lutplane_faults: AtomicU64,
     multibit_faults: AtomicU64,
+    /// wall-clock accounting for `evaluate` calls. Deliberately NOT in
+    /// [`Self::COUNTERS`]: wall time is machine- and schedule-dependent,
+    /// so journal snapshots, `--resume` replay verification, and the
+    /// byte-stable summary line must never see it — the run report reads
+    /// these through [`Self::eval_calls`] / [`Self::eval_wall_ns`] to
+    /// pair with the executor's idle/steal statistics
+    eval_calls: AtomicU64,
+    eval_wall_ns: AtomicU64,
 }
 
 impl FiLedger {
@@ -261,6 +269,24 @@ impl FiLedger {
             FaultModelKind::LutPlane => self.lutplane_faults.load(Ordering::Relaxed),
             FaultModelKind::MultiBit => self.multibit_faults.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record one completed `evaluate` call's wall time. Excluded from
+    /// snapshots/summary by design (see the field docs).
+    pub fn record_eval_wall(&self, ns: u64) {
+        self.eval_calls.fetch_add(1, Ordering::Relaxed);
+        self.eval_wall_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Completed `evaluate` calls (wall-clock accounting; not journaled).
+    pub fn eval_calls(&self) -> u64 {
+        self.eval_calls.load(Ordering::Relaxed)
+    }
+
+    /// Total wall-clock nanoseconds spent inside `evaluate` across all
+    /// callers (busy time summed over workers; not journaled).
+    pub fn eval_wall_ns(&self) -> u64 {
+        self.eval_wall_ns.load(Ordering::Relaxed)
     }
 
     /// Total faults simulated across both FI tiers (+ adaptive pilots).
@@ -766,8 +792,23 @@ impl<'a> StagedEvaluator<'a> {
     /// threshold and arms early stopping as a whole (`0` = run every
     /// campaign to completion, gate ignored). Thread-safe (`&self`):
     /// population workers share one evaluator, and the parallel promotion
-    /// pass resumes cached campaigns concurrently.
+    /// pass resumes cached campaigns concurrently. In the async search
+    /// runtime a screen campaign parked by the trace cache may be resumed
+    /// by whichever executor worker picks up the promotion job — the
+    /// cache keys on genotype, not on thread, so the handoff is free.
     pub fn evaluate(
+        &self,
+        names: &[&str],
+        fidelity: Fidelity,
+        gate: Option<&FiGate>,
+    ) -> DesignPoint {
+        let t0 = Instant::now();
+        let point = self.evaluate_inner(names, fidelity, gate);
+        self.ledger.record_eval_wall(t0.elapsed().as_nanos() as u64);
+        point
+    }
+
+    fn evaluate_inner(
         &self,
         names: &[&str],
         fidelity: Fidelity,
@@ -1285,6 +1326,27 @@ mod tests {
         });
         assert_eq!(screen, cached.evaluate(&names, Fidelity::FiScreen, None));
         assert_eq!(full, cached.evaluate(&names, Fidelity::FiFull, None));
+    }
+
+    #[test]
+    fn eval_wall_counters_accumulate_but_stay_out_of_snapshots() {
+        let net = tiny_mlp();
+        let data = fake_data(16);
+        let luts = luts();
+        let ev = Evaluator::new(&net, &data, &luts, 8, fi_params(16));
+        let st = StagedEvaluator::new(&ev, FidelitySpec::exact());
+        assert_eq!(st.ledger().eval_calls(), 0);
+        let _ = st.evaluate(&["mul8s_1kvp_s", "exact"], Fidelity::Accuracy, None);
+        let _ = st.evaluate(&["exact", "exact"], Fidelity::HwOnly, None);
+        assert_eq!(st.ledger().eval_calls(), 2, "every tier is timed");
+        // wall time is machine-dependent state: snapshots must not carry
+        // it, and restoring a snapshot must not clobber it
+        let snap = st.ledger().snapshot();
+        assert!(!snap.to_json().to_string().contains("eval_wall"));
+        let wall = st.ledger().eval_wall_ns();
+        st.ledger().restore(&snap);
+        assert_eq!(st.ledger().eval_calls(), 2);
+        assert_eq!(st.ledger().eval_wall_ns(), wall);
     }
 
     #[test]

@@ -24,11 +24,15 @@ COMMANDS
   exp <id>                     regenerate a paper experiment:
                                table1 table2 table3 table4 fig3 fig4
                                ablation-fi-n ablation-axm search zoo-sweep
-                               fault-zoo all
+                               fault-zoo async all
                                (zoo-sweep is artifact-free: deep-net DSE on a
                                generated 16-layer net, hv2d/hv3d comparison;
                                fault-zoo is artifact-free: per-fault-model
-                               vulnerability + hardened frontier comparison)
+                               vulnerability + hardened frontier comparison;
+                               async is artifact-free: generational --sync vs
+                               steady-state async A/B — asserts bit-identity
+                               in-process, prints async_speedup_vs_sync and
+                               executor idle/steal counters)
   eval                         evaluate one configuration
       --net <name> --mult <kvp|kv9|kv8|exact> --config <e.g. 1-0-110> [--fi]
   pipeline                     automated Fig.2 design flow
@@ -38,14 +42,20 @@ COMMANDS
   search                       budgeted multi-objective DSE over per-layer
                                multiplier assignments (generalizes the 2^n sweep)
       --net <name> [--strategy nsga2|anneal|hillclimb|exhaustive]
-      [--budget N] [--mults a,b,c] [--no-fi] [--workers N]
+      [--budget N] [--mults a,b,c] [--no-fi] [--workers N] [--sync]
       [--fi-epsilon PP] [--fi-screen N] [--warm-start]
       [--fault-model bitflip|stuckat|lutplane|multibit] [--harden]
       [--checkpoint-every N] [--resume RUN] [--eval-deadline-s S]
+      (evaluations run on an async planner/executor pipeline consuming
+      results in submission order — bit-identical to the generational
+      path; --sync or DEEPAXE_NO_ASYNC forces the barrier loop)
   cache verify|compact [path]  inspect / repair a result-cache jsonl file
                                (default results/results.jsonl): verify
-                               reports torn lines quarantined at load,
-                               compact atomically rewrites a clean segment
+                               reports torn lines quarantined at load —
+                               per segment for sharded caches
+                               (<name>.shards/shard-<i>.jsonl, shard count
+                               via DEEPAXE_CACHE_SHARDS) — and compact
+                               atomically rewrites one clean base segment
   zoo list                     parametric model zoo: presets + generated stats
   zoo build                    generate a zoo net + workload, print its digest
       --net <preset>|--spec <topology> [--seed N] [--images N]
@@ -249,6 +259,13 @@ fn experiment(args: &cli::Args) -> Result<()> {
         println!("{}", exp::fault_zoo(args.get_usize("budget", 0)?)?);
         return Ok(());
     }
+    if id == "async" {
+        println!(
+            "{}",
+            exp::async_ab(args.get_usize("budget", 0)?, args.get_usize("workers", 0)?)?
+        );
+        return Ok(());
+    }
     let ctx = Ctx::load()?;
     let nets = args.get_list("nets", &["mlp3", "lenet5", "alexnet"]);
     let mut outputs = Vec::new();
@@ -391,6 +408,7 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     spec.screen = fidelity.screening_enabled();
     spec.workers = args.get_usize("workers", 1)?;
     spec.warm_start = args.has("warm-start");
+    spec.sync = args.has("sync");
     let budget = spec.resolved_budget(&space);
     eprintln!(
         "search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, fi-epsilon {}pp, fi-screen {}, fault-model {}{}",
@@ -472,8 +490,8 @@ fn run_fingerprint(
 /// search`: `--checkpoint-every 0` bypasses journaling entirely
 /// (bit-for-bit the pre-journal flow), otherwise every run gets a
 /// write-ahead journal under `runs_dir` and `--resume <run-id>` replays
-/// one to the exact interrupted state (cache rolled back to the last
-/// checkpointed byte length, evaluator ledger / parked campaigns
+/// one to the exact interrupted state (every cache segment rolled back to
+/// the last checkpointed mark, evaluator ledger / parked campaigns
 /// restored, RNG re-driven through the recorded event stream).
 fn journaled_search(
     args: &cli::Args,
@@ -497,7 +515,7 @@ fn journaled_search(
         Some(run) => {
             let j = JournalWriter::resume(runs_dir, run, fingerprint, every)
                 .map_err(anyhow::Error::msg)?;
-            hook.cache.rollback_to(j.cache_bytes())?;
+            hook.cache.rollback_to(&j.cache_mark())?;
             if let Some(state) = j.eval_state() {
                 staged.restore_state(state);
             }
@@ -536,6 +554,17 @@ fn cache_cmd(args: &cli::Args) -> Result<()> {
     );
     match action {
         "verify" => {
+            // sharded caches (PR 9) spread records over
+            // <name>.shards/shard-<i>.jsonl append segments; report each
+            let segments = cache.segment_reports();
+            if segments.len() > 1 {
+                for (seg, sr) in &segments {
+                    println!(
+                        "  segment {seg}: {} lines, {} loaded, {} quarantined",
+                        sr.lines, sr.loaded, sr.quarantined
+                    );
+                }
+            }
             if r.is_clean() {
                 println!("clean");
             } else {
@@ -599,6 +628,12 @@ fn print_search_report(
         }
     }
     println!("{ledger_summary}");
+    if let Some(x) = &out.executor {
+        println!(
+            "executor: {} workers, {} jobs ({} run inline by the planner), {} steals, idle {:.1}%",
+            x.workers, x.jobs, x.inline_jobs, x.steals, x.idle_pct()
+        );
+    }
     println!(
         "hypervolume2d (ref {:?}): {:.1} | hypervolume3d (ref {:?}): {:.0}",
         deepaxe::search::HV_REF,
@@ -726,6 +761,7 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
     spec.screen = fidelity.screening_enabled();
     spec.workers = args.get_usize("workers", 1)?;
     spec.warm_start = args.has("warm-start");
+    spec.sync = args.has("sync");
     let budget = spec.resolved_budget(&space);
     eprintln!(
         "zoo search[{}]: {} ({} layers, alphabet {}), space {} configs, budget {}, warm-start {}, fault-model {}{}",

@@ -23,7 +23,21 @@
 //! does the journal flip to live mode and let the backend run again. The
 //! acceptance gate is bit-identity: frontier, budget count and FiLedger
 //! of a resumed run equal the uninterrupted run's exactly.
+//!
+//! Under the asynchronous driver, journal boundaries are **completion-
+//! clock ticks**: the planner consumes executor results in submission
+//! order, so the event stream, counters and checkpoint positions are the
+//! same whether the evaluations behind them ran serially, behind the
+//! generational barrier, or out of order on the work-stealing executor.
+//! That is why a journal written by a `--sync` run resumes under the
+//! async runtime (and vice versa) without a compatibility shim.
+//!
+//! The result cache's durable position is a per-segment
+//! [`CacheMark`](crate::dse::cache::CacheMark) since the store was
+//! sharded; checkpoints persist every segment length (keeping the legacy
+//! single `cache_bytes` total alongside for old journals).
 
+use crate::dse::cache::CacheMark;
 use crate::dse::DesignPoint;
 use crate::eval::Fidelity;
 use crate::util::json::{self, Json};
@@ -125,16 +139,17 @@ pub trait RunJournal {
     fn warm_override(&self) -> Option<Vec<String>> {
         None
     }
-    /// Called by the driver at every generation/batch boundary. Returns
-    /// true when the journal wants a checkpoint committed — the driver
-    /// then flushes the result cache and calls
+    /// Called by the driver at every generation/batch boundary (a
+    /// completion-clock tick under the async runtime). Returns true when
+    /// the journal wants a checkpoint committed — the driver then flushes
+    /// the result cache and calls
     /// [`commit_checkpoint`](RunJournal::commit_checkpoint) with the
-    /// flushed byte length. During replay this is where the journal
+    /// flushed per-segment mark. During replay this is where the journal
     /// verifies drained-queue counter parity and flips to live mode.
     fn boundary(&mut self, _counters: &RunCounters) -> bool {
         false
     }
-    fn commit_checkpoint(&mut self, _counters: &RunCounters, _cache_bytes: u64) {}
+    fn commit_checkpoint(&mut self, _counters: &RunCounters, _mark: &CacheMark) {}
 }
 
 /// The no-op journal: `run_search` without checkpointing.
@@ -215,7 +230,7 @@ impl Event {
 #[derive(Debug, Clone)]
 struct Checkpoint {
     counters: RunCounters,
-    cache_bytes: u64,
+    cache_mark: CacheMark,
     eval_state: Option<Json>,
 }
 
@@ -251,7 +266,16 @@ impl Checkpoint {
                 ("promotions", json::num(c.promotions as f64)),
                 ("archive_len", json::num(c.archive_len as f64)),
                 ("rng", rng_to_json(&c.rng_state)),
-                ("cache_bytes", json::num(self.cache_bytes as f64)),
+                // legacy readers only know the single total; the
+                // per-segment mark rides alongside
+                ("cache_bytes", json::num(self.cache_mark.total() as f64)),
+                ("base_bytes", json::num(self.cache_mark.base as f64)),
+                (
+                    "shard_bytes",
+                    Json::Arr(
+                        self.cache_mark.shards.iter().map(|&b| json::num(b as f64)).collect(),
+                    ),
+                ),
                 ("eval_state", self.eval_state.clone().unwrap_or(Json::Null)),
             ]),
         )])
@@ -259,6 +283,20 @@ impl Checkpoint {
 
     fn from_json(j: &Json) -> Option<Checkpoint> {
         let c = j.get("checkpoint")?;
+        let total = c.get("cache_bytes")?.as_i64()? as u64;
+        // pre-shard journals carry only the total, which was the byte
+        // length of the single base file back then
+        let cache_mark = match c.get("base_bytes").and_then(Json::as_i64) {
+            Some(base) => CacheMark {
+                base: base as u64,
+                shards: c
+                    .get("shard_bytes")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_i64).map(|b| b as u64).collect())
+                    .unwrap_or_default(),
+            },
+            None => CacheMark::legacy(total),
+        };
         Some(Checkpoint {
             counters: RunCounters {
                 evals_used: c.get("evals_used")?.as_usize()?,
@@ -267,7 +305,7 @@ impl Checkpoint {
                 archive_len: c.get("archive_len")?.as_usize()?,
                 rng_state: rng_from_json(c.get("rng")),
             },
-            cache_bytes: c.get("cache_bytes")?.as_i64()? as u64,
+            cache_mark,
             eval_state: match c.get("eval_state") {
                 Some(Json::Null) | None => None,
                 Some(v) => Some(v.clone()),
@@ -422,12 +460,19 @@ impl<'a> JournalWriter<'a> {
         self.commits
     }
 
-    /// Result-cache byte length at the loaded checkpoint — the caller
-    /// truncates the cache file back to this before the resumed run, so
-    /// post-checkpoint entries are re-evaluated live instead of becoming
-    /// phantom cache hits.
+    /// Total result-cache bytes at the loaded checkpoint (legacy view of
+    /// [`cache_mark`](Self::cache_mark)).
     pub fn cache_bytes(&self) -> u64 {
-        self.checkpoint.as_ref().map_or(0, |c| c.cache_bytes)
+        self.checkpoint.as_ref().map_or(0, |c| c.cache_mark.total())
+    }
+
+    /// Per-segment result-cache mark at the loaded checkpoint — the
+    /// caller rolls the cache back to this before the resumed run, so
+    /// post-checkpoint entries in *any* shard are re-evaluated live
+    /// instead of becoming phantom cache hits. A pre-shard journal yields
+    /// a [`CacheMark::legacy`] mark (base bytes only, shards emptied).
+    pub fn cache_mark(&self) -> CacheMark {
+        self.checkpoint.as_ref().map_or_else(CacheMark::default, |c| c.cache_mark.clone())
     }
 
     /// The opaque evaluator state at the loaded checkpoint.
@@ -580,12 +625,12 @@ impl RunJournal for JournalWriter<'_> {
         }
     }
 
-    fn commit_checkpoint(&mut self, counters: &RunCounters, cache_bytes: u64) {
+    fn commit_checkpoint(&mut self, counters: &RunCounters, mark: &CacheMark) {
         self.boundaries = 0;
         self.commits += 1;
         self.checkpoint = Some(Checkpoint {
             counters: counters.clone(),
-            cache_bytes,
+            cache_mark: mark.clone(),
             eval_state: self.provider.map(|p| p.checkpoint_state()),
         });
         if let Err(e) = self.write_file() {
@@ -653,11 +698,12 @@ mod tests {
             rng_state: Some([1, u64::MAX, 3, 0xDEADBEEFDEADBEEF]),
         };
         assert!(w.boundary(&counters));
-        w.commit_checkpoint(&counters, 123);
+        w.commit_checkpoint(&counters, &CacheMark { base: 3, shards: vec![100, 0, 20] });
 
         let mut r = JournalWriter::resume(&dir, w.run_id(), fp, 1).unwrap();
         assert!(r.replaying());
         assert_eq!(r.cache_bytes(), 123);
+        assert_eq!(r.cache_mark(), CacheMark { base: 3, shards: vec![100, 0, 20] });
         assert_eq!(r.warm_override(), Some(vec!["0011".to_string()]));
         match r.replay_eval("0011", Fidelity::FiFull) {
             Replayed::Point { hit, point: p } => {
@@ -686,7 +732,7 @@ mod tests {
         let mut w = JournalWriter::create(&dir, "seed=1", 1);
         let c = RunCounters::default();
         assert!(w.boundary(&c));
-        w.commit_checkpoint(&c, 0);
+        w.commit_checkpoint(&c, &CacheMark::default());
         // a different fingerprint hashes to a different run-id
         let id = w.run_id().to_string();
         assert!(JournalWriter::resume(&dir, &id, "seed=2", 1).is_err());
@@ -703,7 +749,7 @@ mod tests {
         // every=2: first boundary does not commit
         assert!(!w.boundary(&c));
         assert!(w.boundary(&c));
-        w.commit_checkpoint(&c, 0);
+        w.commit_checkpoint(&c, &CacheMark::default());
         assert!(w.path().exists());
         assert!(!w.path().with_extension("tmp").exists());
         let _ = fs::remove_dir_all(&dir);
@@ -716,7 +762,7 @@ mod tests {
         w.limit_checkpoints(1);
         let c1 = RunCounters { evals_used: 1, ..Default::default() };
         assert!(w.boundary(&c1));
-        w.commit_checkpoint(&c1, 10);
+        w.commit_checkpoint(&c1, &CacheMark::legacy(10));
         let frozen = fs::read_to_string(w.path()).unwrap();
         // past the limit, boundaries stop requesting commits
         let c2 = RunCounters { evals_used: 2, ..Default::default() };
@@ -736,9 +782,35 @@ mod tests {
         w.record_eval("0000", Fidelity::FiFull, false, &point("0000"));
         let c = RunCounters { evals_used: 1, archive_len: 1, ..Default::default() };
         assert!(w.boundary(&c));
-        w.commit_checkpoint(&c, 0);
+        w.commit_checkpoint(&c, &CacheMark::default());
         let mut r = JournalWriter::resume(&dir, w.run_id(), fp, 1).unwrap();
         let _ = fs::remove_dir_all(&dir);
         let _ = r.replay_eval("1111", Fidelity::FiFull);
+    }
+
+    /// A journal written before the cache was sharded carries only the
+    /// single `cache_bytes` total; loading it must yield a legacy mark —
+    /// base bytes intact, every shard segment rolled back to empty.
+    #[test]
+    fn pre_shard_checkpoint_lines_parse_as_legacy_marks() {
+        let j = Json::parse(
+            "{\"checkpoint\": {\"evals_used\": 4, \"cache_hits\": 1, \"promotions\": 0, \
+             \"archive_len\": 4, \"rng\": null, \"cache_bytes\": 512, \"eval_state\": null}}",
+        )
+        .unwrap();
+        let cp = Checkpoint::from_json(&j).unwrap();
+        assert_eq!(cp.cache_mark, CacheMark::legacy(512));
+        assert_eq!(cp.cache_mark.total(), 512);
+        assert_eq!(cp.counters.evals_used, 4);
+        // and a sharded checkpoint round-trips through its own JSON,
+        // keeping the legacy total alongside
+        let mark = CacheMark { base: 7, shards: vec![0, 64, 3] };
+        let cp = Checkpoint { counters: RunCounters::default(), cache_mark: mark.clone(), eval_state: None };
+        let round = Checkpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(round.cache_mark, mark);
+        assert_eq!(
+            cp.to_json().get("checkpoint").unwrap().get("cache_bytes").unwrap().as_i64(),
+            Some(74)
+        );
     }
 }

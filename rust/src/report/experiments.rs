@@ -626,6 +626,126 @@ pub fn fault_zoo(budget: usize) -> Result<String> {
 }
 
 // ===========================================================================
+// Async runtime A/B — generational --sync vs steady-state planner/executor
+// ===========================================================================
+
+/// Perf P10: the barrier-free search runtime A/B — **no artifacts
+/// anywhere**. Runs the same staged NSGA-II search twice on a generated
+/// net: once under the generational `--sync` barrier path and once on the
+/// async planner/executor pipeline, asserts the two outcomes bit-identical
+/// in-process (frontier, budget account, promotions, FI ledger snapshot),
+/// and only then reports `async_speedup_vs_sync` plus the executor's
+/// idle/steal counters. `budget = 0` defaults to 24 unique evaluations;
+/// `workers = 0` uses the machine's default worker count.
+pub fn async_ab(budget: usize, workers: usize) -> Result<String> {
+    use crate::eval::{FidelitySpec, LedgerSnapshot, StagedBackend, StagedEvaluator};
+    use crate::faultsim::SiteSampling;
+    use crate::search::{run_search, NoCache, SearchOutcome, SearchSpace, SearchSpec, Strategy};
+    use std::time::Instant;
+
+    let budget = if budget == 0 { 24 } else { budget };
+    let workers =
+        if workers == 0 { crate::util::threadpool::default_workers() } else { workers };
+    let fi = CampaignParams {
+        n_faults: env_usize("DEEPAXE_FI_FAULTS", 48),
+        n_images: env_usize("DEEPAXE_FI_IMAGES", 32),
+        seed: 0xA51C,
+        // inner FI parallelism off: the executor is the parallelism under
+        // test, and sharing the worker budget with it would blur the A/B
+        workers: 1,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+        gate: true,
+        delta: true,
+        batch: !crate::util::cli::env_flag("DEEPAXE_NO_BATCH"),
+    };
+    let eval_images = default_eval_images().min(96);
+    let bundle = crate::zoo::build("mlp-deep-12", 0xA51C, eval_images.max(fi.n_images))
+        .map_err(anyhow::Error::msg)?;
+    let net = &bundle.net;
+    let luts: std::collections::BTreeMap<String, crate::axmul::Lut> =
+        crate::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let ev = Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
+    let space = SearchSpace::paper(
+        net,
+        &crate::axmul::PAPER_AXMS.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
+    );
+    // epsilon 0 (full-length campaigns) + a fixed screen: deterministic
+    // work in both modes, with promotions exercising the executor too
+    let mut fidelity = FidelitySpec::exact();
+    fidelity.screen_faults = (fi.n_faults / 4).max(8);
+
+    let run = |sync: bool| -> (SearchOutcome, LedgerSnapshot, f64, u64, u64) {
+        let staged = StagedEvaluator::new(&ev, fidelity.clone());
+        let backend = StagedBackend { st: &staged };
+        let mut spec = SearchSpec::new(Strategy::Nsga2);
+        spec.budget = budget;
+        spec.seed = fi.seed;
+        spec.screen = fidelity.screening_enabled();
+        spec.workers = workers;
+        spec.sync = sync;
+        let t0 = Instant::now();
+        let out = run_search(&space, &spec, &backend, &mut NoCache);
+        let secs = t0.elapsed().as_secs_f64();
+        let ledger = staged.ledger();
+        (out, ledger.snapshot(), secs, ledger.eval_calls(), ledger.eval_wall_ns())
+    };
+    let (sync_out, sync_ledger, sync_s, _, _) = run(true);
+    let (async_out, async_ledger, async_s, eval_calls, eval_wall_ns) = run(false);
+
+    // bit-identity gate: the speedup number is meaningless if the async
+    // runtime changed the answer, so refuse to report one
+    let front = |o: &SearchOutcome| -> Vec<String> {
+        o.frontier().iter().map(|p| p.config_string.clone()).collect()
+    };
+    anyhow::ensure!(sync_out.evals_used == async_out.evals_used, "evals diverged");
+    anyhow::ensure!(sync_out.promotions == async_out.promotions, "promotions diverged");
+    anyhow::ensure!(sync_out.cache_hits == async_out.cache_hits, "cache hits diverged");
+    anyhow::ensure!(front(&sync_out) == front(&async_out), "frontier diverged");
+    anyhow::ensure!(
+        sync_out.hypervolume().to_bits() == async_out.hypervolume().to_bits(),
+        "hypervolume diverged"
+    );
+    anyhow::ensure!(sync_ledger == async_ledger, "FI ledger diverged");
+    anyhow::ensure!(sync_out.executor.is_none(), "sync run must not lease an executor");
+    let x = async_out.executor.as_ref().context("async run reports executor stats")?;
+
+    let speedup = sync_s / async_s.max(1e-9);
+    let mut t = Table::new(
+        &format!(
+            "async A/B: {} (space {} configs, budget {budget}, {workers} workers) — outputs bit-identical",
+            net.name,
+            space.size(),
+        ),
+        &["mode", "wall s", "evaluations", "promotions", "frontier", "hv2d"],
+    );
+    for (mode, out, secs) in
+        [("sync (generational)", &sync_out, sync_s), ("async (steady-state)", &async_out, async_s)]
+    {
+        t.row(vec![
+            mode.into(),
+            f2(secs),
+            out.evals_used.to_string(),
+            out.promotions.to_string(),
+            out.frontier_idx.len().to_string(),
+            format!("{:.1}", out.hypervolume()),
+        ]);
+    }
+    std::fs::create_dir_all("results").ok();
+    t.save_csv(std::path::Path::new("results/async_ab.csv"))?;
+    Ok(format!(
+        "{}async_speedup_vs_sync {speedup:.2}x | executor: {} workers, {} jobs ({} inline), {} steals, executor_idle_pct {:.1} | eval wall {:.2}s over {eval_calls} calls\n",
+        t.render(),
+        x.workers,
+        x.jobs,
+        x.inline_jobs,
+        x.steals,
+        x.idle_pct(),
+        eval_wall_ns as f64 / 1e9,
+    ))
+}
+
+// ===========================================================================
 // Ablations
 // ===========================================================================
 

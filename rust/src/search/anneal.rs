@@ -8,6 +8,11 @@
 //!
 //! The `eval` closure returns `None` when the evaluation budget is
 //! exhausted; the walk stops immediately.
+//!
+//! The walk is a pure planner: it proposes one genotype at a time and the
+//! driver decides how to evaluate it (inline under `--sync`, or through
+//! the async executor's completion clock) — either way the closure's
+//! answers, and therefore the trajectory, are identical.
 
 use super::space::{Genotype, SearchSpace};
 use crate::util::rng::Rng;

@@ -36,18 +36,37 @@
 //! screening off and epsilon 0 the driver's behavior — and its output —
 //! is bit-identical to the pre-ladder path.
 
+//! Execution model: by default the driver runs as a **planner/executor**
+//! pair. The planner (this module's control flow) proposes work; a
+//! work-stealing [`Executor`] evaluates it on a persistent worker pool
+//! leased from the shared [`threadpool::WorkerBudget`], multiplexing
+//! fresh evaluations and FiFull promotions through one job queue. The
+//! planner consumes results strictly in submission order (the executor's
+//! completion-clock tickets), so archive contents, budget accounting,
+//! cache-append order, journal events and `--resume` are bit-identical
+//! to the barrier-shaped generational path for the same seed. On the
+//! exhaustive sweep every chunk's misses are submitted up front, so
+//! chunk k's promotion fixpoint and checkpoint overlap chunk k+1..'s
+//! evaluations instead of idling the pool behind a per-chunk barrier.
+//! `SearchSpec::sync` (CLI `--sync`, env `DEEPAXE_NO_ASYNC`) falls back
+//! to the pre-executor generational path bit-for-bit.
+
 use super::anneal::{anneal, AnnealParams};
 use super::nsga2::{self, objectives};
 use super::space::{Genotype, SearchSpace};
-use crate::dse::cache::{CacheKey, ResultCache};
+use crate::dse::cache::{CacheKey, CacheMark, ResultCache};
 use crate::dse::pareto::pareto_front;
 use crate::dse::{DesignPoint, Evaluator};
 use crate::eval::{FiGate, Fidelity};
 use crate::faultsim::{CampaignParams, FaultModelKind};
 use crate::recovery::{NoJournal, Replayed, RunCounters, RunJournal};
 use crate::util::rng::Rng;
-use crate::util::threadpool;
+use crate::util::threadpool::{self, Executor, ExecutorStats};
 use std::collections::{HashMap, HashSet};
+
+/// One evaluation's outcome as it travels through the executor: the
+/// design point, or the panic message of a twice-poisoned evaluation.
+type EvalResult = Result<DesignPoint, String>;
 
 /// How the Fig. 2 flow explores the configuration space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,6 +132,11 @@ pub struct SearchSpec {
     /// warm-started trajectory is reproducible regardless of cache
     /// warmth.
     pub warm_start: bool,
+    /// run the barrier-shaped generational path instead of the async
+    /// planner/executor runtime (CLI `--sync`; see
+    /// [`SearchSpec::use_sync`]). Either path produces bit-identical
+    /// output — this is the escape hatch that proves it
+    pub sync: bool,
 }
 
 impl SearchSpec {
@@ -126,7 +150,15 @@ impl SearchSpec {
             screen: false,
             workers: 1,
             warm_start: false,
+            sync: false,
         }
+    }
+
+    /// Whether to run the barrier-shaped generational path: the `sync`
+    /// field (CLI `--sync`) or the `DEEPAXE_NO_ASYNC` environment escape
+    /// hatch, following the other `DEEPAXE_NO_*` switches.
+    pub fn use_sync(&self) -> bool {
+        self.sync || crate::util::cli::env_flag("DEEPAXE_NO_ASYNC")
     }
 
     /// Tier at which fresh (non-promoted) genotypes are evaluated.
@@ -203,12 +235,13 @@ pub trait CacheHook {
         Vec::new()
     }
 
-    /// Flush any buffered writes and return the durable byte length of
-    /// the backing store — the run journal checkpoints it so a resumed
-    /// run can roll the store back to exactly the checkpoint. Stores
-    /// without a file return 0.
-    fn flush(&mut self) -> u64 {
-        0
+    /// Flush any buffered writes and return the durable length mark of
+    /// the backing store, one entry per append segment — the run journal
+    /// checkpoints it so a resumed run can roll every segment back to
+    /// exactly the checkpoint. Stores without files return the empty
+    /// mark.
+    fn flush(&mut self) -> CacheMark {
+        CacheMark::default()
     }
 }
 
@@ -294,13 +327,13 @@ impl CacheHook for ResultCacheHook<'_> {
         // (strictly better estimate, same sites)
         if fidelity == Fidelity::FiScreen {
             if let Some(p) = self.cache.get(&self.key(names, Fidelity::FiFull)) {
-                return Some(p.clone());
+                return Some(p);
             }
         }
-        self.cache.get(&self.key(names, fidelity)).cloned()
+        self.cache.get(&self.key(names, fidelity))
     }
 
-    fn flush(&mut self) -> u64 {
+    fn flush(&mut self) -> CacheMark {
         self.cache.flush()
     }
 
@@ -415,6 +448,9 @@ pub struct SearchOutcome {
     /// point in the archive; a poisoned fresh evaluation consumes no
     /// budget and is never re-proposed.
     pub poisoned: Vec<(Genotype, String)>,
+    /// work-stealing executor utilization (jobs, steals, idle/busy time)
+    /// for an async run; `None` under `--sync` / `DEEPAXE_NO_ASYNC`
+    pub executor: Option<ExecutorStats>,
 }
 
 impl SearchOutcome {
@@ -557,13 +593,17 @@ impl<'a> Archive<'a> {
     /// dropped. With screening on, fresh points run at `FiScreen` and the
     /// archive frontier is then promoted to `FiFull` (fixpoint loop —
     /// refined values can reshuffle the frontier).
-    fn eval_batch<B: EvalBackend>(
+    fn eval_batch<'env, B: EvalBackend>(
         &mut self,
-        backend: &B,
+        backend: &'env B,
         cache: &mut dyn CacheHook,
         journal: &mut dyn RunJournal,
+        exec: Option<&Executor<'env, EvalResult>>,
         batch: Vec<Genotype>,
-    ) -> Vec<usize> {
+    ) -> Vec<usize>
+    where
+        'a: 'env,
+    {
         let fidelity = self.fresh_fidelity;
         let mut fresh: Vec<Genotype> = Vec::new();
         for g in &batch {
@@ -579,10 +619,10 @@ impl<'a> Archive<'a> {
             if journal.replaying() {
                 self.replay_batch(journal, fresh, fidelity);
             } else {
-                self.live_batch(backend, cache, journal, fresh, fidelity);
+                self.live_batch(backend, cache, journal, exec, fresh, fidelity);
             }
             if self.with_fi && fidelity < Fidelity::FiFull {
-                self.promote_frontier(backend, cache, journal);
+                self.promote_frontier(backend, cache, journal, exec);
             }
             self.snapshot_trace();
         }
@@ -617,18 +657,25 @@ impl<'a> Archive<'a> {
     /// Evaluate one fresh batch live: serial cache pass, parallel
     /// panic-guarded backend pass, then record in `fresh` order (so the
     /// journaled event order — and with it the whole archive — is
-    /// deterministic and replayable).
-    fn live_batch<B: EvalBackend>(
+    /// deterministic and replayable). With an executor, misses are
+    /// submitted in the same lexicographic order `budgeted_map` would
+    /// dispatch them and consumed in submission order (the completion
+    /// clock), so cache appends, journal events and the archive are
+    /// bit-identical to the barrier path.
+    fn live_batch<'env, B: EvalBackend>(
         &mut self,
-        backend: &B,
+        backend: &'env B,
         cache: &mut dyn CacheHook,
         journal: &mut dyn RunJournal,
+        exec: Option<&Executor<'env, EvalResult>>,
         fresh: Vec<Genotype>,
         fidelity: Fidelity,
-    ) {
-        // cache pass (serial: ResultCache is not Sync)
+    ) where
+        'a: 'env,
+    {
+        // cache pass (serial: the hook needs &mut for its lazy appenders)
         let mut misses: Vec<(usize, Genotype)> = Vec::new();
-        let mut results: Vec<Option<Result<DesignPoint, String>>> = vec![None; fresh.len()];
+        let mut results: Vec<Option<EvalResult>> = vec![None; fresh.len()];
         let mut hits: Vec<bool> = vec![false; fresh.len()];
         for (i, g) in fresh.iter().enumerate() {
             let names = self.space.decode(g);
@@ -655,16 +702,34 @@ impl<'a> Archive<'a> {
             let space = self.space;
             // a panicking evaluation is retried once, then reported as a
             // poisoned design point instead of unwinding through the pool
-            let evaluated: Vec<Result<DesignPoint, String>> = threadpool::budgeted_map(
-                threadpool::WorkerBudget::global(),
-                self.workers,
-                &misses,
-                |(_, g)| {
-                    threadpool::catch_retry(|| {
-                        backend.eval_gated(&space.decode(g), fidelity, &gate)
-                    })
-                },
-            );
+            let evaluated: Vec<EvalResult> = match exec {
+                Some(exec) => {
+                    let gate = std::sync::Arc::new(gate);
+                    let seqs: Vec<u64> = misses
+                        .iter()
+                        .map(|(_, g)| {
+                            let g = g.clone();
+                            let gate = std::sync::Arc::clone(&gate);
+                            exec.submit(move || {
+                                threadpool::catch_retry(|| {
+                                    backend.eval_gated(&space.decode(&g), fidelity, &gate)
+                                })
+                            })
+                        })
+                        .collect();
+                    seqs.into_iter().map(|seq| exec.recv(seq)).collect()
+                }
+                None => threadpool::budgeted_map(
+                    threadpool::WorkerBudget::global(),
+                    self.workers,
+                    &misses,
+                    |(_, g)| {
+                        threadpool::catch_retry(|| {
+                            backend.eval_gated(&space.decode(g), fidelity, &gate)
+                        })
+                    },
+                ),
+            };
             for ((i, g), r) in misses.into_iter().zip(evaluated) {
                 results[i] = Some(r.map(|mut p| {
                     // persist with the generalized digit config so the
@@ -721,12 +786,15 @@ impl<'a> Archive<'a> {
     /// campaign (zero re-trace, zero prefix re-simulation); results are
     /// deterministic regardless of worker count because promoted values
     /// are pure per genotype and applied in frontier order.
-    fn promote_frontier<B: EvalBackend>(
+    fn promote_frontier<'env, B: EvalBackend>(
         &mut self,
-        backend: &B,
+        backend: &'env B,
         cache: &mut dyn CacheHook,
         journal: &mut dyn RunJournal,
-    ) {
+        exec: Option<&Executor<'env, EvalResult>>,
+    ) where
+        'a: 'env,
+    {
         loop {
             let (front, _) = frontier_hv(&self.points, self.with_fi);
             let pending: Vec<usize> = front
@@ -771,16 +839,35 @@ impl<'a> Archive<'a> {
             if !misses.is_empty() {
                 let space = self.space;
                 let genotypes = &self.genotypes;
-                let promoted: Vec<Result<DesignPoint, String>> = threadpool::budgeted_map(
-                    threadpool::WorkerBudget::global(),
-                    self.workers,
-                    &misses,
-                    |&idx| {
-                        threadpool::catch_retry(|| {
-                            backend.eval(&space.decode(&genotypes[idx]), Fidelity::FiFull)
-                        })
-                    },
-                );
+                // async: promotions join the same job queue as fresh
+                // evaluations and are consumed in submission order —
+                // identical results, applied in identical order
+                let promoted: Vec<EvalResult> = match exec {
+                    Some(exec) => {
+                        let seqs: Vec<u64> = misses
+                            .iter()
+                            .map(|&idx| {
+                                let g = genotypes[idx].clone();
+                                exec.submit(move || {
+                                    threadpool::catch_retry(|| {
+                                        backend.eval(&space.decode(&g), Fidelity::FiFull)
+                                    })
+                                })
+                            })
+                            .collect();
+                        seqs.into_iter().map(|seq| exec.recv(seq)).collect()
+                    }
+                    None => threadpool::budgeted_map(
+                        threadpool::WorkerBudget::global(),
+                        self.workers,
+                        &misses,
+                        |&idx| {
+                            threadpool::catch_retry(|| {
+                                backend.eval(&space.decode(&genotypes[idx]), Fidelity::FiFull)
+                            })
+                        },
+                    ),
+                };
                 for (idx, r) in misses.into_iter().zip(promoted) {
                     let r = r.map(|mut p| {
                         // persist with the generalized digit config so the
@@ -835,6 +922,109 @@ impl<'a> Archive<'a> {
         self.promotions += 1;
     }
 
+    /// Pipelined exhaustive sweep: run the serial cache pass and submit
+    /// **every** chunk's misses up front, then consume chunk by chunk in
+    /// completion-clock order — chunk k's record/promotion/checkpoint
+    /// tail overlaps chunk k+1..'s evaluations instead of idling the
+    /// pool behind a per-chunk barrier. Exhaustive enumeration proposes
+    /// each genotype exactly once, so the plan-time dedup and cache view
+    /// equal the barrier path's chunk-time view and the archive, cache
+    /// appends, journal events and counters stay bit-identical. Callers
+    /// must not be replaying (replay serves results itself, no backend
+    /// involved) and the backend must not want a dominance gate (a gated
+    /// campaign reads the pre-batch frontier snapshot, which up-front
+    /// submission would date) — both fall back to the barrier-shaped
+    /// loop, whose output is identical anyway.
+    fn exhaustive_pipelined<'env, B: EvalBackend>(
+        &mut self,
+        backend: &'env B,
+        cache: &mut dyn CacheHook,
+        journal: &mut dyn RunJournal,
+        exec: &Executor<'env, EvalResult>,
+        all: &[Genotype],
+        chunk_size: usize,
+        rng_state: Option<[u64; 4]>,
+    ) where
+        'a: 'env,
+    {
+        let fidelity = self.fresh_fidelity;
+        struct Planned {
+            /// candidates in enumeration (= record) order
+            fresh: Vec<Genotype>,
+            hits: Vec<bool>,
+            /// cache hits pre-filled; miss slots filled at consume time
+            results: Vec<Option<EvalResult>>,
+            /// (index into `fresh`, completion-clock ticket) in the
+            /// lexicographic dispatch order `live_batch` uses
+            submitted: Vec<(usize, u64)>,
+        }
+        let mut plan: Vec<Planned> = Vec::new();
+        for chunk in all.chunks(chunk_size) {
+            // every enumerated genotype is unique and the budget covers
+            // the enumeration, so the batch dedup/budget filter of
+            // eval_batch admits the whole chunk
+            let fresh: Vec<Genotype> = chunk.to_vec();
+            let mut hits = vec![false; fresh.len()];
+            let mut results: Vec<Option<EvalResult>> = vec![None; fresh.len()];
+            let mut misses: Vec<(usize, Genotype)> = Vec::new();
+            for (i, g) in fresh.iter().enumerate() {
+                if let Some(p) = cache.get(&self.space.decode(g), fidelity) {
+                    hits[i] = true;
+                    results[i] = Some(Ok(p));
+                } else {
+                    misses.push((i, g.clone()));
+                }
+            }
+            misses.sort_by(|a, b| a.1.cmp(&b.1));
+            let space = self.space;
+            let submitted: Vec<(usize, u64)> = misses
+                .into_iter()
+                .map(|(i, g)| {
+                    let seq = exec.submit(move || {
+                        threadpool::catch_retry(|| {
+                            backend.eval_gated(&space.decode(&g), fidelity, &FiGate::default())
+                        })
+                    });
+                    (i, seq)
+                })
+                .collect();
+            plan.push(Planned { fresh, hits, results, submitted });
+        }
+        // consume strictly in submission order per chunk, then the
+        // barrier path's record / promote / trace / checkpoint tail
+        for Planned { fresh, hits, mut results, submitted } in plan {
+            for (i, seq) in submitted {
+                let r = exec.recv(seq);
+                results[i] = Some(r.map(|mut p| {
+                    p.config_string = self.space.config_digits(&fresh[i]);
+                    cache.put(&self.space.decode(&fresh[i]), fidelity, &p);
+                    p
+                }));
+            }
+            for ((g, r), hit) in fresh.into_iter().zip(results).zip(hits) {
+                let cfg = self.space.config_digits(&g);
+                match r.expect("planned result") {
+                    Ok(p) => {
+                        if hit {
+                            self.cache_hits += 1;
+                        }
+                        journal.record_eval(&cfg, fidelity, hit, &p);
+                        self.record(g, p, fidelity);
+                    }
+                    Err(err) => {
+                        journal.record_poison(&cfg, fidelity, &err);
+                        self.quarantine(g, err);
+                    }
+                }
+            }
+            if self.with_fi && fidelity < Fidelity::FiFull {
+                self.promote_frontier(backend, cache, journal, Some(exec));
+            }
+            self.snapshot_trace();
+            checkpoint(journal, cache, self, rng_state);
+        }
+    }
+
     fn finish(mut self, strategy: Strategy) -> SearchOutcome {
         if self.trace.is_empty() {
             self.snapshot_trace();
@@ -852,6 +1042,7 @@ impl<'a> Archive<'a> {
             space_size: self.space.size(),
             trace: self.trace,
             poisoned: self.poisoned,
+            executor: None,
         }
     }
 }
@@ -867,28 +1058,32 @@ fn checkpoint(
 ) {
     let counters = archive.counters(rng_state);
     if journal.boundary(&counters) {
-        let bytes = cache.flush();
-        journal.commit_checkpoint(&counters, bytes);
+        let mark = cache.flush();
+        journal.commit_checkpoint(&counters, &mark);
     }
 }
 
 /// Single-genotype evaluation for the annealing/hill-climb walks:
 /// re-visits of archived genotypes are free; `None` once the budget is
 /// exhausted.
-fn walk_eval<B: EvalBackend>(
-    archive: &mut Archive,
-    backend: &B,
+fn walk_eval<'a, 'env, B: EvalBackend>(
+    archive: &mut Archive<'a>,
+    backend: &'env B,
     cache: &mut dyn CacheHook,
     journal: &mut dyn RunJournal,
+    exec: Option<&Executor<'env, EvalResult>>,
     g: &Genotype,
-) -> Option<[f64; 3]> {
+) -> Option<[f64; 3]>
+where
+    'a: 'env,
+{
     if let Some(&i) = archive.seen.get(g) {
         return Some(archive.objs[i]);
     }
     if archive.remaining() == 0 {
         return None;
     }
-    let idx = archive.eval_batch(backend, cache, journal, vec![g.clone()]);
+    let idx = archive.eval_batch(backend, cache, journal, exec, vec![g.clone()]);
     idx.first().map(|&i| archive.objs[i])
 }
 
@@ -917,6 +1112,36 @@ pub fn run_search_journaled<B: EvalBackend>(
     cache: &mut dyn CacheHook,
     journal: &mut dyn RunJournal,
 ) -> SearchOutcome {
+    if spec.use_sync() {
+        return run_core(space, spec, backend, cache, journal, None);
+    }
+    // the planner (this thread) runs the driver control flow while the
+    // executor's workers evaluate; `spec.workers` counts the planner, so
+    // with_executor spawns one fewer (and the zero-worker degenerate case
+    // runs every job inline on the planner — still through the clock)
+    let (mut out, stats) = threadpool::with_executor(
+        threadpool::WorkerBudget::global(),
+        spec.workers,
+        |exec| run_core(space, spec, backend, cache, journal, Some(exec)),
+    );
+    out.executor = Some(stats);
+    out
+}
+
+/// The driver core, generic over execution mode: with `exec` the
+/// planner/executor runtime, without it the barrier-shaped generational
+/// path. Both produce bit-identical output (see module docs).
+fn run_core<'a, 'env, B: EvalBackend>(
+    space: &'a SearchSpace,
+    spec: &SearchSpec,
+    backend: &'env B,
+    cache: &mut dyn CacheHook,
+    journal: &mut dyn RunJournal,
+    exec: Option<&Executor<'env, EvalResult>>,
+) -> SearchOutcome
+where
+    'a: 'env,
+{
     let budget = spec.resolved_budget(space);
     let mut archive = Archive::new(space, budget, spec);
     let mut rng = Rng::new(spec.seed);
@@ -945,9 +1170,28 @@ pub fn run_search_journaled<B: EvalBackend>(
     // (lazy lexicographic prefix — no enumeration blow-up on big spaces)
     if spec.strategy == Strategy::Exhaustive || budget as u128 >= space.size() {
         let all = space.enumerate_first(budget);
-        for chunk in all.chunks(64.max(spec.pop)) {
-            archive.eval_batch(backend, cache, journal, chunk.to_vec());
-            checkpoint(journal, cache, &archive, Some(rng.state()));
+        let chunk_size = 64.max(spec.pop);
+        match exec {
+            // steady-state pipeline: every chunk's misses submitted
+            // before any result is consumed (see exhaustive_pipelined
+            // for why replay and gated backends stay barrier-shaped)
+            Some(exec) if !journal.replaying() && !backend.wants_gate() => {
+                archive.exhaustive_pipelined(
+                    backend,
+                    cache,
+                    journal,
+                    exec,
+                    &all,
+                    chunk_size,
+                    Some(rng.state()),
+                );
+            }
+            _ => {
+                for chunk in all.chunks(chunk_size) {
+                    archive.eval_batch(backend, cache, journal, exec, chunk.to_vec());
+                    checkpoint(journal, cache, &archive, Some(rng.state()));
+                }
+            }
         }
         return archive.finish(spec.strategy);
     }
@@ -973,7 +1217,7 @@ pub fn run_search_journaled<B: EvalBackend>(
                     init.push(g);
                 }
             }
-            let mut population = archive.eval_batch(backend, cache, journal, init);
+            let mut population = archive.eval_batch(backend, cache, journal, exec, init);
             checkpoint(journal, cache, &archive, Some(rng.state()));
             while archive.remaining() > 0 {
                 let objs: Vec<[f64; 3]> = population.iter().map(|&i| archive.objs[i]).collect();
@@ -996,7 +1240,7 @@ pub fn run_search_journaled<B: EvalBackend>(
                 if offspring.is_empty() {
                     break; // space effectively exhausted around the population
                 }
-                let new_idx = archive.eval_batch(backend, cache, journal, offspring);
+                let new_idx = archive.eval_batch(backend, cache, journal, exec, offspring);
                 // (μ+λ) environmental selection over parents ∪ offspring
                 let mut merged = population.clone();
                 merged.extend(new_idx);
@@ -1019,7 +1263,7 @@ pub fn run_search_journaled<B: EvalBackend>(
                 }
             }
             seeds.truncate(budget);
-            archive.eval_batch(backend, cache, journal, seeds.clone());
+            archive.eval_batch(backend, cache, journal, exec, seeds.clone());
             checkpoint(journal, cache, &archive, Some(rng.state()));
             let greedy_only = spec.strategy == Strategy::HillClimb;
             let params = AnnealParams {
@@ -1030,7 +1274,7 @@ pub fn run_search_journaled<B: EvalBackend>(
             // the walk RNG is mutably lent to the annealer, so walk-time
             // checkpoints carry no RNG state to verify against
             let _ = anneal(space, &mut rng, &params, &seeds, &mut |g| {
-                let r = walk_eval(&mut archive, backend, cache, journal, g);
+                let r = walk_eval(&mut archive, backend, cache, journal, exec, g);
                 checkpoint(journal, cache, &archive, None);
                 r
             });
@@ -1039,7 +1283,7 @@ pub fn run_search_journaled<B: EvalBackend>(
                 let batch: Vec<Genotype> =
                     (0..archive.remaining().min(16)).map(|_| space.random(&mut rng)).collect();
                 let before = archive.evals_used;
-                archive.eval_batch(backend, cache, journal, batch);
+                archive.eval_batch(backend, cache, journal, exec, batch);
                 checkpoint(journal, cache, &archive, Some(rng.state()));
                 if archive.evals_used == before {
                     break; // random draws all duplicates; give up
@@ -1689,5 +1933,171 @@ mod tests {
         assert_eq!(out.evals_used, n_seeds);
         assert!(out.genotypes.contains(&vec![0, 0, 0, 0]));
         assert!(out.genotypes.contains(&vec![1, 1, 1, 1]));
+    }
+
+    fn trace_coords(out: &SearchOutcome) -> Vec<(usize, usize, i64)> {
+        out.trace
+            .iter()
+            .map(|t| (t.evals, t.frontier_size, (t.hypervolume * 1e9) as i64))
+            .collect()
+    }
+
+    #[test]
+    fn async_matches_sync_across_strategies() {
+        // the acceptance bar for the planner/executor runtime: archive,
+        // budget account, promotions, fidelities, frontier and per-batch
+        // trace identical to the barrier path for every strategy, worker
+        // count and screening mode
+        let mut rng = Rng::new(0xA51C);
+        for _ in 0..4 {
+            let space = synth_space(&mut rng);
+            let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+            let size = space.size() as usize;
+            for strat in
+                [Strategy::Exhaustive, Strategy::Nsga2, Strategy::Anneal, Strategy::HillClimb]
+            {
+                for screen in [false, true] {
+                    let base = SearchSpec {
+                        budget: (size / 2).max(4).min(size),
+                        seed: rng.next_u64(),
+                        screen,
+                        ..SearchSpec::new(strat)
+                    };
+                    let sync = run_search(
+                        &space,
+                        &SearchSpec { sync: true, ..base.clone() },
+                        &backend,
+                        &mut NoCache,
+                    );
+                    assert!(sync.executor.is_none(), "sync run must not report an executor");
+                    for workers in [1usize, 4] {
+                        let spec = SearchSpec { workers, ..base.clone() };
+                        let out = run_search(&space, &spec, &backend, &mut NoCache);
+                        let tag = format!("{strat:?} screen={screen} workers={workers}");
+                        assert_eq!(out.genotypes, sync.genotypes, "{tag}: archive differs");
+                        assert_eq!(out.evals_used, sync.evals_used, "{tag}");
+                        assert_eq!(out.cache_hits, sync.cache_hits, "{tag}");
+                        assert_eq!(out.promotions, sync.promotions, "{tag}");
+                        assert_eq!(out.fidelities, sync.fidelities, "{tag}");
+                        assert_eq!(frontier_coords(&out), frontier_coords(&sync), "{tag}");
+                        assert_eq!(trace_coords(&out), trace_coords(&sync), "{tag}: trace");
+                        let stats = out.executor.expect("async run reports executor stats");
+                        assert!(
+                            stats.jobs as usize >= out.evals_used,
+                            "{tag}: every fresh miss is an executor job"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_pipelined_multichunk_exhaustive_matches_sync() {
+        // 81 configs -> two chunks: the pipelined path overlaps chunk 2's
+        // evaluations with chunk 1's promotion fixpoint and checkpoint;
+        // the outcome must be bit-identical to the barrier loop anyway
+        let space = SearchSpace::with_dims(
+            "synth",
+            4,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+        let base = SearchSpec {
+            budget: space.size() as usize,
+            screen: true,
+            ..SearchSpec::new(Strategy::Exhaustive)
+        };
+        let sync = run_search(
+            &space,
+            &SearchSpec { sync: true, ..base.clone() },
+            &backend,
+            &mut NoCache,
+        );
+        let out =
+            run_search(&space, &SearchSpec { workers: 4, ..base.clone() }, &backend, &mut NoCache);
+        assert!(out.trace.len() >= 2, "must exercise more than one chunk");
+        assert!(sync.promotions > 0, "must exercise interleaved promotion");
+        assert_eq!(out.genotypes, sync.genotypes);
+        assert_eq!(out.fidelities, sync.fidelities);
+        assert_eq!(out.promotions, sync.promotions);
+        assert_eq!(frontier_coords(&out), frontier_coords(&sync));
+        assert_eq!(trace_coords(&out), trace_coords(&sync), "per-chunk trace must be identical");
+    }
+
+    #[test]
+    fn async_quarantines_poison_identically_to_sync() {
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into()],
+            "xxx",
+        );
+        let backend = PanicBackend {
+            inner: SynthBackend { space: space.clone(), screen_noise: 0.0 },
+            poison: vec![1, 0, 1],
+            only_at: None,
+        };
+        let size = space.size() as usize;
+        let base = SearchSpec { budget: size, ..SearchSpec::new(Strategy::Exhaustive) };
+        let sync = run_search(
+            &space,
+            &SearchSpec { sync: true, ..base.clone() },
+            &backend,
+            &mut NoCache,
+        );
+        let out = run_search(&space, &SearchSpec { workers: 3, ..base }, &backend, &mut NoCache);
+        assert_eq!(out.genotypes, sync.genotypes);
+        assert_eq!(out.poisoned, sync.poisoned);
+        assert_eq!(out.evals_used, sync.evals_used);
+        assert_eq!(sync.poisoned.len(), 1, "test must exercise the poison path");
+    }
+
+    #[test]
+    fn async_resumes_a_sync_written_journal_bit_identically() {
+        // a journal written by a sync run resumes under the async runtime
+        // (the journal fingerprint excludes the execution mode, exactly
+        // like the worker count) and the completion clock keeps the live
+        // continuation on the recorded trajectory
+        use crate::recovery::{run_id, JournalWriter};
+        let dir = std::env::temp_dir().join(format!("deepaxe_drv_async_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = SearchSpace::with_dims(
+            "synth",
+            3,
+            vec!["exact".into(), "ax_a".into(), "ax_b".into()],
+            "xxx",
+        );
+        let backend = SynthBackend { space: space.clone(), screen_noise: 0.4 };
+        let base = SearchSpec {
+            budget: 18,
+            seed: 0x5EED,
+            screen: true,
+            ..SearchSpec::new(Strategy::Nsga2)
+        };
+        let baseline = run_search(
+            &space,
+            &SearchSpec { sync: true, ..base.clone() },
+            &backend,
+            &mut NoCache,
+        );
+        let fp = "driver-async-resume";
+        let mut w = JournalWriter::create(&dir, fp, 1);
+        w.limit_checkpoints(2);
+        let sync_spec = SearchSpec { sync: true, ..base.clone() };
+        let full = run_search_journaled(&space, &sync_spec, &backend, &mut NoCache, &mut w);
+        assert_eq!(full.genotypes, baseline.genotypes);
+        let mut r = JournalWriter::resume(&dir, &run_id(fp), fp, 1).unwrap();
+        let async_spec = SearchSpec { workers: 4, ..base.clone() };
+        let resumed = run_search_journaled(&space, &async_spec, &backend, &mut NoCache, &mut r);
+        assert_eq!(resumed.genotypes, baseline.genotypes);
+        assert_eq!(resumed.evals_used, baseline.evals_used);
+        assert_eq!(resumed.cache_hits, baseline.cache_hits);
+        assert_eq!(resumed.promotions, baseline.promotions);
+        assert_eq!(resumed.fidelities, baseline.fidelities);
+        assert_eq!(frontier_coords(&resumed), frontier_coords(&baseline));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

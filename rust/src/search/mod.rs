@@ -14,9 +14,11 @@
 //!   utilization.
 //! * [`anneal`] — simulated annealing and greedy hill-climb baselines over
 //!   scalarized objectives.
-//! * [`driver`] — evaluation budget, parallel population evaluation on
-//!   [`crate::util::threadpool`] (worker counts leased from the shared
-//!   [`crate::util::threadpool::WorkerBudget`]), dedup through
+//! * [`driver`] — evaluation budget, planner/executor evaluation runtime
+//!   (a work-stealing [`crate::util::threadpool::Executor`] leasing from
+//!   the shared [`crate::util::threadpool::WorkerBudget`]; results are
+//!   consumed in submission order, so output is bit-identical to the
+//!   `--sync` barrier path), dedup through the lock-striped
 //!   [`crate::dse::cache::ResultCache`], convergence trace with the
 //!   hypervolume indicator from [`crate::dse::pareto`].
 //!

@@ -5,6 +5,11 @@
 //! LUT+FF utilization]`. NaN objectives (FI skipped) compare as `+inf`, so
 //! NaN-bearing points are ranked strictly worse than any finite point on
 //! that objective and can never displace a fully-evaluated design.
+//!
+//! Everything here is pure planner-side arithmetic — selection and
+//! ranking see only archive indices and objective vectors, never the
+//! evaluation machinery, which is why the driver can swap its barrier
+//! loop for the async executor without touching this module's output.
 
 use crate::dse::DesignPoint;
 use crate::util::rng::Rng;

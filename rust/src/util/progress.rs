@@ -1,8 +1,72 @@
 //! Progress reporting for long campaigns: rate + ETA lines on stderr,
 //! throttled, safe to share across worker threads.
+//!
+//! All output funnels through one dedicated writer thread behind a
+//! channel: concurrent reporters (executor workers each driving their own
+//! [`Progress`]) enqueue complete lines, so output can never tear or
+//! interleave mid-line the way direct `eprintln!` racing on stderr could.
+//! [`flush`] drains the queue with an ack handshake — callers that must
+//! order their own output after pending progress lines (the CLI's final
+//! report) call it before printing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex, OnceLock};
 use std::time::Instant;
+
+enum Msg {
+    Line(String),
+    Flush(mpsc::SyncSender<()>),
+}
+
+/// The process-wide writer: a detached thread draining a channel onto a
+/// locked stderr handle, one complete line per write.
+fn writer() -> &'static mpsc::Sender<Msg> {
+    static WRITER: OnceLock<mpsc::Sender<Msg>> = OnceLock::new();
+    WRITER.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        std::thread::Builder::new()
+            .name("progress-writer".into())
+            .spawn(move || {
+                use std::io::Write;
+                for msg in rx {
+                    match msg {
+                        Msg::Line(line) => {
+                            if let Some(tx) = capture().lock().unwrap().as_ref() {
+                                let _ = tx.send(line);
+                                continue;
+                            }
+                            let mut err = std::io::stderr().lock();
+                            let _ = writeln!(err, "{line}");
+                        }
+                        Msg::Flush(ack) => {
+                            let _ = ack.send(());
+                        }
+                    }
+                }
+            })
+            .expect("spawn progress writer thread");
+        tx
+    })
+}
+
+/// Test hook: when set, lines go to this channel instead of stderr.
+fn capture() -> &'static Mutex<Option<mpsc::Sender<String>>> {
+    static CAPTURE: OnceLock<Mutex<Option<mpsc::Sender<String>>>> = OnceLock::new();
+    CAPTURE.get_or_init(|| Mutex::new(None))
+}
+
+/// Queue one complete line for the writer thread.
+fn emit(line: String) {
+    let _ = writer().send(Msg::Line(line));
+}
+
+/// Block until every line emitted so far has been written (or captured).
+pub fn flush() {
+    let (ack_tx, ack_rx) = mpsc::sync_channel(0);
+    if writer().send(Msg::Flush(ack_tx)).is_ok() {
+        let _ = ack_rx.recv();
+    }
+}
 
 pub struct Progress {
     label: String,
@@ -50,7 +114,7 @@ impl Progress {
         } else {
             0.0
         };
-        eprintln!(
+        emit(format!(
             "[{}] {}/{} ({:.1}%) {:.1}/s eta {:.0}s",
             self.label,
             done,
@@ -58,7 +122,7 @@ impl Progress {
             done as f64 / self.total.max(1) as f64 * 100.0,
             rate,
             eta
-        );
+        ));
     }
 
     pub fn done_count(&self) -> u64 {
@@ -67,12 +131,15 @@ impl Progress {
 
     pub fn finish(&self) {
         if !self.quiet {
-            eprintln!(
+            emit(format!(
                 "[{}] complete: {} items in {:.1}s",
                 self.label,
                 self.done_count(),
                 self.started.elapsed().as_secs_f64()
-            );
+            ));
+            // the completion line must hit the terminal before finish
+            // returns — callers print their own report right after
+            flush();
         }
     }
 }
@@ -106,5 +173,48 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(p.done_count(), 1000);
+    }
+
+    /// Concurrent reporters must deliver whole lines, never torn or
+    /// interleaved fragments. Lines are filtered by a unique prefix so
+    /// unrelated tests printing through the shared writer don't intrude.
+    #[test]
+    fn concurrent_emits_deliver_whole_lines() {
+        let (tx, rx) = mpsc::channel::<String>();
+        *capture().lock().unwrap() = Some(tx);
+        let threads = 8;
+        let per = 50;
+        let hs: Vec<_> = (0..threads)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        emit(format!("torn-line-test {t} {i} end"));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        flush();
+        *capture().lock().unwrap() = None;
+        let mine: Vec<String> =
+            rx.try_iter().filter(|l| l.starts_with("torn-line-test ")).collect();
+        assert_eq!(mine.len(), threads * per);
+        let mut seen = std::collections::BTreeSet::new();
+        for line in &mine {
+            let parts: Vec<&str> = line.split(' ').collect();
+            assert_eq!(parts.len(), 4, "torn or interleaved line: {line:?}");
+            assert_eq!(parts[3], "end", "truncated line: {line:?}");
+            assert!(seen.insert(line.clone()), "duplicated line: {line:?}");
+        }
+        // per-thread order is preserved by the single queue
+        for t in 0..threads {
+            let of_t: Vec<&String> =
+                mine.iter().filter(|l| l.starts_with(&format!("torn-line-test {t} "))).collect();
+            for (i, line) in of_t.iter().enumerate() {
+                assert_eq!(**line, format!("torn-line-test {t} {i} end"));
+            }
+        }
     }
 }

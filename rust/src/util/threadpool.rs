@@ -10,10 +10,20 @@
 //! spawn slots from one shared cap instead of multiplying their own pool
 //! sizes, so the host is never oversubscribed no matter how the layers
 //! stack. [`budgeted_map`]/[`budgeted_map_with`] are the lease-aware maps.
+//!
+//! [`Executor`] is the barrier-free counterpart: a persistent
+//! work-stealing pool multiplexing heterogeneous jobs (screen campaigns,
+//! promotions, fresh evaluations) through one queue. [`Executor::submit`]
+//! issues a monotonically increasing completion-clock ticket;
+//! [`Executor::recv`]'ing tickets in submission order gives the caller a
+//! deterministic view of out-of-order execution — the property the async
+//! search driver's bit-identity guarantee rests on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Process-wide cap on concurrently live *spawned* worker threads.
 ///
@@ -28,11 +38,21 @@ pub struct WorkerBudget {
     cap: usize,
     live: AtomicUsize,
     peak: AtomicUsize,
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+    steals: AtomicU64,
 }
 
 impl WorkerBudget {
     pub fn new(cap: usize) -> WorkerBudget {
-        WorkerBudget { cap, live: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+        WorkerBudget {
+            cap,
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        }
     }
 
     /// The shared process budget: `DEEPAXE_WORKERS` (or available
@@ -55,6 +75,42 @@ impl WorkerBudget {
     /// the nested-parallelism fix.
     pub fn peak(&self) -> usize {
         self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Cumulative executor-worker busy time (ns) across every
+    /// [`with_executor`] run recorded against this budget.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative executor-worker idle time (ns) — condvar waits for work.
+    pub fn idle_ns(&self) -> u64 {
+        self.idle_ns.load(Ordering::Relaxed)
+    }
+
+    /// Percentage of executor worker time spent idle (0 when no executor
+    /// worker has run). The scheduler-utilization headline the run summary
+    /// prints.
+    pub fn idle_pct(&self) -> f64 {
+        let total = self.busy_ns() + self.idle_ns();
+        if total == 0 {
+            0.0
+        } else {
+            self.idle_ns() as f64 / total as f64 * 100.0
+        }
+    }
+
+    /// Jobs executor workers stole from a sibling deque.
+    pub fn steal_count(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Fold one executor run's utilization counters into the process-wide
+    /// totals (what the CLI run summary reports).
+    fn record_executor(&self, stats: &ExecutorStats) {
+        self.busy_ns.fetch_add(stats.busy_ns, Ordering::Relaxed);
+        self.idle_ns.fetch_add(stats.idle_ns, Ordering::Relaxed);
+        self.steals.fetch_add(stats.steals, Ordering::Relaxed);
     }
 
     /// Lease up to `want` spawn slots; the grant may be smaller (including
@@ -98,6 +154,249 @@ impl Drop for Lease<'_> {
             self.budget.live.fetch_sub(self.granted, Ordering::SeqCst);
         }
     }
+}
+
+/// Utilization counters from one [`with_executor`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecutorStats {
+    /// spawned worker threads (the caller thread is extra)
+    pub workers: usize,
+    /// jobs submitted over the executor's lifetime
+    pub jobs: u64,
+    /// jobs the caller ran inline inside [`Executor::recv`] (all of them
+    /// when the lease granted zero workers)
+    pub inline_jobs: u64,
+    /// jobs workers stole from a sibling deque
+    pub steals: u64,
+    /// summed wall time workers spent running jobs
+    pub busy_ns: u64,
+    /// summed wall time workers spent waiting for work
+    pub idle_ns: u64,
+}
+
+impl ExecutorStats {
+    /// Percentage of worker time spent idle (0 with no worker activity).
+    pub fn idle_pct(&self) -> f64 {
+        let total = self.busy_ns + self.idle_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.idle_ns as f64 / total as f64 * 100.0
+        }
+    }
+}
+
+type ExecJob<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+struct ExecState<'env, T> {
+    /// one deque per spawned worker; `submit` round-robins by ticket so
+    /// the load spreads without a central contended queue
+    deques: Vec<VecDeque<(u64, ExecJob<'env, T>)>>,
+    shutdown: bool,
+}
+
+/// Work-stealing job executor with a completion-clock result store.
+///
+/// Jobs may finish in any order; results park in a reorder buffer keyed by
+/// their submission ticket until [`recv`](Self::recv)'d. A single
+/// submitting thread that `recv`s tickets in submission order therefore
+/// observes results exactly as the serial path would produce them — that
+/// is the determinism contract the async search driver builds on.
+///
+/// `recv` never deadlocks on an empty worker pool: when the wanted result
+/// is missing and a job is still queued, the caller runs the globally
+/// oldest queued job inline. With a zero-slot [`WorkerBudget`] lease the
+/// executor thus degrades to the serial path.
+pub struct Executor<'env, T: Send> {
+    state: Mutex<ExecState<'env, T>>,
+    jobs: Condvar,
+    done: Mutex<HashMap<u64, T>>,
+    ready: Condvar,
+    next_seq: AtomicU64,
+    inline_jobs: AtomicU64,
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+}
+
+impl<'env, T: Send> Executor<'env, T> {
+    fn new(workers: usize) -> Executor<'env, T> {
+        Executor {
+            state: Mutex::new(ExecState {
+                deques: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            jobs: Condvar::new(),
+            done: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+            next_seq: AtomicU64::new(0),
+            inline_jobs: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue a job; returns its completion-clock ticket (monotonic from
+    /// 0 in submission order).
+    pub fn submit(&self, job: impl FnOnce() -> T + Send + 'env) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let mut st = self.state.lock().unwrap();
+        let slot = (seq as usize) % st.deques.len();
+        st.deques[slot].push_back((seq, Box::new(job)));
+        drop(st);
+        self.jobs.notify_one();
+        seq
+    }
+
+    /// Jobs submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.next_seq.load(Ordering::SeqCst)
+    }
+
+    /// Block until ticket `seq` has a result and take it (each ticket is
+    /// redeemable once). Runs queued jobs inline while waiting.
+    pub fn recv(&self, seq: u64) -> T {
+        loop {
+            if let Some(v) = self.done.lock().unwrap().remove(&seq) {
+                return v;
+            }
+            // Not done: help out by running the globally oldest queued job
+            // inline rather than sleeping on it (also the whole execution
+            // path when the lease granted zero workers).
+            let queued = {
+                let mut st = self.state.lock().unwrap();
+                let oldest = st
+                    .deques
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, d)| d.front().map(|&(s, _)| (s, i)))
+                    .min();
+                oldest.map(|(_, i)| st.deques[i].pop_front().unwrap())
+            };
+            match queued {
+                Some((jseq, job)) => {
+                    self.inline_jobs.fetch_add(1, Ordering::Relaxed);
+                    let v = job();
+                    if jseq == seq {
+                        return v;
+                    }
+                    self.done.lock().unwrap().insert(jseq, v);
+                    self.ready.notify_all();
+                }
+                None => {
+                    // The wanted job is in flight on a worker. Re-check
+                    // under the results lock before sleeping: the worker's
+                    // insert+notify cannot slip between this check and the
+                    // wait, so no wakeup is missed.
+                    let done = self.done.lock().unwrap();
+                    if done.contains_key(&seq) {
+                        continue;
+                    }
+                    drop(self.ready.wait(done).unwrap());
+                }
+            }
+        }
+    }
+
+    fn worker_loop(&self, wi: usize) {
+        loop {
+            let mut st = self.state.lock().unwrap();
+            let job = loop {
+                if let Some(j) = st.deques[wi].pop_front() {
+                    break Some(j);
+                }
+                // own deque empty: steal the tail of the fullest sibling
+                let victim = st
+                    .deques
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, d)| *i != wi && !d.is_empty())
+                    .max_by_key(|(_, d)| d.len())
+                    .map(|(i, _)| i);
+                if let Some(v) = victim {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    break st.deques[v].pop_back();
+                }
+                if st.shutdown {
+                    break None;
+                }
+                let idle = Instant::now();
+                st = self.jobs.wait(st).unwrap();
+                self.idle_ns.fetch_add(idle.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            };
+            drop(st);
+            match job {
+                None => return,
+                Some((seq, job)) => {
+                    let busy = Instant::now();
+                    let v = job();
+                    self.busy_ns.fetch_add(busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    self.done.lock().unwrap().insert(seq, v);
+                    self.ready.notify_all();
+                }
+            }
+        }
+    }
+
+    fn stats(&self, workers: usize) -> ExecutorStats {
+        ExecutorStats {
+            workers,
+            jobs: self.next_seq.load(Ordering::SeqCst),
+            inline_jobs: self.inline_jobs.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            idle_ns: self.idle_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Flips the executor's shutdown flag on drop — placed *before* `body`
+/// runs so a panic inside `body` still releases the workers and lets the
+/// thread scope join instead of hanging.
+struct ShutdownGuard<'a, 'env, T: Send> {
+    exec: &'a Executor<'env, T>,
+}
+
+impl<T: Send> Drop for ShutdownGuard<'_, '_, T> {
+    fn drop(&mut self) {
+        self.exec.state.lock().unwrap().shutdown = true;
+        self.exec.jobs.notify_all();
+    }
+}
+
+/// Run `body` against a work-stealing [`Executor`] whose worker threads
+/// are leased from `budget`. Requesting `want` workers spawns at most
+/// `want - 1` threads (the caller participates via inline execution in
+/// [`Executor::recv`]), further capped by the budget's free slots — with
+/// zero granted slots the executor degrades to the serial path instead of
+/// blocking, mirroring [`budgeted_map`].
+///
+/// Returns `body`'s result plus the run's [`ExecutorStats`]; the stats are
+/// also folded into `budget`'s process-wide idle/steal totals for the run
+/// summary.
+pub fn with_executor<'env, T, R, F>(budget: &WorkerBudget, want: usize, body: F) -> (R, ExecutorStats)
+where
+    T: Send,
+    F: FnOnce(&Executor<'env, T>) -> R,
+{
+    let lease = budget.lease(want.max(1).saturating_sub(1));
+    let workers = lease.granted();
+    let exec: Executor<'env, T> = Executor::new(workers);
+    let out = std::thread::scope(|scope| {
+        let guard = ShutdownGuard { exec: &exec };
+        for wi in 0..workers {
+            let exec = &exec;
+            scope.spawn(move || exec.worker_loop(wi));
+        }
+        let r = body(&exec);
+        drop(guard);
+        r
+    });
+    drop(lease);
+    let stats = exec.stats(workers);
+    budget.record_executor(&stats);
+    (out, stats)
 }
 
 /// [`budgeted_map_with`] without per-worker state.
@@ -499,5 +798,90 @@ mod tests {
             budget.cap()
         );
         assert_eq!(budget.live(), 0);
+    }
+
+    #[test]
+    fn executor_completion_clock_orders_results() {
+        let budget = WorkerBudget::new(3);
+        let data: Vec<u64> = (0..64).collect();
+        let (out, stats) = with_executor(&budget, 4, |ex| {
+            let seqs: Vec<u64> = data.iter().map(|&x| ex.submit(move || x * x)).collect();
+            assert_eq!(ex.submitted(), 64);
+            seqs.into_iter().map(|s| ex.recv(s)).collect::<Vec<u64>>()
+        });
+        assert_eq!(out, data.iter().map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(stats.jobs, 64);
+        assert_eq!(stats.workers, 3);
+        assert_eq!(budget.live(), 0, "lease must be returned");
+    }
+
+    #[test]
+    fn executor_zero_worker_lease_runs_everything_inline() {
+        let budget = WorkerBudget::new(0);
+        let (out, stats) = with_executor(&budget, 8, |ex| {
+            let seqs: Vec<u64> = (0..10u64).map(|x| ex.submit(move || x + 1)).collect();
+            seqs.into_iter().map(|s| ex.recv(s)).collect::<Vec<u64>>()
+        });
+        assert_eq!(out, (1..=10).collect::<Vec<u64>>());
+        assert_eq!(stats.workers, 0);
+        assert_eq!(stats.inline_jobs, 10, "caller must run every job itself");
+        assert_eq!(stats.steals, 0);
+        assert_eq!(budget.peak(), 0);
+    }
+
+    /// Deterministic steal check: drive `worker_loop` directly on a
+    /// two-deque executor with no live siblings. Worker 0 drains its own
+    /// deque front-first, then steals worker 1's jobs from the back.
+    #[test]
+    fn executor_worker_steals_from_sibling_deque_back() {
+        let exec: Executor<u64> = Executor::new(2);
+        // seq % 2 routing: 0, 2 land on deque 0; 1, 3 on deque 1
+        let seqs: Vec<u64> = (0..4u64).map(|x| exec.submit(move || x * 10)).collect();
+        exec.state.lock().unwrap().shutdown = true;
+        exec.worker_loop(0);
+        let stats = exec.stats(0);
+        assert_eq!(stats.steals, 2, "both of deque 1's jobs must be stolen");
+        for (i, s) in seqs.into_iter().enumerate() {
+            assert_eq!(exec.recv(s), i as u64 * 10);
+        }
+    }
+
+    #[test]
+    fn executor_records_utilization_into_the_budget() {
+        let budget = WorkerBudget::new(2);
+        let (_, stats) = with_executor(&budget, 3, |ex| {
+            let seqs: Vec<u64> = (0..8u64)
+                .map(|x| {
+                    ex.submit(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        x
+                    })
+                })
+                .collect();
+            for s in seqs {
+                ex.recv(s);
+            }
+        });
+        assert_eq!(budget.steal_count(), stats.steals);
+        assert_eq!(budget.busy_ns() + budget.idle_ns(), stats.busy_ns + stats.idle_ns);
+        // every job ran on a worker (timed) or inline on the caller
+        assert!(
+            stats.busy_ns > 0 || stats.inline_jobs == 8,
+            "worker-run jobs must accrue busy time ({stats:?})"
+        );
+        assert!((0.0..=100.0).contains(&budget.idle_pct()));
+    }
+
+    #[test]
+    fn executor_shuts_down_cleanly_when_body_panics() {
+        let budget = WorkerBudget::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_executor::<u32, (), _>(&budget, 3, |ex| {
+                ex.submit(|| 1);
+                panic!("body boom");
+            })
+        }));
+        assert!(r.is_err(), "body panic must propagate");
+        assert_eq!(budget.live(), 0, "lease must be returned on unwind");
     }
 }

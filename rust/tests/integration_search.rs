@@ -594,7 +594,7 @@ fn resume_case(screen: bool, tag: &str) {
     cache.set_autoflush(false);
     let mut journal = JournalWriter::resume(&runs, &run, &fp, 1).unwrap();
     assert!(journal.replaying(), "resume must start in replay mode");
-    cache.rollback_to(journal.cache_bytes()).unwrap();
+    cache.rollback_to(&journal.cache_mark()).unwrap();
     if let Some(state) = journal.eval_state() {
         staged.restore_state(state);
     }
@@ -715,6 +715,200 @@ fn recovery_panicking_genotype_is_quarantined_and_replayable() {
     for (a, b) in resumed.evaluated.iter().zip(&out.evaluated) {
         assert_eq!(a, b, "resume across a poison must stay bit-identical");
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ===========================================================================
+// async_ — barrier-free planner/executor runtime vs the --sync generational
+// path, artifact-free (scripts/ci.sh runs these unconditionally). The
+// executor consumes results in submission order (completion clock), so
+// every observable output must be bit-identical to the barrier loop.
+// ===========================================================================
+
+fn assert_bit_identical(
+    a: &deepaxe::search::SearchOutcome,
+    b: &deepaxe::search::SearchOutcome,
+    tag: &str,
+) {
+    assert_eq!(a.genotypes, b.genotypes, "{tag}: trajectory");
+    assert_eq!(a.fidelities, b.fidelities, "{tag}: fidelities");
+    assert_eq!(a.evals_used, b.evals_used, "{tag}: budget account");
+    assert_eq!(a.cache_hits, b.cache_hits, "{tag}: cache hits");
+    assert_eq!(a.promotions, b.promotions, "{tag}: promotions");
+    assert_eq!(a.frontier_idx, b.frontier_idx, "{tag}: frontier");
+    assert_eq!(a.poisoned, b.poisoned, "{tag}: poisoned points");
+    assert_eq!(a.evaluated.len(), b.evaluated.len(), "{tag}: archive size");
+    for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+        assert_eq!(x, y, "{tag}: design points must be bit-identical");
+    }
+    assert_eq!(a.hypervolume().to_bits(), b.hypervolume().to_bits(), "{tag}: hv2d");
+    assert_eq!(
+        deepaxe::search::hypervolume3(&a.evaluated).to_bits(),
+        deepaxe::search::hypervolume3(&b.evaluated).to_bits(),
+        "{tag}: hv3d"
+    );
+}
+
+#[test]
+fn async_staged_zoo_search_matches_sync_any_worker_count() {
+    // the tentpole acceptance criterion on the real fidelity ladder: the
+    // async runtime at any worker count reproduces the --sync archive,
+    // budget, and FI ledger, with and without screening
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0xA57C, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(8, 10, 0xA57C);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    for screen in [false, true] {
+        let mk_spec = || {
+            if screen {
+                FidelitySpec { screen_faults: 4, ..FidelitySpec::exact() }
+            } else {
+                FidelitySpec::exact()
+            }
+        };
+        let run = |sync: bool, workers: usize| {
+            let staged = StagedEvaluator::new(&ev, mk_spec());
+            let mut spec = SearchSpec::new(Strategy::Nsga2);
+            spec.budget = 16;
+            spec.seed = 0xA57C;
+            spec.screen = screen;
+            spec.workers = workers;
+            spec.sync = sync;
+            let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+            (out, staged.ledger().snapshot(), staged.ledger().summary(fi.n_faults))
+        };
+        let (sync_out, sync_snap, sync_sum) = run(true, 4);
+        assert!(sync_out.executor.is_none(), "--sync must not lease an executor");
+        for workers in [1usize, 4] {
+            let tag = format!("screen={screen} workers={workers}");
+            let (out, snap, sum) = run(false, workers);
+            assert_bit_identical(&sync_out, &out, &tag);
+            assert_eq!(sync_snap, snap, "{tag}: FI ledger snapshot");
+            assert_eq!(sync_sum, sum, "{tag}: FI ledger summary");
+            let stats = out.executor.expect("async outcome must report executor stats");
+            assert!(stats.jobs > 0, "{tag}: evaluations must go through the clock");
+        }
+    }
+}
+
+#[test]
+fn async_exhaustive_pipeline_matches_sync_on_zoo_net() {
+    // the exhaustive branch pipelines across chunks (all misses submitted
+    // up front, checkpoint/promotion of chunk k overlapping chunk k+1) —
+    // the archive, promotions, and ledger must not notice
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0xE4A, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(6, 8, 0xE4A);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    assert_eq!(space.size(), 64, "zoo-tiny x 4 symbols: small enough to enumerate");
+    let run = |sync: bool| {
+        let staged = StagedEvaluator::new(
+            &ev,
+            FidelitySpec { screen_faults: 3, ..FidelitySpec::exact() },
+        );
+        let mut spec = SearchSpec::new(Strategy::Exhaustive);
+        spec.budget = 64;
+        spec.pop = 8; // several chunks => the pipelined plan/consume path
+        spec.seed = 0xE4A;
+        spec.screen = true;
+        spec.workers = 4;
+        spec.sync = sync;
+        let out = run_search(&space, &spec, &StagedBackend { st: &staged }, &mut NoCache);
+        (out, staged.ledger().snapshot())
+    };
+    let (sync_out, sync_snap) = run(true);
+    assert_eq!(sync_out.evals_used, 64, "exhaustive must cover the space");
+    let (async_out, async_snap) = run(false);
+    assert_bit_identical(&sync_out, &async_out, "exhaustive");
+    assert_eq!(sync_snap, async_snap, "exhaustive: FI ledger");
+    assert!(async_out.executor.is_some());
+}
+
+#[test]
+fn async_resume_of_sync_written_journal_is_bit_identical() {
+    // run fingerprints exclude worker count and execution mode: a journal
+    // recorded under --sync resumes under the async runtime (and vice
+    // versa) to the same frontier, budget, and ledger as an uninterrupted
+    // sync run
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    use deepaxe::recovery::{JournalWriter, RunJournal, StateProvider};
+    use deepaxe::search::run_search_journaled;
+
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0xAE5, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(8, 10, 0xAE5);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi.clone());
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    let mk_spec = || FidelitySpec { screen_faults: 4, ..FidelitySpec::exact() };
+    let mut spec = SearchSpec::new(Strategy::Nsga2);
+    spec.budget = 16;
+    spec.pop = 4; // several generations => several checkpoint boundaries
+    spec.seed = 0xAE5;
+    spec.screen = true;
+    spec.sync = true; // the journal is recorded under the barrier path
+
+    let dir =
+        std::env::temp_dir().join(format!("deepaxe_async_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let runs = dir.join("runs");
+    let fp = "it-async-resume";
+
+    // reference: sync, unjournaled, uninterrupted
+    let ref_staged = StagedEvaluator::new(&ev, mk_spec());
+    let reference = run_search(&space, &spec, &StagedBackend { st: &ref_staged }, &mut NoCache);
+
+    // sync journaled run, journal frozen at checkpoint 2 (simulated crash)
+    let run_id = {
+        let staged = StagedEvaluator::new(&ev, mk_spec());
+        let mut journal = JournalWriter::create(&runs, fp, 1);
+        let id = journal.run_id().to_string();
+        journal.limit_checkpoints(2);
+        journal.set_provider(&staged);
+        let _ = run_search_journaled(
+            &space,
+            &spec,
+            &StagedBackend { st: &staged },
+            &mut NoCache,
+            &mut journal,
+        );
+        id
+    };
+
+    // resume under the async runtime with 4 workers
+    let staged = StagedEvaluator::new(&ev, mk_spec());
+    let mut journal = JournalWriter::resume(&runs, &run_id, fp, 1).unwrap();
+    assert!(journal.replaying(), "resume must start in replay mode");
+    if let Some(state) = journal.eval_state() {
+        staged.restore_state(state);
+    }
+    journal.set_provider(&staged);
+    let mut aspec = spec.clone();
+    aspec.sync = false;
+    aspec.workers = 4;
+    let resumed = run_search_journaled(
+        &space,
+        &aspec,
+        &StagedBackend { st: &staged },
+        &mut NoCache,
+        &mut journal,
+    );
+
+    assert_bit_identical(&reference, &resumed, "async resume");
+    assert!(resumed.executor.is_some(), "the resumed run ran on the executor");
+    assert_eq!(
+        staged.ledger().snapshot(),
+        ref_staged.ledger().snapshot(),
+        "FI ledger must restore bit-identically across execution modes"
+    );
+    assert_eq!(
+        staged.ledger().summary(fi.n_faults),
+        ref_staged.ledger().summary(fi.n_faults),
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

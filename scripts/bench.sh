@@ -26,7 +26,12 @@
 # bench_hotpath and bench_faultsim. PR 8 adds `checkpoint_overhead_pct`
 # to bench_zoo: the same zoo search run plain and under a write-ahead
 # run journal committing every generation, so the cost of the crash-safe
-# default is tracked across PRs.
+# default is tracked across PRs. PR 9 adds bench_search to the
+# unconditional list: its artifact-free async A/B record asserts
+# sync/async bit-identity in-process, then emits
+# `async_speedup_vs_sync`, `executor_idle_pct` and `executor_steals`
+# (the lenet5 grid half of bench_search still needs artifacts and skips
+# itself when they are absent).
 #
 # Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
 # "records":[...one object per emitted line...]}. The per-record fields
@@ -82,8 +87,10 @@ write_out() {
     echo "bench.sh: wrote $out ($(wc -l < "$lines" | tr -d ' ') records)"
 }
 
-# artifact-free: always recorded (this is the zoo-net record --smoke keeps)
+# artifact-free: always recorded (these are the records --smoke keeps;
+# bench_search skips its artifact-gated lenet5 half on its own)
 run_bench bench_zoo
+run_bench bench_search
 
 ARTIFACTS="${DEEPAXE_ARTIFACTS:-artifacts}"
 if [ ! -f "$ARTIFACTS/manifest.json" ]; then

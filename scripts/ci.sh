@@ -32,6 +32,13 @@ echo "== tier-1: crash-safe recovery integration tests (artifact-free, no skip) 
 # so it runs in every container.
 cargo test -q --test integration_search recovery_
 
+echo "== tier-1: async-runtime integration tests (artifact-free, no skip) =="
+# The async_ suite pins the barrier-free planner/executor runtime to the
+# --sync generational path: bit-identical archive, frontier, budget, and
+# FI ledger at any worker count (screen on/off), pipelined exhaustive
+# parity, and cross-mode journal resume — zoo-generated nets only.
+cargo test -q --test integration_search async_
+
 echo "== tier-1: fault-model zoo integration tests (artifact-free, no skip) =="
 # The fault_model_ suite covers the unified FaultModel subsystem (bitflip
 # bit-for-bit parity, stuck-at/multibit/lutplane campaigns, selective
