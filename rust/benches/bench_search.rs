@@ -1,11 +1,15 @@
-//! Search harness, two records:
+//! Search harness, three records:
 //!
 //! 1. **async A/B** (artifact-free, always runs): the same staged zoo
 //!    search under the generational `--sync` barrier and the async
 //!    planner/executor runtime. Bit-identity is asserted in-process
 //!    *before* any timing is reported, then `async_speedup_vs_sync` and
 //!    `executor_idle_pct` go into BENCH_<n>.json via scripts/bench.sh.
-//! 2. **lenet5 grid** (needs ./artifacts): budgeted NSGA-II vs the
+//! 2. **partition A/B** (artifact-free, always runs): the same exhaustive
+//!    sweep as one process vs four `serve::run_shard` workers on threads.
+//!    Merge identity (points, frontier, hypervolume bits) is asserted
+//!    in-process before `partition_speedup_vs_single` is reported.
+//! 3. **lenet5 grid** (needs ./artifacts): budgeted NSGA-II vs the
 //!    exhaustive grid — wall-clock and frontier quality at ~25% of the
 //!    exhaustive evaluation count (the subsystem's headline claim).
 
@@ -100,6 +104,98 @@ fn async_ab() {
     bench_common::emit("bench_search_async", "mlp-deep-12", "executor_steals", stats.steals as f64);
 }
 
+/// One process vs four shard workers sweeping the same bounded space on
+/// a generated 12-layer net. The shard side runs one thread per
+/// [`deepaxe::serve::partition`] region, all four sharing the staged
+/// evaluator; accuracy fidelity (no FI) keeps each genotype cheap enough
+/// that thread scaling, not the evaluator, is what gets measured.
+fn partition_ab() {
+    use deepaxe::recovery::NoJournal;
+    use deepaxe::serve::{merge_archives, run_shard, ShardSpec};
+
+    let eval_images = env_usize("DEEPAXE_EVAL_IMAGES", 48);
+    let zoo = deepaxe::zoo::build("mlp-deep-12", 0xA51C, eval_images).expect("zoo");
+    let luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let fi = CampaignParams {
+        n_faults: 4,
+        n_images: 4,
+        seed: 0xA51C,
+        workers: 1,
+        sampling: SiteSampling::UniformLayer,
+        replay: true,
+        gate: true,
+        delta: true,
+        batch: true,
+    };
+    let ev = Evaluator::new(&zoo.net, &zoo.data, &luts, eval_images, fi);
+    // two-symbol alphabet bounds the exhaustive sweep at 2^12 = 4096
+    // configs: big enough to amortize thread startup, small enough for
+    // the --smoke knobs
+    let space = SearchSpace::paper(&zoo.net, &["mul8s_1kvp_s".to_string()]);
+    assert_eq!(space.size(), 1u128 << 12);
+    let staged =
+        StagedEvaluator::new(&ev, FidelitySpec { trace_cache_mb: 0, ..FidelitySpec::exact() });
+
+    let (single, single_dt) = time_once("search:partition_single", || {
+        run_shard(
+            &space,
+            ShardSpec { index: 0, of: 1 },
+            false,
+            &StagedBackend { st: &staged },
+            &mut NoCache,
+            &mut NoJournal,
+        )
+    });
+
+    const SHARDS: usize = 4;
+    let (archives, shard_dt) = time_once("search:partition_4shard", || {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..SHARDS)
+                .map(|i| {
+                    let space = &space;
+                    let staged = &staged;
+                    s.spawn(move || {
+                        run_shard(
+                            space,
+                            ShardSpec { index: i, of: SHARDS },
+                            false,
+                            &StagedBackend { st: staged },
+                            &mut NoCache,
+                            &mut NoJournal,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect::<Vec<_>>()
+        })
+    });
+
+    // the speedup record is meaningless if sharding changed the answer:
+    // merge identity is asserted before a single number is reported
+    let m = merge_archives(archives).expect("merge");
+    assert_eq!(m.points.len(), single.points.len(), "shard sweep lost points");
+    for (a, b) in m.points.iter().zip(&single.points) {
+        assert_eq!(a, b, "sharded design points diverged");
+    }
+    assert_eq!(m.evals_used, single.evals_used, "shard budget account diverged");
+    let (single_front, single_hv) = frontier_hv(&single.points, false);
+    assert_eq!(m.frontier_idx, single_front, "sharded frontier diverged");
+    assert_eq!(m.hv2d.to_bits(), single_hv.to_bits(), "sharded hypervolume diverged");
+
+    let speedup = single_dt / shard_dt.max(1e-9);
+    println!(
+        "partition A/B (mlp-deep-12, {} configs, {SHARDS} shards): single {single_dt:.2}s vs sharded {shard_dt:.2}s = {speedup:.2}x",
+        m.points.len(),
+    );
+    bench_common::emit(
+        "bench_search_partition",
+        "mlp-deep-12",
+        "partition_speedup_vs_single",
+        speedup,
+    );
+}
+
 /// The original lenet5 record: budgeted NSGA-II vs the exhaustive grid.
 fn lenet_vs_exhaustive() {
     let ctx = bench_common::setup(12, 20, 100);
@@ -183,9 +279,10 @@ fn lenet_vs_exhaustive() {
 
 fn main() {
     async_ab();
+    partition_ab();
     if !bench_common::artifacts().join("manifest.json").exists() {
         println!(
-            "bench_search: artifacts missing — recorded the artifact-free async A/B only."
+            "bench_search: artifacts missing — recorded the artifact-free async and partition A/Bs only."
         );
         return;
     }

@@ -431,6 +431,20 @@ impl ResultCache {
         out
     }
 
+    /// Sum of [`segment_reports`](Self::segment_reports): the one-line
+    /// corruption tally across the base file and every shard segment.
+    /// `repro cache verify` prints it after the per-segment breakdown so
+    /// a sharded store's health is visible at a glance.
+    pub fn total_report(&self) -> RecoveryReport {
+        let mut total = RecoveryReport::default();
+        for (_, r) in self.segment_reports() {
+            total.lines += r.lines;
+            total.loaded += r.loaded;
+            total.quarantined += r.quarantined;
+        }
+        total
+    }
+
     /// When off, appends stay in the shard writers' buffers until
     /// [`ResultCache::flush`] — journaled searches flush at checkpoint
     /// boundaries so the on-disk cache never runs ahead of the journal.

@@ -109,6 +109,23 @@ pub fn hypervolume3d<T>(
     hv
 }
 
+/// Pareto front over several point sets without materializing their
+/// concatenation: returns `(set, index)` pairs in the same order
+/// [`pareto_front`] would return indices over the concatenated sets.
+/// Because a front of a union is a subset of the union of per-set fronts,
+/// callers merging per-shard archives (`repro merge`) can feed only the
+/// shard frontiers here and still get the global frontier.
+pub fn pareto_merge<T>(
+    sets: &[&[T]],
+    fx: impl Fn(&T) -> f64,
+    fy: impl Fn(&T) -> f64,
+) -> Vec<(usize, usize)> {
+    let flat: Vec<(usize, usize)> =
+        sets.iter().enumerate().flat_map(|(s, pts)| (0..pts.len()).map(move |i| (s, i))).collect();
+    let front = pareto_front(&flat, |&(s, i)| fx(&sets[s][i]), |&(s, i)| fy(&sets[s][i]));
+    front.into_iter().map(|k| flat[k]).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,5 +336,30 @@ mod tests {
             assert!(pts[w[0]].0 <= pts[w[1]].0);
             assert!(pts[w[0]].1 > pts[w[1]].1);
         }
+    }
+
+    #[test]
+    fn property_merge_equals_front_of_concatenation() {
+        // the shard-merge identity: pareto_merge over arbitrary set splits
+        // selects exactly the points pareto_front selects over the
+        // concatenation, in the same order — duplicates across sets
+        // included (tie-breaking must agree too)
+        check("pareto_merge == front of concat", 0x4E26, 60, |rng| {
+            let n = 1 + rng.usize_below(40);
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    // coarse grid to force cross-set duplicates
+                    ((rng.below(8) as f64), (rng.below(8) as f64))
+                })
+                .collect();
+            let cut = rng.usize_below(n + 1);
+            let (a, b) = pts.split_at(cut);
+            let merged = pareto_merge(&[a, b], |p| p.0, |p| p.1);
+            let flat: Vec<usize> = merged
+                .iter()
+                .map(|&(s, i)| if s == 0 { i } else { cut + i })
+                .collect();
+            assert_eq!(flat, pareto_front(&pts, |p| p.0, |p| p.1));
+        });
     }
 }

@@ -463,6 +463,33 @@ impl LedgerSnapshot {
             .unwrap_or_default();
         Some(LedgerSnapshot { counters, depth_hist })
     }
+
+    /// Value of a named counter (0 if absent) — read-side accessor for
+    /// shard-merge reporting.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Fold another snapshot into this one: counters sum by name, the
+    /// replay depth histogram sums element-wise. Shard ledgers are
+    /// independent `FiLedger`s, so summing snapshots is exactly the ledger
+    /// a single process would have accumulated — provided no cross-shard
+    /// state (trace cache, screening gate) was live; `repro merge` relies
+    /// on this for the merged accounting line.
+    pub fn merge(&mut self, other: &LedgerSnapshot) {
+        for (name, value) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, v)) => *v += value,
+                None => self.counters.push((name.clone(), *value)),
+            }
+        }
+        if self.depth_hist.len() < other.depth_hist.len() {
+            self.depth_hist.resize(other.depth_hist.len(), 0);
+        }
+        for (i, v) in other.depth_hist.iter().enumerate() {
+            self.depth_hist[i] += v;
+        }
+    }
 }
 
 /// Byte-budgeted LRU of live screen-tier campaigns keyed by the

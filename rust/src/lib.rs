@@ -38,6 +38,10 @@
 //! * [`recovery`] — crash-safe search runtime: deterministic run-ids,
 //!   an atomically-rewritten run journal with checkpoint/replay resume,
 //!   and the state hooks the staged evaluator checkpoints through.
+//! * [`serve`] — DSE-as-a-service: the `repro serve` job-queue daemon
+//!   (Unix-socket JSON protocol, concurrent journaled campaigns),
+//!   deterministic search-space partitioning for `repro worker --shard
+//!   i/N`, and the `repro merge` multi-process frontier merge.
 //! * [`zoo`] — parametric model zoo + synthetic workload generator:
 //!   topology grammar, seeded weight synthesis with calibrated
 //!   quantization, teacher-labeled datasets — deep nets and their
@@ -59,6 +63,7 @@ pub mod recovery;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod simnet;
 pub mod tensor;
 pub mod util;

@@ -64,6 +64,34 @@ COMMANDS
       lenet5 lenet5-wide convnet-11 mlp-deep-12 mlp-deep-16 zoo-tiny
   zoo search                   budgeted DSE on a generated net — no artifacts
       --net <preset>|--spec <topology> [--seed N] plus every `search` knob
+  serve                        DSE job-queue daemon on a Unix socket
+      [--socket PATH] [--max-jobs N] [--work-dir DIR]
+      (env DEEPAXE_SERVE_SOCKET / DEEPAXE_SERVE_MAX_JOBS; one
+      line-delimited JSON request per line: submit/status/snapshot/
+      cancel/shutdown; up to --max-jobs campaigns run concurrently over
+      the shared worker budget, queued beyond that. Every served
+      campaign writes the same run journal a CLI run would — cancel
+      lands on a checkpoint boundary and the job resumes later by
+      resubmitting with \"resume\": \"<run-id>\")
+  serve submit|status|snapshot|cancel|shutdown
+                               client ops against a running daemon:
+      submit --net <preset>|--spec <topology> [zoo-search knobs...]
+      status [job] | snapshot <job> | cancel <job>   [--socket PATH]
+  worker                       exhaustive sweep of one partition shard
+      --shard i/N --net <preset>|--spec <topology> [--out file.json]
+      [--seed N] [--no-fi] [--mults a,b,c] [--harden] [--fault-model M]
+      [--checkpoint-every N] [--resume RUN]
+      (the space splits into N disjoint fully-covering contiguous
+      regions by canonical genotype index; each worker owns one region,
+      its own journal and its own cache shard — no cross-process locks)
+  merge <a.json> <b.json> ...  fold N shard archives into one frontier —
+                               bit-identical (frontier, hypervolumes,
+                               budget + FI-ledger counters) to the
+                               single-process sweep when the shards
+                               cover the space
+  runs list [dir]              journaled run-ids with status
+                               (complete|checkpointed|stale; default
+                               results/runs)
   parity                       simnet vs AOT/PJRT executable cross-check
       --net <name> [--images n]
   faults                       Leveugle statistical FI sizing per network
@@ -188,8 +216,8 @@ fn fault_model_arg(args: &cli::Args) -> Result<FaultModelKind> {
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(
         argv,
-        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen", "fault-model", "checkpoint-every", "resume", "eval-deadline-s"],
-        &["fi", "no-fi", "warm-start", "harden", "help"],
+        &["net", "spec", "mult", "config", "faults", "images", "eval-images", "nets", "seed", "max-acc-drop", "max-vuln", "batch", "out", "strategy", "budget", "mults", "workers", "fi-epsilon", "fi-screen", "fault-model", "checkpoint-every", "resume", "eval-deadline-s", "socket", "max-jobs", "work-dir", "shard"],
+        &["fi", "no-fi", "warm-start", "harden", "sync", "help"],
     )
     .map_err(anyhow::Error::msg)?;
 
@@ -214,6 +242,10 @@ fn run(argv: &[String]) -> Result<()> {
         "pipeline" => pipeline_cmd(&args),
         "search" => search_cmd(&args),
         "zoo" => zoo_cmd(&args),
+        "serve" => serve_cmd(&args),
+        "worker" => worker_cmd(&args),
+        "merge" => merge_cmd(&args),
+        "runs" => runs_cmd(&args),
         "cache" => cache_cmd(&args),
         "parity" => parity(&args),
         "faults" => fault_sizing(),
@@ -439,52 +471,10 @@ fn search_cmd(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// Deterministic fingerprint of everything that shapes a journaled run's
-/// event stream. The run-id is hashed from this string, so `--resume`
-/// refuses to replay a journal recorded under different settings — the
-/// replay would diverge silently otherwise. `--workers` and the
-/// trace-cache byte budget are deliberately excluded: both change only
-/// scheduling and memory, never results.
-#[allow(clippy::too_many_arguments)]
-fn run_fingerprint(
-    net_name: &str,
-    space: &SearchSpace,
-    spec: &SearchSpec,
-    budget: usize,
-    fi: &CampaignParams,
-    eval_images: usize,
-    fault_model: FaultModelKind,
-    fidelity: &deepaxe::eval::FidelitySpec,
-) -> String {
-    format!(
-        "net={} alphabet={} layers={} hardening={} strategy={} budget={} seed={} pop={} \
-         with_fi={} screen={} warm={} fi_faults={} fi_images={} fi_seed={} eval_images={} \
-         fault_model={} epsilon={} screen_faults={} screen_auto={} block={} min_faults={} \
-         deadline_s={}",
-        net_name,
-        space.alphabet.join(","),
-        space.n_layers,
-        space.hardening,
-        spec.strategy.name(),
-        budget,
-        spec.seed,
-        spec.pop,
-        spec.with_fi,
-        spec.screen,
-        spec.warm_start,
-        fi.n_faults,
-        fi.n_images,
-        fi.seed,
-        eval_images,
-        fault_model.name(),
-        fidelity.epsilon_pp,
-        fidelity.screen_faults,
-        fidelity.screen_auto,
-        fidelity.block,
-        fidelity.min_faults,
-        fidelity.eval_deadline_s,
-    )
-}
+// run_fingerprint moved into the library (deepaxe::search::run_fingerprint)
+// so the serve daemon and shard workers derive the same run-ids the CLI
+// does; imported through `use deepaxe::search::run_fingerprint` below.
+use deepaxe::search::run_fingerprint;
 
 /// Shared crash-safe entry point for `repro search` and `repro zoo
 /// search`: `--checkpoint-every 0` bypasses journaling entirely
@@ -564,6 +554,14 @@ fn cache_cmd(args: &cli::Args) -> Result<()> {
                         sr.lines, sr.loaded, sr.quarantined
                     );
                 }
+                let t = cache.total_report();
+                println!(
+                    "  total: {} segments, {} lines, {} loaded, {} quarantined",
+                    segments.len(),
+                    t.lines,
+                    t.loaded,
+                    t.quarantined
+                );
             }
             if r.is_clean() {
                 println!("clean");
@@ -792,6 +790,352 @@ fn zoo_search(args: &cli::Args) -> Result<()> {
     let out = journaled_search(args, &space, &spec, &backend, &staged, &mut hook, &fp, std::path::Path::new("results/runs"))?;
     print_search_report(&space, &spec, &net.name, &out, budget, &staged.ledger().summary(fi.n_faults));
     Ok(())
+}
+
+/// `repro serve [submit|status|snapshot|cancel|shutdown]` — run the DSE
+/// job-queue daemon (no positional), or drive a running one as a client.
+fn serve_cmd(args: &cli::Args) -> Result<()> {
+    use deepaxe::serve::protocol::{self, Request};
+    let socket = std::path::PathBuf::from(match args.get("socket") {
+        Some(s) => s.to_string(),
+        None => std::env::var(protocol::SOCKET_ENV)
+            .unwrap_or_else(|_| protocol::DEFAULT_SOCKET.to_string()),
+    });
+    let client_job = |pos: usize| -> Result<u64> {
+        args.positional
+            .get(pos)
+            .context("job id required")?
+            .parse::<u64>()
+            .context("job id must be a number")
+    };
+    match args.positional.first().map(|s| s.as_str()) {
+        None | Some("run") => {
+            let cfg = deepaxe::serve::ServeConfig {
+                socket,
+                work_dir: std::path::PathBuf::from(args.get_or("work-dir", "results")),
+                max_jobs: args
+                    .get_usize(
+                        "max-jobs",
+                        deepaxe::util::cli::env_usize(
+                            protocol::MAX_JOBS_ENV,
+                            protocol::DEFAULT_MAX_JOBS,
+                        ),
+                    )?
+                    .max(1),
+            };
+            eprintln!(
+                "serve: listening on {} ({} concurrent campaigns, work dir {})",
+                cfg.socket.display(),
+                cfg.max_jobs,
+                cfg.work_dir.display()
+            );
+            let daemon = deepaxe::serve::Daemon::start(cfg).map_err(anyhow::Error::msg)?;
+            daemon.join();
+            Ok(())
+        }
+        Some("submit") => {
+            let job = submit_job_json(args)?;
+            let resp =
+                protocol::call(&socket, &Request::Submit { job }).map_err(anyhow::Error::msg)?;
+            println!("{resp}");
+            Ok(())
+        }
+        Some("status") => {
+            let job = match args.positional.get(1) {
+                Some(s) => Some(s.parse::<u64>().context("job id must be a number")?),
+                None => None,
+            };
+            let resp =
+                protocol::call(&socket, &Request::Status { job }).map_err(anyhow::Error::msg)?;
+            println!("{resp}");
+            Ok(())
+        }
+        Some("snapshot") => {
+            let resp = protocol::call(&socket, &Request::Snapshot { job: client_job(1)? })
+                .map_err(anyhow::Error::msg)?;
+            println!("{resp}");
+            Ok(())
+        }
+        Some("cancel") => {
+            let resp = protocol::call(&socket, &Request::Cancel { job: client_job(1)? })
+                .map_err(anyhow::Error::msg)?;
+            println!("{resp}");
+            Ok(())
+        }
+        Some("shutdown") => {
+            let resp =
+                protocol::call(&socket, &Request::Shutdown).map_err(anyhow::Error::msg)?;
+            println!("{resp}");
+            Ok(())
+        }
+        Some(other) => {
+            bail!("unknown serve subcommand {other:?} (submit|status|snapshot|cancel|shutdown)\n{USAGE}")
+        }
+    }
+}
+
+/// Assemble a submit-job object from the `zoo search` flags. Only flags
+/// the user actually passed ride along, so the daemon's env-backed
+/// defaults stay authoritative for everything else.
+fn submit_job_json(args: &cli::Args) -> Result<deepaxe::util::json::Json> {
+    use deepaxe::util::json::{self, Json};
+    let target = zoo_target(args)?;
+    let key = if args.get("spec").is_some() { "spec" } else { "net" };
+    let mut pairs: Vec<(&str, Json)> = vec![(key, json::str(target))];
+    if args.get("seed").is_some() {
+        pairs.push(("seed", json::num(args.get_u64("seed", 0)? as f64)));
+    }
+    if let Some(s) = args.get("strategy") {
+        pairs.push(("strategy", json::str(s)));
+    }
+    if args.get("budget").is_some() {
+        pairs.push(("budget", json::num(args.get_usize("budget", 0)? as f64)));
+    }
+    if args.get("workers").is_some() {
+        pairs.push(("workers", json::num(args.get_usize("workers", 1)? as f64)));
+    }
+    if args.get("faults").is_some() {
+        pairs.push(("faults", json::num(args.get_usize("faults", 0)? as f64)));
+    }
+    if args.get("images").is_some() {
+        pairs.push(("images", json::num(args.get_usize("images", 0)? as f64)));
+    }
+    if args.get("eval-images").is_some() {
+        pairs.push(("eval_images", json::num(args.get_usize("eval-images", 0)? as f64)));
+    }
+    if args.get("fi-epsilon").is_some() {
+        pairs.push(("fi_epsilon", json::num(args.get_f64("fi-epsilon", 0.0)?)));
+    }
+    if args.get("fi-screen").is_some() {
+        pairs.push(("fi_screen", json::num(args.get_usize("fi-screen", 0)? as f64)));
+    }
+    if args.get("checkpoint-every").is_some() {
+        pairs.push(("checkpoint_every", json::num(args.get_usize("checkpoint-every", 1)? as f64)));
+    }
+    if let Some(r) = args.get("resume") {
+        pairs.push(("resume", json::str(r)));
+    }
+    if let Some(m) = args.get("fault-model") {
+        pairs.push(("fault_model", json::str(m)));
+    }
+    if args.get("mults").is_some() {
+        pairs.push((
+            "mults",
+            Json::Arr(args.get_list("mults", &[]).iter().map(json::str).collect()),
+        ));
+    }
+    if args.has("no-fi") {
+        pairs.push(("with_fi", Json::Bool(false)));
+    }
+    if args.has("sync") {
+        pairs.push(("sync", Json::Bool(true)));
+    }
+    if args.has("warm-start") {
+        pairs.push(("warm_start", Json::Bool(true)));
+    }
+    if args.has("harden") {
+        pairs.push(("harden", Json::Bool(true)));
+    }
+    Ok(json::obj(pairs))
+}
+
+/// `repro worker --shard i/N` — exhaustively sweep one partition region
+/// of a zoo net's search space and write the shard archive `repro merge`
+/// folds back together. Same artifact-free assembly as `zoo search`,
+/// minus the strategy: a worker owns a canonical-index range, not a
+/// budget.
+fn worker_cmd(args: &cli::Args) -> Result<()> {
+    use deepaxe::recovery::{JournalWriter, NoJournal, RunJournal, StateProvider};
+    use deepaxe::serve::{run_shard, worker_fingerprint, ShardSpec};
+    use deepaxe::util::cli::env_usize;
+    let shard = ShardSpec::parse(args.get("shard").context("--shard i/N required")?)
+        .map_err(anyhow::Error::msg)?;
+    let target = zoo_target(args)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let fi = CampaignParams {
+        n_faults: env_usize("DEEPAXE_FI_FAULTS", 60),
+        n_images: env_usize("DEEPAXE_FI_IMAGES", 48),
+        seed,
+        ..CampaignParams::default_for("zoo")
+    };
+    let eval_images = env_usize("DEEPAXE_EVAL_IMAGES", 120);
+    let bundle = deepaxe::zoo::build(&target, seed, eval_images.max(fi.n_images))
+        .map_err(anyhow::Error::msg)?;
+    let net = &bundle.net;
+    let luts: std::collections::BTreeMap<String, deepaxe::axmul::Lut> =
+        deepaxe::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let mults: Vec<String> = args
+        .get_list("mults", &["mul8s_1kvp_s", "mul8s_1kv9_s", "mul8s_1kv8_s"])
+        .iter()
+        .map(|m| exp::mult_name(m).to_string())
+        .collect();
+    let mut space = SearchSpace::paper(net, &mults);
+    if args.has("harden") {
+        space = space.with_hardening();
+    }
+    let fault_model = fault_model_arg(args)?;
+    let with_fi = !args.has("no-fi");
+    let region = shard.region(&space);
+    let len = usize::try_from(region.len()).context("shard region too large for one process")?;
+    eprintln!(
+        "worker shard {}: {} ({} layers), region {} of {} configs{}",
+        region.label(),
+        net.name,
+        space.n_layers,
+        region.len(),
+        space.size(),
+        if with_fi { "" } else { ", no FI" },
+    );
+
+    let ev = deepaxe::dse::Evaluator::new(net, &bundle.data, &luts, eval_images, fi.clone());
+    let fidelity = fidelity_spec(args)?;
+    let mut sspec = SearchSpec::new(Strategy::Exhaustive);
+    sspec.budget = len;
+    sspec.seed = seed;
+    sspec.with_fi = with_fi;
+    let base = run_fingerprint(&net.name, &space, &sspec, len, &fi, eval_images, fault_model, &fidelity);
+    let wfp = worker_fingerprint(&base, &region);
+    let rid = deepaxe::recovery::run_id(&wfp);
+
+    std::fs::create_dir_all("results").ok();
+    let staged = deepaxe::eval::StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
+    let backend = deepaxe::eval::StagedBackend { st: &staged };
+    let mut cache = deepaxe::dse::cache::ResultCache::open(std::path::Path::new(&format!(
+        "results/worker_cache_{rid}.jsonl"
+    )));
+    let runs_dir = std::path::Path::new("results/runs");
+    let every = args.get_usize("checkpoint-every", 1)?;
+    // same journaling contract as journaled_search: 0 disables, resume
+    // replays — but against the worker's shard-scoped fingerprint
+    let mut journal_box: Box<dyn RunJournal + '_> = if every == 0 {
+        if args.get("resume").is_some() {
+            bail!("--resume requires journaling; drop --checkpoint-every 0");
+        }
+        Box::new(NoJournal)
+    } else {
+        let mut j = match args.get("resume") {
+            Some(run) => {
+                let j = JournalWriter::resume(runs_dir, run, &wfp, every)
+                    .map_err(anyhow::Error::msg)?;
+                cache.rollback_to(&j.cache_mark())?;
+                if let Some(state) = j.eval_state() {
+                    staged.restore_state(state);
+                }
+                eprintln!("resuming worker run {} (journal {})", j.run_id(), j.path().display());
+                j
+            }
+            None => {
+                let j = JournalWriter::create(runs_dir, &wfp, every);
+                eprintln!("worker run-id: {} (journal {})", j.run_id(), j.path().display());
+                j
+            }
+        };
+        j.set_provider(&staged);
+        cache.set_autoflush(false);
+        Box::new(j)
+    };
+    let mut hook = deepaxe::search::ResultCacheHook {
+        cache: &mut cache,
+        net: net.name.clone(),
+        fi: fi.clone(),
+        eval_images,
+        fault_model,
+    };
+    let mut archive = run_shard(&space, shard, with_fi, &backend, &mut hook, journal_box.as_mut());
+    drop(journal_box);
+    archive.ledger = staged.ledger().snapshot();
+
+    let default_out = format!("results/shard_{}_of_{}.json", shard.index, shard.of);
+    let out = args.get_or("out", &default_out);
+    archive.save(std::path::Path::new(out)).with_context(|| format!("writing {out}"))?;
+    println!(
+        "shard {} swept: {} points ({} cache hits, {} poisoned) -> {out}",
+        region.label(),
+        archive.points.len(),
+        archive.cache_hits,
+        archive.poisoned.len(),
+    );
+    println!("{}", staged.ledger().summary(fi.n_faults));
+    Ok(())
+}
+
+/// `repro merge <a.json> <b.json> ...` — fold per-shard archives into the
+/// single-process-equivalent frontier.
+fn merge_cmd(args: &cli::Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("merge: give the shard archive paths (one per shard of the cut)\n{USAGE}");
+    }
+    let archives = args
+        .positional
+        .iter()
+        .map(|p| deepaxe::serve::ShardArchive::load(std::path::Path::new(p)))
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(anyhow::Error::msg)?;
+    let m = deepaxe::serve::merge_archives(archives).map_err(anyhow::Error::msg)?;
+    let mut t = Table::new(
+        &format!("merged frontier: {} ({} shards over {} configs)", m.net, m.shards, m.space_size),
+        &["config", "acc drop pp", "FI drop pp", "util %", "cycles"],
+    );
+    for p in m.frontier() {
+        t.row(vec![
+            p.config_string.clone(),
+            pct(p.acc_drop_pct),
+            pct(p.fault_vuln_pct),
+            f2(p.util_pct),
+            p.cycles.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "evaluations: {} ({} cache hits) summed over {} shards; {} poisoned",
+        m.evals_used,
+        m.cache_hits,
+        m.shards,
+        m.poisoned.len()
+    );
+    println!(
+        "hypervolume2d (ref {:?}): {:.1} | hypervolume3d (ref {:?}): {:.0}",
+        deepaxe::search::HV_REF,
+        m.hv2d,
+        deepaxe::search::HV3_REF,
+        m.hv3d,
+    );
+    Ok(())
+}
+
+/// `repro runs list [dir]` — enumerate journaled runs with their
+/// resume-worthiness: complete (evals reached the recorded target),
+/// checkpointed (resumable), stale (unreadable / no checkpoint).
+fn runs_cmd(args: &cli::Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()).unwrap_or("list") {
+        "list" => {
+            let dir = args.positional.get(1).map(|s| s.as_str()).unwrap_or("results/runs");
+            let runs = deepaxe::recovery::list_runs(std::path::Path::new(dir));
+            if runs.is_empty() {
+                println!("no run journals under {dir}");
+                return Ok(());
+            }
+            let mut t = Table::new(
+                &format!("journaled runs ({dir})"),
+                &["run-id", "status", "evals", "target", "hits", "promos", "archive", "events"],
+            );
+            for r in runs {
+                t.row(vec![
+                    r.run_id,
+                    r.status.name().to_string(),
+                    r.evals_used.to_string(),
+                    r.budget.map(|b| b.to_string()).unwrap_or_else(|| "?".to_string()),
+                    r.cache_hits.to_string(),
+                    r.promotions.to_string(),
+                    r.archive_len.to_string(),
+                    r.events.to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        other => bail!("unknown runs subcommand {other:?} (list)\n{USAGE}"),
+    }
 }
 
 fn parity(args: &cli::Args) -> Result<()> {

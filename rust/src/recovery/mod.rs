@@ -541,6 +541,140 @@ impl<'a> JournalWriter<'a> {
     }
 }
 
+/// What a persisted journal says about its run, judged from the file
+/// alone (no replay): `Complete` when the last checkpoint's evaluation
+/// count reached the fingerprinted budget, `Checkpointed` when a resume
+/// would pick up mid-run, `Stale` when the file is unreadable, not a
+/// journal, or has no committed checkpoint to resume from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    Complete,
+    Checkpointed,
+    Stale,
+}
+
+impl RunStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunStatus::Complete => "complete",
+            RunStatus::Checkpointed => "checkpointed",
+            RunStatus::Stale => "stale",
+        }
+    }
+}
+
+/// Summary of one journal file — what `repro runs list` prints and what
+/// the serve daemon's `snapshot` op reports for a live campaign.
+#[derive(Debug, Clone)]
+pub struct RunInfo {
+    pub run_id: String,
+    pub path: PathBuf,
+    pub fingerprint: String,
+    pub status: RunStatus,
+    /// Recorded evaluation/promotion/poison events in the file.
+    pub events: usize,
+    /// Counters at the last committed checkpoint (0 when stale).
+    pub evals_used: usize,
+    pub cache_hits: usize,
+    pub promotions: usize,
+    pub archive_len: usize,
+    /// Evaluation target parsed back out of the fingerprint: a shard
+    /// journal's `range=a..b` span when present, else the recorded
+    /// `budget=N`. `None` when the fingerprint carries neither.
+    pub budget: Option<usize>,
+}
+
+/// Pull a `key=value` token back out of a run fingerprint.
+fn fingerprint_token(fp: &str, key: &str) -> Option<String> {
+    fp.split_whitespace().find_map(|tok| tok.strip_prefix(&format!("{key}=")).map(str::to_string))
+}
+
+/// Inspect one journal file without replaying it. Never errors — a
+/// journal this function cannot make sense of is reported as
+/// [`RunStatus::Stale`] (with whatever run-id the filename suggests), so
+/// one corrupt file cannot hide the rest of a `runs list`.
+pub fn inspect_run(path: &Path) -> RunInfo {
+    let stem_id =
+        path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    let mut info = RunInfo {
+        run_id: stem_id,
+        path: path.to_path_buf(),
+        fingerprint: String::new(),
+        status: RunStatus::Stale,
+        events: 0,
+        evals_used: 0,
+        cache_hits: 0,
+        promotions: 0,
+        archive_len: 0,
+        budget: None,
+    };
+    let Ok(text) = fs::read_to_string(path) else {
+        return info;
+    };
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let Some(header) = lines.next().and_then(|l| Json::parse(l).ok()) else {
+        return info;
+    };
+    if header.get("deepaxe_journal").and_then(Json::as_i64) != Some(1) {
+        return info;
+    }
+    if let Some(id) = header.get("run_id").and_then(Json::as_str) {
+        info.run_id = id.to_string();
+    }
+    info.fingerprint =
+        header.get("fingerprint").and_then(Json::as_str).unwrap_or_default().to_string();
+    // a shard journal's target is its region span; a search journal's is
+    // its resolved budget
+    info.budget = fingerprint_token(&info.fingerprint, "range")
+        .and_then(|r| {
+            let (a, b) = r.split_once("..")?;
+            Some(b.parse::<u128>().ok()?.checked_sub(a.parse::<u128>().ok()?)? as usize)
+        })
+        .or_else(|| fingerprint_token(&info.fingerprint, "budget").and_then(|b| b.parse().ok()));
+    let mut checkpoint = None;
+    for line in lines {
+        let Ok(j) = Json::parse(line) else {
+            return info; // torn or foreign line: resume would refuse too
+        };
+        if let Some(cp) = Checkpoint::from_json(&j) {
+            checkpoint = Some(cp);
+        } else if Event::from_json(&j).is_some() {
+            info.events += 1;
+        } else {
+            return info;
+        }
+    }
+    let Some(cp) = checkpoint else {
+        return info; // no committed checkpoint: nothing to resume from
+    };
+    info.evals_used = cp.counters.evals_used;
+    info.cache_hits = cp.counters.cache_hits;
+    info.promotions = cp.counters.promotions;
+    info.archive_len = cp.counters.archive_len;
+    info.status = match info.budget {
+        Some(b) if cp.counters.evals_used >= b => RunStatus::Complete,
+        _ => RunStatus::Checkpointed,
+    };
+    info
+}
+
+/// Enumerate every journaled run under `dir`, sorted by run-id. Missing
+/// directory = no runs (not an error): `repro runs list` works before the
+/// first journaled run ever happens.
+pub fn list_runs(dir: &Path) -> Vec<RunInfo> {
+    let mut runs: Vec<RunInfo> = match fs::read_dir(dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "journal").unwrap_or(false))
+            .map(|p| inspect_run(&p))
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    runs.sort_by(|a, b| a.run_id.cmp(&b.run_id));
+    runs
+}
+
 impl RunJournal for JournalWriter<'_> {
     fn replaying(&self) -> bool {
         self.mode == Mode::Replay

@@ -57,7 +57,7 @@ use super::space::{Genotype, SearchSpace};
 use crate::dse::cache::{CacheKey, CacheMark, ResultCache};
 use crate::dse::pareto::pareto_front;
 use crate::dse::{DesignPoint, Evaluator};
-use crate::eval::{FiGate, Fidelity};
+use crate::eval::{FiGate, Fidelity, FidelitySpec};
 use crate::faultsim::{CampaignParams, FaultModelKind};
 use crate::recovery::{NoJournal, Replayed, RunCounters, RunJournal};
 use crate::util::rng::Rng;
@@ -1085,6 +1085,55 @@ where
     }
     let idx = archive.eval_batch(backend, cache, journal, exec, vec![g.clone()]);
     idx.first().map(|&i| archive.objs[i])
+}
+
+/// Deterministic fingerprint of everything that shapes a journaled run's
+/// event stream. The run-id is hashed from this string, so `--resume`
+/// refuses to replay a journal recorded under different settings — the
+/// replay would diverge silently otherwise. `--workers` and the
+/// trace-cache byte budget are deliberately excluded: both change only
+/// scheduling and memory, never results. Shared by `repro search`, the
+/// serve daemon ([`crate::serve`]) and shard workers (which extend it
+/// with their region identity).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fingerprint(
+    net_name: &str,
+    space: &SearchSpace,
+    spec: &SearchSpec,
+    budget: usize,
+    fi: &CampaignParams,
+    eval_images: usize,
+    fault_model: FaultModelKind,
+    fidelity: &FidelitySpec,
+) -> String {
+    format!(
+        "net={} alphabet={} layers={} hardening={} strategy={} budget={} seed={} pop={} \
+         with_fi={} screen={} warm={} fi_faults={} fi_images={} fi_seed={} eval_images={} \
+         fault_model={} epsilon={} screen_faults={} screen_auto={} block={} min_faults={} \
+         deadline_s={}",
+        net_name,
+        space.alphabet.join(","),
+        space.n_layers,
+        space.hardening,
+        spec.strategy.name(),
+        budget,
+        spec.seed,
+        spec.pop,
+        spec.with_fi,
+        spec.screen,
+        spec.warm_start,
+        fi.n_faults,
+        fi.n_images,
+        fi.seed,
+        eval_images,
+        fault_model.name(),
+        fidelity.epsilon_pp,
+        fidelity.screen_faults,
+        fidelity.screen_auto,
+        fidelity.block,
+        fidelity.min_faults,
+        fidelity.eval_deadline_s,
+    )
 }
 
 /// Run a budgeted search over `space`. See module docs for budget and

@@ -39,8 +39,8 @@ pub mod nsga2;
 pub mod space;
 
 pub use driver::{
-    frontier_hv, hypervolume3, run_search, run_search_journaled, CacheHook, EvalBackend,
-    EvaluatorBackend, NoCache, ResultCacheHook, SearchOutcome, SearchSpec, Strategy, TracePoint,
-    HV3_REF, HV_REF,
+    frontier_hv, hypervolume3, run_fingerprint, run_search, run_search_journaled, CacheHook,
+    EvalBackend, EvaluatorBackend, NoCache, ResultCacheHook, SearchOutcome, SearchSpec, Strategy,
+    TracePoint, HV3_REF, HV_REF,
 };
 pub use space::{Genotype, SearchSpace};

@@ -98,8 +98,10 @@ impl SearchSpace {
     }
 
     /// Radix of genotype position `i` (multiplier alphabet for the first
-    /// block, the 3 harden levels for the second).
-    fn radix(&self, i: usize) -> u64 {
+    /// block, the 3 harden levels for the second). Public so
+    /// [`crate::serve::partition`] can map genotypes to canonical
+    /// mixed-radix indices and back.
+    pub fn radix(&self, i: usize) -> u64 {
         if i < self.n_layers {
             self.alphabet.len() as u64
         } else {

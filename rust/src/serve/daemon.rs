@@ -1,0 +1,755 @@
+//! `repro serve` — the DSE job-queue daemon.
+//!
+//! Turns the one-shot CLI into a long-running service: clients submit
+//! search-campaign jobs over the Unix-socket protocol
+//! ([`super::protocol`]), a fixed pool of runner threads executes up to
+//! `max_jobs` campaigns concurrently, and every campaign runs the
+//! ordinary journaled search — same fingerprint, same run-id, same
+//! journal file as `repro zoo search` would produce — so a served
+//! campaign is resumable (and `snapshot`-able) exactly like a CLI one.
+//!
+//! Concurrency model: each runner thread drives one campaign's
+//! planner/executor runtime; evaluation workers for *all* live campaigns
+//! lease from the shared [`WorkerBudget`], so N concurrent campaigns
+//! multiplex the host instead of oversubscribing it (`status` reports the
+//! budget's live/available counts for exactly this reason).
+//!
+//! Cancellation: a queued job cancels immediately. A running job cancels
+//! at its next checkpoint boundary — the [`ServedJournal`] wrapper forces
+//! a checkpoint commit and then unwinds the planner with a
+//! [`CancelSignal`], so the journal on disk always ends at a committed
+//! boundary and the cancelled campaign can later be resubmitted with
+//! `resume` to finish from precisely where it stopped.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::dse::cache::{CacheMark, ResultCache};
+use crate::dse::{DesignPoint, Evaluator};
+use crate::eval::{Fidelity, FidelitySpec, StagedBackend, StagedEvaluator};
+use crate::faultsim::{CampaignParams, FaultModelKind};
+use crate::recovery::{
+    inspect_run, JournalWriter, Replayed, RunCounters, RunJournal, StateProvider,
+};
+use crate::search::{
+    hypervolume3, run_fingerprint, run_search_journaled, ResultCacheHook, SearchSpace, SearchSpec,
+    Strategy,
+};
+use crate::util::cli::env_usize;
+use crate::util::json::{self, Json};
+use crate::util::threadpool::WorkerBudget;
+
+use super::protocol::{self, Request};
+
+/// Daemon configuration. The CLI builds this from flags and env
+/// ([`ServeConfig::from_env`]); tests construct it directly with a
+/// per-test work dir.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Unix socket the daemon listens on.
+    pub socket: PathBuf,
+    /// Directory for per-job cache files and the `runs/` journal dir.
+    pub work_dir: PathBuf,
+    /// Campaigns running concurrently (queued beyond that).
+    pub max_jobs: usize,
+}
+
+impl ServeConfig {
+    /// Flags-free construction: socket from `DEEPAXE_SERVE_SOCKET` (else
+    /// `results/serve.sock`), concurrency from `DEEPAXE_SERVE_MAX_JOBS`
+    /// (else 2), work dir `results`.
+    pub fn from_env() -> ServeConfig {
+        let socket = std::env::var(protocol::SOCKET_ENV)
+            .unwrap_or_else(|_| protocol::DEFAULT_SOCKET.to_string());
+        ServeConfig {
+            socket: PathBuf::from(socket),
+            work_dir: PathBuf::from("results"),
+            max_jobs: env_usize(protocol::MAX_JOBS_ENV, protocol::DEFAULT_MAX_JOBS).max(1),
+        }
+    }
+}
+
+/// One search campaign as submitted over the wire. Mirrors the `repro
+/// zoo search` knobs — a served job and the equivalent CLI run produce
+/// the same fingerprint, hence the same run-id and journal.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Zoo preset or topology spec (`"net"` / `"spec"` in the JSON).
+    pub target: String,
+    pub seed: u64,
+    pub strategy: String,
+    pub budget: usize,
+    /// Generation/chunk size override; `None` = the strategy default.
+    pub pop: Option<usize>,
+    pub with_fi: bool,
+    pub workers: usize,
+    pub sync: bool,
+    pub warm_start: bool,
+    /// Multiplier names/aliases; empty = the paper's three AxMs.
+    pub mults: Vec<String>,
+    pub harden: bool,
+    pub fault_model: String,
+    pub faults: usize,
+    pub images: usize,
+    pub eval_images: usize,
+    /// `None` = the `DEEPAXE_FI_EPSILON` env default, like the CLI.
+    pub epsilon_pp: Option<f64>,
+    /// `None` = screening off, `Some(0)` = adaptive, `Some(n)` = n faults.
+    pub screen: Option<usize>,
+    /// Trace-cache byte budget override (MB); `None` = env default.
+    /// Scheduling/memory only — deliberately absent from the fingerprint.
+    pub trace_cache_mb: Option<usize>,
+    /// Journal commit interval; served campaigns always journal (>= 1)
+    /// so `snapshot` and checkpoint-boundary cancel have something to
+    /// ride on.
+    pub checkpoint_every: usize,
+    /// Resume a previous (crashed or cancelled) run by run-id.
+    pub resume: Option<String>,
+    /// Test hook: freeze the persisted journal after k checkpoints while
+    /// the run completes — the deterministic kill(-9) stand-in.
+    pub limit_checkpoints: Option<usize>,
+}
+
+impl JobSpec {
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        let target = j
+            .get("net")
+            .or_else(|| j.get("spec"))
+            .and_then(Json::as_str)
+            .ok_or("job needs \"net\" (zoo preset) or \"spec\" (topology)")?
+            .to_string();
+        let usize_or = |k: &str, d: usize| j.get(k).and_then(Json::as_usize).unwrap_or(d);
+        let bool_or = |k: &str, d: bool| j.get(k).and_then(Json::as_bool).unwrap_or(d);
+        let spec = JobSpec {
+            target,
+            seed: j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(0x5EED),
+            strategy: j
+                .get("strategy")
+                .and_then(Json::as_str)
+                .unwrap_or("nsga2")
+                .to_string(),
+            budget: usize_or("budget", 64),
+            pop: j.get("pop").and_then(Json::as_usize),
+            with_fi: bool_or("with_fi", true),
+            workers: usize_or("workers", 1),
+            sync: bool_or("sync", false),
+            warm_start: bool_or("warm_start", false),
+            mults: j
+                .get("mults")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
+            harden: bool_or("harden", false),
+            fault_model: j
+                .get("fault_model")
+                .and_then(Json::as_str)
+                .unwrap_or("bitflip")
+                .to_string(),
+            faults: usize_or("faults", env_usize("DEEPAXE_FI_FAULTS", 60)),
+            images: usize_or("images", env_usize("DEEPAXE_FI_IMAGES", 48)),
+            eval_images: usize_or("eval_images", env_usize("DEEPAXE_EVAL_IMAGES", 120)),
+            epsilon_pp: j.get("fi_epsilon").and_then(Json::as_f64),
+            screen: j.get("fi_screen").and_then(Json::as_usize),
+            trace_cache_mb: j.get("trace_cache_mb").and_then(Json::as_usize),
+            checkpoint_every: usize_or("checkpoint_every", 1),
+            resume: j.get("resume").and_then(Json::as_str).map(str::to_string),
+            limit_checkpoints: j.get("limit_checkpoints").and_then(Json::as_usize),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject malformed jobs at submit time, over the wire — not minutes
+    /// later on a runner thread.
+    fn validate(&self) -> Result<(), String> {
+        Strategy::parse(&self.strategy)?;
+        FaultModelKind::parse(&self.fault_model)
+            .ok_or_else(|| format!("unknown fault model {:?}", self.fault_model))?;
+        if self.checkpoint_every == 0 {
+            return Err("served campaigns require journaling: checkpoint_every >= 1".into());
+        }
+        for m in &self.mults {
+            canonical_mult(m)?;
+        }
+        Ok(())
+    }
+}
+
+/// Alias-tolerant multiplier lookup against the catalog — the
+/// non-panicking counterpart of `report::experiments::mult_name`, since a
+/// daemon must answer a bad name over the wire rather than abort.
+fn canonical_mult(name: &str) -> Result<String, String> {
+    let n = match name {
+        "kvp" | "mul8s_1KVP" => "mul8s_1kvp_s",
+        "kv9" | "mul8s_1KV9" => "mul8s_1kv9_s",
+        "kv8" | "mul8s_1KV8" => "mul8s_1kv8_s",
+        other => other,
+    };
+    if crate::axmul::CATALOG.iter().any(|m| m.name == n) {
+        Ok(n.to_string())
+    } else {
+        Err(format!("unknown multiplier {name:?}"))
+    }
+}
+
+/// The cancel unwind payload: typed so the runner can tell a cancelled
+/// campaign from a genuinely panicking one.
+struct CancelSignal;
+
+/// Journal wrapper that turns a cancel flag into a clean stop: at the
+/// first live boundary after the flag rises it forces a checkpoint
+/// commit, then unwinds the planner with [`CancelSignal`]. Unwinding is
+/// safe under the async runtime — `with_executor` installs its shutdown
+/// guard before the planner body runs, so workers drain and the scope
+/// joins during the unwind.
+struct ServedJournal<'a> {
+    inner: JournalWriter<'a>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RunJournal for ServedJournal<'_> {
+    fn replaying(&self) -> bool {
+        self.inner.replaying()
+    }
+    fn replay_eval(&mut self, cfg: &str, fidelity: Fidelity) -> Replayed {
+        self.inner.replay_eval(cfg, fidelity)
+    }
+    fn replay_promotion(&mut self, cfg: &str) -> Replayed {
+        self.inner.replay_promotion(cfg)
+    }
+    fn record_eval(&mut self, cfg: &str, fidelity: Fidelity, hit: bool, point: &DesignPoint) {
+        self.inner.record_eval(cfg, fidelity, hit, point);
+    }
+    fn record_promotion(&mut self, cfg: &str, hit: bool, point: &DesignPoint) {
+        self.inner.record_promotion(cfg, hit, point);
+    }
+    fn record_poison(&mut self, cfg: &str, fidelity: Fidelity, err: &str) {
+        self.inner.record_poison(cfg, fidelity, err);
+    }
+    fn record_warm(&mut self, warm: &[String]) {
+        self.inner.record_warm(warm);
+    }
+    fn warm_override(&self) -> Option<Vec<String>> {
+        self.inner.warm_override()
+    }
+    fn boundary(&mut self, counters: &RunCounters) -> bool {
+        let want = self.inner.boundary(counters);
+        // never force a commit mid-replay: resume must reach the verified
+        // checkpoint state first, then the next live boundary cancels
+        if !self.inner.replaying() && self.cancel.load(Ordering::SeqCst) {
+            return true;
+        }
+        want
+    }
+    fn commit_checkpoint(&mut self, counters: &RunCounters, mark: &CacheMark) {
+        self.inner.commit_checkpoint(counters, mark);
+        if self.cancel.load(Ordering::SeqCst) {
+            std::panic::panic_any(CancelSignal);
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobPhase {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Failed,
+}
+
+impl JobPhase {
+    fn name(&self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Cancelled => "cancelled",
+            JobPhase::Failed => "failed",
+        }
+    }
+}
+
+struct JobEntry {
+    id: u64,
+    spec: JobSpec,
+    phase: JobPhase,
+    run_id: Option<String>,
+    report: Option<Json>,
+    error: Option<String>,
+    cancel: Arc<AtomicBool>,
+}
+
+struct DaemonState {
+    jobs: Vec<JobEntry>,
+    queue: VecDeque<u64>,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    state: Mutex<DaemonState>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A running daemon: accept thread + `max_jobs` runner threads.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    accept: JoinHandle<()>,
+    runners: Vec<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind the socket and spawn the service threads. A stale socket
+    /// file from a dead daemon is removed; a *live* daemon on the same
+    /// socket is not detected (last bind wins), so give each daemon its
+    /// own work dir.
+    pub fn start(cfg: ServeConfig) -> Result<Daemon, String> {
+        std::fs::create_dir_all(&cfg.work_dir)
+            .map_err(|e| format!("create {}: {e}", cfg.work_dir.display()))?;
+        std::fs::create_dir_all(cfg.work_dir.join("runs"))
+            .map_err(|e| format!("create runs dir: {e}"))?;
+        if let Some(parent) = cfg.socket.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent).map_err(|e| format!("create socket dir: {e}"))?;
+        }
+        let _ = std::fs::remove_file(&cfg.socket);
+        let listener = UnixListener::bind(&cfg.socket)
+            .map_err(|e| format!("bind {}: {e}", cfg.socket.display()))?;
+        let shared = Arc::new(Shared {
+            cfg,
+            state: Mutex::new(DaemonState { jobs: Vec::new(), queue: VecDeque::new() }),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let runners = (0..shared.cfg.max_jobs.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || runner_loop(&shared))
+            })
+            .collect();
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(&shared, listener))
+        };
+        Ok(Daemon { shared, accept, runners })
+    }
+
+    pub fn socket(&self) -> PathBuf {
+        self.shared.cfg.socket.clone()
+    }
+
+    /// Block until a `shutdown` request arrives, running jobs finish and
+    /// every thread exits; then remove the socket file.
+    pub fn join(self) {
+        let _ = self.accept.join();
+        self.shared.cv.notify_all();
+        for r in self.runners {
+            let _ = r.join();
+        }
+        let _ = std::fs::remove_file(&self.shared.cfg.socket);
+    }
+}
+
+fn runner_loop(shared: &Arc<Shared>) {
+    loop {
+        let id = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(id) = st.queue.pop_front() {
+                    break id;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        let (spec, cancel) = {
+            let mut st = shared.state.lock().unwrap();
+            let e = st.jobs.iter_mut().find(|e| e.id == id).expect("queued job exists");
+            if e.phase != JobPhase::Queued {
+                continue; // cancelled while still in the queue
+            }
+            e.phase = JobPhase::Running;
+            (e.spec.clone(), Arc::clone(&e.cancel))
+        };
+        let set_run_id = |rid: String| {
+            let mut st = shared.state.lock().unwrap();
+            if let Some(e) = st.jobs.iter_mut().find(|e| e.id == id) {
+                e.run_id = Some(rid);
+            }
+        };
+        let outcome = run_job(&shared.cfg.work_dir, &spec, &cancel, set_run_id);
+        let mut st = shared.state.lock().unwrap();
+        let e = st.jobs.iter_mut().find(|e| e.id == id).expect("running job exists");
+        match outcome {
+            JobOutcome::Done(report) => {
+                e.phase = JobPhase::Done;
+                e.report = Some(report);
+            }
+            JobOutcome::Cancelled => e.phase = JobPhase::Cancelled,
+            JobOutcome::Failed(msg) => {
+                e.phase = JobPhase::Failed;
+                e.error = Some(msg);
+            }
+        }
+    }
+}
+
+enum JobOutcome {
+    Done(Json),
+    Cancelled,
+    Failed(String),
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "campaign panicked (non-string payload)".to_string()
+    }
+}
+
+fn run_job(
+    work_dir: &Path,
+    spec: &JobSpec,
+    cancel: &Arc<AtomicBool>,
+    set_run_id: impl FnOnce(String),
+) -> JobOutcome {
+    let result =
+        catch_unwind(AssertUnwindSafe(|| run_job_inner(work_dir, spec, cancel, set_run_id)));
+    match result {
+        Ok(Ok(report)) => JobOutcome::Done(report),
+        Ok(Err(msg)) => JobOutcome::Failed(msg),
+        Err(p) if p.is::<CancelSignal>() => JobOutcome::Cancelled,
+        Err(p) => JobOutcome::Failed(panic_message(p)),
+    }
+}
+
+/// The `repro zoo search` flow, assembled from a [`JobSpec`] instead of
+/// CLI flags — deliberately kept line-for-line parallel to `zoo_search`
+/// in `main.rs` so served and CLI campaigns share fingerprints.
+fn run_job_inner(
+    work_dir: &Path,
+    spec: &JobSpec,
+    cancel: &Arc<AtomicBool>,
+    set_run_id: impl FnOnce(String),
+) -> Result<Json, String> {
+    let strategy = Strategy::parse(&spec.strategy)?;
+    let fault_model = FaultModelKind::parse(&spec.fault_model)
+        .ok_or_else(|| format!("unknown fault model {:?}", spec.fault_model))?;
+    let fi = CampaignParams {
+        n_faults: spec.faults,
+        n_images: spec.images,
+        seed: spec.seed,
+        ..CampaignParams::default_for("zoo")
+    };
+    let bundle = crate::zoo::build(&spec.target, spec.seed, spec.eval_images.max(fi.n_images))?;
+    let net = &bundle.net;
+    let luts: BTreeMap<String, crate::axmul::Lut> =
+        crate::axmul::CATALOG.iter().map(|m| (m.name.to_string(), m.lut())).collect();
+    let mults: Vec<String> = if spec.mults.is_empty() {
+        vec!["mul8s_1kvp_s".into(), "mul8s_1kv9_s".into(), "mul8s_1kv8_s".into()]
+    } else {
+        spec.mults.iter().map(|m| canonical_mult(m)).collect::<Result<_, _>>()?
+    };
+    let mut space = SearchSpace::paper(net, &mults);
+    if spec.harden {
+        space = space.with_hardening();
+    }
+    let ev = Evaluator::new(net, &bundle.data, &luts, spec.eval_images, fi.clone());
+
+    let mut fidelity = FidelitySpec::default_from_env();
+    if let Some(e) = spec.epsilon_pp {
+        fidelity.epsilon_pp = e;
+    }
+    if let Some(n) = spec.screen {
+        fidelity.screen_faults = n;
+        fidelity.screen_auto = n == 0;
+    }
+    if let Some(mb) = spec.trace_cache_mb {
+        fidelity.trace_cache_mb = mb;
+    }
+    let mut sspec = SearchSpec::new(strategy);
+    sspec.budget = spec.budget;
+    if let Some(p) = spec.pop {
+        sspec.pop = p;
+    }
+    sspec.seed = spec.seed;
+    sspec.with_fi = spec.with_fi;
+    sspec.screen = fidelity.screening_enabled();
+    sspec.workers = spec.workers;
+    sspec.warm_start = spec.warm_start;
+    sspec.sync = spec.sync;
+    let budget = sspec.resolved_budget(&space);
+
+    let fp = run_fingerprint(
+        &net.name,
+        &space,
+        &sspec,
+        budget,
+        &fi,
+        spec.eval_images,
+        fault_model,
+        &fidelity,
+    );
+    let rid = crate::recovery::run_id(&fp);
+    set_run_id(rid.clone());
+
+    let runs_dir = work_dir.join("runs");
+    let mut cache = ResultCache::open(work_dir.join(format!("serve_cache_{rid}.jsonl")));
+    let staged = StagedEvaluator::new_with_model(&ev, fidelity, fault_model);
+    let backend = StagedBackend { st: &staged };
+
+    let mut journal = match &spec.resume {
+        Some(run) => {
+            let j = JournalWriter::resume(&runs_dir, run, &fp, spec.checkpoint_every)?;
+            cache.rollback_to(&j.cache_mark()).map_err(|e| format!("cache rollback: {e}"))?;
+            if let Some(state) = j.eval_state() {
+                staged.restore_state(state);
+            }
+            j
+        }
+        None => JournalWriter::create(&runs_dir, &fp, spec.checkpoint_every),
+    };
+    if let Some(k) = spec.limit_checkpoints {
+        journal.limit_checkpoints(k);
+    }
+    journal.set_provider(&staged);
+    cache.set_autoflush(false);
+    let mut hook = ResultCacheHook {
+        cache: &mut cache,
+        net: net.name.clone(),
+        fi: fi.clone(),
+        eval_images: spec.eval_images,
+        fault_model,
+    };
+    let mut served = ServedJournal { inner: journal, cancel: Arc::clone(cancel) };
+
+    let out = run_search_journaled(&space, &sspec, &backend, &mut hook, &mut served);
+
+    let frontier: Vec<Json> =
+        out.frontier().iter().map(|p| json::str(&p.config_string)).collect();
+    Ok(json::obj(vec![
+        ("run_id", json::str(&rid)),
+        ("net", json::str(&net.name)),
+        ("strategy", json::str(sspec.strategy.name())),
+        ("budget", json::num(budget as f64)),
+        ("evals_used", json::num(out.evals_used as f64)),
+        ("cache_hits", json::num(out.cache_hits as f64)),
+        ("promotions", json::num(out.promotions as f64)),
+        ("space_size", json::str(out.space_size.to_string())),
+        ("frontier", Json::Arr(frontier)),
+        ("hv2d", json::num(out.hypervolume())),
+        ("hv3d", json::num(hypervolume3(&out.evaluated))),
+        ("poisoned", json::num(out.poisoned.len() as f64)),
+        ("ledger", staged.ledger().snapshot().to_json()),
+        ("ledger_summary", json::str(staged.ledger().summary(fi.n_faults))),
+    ]))
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: UnixListener) {
+    for stream in listener.incoming() {
+        if let Ok(s) = stream {
+            handle_conn(shared, s);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+/// Serve one connection: any number of request lines until EOF (or a
+/// shutdown request). Requests are handled in order, one response line
+/// each; a malformed line gets an error response instead of a hangup.
+fn handle_conn(shared: &Arc<Shared>, stream: UnixStream) {
+    let Ok(mut writer) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let req = match protocol::read_line(&mut reader) {
+            Ok(Some(j)) => Request::from_json(&j),
+            Ok(None) | Err(_) => return,
+        };
+        let (resp, stop) = match req {
+            Err(e) => (protocol::err(e), false),
+            Ok(req) => {
+                let stop = matches!(req, Request::Shutdown);
+                (dispatch(shared, req), stop)
+            }
+        };
+        if protocol::write_line(&mut writer, &resp).is_err() {
+            return;
+        }
+        if stop {
+            return;
+        }
+    }
+}
+
+fn dispatch(shared: &Arc<Shared>, req: Request) -> Json {
+    match req {
+        Request::Submit { job } => {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return protocol::err("daemon is shutting down");
+            }
+            let spec = match JobSpec::from_json(&job) {
+                Ok(s) => s,
+                Err(e) => return protocol::err(e),
+            };
+            let mut st = shared.state.lock().unwrap();
+            let id = st.jobs.len() as u64 + 1;
+            st.jobs.push(JobEntry {
+                id,
+                spec,
+                phase: JobPhase::Queued,
+                run_id: None,
+                report: None,
+                error: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+            });
+            st.queue.push_back(id);
+            drop(st);
+            shared.cv.notify_one();
+            protocol::ok(vec![("job", json::num(id as f64))])
+        }
+        Request::Status { job } => {
+            let st = shared.state.lock().unwrap();
+            let budget = WorkerBudget::global();
+            let workers = json::obj(vec![
+                ("cap", json::num(budget.cap() as f64)),
+                ("live", json::num(budget.live() as f64)),
+                ("peak", json::num(budget.peak() as f64)),
+                ("available", json::num(budget.available() as f64)),
+            ]);
+            match job {
+                Some(id) => match st.jobs.iter().find(|e| e.id == id) {
+                    Some(e) => {
+                        protocol::ok(vec![("job", job_json(e, true)), ("workers", workers)])
+                    }
+                    None => protocol::err(format!("no job {id}")),
+                },
+                None => {
+                    let jobs: Vec<Json> = st.jobs.iter().map(|e| job_json(e, false)).collect();
+                    protocol::ok(vec![("jobs", Json::Arr(jobs)), ("workers", workers)])
+                }
+            }
+        }
+        Request::Snapshot { job } => {
+            let (run_id, phase) = {
+                let st = shared.state.lock().unwrap();
+                let Some(e) = st.jobs.iter().find(|e| e.id == job) else {
+                    return protocol::err(format!("no job {job}"));
+                };
+                (e.run_id.clone(), e.phase)
+            };
+            let Some(rid) = run_id else {
+                return protocol::err(format!("job {job} has no run-id yet ({})", phase.name()));
+            };
+            let path = JournalWriter::path_for(&shared.cfg.work_dir.join("runs"), &rid);
+            let info = inspect_run(&path);
+            protocol::ok(vec![
+                ("job", json::num(job as f64)),
+                ("state", json::str(phase.name())),
+                ("run_id", json::str(&info.run_id)),
+                ("journal", json::str(path.display().to_string())),
+                ("status", json::str(info.status.name())),
+                ("events", json::num(info.events as f64)),
+                ("evals_used", json::num(info.evals_used as f64)),
+                ("cache_hits", json::num(info.cache_hits as f64)),
+                ("promotions", json::num(info.promotions as f64)),
+                ("archive_len", json::num(info.archive_len as f64)),
+                (
+                    "budget",
+                    info.budget.map(|b| json::num(b as f64)).unwrap_or(Json::Null),
+                ),
+            ])
+        }
+        Request::Cancel { job } => {
+            let mut st = shared.state.lock().unwrap();
+            let Some(e) = st.jobs.iter_mut().find(|e| e.id == job) else {
+                return protocol::err(format!("no job {job}"));
+            };
+            match e.phase {
+                JobPhase::Queued => {
+                    e.cancel.store(true, Ordering::SeqCst);
+                    e.phase = JobPhase::Cancelled;
+                    protocol::ok(vec![("state", json::str("cancelled"))])
+                }
+                JobPhase::Running => {
+                    e.cancel.store(true, Ordering::SeqCst);
+                    protocol::ok(vec![("state", json::str("cancelling"))])
+                }
+                phase => protocol::err(format!("job {job} already {}", phase.name())),
+            }
+        }
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            protocol::ok(vec![("state", json::str("shutting down"))])
+        }
+    }
+}
+
+fn job_json(e: &JobEntry, with_report: bool) -> Json {
+    let mut pairs = vec![
+        ("job", json::num(e.id as f64)),
+        ("state", json::str(e.phase.name())),
+        ("net", json::str(&e.spec.target)),
+        ("strategy", json::str(&e.spec.strategy)),
+        ("budget", json::num(e.spec.budget as f64)),
+        (
+            "run_id",
+            e.run_id.as_deref().map(json::str).unwrap_or(Json::Null),
+        ),
+        (
+            "error",
+            e.error.as_deref().map(json::str).unwrap_or(Json::Null),
+        ),
+    ];
+    if with_report {
+        pairs.push(("report", e.report.clone().unwrap_or(Json::Null)));
+    }
+    json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_defaults_and_validation() {
+        let j = Json::parse(r#"{"net":"zoo-tiny"}"#).unwrap();
+        let s = JobSpec::from_json(&j).expect("defaults");
+        assert_eq!(s.target, "zoo-tiny");
+        assert_eq!(s.strategy, "nsga2");
+        assert_eq!(s.budget, 64);
+        assert!(s.with_fi);
+        assert_eq!(s.checkpoint_every, 1);
+        assert!(s.resume.is_none());
+
+        let bad = Json::parse(r#"{"net":"zoo-tiny","strategy":"warp"}"#).unwrap();
+        assert!(JobSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"net":"zoo-tiny","checkpoint_every":0}"#).unwrap();
+        assert!(JobSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"strategy":"nsga2"}"#).unwrap();
+        assert!(JobSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"net":"zoo-tiny","mults":["made_up_mult"]}"#).unwrap();
+        assert!(JobSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn canonical_mult_aliases() {
+        assert_eq!(canonical_mult("kvp").unwrap(), "mul8s_1kvp_s");
+        assert_eq!(canonical_mult("mul8s_1kv9_s").unwrap(), "mul8s_1kv9_s");
+        assert!(canonical_mult("nope").is_err());
+    }
+}

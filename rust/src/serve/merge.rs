@@ -1,0 +1,389 @@
+//! Shard archives and the multi-process frontier merge.
+//!
+//! A `repro worker --shard i/N` run exhausts one [`partition`] region and
+//! writes a [`ShardArchive`]: the region metadata, every evaluated
+//! [`DesignPoint`] in canonical order, the budget counters, and the
+//! worker's [`LedgerSnapshot`]. `repro merge` ([`merge_archives`]) folds N
+//! such archives back into one result:
+//!
+//! * **validation** — all archives must describe the same space and the
+//!   same N-way cut, each shard exactly once, regions chaining gaplessly
+//!   over `[0, size)`; a missing or duplicated shard is an error, not a
+//!   silently smaller frontier.
+//! * **concatenation** — points are joined in shard order, which by the
+//!   [`partition`] invariant *is* the single-process enumeration order, so
+//!   the merged archive is bit-identical (frontier indices, hypervolume
+//!   2-D/3-D, budget counters) to one process sweeping the whole space.
+//! * **accounting** — per-shard `FiLedger` snapshots sum into one ledger
+//!   ([`LedgerSnapshot::merge`]); with no cross-shard evaluator state
+//!   (trace cache off, screening off) the sum equals the single-process
+//!   ledger exactly.
+//!
+//! [`partition`]: crate::serve::partition::partition
+
+use std::path::Path;
+
+use crate::dse::pareto::pareto_merge;
+use crate::dse::DesignPoint;
+use crate::eval::LedgerSnapshot;
+use crate::recovery::atomic_write;
+use crate::search::{frontier_hv, hypervolume3};
+use crate::util::json::{self, Json};
+
+use super::partition::Region;
+
+/// One worker's exhaustive sweep of its partition region, serializable as
+/// a single JSON document (written via [`atomic_write`], so a crashed
+/// worker never leaves a truncated archive behind).
+#[derive(Debug, Clone)]
+pub struct ShardArchive {
+    /// Net name — merge refuses to mix archives from different nets.
+    pub net: String,
+    /// Multiplier alphabet of the space (order matters: it defines the
+    /// genotype radices and therefore the canonical index).
+    pub alphabet: Vec<String>,
+    pub n_layers: usize,
+    pub template: String,
+    pub hardening: bool,
+    /// The region this shard owned.
+    pub region: Region,
+    /// Total space size — redundant with the space dims, kept as a cheap
+    /// cross-check that all shards agreed on the cut.
+    pub space_size: u128,
+    pub with_fi: bool,
+    /// Unique genotypes charged against the budget (hit or fresh).
+    pub evals_used: usize,
+    /// Of those, how many were served by the result cache.
+    pub cache_hits: usize,
+    /// Evaluated points in canonical region order, `config_string` set.
+    pub points: Vec<DesignPoint>,
+    /// Quarantined genotypes: `(config_digits, error)`.
+    pub poisoned: Vec<(String, String)>,
+    /// The worker's FI ledger at the end of the sweep.
+    pub ledger: LedgerSnapshot,
+}
+
+impl ShardArchive {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::str("deepaxe_shard_archive")),
+            ("version", json::num(1.0)),
+            ("net", json::str(&self.net)),
+            (
+                "alphabet",
+                Json::Arr(self.alphabet.iter().map(json::str).collect()),
+            ),
+            ("n_layers", json::num(self.n_layers as f64)),
+            ("template", json::str(&self.template)),
+            ("hardening", Json::Bool(self.hardening)),
+            ("shard", json::num(self.region.shard as f64)),
+            ("of", json::num(self.region.of as f64)),
+            // u128 range bounds as decimal strings: JSON numbers are f64
+            ("start", json::str(self.region.start.to_string())),
+            ("end", json::str(self.region.end.to_string())),
+            ("space_size", json::str(self.space_size.to_string())),
+            ("with_fi", Json::Bool(self.with_fi)),
+            ("evals_used", json::num(self.evals_used as f64)),
+            ("cache_hits", json::num(self.cache_hits as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(DesignPoint::to_json).collect()),
+            ),
+            (
+                "poisoned",
+                Json::Arr(
+                    self.poisoned
+                        .iter()
+                        .map(|(cfg, err)| {
+                            json::obj(vec![("config", json::str(cfg)), ("error", json::str(err))])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("ledger", self.ledger.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardArchive, String> {
+        let want = |k: &str| j.get(k).ok_or_else(|| format!("shard archive missing {k:?}"));
+        if want("kind")?.as_str() != Some("deepaxe_shard_archive") {
+            return Err("not a deepaxe shard archive".into());
+        }
+        let u128_field = |k: &str| -> Result<u128, String> {
+            want(k)?
+                .as_str()
+                .and_then(|s| s.parse::<u128>().ok())
+                .ok_or_else(|| format!("shard archive field {k:?} is not a decimal u128"))
+        };
+        let usize_field = |k: &str| -> Result<usize, String> {
+            want(k)?.as_usize().ok_or_else(|| format!("shard archive field {k:?} is not a count"))
+        };
+        let points = want("points")?
+            .as_arr()
+            .ok_or("points is not an array")?
+            .iter()
+            .map(|p| DesignPoint::from_json(p).ok_or("malformed design point".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let poisoned = match j.get("poisoned").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|e| {
+                    Some((
+                        e.get("config")?.as_str()?.to_string(),
+                        e.get("error")?.as_str()?.to_string(),
+                    ))
+                })
+                .collect::<Option<Vec<_>>>()
+                .ok_or("malformed poisoned entry")?,
+            None => Vec::new(),
+        };
+        let alphabet = want("alphabet")?
+            .as_arr()
+            .ok_or("alphabet is not an array")?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).ok_or("alphabet symbol is not a string"))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ShardArchive {
+            net: want("net")?.as_str().ok_or("net is not a string")?.to_string(),
+            alphabet,
+            n_layers: usize_field("n_layers")?,
+            template: want("template")?.as_str().ok_or("template is not a string")?.to_string(),
+            hardening: want("hardening")?.as_bool().ok_or("hardening is not a bool")?,
+            region: Region {
+                shard: usize_field("shard")?,
+                of: usize_field("of")?,
+                start: u128_field("start")?,
+                end: u128_field("end")?,
+            },
+            space_size: u128_field("space_size")?,
+            with_fi: want("with_fi")?.as_bool().ok_or("with_fi is not a bool")?,
+            evals_used: usize_field("evals_used")?,
+            cache_hits: usize_field("cache_hits")?,
+            points,
+            poisoned,
+            ledger: LedgerSnapshot::from_json(want("ledger")?).ok_or("malformed ledger")?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        atomic_write(path, &format!("{}\n", self.to_json()))
+    }
+
+    pub fn load(path: &Path) -> Result<ShardArchive, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Self::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// The merged result: single-process-equivalent frontier and accounting.
+#[derive(Debug)]
+pub struct Merged {
+    pub net: String,
+    pub with_fi: bool,
+    pub shards: usize,
+    pub space_size: u128,
+    /// All shard points in canonical order (= single-process enumeration
+    /// order when the partition covers the space).
+    pub points: Vec<DesignPoint>,
+    /// Indices into `points` forming the 2-D Pareto frontier.
+    pub frontier_idx: Vec<usize>,
+    pub hv2d: f64,
+    pub hv3d: f64,
+    /// Summed across shards — each unique genotype charged once per shard
+    /// that owned it, i.e. exactly once under a disjoint partition.
+    pub evals_used: usize,
+    pub cache_hits: usize,
+    pub poisoned: Vec<(String, String)>,
+    pub ledger: LedgerSnapshot,
+}
+
+impl Merged {
+    pub fn frontier(&self) -> Vec<&DesignPoint> {
+        self.frontier_idx.iter().map(|&i| &self.points[i]).collect()
+    }
+}
+
+/// Fold shard archives into one frontier. Archives may arrive in any
+/// order; they are sorted by shard index and validated to be exactly the
+/// `of`-way cut of one space before any folding happens.
+pub fn merge_archives(mut archives: Vec<ShardArchive>) -> Result<Merged, String> {
+    let first = archives.first().ok_or("merge: no shard archives given")?;
+    let (net, of, size, with_fi) =
+        (first.net.clone(), first.region.of, first.space_size, first.with_fi);
+    if archives.len() != of {
+        return Err(format!("merge: space was cut {of} ways but {} archives given", archives.len()));
+    }
+    for a in &archives {
+        if a.net != net
+            || a.alphabet != first.alphabet
+            || a.n_layers != first.n_layers
+            || a.template != first.template
+            || a.hardening != first.hardening
+        {
+            return Err(format!("merge: shard {} describes a different search space", a.region.shard));
+        }
+        if a.region.of != of || a.space_size != size || a.with_fi != with_fi {
+            return Err(format!("merge: shard {} disagrees on the cut", a.region.shard));
+        }
+    }
+    archives.sort_by_key(|a| a.region.shard);
+    let mut cursor: u128 = 0;
+    for (k, a) in archives.iter().enumerate() {
+        if a.region.shard != k {
+            return Err(format!("merge: shard {k} missing or duplicated"));
+        }
+        if a.region.start != cursor || a.region.end < a.region.start {
+            return Err(format!(
+                "merge: shard {k} region {} does not chain at index {cursor}",
+                a.region.label()
+            ));
+        }
+        cursor = a.region.end;
+    }
+    if cursor != size {
+        return Err(format!("merge: regions cover only {cursor} of {size} genotypes"));
+    }
+
+    let mut points = Vec::with_capacity(archives.iter().map(|a| a.points.len()).sum());
+    let mut poisoned = Vec::new();
+    let mut evals_used = 0usize;
+    let mut cache_hits = 0usize;
+    let mut ledger = LedgerSnapshot::default();
+    for a in &archives {
+        points.extend(a.points.iter().cloned());
+        poisoned.extend(a.poisoned.iter().cloned());
+        evals_used += a.evals_used;
+        cache_hits += a.cache_hits;
+        ledger.merge(&a.ledger);
+    }
+
+    let (frontier_idx, hv2d) = frontier_hv(&points, with_fi);
+    let hv3d = hypervolume3(&points);
+
+    // cross-check the concatenated front against the frontier-of-frontiers
+    // computed straight from the per-shard slices — a disagreement means
+    // archive corruption (reordered or missing points), not a math bug
+    let sets: Vec<&[DesignPoint]> = archives.iter().map(|a| a.points.as_slice()).collect();
+    let fy = |p: &DesignPoint| if with_fi { p.fault_vuln_pct } else { p.acc_drop_pct };
+    let via_sets = pareto_merge(&sets, |p| p.util_pct, fy);
+    let offsets: Vec<usize> = archives
+        .iter()
+        .scan(0usize, |acc, a| {
+            let base = *acc;
+            *acc += a.points.len();
+            Some(base)
+        })
+        .collect();
+    let via_sets_flat: Vec<usize> = via_sets.iter().map(|&(s, i)| offsets[s] + i).collect();
+    if via_sets_flat != frontier_idx {
+        return Err("merge: per-shard frontier disagrees with merged frontier — corrupt archive?"
+            .to_string());
+    }
+
+    Ok(Merged {
+        net,
+        with_fi,
+        shards: of,
+        space_size: size,
+        points,
+        frontier_idx,
+        hv2d,
+        hv3d,
+        evals_used,
+        cache_hits,
+        poisoned,
+        ledger,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(cfg: &str, util: f64, vuln: f64) -> DesignPoint {
+        DesignPoint {
+            net: "t".into(),
+            mult: "mixed".into(),
+            mask: 0,
+            config_string: cfg.to_string(),
+            base_acc: 90.0,
+            ax_acc: 88.0,
+            acc_drop_pct: vuln / 2.0,
+            fi_mean_acc: 80.0,
+            fault_vuln_pct: vuln,
+            fi_faults: 10,
+            fi_ci95_pp: 0.5,
+            cycles: 100,
+            luts: 200,
+            ffs: 50,
+            util_pct: util,
+            power_mw: 1.0,
+        }
+    }
+
+    fn archive(shard: usize, of: usize, start: u128, end: u128, pts: Vec<DesignPoint>) -> ShardArchive {
+        ShardArchive {
+            net: "t".into(),
+            alphabet: vec!["exact".into(), "ax1".into()],
+            n_layers: 2,
+            template: "xx".into(),
+            hardening: false,
+            region: Region { shard, of, start, end },
+            space_size: 4,
+            with_fi: true,
+            evals_used: pts.len(),
+            cache_hits: 0,
+            points: pts,
+            poisoned: Vec::new(),
+            ledger: LedgerSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn archive_json_roundtrip() {
+        let a = archive(1, 2, 2, 4, vec![point("10", 40.0, 3.0), point("11", 55.0, 1.0)]);
+        let back = ShardArchive::from_json(&a.to_json()).expect("roundtrip");
+        assert_eq!(back.net, a.net);
+        assert_eq!(back.region, a.region);
+        assert_eq!(back.points.len(), 2);
+        assert_eq!(back.points[0].config_string, "10");
+        assert_eq!(back.points[0].util_pct.to_bits(), a.points[0].util_pct.to_bits());
+        assert_eq!(back.ledger, a.ledger);
+    }
+
+    #[test]
+    fn merge_rejects_gaps_duplicates_and_mixed_spaces() {
+        let a0 = archive(0, 2, 0, 2, vec![point("00", 10.0, 5.0)]);
+        let a1 = archive(1, 2, 2, 4, vec![point("10", 40.0, 3.0)]);
+        assert!(merge_archives(vec![a0.clone(), a1.clone()]).is_ok());
+        // duplicate shard
+        assert!(merge_archives(vec![a0.clone(), a0.clone()]).is_err());
+        // missing archive entirely
+        assert!(merge_archives(vec![a0.clone()]).is_err());
+        // gap: shard 1 starts late
+        let mut late = a1.clone();
+        late.region.start = 3;
+        assert!(merge_archives(vec![a0.clone(), late]).is_err());
+        // different net
+        let mut other = a1.clone();
+        other.net = "u".into();
+        assert!(merge_archives(vec![a0, other]).is_err());
+    }
+
+    #[test]
+    fn merge_concatenates_and_sums() {
+        let a0 = archive(0, 2, 0, 2, vec![point("00", 10.0, 5.0), point("01", 30.0, 4.0)]);
+        let mut a1 = archive(1, 2, 2, 4, vec![point("10", 40.0, 3.0), point("11", 55.0, 1.0)]);
+        a1.cache_hits = 1;
+        let m = merge_archives(vec![a1, a0]).expect("merge"); // any order in
+        assert_eq!(m.points.len(), 4);
+        assert_eq!(m.points[0].config_string, "00"); // canonical order out
+        assert_eq!(m.evals_used, 4);
+        assert_eq!(m.cache_hits, 1);
+        // all four points strictly trade off util vs vuln: all on the front
+        assert_eq!(m.frontier_idx, vec![0, 1, 2, 3]);
+        assert!(m.hv2d > 0.0);
+    }
+}

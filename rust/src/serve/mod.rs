@@ -1,0 +1,35 @@
+//! serve — DSE-as-a-service: job-queue daemon, deterministic space
+//! partitioning, multi-process frontier merge.
+//!
+//! Three ways to run a search campaign beyond the one-shot CLI:
+//!
+//! * [`daemon`] — `repro serve`: a Unix-socket daemon accepting
+//!   line-delimited JSON jobs ([`protocol`]), multiplexing up to
+//!   `max_jobs` concurrent campaigns over the shared
+//!   [`crate::util::threadpool::WorkerBudget`]. Live campaigns expose
+//!   `status` / `snapshot` / `cancel`; every served campaign writes the
+//!   same journal a CLI run would, so it resumes identically.
+//! * [`partition`] — deterministic space splitting: the canonical
+//!   genotype index maps a [`crate::search::SearchSpace`] onto
+//!   `0..size`, and [`partition::partition`] cuts that range into N
+//!   disjoint, fully-covering contiguous regions. `repro worker
+//!   --shard i/N` ([`worker`]) sweeps one region against its own
+//!   journal and cache shard.
+//! * [`merge`] — `repro merge`: folds N per-shard archives through
+//!   [`crate::dse::pareto`] into a single frontier with merged
+//!   [`crate::eval::LedgerSnapshot`] accounting. Because shard regions
+//!   concatenate back into enumeration order, the merged frontier,
+//!   hypervolumes, and summed counters are bit-identical to a
+//!   single-process exhaustive run over the same space.
+
+pub mod daemon;
+pub mod merge;
+pub mod partition;
+pub mod protocol;
+pub mod worker;
+
+pub use daemon::{Daemon, JobSpec, ServeConfig};
+pub use merge::{merge_archives, Merged, ShardArchive};
+pub use partition::{canonical_index, enumerate_region, genotype_at, partition, Region};
+pub use protocol::Request;
+pub use worker::{run_shard, worker_fingerprint, ShardSpec, WORKER_CHUNK};

@@ -1,0 +1,254 @@
+//! Deterministic genotype-space partitioning.
+//!
+//! A [`SearchSpace`] enumerates genotypes with an odometer that increments
+//! position 0 first ([`SearchSpace::enumerate_first`]), so position 0 is
+//! the *least-significant* digit of a mixed-radix number. That gives every
+//! genotype a canonical index
+//!
+//! ```text
+//! index(g) = Σ_i g[i] · Π_{j<i} radix(j)          (0 ≤ index < size)
+//! ```
+//!
+//! and the space a total order that is stable across processes, machines,
+//! and runs. [`partition`] cuts `[0, size)` into `n` contiguous, disjoint,
+//! fully-covering [`Region`]s along that order; concatenating the regions'
+//! enumerations in shard order reproduces `enumerate_first(size)` exactly,
+//! which is what makes shard-then-merge bit-identical to a single-process
+//! exhaustive run (see [`crate::serve::merge`]).
+
+use crate::search::{Genotype, SearchSpace};
+
+/// A contiguous half-open slice `[start, end)` of the canonical genotype
+/// index space, tagged with its shard position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    /// Shard index, `0..of`.
+    pub shard: usize,
+    /// Total shard count the space was partitioned into.
+    pub of: usize,
+    /// First canonical index in the region (inclusive).
+    pub start: u128,
+    /// One past the last canonical index (exclusive); `end - start` is the
+    /// region size, possibly 0 when there are more shards than genotypes.
+    pub end: u128,
+}
+
+impl Region {
+    /// Number of genotypes in the region.
+    pub fn len(&self) -> u128 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// `"i/N start..end"` — the canonical display used by `repro worker`
+    /// logs and shard-archive metadata.
+    pub fn label(&self) -> String {
+        format!("{}/{} {}..{}", self.shard, self.of, self.start, self.end)
+    }
+}
+
+/// Guard against saturated [`SearchSpace::size`]: index arithmetic is only
+/// meaningful when the true size fits in a `u128`.
+fn exact_size(space: &SearchSpace) -> u128 {
+    let size = space.size();
+    assert!(
+        size < u128::MAX,
+        "partition: space size saturates u128 — cannot index genotypes canonically"
+    );
+    size
+}
+
+/// Canonical mixed-radix index of `g` (position 0 least significant).
+pub fn canonical_index(space: &SearchSpace, g: &Genotype) -> u128 {
+    assert_eq!(g.len(), space.genotype_len(), "genotype length mismatch");
+    exact_size(space);
+    let mut idx: u128 = 0;
+    for i in (0..g.len()).rev() {
+        let r = space.radix(i) as u128;
+        debug_assert!((g[i] as u128) < r, "digit {} out of radix at position {i}", g[i]);
+        idx = idx * r + g[i] as u128;
+    }
+    idx
+}
+
+/// Genotype at canonical index `idx` — inverse of [`canonical_index`].
+pub fn genotype_at(space: &SearchSpace, idx: u128) -> Genotype {
+    assert!(idx < exact_size(space), "index {idx} out of range");
+    let mut rest = idx;
+    let mut g = vec![0u8; space.genotype_len()];
+    for (i, d) in g.iter_mut().enumerate() {
+        let r = space.radix(i) as u128;
+        *d = (rest % r) as u8;
+        rest /= r;
+    }
+    debug_assert_eq!(rest, 0);
+    g
+}
+
+/// Split the space into `n` contiguous regions: disjoint, fully covering,
+/// in shard order. The first `size % n` regions get one extra genotype
+/// (ragged split), so region sizes differ by at most 1; when `n > size`
+/// the tail regions are empty. Deterministic — every caller that asks for
+/// the same `(space, n)` gets the same cut, which is what lets independent
+/// worker processes agree on who owns what without coordination.
+pub fn partition(space: &SearchSpace, n: usize) -> Vec<Region> {
+    assert!(n >= 1, "partition: need at least one shard");
+    let size = exact_size(space);
+    let base = size / n as u128;
+    let rem = size % n as u128;
+    let mut regions = Vec::with_capacity(n);
+    let mut cursor: u128 = 0;
+    for shard in 0..n {
+        let len = base + u128::from((shard as u128) < rem);
+        regions.push(Region { shard, of: n, start: cursor, end: cursor + len });
+        cursor += len;
+    }
+    debug_assert_eq!(cursor, size);
+    regions
+}
+
+/// Enumerate a region's genotypes in canonical order. Seeds the odometer
+/// at `region.start` and rolls it forward, so the cost is O(len · digits)
+/// just like [`SearchSpace::enumerate_first`] — no per-genotype division
+/// chain beyond the first.
+pub fn enumerate_region(space: &SearchSpace, region: &Region) -> Vec<Genotype> {
+    assert!(region.end <= exact_size(space), "region exceeds space");
+    if region.is_empty() {
+        return Vec::new();
+    }
+    let len = usize::try_from(region.len()).expect("region too large to materialize");
+    let mut out = Vec::with_capacity(len);
+    let mut g = genotype_at(space, region.start);
+    for produced in 0..len {
+        out.push(g.clone());
+        if produced + 1 < len {
+            advance(space, &mut g);
+        }
+    }
+    out
+}
+
+/// Odometer step matching [`SearchSpace::enumerate_first`]: increment
+/// position 0, carrying right.
+pub(crate) fn advance(space: &SearchSpace, g: &mut Genotype) {
+    for i in 0..g.len() {
+        g[i] += 1;
+        if (g[i] as u64) < space.radix(i) {
+            return;
+        }
+        g[i] = 0;
+    }
+    panic!("advance: odometer overflow past end of space");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn space(n_layers: usize, symbols: usize, hardening: bool) -> SearchSpace {
+        let alphabet: Vec<String> = (0..symbols)
+            .map(|i| if i == 0 { "exact".into() } else { format!("ax{i}") })
+            .collect();
+        let s = SearchSpace::with_dims("t", n_layers, alphabet, &"x".repeat(n_layers));
+        if hardening {
+            s.with_hardening()
+        } else {
+            s
+        }
+    }
+
+    #[test]
+    fn index_matches_enumeration_order() {
+        let s = space(3, 3, false);
+        let all = s.enumerate_first(s.size() as usize);
+        for (i, g) in all.iter().enumerate() {
+            assert_eq!(canonical_index(&s, g), i as u128);
+            assert_eq!(genotype_at(&s, i as u128), *g);
+        }
+    }
+
+    #[test]
+    fn partition_ragged_covers_exactly() {
+        // N not dividing size, N > size, N = 1 — the ISSUE's ragged cases.
+        let s = space(2, 3, false); // size 9
+        for n in [1usize, 2, 4, 9, 13] {
+            let regions = partition(&s, n);
+            assert_eq!(regions.len(), n);
+            assert_eq!(regions[0].start, 0);
+            assert_eq!(regions[n - 1].end, s.size());
+            for w in regions.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "regions must chain without gaps");
+            }
+            let sizes: Vec<u128> = regions.iter().map(|r| r.len()).collect();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "ragged split must differ by at most 1");
+            let concat: Vec<Genotype> =
+                regions.iter().flat_map(|r| enumerate_region(&s, r)).collect();
+            assert_eq!(concat, s.enumerate_first(s.size() as usize));
+        }
+    }
+
+    #[test]
+    fn partition_more_shards_than_genotypes() {
+        let s = space(1, 2, false); // size 2
+        let regions = partition(&s, 5);
+        let nonempty: Vec<&Region> = regions.iter().filter(|r| !r.is_empty()).collect();
+        assert_eq!(nonempty.len(), 2);
+        assert!(regions[2..].iter().all(|r| r.is_empty()));
+        assert_eq!(regions[4].end, s.size());
+    }
+
+    #[test]
+    fn prop_index_roundtrip() {
+        check("partition_index_roundtrip", 0xC0DE, 200, |rng| {
+            let n_layers = 1 + rng.usize_below(5);
+            let symbols = 2 + rng.usize_below(4);
+            let s = space(n_layers, symbols, rng.below(2) == 0);
+            let idx = rng.below(s.size() as u64) as u128;
+            let g = genotype_at(&s, idx);
+            assert_eq!(g.len(), s.genotype_len());
+            assert_eq!(canonical_index(&s, &g), idx);
+        });
+    }
+
+    #[test]
+    fn prop_partition_disjoint_union() {
+        check("partition_disjoint_union", 0xD15C, 120, |rng| {
+            let n_layers = 1 + rng.usize_below(4);
+            let symbols = 2 + rng.usize_below(3);
+            let s = space(n_layers, symbols, false);
+            let size = s.size();
+            let n = 1 + rng.usize_below((size as usize) + 4);
+            let regions = partition(&s, n);
+            // disjoint + covering: the chained boundaries tile [0, size)
+            let mut cursor = 0u128;
+            for r in &regions {
+                assert_eq!(r.start, cursor);
+                assert!(r.end >= r.start);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, size);
+            // concatenated enumeration is the canonical enumeration
+            let concat: Vec<Genotype> =
+                regions.iter().flat_map(|r| enumerate_region(&s, r)).collect();
+            assert_eq!(concat, s.enumerate_first(size as usize));
+        });
+    }
+
+    #[test]
+    fn hardening_digits_roundtrip_through_config_string() {
+        // canonical index → genotype → digits → genotype survives the
+        // hardened space where the second digit block has radix 3
+        let s = space(2, 4, true); // 4^2 · 3^2 = 144
+        for idx in [0u128, 1, 47, 95, 143] {
+            let g = genotype_at(&s, idx);
+            let cfg = s.config_digits(&g);
+            assert_eq!(s.parse_digits(&cfg).expect("parse"), g);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Line-delimited JSON protocol between `repro serve` and its clients.
+//!
+//! One request per line, one response per line, over a Unix domain
+//! socket. Requests are objects with an `"op"` discriminant; responses
+//! always carry `"ok"` (`true`/`false`), with the error message under
+//! `"error"` on failure. The framing is deliberately dumb — any shell
+//! with `nc -U` (or a five-line Python client) can drive the daemon.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Env knob for the daemon socket path (`DEEPAXE_SERVE_SOCKET`);
+/// defaults to `results/serve.sock`.
+pub const SOCKET_ENV: &str = "DEEPAXE_SERVE_SOCKET";
+pub const DEFAULT_SOCKET: &str = "results/serve.sock";
+
+/// Env knob for the number of concurrently running campaigns
+/// (`DEEPAXE_SERVE_MAX_JOBS`); defaults to [`DEFAULT_MAX_JOBS`].
+pub const MAX_JOBS_ENV: &str = "DEEPAXE_SERVE_MAX_JOBS";
+pub const DEFAULT_MAX_JOBS: usize = 2;
+
+/// A client request. `Submit` carries the raw job object — the daemon
+/// parses it into a `JobSpec` so schema errors come back over the wire
+/// instead of killing the connection.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Enqueue a search campaign; responds with the assigned job id.
+    Submit { job: Json },
+    /// One job's state, or all jobs when `job` is `None`.
+    Status { job: Option<u64> },
+    /// Checkpoint/journal snapshot of a job's run (rides the run journal,
+    /// so it reports exactly what a crash would resume from).
+    Snapshot { job: u64 },
+    /// Cancel a queued job immediately, or a running job at its next
+    /// checkpoint boundary.
+    Cancel { job: u64 },
+    /// Stop accepting requests, finish running jobs, exit.
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { job } => {
+                json::obj(vec![("op", json::str("submit")), ("job", job.clone())])
+            }
+            Request::Status { job } => {
+                let mut pairs = vec![("op", json::str("status"))];
+                if let Some(id) = job {
+                    pairs.push(("job", json::num(*id as f64)));
+                }
+                json::obj(pairs)
+            }
+            Request::Snapshot { job } => {
+                json::obj(vec![("op", json::str("snapshot")), ("job", json::num(*job as f64))])
+            }
+            Request::Cancel { job } => {
+                json::obj(vec![("op", json::str("cancel")), ("job", json::num(*job as f64))])
+            }
+            Request::Shutdown => json::obj(vec![("op", json::str("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let op = j.get("op").and_then(Json::as_str).ok_or("request missing \"op\"")?;
+        let job_id = || {
+            j.get("job")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("op {op:?} needs a numeric \"job\""))
+        };
+        match op {
+            "submit" => {
+                let job = j.get("job").cloned().ok_or("submit needs a \"job\" object")?;
+                Ok(Request::Submit { job })
+            }
+            "status" => {
+                Ok(Request::Status { job: j.get("job").and_then(Json::as_i64).map(|v| v as u64) })
+            }
+            "snapshot" => Ok(Request::Snapshot { job: job_id()? }),
+            "cancel" => Ok(Request::Cancel { job: job_id()? }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+/// Success response with extra fields.
+pub fn ok(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.append(&mut fields);
+    json::obj(pairs)
+}
+
+/// Failure response.
+pub fn err(msg: impl Into<String>) -> Json {
+    json::obj(vec![("ok", Json::Bool(false)), ("error", json::str(msg.into()))])
+}
+
+/// Write one protocol line.
+pub fn write_line(w: &mut impl Write, j: &Json) -> std::io::Result<()> {
+    writeln!(w, "{j}")?;
+    w.flush()
+}
+
+/// Read one protocol line; `Ok(None)` on clean EOF.
+pub fn read_line(r: &mut impl BufRead) -> std::io::Result<Option<Json>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    Json::parse(line.trim())
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// One-shot client call: connect, send, await the response.
+pub fn call(socket: &Path, req: &Request) -> Result<Json, String> {
+    let stream = UnixStream::connect(socket)
+        .map_err(|e| format!("connect {}: {e}", socket.display()))?;
+    let mut writer = stream.try_clone().map_err(|e| format!("socket clone: {e}"))?;
+    write_line(&mut writer, &req.to_json()).map_err(|e| format!("send: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    match read_line(&mut reader).map_err(|e| format!("recv: {e}"))? {
+        Some(resp) => Ok(resp),
+        None => Err("daemon closed the connection without responding".into()),
+    }
+}
+
+/// `true` iff a response object reports success.
+pub fn is_ok(resp: &Json) -> bool {
+    resp.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::Submit { job: json::obj(vec![("net", json::str("zoo-tiny"))]) },
+            Request::Status { job: None },
+            Request::Status { job: Some(3) },
+            Request::Snapshot { job: 7 },
+            Request::Cancel { job: 1 },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let j = r.to_json();
+            let back = Request::from_json(&j).expect("roundtrip");
+            assert_eq!(format!("{}", back.to_json()), format!("{j}"));
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        assert!(Request::from_json(&Json::parse(r#"{"op":"warp"}"#).unwrap()).is_err());
+        assert!(Request::from_json(&Json::parse(r#"{"op":"cancel"}"#).unwrap()).is_err());
+        assert!(Request::from_json(&Json::parse(r#"{"job":1}"#).unwrap()).is_err());
+        assert!(Request::from_json(&Json::parse(r#"{"op":"submit"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn ok_and_err_shapes() {
+        let o = ok(vec![("job", json::num(4.0))]);
+        assert!(is_ok(&o));
+        assert_eq!(o.get("job").and_then(Json::as_i64), Some(4));
+        let e = err("nope");
+        assert!(!is_ok(&e));
+        assert_eq!(e.get("error").and_then(Json::as_str), Some("nope"));
+    }
+}

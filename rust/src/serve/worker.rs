@@ -1,0 +1,185 @@
+//! `repro worker --shard i/N` — one process's exhaustive sweep of its
+//! partition region.
+//!
+//! The worker is deliberately *not* a strategy: it owns a contiguous
+//! canonical-index range ([`super::partition`]) and evaluates every
+//! genotype in it, in order, against its own result-cache shard and its
+//! own run journal. That makes the multi-process story composable from
+//! pieces that already exist:
+//!
+//! * dedup/persistence is the ordinary [`CacheHook`] (each worker points
+//!   at its own cache file, so no cross-process locking is needed);
+//! * crash safety is the ordinary [`RunJournal`] — the sweep offers a
+//!   checkpoint every [`WORKER_CHUNK`] genotypes and replays recorded
+//!   events with the backend *and* cache bypassed, exactly like the
+//!   search driver's replay path;
+//! * the output is a [`ShardArchive`] that `repro merge` folds back into
+//!   the single-process result bit-for-bit.
+
+use crate::eval::Fidelity;
+use crate::recovery::{Replayed, RunCounters, RunJournal};
+use crate::search::{CacheHook, EvalBackend, SearchSpace};
+use crate::util::threadpool::catch_retry;
+
+use super::merge::ShardArchive;
+use super::partition::{advance, genotype_at, partition, Region};
+
+/// Genotypes between journal boundaries. Matches the driver's exhaustive
+/// chunk floor so worker checkpoints land at the same cadence.
+pub const WORKER_CHUNK: usize = 64;
+
+/// A `--shard i/N` argument: 0-based shard `index` out of `of` total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub of: usize,
+}
+
+impl ShardSpec {
+    /// Parse `"i/N"` with `0 <= i < N`, `N >= 1`.
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (i, n) = s.split_once('/').ok_or_else(|| format!("--shard {s:?}: want i/N"))?;
+        let index: usize =
+            i.trim().parse().map_err(|_| format!("--shard {s:?}: bad shard index"))?;
+        let of: usize = n.trim().parse().map_err(|_| format!("--shard {s:?}: bad shard count"))?;
+        if of == 0 {
+            return Err(format!("--shard {s:?}: shard count must be >= 1"));
+        }
+        if index >= of {
+            return Err(format!("--shard {s:?}: index {index} out of range 0..{of}"));
+        }
+        Ok(ShardSpec { index, of })
+    }
+
+    /// This shard's region of `space` under the canonical N-way cut.
+    pub fn region(&self, space: &SearchSpace) -> Region {
+        partition(space, self.of)[self.index]
+    }
+}
+
+/// Journal fingerprint for a shard sweep: the base campaign fingerprint
+/// (net, fault campaign, fidelity — whatever the caller already computes
+/// for `repro search`) extended with the shard identity, so a worker can
+/// only resume a journal written for the *same* region of the same cut.
+pub fn worker_fingerprint(base: &str, region: &Region) -> String {
+    format!(
+        "{base} kind=shard shard={}/{} range={}..{}",
+        region.shard, region.of, region.start, region.end
+    )
+}
+
+/// Sweep this shard's region. The caller owns journal creation/resume
+/// (same contract as `run_search_journaled`): pass [`crate::recovery::NoJournal`]
+/// for an unjournaled sweep. The returned archive has an empty ledger —
+/// the caller snapshots its staged evaluator into `archive.ledger` (the
+/// sweep cannot see through the generic backend).
+pub fn run_shard<B: EvalBackend>(
+    space: &SearchSpace,
+    shard: ShardSpec,
+    with_fi: bool,
+    backend: &B,
+    cache: &mut dyn CacheHook,
+    journal: &mut dyn RunJournal,
+) -> ShardArchive {
+    let region = shard.region(space);
+    let fidelity = if with_fi { Fidelity::FiFull } else { Fidelity::Accuracy };
+    let len = usize::try_from(region.len()).expect("shard region too large for one process");
+
+    let mut points = Vec::with_capacity(len);
+    let mut poisoned: Vec<(String, String)> = Vec::new();
+    let mut evals_used = 0usize;
+    let mut cache_hits = 0usize;
+
+    let mut g = if region.is_empty() { Vec::new() } else { genotype_at(space, region.start) };
+    for done in 0..len {
+        let cfg = space.config_digits(&g);
+        if journal.replaying() {
+            // replay bypasses backend *and* cache: the cache file was
+            // rolled back to the checkpoint mark, so re-getting would
+            // turn rolled-forward misses into phantom hits
+            match journal.replay_eval(&cfg, fidelity) {
+                Replayed::Point { hit, point } => {
+                    if hit {
+                        cache_hits += 1;
+                    }
+                    evals_used += 1;
+                    points.push(point);
+                }
+                Replayed::Poisoned(err) => poisoned.push((cfg, err)),
+            }
+        } else {
+            let names = space.decode(&g);
+            if let Some(p) = cache.get(&names, fidelity) {
+                cache_hits += 1;
+                evals_used += 1;
+                journal.record_eval(&cfg, fidelity, true, &p);
+                points.push(p);
+            } else {
+                match catch_retry(|| backend.eval(&names, fidelity)) {
+                    Ok(mut p) => {
+                        // store the digit config before the cache sees the
+                        // point — same ordering as the driver, so shard
+                        // cache files are line-identical to driver ones
+                        p.config_string = cfg.clone();
+                        cache.put(&names, fidelity, &p);
+                        evals_used += 1;
+                        journal.record_eval(&cfg, fidelity, false, &p);
+                        points.push(p);
+                    }
+                    Err(err) => {
+                        eprintln!("worker: genotype {cfg} panicked twice; quarantined ({err})");
+                        journal.record_poison(&cfg, fidelity, &err);
+                        poisoned.push((cfg, err));
+                    }
+                }
+            }
+        }
+        if (done + 1) % WORKER_CHUNK == 0 || done + 1 == len {
+            let counters = RunCounters {
+                evals_used,
+                cache_hits,
+                promotions: 0,
+                archive_len: points.len(),
+                rng_state: None,
+            };
+            if journal.boundary(&counters) {
+                let mark = cache.flush();
+                journal.commit_checkpoint(&counters, &mark);
+            }
+        }
+        if done + 1 < len {
+            advance(space, &mut g);
+        }
+    }
+
+    ShardArchive {
+        net: space.net.clone(),
+        alphabet: space.alphabet.clone(),
+        n_layers: space.n_layers,
+        template: space.template.clone(),
+        hardening: space.hardening,
+        region,
+        space_size: space.size(),
+        with_fi,
+        evals_used,
+        cache_hits,
+        points,
+        poisoned,
+        ledger: Default::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_parse() {
+        assert_eq!(ShardSpec::parse("0/4").unwrap(), ShardSpec { index: 0, of: 4 });
+        assert_eq!(ShardSpec::parse("3/4").unwrap(), ShardSpec { index: 3, of: 4 });
+        assert!(ShardSpec::parse("4/4").is_err());
+        assert!(ShardSpec::parse("1").is_err());
+        assert!(ShardSpec::parse("a/4").is_err());
+        assert!(ShardSpec::parse("0/0").is_err());
+    }
+}

@@ -71,6 +71,14 @@ impl WorkerBudget {
         self.live.load(Ordering::SeqCst)
     }
 
+    /// Worker slots a new lease could still claim right now. Advisory by
+    /// nature (another campaign can lease between the read and the use) —
+    /// the serve daemon reports it in `status` so clients can see how
+    /// loaded the host is before submitting more work.
+    pub fn available(&self) -> usize {
+        self.cap.saturating_sub(self.live())
+    }
+
     /// High-water mark of [`live`](Self::live) — the regression guard for
     /// the nested-parallelism fix.
     pub fn peak(&self) -> usize {

@@ -935,3 +935,377 @@ fn fi_skipped_points_excluded_from_vuln_frontier() {
     let out = run_search(&space, &spec, &backend, &mut NoCache);
     assert!(!out.frontier_idx.is_empty(), "acc-drop frontier must exist without FI");
 }
+
+// ===========================================================================
+// serve_ — DSE-as-a-service: shard/merge multi-process equivalence, worker
+// journal resume, and the job-queue daemon, artifact-free (scripts/ci.sh
+// runs these unconditionally alongside the zoo_/recovery_/async_ stages)
+// ===========================================================================
+
+/// Poll the daemon until `job` reaches a terminal state; panics on
+/// `failed` so the error surfaces in the test output.
+fn wait_for_job(socket: &std::path::Path, job: u64) -> deepaxe::util::json::Json {
+    use deepaxe::serve::{protocol, Request};
+    use deepaxe::util::json::Json;
+    for _ in 0..2400 {
+        let resp = protocol::call(socket, &Request::Status { job: Some(job) }).expect("status");
+        assert!(protocol::is_ok(&resp), "status failed: {resp}");
+        let j = resp.get("job").expect("job field");
+        match j.get("state").and_then(Json::as_str) {
+            Some("done") | Some("cancelled") => return j.clone(),
+            Some("failed") => panic!("job {job} failed: {j}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+    panic!("job {job} did not reach a terminal state in time");
+}
+
+#[test]
+fn serve_shard_then_merge_is_bit_identical_to_single_process() {
+    // the tentpole acceptance criterion: a 4-way partition of zoo-tiny's
+    // 64-config space, swept by four independent workers (each with its
+    // own staged evaluator — the separate-process stand-in), merges back
+    // into the single-process exhaustive result bit-for-bit: points,
+    // frontier, both hypervolumes, budget counters, and the summed ledger
+    use deepaxe::eval::{FidelitySpec, LedgerSnapshot, StagedBackend, StagedEvaluator};
+    use deepaxe::recovery::NoJournal;
+    use deepaxe::serve::{merge_archives, run_shard, ShardArchive, ShardSpec};
+
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0x5A4D, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(6, 8, 0x5A4D);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi);
+    let space = SearchSpace::paper(&bundle.net, &paper_mults());
+    assert_eq!(space.size(), 64);
+    // additive-ledger regime: trace cache off, screening off — per-shard
+    // ledgers must sum exactly to the single-process ledger
+    let mk_spec = || FidelitySpec { trace_cache_mb: 0, ..FidelitySpec::exact() };
+
+    let ref_staged = StagedEvaluator::new(&ev, mk_spec());
+    let mut spec = SearchSpec::new(Strategy::Exhaustive);
+    spec.budget = 64;
+    spec.seed = 0x5A4D;
+    spec.with_fi = true;
+    let reference = run_search(&space, &spec, &StagedBackend { st: &ref_staged }, &mut NoCache);
+    assert_eq!(reference.evals_used, 64);
+    assert!(reference.poisoned.is_empty());
+
+    let mut archives: Vec<ShardArchive> = Vec::new();
+    let mut summed = LedgerSnapshot::default();
+    for i in 0..4 {
+        let staged = StagedEvaluator::new(&ev, mk_spec());
+        let mut archive = run_shard(
+            &space,
+            ShardSpec { index: i, of: 4 },
+            true,
+            &StagedBackend { st: &staged },
+            &mut NoCache,
+            &mut NoJournal,
+        );
+        archive.ledger = staged.ledger().snapshot();
+        summed.merge(&archive.ledger);
+        archives.push(archive);
+    }
+
+    let m = merge_archives(archives.clone()).expect("merge");
+    assert_eq!(m.points.len(), reference.evaluated.len());
+    for (a, b) in m.points.iter().zip(&reference.evaluated) {
+        assert_eq!(a, b, "merged design points must be bit-identical");
+    }
+    assert_eq!(m.frontier_idx, reference.frontier_idx);
+    assert_eq!(m.hv2d.to_bits(), reference.hypervolume().to_bits());
+    assert_eq!(
+        m.hv3d.to_bits(),
+        deepaxe::search::hypervolume3(&reference.evaluated).to_bits()
+    );
+    assert_eq!(m.evals_used, reference.evals_used);
+    assert_eq!(m.cache_hits, reference.cache_hits);
+    assert!(m.poisoned.is_empty());
+    assert_eq!(m.ledger, summed);
+    assert_eq!(
+        m.ledger,
+        ref_staged.ledger().snapshot(),
+        "shard ledgers must sum to the single-process ledger"
+    );
+
+    // archives survive the disk round-trip with the hv bits intact
+    let dir = std::env::temp_dir().join(format!("deepaxe_serve_merge_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let loaded: Vec<ShardArchive> = archives
+        .iter()
+        .map(|a| {
+            let p = dir.join(format!("shard_{}_of_{}.json", a.region.shard, a.region.of));
+            a.save(&p).unwrap();
+            ShardArchive::load(&p).unwrap()
+        })
+        .collect();
+    let m2 = merge_archives(loaded).expect("merge after disk round-trip");
+    assert_eq!(m2.hv2d.to_bits(), m.hv2d.to_bits());
+    assert_eq!(m2.hv3d.to_bits(), m.hv3d.to_bits());
+    assert_eq!(m2.frontier_idx, m.frontier_idx);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_worker_resume_is_bit_identical_and_listed() {
+    // a worker killed after its first chunk checkpoint resumes its shard
+    // sweep bit-identically, and `repro runs list` tracks the journal
+    // through checkpointed -> complete while shrugging off garbage files
+    use deepaxe::eval::{FidelitySpec, StagedBackend, StagedEvaluator};
+    use deepaxe::recovery::{
+        list_runs, JournalWriter, NoJournal, RunJournal, RunStatus, StateProvider,
+    };
+    use deepaxe::serve::{run_shard, worker_fingerprint, ShardSpec};
+
+    let bundle = deepaxe::zoo::build("zoo-tiny", 0x5A4E, 32).unwrap();
+    let luts = zoo_luts();
+    let fi = fi_params(6, 8, 0x5A4E);
+    let ev = Evaluator::new(&bundle.net, &bundle.data, &luts, 24, fi);
+    // hardened space: 12^3 = 1728 genotypes, so shard 0/8 owns a region
+    // (216) spanning several WORKER_CHUNK boundaries
+    let space = SearchSpace::paper(&bundle.net, &paper_mults()).with_hardening();
+    assert_eq!(space.size(), 1728);
+    let shard = ShardSpec { index: 0, of: 8 };
+    let region = shard.region(&space);
+    assert_eq!((region.start, region.end), (0, 216));
+    let mk_spec = || FidelitySpec { trace_cache_mb: 0, ..FidelitySpec::exact() };
+
+    // unjournaled reference sweep (accuracy fidelity keeps 216 evals fast)
+    let ref_staged = StagedEvaluator::new(&ev, mk_spec());
+    let reference = run_shard(
+        &space,
+        shard,
+        false,
+        &StagedBackend { st: &ref_staged },
+        &mut NoCache,
+        &mut NoJournal,
+    );
+    assert_eq!(reference.evals_used, 216);
+    assert!(reference.poisoned.is_empty());
+
+    let dir = std::env::temp_dir().join(format!("deepaxe_serve_worker_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let runs = dir.join("runs");
+    let wfp = worker_fingerprint("it-worker", &region);
+
+    // journaled sweep, journal frozen at checkpoint 1 (simulated kill -9
+    // after the first 64-genotype chunk)
+    let run_id = {
+        let staged = StagedEvaluator::new(&ev, mk_spec());
+        let mut journal = JournalWriter::create(&runs, &wfp, 1);
+        let id = journal.run_id().to_string();
+        journal.limit_checkpoints(1);
+        journal.set_provider(&staged);
+        let full = run_shard(
+            &space,
+            shard,
+            false,
+            &StagedBackend { st: &staged },
+            &mut NoCache,
+            &mut journal,
+        );
+        assert_eq!(full.evals_used, 216);
+        id
+    };
+    let listed = list_runs(&runs);
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].run_id, run_id);
+    assert_eq!(listed[0].status, RunStatus::Checkpointed);
+    assert_eq!(listed[0].evals_used, 64, "journal must freeze at the first chunk boundary");
+    assert_eq!(listed[0].budget, Some(216), "target parsed from the shard range");
+
+    // resume: replay the 64 recorded events, evaluate the remaining 152
+    let staged = StagedEvaluator::new(&ev, mk_spec());
+    let mut journal = JournalWriter::resume(&runs, &run_id, &wfp, 1).unwrap();
+    assert!(journal.replaying(), "resume must start in replay mode");
+    if let Some(state) = journal.eval_state() {
+        staged.restore_state(state);
+    }
+    journal.set_provider(&staged);
+    let resumed = run_shard(
+        &space,
+        shard,
+        false,
+        &StagedBackend { st: &staged },
+        &mut NoCache,
+        &mut journal,
+    );
+    assert_eq!(resumed.evals_used, reference.evals_used);
+    assert_eq!(resumed.cache_hits, reference.cache_hits);
+    assert_eq!(resumed.points.len(), reference.points.len());
+    for (a, b) in resumed.points.iter().zip(&reference.points) {
+        assert_eq!(a, b, "resumed shard sweep must be bit-identical");
+    }
+    assert_eq!(staged.ledger().snapshot(), ref_staged.ledger().snapshot());
+
+    // the finished journal now lists as complete; a garbage file in the
+    // runs dir lists as stale instead of breaking the listing
+    std::fs::write(runs.join("deadbeef.journal"), "not a journal\n").unwrap();
+    let listed = list_runs(&runs);
+    assert_eq!(listed.len(), 2);
+    let by_id = |id: &str| listed.iter().find(|r| r.run_id == id).unwrap();
+    assert_eq!(by_id(&run_id).status, RunStatus::Complete);
+    assert_eq!(by_id("deadbeef").status, RunStatus::Stale);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_daemon_smoke_submit_status_snapshot_cancel_shutdown() {
+    // the daemon lifecycle over the wire: submit two jobs on a one-runner
+    // daemon, cancel the queued one immediately, watch the first complete,
+    // snapshot its journal, exercise cancel-at-checkpoint on a live run,
+    // then shut down cleanly
+    use deepaxe::serve::{protocol, Daemon, Request, ServeConfig};
+    use deepaxe::util::json::Json;
+
+    let dir = std::env::temp_dir().join(format!("deepaxe_serve_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ServeConfig {
+        socket: dir.join("serve.sock"),
+        work_dir: dir.clone(),
+        max_jobs: 1,
+    };
+    let daemon = Daemon::start(cfg).expect("daemon start");
+    let socket = daemon.socket();
+
+    let submit = |job: &str| -> u64 {
+        let req = Request::Submit { job: Json::parse(job).unwrap() };
+        let resp = protocol::call(&socket, &req).expect("submit");
+        assert!(protocol::is_ok(&resp), "submit failed: {resp}");
+        resp.get("job").and_then(Json::as_i64).expect("job id") as u64
+    };
+
+    // a bad job is rejected over the wire, not on a runner thread
+    let bad = Request::Submit {
+        job: Json::parse(r#"{"net":"zoo-tiny","strategy":"warp"}"#).unwrap(),
+    };
+    let resp = protocol::call(&socket, &bad).unwrap();
+    assert!(!protocol::is_ok(&resp), "bad strategy must be rejected: {resp}");
+
+    let a = submit(
+        r#"{"net":"zoo-tiny","seed":51966,"budget":8,"pop":4,"faults":6,"images":8,"eval_images":24,"trace_cache_mb":0}"#,
+    );
+    let b = submit(
+        r#"{"net":"zoo-tiny","seed":51967,"budget":8,"pop":4,"faults":6,"images":8,"eval_images":24,"trace_cache_mb":0}"#,
+    );
+    assert_eq!((a, b), (1, 2));
+
+    // b sits behind a on the single runner: cancel is immediate
+    let resp = protocol::call(&socket, &Request::Cancel { job: b }).unwrap();
+    assert!(protocol::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("state").and_then(Json::as_str), Some("cancelled"));
+
+    let done = wait_for_job(&socket, a);
+    assert_eq!(done.get("state").and_then(Json::as_str), Some("done"));
+    let report = done.get("report").expect("report");
+    assert!(report.get("run_id").and_then(Json::as_str).is_some());
+    assert_eq!(report.get("evals_used").and_then(Json::as_i64), Some(8));
+
+    // the all-jobs view agrees, and reports the shared worker budget
+    let resp = protocol::call(&socket, &Request::Status { job: None }).unwrap();
+    assert!(protocol::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("jobs").and_then(Json::as_arr).map(|j| j.len()), Some(2));
+    assert!(resp.get("workers").and_then(|w| w.get("cap")).is_some());
+
+    // snapshot rides the journal: the done job reads back as complete
+    let resp = protocol::call(&socket, &Request::Snapshot { job: a }).unwrap();
+    assert!(protocol::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("status").and_then(Json::as_str), Some("complete"));
+    assert_eq!(resp.get("evals_used").and_then(Json::as_i64), Some(8));
+    assert_eq!(resp.get("budget").and_then(Json::as_i64), Some(8));
+
+    // cancelling a finished job is an error, as is touching job 99
+    let resp = protocol::call(&socket, &Request::Cancel { job: a }).unwrap();
+    assert!(!protocol::is_ok(&resp), "{resp}");
+    let resp = protocol::call(&socket, &Request::Status { job: Some(99) }).unwrap();
+    assert!(!protocol::is_ok(&resp), "{resp}");
+
+    // cancel-at-checkpoint on a live campaign: best-effort timing (the
+    // job may legitimately finish first), but a cancelled run must leave
+    // a resumable journal behind
+    let c = submit(
+        r#"{"net":"zoo-tiny","seed":51968,"budget":16,"pop":4,"faults":6,"images":8,"eval_images":24,"trace_cache_mb":0}"#,
+    );
+    let resp = protocol::call(&socket, &Request::Cancel { job: c }).unwrap();
+    let terminal = wait_for_job(&socket, c);
+    match terminal.get("state").and_then(Json::as_str) {
+        Some("cancelled") => {
+            assert!(protocol::is_ok(&resp), "{resp}");
+            // cancelled while queued = no run-id, nothing to snapshot;
+            // cancelled mid-run = the journal must end at a commit
+            if terminal.get("run_id").and_then(Json::as_str).is_some() {
+                let snap = protocol::call(&socket, &Request::Snapshot { job: c }).unwrap();
+                assert!(protocol::is_ok(&snap), "{snap}");
+                let status = snap.get("status").and_then(Json::as_str).unwrap();
+                assert_ne!(status, "stale", "cancelled run must end at a committed checkpoint");
+            }
+        }
+        Some("done") => {} // finished before the cancel landed: fine
+        other => panic!("unexpected terminal state {other:?}"),
+    }
+
+    let resp = protocol::call(&socket, &Request::Shutdown).unwrap();
+    assert!(protocol::is_ok(&resp), "{resp}");
+    daemon.join();
+    assert!(!socket.exists(), "join must remove the socket file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_daemon_resume_after_frozen_checkpoint_matches_uninterrupted() {
+    // the served crash-recovery acceptance criterion: a campaign whose
+    // journal froze at checkpoint 2 (the kill -9 stand-in), resubmitted
+    // with `resume`, reports byte-for-byte what an uninterrupted daemon
+    // reports for the same job — run-id, counters, frontier, hv bits,
+    // and the FI ledger
+    use deepaxe::serve::{protocol, Daemon, Request, ServeConfig};
+    use deepaxe::util::json::Json;
+
+    let job_base = r#""net":"zoo-tiny","seed":53261,"budget":12,"pop":4,"faults":6,"images":8,"eval_images":24,"trace_cache_mb":0,"checkpoint_every":1"#;
+    let run = |dir: &std::path::Path, job: String| -> Json {
+        let cfg = ServeConfig {
+            socket: dir.join("serve.sock"),
+            work_dir: dir.to_path_buf(),
+            max_jobs: 1,
+        };
+        let daemon = Daemon::start(cfg).expect("daemon start");
+        let socket = daemon.socket();
+        let req = Request::Submit { job: Json::parse(&job).unwrap() };
+        let resp = protocol::call(&socket, &req).expect("submit");
+        assert!(protocol::is_ok(&resp), "submit failed: {resp}");
+        let id = resp.get("job").and_then(Json::as_i64).unwrap() as u64;
+        let done = wait_for_job(&socket, id);
+        assert_eq!(done.get("state").and_then(Json::as_str), Some("done"), "{done}");
+        let resp = protocol::call(&socket, &Request::Shutdown).unwrap();
+        assert!(protocol::is_ok(&resp), "{resp}");
+        daemon.join();
+        done.get("report").expect("report").clone()
+    };
+
+    let dir_a = std::env::temp_dir()
+        .join(format!("deepaxe_serve_resume_a_{}", std::process::id()));
+    let dir_b = std::env::temp_dir()
+        .join(format!("deepaxe_serve_resume_b_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+
+    // daemon A, run 1: completes in-process, journal frozen at checkpoint 2
+    let frozen = run(&dir_a, format!(r#"{{{job_base},"limit_checkpoints":2}}"#));
+    let rid = frozen.get("run_id").and_then(Json::as_str).unwrap().to_string();
+
+    // daemon A, run 2: resume the frozen journal to completion
+    let resumed = run(&dir_a, format!(r#"{{{job_base},"resume":"{rid}"}}"#));
+
+    // daemon B: the same job uninterrupted, in a fresh work dir
+    let reference = run(&dir_b, format!("{{{job_base}}}"));
+
+    assert_eq!(
+        format!("{resumed}"),
+        format!("{reference}"),
+        "resumed served campaign must reproduce the uninterrupted report"
+    );
+    assert_eq!(reference.get("run_id").and_then(Json::as_str), Some(rid.as_str()));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}

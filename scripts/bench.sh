@@ -31,7 +31,9 @@
 # sync/async bit-identity in-process, then emits
 # `async_speedup_vs_sync`, `executor_idle_pct` and `executor_steals`
 # (the lenet5 grid half of bench_search still needs artifacts and skips
-# itself when they are absent).
+# itself when they are absent). PR 10 adds `partition_speedup_vs_single`
+# to bench_search: the same exhaustive sweep as one process vs four
+# serve::run_shard workers, merge identity asserted in-process first.
 #
 # Record shape: {"schema":"deepaxe-bench-v1","run":N,"smoke":0|1,
 # "records":[...one object per emitted line...]}. The per-record fields

@@ -39,6 +39,16 @@ echo "== tier-1: async-runtime integration tests (artifact-free, no skip) =="
 # parity, and cross-mode journal resume — zoo-generated nets only.
 cargo test -q --test integration_search async_
 
+echo "== tier-1: serve/worker/merge integration tests (artifact-free, no skip) =="
+# The serve_ suite covers the DSE-as-a-service subsystem: deterministic
+# space partitioning (incl. ragged-N property tests in the serve:: unit
+# suite), shard-then-merge bit-identity against the single-process sweep,
+# worker journal resume + runs listing, and the Unix-socket job-queue
+# daemon (submit/status/snapshot/cancel/shutdown, frozen-checkpoint
+# resume) — zoo-generated nets only, so it runs in every container.
+cargo test -q --lib serve::
+cargo test -q --test integration_search serve_
+
 echo "== tier-1: fault-model zoo integration tests (artifact-free, no skip) =="
 # The fault_model_ suite covers the unified FaultModel subsystem (bitflip
 # bit-for-bit parity, stuck-at/multibit/lutplane campaigns, selective
